@@ -1,0 +1,101 @@
+//! Hot-path microbench: coordinator overhead on top of raw engine
+//! execution -- full cascade batches, the serving pipeline, the batcher,
+//! and the pure agreement/deferral logic.
+//!
+//! Run: `cargo bench --bench bench_coordinator`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::benchkit::{black_box, Bench};
+use abc_serve::calib;
+use abc_serve::coordinator::agreement::agree_logits;
+use abc_serve::coordinator::batcher::{Batcher, BatcherConfig, Item};
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::metrics::Metrics;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::types::{Request, RuleKind};
+use abc_serve::util::rng::Rng;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // pure logic first (no artifacts needed)
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..3 * 10).map(|_| rng.f32() * 6.0 - 3.0).collect();
+    let mut b = Bench::new("coordinator: pure logic");
+    b.run("agree_logits k=3 c=10", || black_box(agree_logits(&logits, 3, 10)));
+    let big_logits: Vec<f32> = (0..5 * 100).map(|_| rng.f32() * 6.0 - 3.0).collect();
+    b.run("agree_logits k=5 c=100", || black_box(agree_logits(&big_logits, 5, 100)));
+    b.run("batcher push+flush 1024", || {
+        let sink = Batcher::spawn(
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200) },
+            |batch: Vec<Item<u32>>| {
+                black_box(batch.len());
+            },
+        );
+        for i in 0..1024u32 {
+            sink.push(i).unwrap();
+        }
+        drop(sink); // drains
+    });
+    b.report();
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping cascade benches: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, "synth-cifar10", false)?);
+    let val = rt.dataset(&manifest, "val")?;
+    let test = rt.dataset(&manifest, "test")?;
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05)?;
+    let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy.clone()));
+
+    let mut b = Bench::new("coordinator: cascade classify_batch");
+    for &n in &[1usize, 32, 128, 512] {
+        let data = &test.x[..n * test.dim];
+        let r = b.run(format!("batch {n}"), || {
+            black_box(cascade.classify_batch(data, n).unwrap())
+        });
+        println!("batch {n}: {:.0} samples/s", n as f64 / r.mean_s);
+    }
+    b.report();
+
+    // end-to-end pipeline (batcher + cascade + verdict channels)
+    let pipeline = Arc::new(Pipeline::spawn(
+        Arc::clone(&cascade),
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(1) },
+        Metrics::new(),
+    ));
+    let mut b = Bench::new("coordinator: serving pipeline");
+    b.run("single blocking infer", || {
+        black_box(
+            pipeline
+                .infer(Request { id: 0, features: test.row(0).to_vec(), arrival_s: 0.0 })
+                .unwrap(),
+        )
+    });
+    b.run("64 concurrent submits", || {
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                pipeline
+                    .submit(Request {
+                        id: i,
+                        features: test.row(i as usize % test.n).to_vec(),
+                        arrival_s: 0.0,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap().unwrap());
+        }
+    });
+    b.report();
+    Ok(())
+}

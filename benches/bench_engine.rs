@@ -1,0 +1,61 @@
+//! Hot-path microbench: raw PJRT engine execution across tiers and batch
+//! buckets -- the L3 roofline reference (DESIGN.md §8: the coordinator
+//! must stay within 0.8x of this).
+//!
+//! Run: `cargo bench --bench bench_engine`.
+
+use std::sync::Arc;
+
+use abc_serve::benchkit::{black_box, Bench};
+use abc_serve::runtime::engine::Engine;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping bench_engine: run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = SuiteRuntime::load(engine, &manifest, "synth-cifar10", true)?;
+    let test = rt.dataset(&manifest, "test")?;
+
+    let mut b = Bench::new("engine: tier ensemble execute (per batch)");
+    for (idx, tier) in rt.tiers.iter().enumerate() {
+        for &bucket in &[1usize, 8, 32, 128] {
+            let data = &test.x[..bucket * test.dim];
+            b.run(format!("t{} b{bucket}", idx + 1), || {
+                black_box(tier.run(data, bucket).unwrap())
+            });
+        }
+    }
+    b.report();
+
+    let mut b2 = Bench::new("engine: per-sample throughput (batch 128)");
+    for (idx, tier) in rt.tiers.iter().enumerate() {
+        let data = &test.x[..128 * test.dim];
+        let r = b2.run(format!("t{}", idx + 1), || {
+            black_box(tier.run(data, 128).unwrap())
+        });
+        println!(
+            "t{}: {:.0} samples/s",
+            idx + 1,
+            128.0 / r.mean_s
+        );
+    }
+    b2.report();
+
+    // single-model artifact for comparison
+    let mut b3 = Bench::new("engine: single-model execute (batch 128)");
+    for (idx, single) in rt.singles.iter().enumerate() {
+        let data = &test.x[..128 * test.dim];
+        b3.run(format!("t{}", idx + 1), || {
+            black_box(single.run_single(data, 128).unwrap())
+        });
+    }
+    b3.report();
+    Ok(())
+}

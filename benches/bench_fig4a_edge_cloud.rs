@@ -1,0 +1,20 @@
+//! Regenerates paper fig4a (see DESIGN.md §5 experiment index) and
+//! reports the wall-clock of the full regeneration.
+//!
+//! Run: `cargo bench --bench bench_fig4a_edge_cloud` (or `make bench`).
+
+use abc_serve::experiments::{self, common::ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("ABC_BENCH_QUICK").is_ok();
+    let ctx = ExpContext::new("artifacts", "artifacts/results", quick)?;
+    let t0 = std::time::Instant::now();
+    experiments::run("fig4a", &ctx)?;
+    println!(
+        "[bench_fig4a_edge_cloud] regenerated fig4a in {:.2}s{}",
+        t0.elapsed().as_secs_f64(),
+        if quick { " (quick mode)" } else { "" }
+    );
+    Ok(())
+}

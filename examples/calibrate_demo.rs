@@ -1,0 +1,64 @@
+//! Threshold-calibration walkthrough (paper Appendix B): how the safe
+//! deferral threshold theta is estimated from ~100 samples, how stable it
+//! is as the sample count grows, and what selection rates different error
+//! tolerances buy (Appendix C).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example calibrate_demo
+//! ```
+
+use std::sync::Arc;
+
+use abc_serve::calib::collect_points;
+use abc_serve::calib::threshold::{estimate_theta, evaluate_theta};
+use abc_serve::runtime::engine::Engine;
+use abc_serve::types::RuleKind;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = SuiteRuntime::load(engine, &manifest, "synth-imagenet", false)?;
+    let val = rt.dataset(&manifest, "val")?;
+
+    let tier = &rt.tiers[1]; // the 48-wide tier
+    println!(
+        "tier 2 of synth-imagenet (ensemble val acc {:.3})\n",
+        rt.suite.tiers[1].val_acc_ensemble
+    );
+
+    let points = collect_points(tier, RuleKind::MeanScore, &val, val.n)?;
+    let holdout = &points[points.len() / 2..];
+
+    println!("-- theta stability vs calibration samples (Fig. 6) --");
+    println!("{:>6} {:>9} {:>11} {:>16}", "n", "theta", "selection", "holdout failure");
+    for n in [100, 200, 500, 1000, 2000] {
+        let est = estimate_theta(&points[..n], 0.05);
+        let (fail, _) = evaluate_theta(holdout, est.theta);
+        println!(
+            "{:>6} {:>9.4} {:>10.1}% {:>15.2}%",
+            n,
+            est.theta,
+            est.selection_rate * 100.0,
+            fail * 100.0
+        );
+    }
+
+    println!("\n-- selection rate vs error tolerance (Fig. 7) --");
+    println!("{:>8} {:>9} {:>11}", "epsilon", "theta", "selection");
+    for eps in [0.01, 0.03, 0.05, 0.10] {
+        let est = estimate_theta(&points[..100], eps);
+        println!(
+            "{:>8.2} {:>9.4} {:>10.1}%",
+            eps,
+            est.theta,
+            est.selection_rate * 100.0
+        );
+    }
+    println!(
+        "\nThe estimate from 100 samples is already within noise of the\n\
+         2000-sample estimate -- the paper's App. B claim."
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: load a suite's cascade, calibrate it from ~100 validation
+//! samples (paper App. B), and classify a handful of test rows.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use abc_serve::calib;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::types::RuleKind;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifacts manifest and spin up the PJRT CPU engine.
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Arc::new(Engine::cpu()?);
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. Load one suite's tier ladder (compiled executables + weights).
+    let rt = SuiteRuntime::load(engine, &manifest, "synth-cifar10", false)?;
+    println!(
+        "loaded {} tiers: {:?}",
+        rt.n_tiers(),
+        rt.suite.tiers.iter().map(|t| t.hidden.clone()).collect::<Vec<_>>()
+    );
+
+    // 3. Calibrate the agreement thresholds on 100 validation samples.
+    let val = rt.dataset(&manifest, "val")?;
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05)?;
+    for (i, est) in cal.estimates.iter().enumerate() {
+        println!(
+            "tier {}: theta={:.4} (selects {:.0}% of calibration data)",
+            i + 1,
+            est.theta,
+            est.selection_rate * 100.0
+        );
+    }
+
+    // 4. Build the cascade and classify test samples.
+    let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+    let test = rt.dataset(&manifest, "test")?;
+    let n = 512;
+    let results = cascade.classify_batch(&test.x[..n * test.dim], n)?;
+    let hits = results
+        .iter()
+        .zip(&test.y)
+        .filter(|(r, &y)| r.prediction == y)
+        .count();
+    let mut exits = vec![0usize; rt.n_tiers()];
+    for r in &results {
+        exits[r.exit_level - 1] += 1;
+    }
+    println!(
+        "\nclassified {n} samples: accuracy {:.1}%, exits per tier {:?}",
+        100.0 * hits as f64 / n as f64,
+        exits
+    );
+    println!(
+        "=> {:.0}% of requests never reached the expensive tiers",
+        100.0 * exits[0] as f64 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! End-to-end serving driver (the DESIGN.md "e2e" experiment): boot the
+//! full stack -- PJRT engine, calibrated cascade, dynamic batcher, TCP
+//! server -- fire a Poisson request stream at it from concurrent client
+//! connections, and report latency/throughput + exit-tier routing.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use abc_serve::calib;
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::server::{serve, Client};
+use abc_serve::types::RuleKind;
+use abc_serve::util::rng::Rng;
+use abc_serve::util::stats::Samples;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+const SUITE: &str = "synth-cifar10";
+const PORT: u16 = 7979;
+const N_REQUESTS: usize = 2000;
+const N_CLIENTS: usize = 8;
+const RATE_RPS: f64 = 800.0;
+
+fn main() -> anyhow::Result<()> {
+    // ---- boot the serving stack -------------------------------------
+    let manifest = Manifest::load("artifacts")?;
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, SUITE, false)?);
+    let val = rt.dataset(&manifest, "val")?;
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05)?;
+    let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy.clone()));
+    let metrics = Metrics::new();
+    let pipeline = Arc::new(Pipeline::spawn(
+        Arc::clone(&cascade),
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        Arc::clone(&metrics),
+    ));
+    let server_pipeline = Arc::clone(&pipeline);
+    let server = std::thread::spawn(move || serve(server_pipeline, PORT));
+    std::thread::sleep(Duration::from_millis(200)); // listener up
+
+    // ---- drive a Poisson workload from N_CLIENTS connections --------
+    let test = Arc::new(rt.dataset(&manifest, "test")?);
+    let mut rng = Rng::new(42);
+    let arrivals = Arrival::Poisson { rate: RATE_RPS }.generate(N_REQUESTS, &mut rng);
+    let t_start = Instant::now();
+    let next_req = Arc::new(AtomicUsize::new(0));
+    let hits = Arc::new(AtomicUsize::new(0));
+    let exit1 = Arc::new(AtomicUsize::new(0));
+    let lat_chunks: Vec<_> = (0..N_CLIENTS)
+        .map(|c| {
+            let test = Arc::clone(&test);
+            let next = Arc::clone(&next_req);
+            let hits = Arc::clone(&hits);
+            let exit1 = Arc::clone(&exit1);
+            let arrivals = arrivals.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut client = Client::connect(PORT)?;
+                let mut lats = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= N_REQUESTS {
+                        return Ok(lats);
+                    }
+                    // open-loop pacing: wait for this request's arrival time
+                    let due = Duration::from_secs_f64(arrivals[i]);
+                    if let Some(wait) = due.checked_sub(t_start.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    let row = i % test.n;
+                    let t0 = Instant::now();
+                    let (pred, exit_tier) =
+                        client.infer(i as u64, test.row(row))?;
+                    lats.push(t0.elapsed().as_secs_f64());
+                    if pred == test.y[row] {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                    if exit_tier == 1 {
+                        exit1.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let _ = c;
+                }
+            })
+        })
+        .collect();
+    let mut lats = Samples::new();
+    for h in lat_chunks {
+        lats.extend(&h.join().unwrap()?);
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+
+    // ---- report ------------------------------------------------------
+    println!("\n=== serve_e2e: {SUITE}, {N_REQUESTS} reqs, {N_CLIENTS} clients, Poisson {RATE_RPS} rps ===");
+    println!("throughput     : {:.0} req/s (wall {:.2}s)", N_REQUESTS as f64 / wall, wall);
+    println!("accuracy       : {:.3}", hits.load(Ordering::SeqCst) as f64 / N_REQUESTS as f64);
+    println!("tier-1 exits   : {:.1}%", 100.0 * exit1.load(Ordering::SeqCst) as f64 / N_REQUESTS as f64);
+    println!("latency p50    : {:.2} ms", lats.p50() * 1e3);
+    println!("latency p90    : {:.2} ms", lats.p90() * 1e3);
+    println!("latency p99    : {:.2} ms", lats.p99() * 1e3);
+    println!("latency mean   : {:.2} ms", lats.mean() * 1e3);
+    println!("\nserver metrics:");
+    for (name, value) in metrics.snapshot() {
+        println!("  {name}: {value}");
+    }
+
+    // ---- shut down ----------------------------------------------------
+    Client::connect(PORT)?.shutdown()?;
+    server.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT pipeline: data -> zoo training -> HLO text artifacts + manifest.
+
+Runs ONCE at ``make artifacts`` (Python is never on the request path).
+For every suite in suites.py it:
+
+  1. generates the ABDS datasets            -> artifacts/data/
+  2. trains the k-member ensemble per tier  -> artifacts/weights/*.npz
+  3. AOT-lowers, per batch bucket:
+       tier_forward   (ensemble + agreement)        [ENSEMBLE_BUCKETS]
+       single_forward (member 0 + max-softmax conf) [SINGLE_BUCKETS]
+     to HLO *text*                          -> artifacts/hlo/*.hlo.txt
+  4. records accuracies / FLOPs / params    -> artifacts/manifest.json
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).  Weights stay
+runtime parameters (HLO text elides large constants) and ship in .npz
+sidecars the Rust runtime loads with ``Literal::read_npz``.
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .datagen import generate_suite, make_suite_data
+from .suites import ENSEMBLE_BUCKETS, SINGLE_BUCKETS, default_suites
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jax .lower() result to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_weight_specs(params):
+    flat = []
+    for w, b in params:
+        flat += [w, b]
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+
+
+def lower_tier_ensemble(params, *, input_slice: int, batch: int,
+                        dim: int) -> str:
+    """HLO text for tier_forward at a fixed batch bucket.
+
+    Parameter order: x, w0, b0, w1, b1, ...  (matches npz_param_names).
+    """
+    n_layers = len(params)
+
+    def fn(x, *flat_w):
+        ps = [(flat_w[2 * i], flat_w[2 * i + 1]) for i in range(n_layers)]
+        return model.tier_forward(ps, x, input_slice=input_slice)
+
+    specs = [jax.ShapeDtypeStruct((batch, dim), jnp.float32)]
+    specs += _flat_weight_specs(params)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_tier_single(params, *, input_slice: int, batch: int,
+                      dim: int) -> str:
+    """HLO text for single_forward (member 0) at a fixed batch bucket."""
+    n_layers = len(params)
+
+    def fn(x, *flat_w):
+        ps = [(flat_w[2 * i], flat_w[2 * i + 1]) for i in range(n_layers)]
+        return model.single_forward(ps, x, input_slice=input_slice)
+
+    specs = [jax.ShapeDtypeStruct((batch, dim), jnp.float32)]
+    specs += _flat_weight_specs(params)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_suite(spec, out_dir: Path, *, verbose: bool = True) -> dict:
+    """Build all artifacts for one suite; returns its manifest entry."""
+    t_suite = time.time()
+    if verbose:
+        print(f"[aot] suite {spec.name} ({spec.paper_dataset})")
+    data_rel = generate_suite(spec, out_dir / "data")
+    data_entry = {split: f"data/{name}" for split, name in data_rel.items()}
+
+    tr = make_suite_data(spec, "train")
+    va = make_suite_data(spec, "val")
+    te = make_suite_data(spec, "test")
+    trxy, vaxy, texy = (tr[0], tr[1]), (va[0], va[1]), (te[0], te[1])
+
+    (out_dir / "weights").mkdir(parents=True, exist_ok=True)
+    (out_dir / "hlo").mkdir(parents=True, exist_ok=True)
+
+    tiers_entry = []
+    for tier in spec.tiers:
+        t0 = time.time()
+        res = train.train_tier(spec, tier, trxy, vaxy, texy)
+        params = res.params
+        n_layers = len(params)
+
+        wrel = f"weights/{spec.name}_t{tier.tier}.npz"
+        np.savez(out_dir / wrel, **model.params_to_npz_dict(params))
+
+        ens_hlo = {}
+        for bucket in ENSEMBLE_BUCKETS:
+            rel = f"hlo/{spec.name}_t{tier.tier}_ens_b{bucket}.hlo.txt"
+            text = lower_tier_ensemble(params, input_slice=tier.input_slice,
+                                       batch=bucket, dim=spec.dim)
+            (out_dir / rel).write_text(text)
+            ens_hlo[str(bucket)] = rel
+        single_hlo = {}
+        for bucket in SINGLE_BUCKETS:
+            rel = f"hlo/{spec.name}_t{tier.tier}_single_b{bucket}.hlo.txt"
+            text = lower_tier_single(params, input_slice=tier.input_slice,
+                                     batch=bucket, dim=spec.dim)
+            (out_dir / rel).write_text(text)
+            single_hlo[str(bucket)] = rel
+
+        tiers_entry.append({
+            "tier": tier.tier,
+            "k": tier.k,
+            "hidden": list(tier.hidden),
+            "input_slice": tier.input_slice,
+            "flops_per_sample_member": model.flops_per_sample(
+                tier.input_slice, tier.hidden, spec.classes),
+            "params_member": model.param_count(
+                tier.input_slice, tier.hidden, spec.classes),
+            "val_acc_members": [round(a, 6) for a in res.member_val_acc],
+            "val_acc_ensemble": round(res.ensemble_val_acc, 6),
+            "test_acc_members": [round(a, 6) for a in res.member_test_acc],
+            "test_acc_ensemble": round(res.ensemble_test_acc, 6),
+            "weights": wrel,
+            "param_names": model.npz_param_names(n_layers),
+            "ensemble_hlo": ens_hlo,
+            "single_hlo": single_hlo,
+        })
+        if verbose:
+            print(f"  tier {tier.tier}: k={tier.k} hidden={tier.hidden} "
+                  f"val_ens={res.ensemble_val_acc:.3f} "
+                  f"test_ens={res.ensemble_test_acc:.3f} "
+                  f"({time.time() - t0:.1f}s)")
+
+    entry = {
+        "name": spec.name,
+        "paper_dataset": spec.paper_dataset,
+        "classes": spec.classes,
+        "dim": spec.dim,
+        "n_train": spec.n_train,
+        "n_val": spec.n_val,
+        "n_test": spec.n_test,
+        "data": data_entry,
+        "tiers": tiers_entry,
+    }
+    if verbose:
+        print(f"[aot] suite {spec.name} done in {time.time() - t_suite:.1f}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--suites", default="all",
+                    help="comma-separated suite names, or 'all'")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    suites = default_suites()
+    if args.suites != "all":
+        wanted = set(args.suites.split(","))
+        suites = [s for s in suites if s.name in wanted]
+        missing = wanted - {s.name for s in suites}
+        if missing:
+            raise SystemExit(f"unknown suites: {sorted(missing)}")
+
+    t0 = time.time()
+    entries = [build_suite(s, out_dir) for s in suites]
+    manifest = {
+        "format_version": MANIFEST_VERSION,
+        "created_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "ensemble_buckets": list(ENSEMBLE_BUCKETS),
+        "single_buckets": list(SINGLE_BUCKETS),
+        "suites": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote {out_dir / 'manifest.json'} "
+          f"({len(entries)} suites, {time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Synthetic classification suites with a controlled difficulty field.
+
+The paper's central phenomenon is that a large fraction of inference data
+is 'easy': small models answer it correctly *and agree on it*, while a
+hard tail needs the big models (§1, §5).  We reproduce exactly that
+statistic, not the pixels of CIFAR-10:
+
+* each class ``c`` owns a random unit direction ``v_c`` in R^dim; the
+  class signal is spread uniformly across all dims, so a tier reading the
+  first ``m`` dims recovers ``sqrt(m/dim)`` of it -- an analytically
+  controlled, monotone accuracy ladder (pairwise class separation
+  ``z ~= gain * sqrt(m/dim) * sqrt(2) / (2*sigma)``);
+* each sample draws a difficulty ``d ~ Beta(a, b)`` which scales the
+  signal: ``s(d) = (1 + d_boost) - (d_boost + d_atten) * d`` -- easy
+  samples are extra separable, the hard tail is far below average;
+* noise is isotropic ``sigma``; labels flip w.p. ``label_noise * d^2``
+  (the paper's label-noise failure mode for confidence cascades, §2.1).
+
+Datasets are written in the ABDS binary format shared with the Rust side
+(``rust/src/data/format.rs``):
+
+    magic  b"ABDS"            4 bytes
+    version u32 = 1
+    n       u32               number of samples
+    dim     u32               feature dim
+    classes u32
+    flags   u32               bit0: has difficulty field
+    x       f32[n*dim]        row-major
+    y       u32[n]
+    diff    f32[n]            iff flags&1
+
+All integers little-endian.
+"""
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .suites import SuiteSpec
+
+MAGIC = b"ABDS"
+VERSION = 1
+FLAG_DIFFICULTY = 1
+
+
+def make_suite_data(spec: SuiteSpec, split: str):
+    """Generate one split of a suite. Returns (x, y, difficulty)."""
+    n = {"train": spec.n_train, "val": spec.n_val, "test": spec.n_test}[split]
+    salt = {"train": 0, "val": 1, "test": 2}[split]
+    rng = np.random.default_rng(spec.seed * 1000003 + salt)
+
+    C, D = spec.classes, spec.dim
+    # Shared (per-suite, not per-split) geometry: derive from the suite seed.
+    geo = np.random.default_rng(spec.seed)
+    dirs = geo.standard_normal((C, D)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+
+    y = rng.integers(0, C, size=n).astype(np.uint32)
+    d = rng.beta(spec.diff_a, spec.diff_b, size=n).astype(np.float32)
+
+    # Per-sample signal scale: easy samples boosted, hard tail attenuated.
+    scale = (1.0 + spec.d_boost) - (spec.d_boost + spec.d_atten) * d
+    x = dirs[y] * (spec.gain * scale)[:, None]
+    x += rng.standard_normal((n, D)).astype(np.float32) * spec.sigma
+
+    # Label noise on the hard tail.
+    flip = rng.random(n) < spec.label_noise * d**2
+    y_noisy = y.copy()
+    y_noisy[flip] = rng.integers(0, C, size=int(flip.sum())).astype(np.uint32)
+    return x.astype(np.float32), y_noisy, d
+
+
+def write_abds(path, x: np.ndarray, y: np.ndarray, diff=None) -> None:
+    """Write an ABDS dataset file (see module docstring)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    n, dim = x.shape
+    assert y.shape == (n,)
+    classes = int(y.max()) + 1 if n else 0
+    flags = FLAG_DIFFICULTY if diff is not None else 0
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIIII", VERSION, n, dim, classes, flags))
+        f.write(np.ascontiguousarray(x, dtype=np.float32).tobytes())
+        f.write(np.ascontiguousarray(y, dtype=np.uint32).tobytes())
+        if diff is not None:
+            assert diff.shape == (n,)
+            f.write(np.ascontiguousarray(diff, dtype=np.float32).tobytes())
+
+
+def read_abds(path):
+    """Read an ABDS dataset file. Returns (x, y, diff-or-None)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        version, n, dim, classes, flags = struct.unpack("<IIIII", f.read(20))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        x = np.frombuffer(f.read(4 * n * dim), dtype=np.float32).reshape(n, dim)
+        y = np.frombuffer(f.read(4 * n), dtype=np.uint32)
+        diff = None
+        if flags & FLAG_DIFFICULTY:
+            diff = np.frombuffer(f.read(4 * n), dtype=np.float32)
+    return x.copy(), y.copy(), None if diff is None else diff.copy()
+
+
+def generate_suite(spec: SuiteSpec, out_dir) -> dict:
+    """Generate and persist all splits. Returns split -> relative path."""
+    out_dir = Path(out_dir)
+    rel = {}
+    for split in ("train", "val", "test"):
+        x, y, d = make_suite_data(spec, split)
+        p = out_dir / f"{spec.name}_{split}.abds"
+        write_abds(p, x, y, d)
+        rel[split] = p.name
+    return rel

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot (ensemble forward +
+# agreement reduce).  ref.py holds the pure-jnp oracles.
+from .agreement import agreement
+from .ensemble_linear import ensemble_linear, ensemble_linear_member
+
+__all__ = ["agreement", "ensemble_linear", "ensemble_linear_member"]

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: the agreement-based deferral rule (paper Eq. 3/4).
+
+Given the stacked per-member logits ``(k, B, C)`` of a tier's ensemble,
+one reduction pass over the member axis computes everything the L3
+coordinator needs to apply the deferral rule:
+
+* ``majority``  -- the ensemble's (plurality-vote) prediction, i32[B];
+* ``vote_frac`` -- vote(x; H^k): fraction of members voting for the
+  majority label (Eq. 3's score), f32[B];
+* ``mean_score``-- s(x; H^k): mean softmax probability the members assign
+  to the majority label (Eq. 4's score), f32[B].
+
+Evaluating the rule *inside* the artifact means the request path ships a
+scalar per sample back to the coordinator instead of k*C logits -- this is
+what makes the deferral rule "significantly cheaper to evaluate" (§3.1)
+in the edge-to-cloud placement, where the reduce runs on-device.
+
+Grid: one program per batch block; each program holds a ``(k, bB, C)``
+logits block in VMEM (k <= 8, C <= 128 here: <= 0.5 MiB).  Ties are broken
+toward the smaller class index (argmax semantics), matching ref.py and the
+Rust-side re-implementation (coordinator/agreement.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _agreement_kernel(logits_ref, maj_ref, frac_ref, score_ref):
+    lg = logits_ref[...].astype(jnp.float32)        # (k, bB, C)
+    k = lg.shape[0]
+    c = lg.shape[2]
+    preds = jnp.argmax(lg, axis=-1)                 # (k, bB)
+    onehot = jax.nn.one_hot(preds, c, dtype=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)                # (bB, C)
+    maj = jnp.argmax(counts, axis=-1)               # (bB,)
+    frac = jnp.max(counts, axis=-1) / float(k)
+    probs = jax.nn.softmax(lg, axis=-1)             # (k, bB, C)
+    maj1h = jax.nn.one_hot(maj, c, dtype=jnp.float32)
+    score = jnp.mean(jnp.sum(probs * maj1h[None, :, :], axis=-1), axis=0)
+    maj_ref[...] = maj.astype(jnp.int32)
+    frac_ref[...] = frac
+    score_ref[...] = score
+
+
+def agreement(logits, *, block_b: int = DEFAULT_BLOCK_B):
+    """Reduce ensemble logits to (majority, vote_frac, mean_score).
+
+    logits: (k, B, C) -> (i32[B], f32[B], f32[B]).
+    """
+    if logits.ndim != 3:
+        raise ValueError(f"expected (k, B, C) logits, got {logits.shape}")
+    k, batch, c = logits.shape
+    bB = min(block_b, batch)
+    pad = (-batch) % bB
+    lp = jnp.pad(logits, ((0, 0), (0, pad), (0, 0))) if pad else logits
+    b_pad = lp.shape[1]
+    grid = (_cdiv(b_pad, bB),)
+    maj, frac, score = pl.pallas_call(
+        _agreement_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bB, c), lambda bi: (0, bi, 0))],
+        out_specs=[
+            pl.BlockSpec((bB,), lambda bi: (bi,)),
+            pl.BlockSpec((bB,), lambda bi: (bi,)),
+            pl.BlockSpec((bB,), lambda bi: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+        ],
+        interpret=True,
+    )(lp)
+    return maj[:batch], frac[:batch], score[:batch]

@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: fused k-member ensemble linear layer.
+
+The compute hot-spot of ABC is evaluating an ensemble of k models on the
+*same* batch.  Instead of looping over members in Python (k dispatches,
+k HBM round-trips for the activations), the member axis is a **grid
+dimension**: the kernel runs a ``(k, B/bB, O/bO)`` grid where each program
+holds one ``(bB, I)`` activation block and one ``(I, bO)`` weight block in
+VMEM and issues a single MXU matmul.  This is the TPU-shaped analogue of
+the paper's parallel ensemble execution (rho -> 1, §4.1): members become
+independent grid programs a real TPU pipelines across cores, and the
+BlockSpec expresses the HBM<->VMEM schedule (DESIGN.md §2).
+
+Two variants:
+
+* ``ensemble_linear``        -- shared input  x: (B, I)   (first layer)
+* ``ensemble_linear_member`` -- per-member    x: (k, B, I) (deeper layers)
+
+Both return ``(k, B, O)``.  ``interpret=True`` always: the CPU PJRT plugin
+cannot execute Mosaic custom-calls; interpret mode lowers the identical
+dataflow to plain HLO (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly tile sizes: with bB = 128, bO = 512 and I <= 512,
+# (bB*I + I*bO + bB*bO) * 4B  <=  (128*512 + 512*512 + 128*512) * 4  ~= 1.6 MiB
+# per program, far under the ~16 MiB VMEM budget; the MXU sees dense
+# (128, I) x (I, 512) f32 matmuls.  bO = 512 (up from 128) was a perf-pass
+# change: it quarters the grid steps of the widest tiers, which under the
+# interpret-mode lowering means 4x fewer while-loop iterations on the CPU
+# PJRT path too (EXPERIMENTS.md SS Perf L1).
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_O = 512
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_axis(a, axis: int, mult: int):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _shared_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    # x_ref: (bB, I); w_ref: (1, I, bO); b_ref: (1, bO); o_ref: (1, bB, bO)
+    x = x_ref[...]
+    w = w_ref[0]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[0][None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def _member_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    # x_ref: (1, bB, I); w_ref: (1, I, bO); b_ref: (1, bO); o_ref: (1, bB, bO)
+    x = x_ref[0]
+    w = w_ref[0]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[0][None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ensemble_linear(x, w, b, *, activation: str = "none",
+                    block_b: int = DEFAULT_BLOCK_B,
+                    block_o: int = DEFAULT_BLOCK_O):
+    """y[m] = act(x @ w[m] + b[m]) for every ensemble member m.
+
+    x: (B, I) shared input; w: (k, I, O); b: (k, O)  ->  (k, B, O).
+    """
+    k, i_dim, o_dim = w.shape
+    batch = x.shape[0]
+    if x.ndim != 2 or x.shape[1] != i_dim or b.shape != (k, o_dim):
+        raise ValueError(
+            f"shape mismatch x={x.shape} w={w.shape} b={b.shape}")
+    bB = min(block_b, batch)
+    bO = min(block_o, o_dim)
+    xp = _pad_axis(x, 0, bB)
+    wp = _pad_axis(w, 2, bO)
+    bp = _pad_axis(b, 1, bO)
+    bp_pad, op_pad = xp.shape[0], wp.shape[2]
+    grid = (k, _cdiv(bp_pad, bB), _cdiv(op_pad, bO))
+    out = pl.pallas_call(
+        functools.partial(_shared_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, i_dim), lambda m, bi, oj: (bi, 0)),
+            pl.BlockSpec((1, i_dim, bO), lambda m, bi, oj: (m, 0, oj)),
+            pl.BlockSpec((1, bO), lambda m, bi, oj: (m, oj)),
+        ],
+        out_specs=pl.BlockSpec((1, bB, bO), lambda m, bi, oj: (m, bi, oj)),
+        out_shape=jax.ShapeDtypeStruct((k, bp_pad, op_pad), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:, :batch, :o_dim]
+
+
+def ensemble_linear_member(x, w, b, *, activation: str = "none",
+                           block_b: int = DEFAULT_BLOCK_B,
+                           block_o: int = DEFAULT_BLOCK_O):
+    """y[m] = act(x[m] @ w[m] + b[m]): per-member input variant.
+
+    x: (k, B, I); w: (k, I, O); b: (k, O)  ->  (k, B, O).
+    """
+    k, i_dim, o_dim = w.shape
+    if x.ndim != 3 or x.shape[0] != k or x.shape[2] != i_dim:
+        raise ValueError(f"shape mismatch x={x.shape} w={w.shape}")
+    batch = x.shape[1]
+    bB = min(block_b, batch)
+    bO = min(block_o, o_dim)
+    xp = _pad_axis(x, 1, bB)
+    wp = _pad_axis(w, 2, bO)
+    bp = _pad_axis(b, 1, bO)
+    b_pad, o_pad = xp.shape[1], wp.shape[2]
+    grid = (k, _cdiv(b_pad, bB), _cdiv(o_pad, bO))
+    out = pl.pallas_call(
+        functools.partial(_member_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bB, i_dim), lambda m, bi, oj: (m, bi, 0)),
+            pl.BlockSpec((1, i_dim, bO), lambda m, bi, oj: (m, 0, oj)),
+            pl.BlockSpec((1, bO), lambda m, bi, oj: (m, oj)),
+        ],
+        out_specs=pl.BlockSpec((1, bB, bO), lambda m, bi, oj: (m, bi, oj)),
+        out_shape=jax.ShapeDtypeStruct((k, b_pad, o_pad), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:, :batch, :o_dim]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal for the kernel layer: pytest +
+hypothesis sweep shapes/dtypes and assert_allclose kernel-vs-ref
+(python/tests/test_kernels.py).  Keep these boring and obviously right.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ensemble_linear_ref(x, w, b, *, activation: str = "none"):
+    """x: (B, I) shared; w: (k, I, O); b: (k, O) -> (k, B, O)."""
+    y = jnp.einsum("bi,kio->kbo", x.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)[:, None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def ensemble_linear_member_ref(x, w, b, *, activation: str = "none"):
+    """x: (k, B, I) per-member; w: (k, I, O); b: (k, O) -> (k, B, O)."""
+    y = jnp.einsum("kbi,kio->kbo", x.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)[:, None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def agreement_ref(logits):
+    """logits: (k, B, C) -> (majority i32[B], vote_frac f32[B], mean_score f32[B]).
+
+    Ties break toward the smaller class index (argmax semantics).
+    """
+    lg = logits.astype(jnp.float32)
+    k, _, c = lg.shape
+    preds = jnp.argmax(lg, axis=-1)                      # (k, B)
+    onehot = jax.nn.one_hot(preds, c, dtype=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)                     # (B, C)
+    maj = jnp.argmax(counts, axis=-1)                    # (B,)
+    frac = jnp.max(counts, axis=-1) / float(k)
+    probs = jax.nn.softmax(lg, axis=-1)
+    maj1h = jax.nn.one_hot(maj, c, dtype=jnp.float32)
+    score = jnp.mean(jnp.sum(probs * maj1h[None], axis=-1), axis=0)
+    return maj.astype(jnp.int32), frac, score

@@ -1,0 +1,143 @@
+"""L2: the JAX tier model -- an ensemble MLP classifier built on the L1
+Pallas kernels.
+
+A *tier* is an ensemble of ``k`` MLPs with identical architecture but
+independent initialisation / data order (the paper sources its ensembles
+from model zoos; we train ours at build time, see train.py).  The tier
+forward pass is what gets AOT-lowered per batch bucket:
+
+    tier_forward(params, x) ->
+        (majority i32[B], vote_frac f32[B], mean_score f32[B],
+         logits f32[k, B, C])
+
+Weights are *runtime parameters* of the lowered HLO (flattened in layer
+order: w0, b0, w1, b1, ...), shipped to the Rust runtime in an .npz
+sidecar: HLO text elides large constants ("constant({...})"), so baking
+them is not an option (DESIGN.md §2, interchange format).
+
+There is also a ``single_forward`` variant (member 0 only, confidence =
+max softmax) used by the single-model and confidence-cascade (WoC)
+baselines.
+"""
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import agreement, ensemble_linear, ensemble_linear_member
+from .kernels.ref import agreement_ref
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]  # [(w (k,I,O), b (k,O)), ...]
+
+
+def layer_dims(input_slice: int, hidden: Sequence[int], classes: int):
+    """[(in, out)] for every layer of the tier MLP."""
+    dims = []
+    prev = input_slice
+    for h in hidden:
+        dims.append((prev, h))
+        prev = h
+    dims.append((prev, classes))
+    return dims
+
+
+def init_params(rng: np.random.Generator, k: int, input_slice: int,
+                hidden: Sequence[int], classes: int) -> Params:
+    """He-init per member; member axis leads every array."""
+    params: Params = []
+    for (i, o) in layer_dims(input_slice, hidden, classes):
+        scale = np.sqrt(2.0 / i)
+        w = rng.standard_normal((k, i, o)).astype(np.float32) * scale
+        b = np.zeros((k, o), dtype=np.float32)
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+    return params
+
+
+def ensemble_logits(params: Params, x, *, input_slice: int):
+    """Forward through the fused L1 kernels. x: (B, D) -> logits (k, B, C)."""
+    h = x[:, :input_slice]
+    n_layers = len(params)
+    # First layer: shared input across members.
+    w, b = params[0]
+    act = "relu" if n_layers > 1 else "none"
+    y = ensemble_linear(h, w, b, activation=act)
+    # Deeper layers: per-member activations.
+    for li in range(1, n_layers):
+        w, b = params[li]
+        act = "relu" if li < n_layers - 1 else "none"
+        y = ensemble_linear_member(y, w, b, activation=act)
+    return y
+
+
+def ensemble_logits_ref(params: Params, x, *, input_slice: int):
+    """Pure-jnp reference of ensemble_logits (no Pallas) for tests/training."""
+    h = x[:, :input_slice].astype(jnp.float32)
+    n_layers = len(params)
+    y = jnp.einsum("bi,kio->kbo", h, params[0][0]) + params[0][1][:, None, :]
+    if n_layers > 1:
+        y = jnp.maximum(y, 0.0)
+    for li in range(1, n_layers):
+        w, b = params[li]
+        y = jnp.einsum("kbi,kio->kbo", y, w) + b[:, None, :]
+        if li < n_layers - 1:
+            y = jnp.maximum(y, 0.0)
+    return y
+
+
+def tier_forward(params: Params, x, *, input_slice: int):
+    """The full tier artifact: ensemble forward + agreement reduce."""
+    logits = ensemble_logits(params, x, input_slice=input_slice)
+    maj, frac, score = agreement(logits)
+    return maj, frac, score, logits
+
+
+def tier_forward_ref(params: Params, x, *, input_slice: int):
+    logits = ensemble_logits_ref(params, x, input_slice=input_slice)
+    maj, frac, score = agreement_ref(logits)
+    return maj, frac, score, logits
+
+
+def single_forward(params: Params, x, *, input_slice: int):
+    """Member-0-only forward for the single-model / WoC baselines.
+
+    Returns (pred i32[B], conf f32[B] = max softmax, logits f32[B, C]).
+    Implemented with the same kernels at k=1 so the baseline exercises the
+    identical compiled path.
+    """
+    p1 = [(w[:1], b[:1]) for (w, b) in params]
+    logits = ensemble_logits(p1, x, input_slice=input_slice)[0]  # (B, C)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    conf = jnp.max(probs, axis=-1)
+    return pred, conf, logits
+
+
+def flops_per_sample(input_slice: int, hidden: Sequence[int],
+                     classes: int) -> int:
+    """Forward FLOPs of ONE member on one sample (2*I*O per matmul)."""
+    return int(sum(2 * i * o for (i, o) in
+                   layer_dims(input_slice, hidden, classes)))
+
+
+def param_count(input_slice: int, hidden: Sequence[int], classes: int) -> int:
+    """Parameters of ONE member."""
+    return int(sum(i * o + o for (i, o) in
+                   layer_dims(input_slice, hidden, classes)))
+
+
+def params_to_npz_dict(params: Params) -> Dict[str, np.ndarray]:
+    """Flatten params for the .npz sidecar, layer order: w0, b0, w1, b1..."""
+    out: Dict[str, np.ndarray] = {}
+    for i, (w, b) in enumerate(params):
+        out[f"w{i}"] = np.asarray(w, dtype=np.float32)
+        out[f"b{i}"] = np.asarray(b, dtype=np.float32)
+    return out
+
+
+def npz_param_names(n_layers: int) -> List[str]:
+    names = []
+    for i in range(n_layers):
+        names += [f"w{i}", f"b{i}"]
+    return names

@@ -1,0 +1,129 @@
+"""Suite and zoo specifications for the ABC reproduction.
+
+Each *suite* is a synthetic stand-in for one of the paper's benchmark
+datasets (Table 2).  Each suite carries a *zoo spec*: a ladder of FLOPs
+tiers (Figure 1's Pareto ladder), each tier holding an ensemble of ``k``
+models trained from different seeds.
+
+The generator (datagen.py) plants a class signal whose energy is spread
+uniformly across all ``dim`` features, so a tier that reads only the
+first ``input_slice`` dims recovers ``sqrt(input_slice/dim)`` of the
+signal -- giving an analytically controlled, *monotone* accuracy ladder.
+A per-sample difficulty ``d`` scales the signal (easy samples are
+above-average separable, hard ones far below), which is exactly the
+structure ABC exploits: small models are right *and agree* on the easy
+mass and disagree on the hard tail.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    """One cascade tier: an ensemble of ``k`` identical-architecture MLPs."""
+
+    tier: int                 # 1-based tier index (1 = cheapest)
+    k: int                    # ensemble size
+    hidden: Tuple[int, ...]   # hidden layer widths
+    input_slice: int          # number of leading input dims the tier sees
+    epochs: int               # training epochs
+    train_frac: float = 1.0   # fraction of the training set used
+
+
+@dataclass(frozen=True)
+class SuiteSpec:
+    """A synthetic dataset suite plus its model zoo."""
+
+    name: str
+    paper_dataset: str        # which paper dataset this stands in for
+    classes: int
+    dim: int
+    n_train: int
+    n_val: int
+    n_test: int
+    seed: int
+    # Difficulty distribution Beta(a, b): mass near 0 => mostly-easy suite.
+    diff_a: float = 1.2
+    diff_b: float = 3.0
+    label_noise: float = 0.04  # max label-flip prob (scaled by difficulty^2)
+    gain: float = 3.1          # class-signal gain (sets top-tier accuracy)
+    sigma: float = 1.0         # isotropic noise std
+    d_boost: float = 0.35      # signal boost at difficulty 0
+    d_atten: float = 0.55      # signal attenuation at difficulty 1
+    tiers: Tuple[TierSpec, ...] = field(default_factory=tuple)
+
+
+# Batch buckets the runtime AOT-compiles per tier; L3 picks the smallest
+# bucket that fits a dynamic batch and pads.
+ENSEMBLE_BUCKETS = (1, 8, 32, 128)
+SINGLE_BUCKETS = (128,)
+
+
+def _ladder(k: int, dim: int) -> Tuple[TierSpec, ...]:
+    """A 4-tier FLOPs ladder; input slices widen with the tier so accuracy
+    is monotone by construction (sqrt(slice/dim) of the signal).
+
+    Slices start at dim/2: the paper's tier-1 models are already decent
+    (e.g. 63% ImageNet, ~91% CIFAR-10) -- a too-weak tier 1 makes safe
+    deferral select nothing and the cascade degenerates to the top tier.
+    """
+    s = lambda num, den: max(4, dim * num // den)
+    return (
+        TierSpec(tier=1, k=k, hidden=(16,), input_slice=s(1, 2), epochs=16,
+                 train_frac=0.5),
+        TierSpec(tier=2, k=k, hidden=(48,), input_slice=s(2, 3), epochs=20),
+        TierSpec(tier=3, k=k, hidden=(128, 64), input_slice=s(5, 6), epochs=24),
+        TierSpec(tier=4, k=k, hidden=(320, 160), input_slice=dim, epochs=28),
+    )
+
+
+def default_suites() -> List[SuiteSpec]:
+    """The five benchmark suites of DESIGN.md §6 (stand-ins for Table 2)."""
+    suites = [
+        SuiteSpec(
+            name="synth-cifar10", paper_dataset="CIFAR-10",
+            classes=10, dim=64, n_train=20000, n_val=4000, n_test=10000,
+            seed=101, diff_a=1.1, diff_b=3.4, label_noise=0.05, gain=3.2,
+        ),
+        SuiteSpec(
+            name="synth-imagenet", paper_dataset="ImageNet-1K",
+            classes=100, dim=128, n_train=40000, n_val=8000, n_test=10000,
+            seed=202, diff_a=1.6, diff_b=2.8, label_noise=0.07, gain=4.8,
+        ),
+        SuiteSpec(
+            name="synth-sst2", paper_dataset="SST-2",
+            classes=2, dim=32, n_train=8000, n_val=2000, n_test=872,
+            seed=303, diff_a=0.9, diff_b=4.2, label_noise=0.03, gain=2.4,
+        ),
+        SuiteSpec(
+            name="synth-twitterfin", paper_dataset="Twitter Financial News",
+            classes=3, dim=32, n_train=6000, n_val=1500, n_test=822,
+            seed=404, diff_a=1.4, diff_b=2.8, label_noise=0.06, gain=2.6,
+        ),
+        SuiteSpec(
+            name="synth-swag", paper_dataset="SWAG (MCQ)",
+            classes=4, dim=48, n_train=12000, n_val=3000, n_test=4000,
+            seed=505, diff_a=1.3, diff_b=2.9, label_noise=0.05, gain=2.9,
+        ),
+    ]
+    out = [
+        SuiteSpec(**{**s.__dict__, "tiers": _ladder(3, s.dim)}) for s in suites
+    ]
+    # Fig. 8 ablation zoo: same CIFAR-10 stand-in data (same seed/geometry)
+    # but k=5 members per tier, so ensemble sizes 2..5 can be evaluated by
+    # host-side member subsetting.
+    cifar = suites[0]
+    out.append(SuiteSpec(**{
+        **cifar.__dict__,
+        "name": "synth-cifar10-k5",
+        "tiers": _ladder(5, cifar.dim),
+    }))
+    return out
+
+
+def suite_by_name(name: str) -> SuiteSpec:
+    for s in default_suites():
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown suite {name!r}")

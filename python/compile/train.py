@@ -1,0 +1,147 @@
+"""Build-time training of the tier model zoo.
+
+The paper pulls pretrained models off HuggingFace (Table 3); we train our
+zoo here, once, inside ``make artifacts``.  All k members of a tier are
+trained *jointly*: the member axis leads every parameter array, members
+get independent inits and independent minibatch orders (bootstrap-style
+diversity -- the source of the disagreement signal ABC relies on), and
+the whole thing is one jitted update over the stacked params.
+
+Optimiser: hand-rolled Adam (optax is not on the image; ~20 lines).
+"""
+
+import functools
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .suites import SuiteSpec, TierSpec
+
+
+@dataclass
+class TrainResult:
+    params: model.Params
+    member_val_acc: List[float]      # per-member accuracy on val
+    ensemble_val_acc: float          # majority-vote accuracy on val
+    ensemble_test_acc: float
+    member_test_acc: List[float]
+
+
+def _adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return (
+        [(zeros(w), zeros(b)) for (w, b) in params],  # m
+        [(zeros(w), zeros(b)) for (w, b) in params],  # v
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("input_slice", "lr", "wd"))
+def _update(params, opt_state, step, xb, yb, *, input_slice, lr, wd):
+    """One Adam step on the summed member losses.
+
+    xb: (k, B, D) per-member minibatches; yb: (k, B).
+    """
+    m_state, v_state = opt_state
+
+    def loss_fn(ps):
+        total = 0.0
+        k = xb.shape[0]
+        for mi in range(k):
+            pm = [(w[mi:mi + 1], b[mi:mi + 1]) for (w, b) in ps]
+            lg = model.ensemble_logits_ref(pm, xb[mi],
+                                           input_slice=input_slice)[0]
+            logp = jax.nn.log_softmax(lg, axis=-1)
+            nll = -jnp.take_along_axis(logp, yb[mi][:, None], axis=1).mean()
+            total = total + nll
+        return total / k
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1
+    new_params, new_m, new_v = [], [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(
+            params, grads, m_state, v_state):
+        outs = []
+        for p, g, m_, v_ in ((w, gw, mw, vw), (b, gb, mb, vb)):
+            g = g + wd * p
+            m_ = b1 * m_ + (1 - b1) * g
+            v_ = b2 * v_ + (1 - b2) * g * g
+            mhat = m_ / (1 - b1 ** t)
+            vhat = v_ / (1 - b2 ** t)
+            p = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+            outs.append((p, m_, v_))
+        (w2, mw2, vw2), (b2_, mb2, vb2) = outs
+        new_params.append((w2, b2_))
+        new_m.append((mw2, mb2))
+        new_v.append((vw2, vb2))
+    return new_params, (new_m, new_v), loss
+
+
+def _member_batches(rng: np.random.Generator, n: int, k: int, bs: int):
+    """Independent epoch permutations per member, chunked to minibatches."""
+    perms = np.stack([rng.permutation(n) for _ in range(k)])  # (k, n)
+    n_batches = n // bs
+    for bi in range(n_batches):
+        yield perms[:, bi * bs:(bi + 1) * bs]  # (k, bs)
+
+
+def evaluate(params: model.Params, x: np.ndarray, y: np.ndarray,
+             *, input_slice: int, batch: int = 2048):
+    """(member accuracies, ensemble majority-vote accuracy), pure-jnp path."""
+    k = params[0][0].shape[0]
+    member_hits = np.zeros(k, dtype=np.int64)
+    ens_hits = 0
+    fwd = jax.jit(functools.partial(
+        model.ensemble_logits_ref, input_slice=input_slice))
+    for s in range(0, len(x), batch):
+        xb = jnp.asarray(x[s:s + batch])
+        yb = y[s:s + batch]
+        lg = np.asarray(fwd(params, xb))            # (k, B, C)
+        preds = lg.argmax(-1)                       # (k, B)
+        member_hits += (preds == yb[None]).sum(1)
+        # plurality vote, ties toward smaller class (same as kernels)
+        c = lg.shape[-1]
+        counts = np.zeros((len(yb), c), dtype=np.int32)
+        for mi in range(k):
+            np.add.at(counts, (np.arange(len(yb)), preds[mi]), 1)
+        maj = counts.argmax(-1)
+        ens_hits += int((maj == yb).sum())
+    return (member_hits / len(x)).tolist(), ens_hits / len(x)
+
+
+def train_tier(spec: SuiteSpec, tier: TierSpec,
+               train_xy: Tuple[np.ndarray, np.ndarray],
+               val_xy: Tuple[np.ndarray, np.ndarray],
+               test_xy: Tuple[np.ndarray, np.ndarray],
+               *, batch_size: int = 256, lr: float = 2e-3,
+               wd: float = 1e-4, verbose: bool = False) -> TrainResult:
+    """Train the k-member ensemble of one tier."""
+    xtr, ytr = train_xy
+    if tier.train_frac < 1.0:
+        n_use = int(len(xtr) * tier.train_frac)
+        xtr, ytr = xtr[:n_use], ytr[:n_use]
+    rng = np.random.default_rng(spec.seed * 31 + tier.tier)
+    params = model.init_params(rng, tier.k, tier.input_slice, tier.hidden,
+                               spec.classes)
+    opt_state = _adam_init(params)
+    step = 0
+    xtr_j = jnp.asarray(xtr)
+    ytr_j = jnp.asarray(ytr.astype(np.int32))
+    for _epoch in range(tier.epochs):
+        for idx in _member_batches(rng, len(xtr), tier.k, batch_size):
+            xb = xtr_j[jnp.asarray(idx)]            # (k, bs, D)
+            yb = ytr_j[jnp.asarray(idx)]            # (k, bs)
+            params, opt_state, loss = _update(
+                params, opt_state, step, xb, yb,
+                input_slice=tier.input_slice, lr=lr, wd=wd)
+            step += 1
+        if verbose:
+            print(f"    epoch {_epoch + 1}/{tier.epochs} loss={float(loss):.4f}")
+    mv, ev = evaluate(params, *val_xy, input_slice=tier.input_slice)
+    mt, et = evaluate(params, *test_xy, input_slice=tier.input_slice)
+    return TrainResult(params=params, member_val_acc=mv, ensemble_val_acc=ev,
+                       ensemble_test_acc=et, member_test_acc=mt)

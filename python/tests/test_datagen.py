@@ -1,0 +1,112 @@
+"""Dataset generator + ABDS binary format tests."""
+
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile.suites import SuiteSpec, default_suites, suite_by_name
+
+
+def _tiny_spec(**over):
+    base = dict(
+        name="tiny", paper_dataset="t", classes=4, dim=16,
+        n_train=400, n_val=200, n_test=200, seed=7,
+    )
+    base.update(over)
+    return SuiteSpec(**base)
+
+
+def test_abds_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((37, 5)).astype(np.float32)
+    y = rng.integers(0, 3, 37).astype(np.uint32)
+    d = rng.random(37).astype(np.float32)
+    p = tmp_path / "t.abds"
+    datagen.write_abds(p, x, y, d)
+    x2, y2, d2 = datagen.read_abds(p)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+    np.testing.assert_array_equal(d, d2)
+
+
+def test_abds_no_difficulty(tmp_path):
+    x = np.zeros((3, 2), dtype=np.float32)
+    y = np.array([0, 1, 0], dtype=np.uint32)
+    p = tmp_path / "t.abds"
+    datagen.write_abds(p, x, y, None)
+    _, _, d = datagen.read_abds(p)
+    assert d is None
+
+
+def test_abds_bad_magic(tmp_path):
+    p = tmp_path / "bad.abds"
+    p.write_bytes(b"NOPE" + b"\x00" * 40)
+    with pytest.raises(ValueError, match="bad magic"):
+        datagen.read_abds(p)
+
+
+def test_generation_deterministic():
+    spec = _tiny_spec()
+    x1, y1, d1 = datagen.make_suite_data(spec, "train")
+    x2, y2, d2 = datagen.make_suite_data(spec, "train")
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_splits_differ():
+    spec = _tiny_spec(n_val=400, n_test=400)
+    xtr, _, _ = datagen.make_suite_data(spec, "train")
+    xva, _, _ = datagen.make_suite_data(spec, "val")
+    assert not np.allclose(xtr[:100], xva[:100])
+
+
+def test_shapes_and_ranges():
+    spec = _tiny_spec()
+    x, y, d = datagen.make_suite_data(spec, "val")
+    assert x.shape == (200, 16) and y.shape == (200,) and d.shape == (200,)
+    assert y.min() >= 0 and y.max() < 4
+    assert d.min() >= 0 and d.max() <= 1
+    assert x.dtype == np.float32 and y.dtype == np.uint32
+
+
+def test_difficulty_monotone_separability():
+    """Easy samples must be closer to their class direction than hard ones
+    (the structural property ABC exploits)."""
+    spec = _tiny_spec(n_train=8000)
+    x, y, d = datagen.make_suite_data(spec, "train")
+    geo = np.random.default_rng(spec.seed)
+    dirs = geo.standard_normal((spec.classes, spec.dim)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    proj = np.einsum("nd,nd->n", x, dirs[y])   # signal projection
+    easy = proj[d < 0.2]
+    hard = proj[d > 0.6]
+    assert easy.mean() > hard.mean() + 0.5
+
+
+def test_generate_suite_writes_all_splits(tmp_path):
+    spec = _tiny_spec()
+    rel = datagen.generate_suite(spec, tmp_path)
+    assert set(rel) == {"train", "val", "test"}
+    for split, name in rel.items():
+        x, y, d = datagen.read_abds(tmp_path / name)
+        n = {"train": 400, "val": 200, "test": 200}[split]
+        assert x.shape == (n, 16) and d is not None
+
+
+def test_default_suites_consistent():
+    suites = default_suites()
+    assert len(suites) == 6
+    names = {s.name for s in suites}
+    assert "synth-cifar10" in names and "synth-imagenet" in names
+    assert "synth-cifar10-k5" in names
+    k5 = suite_by_name("synth-cifar10-k5")
+    assert all(t.k == 5 for t in k5.tiers)
+    for s in suites:
+        assert len(s.tiers) == 4
+        slices = [t.input_slice for t in s.tiers]
+        assert slices == sorted(slices), "input slices must be monotone"
+        assert s.tiers[-1].input_slice == s.dim
+        assert suite_by_name(s.name).name == s.name
+    with pytest.raises(KeyError):
+        suite_by_name("nope")

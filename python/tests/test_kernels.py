@@ -1,0 +1,206 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.  This is
+the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import agreement, ensemble_linear, ensemble_linear_member
+from compile.kernels.ref import (
+    agreement_ref,
+    ensemble_linear_member_ref,
+    ensemble_linear_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    a = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(a, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# ensemble_linear (shared input)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 5),
+    b=st.integers(1, 200),
+    i=st.integers(1, 96),
+    o=st.integers(1, 160),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_ensemble_linear_matches_ref(k, b, i, o, act):
+    rng = np.random.default_rng(k * 1000 + b * 10 + i + o)
+    x = _rand(rng, (b, i), jnp.float32)
+    w = _rand(rng, (k, i, o), jnp.float32)
+    bias = _rand(rng, (k, o), jnp.float32)
+    got = ensemble_linear(x, w, bias, activation=act)
+    want = ensemble_linear_ref(x, w, bias, activation=act)
+    assert got.shape == (k, b, o)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    b=st.integers(1, 64),
+    i=st.integers(1, 48),
+    o=st.integers(1, 64),
+)
+def test_ensemble_linear_bf16(k, b, i, o):
+    """bf16 inputs: accumulate in f32 (preferred_element_type), cast back."""
+    rng = np.random.default_rng(7 * k + b + i + o)
+    x = _rand(rng, (b, i), jnp.bfloat16)
+    w = _rand(rng, (k, i, o), jnp.bfloat16)
+    bias = _rand(rng, (k, o), jnp.bfloat16)
+    got = ensemble_linear(x, w, bias)
+    want = ensemble_linear_ref(x, w, bias)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=0.06, atol=0.1,
+    )
+
+
+def test_ensemble_linear_block_edges():
+    """Batch/output sizes straddling the 128 default block boundary."""
+    rng = np.random.default_rng(0)
+    for b in (127, 128, 129, 256, 257):
+        for o in (127, 128, 129):
+            x = _rand(rng, (b, 16), jnp.float32)
+            w = _rand(rng, (2, 16, o), jnp.float32)
+            bias = _rand(rng, (2, o), jnp.float32)
+            got = ensemble_linear(x, w, bias, activation="relu")
+            want = ensemble_linear_ref(x, w, bias, activation="relu")
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ensemble_linear_custom_blocks():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (70, 24), jnp.float32)
+    w = _rand(rng, (3, 24, 40), jnp.float32)
+    bias = _rand(rng, (3, 40), jnp.float32)
+    got = ensemble_linear(x, w, bias, block_b=32, block_o=16)
+    want = ensemble_linear_ref(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ensemble_linear_shape_errors():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (8, 10), jnp.float32)
+    w = _rand(rng, (2, 12, 4), jnp.float32)  # I mismatch
+    b = _rand(rng, (2, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        ensemble_linear(x, w, b)
+    with pytest.raises(ValueError):
+        ensemble_linear_member(x[None], w, b)  # x I-dim mismatch
+
+
+# ---------------------------------------------------------------------------
+# ensemble_linear_member (per-member input)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 5),
+    b=st.integers(1, 150),
+    i=st.integers(1, 80),
+    o=st.integers(1, 140),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_ensemble_linear_member_matches_ref(k, b, i, o, act):
+    rng = np.random.default_rng(k + b * 3 + i * 7 + o * 11)
+    x = _rand(rng, (k, b, i), jnp.float32)
+    w = _rand(rng, (k, i, o), jnp.float32)
+    bias = _rand(rng, (k, o), jnp.float32)
+    got = ensemble_linear_member(x, w, bias, activation=act)
+    want = ensemble_linear_member_ref(x, w, bias, activation=act)
+    assert got.shape == (k, b, o)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_member_variant_consistent_with_shared():
+    """Broadcasting shared x to (k, B, I) must give the shared result."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (33, 12), jnp.float32)
+    w = _rand(rng, (4, 12, 9), jnp.float32)
+    bias = _rand(rng, (4, 9), jnp.float32)
+    shared = ensemble_linear(x, w, bias, activation="relu")
+    member = ensemble_linear_member(
+        jnp.broadcast_to(x, (4, 33, 12)), w, bias, activation="relu")
+    np.testing.assert_allclose(shared, member, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# agreement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(1, 7),
+    b=st.integers(1, 200),
+    c=st.integers(2, 64),
+)
+def test_agreement_matches_ref(k, b, c):
+    rng = np.random.default_rng(k * 31 + b * 7 + c)
+    lg = _rand(rng, (k, b, c), jnp.float32)
+    maj, frac, score = agreement(lg)
+    maj_r, frac_r, score_r = agreement_ref(lg)
+    np.testing.assert_array_equal(np.asarray(maj), np.asarray(maj_r))
+    np.testing.assert_allclose(frac, frac_r, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(score, score_r, rtol=1e-5, atol=1e-6)
+
+
+def test_agreement_unanimous():
+    """All members voting the same class => frac == 1.0, that class wins."""
+    k, b, c = 5, 17, 8
+    lg = np.full((k, b, c), -5.0, dtype=np.float32)
+    lg[:, :, 3] = 5.0
+    maj, frac, score = agreement(jnp.asarray(lg))
+    assert np.all(np.asarray(maj) == 3)
+    np.testing.assert_allclose(np.asarray(frac), 1.0)
+    assert np.all(np.asarray(score) > 0.9)
+
+
+def test_agreement_split_vote_tie_breaks_low():
+    """2-2 split between classes 1 and 4 => majority = 1 (lower index)."""
+    k, b, c = 4, 6, 5
+    lg = np.zeros((k, b, c), dtype=np.float32)
+    lg[0, :, 1] = 4.0
+    lg[1, :, 1] = 4.0
+    lg[2, :, 4] = 4.0
+    lg[3, :, 4] = 4.0
+    maj, frac, _ = agreement(jnp.asarray(lg))
+    assert np.all(np.asarray(maj) == 1)
+    np.testing.assert_allclose(np.asarray(frac), 0.5)
+
+
+def test_agreement_vote_frac_quantised():
+    """vote_frac must be a multiple of 1/k."""
+    rng = np.random.default_rng(4)
+    k = 3
+    lg = _rand(rng, (k, 101, 10), jnp.float32)
+    _, frac, _ = agreement(lg)
+    f = np.asarray(frac) * k
+    np.testing.assert_allclose(f, np.round(f), atol=1e-5)
+
+
+def test_agreement_k1_degenerates_to_argmax():
+    rng = np.random.default_rng(5)
+    lg = _rand(rng, (1, 50, 12), jnp.float32)
+    maj, frac, score = agreement(lg)
+    np.testing.assert_array_equal(
+        np.asarray(maj), np.asarray(jnp.argmax(lg[0], axis=-1)))
+    np.testing.assert_allclose(np.asarray(frac), 1.0)
+    probs = np.asarray(jax.nn.softmax(lg[0], axis=-1))
+    np.testing.assert_allclose(
+        np.asarray(score), probs.max(-1), rtol=1e-5, atol=1e-6)

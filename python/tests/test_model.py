@@ -1,0 +1,86 @@
+"""L2 model correctness: kernel-built tier model vs pure-jnp reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_params(rng, k, input_slice, hidden, classes):
+    return model.init_params(rng, k, input_slice, hidden, classes)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    b=st.integers(1, 64),
+    depth=st.integers(1, 3),
+    classes=st.integers(2, 12),
+)
+def test_tier_forward_matches_ref(k, b, depth, classes):
+    rng = np.random.default_rng(k * 100 + b + depth * 13 + classes)
+    dim, input_slice = 24, 16
+    hidden = tuple([20] * (depth - 1) + ([28] if depth >= 1 else []))[:depth]
+    hidden = tuple(hidden) if depth > 0 else ()
+    params = _mk_params(rng, k, input_slice, hidden, classes)
+    x = jnp.asarray(rng.standard_normal((b, dim)).astype(np.float32))
+    maj, frac, score, logits = model.tier_forward(
+        params, x, input_slice=input_slice)
+    maj_r, frac_r, score_r, logits_r = model.tier_forward_ref(
+        params, x, input_slice=input_slice)
+    np.testing.assert_allclose(logits, logits_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(maj), np.asarray(maj_r))
+    np.testing.assert_allclose(frac, frac_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(score, score_r, rtol=1e-4, atol=1e-5)
+
+
+def test_single_forward_is_member0():
+    rng = np.random.default_rng(0)
+    params = _mk_params(rng, 3, 12, (16,), 5)
+    x = jnp.asarray(rng.standard_normal((40, 20)).astype(np.float32))
+    pred, conf, logits = model.single_forward(params, x, input_slice=12)
+    ref_logits = model.ensemble_logits_ref(params, x, input_slice=12)[0]
+    np.testing.assert_allclose(logits, ref_logits, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(pred), np.asarray(jnp.argmax(ref_logits, axis=-1)))
+    probs = np.asarray(jax.nn.softmax(ref_logits, axis=-1))
+    np.testing.assert_allclose(np.asarray(conf), probs.max(-1),
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(conf) >= 1.0 / 5 - 1e-6)
+    assert np.all(np.asarray(conf) <= 1.0 + 1e-6)
+
+
+def test_flops_and_params_closed_form():
+    # slice=10, hidden=(20, 30), classes=4
+    # layers: 10->20, 20->30, 30->4
+    assert model.flops_per_sample(10, (20, 30), 4) == 2 * (200 + 600 + 120)
+    assert model.param_count(10, (20, 30), 4) == (200 + 20) + (600 + 30) + (120 + 4)
+
+
+def test_params_npz_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    params = _mk_params(rng, 2, 8, (6,), 3)
+    d = model.params_to_npz_dict(params)
+    assert set(d) == {"w0", "b0", "w1", "b1"}
+    assert model.npz_param_names(2) == ["w0", "b0", "w1", "b1"]
+    p = tmp_path / "w.npz"
+    np.savez(p, **d)
+    loaded = np.load(p)
+    for name in d:
+        np.testing.assert_array_equal(loaded[name], d[name])
+
+
+def test_input_slice_restricts_information():
+    """Logits must not depend on features beyond input_slice."""
+    rng = np.random.default_rng(2)
+    params = _mk_params(rng, 2, 8, (10,), 4)
+    x = rng.standard_normal((16, 20)).astype(np.float32)
+    x2 = x.copy()
+    x2[:, 8:] = 999.0  # mutate ignored dims
+    lg1 = model.ensemble_logits(params, jnp.asarray(x), input_slice=8)
+    lg2 = model.ensemble_logits(params, jnp.asarray(x2), input_slice=8)
+    np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))

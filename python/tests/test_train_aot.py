@@ -1,0 +1,105 @@
+"""Training loop + AOT lowering tests (small configs; the full pipeline
+runs at `make artifacts`)."""
+
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+from compile.datagen import make_suite_data
+from compile.suites import SuiteSpec, TierSpec
+
+
+def _spec():
+    return SuiteSpec(
+        name="tiny", paper_dataset="t", classes=3, dim=12,
+        n_train=2400, n_val=400, n_test=400, seed=11, gain=3.4,
+        tiers=(
+            # k=3: with k=2 plurality ties are frequent and the
+            # low-index tie-break drags the ensemble below its members.
+            TierSpec(tier=1, k=3, hidden=(8,), input_slice=6, epochs=10),
+            TierSpec(tier=2, k=3, hidden=(16,), input_slice=12, epochs=10),
+        ),
+    )
+
+
+@pytest.fixture(scope="module")
+def trained():
+    spec = _spec()
+    tr = make_suite_data(spec, "train")
+    va = make_suite_data(spec, "val")
+    te = make_suite_data(spec, "test")
+    out = {}
+    for tier in spec.tiers:
+        out[tier.tier] = train.train_tier(
+            spec, tier, (tr[0], tr[1]), (va[0], va[1]), (te[0], te[1]))
+    return spec, out
+
+
+def test_training_beats_chance(trained):
+    spec, res = trained
+    for tier_id, r in res.items():
+        assert r.ensemble_val_acc > 1.5 / spec.classes, (
+            f"tier {tier_id} barely above chance: {r.ensemble_val_acc}")
+
+
+def test_ladder_monotone(trained):
+    _, res = trained
+    assert res[2].ensemble_val_acc >= res[1].ensemble_val_acc - 0.02
+
+
+def test_ensemble_at_least_mean_member(trained):
+    """Majority vote should not be (much) worse than the mean member."""
+    _, res = trained
+    for r in res.values():
+        assert r.ensemble_val_acc >= np.mean(r.member_val_acc) - 0.02
+
+
+def test_evaluate_counts():
+    spec = _spec()
+    rng = np.random.default_rng(0)
+    params = model.init_params(rng, 2, 6, (8,), 3)
+    x = rng.standard_normal((100, 12)).astype(np.float32)
+    y = rng.integers(0, 3, 100).astype(np.uint32)
+    mv, ev = train.evaluate(params, x, y, input_slice=6)
+    assert len(mv) == 2
+    assert 0.0 <= ev <= 1.0
+    assert all(0.0 <= a <= 1.0 for a in mv)
+
+
+def test_lower_tier_ensemble_hlo(trained):
+    spec, res = trained
+    params = res[1].params
+    text = aot.lower_tier_ensemble(
+        params, input_slice=6, batch=8, dim=spec.dim)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # parameter 0 is the input batch; weights follow
+    assert "f32[8,12]" in text  # x
+    # ENTRY takes x + (w, b) per layer. Nested computations (from the
+    # pallas interpret lowering) declare their own parameters, so count
+    # only the ENTRY block's.
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    assert entry.count("parameter(") == 1 + 2 * len(params)
+    # output tuple: (maj, frac, score, logits)
+    assert "s32[8]" in text
+
+
+def test_lower_tier_single_hlo(trained):
+    spec, res = trained
+    params = res[1].params
+    text = aot.lower_tier_single(
+        params, input_slice=6, batch=4, dim=spec.dim)
+    assert "HloModule" in text
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    assert entry.count("parameter(") == 1 + 2 * len(params)
+
+
+def test_hlo_has_no_elided_constants(trained):
+    """The artifact must be fully parseable: weights are parameters, so no
+    large constants may appear elided as 'constant({...})'."""
+    spec, res = trained
+    text = aot.lower_tier_ensemble(
+        res[2].params, input_slice=12, batch=8, dim=spec.dim)
+    assert "constant({...})" not in text

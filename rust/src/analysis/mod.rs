@@ -1,0 +1,3 @@
+//! Result analysis: Pareto frontiers over (cost, accuracy) points.
+
+pub mod pareto;

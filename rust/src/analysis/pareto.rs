@@ -1,0 +1,116 @@
+//! Pareto-frontier analysis for (cost, accuracy) points (Fig. 1/2).
+
+/// A labelled operating point: lower cost is better, higher value better.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    pub label: String,
+    pub cost: f64,
+    pub value: f64,
+}
+
+impl Point {
+    pub fn new(label: impl Into<String>, cost: f64, value: f64) -> Point {
+        Point { label: label.into(), cost, value }
+    }
+
+    /// True iff `self` weakly dominates `other` (<= cost, >= value, and
+    /// strictly better in at least one).
+    pub fn dominates(&self, other: &Point) -> bool {
+        self.cost <= other.cost
+            && self.value >= other.value
+            && (self.cost < other.cost || self.value > other.value)
+    }
+}
+
+/// The Pareto-efficient subset, sorted by ascending cost.
+pub fn frontier(points: &[Point]) -> Vec<Point> {
+    let mut front: Vec<Point> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    front.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+    front.dedup_by(|a, b| a.cost == b.cost && a.value == b.value);
+    front
+}
+
+/// Labels of points NOT on the frontier (dominated by someone).
+pub fn dominated<'a>(points: &'a [Point]) -> Vec<&'a str> {
+    points
+        .iter()
+        .filter(|p| points.iter().any(|q| q.dominates(p)))
+        .map(|p| p.label.as_str())
+        .collect()
+}
+
+/// Hypervolume-style scalar: area under the frontier's step function up
+/// to `max_cost` (useful to compare frontiers of two methods; larger is
+/// better).
+pub fn frontier_area(points: &[Point], max_cost: f64) -> f64 {
+    let front = frontier(points);
+    let mut area = 0.0;
+    let mut best_value = 0.0f64;
+    let mut last_cost = 0.0f64;
+    for p in front.iter().filter(|p| p.cost <= max_cost) {
+        area += best_value * (p.cost - last_cost);
+        best_value = best_value.max(p.value);
+        last_cost = p.cost;
+    }
+    area += best_value * (max_cost - last_cost).max(0.0);
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<Point> {
+        vec![
+            Point::new("cheap-weak", 1.0, 0.6),
+            Point::new("mid", 5.0, 0.8),
+            Point::new("dominated", 6.0, 0.75),
+            Point::new("big", 20.0, 0.9),
+            Point::new("worse-big", 25.0, 0.9),
+        ]
+    }
+
+    #[test]
+    fn frontier_excludes_dominated() {
+        let f = frontier(&pts());
+        let labels: Vec<&str> = f.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["cheap-weak", "mid", "big"]);
+    }
+
+    #[test]
+    fn dominated_lists_the_rest() {
+        let points = pts();
+        let d = dominated(&points);
+        assert_eq!(d, vec!["dominated", "worse-big"]);
+    }
+
+    #[test]
+    fn dominates_requires_strict_improvement() {
+        let a = Point::new("a", 1.0, 0.5);
+        let b = Point::new("b", 1.0, 0.5);
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+        let c = Point::new("c", 1.0, 0.6);
+        assert!(c.dominates(&a));
+        assert!(!a.dominates(&c));
+    }
+
+    #[test]
+    fn frontier_area_monotone_in_improvements() {
+        let base = pts();
+        let mut improved = pts();
+        improved.push(Point::new("abc", 3.0, 0.85)); // new efficient point
+        let a0 = frontier_area(&base, 30.0);
+        let a1 = frontier_area(&improved, 30.0);
+        assert!(a1 > a0, "{a1} vs {a0}");
+    }
+
+    #[test]
+    fn frontier_area_empty_is_zero() {
+        assert_eq!(frontier_area(&[], 10.0), 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Baseline methods the paper compares against: Wisdom-of-Committees
+//! confidence cascades (Fig. 2) and the API-cascade policies
+//! FrugalGPT / AutoMix / MoT (Fig. 5).
+
+pub mod api_policies;
+pub mod woc;

@@ -1,0 +1,160 @@
+//! Wisdom-of-Committees (Wang et al. 2021) confidence-based cascade --
+//! the paper's Fig. 2 comparison baseline.
+//!
+//! WoC cascades SINGLE models with a max-softmax confidence deferral:
+//! answer locally when confidence > tau, else pass to the next larger
+//! model.  Following the paper's protocol we tune tau over a small grid
+//! ("the best four of its confidence thresholds") on validation data and
+//! report the most performant configuration.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::format::Dataset;
+use crate::runtime::executable::TierExecutable;
+use crate::types::Label;
+
+/// Per-sample outcome of a WoC run.
+#[derive(Debug, Clone)]
+pub struct WocResult {
+    pub prediction: Label,
+    pub exit_level: usize,
+}
+
+/// Aggregate outcome + the tau that produced it.
+#[derive(Debug, Clone)]
+pub struct WocReport {
+    pub tau: f32,
+    pub accuracy: f64,
+    pub exit_fractions: Vec<f64>,
+    /// Mean per-sample FLOPs given each level's single-member FLOPs.
+    pub mean_flops: f64,
+}
+
+/// The tau grid the tuner searches (paper: "best four ... thresholds").
+pub const TAU_GRID: [f32; 8] = [0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 0.99];
+
+/// Run a WoC cascade at a fixed tau over a dataset.
+pub fn run_woc(
+    singles: &[Arc<TierExecutable>],
+    data: &Dataset,
+    tau: f32,
+) -> Result<Vec<WocResult>> {
+    assert!(!singles.is_empty());
+    let dim = data.dim;
+    let n = data.n;
+    let mut results: Vec<Option<WocResult>> = vec![None; n];
+    let mut active: Vec<usize> = (0..n).collect();
+    for (level0, single) in singles.iter().enumerate() {
+        if active.is_empty() {
+            break;
+        }
+        let mut sub = Vec::with_capacity(active.len() * dim);
+        for &i in &active {
+            sub.extend_from_slice(data.row(i));
+        }
+        let outs = single.run_single(&sub, active.len())?;
+        let last = level0 + 1 == singles.len();
+        let mut still = Vec::new();
+        for (j, &i) in active.iter().enumerate() {
+            if last || outs[j].confidence > tau {
+                results[i] = Some(WocResult {
+                    prediction: outs[j].pred,
+                    exit_level: level0 + 1,
+                });
+            } else {
+                still.push(i);
+            }
+        }
+        active = still;
+    }
+    Ok(results.into_iter().map(|r| r.unwrap()).collect())
+}
+
+/// Aggregate a WoC run against labels.
+pub fn report(
+    results: &[WocResult],
+    labels: &[Label],
+    flops_per_level: &[f64],
+    tau: f32,
+) -> WocReport {
+    let n = results.len();
+    let n_levels = flops_per_level.len();
+    let mut hits = 0;
+    let mut exits = vec![0usize; n_levels];
+    for (r, &y) in results.iter().zip(labels) {
+        if r.prediction == y {
+            hits += 1;
+        }
+        exits[r.exit_level - 1] += 1;
+    }
+    // cumulative cost: a sample exiting at level L paid levels 1..=L
+    let mut mean_flops = 0.0;
+    for (lvl, &cnt) in exits.iter().enumerate() {
+        let paid: f64 = flops_per_level[..=lvl].iter().sum();
+        mean_flops += cnt as f64 * paid;
+    }
+    mean_flops /= n.max(1) as f64;
+    WocReport {
+        tau,
+        accuracy: hits as f64 / n.max(1) as f64,
+        exit_fractions: exits.iter().map(|&e| e as f64 / n.max(1) as f64).collect(),
+        mean_flops,
+    }
+}
+
+/// Tune tau on `val`, then evaluate on `test`.  The "best" tau maximises
+/// val accuracy, breaking ties toward lower cost (the paper evaluates the
+/// most performant cascade configuration).
+pub fn tune_and_run(
+    singles: &[Arc<TierExecutable>],
+    val: &Dataset,
+    test: &Dataset,
+    flops_per_level: &[f64],
+) -> Result<WocReport> {
+    let mut best: Option<WocReport> = None;
+    for &tau in &TAU_GRID {
+        let val_res = run_woc(singles, val, tau)?;
+        let val_rep = report(&val_res, &val.y, flops_per_level, tau);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                val_rep.accuracy > b.accuracy + 1e-9
+                    || ((val_rep.accuracy - b.accuracy).abs() < 1e-9
+                        && val_rep.mean_flops < b.mean_flops)
+            }
+        };
+        if better {
+            best = Some(val_rep);
+        }
+    }
+    let tau = best.unwrap().tau;
+    let test_res = run_woc(singles, test, tau)?;
+    Ok(report(&test_res, &test.y, flops_per_level, tau))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_cumulative_flops() {
+        let results = vec![
+            WocResult { prediction: 0, exit_level: 1 },
+            WocResult { prediction: 1, exit_level: 2 },
+        ];
+        let labels = vec![0, 1];
+        let rep = report(&results, &labels, &[10.0, 100.0], 0.5);
+        assert_eq!(rep.accuracy, 1.0);
+        // sample1 paid 10, sample2 paid 110 -> mean 60
+        assert!((rep.mean_flops - 60.0).abs() < 1e-9);
+        assert_eq!(rep.exit_fractions, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn tau_grid_is_sane() {
+        assert!(TAU_GRID.windows(2).all(|w| w[0] < w[1]));
+        assert!(TAU_GRID.iter().all(|&t| (0.0..1.0).contains(&t)));
+    }
+}

@@ -1,0 +1,161 @@
+//! Micro-benchmark harness (no criterion in the offline registry).
+//!
+//! `Bench::new("name")` -> `.run("case", || work)` measures warmup +
+//! timed iterations, reports mean / p50 / p99 / throughput, and renders a
+//! criterion-style summary table.  Used by every `benches/*.rs`
+//! (harness = false targets).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+
+/// Tuning knobs for one bench run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop after this much measured time even if < max_iters.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            max_time: Duration::from_secs(5),
+        }
+    }
+}
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    name: String,
+    cfg: BenchConfig,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Bench {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Measure `f` repeatedly; the closure's return value is black-boxed.
+    pub fn run<R, F: FnMut() -> R>(&mut self, case: impl Into<String>, mut f: F) -> &CaseResult {
+        let case = case.into();
+        for _ in 0..self.cfg.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Samples::new();
+        let started = Instant::now();
+        let mut iters = 0;
+        while iters < self.cfg.min_iters
+            || (iters < self.cfg.max_iters && started.elapsed() < self.cfg.max_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let result = CaseResult {
+            name: case,
+            iters,
+            mean_s: samples.mean(),
+            p50_s: samples.p50(),
+            p99_s: samples.p99(),
+            min_s: samples.quantile(0.0),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Render and print the summary table.
+    pub fn report(&self) {
+        let mut table = Table::new(
+            format!("bench: {}", self.name),
+            &["case", "iters", "mean", "p50", "p99", "min"],
+        );
+        for r in &self.results {
+            table.row(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p50_s),
+                fmt_time(r.p99_s),
+                fmt_time(r.min_s),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+/// Pretty time formatting (ns/us/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Optimization barrier (stable-rust version).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new("t").with_config(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            max_time: Duration::from_millis(200),
+        });
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.001);
+        assert!(r.p50_s >= 0.0009);
+        b.report(); // must not panic
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

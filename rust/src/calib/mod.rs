@@ -1,0 +1,132 @@
+//! Threshold calibration (paper Appendix B): estimate per-tier agreement
+//! thresholds from a small validation sample.
+
+pub mod threshold;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::deferral::{DeferralPolicy, TierRule};
+use crate::data::format::Dataset;
+use crate::runtime::executable::TierExecutable;
+use crate::types::RuleKind;
+use threshold::{estimate_theta, CalPoint, ThetaEstimate};
+
+/// Calibration output: the policy plus per-tier estimates for reporting.
+#[derive(Debug)]
+pub struct Calibration {
+    pub policy: DeferralPolicy,
+    pub estimates: Vec<ThetaEstimate>,
+}
+
+/// Collect (score, correct) calibration points for one tier executable
+/// over the first `n` samples of `cal`.
+pub fn collect_points(
+    tier: &TierExecutable,
+    rule: RuleKind,
+    cal: &Dataset,
+    n: usize,
+) -> Result<Vec<CalPoint>> {
+    let n = n.min(cal.n);
+    let outs = tier.run(&cal.x[..n * cal.dim], n)?;
+    Ok(outs
+        .iter()
+        .zip(&cal.y[..n])
+        .map(|(o, &y)| CalPoint {
+            score: rule.score_of(o),
+            correct: o.majority == y,
+        })
+        .collect())
+}
+
+/// Calibrate every non-final tier of a ladder on `n_cal` samples
+/// (the paper uses ~100).
+///
+/// `epsilon` is the TOTAL cascade error budget (the xi of Eq. 2): each
+/// accepting tier can contribute P(select AND wrong) <= eps_tier, and
+/// these events are disjoint across tiers, so we split the budget
+/// uniformly: eps_tier = epsilon / (n_tiers - 1).  (Prop 4.1 is stated
+/// for two levels where the two coincide.)
+pub fn calibrate(
+    tiers: &[Arc<TierExecutable>],
+    rule: RuleKind,
+    cal: &Dataset,
+    n_cal: usize,
+    epsilon: f64,
+) -> Result<Calibration> {
+    let mut rules = Vec::new();
+    let mut estimates = Vec::new();
+    let eps_tier = epsilon / tiers.len().saturating_sub(1).max(1) as f64;
+    for tier in &tiers[..tiers.len().saturating_sub(1)] {
+        let points = collect_points(tier, rule, cal, n_cal)?;
+        let est = estimate_theta(&points, eps_tier);
+        rules.push(TierRule { rule, theta: est.theta });
+        estimates.push(est);
+    }
+    Ok(Calibration {
+        policy: DeferralPolicy::new(rules, tiers.len()),
+        estimates,
+    })
+}
+
+/// CONDITIONAL calibration (ablation; see experiments::ablation):
+/// tier i's threshold is estimated on the calibration samples the
+/// already-calibrated tiers 1..i-1 DEFER -- the distribution the tier
+/// actually sees in deployment, instead of the marginal distribution the
+/// paper's App. B recipe uses.  Costs nothing extra at serving time; the
+/// trade-off is fewer effective calibration samples per deeper tier.
+pub fn calibrate_conditional(
+    tiers: &[Arc<TierExecutable>],
+    rule: RuleKind,
+    cal: &Dataset,
+    n_cal: usize,
+    epsilon: f64,
+) -> Result<Calibration> {
+    let n = n_cal.min(cal.n);
+    let mut rules = Vec::new();
+    let mut estimates = Vec::new();
+    let eps_tier = epsilon / tiers.len().saturating_sub(1).max(1) as f64;
+    // indices of calibration samples still "in flight"
+    let mut active: Vec<usize> = (0..n).collect();
+    for tier in &tiers[..tiers.len().saturating_sub(1)] {
+        if active.is_empty() {
+            // nothing reaches this tier in calibration: defer everything
+            rules.push(TierRule { rule, theta: f32::INFINITY });
+            estimates.push(threshold::ThetaEstimate {
+                theta: f32::INFINITY,
+                failure_rate: 0.0,
+                selection_rate: 0.0,
+                n: 0,
+            });
+            continue;
+        }
+        let mut sub = Vec::with_capacity(active.len() * cal.dim);
+        for &i in &active {
+            sub.extend_from_slice(cal.row(i));
+        }
+        let outs = tier.run(&sub, active.len())?;
+        let points: Vec<CalPoint> = outs
+            .iter()
+            .zip(active.iter())
+            .map(|(o, &i)| CalPoint {
+                score: rule.score_of(o),
+                correct: o.majority == cal.y[i],
+            })
+            .collect();
+        let est = estimate_theta(&points, eps_tier);
+        rules.push(TierRule { rule, theta: est.theta });
+        estimates.push(est);
+        // keep only the deferred samples for the next tier
+        active = active
+            .iter()
+            .zip(&points)
+            .filter(|(_, p)| p.score <= est.theta)
+            .map(|(&i, _)| i)
+            .collect();
+    }
+    Ok(Calibration {
+        policy: DeferralPolicy::new(rules, tiers.len()),
+        estimates,
+    })
+}

@@ -1,0 +1,220 @@
+//! Agreement-threshold estimation (paper Appendix B).
+//!
+//! Safe deferral (Def. 4.1) wants a theta such that
+//!
+//! ```text
+//! P( s(x) >= theta  AND  H(x) != y )  <=  epsilon
+//! ```
+//!
+//! Given (score, correct) pairs from a small calibration set (the paper
+//! uses ~100 samples), we use the plug-in estimator p_hat(theta) and pick
+//! the SMALLEST theta whose failure rate is within epsilon -- smallest,
+//! because selection rate P(s > theta) is monotonically non-increasing in
+//! theta, so the smallest feasible theta maximises selection (Eq. 2's
+//! objective).
+//!
+//! Deferral then uses `score <= theta` (strict acceptance above theta),
+//! matching `TierRule::decide`.
+
+/// One calibration observation.
+#[derive(Debug, Clone, Copy)]
+pub struct CalPoint {
+    pub score: f32,
+    pub correct: bool,
+}
+
+/// Result of a threshold estimation.
+#[derive(Debug, Clone, Copy)]
+pub struct ThetaEstimate {
+    pub theta: f32,
+    /// Empirical failure rate P(select AND wrong) at `theta`.
+    pub failure_rate: f64,
+    /// Empirical selection rate P(score > theta) at `theta`.
+    pub selection_rate: f64,
+    /// Number of calibration samples used.
+    pub n: usize,
+}
+
+/// Estimate the smallest feasible theta for tolerance `epsilon`.
+///
+/// Candidate thresholds are the distinct observed scores (plus a sentinel
+/// above the max, which always satisfies the constraint by deferring
+/// everything -- the paper's always-feasible r(x)=1).
+pub fn estimate_theta(points: &[CalPoint], epsilon: f64) -> ThetaEstimate {
+    assert!(!points.is_empty(), "need calibration samples");
+    let n = points.len();
+    // Sort descending by score; sweep thresholds from high to low,
+    // keeping running counts of selected-and-wrong.
+    let mut sorted: Vec<CalPoint> = points.to_vec();
+    sorted.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+
+    // theta candidates: just below each distinct score value.  Using the
+    // score value itself works because acceptance is strict (> theta):
+    // theta = s_i accepts exactly the points with score > s_i.
+    let best: Option<(f32, usize, usize)> = None; // (theta, wrong_sel, n_sel)
+    let mut wrong_sel = 0usize;
+    let mut n_sel = 0usize;
+    let mut i = 0;
+    // Sentinel: theta = +inf-equivalent (defer all): always feasible.
+    let max_score = sorted[0].score;
+    let mut feasible = (max_score, 0usize, 0usize);
+    while i < n {
+        // advance over a group of equal scores; they become SELECTED when
+        // theta drops below their score value.
+        let s = sorted[i].score;
+        while i < n && sorted[i].score == s {
+            n_sel += 1;
+            if !sorted[i].correct {
+                wrong_sel += 1;
+            }
+            i += 1;
+        }
+        // theta = next lower distinct score (or -inf at the end) accepts
+        // all points processed so far. Use theta just below s: the next
+        // candidate theta value is the next distinct score; evaluate
+        // feasibility of "theta = that value".
+        let theta = if i < n { sorted[i].score } else { f32::NEG_INFINITY };
+        let fail = wrong_sel as f64 / n as f64;
+        if fail <= epsilon {
+            feasible = (theta, wrong_sel, n_sel);
+        } else {
+            break; // failure rate only grows as theta decreases
+        }
+        let _ = &best; // (kept for clarity; feasible tracks the best)
+    }
+    let (theta, wrong, sel) = feasible;
+    ThetaEstimate {
+        theta,
+        failure_rate: wrong as f64 / n as f64,
+        selection_rate: sel as f64 / n as f64,
+        n,
+    }
+}
+
+/// Evaluate the failure/selection rates of a FIXED theta on a holdout set
+/// (used by Fig. 6/7 to verify stability).
+pub fn evaluate_theta(points: &[CalPoint], theta: f32) -> (f64, f64) {
+    let n = points.len().max(1);
+    let mut wrong_sel = 0usize;
+    let mut n_sel = 0usize;
+    for p in points {
+        if p.score > theta {
+            n_sel += 1;
+            if !p.correct {
+                wrong_sel += 1;
+            }
+        }
+    }
+    (wrong_sel as f64 / n as f64, n_sel as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pts(data: &[(f32, bool)]) -> Vec<CalPoint> {
+        data.iter().map(|&(s, c)| CalPoint { score: s, correct: c }).collect()
+    }
+
+    #[test]
+    fn perfect_scores_select_everything() {
+        // all correct: theta can drop below the minimum score
+        let p = pts(&[(0.9, true), (0.5, true), (0.3, true)]);
+        let est = estimate_theta(&p, 0.01);
+        assert_eq!(est.theta, f32::NEG_INFINITY);
+        assert_eq!(est.selection_rate, 1.0);
+        assert_eq!(est.failure_rate, 0.0);
+    }
+
+    #[test]
+    fn wrong_high_score_blocks() {
+        // the top-scoring point is wrong: any theta below it fails eps=0
+        let p = pts(&[(0.95, false), (0.9, true), (0.5, true)]);
+        let est = estimate_theta(&p, 1e-9);
+        // only feasible theta keeps everything deferred
+        assert_eq!(est.selection_rate, 0.0);
+        assert!((est.theta - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn epsilon_allows_some_errors() {
+        // 10 points, 1 wrong in the middle; eps=0.1 tolerates it
+        let mut data = vec![(0.95, true), (0.9, true), (0.85, false)];
+        for i in 0..7 {
+            data.push((0.8 - i as f32 * 0.05, true));
+        }
+        let p = pts(&data);
+        let strict = estimate_theta(&p, 1e-9);
+        let lax = estimate_theta(&p, 0.1);
+        assert!(lax.selection_rate > strict.selection_rate);
+        assert_eq!(lax.selection_rate, 1.0);
+        assert!(lax.failure_rate <= 0.1);
+    }
+
+    #[test]
+    fn selection_monotone_in_epsilon() {
+        let mut rng = Rng::new(11);
+        let points: Vec<CalPoint> = (0..500)
+            .map(|_| {
+                let score = rng.f32();
+                // higher score => more likely correct
+                let correct = rng.bool(0.3 + 0.68 * score as f64);
+                CalPoint { score, correct }
+            })
+            .collect();
+        let mut last = -1.0;
+        for eps in [0.0, 0.01, 0.03, 0.05, 0.1, 0.3] {
+            let est = estimate_theta(&points, eps);
+            assert!(
+                est.selection_rate >= last,
+                "selection rate not monotone at eps {eps}"
+            );
+            assert!(est.failure_rate <= eps + 1e-12);
+            last = est.selection_rate;
+        }
+    }
+
+    #[test]
+    fn estimate_respects_constraint_on_holdout_in_distribution() {
+        // calibrate on 100 points (paper's budget), evaluate on 10x more
+        let gen = |rng: &mut Rng, n: usize| -> Vec<CalPoint> {
+            (0..n)
+                .map(|_| {
+                    let score = rng.f32();
+                    let correct = rng.bool(0.2 + 0.79 * score as f64);
+                    CalPoint { score, correct }
+                })
+                .collect()
+        };
+        let mut rng = Rng::new(12);
+        let cal = gen(&mut rng, 100);
+        let hold = gen(&mut rng, 1000);
+        let est = estimate_theta(&cal, 0.05);
+        let (fail, sel) = evaluate_theta(&hold, est.theta);
+        // generalisation slack: 5% tolerance + binomial noise
+        assert!(fail <= 0.05 + 0.05, "holdout failure {fail}");
+        assert!(sel > 0.0);
+    }
+
+    #[test]
+    fn evaluate_theta_counts() {
+        let p = pts(&[(0.9, false), (0.8, true), (0.2, true)]);
+        let (fail, sel) = evaluate_theta(&p, 0.5);
+        assert!((sel - 2.0 / 3.0).abs() < 1e-9);
+        assert!((fail - 1.0 / 3.0).abs() < 1e-9);
+        let (fail_hi, sel_hi) = evaluate_theta(&p, 1.0);
+        assert_eq!((fail_hi, sel_hi), (0.0, 0.0));
+    }
+
+    #[test]
+    fn ties_handled_as_groups() {
+        // equal scores must move together: theta between them is impossible
+        let p = pts(&[(0.5, true), (0.5, false), (0.4, true)]);
+        let est = estimate_theta(&p, 0.2);
+        // selecting the 0.5 group brings 1 wrong of 3 = 0.33 > 0.2 -> no selection
+        assert_eq!(est.selection_rate, 0.0);
+        let est2 = estimate_theta(&p, 0.34);
+        assert!(est2.selection_rate >= 2.0 / 3.0);
+    }
+}

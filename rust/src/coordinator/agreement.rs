@@ -1,0 +1,177 @@
+//! Agreement computation (paper §4.3, Eq. 3/4) as pure Rust.
+//!
+//! The PJRT artifacts already evaluate the deferral scores on-device (the
+//! L1 `agreement` kernel); this host-side twin exists for (a) simulators
+//! and baselines that produce logits without PJRT, (b) cross-checking the
+//! kernel in integration tests, and (c) voting over *black-box* answer
+//! sets in the API-cascade scenario where only answer strings exist.
+//!
+//! Semantics must match python/compile/kernels/agreement.py exactly:
+//! plurality vote, ties toward the smaller class index.
+
+use crate::types::TierOutput;
+
+/// Agreement over stacked member logits for ONE sample.
+/// `logits[m * classes + c]` = member m's logit for class c.
+pub fn agree_logits(logits: &[f32], k: usize, classes: usize) -> TierOutput {
+    assert_eq!(logits.len(), k * classes, "logits length");
+    assert!(k > 0 && classes > 0);
+    let mut counts = vec![0u32; classes];
+    let mut preds = Vec::with_capacity(k);
+    for m in 0..k {
+        let row = &logits[m * classes..(m + 1) * classes];
+        let p = argmax(row);
+        preds.push(p);
+        counts[p] += 1;
+    }
+    let majority = argmax_u32(&counts);
+    let vote_frac = counts[majority] as f32 / k as f32;
+    // mean softmax probability of the majority class across members
+    let mut score_sum = 0.0f32;
+    for m in 0..k {
+        let row = &logits[m * classes..(m + 1) * classes];
+        score_sum += softmax_prob(row, majority);
+    }
+    TierOutput {
+        majority: majority as u32,
+        vote_frac,
+        mean_score: score_sum / k as f32,
+    }
+}
+
+/// Agreement over a set of discrete answers (black-box API mode, §5.2.3):
+/// returns (majority answer index into `answers`, vote fraction).
+/// Ties break toward the answer that appeared FIRST in the list.
+pub fn agree_votes(answers: &[u32]) -> (u32, f32) {
+    assert!(!answers.is_empty());
+    let mut counts: Vec<(u32, u32, usize)> = Vec::new(); // (answer, count, first_pos)
+    for (pos, &a) in answers.iter().enumerate() {
+        match counts.iter_mut().find(|(ans, _, _)| *ans == a) {
+            Some((_, c, _)) => *c += 1,
+            None => counts.push((a, 1, pos)),
+        }
+    }
+    // max count; ties -> earliest first_pos
+    let &(ans, c, _) = counts
+        .iter()
+        .max_by(|a, b| a.1.cmp(&b.1).then(b.2.cmp(&a.2)))
+        .unwrap();
+    (ans, c as f32 / answers.len() as f32)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn argmax_u32(xs: &[u32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically stable softmax probability of class `c`.
+pub fn softmax_prob(logits: &[f32], c: usize) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+    (logits[c] - m).exp() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unanimous_vote() {
+        // 3 members all prefer class 2 out of 4
+        let logits = vec![
+            0.0, 0.0, 5.0, 0.0, //
+            -1.0, 0.0, 4.0, 0.0, //
+            0.0, 1.0, 6.0, 0.0,
+        ];
+        let out = agree_logits(&logits, 3, 4);
+        assert_eq!(out.majority, 2);
+        assert!((out.vote_frac - 1.0).abs() < 1e-6);
+        assert!(out.mean_score > 0.9);
+    }
+
+    #[test]
+    fn split_vote_tie_breaks_low() {
+        // 2 members -> class 3, 2 members -> class 1: majority = 1
+        let mk = |c: usize| {
+            let mut v = vec![0.0f32; 5];
+            v[c] = 9.0;
+            v
+        };
+        let mut logits = Vec::new();
+        logits.extend(mk(3));
+        logits.extend(mk(1));
+        logits.extend(mk(3));
+        logits.extend(mk(1));
+        let out = agree_logits(&logits, 4, 5);
+        assert_eq!(out.majority, 1);
+        assert!((out.vote_frac - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k1_is_argmax_with_softmax_conf() {
+        let logits = vec![1.0f32, 3.0, 2.0];
+        let out = agree_logits(&logits, 1, 3);
+        assert_eq!(out.majority, 1);
+        assert!((out.vote_frac - 1.0).abs() < 1e-6);
+        let p = softmax_prob(&logits, 1);
+        assert!((out.mean_score - p).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let p = softmax_prob(&[1000.0, 999.0], 0);
+        assert!(p.is_finite());
+        assert!(p > 0.7 && p < 0.75); // sigmoid(1) ~ 0.731
+    }
+
+    #[test]
+    fn vote_answers_majority_and_ties() {
+        assert_eq!(agree_votes(&[7, 7, 3]), (7, 2.0 / 3.0));
+        // tie 1-1: earliest answer wins
+        assert_eq!(agree_votes(&[9, 4]), (9, 0.5));
+        assert_eq!(agree_votes(&[4, 9]), (4, 0.5));
+        assert_eq!(agree_votes(&[5]), (5, 1.0));
+    }
+
+    #[test]
+    fn matches_kernel_semantics_on_random_data() {
+        // Fuzz the host twin against a simple direct re-computation.
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..200 {
+            let k = 1 + rng.below(5);
+            let c = 2 + rng.below(8);
+            let logits: Vec<f32> =
+                (0..k * c).map(|_| (rng.f64() * 6.0 - 3.0) as f32).collect();
+            let out = agree_logits(&logits, k, c);
+            // majority must get the max count with low-index tiebreak
+            let mut counts = vec![0u32; c];
+            for m in 0..k {
+                counts[argmax(&logits[m * c..(m + 1) * c])] += 1;
+            }
+            let want = counts
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+                .unwrap()
+                .0;
+            assert_eq!(out.majority as usize, want);
+            assert!(out.vote_frac <= 1.0 + 1e-6 && out.vote_frac > 0.0);
+            assert!(out.mean_score <= 1.0 + 1e-6 && out.mean_score > 0.0);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! The cascade controller (paper Algorithm 1).
+//!
+//! Owns the tier ladder and a `DeferralPolicy`; drives a batch of samples
+//! through the cascade: run tier 1's ensemble on everything, apply the
+//! agreement rule, gather the deferred subset, run tier 2 on it, and so
+//! on -- the final tier answers whatever reaches it.  This "sieve"
+//! execution is the batch-friendly equivalent of per-sample cascading and
+//! is what the serving pipeline and all experiments use.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::deferral::DeferralPolicy;
+use crate::runtime::executable::TierExecutable;
+use crate::types::{Decision, Label};
+
+/// Per-sample cascade outcome.
+#[derive(Debug, Clone)]
+pub struct CascadeResult {
+    pub prediction: Label,
+    /// 1-based position in the cascade ladder at which the sample exited.
+    pub exit_level: usize,
+    /// Deferral-rule score observed at each visited level.
+    pub scores: Vec<f32>,
+}
+
+/// Aggregate statistics of a cascade run over a labelled set.
+#[derive(Debug, Clone)]
+pub struct CascadeReport {
+    pub n: usize,
+    pub accuracy: f64,
+    /// Fraction of samples exiting at each level (sums to 1).
+    pub exit_fractions: Vec<f64>,
+    /// Mean number of levels each sample visited.
+    pub mean_levels_visited: f64,
+}
+
+/// A cascade of loaded tier executables + its deferral policy.
+pub struct Cascade {
+    tiers: Vec<Arc<TierExecutable>>,
+    policy: DeferralPolicy,
+}
+
+impl Cascade {
+    pub fn new(tiers: Vec<Arc<TierExecutable>>, policy: DeferralPolicy) -> Cascade {
+        assert!(!tiers.is_empty(), "cascade needs at least one tier");
+        assert_eq!(policy.n_tiers(), tiers.len(), "policy/tier count mismatch");
+        Cascade { tiers, policy }
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tiers(&self) -> &[Arc<TierExecutable>] {
+        &self.tiers
+    }
+
+    pub fn policy(&self) -> &DeferralPolicy {
+        &self.policy
+    }
+
+    /// Classify `n` rows (row-major `n x dim`).  Returns per-sample
+    /// results in input order.
+    pub fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        let dim = self.tiers[0].dim;
+        assert_eq!(features.len(), n * dim, "feature buffer size");
+        let mut results: Vec<Option<CascadeResult>> = vec![None; n];
+        // indices of samples still in flight
+        let mut active: Vec<usize> = (0..n).collect();
+        let mut active_scores: Vec<Vec<f32>> = vec![Vec::new(); n];
+
+        for (level0, tier) in self.tiers.iter().enumerate() {
+            if active.is_empty() {
+                break;
+            }
+            // gather the active subset
+            let mut sub = Vec::with_capacity(active.len() * dim);
+            for &i in &active {
+                sub.extend_from_slice(&features[i * dim..(i + 1) * dim]);
+            }
+            let outs = tier.run(&sub, active.len())?;
+            let mut still_active = Vec::new();
+            for (j, &i) in active.iter().enumerate() {
+                let out = &outs[j];
+                active_scores[i].push(self.policy.score(level0, out));
+                match self.policy.decide(level0, out) {
+                    Decision::Accept => {
+                        results[i] = Some(CascadeResult {
+                            prediction: out.majority,
+                            exit_level: level0 + 1,
+                            scores: std::mem::take(&mut active_scores[i]),
+                        });
+                    }
+                    Decision::Defer => still_active.push(i),
+                }
+            }
+            active = still_active;
+        }
+        debug_assert!(active.is_empty(), "final tier must accept everything");
+        Ok(results.into_iter().map(|r| r.expect("all samples resolved")).collect())
+    }
+
+    /// Classify and score against labels.
+    pub fn evaluate(&self, features: &[f32], labels: &[Label], n: usize) -> Result<(Vec<CascadeResult>, CascadeReport)> {
+        let results = self.classify_batch(features, n)?;
+        let report = report_from(&results, labels, self.tiers.len());
+        Ok((results, report))
+    }
+}
+
+/// Build a report from per-sample results + ground truth.
+pub fn report_from(
+    results: &[CascadeResult],
+    labels: &[Label],
+    n_levels: usize,
+) -> CascadeReport {
+    let n = results.len();
+    assert_eq!(labels.len(), n);
+    let mut hits = 0usize;
+    let mut exits = vec![0usize; n_levels];
+    let mut levels_visited = 0usize;
+    for (r, &y) in results.iter().zip(labels) {
+        if r.prediction == y {
+            hits += 1;
+        }
+        exits[r.exit_level - 1] += 1;
+        levels_visited += r.exit_level;
+    }
+    CascadeReport {
+        n,
+        accuracy: hits as f64 / n.max(1) as f64,
+        exit_fractions: exits.iter().map(|&e| e as f64 / n.max(1) as f64).collect(),
+        mean_levels_visited: levels_visited as f64 / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::RuleKind;
+
+    // report_from unit coverage (Cascade itself needs PJRT artifacts and
+    // is exercised by rust/tests/cascade_integration.rs).
+
+    fn res(pred: Label, exit: usize) -> CascadeResult {
+        CascadeResult { prediction: pred, exit_level: exit, scores: vec![] }
+    }
+
+    #[test]
+    fn report_counts() {
+        let results = vec![res(1, 1), res(0, 2), res(1, 1), res(2, 3)];
+        let labels = vec![1, 1, 1, 2];
+        let rep = report_from(&results, &labels, 3);
+        assert_eq!(rep.n, 4);
+        assert!((rep.accuracy - 0.75).abs() < 1e-12);
+        assert_eq!(rep.exit_fractions, vec![0.5, 0.25, 0.25]);
+        assert!((rep.mean_levels_visited - (1 + 2 + 1 + 3) as f64 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exit_fractions_sum_to_one() {
+        let results: Vec<CascadeResult> =
+            (0..100).map(|i| res(0, 1 + i % 4)).collect();
+        let labels = vec![0; 100];
+        let rep = report_from(&results, &labels, 4);
+        let total: f64 = rep.exit_fractions.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one tier")]
+    fn empty_cascade_panics() {
+        // No artifacts needed: constructor validates before any IO.
+        let policy = DeferralPolicy::uniform(RuleKind::Vote, 0.5, 3);
+        let _ = Cascade::new(Vec::new(), policy);
+    }
+}

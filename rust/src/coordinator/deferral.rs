@@ -1,0 +1,142 @@
+//! Deferral policies (paper §4.2-4.3).
+//!
+//! A `DeferralPolicy` holds one rule per non-final tier: the rule kind
+//! (vote fraction, Eq. 3, or mean softmax score, Eq. 4) and the calibrated
+//! threshold theta.  `decide` implements
+//!
+//! ```text
+//! r(x) = 1  (defer)  iff  score(x) <= theta
+//! ```
+//!
+//! The final tier always accepts (Algorithm 1 line 3-8).
+
+use crate::types::{Decision, RuleKind, TierOutput};
+
+/// Per-tier rule: defer when `rule.score_of(out) <= theta`.
+#[derive(Debug, Clone, Copy)]
+pub struct TierRule {
+    pub rule: RuleKind,
+    pub theta: f32,
+}
+
+impl TierRule {
+    pub fn decide(&self, out: &TierOutput) -> Decision {
+        if self.rule.score_of(out) <= self.theta {
+            Decision::Defer
+        } else {
+            Decision::Accept
+        }
+    }
+}
+
+/// A cascade-wide deferral policy: rules for tiers 1..n-1.
+#[derive(Debug, Clone)]
+pub struct DeferralPolicy {
+    rules: Vec<TierRule>,
+    n_tiers: usize,
+}
+
+impl DeferralPolicy {
+    /// `rules[i]` applies to tier i+1; the cascade has `n_tiers` tiers and
+    /// the last one has no rule (it always accepts).
+    pub fn new(rules: Vec<TierRule>, n_tiers: usize) -> DeferralPolicy {
+        assert_eq!(
+            rules.len(),
+            n_tiers.saturating_sub(1),
+            "need one rule per non-final tier"
+        );
+        DeferralPolicy { rules, n_tiers }
+    }
+
+    /// Uniform rule/threshold for every non-final tier.
+    pub fn uniform(rule: RuleKind, theta: f32, n_tiers: usize) -> DeferralPolicy {
+        DeferralPolicy::new(
+            vec![TierRule { rule, theta }; n_tiers.saturating_sub(1)],
+            n_tiers,
+        )
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.n_tiers
+    }
+
+    pub fn rule(&self, tier_index0: usize) -> Option<&TierRule> {
+        self.rules.get(tier_index0)
+    }
+
+    /// Decide for the tier with 0-based index `tier_index0`.
+    /// The final tier always accepts.
+    pub fn decide(&self, tier_index0: usize, out: &TierOutput) -> Decision {
+        match self.rules.get(tier_index0) {
+            Some(rule) if tier_index0 + 1 < self.n_tiers => rule.decide(out),
+            _ => Decision::Accept,
+        }
+    }
+
+    /// The score the rule at this tier extracts (for logging / analysis).
+    pub fn score(&self, tier_index0: usize, out: &TierOutput) -> f32 {
+        match self.rules.get(tier_index0) {
+            Some(r) => r.rule.score_of(out),
+            None => out.vote_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(frac: f32, score: f32) -> TierOutput {
+        TierOutput { majority: 0, vote_frac: frac, mean_score: score }
+    }
+
+    #[test]
+    fn vote_rule_defers_at_or_below_theta() {
+        let r = TierRule { rule: RuleKind::Vote, theta: 0.5 };
+        assert_eq!(r.decide(&out(0.34, 0.9)), Decision::Defer);
+        assert_eq!(r.decide(&out(0.5, 0.9)), Decision::Defer); // <= theta
+        assert_eq!(r.decide(&out(0.67, 0.1)), Decision::Accept);
+    }
+
+    #[test]
+    fn score_rule_uses_mean_score() {
+        let r = TierRule { rule: RuleKind::MeanScore, theta: 0.8 };
+        assert_eq!(r.decide(&out(1.0, 0.75)), Decision::Defer);
+        assert_eq!(r.decide(&out(0.3, 0.95)), Decision::Accept);
+    }
+
+    #[test]
+    fn final_tier_always_accepts() {
+        let p = DeferralPolicy::uniform(RuleKind::Vote, 2.0, 3); // theta 2.0 defers everything
+        assert_eq!(p.decide(0, &out(1.0, 1.0)), Decision::Defer);
+        assert_eq!(p.decide(1, &out(1.0, 1.0)), Decision::Defer);
+        assert_eq!(p.decide(2, &out(0.0, 0.0)), Decision::Accept);
+        // out-of-range tier index also accepts (defensive)
+        assert_eq!(p.decide(7, &out(0.0, 0.0)), Decision::Accept);
+    }
+
+    #[test]
+    fn per_tier_thresholds() {
+        let p = DeferralPolicy::new(
+            vec![
+                TierRule { rule: RuleKind::Vote, theta: 0.4 },
+                TierRule { rule: RuleKind::MeanScore, theta: 0.9 },
+            ],
+            3,
+        );
+        assert_eq!(p.decide(0, &out(0.6, 0.0)), Decision::Accept);
+        assert_eq!(p.decide(1, &out(0.6, 0.85)), Decision::Defer);
+    }
+
+    #[test]
+    #[should_panic(expected = "one rule per non-final tier")]
+    fn wrong_rule_count_panics() {
+        DeferralPolicy::new(vec![], 3);
+    }
+
+    #[test]
+    fn single_tier_cascade_needs_no_rules() {
+        let p = DeferralPolicy::uniform(RuleKind::Vote, 0.5, 1);
+        assert_eq!(p.decide(0, &out(0.0, 0.0)), Decision::Accept);
+    }
+}

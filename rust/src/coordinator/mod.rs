@@ -1,0 +1,8 @@
+//! The paper's L3 contribution: agreement-based deferral, the cascade
+//! controller (Algorithm 1), dynamic batching and the serving pipeline.
+
+pub mod agreement;
+pub mod batcher;
+pub mod cascade;
+pub mod deferral;
+pub mod pipeline;

@@ -1,0 +1,112 @@
+//! The serving pipeline: request -> dynamic batcher -> cascade -> verdict.
+//!
+//! Ties the batcher to the cascade controller and the metrics registry.
+//! Responses are delivered through per-request channels (a poor man's
+//! oneshot); the whole pipeline is synchronous threads -- no async
+//! runtime exists in the offline registry, and a thread per stage is
+//! plenty for a CPU PJRT backend (DESIGN.md §3).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig, Item};
+use crate::coordinator::cascade::Cascade;
+use crate::metrics::Metrics;
+use crate::types::{Request, Verdict};
+
+struct Job {
+    request: Request,
+    resp: Sender<Result<Verdict, String>>,
+}
+
+/// Client-side handle to a running pipeline.
+pub struct Pipeline {
+    batcher: Batcher<Job>,
+    metrics: Arc<Metrics>,
+    dim: usize,
+}
+
+impl Pipeline {
+    /// Spawn the pipeline over a loaded cascade.
+    pub fn spawn(cascade: Arc<Cascade>, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Pipeline {
+        let dim = cascade.tiers()[0].dim;
+        let m = Arc::clone(&metrics);
+        let batcher = Batcher::spawn(cfg, move |batch: Vec<Item<Job>>| {
+            process_batch(&cascade, &m, batch);
+        });
+        Pipeline { batcher, metrics, dim }
+    }
+
+    /// Submit a request; returns a receiver for its verdict.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Result<Verdict, String>>> {
+        anyhow::ensure!(
+            request.features.len() == self.dim,
+            "request {} has {} features, suite dim is {}",
+            request.id,
+            request.features.len(),
+            self.dim
+        );
+        let (tx, rx) = channel();
+        self.batcher
+            .push(Job { request, resp: tx })
+            .map_err(|e| anyhow::anyhow!(e))?;
+        self.metrics.counter("requests_submitted").inc();
+        Ok(rx)
+    }
+
+    /// Submit and block for the verdict (single-request convenience).
+    pub fn infer(&self, request: Request) -> Result<Verdict> {
+        let rx = self.submit(request)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("pipeline dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+}
+
+fn process_batch(cascade: &Cascade, metrics: &Metrics, batch: Vec<Item<Job>>) {
+    let n = batch.len();
+    let dim = cascade.tiers()[0].dim;
+    let mut features = Vec::with_capacity(n * dim);
+    for item in &batch {
+        features.extend_from_slice(&item.payload.request.features);
+    }
+    let t0 = Instant::now();
+    match cascade.classify_batch(&features, n) {
+        Ok(results) => {
+            metrics.counter("batches_ok").inc();
+            metrics.histogram("batch_size").record(n as f64);
+            metrics
+                .histogram("batch_exec_s")
+                .record(t0.elapsed().as_secs_f64());
+            for (item, res) in batch.into_iter().zip(results) {
+                let latency = item.enqueued.elapsed().as_secs_f64();
+                metrics.histogram("request_latency_s").record(latency);
+                metrics
+                    .counter(&format!("exit_level_{}", res.exit_level))
+                    .inc();
+                let verdict = Verdict {
+                    request_id: item.payload.request.id,
+                    prediction: res.prediction,
+                    exit_tier: res.exit_level,
+                    tier_scores: res.scores,
+                    latency_s: latency,
+                };
+                let _ = item.payload.resp.send(Ok(verdict));
+            }
+        }
+        Err(e) => {
+            metrics.counter("batches_err").inc();
+            let msg = format!("cascade execution failed: {e:#}");
+            for item in batch {
+                let _ = item.payload.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}

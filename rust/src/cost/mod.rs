@@ -1,0 +1,12 @@
+//! Cost models (paper §4.1, §4.4, §5.2).
+//!
+//! * `model`  -- the analytic ensemble/cascade cost of Eq. 1 and
+//!              Proposition 4.1 (drives Fig. 3 and the fig8 sweeps).
+//! * `comm`   -- edge-to-cloud communication delay model (§5.2.1).
+//! * `rental` -- GPU $/hour pricing, Table 4 (§5.2.2).
+//! * `api`    -- $/Mtok API pricing, Table 1 (§5.2.3).
+
+pub mod api;
+pub mod comm;
+pub mod model;
+pub mod rental;

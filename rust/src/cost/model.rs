@@ -1,0 +1,157 @@
+//! The paper's analytic cost model.
+//!
+//! Eq. 1: `C(H^k) = c0 * k^(1-rho)`.
+//! Prop 4.1.2 (two-level cascade {H1^k, h2}):
+//!
+//! ```text
+//! E[C(M_r)] = ( k^rho * gamma + P(defer) ) * C(h2)
+//! ```
+//!
+//! NOTE on the exponent: the paper's Prop 4.1 statement prints `k^rho`;
+//! consistency with Eq. 1 (and with Figure 3's plotted curves, where
+//! rho=0 must give the k-times sequential cost) requires `k^(1-rho)`,
+//! i.e. E[C] = (k^(1-rho) * gamma + P(defer)) * C(h2).  We implement the
+//! Eq.-1-consistent form and regenerate Fig. 3's shape with it.
+
+use crate::types::Parallelism;
+
+/// Expected relative cost of a two-level drop-in cascade vs. always
+/// running the large model (cost 1.0 == C(h2)).
+pub fn two_level_relative_cost(
+    k: usize,
+    gamma: f64,
+    rho: Parallelism,
+    p_defer: f64,
+) -> f64 {
+    assert!((0.0..=1.0).contains(&p_defer));
+    assert!(gamma >= 0.0);
+    rho.ensemble_factor(k) * gamma + p_defer
+}
+
+/// Fraction of inference cost SAVED by the cascade (Fig. 3's y-axis).
+pub fn two_level_savings(k: usize, gamma: f64, rho: Parallelism, p_defer: f64) -> f64 {
+    1.0 - two_level_relative_cost(k, gamma, rho, p_defer)
+}
+
+/// Multi-level generalisation: expected relative cost of an n-level
+/// cascade given per-level (k_i, gamma_i = C(member_i)/C(top member),
+/// reach_i = P(sample reaches level i)).  The top level's gamma is 1.
+pub fn multi_level_relative_cost(
+    levels: &[(usize, f64)], // (k, gamma) per level, ascending cost
+    reach: &[f64],           // P(reach level i); reach[0] == 1
+    rho: Parallelism,
+) -> f64 {
+    assert_eq!(levels.len(), reach.len());
+    assert!(!levels.is_empty());
+    let mut total = 0.0;
+    for ((k, gamma), &r) in levels.iter().zip(reach) {
+        total += r * rho.ensemble_factor(*k) * gamma;
+    }
+    total
+}
+
+/// Worst-case bound of §4.4: every sample visits everything sequentially.
+pub fn worst_case_bound(levels: &[(usize, f64)]) -> f64 {
+    levels.iter().map(|(k, g)| *k as f64 * g).sum()
+}
+
+/// Per-sample expected cost from measured exit fractions (Table 5's
+/// aggregation): `exit_frac[i]` of samples exit at level i having paid
+/// levels 0..=i.
+pub fn cost_from_exits(
+    levels: &[(usize, f64)],
+    exit_frac: &[f64],
+    rho: Parallelism,
+) -> f64 {
+    assert_eq!(levels.len(), exit_frac.len());
+    // P(reach level i) = 1 - sum of exits below i
+    let mut reach = vec![0.0; levels.len()];
+    let mut acc = 0.0;
+    for i in 0..levels.len() {
+        reach[i] = 1.0 - acc;
+        acc += exit_frac[i];
+    }
+    multi_level_relative_cost(levels, &reach, rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_prop_4_1_limits() {
+        // gamma = 0 (free small model): cost = P(defer)
+        let c = two_level_relative_cost(3, 0.0, Parallelism::FULL, 0.25);
+        assert!((c - 0.25).abs() < 1e-12);
+        // full parallel, gamma=1, defer always: cost = 1 + 1 = 2x
+        let c = two_level_relative_cost(5, 1.0, Parallelism::FULL, 1.0);
+        assert!((c - 2.0).abs() < 1e-12);
+        // sequential, defer always: (k*gamma + 1) -> paper's (k+1) worst case at gamma=1
+        let c = two_level_relative_cost(5, 1.0, Parallelism::SEQUENTIAL, 1.0);
+        assert!((c - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn savings_monotone_in_rho() {
+        // more parallelism can only help
+        let mut last = -1.0;
+        for rho in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let s = two_level_savings(4, 0.1, Parallelism(rho), 0.3);
+            assert!(s >= last);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn savings_decrease_with_gamma() {
+        let mut last = 2.0;
+        for gamma in [0.001, 0.01, 0.1, 0.2, 1.0] {
+            let s = two_level_savings(3, gamma, Parallelism::SEQUENTIAL, 0.2);
+            assert!(s < last);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn fig3_crossover_small_gamma_closes_rho_gap() {
+        // Paper Fig. 3: for gamma <= 1/50, sequential ~ parallel.
+        let p_defer = 0.3;
+        let gap_at = |gamma: f64| {
+            two_level_savings(3, gamma, Parallelism::FULL, p_defer)
+                - two_level_savings(3, gamma, Parallelism::SEQUENTIAL, p_defer)
+        };
+        assert!(gap_at(1.0 / 5.0) > 0.25, "big gap for similar models");
+        assert!(gap_at(1.0 / 50.0) < 0.05, "gap closes at 50x disparity");
+    }
+
+    #[test]
+    fn multi_level_consistency_with_two_level() {
+        // two-level multi == closed form
+        let k = 3;
+        let gamma = 0.05;
+        let p_defer = 0.4;
+        let got = multi_level_relative_cost(
+            &[(k, gamma), (1, 1.0)],
+            &[1.0, p_defer],
+            Parallelism::SEQUENTIAL,
+        );
+        let want =
+            two_level_relative_cost(k, gamma, Parallelism::SEQUENTIAL, p_defer);
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_from_exits_reach_computation() {
+        let levels = [(2usize, 0.1), (2, 0.3), (1, 1.0)];
+        let exits = [0.5, 0.3, 0.2];
+        let c = cost_from_exits(&levels, &exits, Parallelism::FULL);
+        // reach = [1.0, 0.5, 0.2]; cost = 0.1 + 0.5*0.3 + 0.2*1 = 0.45
+        assert!((c - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_case_is_k_plus_one_like() {
+        let wc = worst_case_bound(&[(3, 1.0), (1, 1.0)]);
+        assert!((wc - 4.0).abs() < 1e-12);
+    }
+}

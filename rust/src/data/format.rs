@@ -1,0 +1,266 @@
+//! ABDS binary dataset format reader/writer.
+//!
+//! Mirrors python/compile/datagen.py:
+//!
+//! ```text
+//! magic   b"ABDS"
+//! version u32 = 1
+//! n       u32
+//! dim     u32
+//! classes u32
+//! flags   u32   bit0: has difficulty field
+//! x       f32[n*dim] row-major
+//! y       u32[n]
+//! diff    f32[n]     iff flags&1
+//! ```
+//!
+//! All integers little-endian.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"ABDS";
+pub const VERSION: u32 = 1;
+pub const FLAG_DIFFICULTY: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum FormatError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic {0:?} (expected \"ABDS\")")]
+    BadMagic([u8; 4]),
+    #[error("unsupported ABDS version {0}")]
+    BadVersion(u32),
+    #[error("truncated file: wanted {wanted} bytes for {what}, got {got}")]
+    Truncated { what: &'static str, wanted: usize, got: usize },
+    #[error("label {label} out of range for {classes} classes")]
+    LabelRange { label: u32, classes: u32 },
+}
+
+/// An in-memory dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>, // row-major [n, dim]
+    pub y: Vec<u32>,
+    pub difficulty: Option<Vec<f32>>,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// A shallow slice view materialised as a new Dataset (used to carve
+    /// out calibration sets).
+    pub fn slice(&self, start: usize, end: usize) -> Dataset {
+        let end = end.min(self.n);
+        let start = start.min(end);
+        Dataset {
+            x: self.x[start * self.dim..end * self.dim].to_vec(),
+            y: self.y[start..end].to_vec(),
+            difficulty: self
+                .difficulty
+                .as_ref()
+                .map(|d| d[start..end].to_vec()),
+            n: end - start,
+            dim: self.dim,
+            classes: self.classes,
+        }
+    }
+}
+
+fn read_exact_vec<R: Read>(
+    r: &mut R,
+    bytes: usize,
+    what: &'static str,
+) -> Result<Vec<u8>, FormatError> {
+    let mut buf = vec![0u8; bytes];
+    let mut read = 0;
+    while read < bytes {
+        let n = r.read(&mut buf[read..])?;
+        if n == 0 {
+            return Err(FormatError::Truncated { what, wanted: bytes, got: read });
+        }
+        read += n;
+    }
+    Ok(buf)
+}
+
+fn u32_le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn bytes_to_u32(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4).map(u32_le).collect()
+}
+
+/// Read an ABDS file from any reader.
+pub fn read_from<R: Read>(r: &mut R) -> Result<Dataset, FormatError> {
+    let head = read_exact_vec(r, 24, "header")?;
+    let mut magic = [0u8; 4];
+    magic.copy_from_slice(&head[..4]);
+    if &magic != MAGIC {
+        return Err(FormatError::BadMagic(magic));
+    }
+    let version = u32_le(&head[4..8]);
+    if version != VERSION {
+        return Err(FormatError::BadVersion(version));
+    }
+    let n = u32_le(&head[8..12]) as usize;
+    let dim = u32_le(&head[12..16]) as usize;
+    let classes = u32_le(&head[16..20]);
+    let flags = u32_le(&head[20..24]);
+
+    let x = bytes_to_f32(&read_exact_vec(r, 4 * n * dim, "features")?);
+    let y = bytes_to_u32(&read_exact_vec(r, 4 * n, "labels")?);
+    for &label in &y {
+        if label >= classes.max(1) {
+            return Err(FormatError::LabelRange { label, classes });
+        }
+    }
+    let difficulty = if flags & FLAG_DIFFICULTY != 0 {
+        Some(bytes_to_f32(&read_exact_vec(r, 4 * n, "difficulty")?))
+    } else {
+        None
+    };
+    Ok(Dataset { x, y, difficulty, n, dim, classes: classes as usize })
+}
+
+pub fn read_file(path: impl AsRef<Path>) -> Result<Dataset, FormatError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_from(&mut f)
+}
+
+/// Write an ABDS file (used by tests and the trace tooling).
+pub fn write_file(path: impl AsRef<Path>, ds: &Dataset) -> Result<(), FormatError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(ds.n as u32).to_le_bytes())?;
+    f.write_all(&(ds.dim as u32).to_le_bytes())?;
+    f.write_all(&(ds.classes as u32).to_le_bytes())?;
+    let flags = if ds.difficulty.is_some() { FLAG_DIFFICULTY } else { 0 };
+    f.write_all(&flags.to_le_bytes())?;
+    for v in &ds.x {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for v in &ds.y {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    if let Some(d) = &ds.difficulty {
+        for v in d {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_ds() -> Dataset {
+        Dataset {
+            x: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            y: vec![0, 2, 1],
+            difficulty: Some(vec![0.1, 0.9, 0.5]),
+            n: 3,
+            dim: 2,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join(format!("abds-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.abds");
+        let ds = sample_ds();
+        write_file(&p, &ds).unwrap();
+        let got = read_file(&p).unwrap();
+        assert_eq!(got.n, 3);
+        assert_eq!(got.dim, 2);
+        assert_eq!(got.classes, 3);
+        assert_eq!(got.x, ds.x);
+        assert_eq!(got.y, ds.y);
+        assert_eq!(got.difficulty, ds.difficulty);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_no_difficulty() {
+        let mut ds = sample_ds();
+        ds.difficulty = None;
+        let mut buf = Vec::new();
+        {
+            use std::io::Cursor;
+            // write through a memory buffer by reusing write_file via temp
+            let dir = std::env::temp_dir()
+                .join(format!("abds-test2-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("t.abds");
+            write_file(&p, &ds).unwrap();
+            buf = std::fs::read(&p).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            let got = read_from(&mut Cursor::new(&buf)).unwrap();
+            assert!(got.difficulty.is_none());
+        }
+        assert!(!buf.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = vec![b'N', b'O', b'P', b'E'];
+        bytes.extend_from_slice(&[0u8; 20]);
+        let err = read_from(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(err, FormatError::BadMagic(_)));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let ds = sample_ds();
+        let dir = std::env::temp_dir().join(format!("abds-test3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.abds");
+        write_file(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let err = read_from(&mut std::io::Cursor::new(&bytes[..30])).unwrap_err();
+        assert!(matches!(err, FormatError::Truncated { .. }));
+    }
+
+    #[test]
+    fn label_out_of_range_rejected() {
+        let mut ds = sample_ds();
+        ds.y[1] = 99;
+        let dir = std::env::temp_dir().join(format!("abds-test4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.abds");
+        write_file(&p, &ds).unwrap();
+        let err = read_file(&p).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, FormatError::LabelRange { label: 99, .. }));
+    }
+
+    #[test]
+    fn row_and_slice() {
+        let ds = sample_ds();
+        assert_eq!(ds.row(1), &[2.0, 3.0]);
+        let s = ds.slice(1, 3);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+        assert_eq!(s.y, vec![2, 1]);
+        assert_eq!(s.difficulty.as_ref().unwrap(), &vec![0.9, 0.5]);
+        // degenerate slices clamp
+        assert_eq!(ds.slice(5, 9).n, 0);
+    }
+}

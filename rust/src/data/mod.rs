@@ -1,0 +1,4 @@
+//! Datasets (ABDS format) and workload generation.
+
+pub mod format;
+pub mod workload;

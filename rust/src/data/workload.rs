@@ -1,0 +1,79 @@
+//! Workload generation: arrival processes for the serving benchmarks.
+
+use crate::util::rng::Rng;
+
+/// An arrival process producing request times (seconds from start).
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson process at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Fixed inter-arrival gap.
+    Uniform { rate: f64 },
+    /// Bursts of `burst` back-to-back requests, bursts Poisson at `rate`.
+    Bursty { rate: f64, burst: usize },
+}
+
+impl Arrival {
+    /// Generate `n` arrival timestamps, sorted ascending.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            Arrival::Poisson { rate } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exp(rate);
+                    out.push(t);
+                }
+            }
+            Arrival::Uniform { rate } => {
+                let gap = 1.0 / rate;
+                for i in 0..n {
+                    out.push(gap * (i + 1) as f64);
+                }
+            }
+            Arrival::Bursty { rate, burst } => {
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exp(rate);
+                    for _ in 0..burst.min(n - out.len()) {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximate() {
+        let mut rng = Rng::new(1);
+        let times = Arrival::Poisson { rate: 100.0 }.generate(10_000, &mut rng);
+        assert_eq!(times.len(), 10_000);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let span = times.last().unwrap() - times[0];
+        let rate = 10_000.0 / span;
+        assert!((rate - 100.0).abs() < 5.0, "rate {rate}");
+    }
+
+    #[test]
+    fn uniform_fixed_gap() {
+        let mut rng = Rng::new(2);
+        let times = Arrival::Uniform { rate: 10.0 }.generate(5, &mut rng);
+        assert_eq!(times, vec![0.1, 0.2, 0.30000000000000004, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn bursty_groups() {
+        let mut rng = Rng::new(3);
+        let times = Arrival::Bursty { rate: 5.0, burst: 4 }.generate(12, &mut rng);
+        assert_eq!(times.len(), 12);
+        // first 4 arrivals share a timestamp
+        assert_eq!(times[0], times[3]);
+        assert!(times[4] > times[3]);
+    }
+}

@@ -1,0 +1,1 @@
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,110 @@
+//! Ablations beyond the paper's figures (DESIGN.md process step 5):
+//!
+//! * `ablation_calibration` -- marginal (paper App. B) vs conditional
+//!   threshold estimation, and vote (Eq. 3) vs score (Eq. 4) rules, on
+//!   every suite.
+//! * `ablation_queueing` -- the discrete-event edge-cloud simulator:
+//!   does the §5.2.1 communication win survive edge contention?
+
+use anyhow::Result;
+
+use crate::calib::{calibrate, calibrate_conditional};
+use crate::coordinator::cascade::Cascade;
+use crate::experiments::common::{ExpContext, EPSILON, N_CAL};
+use crate::sim::edge_cloud::{simulate_abc, simulate_cloud_only, EdgeCloudParams};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, Table};
+
+pub fn run_calibration(ctx: &ExpContext) -> Result<()> {
+    let mut table = Table::new(
+        "Ablation: calibration mode x deferral rule",
+        &["suite", "mode", "rule", "accuracy", "tier-1 exits", "mean levels"],
+    );
+    for suite in ctx.benchmark_suites() {
+        let rt = ctx.runtime(&suite)?;
+        let val = ctx.dataset(&suite, "val")?;
+        let test = ctx.test_set(&suite)?;
+        for rule in [RuleKind::MeanScore, RuleKind::Vote] {
+            for conditional in [false, true] {
+                let cal = if conditional {
+                    calibrate_conditional(&rt.tiers, rule, &val, 4 * N_CAL, EPSILON)?
+                } else {
+                    calibrate(&rt.tiers, rule, &val, N_CAL, EPSILON)?
+                };
+                let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+                let (_, report) = cascade.evaluate(&test.x, &test.y, test.n)?;
+                table.row(vec![
+                    suite.clone(),
+                    if conditional { "conditional" } else { "marginal" }.to_string(),
+                    rule.name().to_string(),
+                    fnum(report.accuracy, 4),
+                    fnum(report.exit_fractions[0], 3),
+                    fnum(report.mean_levels_visited, 2),
+                ]);
+            }
+        }
+    }
+    ctx.emit("ablation_calibration", &table)
+}
+
+pub fn run_queueing(ctx: &ExpContext) -> Result<()> {
+    // ground the simulator in measured quantities: tier-1 / tier-4
+    // per-sample latency from the real PJRT executables, exit fraction
+    // from the calibrated cascade.
+    let suite = "synth-cifar10";
+    let (rt, _cal, report) = ctx.run_abc(suite, RuleKind::MeanScore, EPSILON)?;
+    let test = ctx.test_set(suite)?;
+    // single-request service times: Fig. 4a is a single-instance,
+    // real-time regime ("predictions as new data becomes available")
+    let reps = 20;
+    let t0 = std::time::Instant::now();
+    for i in 0..reps {
+        rt.tiers[0].run(test.row(i), 1)?;
+    }
+    let edge_service = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = std::time::Instant::now();
+    for i in 0..reps {
+        rt.tiers.last().unwrap().run(test.row(i), 1)?;
+    }
+    let cloud_service = t0.elapsed().as_secs_f64() / reps as f64;
+    let edge_exit = report.exit_fractions[0];
+
+    let mut table = Table::new(
+        "Ablation: edge-to-cloud with queueing (discrete-event sim)",
+        &[
+            "uplink",
+            "rate (rps)",
+            "abc mean (ms)",
+            "abc p99 (ms)",
+            "cloud mean (ms)",
+            "reduction",
+            "edge util",
+        ],
+    );
+    for (uplink, label) in [(0.010, "10ms"), (0.100, "100ms")] {
+        for rate in [50.0, 200.0, 800.0] {
+            let p = EdgeCloudParams {
+                edge_service_s: edge_service,
+                cloud_service_s: cloud_service,
+                uplink_s: uplink,
+                cloud_servers: 8,
+                edge_exit_frac: edge_exit,
+                rate,
+                n_requests: if ctx.quick { 5_000 } else { 30_000 },
+                seed: 99,
+            };
+            let abc = simulate_abc(&p);
+            let cloud = simulate_cloud_only(&p);
+            table.row(vec![
+                label.to_string(),
+                fnum(rate, 0),
+                fnum(abc.mean_latency_s * 1e3, 2),
+                fnum(abc.p99_s * 1e3, 2),
+                fnum(cloud.mean_latency_s * 1e3, 2),
+                format!("{:.1}x", cloud.mean_latency_s / abc.mean_latency_s),
+                fnum(abc.edge_utilisation, 2),
+            ]);
+        }
+    }
+    ctx.emit("ablation_queueing", &table)
+}

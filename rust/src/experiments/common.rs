@@ -1,0 +1,149 @@
+//! Shared experiment context: loaded suites, calibration, result output.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::calib::{calibrate, Calibration};
+use crate::coordinator::cascade::{Cascade, CascadeReport};
+use crate::data::format::Dataset;
+use crate::runtime::engine::Engine;
+use crate::types::RuleKind;
+use crate::util::table::Table;
+use crate::zoo::manifest::Manifest;
+use crate::zoo::registry::SuiteRuntime;
+
+/// Calibration samples per tier (paper App. B: ~100).
+pub const N_CAL: usize = 100;
+/// Default safe-deferral tolerance.
+pub const EPSILON: f64 = 0.05;
+
+/// Everything an experiment needs.
+pub struct ExpContext {
+    pub manifest: Manifest,
+    pub engine: Arc<Engine>,
+    pub out_dir: PathBuf,
+    /// Quick mode: fewer samples / sweeps (CI-friendly).
+    pub quick: bool,
+    runtimes: std::sync::Mutex<BTreeMap<String, Arc<SuiteRuntime>>>,
+}
+
+impl ExpContext {
+    pub fn new(artifacts: impl Into<PathBuf>, out_dir: impl Into<PathBuf>, quick: bool) -> Result<ExpContext> {
+        let artifacts = artifacts.into();
+        let manifest = Manifest::load(&artifacts)
+            .with_context(|| format!("loading manifest from {}", artifacts.display()))?;
+        let engine = Arc::new(Engine::cpu()?);
+        let out_dir = out_dir.into();
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(ExpContext {
+            manifest,
+            engine,
+            out_dir,
+            quick,
+            runtimes: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Load (and cache) a suite's executables.  Singles are always loaded
+    /// (WoC and single-model baselines need them).
+    pub fn runtime(&self, suite: &str) -> Result<Arc<SuiteRuntime>> {
+        if let Some(rt) = self.runtimes.lock().unwrap().get(suite) {
+            return Ok(Arc::clone(rt));
+        }
+        let rt = Arc::new(SuiteRuntime::load(
+            Arc::clone(&self.engine),
+            &self.manifest,
+            suite,
+            true,
+        )?);
+        self.runtimes
+            .lock()
+            .unwrap()
+            .insert(suite.to_string(), Arc::clone(&rt));
+        Ok(rt)
+    }
+
+    /// Dataset split of a suite.
+    pub fn dataset(&self, suite: &str, split: &str) -> Result<Dataset> {
+        self.runtime(suite)?.dataset(&self.manifest, split)
+    }
+
+    /// Test set, truncated in quick mode.
+    pub fn test_set(&self, suite: &str) -> Result<Dataset> {
+        let ds = self.dataset(suite, "test")?;
+        Ok(if self.quick { ds.slice(0, ds.n.min(500)) } else { ds })
+    }
+
+    /// Calibrate a suite's full ladder with the paper's recipe: N_CAL
+    /// validation samples, tolerance epsilon, given rule kind.
+    pub fn calibrate_suite(
+        &self,
+        suite: &str,
+        rule: RuleKind,
+        epsilon: f64,
+    ) -> Result<(Arc<SuiteRuntime>, Calibration)> {
+        let rt = self.runtime(suite)?;
+        let val = self.dataset(suite, "val")?;
+        let cal = calibrate(&rt.tiers, rule, &val, N_CAL, epsilon)?;
+        Ok((rt, cal))
+    }
+
+    /// Build + evaluate the calibrated ABC cascade of a suite on test.
+    pub fn run_abc(
+        &self,
+        suite: &str,
+        rule: RuleKind,
+        epsilon: f64,
+    ) -> Result<(Arc<SuiteRuntime>, Calibration, CascadeReport)> {
+        let (rt, cal) = self.calibrate_suite(suite, rule, epsilon)?;
+        let test = self.test_set(suite)?;
+        let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+        let (_, report) = cascade.evaluate(&test.x, &test.y, test.n)?;
+        Ok((rt, cal, report))
+    }
+
+    /// Persist a table as ASCII (stdout) + CSV (results dir).
+    pub fn emit(&self, exp: &str, table: &Table) -> Result<()> {
+        println!("{}", table.render());
+        let csv_path = self.out_dir.join(format!("{exp}.csv"));
+        std::fs::write(&csv_path, table.to_csv())?;
+        println!("[{exp}] csv -> {}\n", csv_path.display());
+        Ok(())
+    }
+
+    /// Suites used by the classifier experiments (excludes the k=5
+    /// ablation zoo, which only fig8 touches).
+    pub fn benchmark_suites(&self) -> Vec<String> {
+        self.manifest
+            .suite_names()
+            .into_iter()
+            .filter(|s| *s != "synth-cifar10-k5")
+            .map(String::from)
+            .collect()
+    }
+}
+
+/// Mean per-sample ensemble FLOPs of a cascade run, from exit fractions.
+/// `rho1` uses the parallel-equivalent cost (one member per tier, §5.1.1);
+/// otherwise the full k-member FLOPs are charged.
+pub fn cascade_mean_flops(
+    rt: &SuiteRuntime,
+    exit_fractions: &[f64],
+    rho1: bool,
+) -> f64 {
+    let mut reach = 1.0;
+    let mut total = 0.0;
+    for (tier, &exit) in rt.suite.tiers.iter().zip(exit_fractions) {
+        let per_sample = if rho1 {
+            tier.flops_per_sample_member as f64
+        } else {
+            tier.flops_ensemble() as f64
+        };
+        total += reach * per_sample;
+        reach -= exit;
+    }
+    total
+}

@@ -1,0 +1,115 @@
+//! Figure 2: Pareto curves -- ABC vs WoC confidence cascades vs single
+//! models, accuracy vs FLOPs, per benchmark suite (rho = 1, §5.1.1).
+//!
+//! Series per suite:
+//! * `single-tN`    -- each tier's member-0 model alone;
+//! * `ensemble-tN`  -- each tier's full ensemble (majority vote, no cascade);
+//! * `ABC-LN`       -- calibrated agreement cascades of length N (prefixes
+//!                     of the ladder ending at tier N);
+//! * `WoC`          -- tuned confidence cascade over the single models.
+
+use anyhow::Result;
+
+use crate::baselines::woc;
+use crate::coordinator::cascade::Cascade;
+use crate::experiments::common::{cascade_mean_flops, ExpContext, EPSILON, N_CAL};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, human, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut table = Table::new(
+        "Figure 2: accuracy vs FLOPs Pareto (rho=1)",
+        &["suite", "series", "accuracy", "flops/sample", "exit fractions"],
+    );
+    for suite in ctx.benchmark_suites() {
+        let rt = ctx.runtime(&suite)?;
+        let test = ctx.test_set(&suite)?;
+        let val = ctx.dataset(&suite, "val")?;
+
+        // -- single models & plain ensembles (accuracy straight from a
+        //    PJRT evaluation so the numbers are measured, not manifest)
+        for (idx, tier) in rt.suite.tiers.iter().enumerate() {
+            let single = &rt.singles[idx];
+            let outs = single.run_single(&test.x, test.n)?;
+            let acc = outs
+                .iter()
+                .zip(&test.y)
+                .filter(|(o, &y)| o.pred == y)
+                .count() as f64
+                / test.n as f64;
+            table.row(vec![
+                suite.clone(),
+                format!("single-t{}", tier.tier),
+                fnum(acc, 4),
+                human(tier.flops_per_sample_member as f64),
+                String::new(),
+            ]);
+            let ens = &rt.tiers[idx];
+            let outs = ens.run(&test.x, test.n)?;
+            let acc = outs
+                .iter()
+                .zip(&test.y)
+                .filter(|(o, &y)| o.majority == y)
+                .count() as f64
+                / test.n as f64;
+            table.row(vec![
+                suite.clone(),
+                format!("ensemble-t{}", tier.tier),
+                fnum(acc, 4),
+                // rho=1: ensemble latency-equivalent FLOPs = one member
+                human(tier.flops_per_sample_member as f64),
+                String::new(),
+            ]);
+        }
+
+        // -- ABC cascades: ladder prefixes of length 2..=n
+        for len in 2..=rt.tiers.len() {
+            let tiers = rt.tiers[..len].to_vec();
+            let cal = crate::calib::calibrate(
+                &tiers,
+                RuleKind::MeanScore,
+                &val,
+                N_CAL,
+                EPSILON,
+            )?;
+            let cascade = Cascade::new(tiers, cal.policy);
+            let (_, report) = cascade.evaluate(&test.x, &test.y, test.n)?;
+            let mut exit_padded = report.exit_fractions.clone();
+            exit_padded.resize(rt.tiers.len(), 0.0);
+            let flops = cascade_mean_flops(&rt, &exit_padded, true);
+            table.row(vec![
+                suite.clone(),
+                format!("ABC-L{len}"),
+                fnum(report.accuracy, 4),
+                human(flops),
+                report
+                    .exit_fractions
+                    .iter()
+                    .map(|f| fnum(*f, 2))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]);
+        }
+
+        // -- WoC tuned confidence cascade over single models
+        let flops_levels: Vec<f64> = rt
+            .suite
+            .tiers
+            .iter()
+            .map(|t| t.flops_per_sample_member as f64)
+            .collect();
+        let rep = woc::tune_and_run(&rt.singles, &val, &test, &flops_levels)?;
+        table.row(vec![
+            suite.clone(),
+            format!("WoC(tau={})", rep.tau),
+            fnum(rep.accuracy, 4),
+            human(rep.mean_flops),
+            rep.exit_fractions
+                .iter()
+                .map(|f| fnum(*f, 2))
+                .collect::<Vec<_>>()
+                .join("/"),
+        ]);
+    }
+    ctx.emit("fig2_pareto", &table)
+}

@@ -1,0 +1,66 @@
+//! Figure 3: fraction of inference cost saved as a function of the
+//! relative cost gamma, for parallelism rho in {0, 0.5, 0.75, 1} and
+//! ensemble sizes k -- the analytic Eq. 1 / Prop 4.1 landscape.
+//!
+//! Fixed selection rate P(r=0) as in the paper's figure.
+
+use anyhow::Result;
+
+use crate::cost::model::two_level_savings;
+use crate::experiments::common::ExpContext;
+use crate::types::Parallelism;
+use crate::util::table::{fnum, Table};
+
+pub const SELECTION_RATE: f64 = 0.7;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let p_defer = 1.0 - SELECTION_RATE;
+    let rhos = [0.0, 0.5, 0.75, 1.0];
+    let ks = [2usize, 3, 5];
+    // log-spaced gamma from 1e-3 to 1 (the paper's x-axis)
+    let gammas: Vec<f64> = (0..=30)
+        .map(|i| 10f64.powf(-3.0 + i as f64 * 0.1))
+        .collect();
+
+    let mut table = Table::new(
+        format!(
+            "Figure 3: cost savings vs gamma (selection rate {})",
+            SELECTION_RATE
+        ),
+        &["k", "rho", "gamma", "savings"],
+    );
+    for &k in &ks {
+        for &rho in &rhos {
+            for &gamma in &gammas {
+                let s = two_level_savings(k, gamma, Parallelism(rho), p_defer);
+                table.row(vec![
+                    k.to_string(),
+                    fnum(rho, 2),
+                    format!("{gamma:.4}"),
+                    fnum(s, 4),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig3_costmodel", &table)?;
+
+    // Headline check rows (the paper's annotations): gamma = 1/5 vs 1/50.
+    let mut summary = Table::new(
+        "Figure 3 summary: sequential-vs-parallel gap",
+        &["k", "gamma", "savings rho=0", "savings rho=1", "gap"],
+    );
+    for &k in &ks {
+        for gamma in [1.0 / 5.0, 1.0 / 10.0, 1.0 / 50.0] {
+            let s0 = two_level_savings(k, gamma, Parallelism::SEQUENTIAL, p_defer);
+            let s1 = two_level_savings(k, gamma, Parallelism::FULL, p_defer);
+            summary.row(vec![
+                k.to_string(),
+                format!("1/{:.0}", 1.0 / gamma),
+                fnum(s0, 3),
+                fnum(s1, 3),
+                fnum(s1 - s0, 3),
+            ]);
+        }
+    }
+    ctx.emit("fig3_summary", &summary)
+}

@@ -1,0 +1,66 @@
+//! Figure 4a: edge-to-cloud inference -- communication cost of ABC
+//! (tier 1 ensemble on-device, top tier in the cloud) vs the cloud-only
+//! single best model, across the paper's delay classes (§5.2.1).
+
+use anyhow::Result;
+
+use crate::coordinator::cascade::Cascade;
+use crate::cost::comm::{CommModel, Placement, DELAY_CLASSES};
+use crate::experiments::common::{ExpContext, EPSILON, N_CAL};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut table = Table::new(
+        "Figure 4a: edge-to-cloud communication cost",
+        &[
+            "suite",
+            "delay",
+            "edge exit frac",
+            "abc acc",
+            "cloud acc",
+            "abc comm (s)",
+            "cloud comm (s)",
+            "reduction",
+        ],
+    );
+    for suite in ctx.benchmark_suites() {
+        let rt = ctx.runtime(&suite)?;
+        let val = ctx.dataset(&suite, "val")?;
+        let test = ctx.test_set(&suite)?;
+
+        // 2-level cascade: tier 1 (edge) -> top tier (cloud)
+        let tiers = vec![rt.tiers[0].clone(), rt.tiers.last().unwrap().clone()];
+        let cal =
+            crate::calib::calibrate(&tiers, RuleKind::MeanScore, &val, N_CAL, EPSILON)?;
+        let cascade = Cascade::new(tiers, cal.policy);
+        let (_, report) = cascade.evaluate(&test.x, &test.y, test.n)?;
+
+        // cloud-only baseline: top-tier ensemble accuracy
+        let top = rt.tiers.last().unwrap();
+        let outs = top.run(&test.x, test.n)?;
+        let cloud_acc = outs
+            .iter()
+            .zip(&test.y)
+            .filter(|(o, &y)| o.majority == y)
+            .count() as f64
+            / test.n as f64;
+
+        for (delay_s, label) in DELAY_CLASSES {
+            let comm = CommModel::new(delay_s, vec![Placement::Edge, Placement::Cloud]);
+            let abc_t = comm.mean_comm_time(&report.exit_fractions);
+            let cloud_t = comm.cloud_only_time();
+            table.row(vec![
+                suite.clone(),
+                label.to_string(),
+                fnum(report.exit_fractions[0], 3),
+                fnum(report.accuracy, 4),
+                fnum(cloud_acc, 4),
+                format!("{abc_t:.6}"),
+                format!("{cloud_t:.6}"),
+                format!("{:.1}x", cloud_t / abc_t.max(1e-12)),
+            ]);
+        }
+    }
+    ctx.emit("fig4a_edge_cloud", &table)
+}

@@ -1,0 +1,84 @@
+//! Figure 4b + Table 4: GPU rental cost of ABC on heterogeneous hardware
+//! vs the best single model on the best GPU (§5.2.2).
+//!
+//! Tier i is placed on GPU ladder rung i (V100 -> A6000 -> A100 -> H100,
+//! Table 4 prices); exit fractions come from the real calibrated cascade
+//! run, so the dollars are a cost-model aggregation of measured routing.
+
+use anyhow::Result;
+
+use crate::cost::rental::{Gpu, RentalModel};
+use crate::experiments::common::{ExpContext, EPSILON};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    // Table 4 first (config echo, keeps the paper table regenerable).
+    let mut t4 = Table::new(
+        "Table 4: GPU rental pricing (Lambda, Sep 2024)",
+        &["GPU", "$/hour", "rated TFLOPs"],
+    );
+    for gpu in Gpu::LADDER {
+        t4.row(vec![
+            gpu.name().to_string(),
+            fnum(gpu.dollars_per_hour(), 2),
+            fnum(gpu.rated_tflops(), 0),
+        ]);
+    }
+    ctx.emit("table4_gpu_pricing", &t4)?;
+
+    let mut table = Table::new(
+        "Figure 4b: total GPU usage cost, ABC vs best single model",
+        &[
+            "suite",
+            "abc acc",
+            "single acc",
+            "abc $/h",
+            "single $/h",
+            "saving",
+            "exit fractions",
+        ],
+    );
+    for suite in ctx.benchmark_suites() {
+        let (rt, _cal, report) = ctx.run_abc(&suite, RuleKind::MeanScore, EPSILON)?;
+        let test = ctx.test_set(&suite)?;
+
+        // best single model = top tier member-0 on the top GPU
+        let single = rt.singles.last().unwrap();
+        let outs = single.run_single(&test.x, test.n)?;
+        let single_acc = outs
+            .iter()
+            .zip(&test.y)
+            .filter(|(o, &y)| o.pred == y)
+            .count() as f64
+            / test.n as f64;
+
+        let n_tiers = rt.suite.tiers.len();
+        let gpu_ladder = &Gpu::LADDER[Gpu::LADDER.len() - n_tiers..];
+        let model = RentalModel {
+            levels: rt
+                .suite
+                .tiers
+                .iter()
+                .zip(gpu_ladder)
+                .map(|(t, &g)| (g, t.flops_ensemble() as f64))
+                .collect(),
+        };
+        let (_, abc_usd, single_usd) = model.dollars(&report.exit_fractions);
+        table.row(vec![
+            suite.clone(),
+            fnum(report.accuracy, 4),
+            fnum(single_acc, 4),
+            fnum(abc_usd, 2),
+            fnum(single_usd, 2),
+            format!("{:.1}x", single_usd / abc_usd.max(1e-9)),
+            report
+                .exit_fractions
+                .iter()
+                .map(|f| fnum(*f, 2))
+                .collect::<Vec<_>>()
+                .join("/"),
+        ]);
+    }
+    ctx.emit("fig4b_gpu_rental", &table)
+}

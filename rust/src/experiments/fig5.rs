@@ -1,0 +1,100 @@
+//! Figure 5 + Table 1: black-box API cascades -- ABC vs FrugalGPT,
+//! AutoMix(+T/+P), MoT, and the best single models, on the four
+//! generation tasks, for 3-level and budget-friendly 2-level cascades
+//! (§5.2.3).
+
+use anyhow::Result;
+
+use crate::baselines::api_policies::{
+    run_abc_voting, run_automix, run_frugal_gpt, run_mot, run_single_model,
+    AutoMixKind, PolicyRun,
+};
+use crate::cost::api::table1_models;
+use crate::experiments::common::ExpContext;
+use crate::sim::api_llm::{best_of_tier, build_agents, default_tasks, generate_samples};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    // Table 1 echo.
+    let mut t1 = Table::new(
+        "Table 1: API cascade tiers ($ per Mtok, together.ai Sep 2024)",
+        &["tier", "model", "$/Mtok"],
+    );
+    for m in table1_models() {
+        t1.row(vec![m.tier.to_string(), m.name.to_string(), fnum(m.usd_per_mtok, 2)]);
+    }
+    ctx.emit("table1_api_pricing", &t1)?;
+
+    let mut table = Table::new(
+        "Figure 5: API-based inference, accuracy vs $ per query",
+        &[
+            "task",
+            "levels",
+            "policy",
+            "accuracy",
+            "$/query",
+            "tokens/query",
+            "exit fractions",
+        ],
+    );
+    for task in default_tasks() {
+        let mut samples = generate_samples(&task);
+        if ctx.quick {
+            samples.truncate(300);
+        }
+        let agents = build_agents(&task);
+        for tier_set in [vec![1usize, 2, 3], vec![1, 2]] {
+            let levels = format!("{}", tier_set.len());
+            let mut runs: Vec<PolicyRun> = Vec::new();
+            // deterministic per (task, tier-set) randomness
+            let seed = task.seed ^ (tier_set.len() as u64) << 32;
+            // majority rule (the headline config) + unanimity ablation
+            runs.push(run_abc_voting(
+                &task, &samples, &agents, &tier_set, 0.34, &mut Rng::new(seed + 1),
+            ));
+            runs.push(run_abc_voting(
+                &task, &samples, &agents, &tier_set, 0.67, &mut Rng::new(seed + 6),
+            ));
+            runs.push(run_frugal_gpt(
+                &task, &samples, &agents, &tier_set, 0.60, &mut Rng::new(seed + 2),
+            ));
+            runs.push(run_automix(
+                &task, &samples, &agents, &tier_set,
+                AutoMixKind::Threshold, &mut Rng::new(seed + 3),
+            ));
+            runs.push(run_automix(
+                &task, &samples, &agents, &tier_set,
+                AutoMixKind::Pomdp, &mut Rng::new(seed + 4),
+            ));
+            runs.push(run_mot(
+                &task, &samples, &agents, &tier_set, 5, 0.8, &mut Rng::new(seed + 5),
+            ));
+            // single-model reference points (best of each tier in play)
+            for &tier in &tier_set {
+                runs.push(run_single_model(
+                    &task,
+                    &samples,
+                    best_of_tier(&agents, tier),
+                    &mut Rng::new(seed + 10 + tier as u64),
+                ));
+            }
+            for r in &runs {
+                table.row(vec![
+                    task.name.to_string(),
+                    levels.clone(),
+                    r.policy.clone(),
+                    fnum(r.accuracy, 4),
+                    format!("{:.6}", r.usd_per_query),
+                    fnum(r.tokens_per_query, 0),
+                    r.exit_fractions
+                        .iter()
+                        .map(|f| fnum(*f, 2))
+                        .collect::<Vec<_>>()
+                        .join("/"),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig5_api_cascades", &table)
+}

@@ -1,0 +1,59 @@
+//! Figure 6: stability of the agreement-threshold estimate vs the number
+//! of calibration samples, across models of different accuracy levels
+//! (paper Appendix B; synth-imagenet tiers play the accuracy levels).
+
+use anyhow::Result;
+
+use crate::calib::threshold::{estimate_theta, evaluate_theta};
+use crate::calib::collect_points;
+use crate::experiments::common::{ExpContext, EPSILON};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let suite = "synth-imagenet";
+    let rt = ctx.runtime(suite)?;
+    let val = ctx.dataset(suite, "val")?;
+    let sizes: &[usize] = if ctx.quick {
+        &[100, 500, 2000]
+    } else {
+        &[100, 200, 500, 1000, 2000, 5000]
+    };
+
+    let mut table = Table::new(
+        "Figure 6: theta estimate vs calibration sample count (ImageNet analog)",
+        &[
+            "tier",
+            "model acc",
+            "rule",
+            "n",
+            "theta",
+            "selection rate",
+            "holdout failure",
+        ],
+    );
+    for (idx, tier_exe) in rt.tiers.iter().enumerate() {
+        let acc = rt.suite.tiers[idx].val_acc_ensemble;
+        for rule in [RuleKind::Vote, RuleKind::MeanScore] {
+            // one pass over the full val set, reused for all n
+            let all = collect_points(tier_exe, rule, &val, val.n)?;
+            // hold out the tail for stability evaluation
+            let holdout = &all[all.len() / 2..];
+            for &n in sizes {
+                let n = n.min(all.len() / 2);
+                let est = estimate_theta(&all[..n], EPSILON);
+                let (h_fail, _h_sel) = evaluate_theta(holdout, est.theta);
+                table.row(vec![
+                    format!("t{}", rt.suite.tiers[idx].tier),
+                    fnum(acc, 3),
+                    rule.name().to_string(),
+                    n.to_string(),
+                    fnum(est.theta as f64, 4),
+                    fnum(est.selection_rate, 3),
+                    fnum(h_fail, 4),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig6_threshold_stability", &table)
+}

@@ -1,0 +1,51 @@
+//! Figure 7: existence of safe deferral rules -- selection rate as a
+//! function of model accuracy (left) and FLOPs (right) for error
+//! tolerances 1%, 3%, 5% (paper Appendix C; ImageNet analog).
+
+use anyhow::Result;
+
+use crate::calib::collect_points;
+use crate::calib::threshold::{estimate_theta, evaluate_theta};
+use crate::experiments::common::{ExpContext, N_CAL};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, human, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let suite = "synth-imagenet";
+    let rt = ctx.runtime(suite)?;
+    let val = ctx.dataset(suite, "val")?;
+
+    let mut table = Table::new(
+        "Figure 7: selection rate vs accuracy / FLOPs at error tolerances",
+        &[
+            "tier",
+            "model acc",
+            "flops",
+            "epsilon",
+            "theta",
+            "selection rate",
+            "realized failure",
+        ],
+    );
+    for (idx, tier_exe) in rt.tiers.iter().enumerate() {
+        let entry = &rt.suite.tiers[idx];
+        // the continuous Eq. 4 score gives the fine-grained thresholds the
+        // paper's figure shows; the coarse vote rule is in the CSV too
+        let points = collect_points(tier_exe, RuleKind::MeanScore, &val, val.n)?;
+        let (cal, eval) = points.split_at(N_CAL);
+        for eps in [0.01, 0.03, 0.05] {
+            let est = estimate_theta(cal, eps);
+            let (fail, sel) = evaluate_theta(eval, est.theta);
+            table.row(vec![
+                format!("t{}", entry.tier),
+                fnum(entry.val_acc_ensemble, 3),
+                human(entry.flops_per_sample_member as f64),
+                fnum(eps, 2),
+                fnum(est.theta as f64, 4),
+                fnum(sel, 3),
+                fnum(fail, 4),
+            ]);
+        }
+    }
+    ctx.emit("fig7_selection_rates", &table)
+}

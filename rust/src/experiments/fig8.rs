@@ -1,0 +1,173 @@
+//! Figure 8: parallel vs sequential execution, cascade lengths 2-4 and
+//! ensemble sizes 2-5, on the CIFAR-10 analog (paper Appendix E.1).
+//!
+//! Ensemble sizes come from the k=5 ablation zoo
+//! (`synth-cifar10-k5`): the artifact returns all five members' logits,
+//! and the host-side agreement twin (coordinator::agreement) votes over
+//! the first m members -- so every (length, m) cell reuses the same
+//! compiled executables.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::calib::threshold::{estimate_theta, CalPoint};
+use crate::coordinator::agreement::agree_logits;
+use crate::data::format::Dataset;
+use crate::experiments::common::{ExpContext, EPSILON, N_CAL};
+use crate::runtime::executable::TierExecutable;
+use crate::types::TierOutput;
+use crate::util::table::{fnum, human, Table};
+use crate::zoo::registry::SuiteRuntime;
+
+/// Run one tier's ensemble and reduce agreement over the first m members
+/// on the host.
+fn run_subset(
+    tier: &Arc<TierExecutable>,
+    data: &[f32],
+    n: usize,
+    m: usize,
+) -> Result<Vec<TierOutput>> {
+    let (_, logits) = tier.run_with_logits(data, n)?;
+    let c = tier.classes;
+    let k = tier.k;
+    assert!(m >= 1 && m <= k);
+    let mut out = Vec::with_capacity(n);
+    let mut sample_logits = vec![0.0f32; m * c];
+    for i in 0..n {
+        for mem in 0..m {
+            let off = (mem * n + i) * c;
+            sample_logits[mem * c..(mem + 1) * c]
+                .copy_from_slice(&logits[off..off + c]);
+        }
+        out.push(agree_logits(&sample_logits, m, c));
+    }
+    Ok(out)
+}
+
+/// Calibrate + evaluate an m-member, L-level subset cascade.
+fn subset_cascade(
+    rt: &SuiteRuntime,
+    val: &Dataset,
+    test: &Dataset,
+    levels: &[usize], // 0-based tier indices
+    m: usize,
+) -> Result<(f64, Vec<f64>)> {
+    // calibrate each non-final level on N_CAL val samples
+    let mut thetas = Vec::new();
+    for &lvl in &levels[..levels.len() - 1] {
+        let n = N_CAL.min(val.n);
+        let outs = run_subset(&rt.tiers[lvl], &val.x[..n * val.dim], n, m)?;
+        let points: Vec<CalPoint> = outs
+            .iter()
+            .zip(&val.y[..n])
+            .map(|(o, &y)| CalPoint { score: o.mean_score, correct: o.majority == y })
+            .collect();
+        thetas.push(estimate_theta(&points, EPSILON).theta);
+    }
+    // sieve execution over the test set
+    let n = test.n;
+    let dim = test.dim;
+    let mut prediction = vec![0u32; n];
+    let mut exit_level = vec![0usize; n];
+    let mut active: Vec<usize> = (0..n).collect();
+    for (pos, &lvl) in levels.iter().enumerate() {
+        if active.is_empty() {
+            break;
+        }
+        let mut sub = Vec::with_capacity(active.len() * dim);
+        for &i in &active {
+            sub.extend_from_slice(test.row(i));
+        }
+        let outs = run_subset(&rt.tiers[lvl], &sub, active.len(), m)?;
+        let last = pos + 1 == levels.len();
+        let mut still = Vec::new();
+        for (j, &i) in active.iter().enumerate() {
+            if last || outs[j].mean_score > thetas[pos] {
+                prediction[i] = outs[j].majority;
+                exit_level[i] = pos + 1;
+            } else {
+                still.push(i);
+            }
+        }
+        active = still;
+    }
+    let acc = prediction
+        .iter()
+        .zip(&test.y)
+        .filter(|(p, y)| p == y)
+        .count() as f64
+        / n as f64;
+    let mut exits = vec![0.0; levels.len()];
+    for &e in &exit_level {
+        exits[e - 1] += 1.0 / n as f64;
+    }
+    Ok((acc, exits))
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let suite = "synth-cifar10-k5";
+    let rt = ctx.runtime(suite)?;
+    let val = ctx.dataset(suite, "val")?;
+    let test = ctx.test_set(suite)?;
+    let n_tiers = rt.tiers.len();
+
+    let mut table = Table::new(
+        "Figure 8: cascade length x ensemble size, parallel vs sequential cost",
+        &[
+            "levels",
+            "members",
+            "accuracy",
+            "flops rho=1",
+            "flops rho=0",
+            "exit fractions",
+        ],
+    );
+
+    // single best model reference
+    let best = rt.singles.last().unwrap();
+    let outs = best.run_single(&test.x, test.n)?;
+    let best_acc = outs
+        .iter()
+        .zip(&test.y)
+        .filter(|(o, &y)| o.pred == y)
+        .count() as f64
+        / test.n as f64;
+    let best_flops = rt.suite.tiers.last().unwrap().flops_per_sample_member as f64;
+    table.row(vec![
+        "single-best".to_string(),
+        "1".to_string(),
+        fnum(best_acc, 4),
+        human(best_flops),
+        human(best_flops),
+        String::new(),
+    ]);
+
+    let member_sizes: &[usize] = if ctx.quick { &[2, 5] } else { &[2, 3, 4, 5] };
+    for len in 2..=n_tiers {
+        // ladder suffix of the given length always ends at the top tier
+        let levels: Vec<usize> = (n_tiers - len..n_tiers).collect();
+        for &m in member_sizes {
+            let (acc, exits) = subset_cascade(&rt, &val, &test, &levels, m)?;
+            // rho=1: each visited level costs one member's FLOPs;
+            // rho=0: each visited level costs m members' FLOPs.
+            let mut reach = 1.0;
+            let (mut f_par, mut f_seq) = (0.0, 0.0);
+            for (pos, &lvl) in levels.iter().enumerate() {
+                let f = rt.suite.tiers[lvl].flops_per_sample_member as f64;
+                f_par += reach * f;
+                f_seq += reach * f * m as f64;
+                reach -= exits[pos];
+            }
+            table.row(vec![
+                format!("L{len}"),
+                m.to_string(),
+                fnum(acc, 4),
+                human(f_par),
+                human(f_seq),
+                exits.iter().map(|f| fnum(*f, 2)).collect::<Vec<_>>().join("/"),
+            ]);
+        }
+    }
+    ctx.emit("fig8_parallel_ablation", &table)
+}

@@ -1,0 +1,48 @@
+//! Paper experiment regenerators: one module per figure/table
+//! (DESIGN.md §5 experiment index).
+
+pub mod ablation;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4a;
+pub mod fig4b;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table5;
+
+use anyhow::{bail, Result};
+use common::ExpContext;
+
+/// All experiment ids, in the order `exp all` runs them.
+pub const ALL: [&str; 11] = [
+    "fig2", "fig3", "fig4a", "fig4b", "fig5", "fig6", "fig7", "fig8", "table5",
+    "ablation_calibration", "ablation_queueing",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
+    match id {
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4a" => fig4a::run(ctx),
+        "fig4b" => fig4b::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "table5" => table5::run(ctx),
+        "ablation_calibration" => ablation::run_calibration(ctx),
+        "ablation_queueing" => ablation::run_queueing(ctx),
+        "all" => {
+            for exp in ALL {
+                println!("==== running {exp} ====");
+                run(exp, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+}

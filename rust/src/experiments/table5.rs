@@ -1,0 +1,143 @@
+//! Table 5: detailed per-tier cost breakdown for every suite -- fraction
+//! of samples per tier, GPU dollars, measured latency, FLOPs; ABC
+//! aggregate vs the best single model (paper Appendix E.2).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cost::rental::{Gpu, RentalModel};
+use crate::experiments::common::{ExpContext, EPSILON};
+use crate::types::RuleKind;
+use crate::util::table::{fnum, human, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut table = Table::new(
+        "Table 5: per-tier cost breakdown",
+        &[
+            "suite",
+            "metric",
+            "tier1",
+            "tier2",
+            "tier3",
+            "tier4",
+            "ABC",
+            "best single",
+        ],
+    );
+    for suite in ctx.benchmark_suites() {
+        let (rt, _cal, report) = ctx.run_abc(&suite, RuleKind::MeanScore, EPSILON)?;
+        let test = ctx.test_set(&suite)?;
+        let n_tiers = rt.suite.tiers.len();
+
+        // measured per-tier ensemble latency (batch-128 amortised, s/sample)
+        let mut tier_latency = Vec::new();
+        let bench_n = 256.min(test.n);
+        for tier in &rt.tiers {
+            let t0 = Instant::now();
+            tier.run(&test.x[..bench_n * test.dim], bench_n)?;
+            tier_latency.push(t0.elapsed().as_secs_f64() / bench_n as f64);
+        }
+        // single-model latency at the top tier
+        let t0 = Instant::now();
+        rt.singles.last().unwrap().run_single(&test.x[..bench_n * test.dim], bench_n)?;
+        let single_latency = t0.elapsed().as_secs_f64() / bench_n as f64;
+
+        // rental dollars
+        let gpu_ladder = &Gpu::LADDER[Gpu::LADDER.len() - n_tiers..];
+        let rental = RentalModel {
+            levels: rt
+                .suite
+                .tiers
+                .iter()
+                .zip(gpu_ladder)
+                .map(|(t, &g)| (g, t.flops_ensemble() as f64))
+                .collect(),
+        };
+        let (per_tier_usd, abc_usd, single_usd) = rental.dollars(&report.exit_fractions);
+
+        // ABC mean latency: sum over levels of reach * tier latency
+        let mut reach = 1.0;
+        let mut abc_latency = 0.0;
+        let mut abc_flops = 0.0;
+        for (i, tier) in rt.suite.tiers.iter().enumerate() {
+            abc_latency += reach * tier_latency[i];
+            abc_flops += reach * tier.flops_ensemble() as f64;
+            reach -= report.exit_fractions[i];
+        }
+        let single_flops =
+            rt.suite.tiers.last().unwrap().flops_per_sample_member as f64;
+
+        let pad = |mut v: Vec<String>| {
+            v.resize(4, "-".into());
+            v
+        };
+        let frac_cells = pad(report
+            .exit_fractions
+            .iter()
+            .map(|f| fnum(*f, 2))
+            .collect());
+        table.row(
+            vec![
+                suite.clone(),
+                format!("Frac. samples (n={})", test.n),
+            ]
+            .into_iter()
+            .chain(frac_cells)
+            .chain([String::from("1.00"), String::from("1.00")])
+            .collect::<Vec<_>>(),
+        );
+        table.row(
+            vec![suite.clone(), "GPU cost ($/h)".to_string()]
+                .into_iter()
+                .chain(pad(per_tier_usd.iter().map(|d| fnum(*d, 2)).collect()))
+                .chain([fnum(abc_usd, 2), fnum(single_usd, 2)])
+                .collect::<Vec<_>>(),
+        );
+        table.row(
+            vec![suite.clone(), "Avg latency (ms)".to_string()]
+                .into_iter()
+                .chain(pad(tier_latency.iter().map(|l| fnum(l * 1e3, 3)).collect()))
+                .chain([fnum(abc_latency * 1e3, 3), fnum(single_latency * 1e3, 3)])
+                .collect::<Vec<_>>(),
+        );
+        table.row(
+            vec![suite.clone(), "Avg FLOPs".to_string()]
+                .into_iter()
+                .chain(pad(rt
+                    .suite
+                    .tiers
+                    .iter()
+                    .map(|t| human(t.flops_ensemble() as f64))
+                    .collect()))
+                .chain([human(abc_flops), human(single_flops)])
+                .collect::<Vec<_>>(),
+        );
+        table.row(
+            vec![suite.clone(), "Accuracy".to_string()]
+                .into_iter()
+                .chain(pad(rt
+                    .suite
+                    .tiers
+                    .iter()
+                    .map(|t| fnum(t.test_acc_ensemble, 3))
+                    .collect()))
+                .chain([fnum(report.accuracy, 3), {
+                    let outs = rt
+                        .singles
+                        .last()
+                        .unwrap()
+                        .run_single(&test.x, test.n)?;
+                    let acc = outs
+                        .iter()
+                        .zip(&test.y)
+                        .filter(|(o, &y)| o.pred == y)
+                        .count() as f64
+                        / test.n as f64;
+                    fnum(acc, 3)
+                }])
+                .collect::<Vec<_>>(),
+        );
+    }
+    ctx.emit("table5_breakdown", &table)
+}

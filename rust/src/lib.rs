@@ -1,0 +1,23 @@
+//! abc-serve: Agreement-Based Cascading for Efficient Inference.
+//!
+//! Reproduction of Kolawole et al. 2024 as a three-layer serving stack:
+//! Pallas kernels (L1) and a JAX ensemble model (L2) AOT-compiled to HLO
+//! text at build time, executed by this Rust coordinator (L3) via PJRT.
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod analysis;
+pub mod baselines;
+pub mod benchkit;
+pub mod calib;
+pub mod cost;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod error;
+pub mod types;
+pub mod util;
+pub mod runtime;
+pub mod experiments;
+pub mod server;
+pub mod sim;
+pub mod zoo;

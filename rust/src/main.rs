@@ -1,0 +1,235 @@
+//! abc-serve leader binary: serve / classify / calibrate / exp / info.
+//!
+//! ```text
+//! repro info        [--artifacts DIR]
+//! repro calibrate   --suite S [--rule vote|score] [--epsilon E] [--n N]
+//! repro classify    --suite S [--split test] [--rule vote|score] [--epsilon E]
+//! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
+//! repro exp         <fig2|fig3|fig4a|fig4b|fig5|fig6|fig7|fig8|table5|all>
+//!                   [--out artifacts/results] [--quick]
+//! repro selftest    (loads every artifact and runs a smoke batch)
+//! ```
+
+use std::sync::Arc;
+
+use abc_serve::calib;
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::experiments::{self, common::ExpContext};
+use abc_serve::metrics::Metrics;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::types::RuleKind;
+use abc_serve::util::cli::Args;
+use abc_serve::util::table::{fnum, human, Table};
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let Some((cmd, rest)) = args.subcommand() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd {
+        "info" => cmd_info(&rest),
+        "calibrate" => cmd_calibrate(&rest),
+        "classify" => cmd_classify(&rest),
+        "serve" => cmd_serve(&rest),
+        "exp" => cmd_exp(&rest),
+        "selftest" => cmd_selftest(&rest),
+        "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "abc-serve: Agreement-Based Cascading serving framework\n\n\
+         commands:\n\
+         \x20 info                          show manifest / zoo summary\n\
+         \x20 calibrate --suite S           estimate per-tier thetas (App. B)\n\
+         \x20 classify  --suite S           run the calibrated cascade on a split\n\
+         \x20 serve     --suite S           line-JSON TCP serving (port 7878)\n\
+         \x20 exp <id|all>                  regenerate paper figures/tables\n\
+         \x20 selftest                      load + smoke every artifact\n\n\
+         common flags: --artifacts DIR (default ./artifacts), --rule vote|score,\n\
+         \x20 --epsilon E (default 0.03), --quick"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts").to_string()
+}
+
+fn rule_of(args: &Args) -> Result<RuleKind> {
+    let name = args.str_or("rule", "score");
+    RuleKind::parse(name).with_context(|| format!("bad --rule {name:?}"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let mut table = Table::new(
+        "model zoo",
+        &["suite", "paper dataset", "classes", "tier", "k", "hidden", "flops/member", "val acc (ens)"],
+    );
+    for s in &manifest.suites {
+        for t in &s.tiers {
+            table.row(vec![
+                s.name.clone(),
+                s.paper_dataset.clone(),
+                s.classes.to_string(),
+                t.tier.to_string(),
+                t.k.to_string(),
+                format!("{:?}", t.hidden),
+                human(t.flops_per_sample_member as f64),
+                fnum(t.val_acc_ensemble, 3),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "ensemble buckets: {:?}   single buckets: {:?}",
+        manifest.ensemble_buckets, manifest.single_buckets
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let suite = args.req_str("suite")?;
+    let rule = rule_of(args)?;
+    let epsilon = args.f64_or("epsilon", 0.03)?;
+    let n_cal = args.usize_or("n", 100)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = SuiteRuntime::load(engine, &manifest, suite, false)?;
+    let val = rt.dataset(&manifest, "val")?;
+    let cal = calib::calibrate(&rt.tiers, rule, &val, n_cal, epsilon)?;
+    let mut table = Table::new(
+        format!("calibration: {suite} rule={} eps={epsilon} n={n_cal}", rule.name()),
+        &["tier", "theta", "selection rate", "failure rate"],
+    );
+    for (i, est) in cal.estimates.iter().enumerate() {
+        table.row(vec![
+            format!("t{}", rt.suite.tiers[i].tier),
+            fnum(est.theta as f64, 4),
+            fnum(est.selection_rate, 3),
+            fnum(est.failure_rate, 4),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let suite = args.req_str("suite")?;
+    let split = args.str_or("split", "test");
+    let rule = rule_of(args)?;
+    let epsilon = args.f64_or("epsilon", 0.03)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false)?);
+    let val = rt.dataset(&manifest, "val")?;
+    let data = rt.dataset(&manifest, split)?;
+    let cal = calib::calibrate(&rt.tiers, rule, &val, 100, epsilon)?;
+    let cascade = Cascade::new(rt.tiers.clone(), cal.policy);
+    let t0 = std::time::Instant::now();
+    let (_, report) = cascade.evaluate(&data.x, &data.y, data.n)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let mut table = Table::new(
+        format!("cascade run: {suite}/{split}"),
+        &["metric", "value"],
+    );
+    table.row(vec!["samples".to_string(), report.n.to_string()]);
+    table.row(vec!["accuracy".to_string(), fnum(report.accuracy, 4)]);
+    table.row(vec![
+        "exit fractions".to_string(),
+        report
+            .exit_fractions
+            .iter()
+            .map(|f| fnum(*f, 3))
+            .collect::<Vec<_>>()
+            .join(" / "),
+    ]);
+    table.row(vec![
+        "mean levels visited".to_string(),
+        fnum(report.mean_levels_visited, 3),
+    ]);
+    table.row(vec!["wallclock (s)".to_string(), fnum(dt, 2)]);
+    table.row(vec![
+        "throughput (samples/s)".to_string(),
+        fnum(report.n as f64 / dt, 0),
+    ]);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let suite = args.req_str("suite")?;
+    let port = args.u64_or("port", 7878)? as u16;
+    let rule = rule_of(args)?;
+    let epsilon = args.f64_or("epsilon", 0.03)?;
+    let max_batch = args.usize_or("max-batch", 32)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 2)?;
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let engine = Arc::new(Engine::cpu()?);
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false)?);
+    let val = rt.dataset(&manifest, "val")?;
+    let cal = calib::calibrate(&rt.tiers, rule, &val, 100, epsilon)?;
+    let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy));
+    let metrics = Metrics::new();
+    let pipeline = Arc::new(Pipeline::spawn(
+        cascade,
+        BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(max_wait_ms),
+        },
+        Arc::clone(&metrics),
+    ));
+    println!("serving {suite} on 127.0.0.1:{port} (line-JSON protocol)");
+    abc_serve::server::serve(pipeline, port)
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = args.str_or("out", "artifacts/results");
+    let ctx = ExpContext::new(artifacts_dir(args), out, args.flag("quick"))?;
+    experiments::run(id, &ctx)
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    let engine = Arc::new(Engine::cpu()?);
+    println!("platform: {} devices: {}", engine.platform(), engine.device_count());
+    for suite_name in manifest.suite_names() {
+        let rt = SuiteRuntime::load(Arc::clone(&engine), &manifest, suite_name, true)?;
+        let test = rt.dataset(&manifest, "test")?;
+        let n = 8.min(test.n);
+        for tier in &rt.tiers {
+            let outs = tier.run(&test.x[..n * test.dim], n)?;
+            anyhow::ensure!(outs.len() == n, "tier output size");
+        }
+        for single in &rt.singles {
+            let outs = single.run_single(&test.x[..n * test.dim], n)?;
+            anyhow::ensure!(outs.len() == n, "single output size");
+        }
+        println!("{suite_name}: {} tiers OK", rt.tiers.len());
+    }
+    println!("selftest OK");
+    Ok(())
+}

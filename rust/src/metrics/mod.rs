@@ -1,0 +1,235 @@
+//! Serving metrics: named counters + log-bucketed histograms.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed histogram for positive values (latencies, batch sizes).
+///
+/// Buckets are `base * growth^i` boundaries covering [1e-7, ~1e4] seconds
+/// with ~5% resolution -- good enough for p50/p99 on the serving path
+/// without retaining samples.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 512;
+const HIST_MIN: f64 = 1e-7;
+const HIST_GROWTH: f64 = 1.052;
+
+fn bucket_of(v: f64) -> usize {
+    if v <= HIST_MIN {
+        return 0;
+    }
+    let idx = (v / HIST_MIN).ln() / HIST_GROWTH.ln();
+    (idx as usize).min(HIST_BUCKETS - 1)
+}
+
+fn bucket_value(i: usize) -> f64 {
+    HIST_MIN * HIST_GROWTH.powi(i as i32)
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        let v = v.max(0.0);
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros
+            .fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    /// Approximate quantile (within one bucket's ~5% resolution).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(HIST_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// A registry of named counters and histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.counters.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.histograms.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// Snapshot all metrics as display lines (name, value description).
+    pub fn snapshot(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push((name.clone(), format!("{}", c.get())));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            if h.count() > 0 {
+                out.push((
+                    name.clone(),
+                    format!(
+                        "n={} mean={:.6} p50={:.6} p99={:.6}",
+                        h.count(),
+                        h.mean(),
+                        h.p50(),
+                        h.p99()
+                    ),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let m = Metrics::new();
+        m.counter("a").inc();
+        m.counter("a").add(4);
+        assert_eq!(m.counter("a").get(), 5);
+        assert_eq!(m.counter("b").get(), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_resolution() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1ms .. 1s uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50();
+        assert!((0.45..0.56).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((0.93..1.06).contains(&p99), "p99 {p99}");
+        let mean = h.mean();
+        assert!((0.48..0.53).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn histogram_empty_is_nan() {
+        let h = Histogram::default();
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let h = Histogram::default();
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) <= 2e-7);
+        assert!(h.quantile(1.0) > 1e3);
+    }
+
+    #[test]
+    fn snapshot_lists_everything() {
+        let m = Metrics::new();
+        m.counter("reqs").inc();
+        m.histogram("lat").record(0.01);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"reqs"));
+        assert!(names.contains(&"lat"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Metrics::new();
+        let c = m.counter("x");
+        let hs = m.histogram("h");
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let h = Arc::clone(&hs);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                        h.record(0.001);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+        assert_eq!(hs.count(), 8000);
+    }
+}

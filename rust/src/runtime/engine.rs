@@ -1,0 +1,122 @@
+//! PJRT engine: loads AOT HLO-text artifacts and executes them on the CPU
+//! PJRT client (`xla` crate / xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that this XLA rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md and DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::FromRawBytes;
+
+/// Wrapper around the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU engine.  One engine per process is typical; executables
+    /// created from it keep a handle to the client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Direct access to the underlying PJRT client (advanced callers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO text file and compile it into a loaded executable.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(exe)
+    }
+
+    /// Upload host f32 data as a device buffer (used for inputs and for
+    /// the one-time weight upload).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Load every named array of an .npz weight sidecar, in the given
+    /// order, as device buffers.
+    ///
+    /// SOUNDNESS: `buffer_from_host_literal` enqueues an *asynchronous*
+    /// host->device copy on the client's thread pool
+    /// (`AbstractTfrtCpuBuffer::CopyFromLiteral`); the source literal must
+    /// stay alive until the copy completes or the copier reads freed
+    /// memory (observed as flaky SIGSEGV/heap corruption).  We therefore
+    /// return the literals together with the buffers and the caller keeps
+    /// both for the executable's lifetime.
+    pub fn upload_npz_weights(
+        &self,
+        path: impl AsRef<Path>,
+        names: &[String],
+    ) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+        let path = path.as_ref();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let literals = xla::Literal::read_npz_by_name(path, &(), &name_refs)
+            .with_context(|| format!("reading npz {}", path.display()))?;
+        let mut buffers = Vec::with_capacity(literals.len());
+        for lit in &literals {
+            buffers.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .context("uploading weight literal")?,
+            );
+        }
+        // Force the async copies to complete while the sources are
+        // guaranteed alive (a host read-back synchronises the chain).
+        for buf in &buffers {
+            let _ = buf
+                .to_literal_sync()
+                .context("synchronising weight upload")?;
+        }
+        Ok((buffers, literals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_engine_boots() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.device_count() >= 1);
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn upload_roundtrip() {
+        let e = Engine::cpu().unwrap();
+        let buf = e.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn upload_dim_mismatch_errors() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.upload_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Bucketed tier executables: the runtime objects the coordinator calls.
+//!
+//! A `TierExecutable` owns one compiled PJRT executable per batch bucket
+//! plus the tier's weights, uploaded to the device ONCE at load time
+//! (the artifacts keep weights as runtime parameters -- HLO text elides
+//! large constants).  `run` picks the smallest bucket that fits, pads the
+//! batch, executes, and truncates the outputs; batches larger than the
+//! biggest bucket are chunked.
+//!
+//! Thread-safety: the raw `xla` wrapper types hold C pointers and are not
+//! `Send`/`Sync`, but the PJRT CPU client is thread-safe for compilation
+//! and execution, and our weight buffers are immutable after upload.  We
+//! therefore wrap the executable set in a struct with an explicit
+//! `unsafe impl Send + Sync` (see `SAFETY` note below).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::engine::Engine;
+use crate::types::TierOutput;
+use crate::zoo::manifest::{Manifest, TierEntry};
+
+/// Which artifact variant of the tier to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Ensemble of k members + agreement reduce: returns TierOutput.
+    Ensemble,
+    /// Member-0 single model: prediction + max-softmax confidence.
+    Single,
+}
+
+/// Output of the single-model artifact (baselines).
+#[derive(Debug, Clone, Copy)]
+pub struct SingleOutput {
+    pub pred: u32,
+    pub confidence: f32,
+}
+
+struct Inner {
+    buckets: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host copies backing the async weight upload; MUST outlive the
+    /// buffers (see Engine::upload_npz_weights soundness note).
+    _weight_literals: Vec<xla::Literal>,
+}
+
+// SAFETY: PJRT's C API guarantees thread-safe `Compile`/`Execute` on the
+// CPU client; `PjRtLoadedExecutable::execute_b` takes `&self` and the
+// weight buffers are never mutated after upload.  The wrapper types are
+// only `!Send`/`!Sync` because they contain raw pointers.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// A loaded, bucketed tier artifact bound to its weights.
+pub struct TierExecutable {
+    inner: Inner,
+    /// Engine handle used for per-call input uploads.
+    engine: std::sync::Arc<Engine>,
+    pub tier: usize,
+    pub k: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub variant: Variant,
+    /// Available batch buckets, ascending.
+    pub bucket_sizes: Vec<usize>,
+}
+
+// SAFETY: see Inner. Engine's client is likewise thread-safe.
+unsafe impl Send for TierExecutable {}
+unsafe impl Sync for TierExecutable {}
+
+impl TierExecutable {
+    /// Load all buckets of a tier's artifact + upload its weights.
+    pub fn load(
+        engine: std::sync::Arc<Engine>,
+        manifest: &Manifest,
+        suite_dim: usize,
+        suite_classes: usize,
+        tier: &TierEntry,
+        variant: Variant,
+    ) -> Result<TierExecutable> {
+        let hlo_map = match variant {
+            Variant::Ensemble => &tier.ensemble_hlo,
+            Variant::Single => &tier.single_hlo,
+        };
+        if hlo_map.is_empty() {
+            bail!("tier {} has no {:?} artifacts", tier.tier, variant);
+        }
+        let mut buckets = BTreeMap::new();
+        for (&bucket, rel) in hlo_map {
+            let exe = engine
+                .load_hlo(manifest.path(rel))
+                .with_context(|| format!("tier {} bucket {}", tier.tier, bucket))?;
+            buckets.insert(bucket, exe);
+        }
+        let (weights, weight_literals) = engine
+            .upload_npz_weights(manifest.path(&tier.weights), &tier.param_names)
+            .with_context(|| format!("weights for tier {}", tier.tier))?;
+        let bucket_sizes: Vec<usize> = buckets.keys().copied().collect();
+        Ok(TierExecutable {
+            inner: Inner { buckets, weights, _weight_literals: weight_literals },
+            engine,
+            tier: tier.tier,
+            k: tier.k,
+            dim: suite_dim,
+            classes: suite_classes,
+            variant,
+            bucket_sizes,
+        })
+    }
+
+    /// Smallest bucket that fits `n`, or the largest bucket if none do.
+    pub fn pick_bucket(&self, n: usize) -> usize {
+        for &b in &self.bucket_sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.bucket_sizes.last().unwrap()
+    }
+
+    /// Next chunk size for a remaining batch of `n` rows.
+    ///
+    /// Padding straight up to `pick_bucket(n)` can waste up to 4x compute
+    /// at the most expensive tier (e.g. 33 deferred rows padding to the
+    /// 128 bucket); splitting into exact buckets costs extra dispatches
+    /// whose fixed overhead dominates for the small tiers.  Heuristic
+    /// (perf pass, EXPERIMENTS.md SS Perf): pad up when the padded bucket
+    /// is within 2x of the remaining rows (single dispatch), otherwise
+    /// issue the largest bucket that fits and continue.
+    pub fn next_chunk(&self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let up = self.bucket_sizes.iter().copied().find(|&b| b >= n);
+        let down = self.bucket_sizes.iter().rev().copied().find(|&b| b <= n);
+        match (up, down) {
+            (Some(up), Some(down)) => {
+                if up <= 2 * n {
+                    n // pad up to `up`: waste < 2x, single dispatch
+                } else {
+                    down
+                }
+            }
+            (Some(_), None) => n,    // below the smallest bucket: pad up
+            (None, Some(down)) => down, // above the largest bucket: chunk
+            (None, None) => unreachable!("no buckets"),
+        }
+    }
+
+    /// Padded-sample waste for a batch of `n` (used by the batcher).
+    pub fn padding_waste(&self, n: usize) -> usize {
+        let mut remaining = n;
+        let mut padded = 0;
+        while remaining > 0 {
+            let chunk = self.next_chunk(remaining);
+            padded += self.pick_bucket(chunk);
+            remaining -= chunk;
+        }
+        padded - n
+    }
+
+    /// Run the ensemble artifact over `n` rows of `features`
+    /// (row-major `n x dim`).  Returns one TierOutput per row.
+    pub fn run(&self, features: &[f32], n: usize) -> Result<Vec<TierOutput>> {
+        let (outputs, _) = self.run_impl(features, n, false)?;
+        Ok(outputs)
+    }
+
+    /// As `run`, but also returns the stacked member logits
+    /// (`k * n * classes`, member-major) for analysis paths.
+    pub fn run_with_logits(
+        &self,
+        features: &[f32],
+        n: usize,
+    ) -> Result<(Vec<TierOutput>, Vec<f32>)> {
+        let (outputs, logits) = self.run_impl(features, n, true)?;
+        Ok((outputs, logits))
+    }
+
+    fn run_impl(
+        &self,
+        features: &[f32],
+        n: usize,
+        want_logits: bool,
+    ) -> Result<(Vec<TierOutput>, Vec<f32>)> {
+        if self.variant != Variant::Ensemble {
+            bail!("run() on a Single-variant executable");
+        }
+        check_features(features, n, self.dim)?;
+        let mut out = Vec::with_capacity(n);
+        // Globally member-major layout: logits_all[(m * n + i) * classes..]
+        // is member m's logits for sample i, regardless of chunking.
+        let mut logits_all = if want_logits {
+            vec![0.0f32; self.k * n * self.classes]
+        } else {
+            Vec::new()
+        };
+        let mut start = 0;
+        while start < n {
+            let chunk = self.next_chunk(n - start);
+            let bucket = self.pick_bucket(chunk);
+            let rows = &features[start * self.dim..(start + chunk) * self.dim];
+            let padded = pad_rows(rows, chunk, bucket, self.dim);
+            let input = self
+                .engine
+                .upload_f32(&padded, &[bucket, self.dim])
+                .context("uploading input batch")?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&input];
+            args.extend(self.inner.weights.iter());
+            let exe = &self.inner.buckets[&bucket];
+            let result = exe.execute_b(&args).context("tier execute")?;
+            // SOUNDNESS: decomposed tuple literals alias the parent
+            // literal's storage in xla_extension 0.5.1, so the parent MUST
+            // outlive every read of the parts (`Literal::to_tuple`, which
+            // drops the parent, segfaults after ~hundreds of calls).  Keep
+            // `tuple` alive until all `to_vec` copies are done.
+            let mut tuple = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = tuple.decompose_tuple().context("untupling result")?;
+            if parts.len() != 4 {
+                bail!("ensemble artifact returned {} outputs, expected 4", parts.len());
+            }
+            let maj = parts[0].to_vec::<i32>().context("majority output")?;
+            let frac = parts[1].to_vec::<f32>().context("vote_frac output")?;
+            let score = parts[2].to_vec::<f32>().context("mean_score output")?;
+            for i in 0..chunk {
+                out.push(TierOutput {
+                    majority: maj[i] as u32,
+                    vote_frac: frac[i],
+                    mean_score: score[i],
+                });
+            }
+            if want_logits {
+                let lg = parts[3].to_vec::<f32>().context("logits output")?;
+                // chunk logits are (k, bucket, classes); scatter the real
+                // rows into the global (k, n, classes) buffer.
+                for m in 0..self.k {
+                    for i in 0..chunk {
+                        let src = (m * bucket + i) * self.classes;
+                        let dst = (m * n + start + i) * self.classes;
+                        logits_all[dst..dst + self.classes]
+                            .copy_from_slice(&lg[src..src + self.classes]);
+                    }
+                }
+            }
+            drop(parts);
+            drop(tuple);
+            start += chunk;
+        }
+        Ok((out, logits_all))
+    }
+
+    /// Run the single-model artifact (member 0).
+    pub fn run_single(&self, features: &[f32], n: usize) -> Result<Vec<SingleOutput>> {
+        if self.variant != Variant::Single {
+            bail!("run_single() on an Ensemble-variant executable");
+        }
+        check_features(features, n, self.dim)?;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let chunk = self.next_chunk(n - start);
+            let bucket = self.pick_bucket(chunk);
+            let rows = &features[start * self.dim..(start + chunk) * self.dim];
+            let padded = pad_rows(rows, chunk, bucket, self.dim);
+            let input = self.engine.upload_f32(&padded, &[bucket, self.dim])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&input];
+            args.extend(self.inner.weights.iter());
+            let exe = &self.inner.buckets[&bucket];
+            let result = exe.execute_b(&args)?;
+            // SOUNDNESS: parent literal must outlive the decomposed parts
+            // (see run_impl).
+            let mut tuple = result[0][0].to_literal_sync()?;
+            let parts = tuple.decompose_tuple()?;
+            if parts.len() != 3 {
+                bail!("single artifact returned {} outputs, expected 3", parts.len());
+            }
+            let pred = parts[0].to_vec::<i32>()?;
+            let conf = parts[1].to_vec::<f32>()?;
+            for i in 0..chunk {
+                out.push(SingleOutput { pred: pred[i] as u32, confidence: conf[i] });
+            }
+            drop(parts);
+            drop(tuple);
+            start += chunk;
+        }
+        Ok(out)
+    }
+}
+
+fn check_features(features: &[f32], n: usize, dim: usize) -> Result<()> {
+    if features.len() != n * dim {
+        bail!(
+            "feature buffer has {} floats, expected {} ({} rows x {} dim)",
+            features.len(),
+            n * dim,
+            n,
+            dim
+        );
+    }
+    if n == 0 {
+        bail!("empty batch");
+    }
+    Ok(())
+}
+
+/// Pad `rows` (chunk x dim) up to `bucket` rows by repeating the last row
+/// (repeats keep the agreement kernel's numerics in-distribution, unlike
+/// zero rows).
+fn pad_rows(rows: &[f32], chunk: usize, bucket: usize, dim: usize) -> Vec<f32> {
+    let mut padded = Vec::with_capacity(bucket * dim);
+    padded.extend_from_slice(rows);
+    let last = &rows[(chunk - 1) * dim..chunk * dim];
+    for _ in chunk..bucket {
+        padded.extend_from_slice(last);
+    }
+    padded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_repeats_last() {
+        let rows = vec![1.0, 2.0, 3.0, 4.0]; // 2 rows x 2 dim
+        let p = pad_rows(&rows, 2, 4, 2);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn check_features_validates() {
+        assert!(check_features(&[0.0; 6], 3, 2).is_ok());
+        assert!(check_features(&[0.0; 5], 3, 2).is_err());
+        assert!(check_features(&[], 0, 2).is_err());
+    }
+}

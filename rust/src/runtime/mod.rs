@@ -1,0 +1,5 @@
+//! PJRT runtime: engine (client + HLO loading) and bucketed tier
+//! executables bound to their uploaded weights.
+
+pub mod engine;
+pub mod executable;

@@ -1,0 +1,144 @@
+//! Line-delimited-JSON TCP serving front end.
+//!
+//! Protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"id": 1, "features": [0.1, -0.2, ...]}
+//! <- {"id": 1, "prediction": 3, "exit_tier": 1, "latency_s": 0.0021,
+//!     "scores": [0.67]}
+//! -> {"cmd": "metrics"}
+//! <- {"metrics": {"requests_submitted": "42", ...}}
+//! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
+//! ```
+//!
+//! Built on std TCP + threads (no hyper/tokio offline); each connection
+//! gets a handler thread, requests flow through the shared Pipeline's
+//! dynamic batcher, so concurrent clients batch together.
+
+pub mod proto;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::Pipeline;
+use proto::{parse_request_line, render_error, render_metrics, render_verdict};
+
+/// Serve forever (until a client sends `{"cmd": "shutdown"}`).
+pub fn serve(pipeline: Arc<Pipeline>, port: u16) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true)?;
+    let mut handlers = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                stream.set_nonblocking(false)?;
+                // line-RPC: Nagle + delayed-ACK adds ~40-90ms per turn
+                stream.set_nodelay(true)?;
+                let pipeline = Arc::clone(&pipeline);
+                let stop = Arc::clone(&stop);
+                handlers.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, pipeline, stop);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    pipeline: Arc<Pipeline>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match parse_request_line(trimmed) {
+            Ok(proto::Incoming::Infer(request)) => {
+                let reply = match pipeline.infer(request) {
+                    Ok(verdict) => render_verdict(&verdict),
+                    Err(e) => render_error(&format!("{e:#}")),
+                };
+                writeln!(writer, "{reply}")?;
+            }
+            Ok(proto::Incoming::Metrics) => {
+                writeln!(writer, "{}", render_metrics(pipeline.metrics()))?;
+            }
+            Ok(proto::Incoming::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                writeln!(writer, "{}", r#"{"ok":true,"shutdown":true}"#)?;
+                return Ok(());
+            }
+            Err(e) => {
+                writeln!(writer, "{}", render_error(&e))?;
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn roundtrip(&mut self, line: &str) -> Result<String> {
+        writeln!(self.writer, "{line}")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim().to_string())
+    }
+
+    /// Classify one feature vector; returns (prediction, exit_tier).
+    pub fn infer(&mut self, id: u64, features: &[f32]) -> Result<(u32, usize)> {
+        let feats = features
+            .iter()
+            .map(|f| format!("{f}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let reply =
+            self.roundtrip(&format!(r#"{{"id":{id},"features":[{feats}]}}"#))?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad reply {reply:?}: {e}"))?;
+        if let Some(err) = v.get("error").as_str() {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok((
+            v.req_f64("prediction")? as u32,
+            v.req_f64("exit_tier")? as usize,
+        ))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.roundtrip(r#"{"cmd":"shutdown"}"#)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,136 @@
+//! Wire protocol: line-JSON encode/decode for the serving front end.
+
+use crate::metrics::Metrics;
+use crate::types::{Request, Verdict};
+use crate::util::json::{Json, JsonObj};
+
+/// A parsed inbound line.
+#[derive(Debug)]
+pub enum Incoming {
+    Infer(Request),
+    Metrics,
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if let Some(cmd) = v.get("cmd").as_str() {
+        return match cmd {
+            "metrics" => Ok(Incoming::Metrics),
+            "shutdown" => Ok(Incoming::Shutdown),
+            other => Err(format!("unknown cmd {other:?}")),
+        };
+    }
+    let id = v
+        .get("id")
+        .as_u64()
+        .ok_or_else(|| "missing numeric 'id'".to_string())?;
+    let features: Vec<f32> = v
+        .get("features")
+        .as_arr()
+        .ok_or_else(|| "missing 'features' array".to_string())?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| "non-numeric feature".to_string())?;
+    if features.is_empty() {
+        return Err("empty features".to_string());
+    }
+    Ok(Incoming::Infer(Request { id, features, arrival_s: 0.0 }))
+}
+
+/// Render a verdict reply line.
+pub fn render_verdict(v: &Verdict) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("id", Json::num(v.request_id as f64));
+    obj.insert("prediction", Json::num(v.prediction as f64));
+    obj.insert("exit_tier", Json::num(v.exit_tier as f64));
+    obj.insert("latency_s", Json::num(v.latency_s));
+    obj.insert(
+        "scores",
+        Json::Arr(v.tier_scores.iter().map(|&s| Json::num(s as f64)).collect()),
+    );
+    Json::Obj(obj).to_string()
+}
+
+/// Render an error reply line.
+pub fn render_error(msg: &str) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("error", Json::str(msg));
+    Json::Obj(obj).to_string()
+}
+
+/// Render the metrics snapshot.
+pub fn render_metrics(metrics: &Metrics) -> String {
+    let mut inner = JsonObj::new();
+    for (name, value) in metrics.snapshot() {
+        inner.insert(name, Json::str(value));
+    }
+    let mut obj = JsonObj::new();
+    obj.insert("metrics", Json::Obj(inner));
+    Json::Obj(obj).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_infer_line() {
+        let inc = parse_request_line(r#"{"id": 7, "features": [1.5, -2.0]}"#).unwrap();
+        match inc {
+            Incoming::Infer(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.features, vec![1.5, -2.0]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parse_commands() {
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "metrics"}"#).unwrap(),
+            Incoming::Metrics
+        ));
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
+            Incoming::Shutdown
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_request_line("not json").is_err());
+        assert!(parse_request_line(r#"{"cmd": "nope"}"#).is_err());
+        assert!(parse_request_line(r#"{"id": 1}"#).is_err());
+        assert!(parse_request_line(r#"{"id": 1, "features": []}"#).is_err());
+        assert!(parse_request_line(r#"{"id": 1, "features": ["x"]}"#).is_err());
+        assert!(parse_request_line(r#"{"features": [1.0]}"#).is_err());
+    }
+
+    #[test]
+    fn verdict_roundtrips_through_json() {
+        let v = Verdict {
+            request_id: 3,
+            prediction: 9,
+            exit_tier: 2,
+            tier_scores: vec![0.33, 1.0],
+            latency_s: 0.004,
+        };
+        let line = render_verdict(&v);
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("id").as_u64(), Some(3));
+        assert_eq!(parsed.get("prediction").as_u64(), Some(9));
+        assert_eq!(parsed.get("exit_tier").as_u64(), Some(2));
+        assert_eq!(parsed.get("scores").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn error_line_shape() {
+        let line = render_error("boom \"x\"");
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("error").as_str(), Some("boom \"x\""));
+    }
+}

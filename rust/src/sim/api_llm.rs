@@ -1,0 +1,410 @@
+//! Simulated black-box LLM API endpoints (paper §5.2.3 substrate).
+//!
+//! We cannot call together.ai from this testbed, so we simulate the
+//! *interface* the routing policies see: `answer(prompt) -> (answer,
+//! tokens)` billed per token at Table 1 prices.  Each simulated model has
+//! a logistic accuracy-vs-difficulty curve calibrated so tier accuracies
+//! match the paper's tiers (8B-class ~ 65-75%, 70B-class ~ 80-88%,
+//! 405B ~ 88-93%, task-dependent), and a per-task token-count
+//! distribution (4-shot prompts; GSM8K's chain-of-thought answers are
+//! long, OVERRULING's yes/no short).
+//!
+//! Error correlation matters for voting: wrong models don't pick wrong
+//! answers independently -- plausible distractors attract everyone.  Each
+//! sample carries a shared distractor ranking; a wrong model picks the
+//! top distractor with probability `distractor_pull`, else a random one.
+//! This keeps ensemble agreement informative but imperfect, which is the
+//! regime ABC actually operates in (DESIGN.md substitution table).
+
+use crate::cost::api::{call_cost, ApiModel};
+use crate::util::rng::Rng;
+
+/// A generation task suite (stand-in for GSM8K / CoQA / OVERRULING /
+/// HEADLINES -- closed answer spaces per the paper's evaluation setup).
+#[derive(Debug, Clone)]
+pub struct LlmTask {
+    pub name: &'static str,
+    pub paper_dataset: &'static str,
+    /// Size of the (closed) answer space.
+    pub answer_space: usize,
+    pub n_samples: usize,
+    /// Difficulty Beta(a, b).
+    pub diff_a: f64,
+    pub diff_b: f64,
+    /// Mean tokens per call (4-shot prompt + completion).
+    pub tokens_mean: f64,
+    pub tokens_std: f64,
+    /// Per-tier base accuracy at mean difficulty, tiers 1..=3.
+    pub tier_base_acc: [f64; 3],
+    /// Chance a wrong answer lands on the sample's top shared distractor.
+    /// High for small answer spaces (plausible wrong answers coincide),
+    /// low for open numeric spaces like GSM8K where wrong chains of
+    /// thought rarely produce the same wrong number.
+    pub distractor_pull: f64,
+    /// Accuracy drop from difficulty (logistic slope).
+    pub diff_slope: f64,
+    pub seed: u64,
+}
+
+/// The four black-box tasks of Table 2.
+pub fn default_tasks() -> Vec<LlmTask> {
+    vec![
+        LlmTask {
+            name: "synth-gsm8k",
+            paper_dataset: "GSM8K",
+            answer_space: 1000,
+            n_samples: 1000,
+            diff_a: 2.2,
+            diff_b: 2.2,
+            tokens_mean: 620.0,
+            tokens_std: 140.0,
+            tier_base_acc: [0.84, 0.94, 0.97],
+            distractor_pull: 0.18,
+            diff_slope: 3.2,
+            seed: 7101,
+        },
+        LlmTask {
+            name: "synth-coqa",
+            paper_dataset: "CoQA",
+            answer_space: 48,
+            n_samples: 1000,
+            diff_a: 1.5,
+            diff_b: 3.0,
+            tokens_mean: 380.0,
+            tokens_std: 90.0,
+            tier_base_acc: [0.90, 0.96, 0.98],
+            distractor_pull: 0.35,
+            diff_slope: 4.0,
+            seed: 7102,
+        },
+        LlmTask {
+            name: "synth-overruling",
+            paper_dataset: "OVERRULING",
+            answer_space: 2,
+            n_samples: 800,
+            diff_a: 1.2,
+            diff_b: 3.5,
+            tokens_mean: 210.0,
+            tokens_std: 40.0,
+            tier_base_acc: [0.955, 0.985, 0.99],
+            distractor_pull: 0.5,
+            diff_slope: 3.2,
+            seed: 7103,
+        },
+        LlmTask {
+            name: "synth-headlines",
+            paper_dataset: "HEADLINES",
+            answer_space: 4,
+            n_samples: 1000,
+            diff_a: 1.3,
+            diff_b: 3.2,
+            tokens_mean: 150.0,
+            tokens_std: 30.0,
+            tier_base_acc: [0.92, 0.97, 0.985],
+            distractor_pull: 0.45,
+            diff_slope: 3.5,
+            seed: 7104,
+        },
+    ]
+}
+
+/// One test sample.
+#[derive(Debug, Clone)]
+pub struct LlmSample {
+    pub id: usize,
+    pub truth: u32,
+    pub difficulty: f64,
+    /// Shared distractor ranking (the "plausible wrong answers").
+    pub distractors: Vec<u32>,
+}
+
+/// Generate the deterministic sample set of a task.
+pub fn generate_samples(task: &LlmTask) -> Vec<LlmSample> {
+    let mut rng = Rng::new(task.seed);
+    (0..task.n_samples)
+        .map(|id| {
+            let truth = rng.below(task.answer_space) as u32;
+            let difficulty = rng.beta(task.diff_a, task.diff_b);
+            let n_distract = 3.min(task.answer_space - 1);
+            let mut distractors = Vec::with_capacity(n_distract);
+            while distractors.len() < n_distract {
+                let d = rng.below(task.answer_space) as u32;
+                if d != truth && !distractors.contains(&d) {
+                    distractors.push(d);
+                }
+            }
+            LlmSample { id, truth, difficulty, distractors }
+        })
+        .collect()
+}
+
+/// A simulated hosted model.
+#[derive(Debug, Clone)]
+pub struct LlmAgent {
+    pub model: ApiModel,
+    /// Accuracy on a MEAN-difficulty sample of the task.
+    pub base_acc: f64,
+    pub diff_slope: f64,
+    /// The task's mean difficulty (the logistic's centre).
+    pub mean_difficulty: f64,
+    /// Chance a wrong answer is the sample's top shared distractor.
+    pub distractor_pull: f64,
+    /// Small per-model skill jitter so same-tier models differ.
+    pub skill_delta: f64,
+}
+
+impl LlmAgent {
+    /// P(correct | difficulty) -- logistic in difficulty, centred at the
+    /// task's mean difficulty so `base_acc` IS the expected accuracy
+    /// (up to Jensen's inequality).
+    pub fn p_correct(&self, difficulty: f64) -> f64 {
+        let logit_base = logit(self.base_acc.clamp(1e-4, 1.0 - 1e-4)) + self.skill_delta;
+        sigmoid(logit_base - self.diff_slope * (difficulty - self.mean_difficulty))
+    }
+
+    /// One API call: returns (answer, billed tokens).
+    ///
+    /// `temperature` widens the answer distribution: at temp 0 the model
+    /// deterministically answers its modal answer for the sample; higher
+    /// temps re-sample correctness and distractor choice independently
+    /// (the MoT/AutoMix sampling knob).
+    pub fn answer(
+        &self,
+        sample: &LlmSample,
+        temperature: f64,
+        task: &LlmTask,
+        rng: &mut Rng,
+    ) -> (u32, u64) {
+        // Deterministic per-(model, sample) stream for the temp-0 modal
+        // answer; temperature mixes in call-level randomness.
+        let mut modal_rng = Rng::new(
+            (sample.id as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                ^ hash_name(self.model.name),
+        );
+        // Random-effects correctness model: the marginal P(correct) is
+        // p_correct(difficulty), but each (model, sample) pair carries a
+        // SYSTEMATIC shift eta -- the model either "gets" this problem or
+        // it doesn't.  Temp-0 answers are the modal draw; temp>0 draws
+        // are iid Bernoulli(p_eff) given eta, so MoT-style
+        // self-consistency amplifies p_eff toward 0 or 1 (consistently
+        // wrong stays wrong) instead of washing errors out.
+        let p = self.p_correct(sample.difficulty);
+        let eta = 1.2 * modal_rng.normal();
+        let p_eff = sigmoid(logit(p.clamp(1e-4, 1.0 - 1e-4)) + eta);
+        let draw = if temperature <= 0.0 { modal_rng.f64() } else { rng.f64() };
+        let answer = if draw < p_eff {
+            sample.truth
+        } else {
+            // wrong: pulled toward the shared distractor
+            let pick_rng: &mut Rng =
+                if temperature <= 0.0 { &mut modal_rng } else { &mut *rng };
+            if !sample.distractors.is_empty() && pick_rng.bool(self.distractor_pull) {
+                sample.distractors[0]
+            } else if !sample.distractors.is_empty() {
+                sample.distractors[pick_rng.below(sample.distractors.len())]
+            } else {
+                // binary task: the only wrong answer
+                (1 - sample.truth.min(1)) as u32
+            }
+        };
+        let tokens = (task.tokens_mean + task.tokens_std * rng.normal())
+            .max(20.0) as u64;
+        (answer, tokens)
+    }
+
+    /// Dollar cost of a call with `tokens` tokens.
+    pub fn cost(&self, tokens: u64) -> f64 {
+        call_cost(&self.model, tokens)
+    }
+}
+
+/// Build the Table 1 agent fleet for a task: 3 tier-1 agents, 3 tier-2
+/// agents, 1 tier-3 agent, accuracy-calibrated to the task.
+pub fn build_agents(task: &LlmTask) -> Vec<LlmAgent> {
+    let mut agents = Vec::new();
+    for m in crate::cost::api::table1_models() {
+        let base = task.tier_base_acc[m.tier - 1];
+        // same-tier models differ a little; cheaper model in tier = a bit weaker
+        let skill_delta = match m.name {
+            "LlaMA 3 8B Instruct Lite" => -0.25,
+            "Gemma 2 9B IT" => 0.10,
+            "Gemma 2 27B Instruct" => -0.10,
+            "Qwen 2 72B-Instruct" => 0.05,
+            _ => 0.0,
+        };
+        agents.push(LlmAgent {
+            model: m,
+            base_acc: base,
+            diff_slope: task.diff_slope,
+            mean_difficulty: task.diff_a / (task.diff_a + task.diff_b),
+            distractor_pull: task.distractor_pull,
+            skill_delta,
+        });
+    }
+    agents
+}
+
+/// Agents of one tier.
+pub fn tier_agents(agents: &[LlmAgent], tier: usize) -> Vec<&LlmAgent> {
+    agents.iter().filter(|a| a.model.tier == tier).collect()
+}
+
+/// The best single agent of a tier (highest effective accuracy) -- the
+/// paper gives the single-model baselines the best model per tier.
+pub fn best_of_tier(agents: &[LlmAgent], tier: usize) -> &LlmAgent {
+    tier_agents(agents, tier)
+        .into_iter()
+        .max_by(|a, b| {
+            a.p_correct(0.3)
+                .partial_cmp(&b.p_correct(0.3))
+                .unwrap()
+        })
+        .expect("tier has agents")
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn logit(p: f64) -> f64 {
+    (p / (1.0 - p)).ln()
+}
+
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> LlmTask {
+        default_tasks().remove(0)
+    }
+
+    #[test]
+    fn samples_deterministic() {
+        let t = task();
+        let a = generate_samples(&t);
+        let b = generate_samples(&t);
+        assert_eq!(a.len(), t.n_samples);
+        assert_eq!(a[17].truth, b[17].truth);
+        assert_eq!(a[17].distractors, b[17].distractors);
+        assert!(a.iter().all(|s| !s.distractors.contains(&s.truth)));
+    }
+
+    #[test]
+    fn accuracy_ladder_is_monotone() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let mut rng = Rng::new(1);
+        let mut accs = Vec::new();
+        for tier in 1..=3 {
+            let agent = best_of_tier(&agents, tier);
+            let hits = samples
+                .iter()
+                .filter(|s| agent.answer(s, 0.0, &t, &mut rng).0 == s.truth)
+                .count();
+            accs.push(hits as f64 / samples.len() as f64);
+        }
+        assert!(accs[0] < accs[1] && accs[1] < accs[2], "ladder {accs:?}");
+        assert!(accs[0] > 0.5, "tier1 sane: {accs:?}");
+        assert!(accs[2] > 0.85, "tier3 strong: {accs:?}");
+    }
+
+    #[test]
+    fn temp0_is_deterministic_per_model_sample() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        let (a1, _) = agents[0].answer(&samples[5], 0.0, &t, &mut r1);
+        let (a2, _) = agents[0].answer(&samples[5], 0.0, &t, &mut r2);
+        assert_eq!(a1, a2, "temp-0 answers are modal");
+    }
+
+    #[test]
+    fn same_tier_models_disagree_sometimes() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let t1 = tier_agents(&agents, 1);
+        let mut rng = Rng::new(2);
+        let mut disagreements = 0;
+        for s in &samples {
+            let answers: Vec<u32> =
+                t1.iter().map(|a| a.answer(s, 0.0, &t, &mut rng).0).collect();
+            if answers.iter().any(|&x| x != answers[0]) {
+                disagreements += 1;
+            }
+        }
+        let frac = disagreements as f64 / samples.len() as f64;
+        assert!(frac > 0.05 && frac < 0.8, "disagreement rate {frac}");
+    }
+
+    #[test]
+    fn disagreement_concentrates_on_hard_samples() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let t1 = tier_agents(&agents, 1);
+        let mut rng = Rng::new(3);
+        let (mut dis_easy, mut n_easy, mut dis_hard, mut n_hard) = (0, 0, 0, 0);
+        for s in &samples {
+            let answers: Vec<u32> =
+                t1.iter().map(|a| a.answer(s, 0.0, &t, &mut rng).0).collect();
+            let dis = answers.iter().any(|&x| x != answers[0]) as u32;
+            if s.difficulty < 0.3 {
+                dis_easy += dis;
+                n_easy += 1;
+            } else if s.difficulty > 0.7 {
+                dis_hard += dis;
+                n_hard += 1;
+            }
+        }
+        let easy = dis_easy as f64 / n_easy.max(1) as f64;
+        let hard = dis_hard as f64 / n_hard.max(1) as f64;
+        assert!(hard > easy + 0.2, "easy {easy} vs hard {hard}");
+    }
+
+    #[test]
+    fn tokens_billed_positive_and_priced() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let mut rng = Rng::new(4);
+        let (_, tokens) = agents[6].answer(&samples[0], 0.0, &t, &mut rng);
+        assert!(tokens >= 20);
+        let cost = agents[6].cost(tokens);
+        assert!(cost > 0.0);
+        // 405B at $5/Mtok: ~620 tokens ~ $0.003
+        assert!(cost < 0.02);
+    }
+
+    #[test]
+    fn temperature_adds_variance() {
+        let t = task();
+        let samples = generate_samples(&t);
+        let agents = build_agents(&t);
+        let mut rng = Rng::new(5);
+        // find a hard sample where temp-1 answers vary across calls
+        let mut varied = false;
+        for s in samples.iter().filter(|s| s.difficulty > 0.6).take(30) {
+            let answers: Vec<u32> =
+                (0..8).map(|_| agents[0].answer(s, 1.0, &t, &mut rng).0).collect();
+            if answers.iter().any(|&x| x != answers[0]) {
+                varied = true;
+                break;
+            }
+        }
+        assert!(varied, "temperature should induce answer variance");
+    }
+}

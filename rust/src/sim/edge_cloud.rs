@@ -1,0 +1,210 @@
+//! Discrete-event edge-to-cloud serving simulator (paper §5.2.1
+//! substrate, queueing-aware version of the analytic cost/comm model).
+//!
+//! The analytic model in `cost::comm` prices each request by its exit
+//! point; this simulator additionally models *contention*: the edge
+//! device is a single-server queue (a phone runs one ensemble at a
+//! time), the cloud a many-server queue, and the uplink adds the delay
+//! class.  It answers the deployment question the paper's §5.2.1 poses
+//! -- when does keeping traffic on the edge also help latency under
+//! load? -- and feeds the `edge_sim` ablation experiment.
+
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+/// Simulator parameters.
+#[derive(Debug, Clone)]
+pub struct EdgeCloudParams {
+    /// Mean edge (tier-1 ensemble) service time per request (s).
+    pub edge_service_s: f64,
+    /// Mean cloud (top tier) service time per request (s).
+    pub cloud_service_s: f64,
+    /// One-way uplink delay (the paper's delay classes) (s).
+    pub uplink_s: f64,
+    /// Number of parallel cloud servers.
+    pub cloud_servers: usize,
+    /// Fraction of requests the edge tier answers locally (exit frac).
+    pub edge_exit_frac: f64,
+    /// Request rate (req/s), Poisson arrivals.
+    pub rate: f64,
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+/// Aggregate simulation outcome.
+#[derive(Debug, Clone)]
+pub struct EdgeCloudReport {
+    pub mean_latency_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Mean time spent in queues (edge + cloud).
+    pub mean_queueing_s: f64,
+    /// Fraction answered at the edge.
+    pub edge_fraction: f64,
+    /// Edge server utilisation.
+    pub edge_utilisation: f64,
+}
+
+/// Simulate the ABC placement: every request runs the edge ensemble
+/// (single server, FIFO); deferred requests then cross the uplink and
+/// run on the cloud (c servers, FIFO).
+pub fn simulate_abc(p: &EdgeCloudParams) -> EdgeCloudReport {
+    let mut rng = Rng::new(p.seed);
+    let mut lat = Samples::new();
+    let mut queueing = Samples::new();
+    let mut edge_free_at = 0.0f64; // single edge server
+    let mut cloud_free_at = vec![0.0f64; p.cloud_servers.max(1)];
+    let mut edge_busy = 0.0;
+    let mut t_arrive = 0.0;
+    let mut edge_answered = 0usize;
+    for _ in 0..p.n_requests {
+        t_arrive += rng.exp(p.rate);
+        // --- edge stage (always runs: the deferral rule needs tier 1)
+        let edge_start = t_arrive.max(edge_free_at);
+        let edge_service = rng.exp(1.0 / p.edge_service_s.max(1e-12));
+        let edge_done = edge_start + edge_service;
+        edge_free_at = edge_done;
+        edge_busy += edge_service;
+        let mut wait = edge_start - t_arrive;
+        let done = if rng.bool(p.edge_exit_frac) {
+            edge_answered += 1;
+            edge_done
+        } else {
+            // --- defer: uplink, then cloud queue (earliest-free server)
+            let at_cloud = edge_done + p.uplink_s;
+            let (srv_idx, _) = cloud_free_at
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let start = at_cloud.max(cloud_free_at[srv_idx]);
+            wait += start - at_cloud;
+            let service = rng.exp(1.0 / p.cloud_service_s.max(1e-12));
+            cloud_free_at[srv_idx] = start + service;
+            start + service
+        };
+        lat.push(done - t_arrive);
+        queueing.push(wait);
+    }
+    let horizon = t_arrive.max(1e-9);
+    EdgeCloudReport {
+        mean_latency_s: lat.mean(),
+        p50_s: lat.p50(),
+        p99_s: lat.p99(),
+        mean_queueing_s: queueing.mean(),
+        edge_fraction: edge_answered as f64 / p.n_requests as f64,
+        edge_utilisation: (edge_busy / horizon).min(1.0),
+    }
+}
+
+/// Simulate the cloud-only baseline: every request crosses the uplink
+/// and runs on the cloud fleet.
+pub fn simulate_cloud_only(p: &EdgeCloudParams) -> EdgeCloudReport {
+    let mut rng = Rng::new(p.seed ^ 0x5151);
+    let mut lat = Samples::new();
+    let mut queueing = Samples::new();
+    let mut cloud_free_at = vec![0.0f64; p.cloud_servers.max(1)];
+    let mut t_arrive = 0.0;
+    for _ in 0..p.n_requests {
+        t_arrive += rng.exp(p.rate);
+        let at_cloud = t_arrive + p.uplink_s;
+        let (srv_idx, _) = cloud_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = at_cloud.max(cloud_free_at[srv_idx]);
+        let service = rng.exp(1.0 / p.cloud_service_s.max(1e-12));
+        cloud_free_at[srv_idx] = start + service;
+        lat.push(start + service - t_arrive);
+        queueing.push(start - at_cloud);
+    }
+    EdgeCloudReport {
+        mean_latency_s: lat.mean(),
+        p50_s: lat.p50(),
+        p99_s: lat.p99(),
+        mean_queueing_s: queueing.mean(),
+        edge_fraction: 0.0,
+        edge_utilisation: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> EdgeCloudParams {
+        EdgeCloudParams {
+            edge_service_s: 0.002,
+            cloud_service_s: 0.004,
+            uplink_s: 0.100,
+            cloud_servers: 8,
+            edge_exit_frac: 0.8,
+            rate: 50.0,
+            n_requests: 20_000,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn abc_beats_cloud_only_at_high_edge_exit() {
+        let p = base();
+        let abc = simulate_abc(&p);
+        let cloud = simulate_cloud_only(&p);
+        // 80% of requests skip the 100ms uplink entirely
+        assert!(abc.mean_latency_s < cloud.mean_latency_s / 3.0,
+            "abc {} vs cloud {}", abc.mean_latency_s, cloud.mean_latency_s);
+        assert!((abc.edge_fraction - 0.8).abs() < 0.02);
+    }
+
+    #[test]
+    fn cloud_only_latency_is_uplink_dominated() {
+        let p = base();
+        let cloud = simulate_cloud_only(&p);
+        assert!(cloud.mean_latency_s >= p.uplink_s);
+        assert!(cloud.mean_latency_s < p.uplink_s + 0.05);
+    }
+
+    #[test]
+    fn edge_saturation_degrades_abc() {
+        // push the single edge server past capacity: 1/0.002 = 500 rps max
+        let mut p = base();
+        p.rate = 600.0;
+        p.n_requests = 5_000;
+        let sat = simulate_abc(&p);
+        p.rate = 50.0;
+        let calm = simulate_abc(&p);
+        assert!(sat.mean_latency_s > 5.0 * calm.mean_latency_s,
+            "saturated {} vs calm {}", sat.mean_latency_s, calm.mean_latency_s);
+        assert!(sat.edge_utilisation > 0.95);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = base();
+        let a = simulate_abc(&p);
+        let b = simulate_abc(&p);
+        assert_eq!(a.mean_latency_s, b.mean_latency_s);
+        assert_eq!(a.p99_s, b.p99_s);
+    }
+
+    #[test]
+    fn zero_exit_fraction_worse_than_cloud_only() {
+        // edge tier that never answers = pure overhead
+        let mut p = base();
+        p.edge_exit_frac = 0.0;
+        let abc = simulate_abc(&p);
+        let cloud = simulate_cloud_only(&p);
+        assert!(abc.mean_latency_s >= cloud.mean_latency_s * 0.95);
+    }
+
+    #[test]
+    fn utilisation_scales_with_rate() {
+        let mut p = base();
+        p.rate = 25.0;
+        let lo = simulate_abc(&p);
+        p.rate = 250.0;
+        let hi = simulate_abc(&p);
+        assert!(hi.edge_utilisation > 2.0 * lo.edge_utilisation);
+    }
+}

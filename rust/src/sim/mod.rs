@@ -1,0 +1,5 @@
+//! Deployment-scenario simulators: edge-to-cloud networking and the
+//! black-box LLM API fleet (DESIGN.md substitution table).
+
+pub mod api_llm;
+pub mod edge_cloud;

@@ -1,0 +1,126 @@
+//! Core domain types shared across the coordinator, runtime, simulators
+//! and experiments.
+
+/// Identifies a cascade tier (1-based, matching the paper's Tier 1..n).
+pub type TierId = usize;
+
+/// A class label.
+pub type Label = u32;
+
+/// One inference request flowing through the serving stack.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Feature vector (the suite's `dim` floats).
+    pub features: Vec<f32>,
+    /// Arrival time in seconds since run start (workload-generator time).
+    pub arrival_s: f64,
+}
+
+/// The deferral decision a tier made for one sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Agreement reached: answer locally with the tier's prediction.
+    Accept,
+    /// Disagreement: defer to the next tier.
+    Defer,
+}
+
+/// Per-sample output of one tier's ensemble (what the AOT artifact
+/// returns, see python/compile/model.py tier_forward).
+#[derive(Debug, Clone, Copy)]
+pub struct TierOutput {
+    pub majority: Label,
+    /// Fraction of members voting for the majority label (Eq. 3 score).
+    pub vote_frac: f32,
+    /// Mean softmax score of the majority label across members (Eq. 4).
+    pub mean_score: f32,
+}
+
+/// Final cascade verdict for one sample.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub request_id: u64,
+    pub prediction: Label,
+    /// Tier that produced the answer (1-based).
+    pub exit_tier: TierId,
+    /// Scores observed at each visited tier, in order.
+    pub tier_scores: Vec<f32>,
+    /// End-to-end latency in seconds (serving paths; 0 for offline eval).
+    pub latency_s: f64,
+}
+
+/// Which agreement score drives deferral (paper Eq. 3 vs Eq. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleKind {
+    /// `vote(x; H^k) <= theta` defers (black-box friendly).
+    Vote,
+    /// `s(x; H^k) <= theta` defers (needs prediction scores).
+    MeanScore,
+}
+
+impl RuleKind {
+    pub fn score_of(&self, out: &TierOutput) -> f32 {
+        match self {
+            RuleKind::Vote => out.vote_frac,
+            RuleKind::MeanScore => out.mean_score,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleKind> {
+        match s {
+            "vote" => Some(RuleKind::Vote),
+            "score" | "mean_score" => Some(RuleKind::MeanScore),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::Vote => "vote",
+            RuleKind::MeanScore => "score",
+        }
+    }
+}
+
+/// Execution model for ensemble cost accounting (paper Eq. 1):
+/// `C(H^k) = c0 * k^(1-rho)`; rho = 1 fully parallel, rho = 0 sequential.
+#[derive(Debug, Clone, Copy)]
+pub struct Parallelism(pub f64);
+
+impl Parallelism {
+    pub const SEQUENTIAL: Parallelism = Parallelism(0.0);
+    pub const FULL: Parallelism = Parallelism(1.0);
+
+    /// Cost multiplier for a k-member ensemble relative to one member.
+    pub fn ensemble_factor(&self, k: usize) -> f64 {
+        (k as f64).powf(1.0 - self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_kind_selects_score() {
+        let out = TierOutput { majority: 3, vote_frac: 0.67, mean_score: 0.9 };
+        assert_eq!(RuleKind::Vote.score_of(&out), 0.67);
+        assert_eq!(RuleKind::MeanScore.score_of(&out), 0.9);
+    }
+
+    #[test]
+    fn rule_kind_parse() {
+        assert_eq!(RuleKind::parse("vote"), Some(RuleKind::Vote));
+        assert_eq!(RuleKind::parse("score"), Some(RuleKind::MeanScore));
+        assert_eq!(RuleKind::parse("zz"), None);
+        assert_eq!(RuleKind::Vote.name(), "vote");
+    }
+
+    #[test]
+    fn parallelism_ensemble_factor() {
+        assert!((Parallelism::FULL.ensemble_factor(5) - 1.0).abs() < 1e-12);
+        assert!((Parallelism::SEQUENTIAL.ensemble_factor(5) - 5.0).abs() < 1e-12);
+        assert!((Parallelism(0.5).ensemble_factor(4) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,211 @@
+//! Small CLI argument parser (the offline registry has no clap).
+//!
+//! Supports: positional args, `--flag`, `--key value`, `--key=value`,
+//! subcommand extraction, typed getters with defaults, and usage
+//! generation from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    Invalid(String, String),
+    #[error("unexpected argument {0:?}")]
+    Unexpected(String),
+}
+
+impl Args {
+    /// Parse a raw arg list (without argv[0]).
+    ///
+    /// Any `--name` followed by a token not starting with `--` is an
+    /// option with that value; `--name=value` works too; a `--name`
+    /// followed by another option (or end) is a boolean flag.
+    pub fn parse<I, S>(raw: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let raw: Vec<String> = raw.into_iter().map(Into::into).collect();
+        let mut positional = Vec::new();
+        let mut options: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    options
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Args { positional, options, flags }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument (the subcommand), plus the rest.
+    pub fn subcommand(&self) -> Option<(&str, Args)> {
+        let (first, rest) = self.positional.split_first()?;
+        Some((
+            first.as_str(),
+            Args {
+                positional: rest.to_vec(),
+                options: self.options.clone(),
+                flags: self.flags.clone(),
+            },
+        ))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .options
+                .get(name)
+                .map(|v| v.last().map(|s| s == "true").unwrap_or(false))
+                .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req_str(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.to_string()))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.to_string(), v.to_string())),
+        }
+    }
+
+    /// Comma-separated list option: `--suites a,b,c`.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace())
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = args("exp fig2 --out /tmp/x");
+        let (cmd, rest) = a.subcommand().unwrap();
+        assert_eq!(cmd, "exp");
+        assert_eq!(rest.positional(), &["fig2".to_string()]);
+        assert_eq!(rest.get("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = args("--a 1 --b=2 --c --d 3");
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.get("b"), Some("2"));
+        assert!(a.flag("c"));
+        assert_eq!(a.get("d"), Some("3"));
+        assert!(!a.flag("d"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args("--n 42 --x 2.5 --bad zz");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("x", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.usize_or("bad", 0).is_err());
+        assert!(a.req_str("nope").is_err());
+    }
+
+    #[test]
+    fn repeated_options_last_wins_get() {
+        let a = args("--k 1 --k 2");
+        assert_eq!(a.get("k"), Some("2"));
+        assert_eq!(a.get_all("k"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = args("--suites a,b , c");
+        assert_eq!(a.list_or("suites", &[]), vec!["a", "b"]);
+        let b = args("");
+        assert_eq!(b.list_or("suites", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch substrates: JSON, CLI parsing, PRNG, thread pool,
+//! statistics, tables, property testing (DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod minicheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,196 @@
+//! Fixed-size thread pool + scoped parallel map.
+//!
+//! The offline registry has no tokio/rayon; the coordinator's ensemble
+//! fan-out (the paper's rho ~ 1 parallel execution, §4.1) and the tier
+//! worker pools run on this instead.  Work items are boxed closures on an
+//! mpsc channel guarded by a mutex; `scope_map` provides the structured
+//! "run f over these items in parallel, collect results in order" shape
+//! the experiments use.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0, "pool size must be > 0");
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("abc-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, workers, size }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(4)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `f(item)` for every item, in parallel, returning results in
+    /// input order.  Panics in `f` are propagated as a panic here.
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, res) = rrx.recv().expect("worker result");
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                // A panicking job must not kill the worker: swallow it;
+                // scope_map re-raises on the caller side.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let items: Vec<usize> = (0..500).collect();
+        let out = pool.scope_map(items, |x| x * 2);
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u8> = pool.scope_map(Vec::<u8>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_map_parallelism_actually_happens() {
+        // 4 jobs of 50ms on 4 threads should finish well under 200ms.
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.scope_map(vec![(); 4], |_| {
+            std::thread::sleep(std::time::Duration::from_millis(50))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(170));
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn scope_map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        pool.scope_map(vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("ignored"));
+        let out = pool.scope_map(vec![5], |x| x + 1);
+        assert_eq!(out, vec![6]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,333 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading manifest: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("unsupported manifest format_version {0}")]
+    Version(u64),
+    #[error("manifest inconsistency: {0}")]
+    Inconsistent(String),
+}
+
+/// One cascade tier's metadata (ensemble of k models).
+#[derive(Debug, Clone)]
+pub struct TierEntry {
+    pub tier: usize,
+    pub k: usize,
+    pub hidden: Vec<usize>,
+    pub input_slice: usize,
+    /// Forward FLOPs of ONE member on one sample.
+    pub flops_per_sample_member: u64,
+    pub params_member: u64,
+    pub val_acc_members: Vec<f64>,
+    pub val_acc_ensemble: f64,
+    pub test_acc_members: Vec<f64>,
+    pub test_acc_ensemble: f64,
+    /// npz sidecar with w0, b0, w1, b1, ... arrays.
+    pub weights: PathBuf,
+    pub param_names: Vec<String>,
+    /// batch bucket -> HLO text path (ensemble + agreement artifact).
+    pub ensemble_hlo: BTreeMap<usize, PathBuf>,
+    /// batch bucket -> HLO text path (member-0 single-model artifact).
+    pub single_hlo: BTreeMap<usize, PathBuf>,
+}
+
+impl TierEntry {
+    /// Ensemble FLOPs per sample (k members).
+    pub fn flops_ensemble(&self) -> u64 {
+        self.flops_per_sample_member * self.k as u64
+    }
+}
+
+/// One benchmark suite with its data splits and tier ladder.
+#[derive(Debug, Clone)]
+pub struct SuiteEntry {
+    pub name: String,
+    pub paper_dataset: String,
+    pub classes: usize,
+    pub dim: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    /// split name -> dataset path (relative to artifacts root).
+    pub data: BTreeMap<String, PathBuf>,
+    pub tiers: Vec<TierEntry>,
+}
+
+impl SuiteEntry {
+    pub fn tier(&self, tier_id: usize) -> Option<&TierEntry> {
+        self.tiers.iter().find(|t| t.tier == tier_id)
+    }
+
+    /// The most expensive tier (the paper's h2 / best single model host).
+    pub fn top_tier(&self) -> &TierEntry {
+        self.tiers.last().expect("suite has tiers")
+    }
+}
+
+/// The whole artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub ensemble_buckets: Vec<usize>,
+    pub single_buckets: Vec<usize>,
+    pub suites: Vec<SuiteEntry>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json` and resolve all paths against root.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let version = v.req_f64("format_version")? as u64;
+        if version != 1 {
+            return Err(ManifestError::Version(version));
+        }
+        let buckets = |key: &str| -> Result<Vec<usize>, ManifestError> {
+            Ok(v.req_arr(key)?
+                .iter()
+                .filter_map(|b| b.as_usize())
+                .collect())
+        };
+        let mut suites = Vec::new();
+        for s in v.req_arr("suites")? {
+            suites.push(parse_suite(s)?);
+        }
+        let m = Manifest {
+            root,
+            ensemble_buckets: buckets("ensemble_buckets")?,
+            single_buckets: buckets("single_buckets")?,
+            suites,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn suite(&self, name: &str) -> Option<&SuiteEntry> {
+        self.suites.iter().find(|s| s.name == name)
+    }
+
+    pub fn suite_names(&self) -> Vec<&str> {
+        self.suites.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Absolute path of a manifest-relative path.
+    pub fn path(&self, rel: &Path) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    fn validate(&self) -> Result<(), ManifestError> {
+        for s in &self.suites {
+            if s.tiers.is_empty() {
+                return Err(ManifestError::Inconsistent(format!(
+                    "suite {} has no tiers",
+                    s.name
+                )));
+            }
+            let mut prev = 0usize;
+            for t in &s.tiers {
+                if t.tier <= prev {
+                    return Err(ManifestError::Inconsistent(format!(
+                        "suite {}: tiers not strictly increasing",
+                        s.name
+                    )));
+                }
+                prev = t.tier;
+                if t.val_acc_members.len() != t.k {
+                    return Err(ManifestError::Inconsistent(format!(
+                        "suite {} tier {}: {} member accs for k={}",
+                        s.name,
+                        t.tier,
+                        t.val_acc_members.len(),
+                        t.k
+                    )));
+                }
+                for bucket in &self.ensemble_buckets {
+                    if !t.ensemble_hlo.contains_key(bucket) {
+                        return Err(ManifestError::Inconsistent(format!(
+                            "suite {} tier {}: missing ensemble bucket {}",
+                            s.name, t.tier, bucket
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_suite(s: &Json) -> Result<SuiteEntry, ManifestError> {
+    let mut data = BTreeMap::new();
+    for (split, p) in s.req_obj("data")?.iter() {
+        let path = p.as_str().ok_or(crate::util::json::JsonError::Type {
+            expected: "string",
+            path: format!("data.{split}"),
+        })?;
+        data.insert(split.clone(), PathBuf::from(path));
+    }
+    let mut tiers = Vec::new();
+    for t in s.req_arr("tiers")? {
+        tiers.push(parse_tier(t)?);
+    }
+    Ok(SuiteEntry {
+        name: s.req_str("name")?.to_string(),
+        paper_dataset: s.req_str("paper_dataset")?.to_string(),
+        classes: s.req_usize("classes")?,
+        dim: s.req_usize("dim")?,
+        n_train: s.req_usize("n_train")?,
+        n_val: s.req_usize("n_val")?,
+        n_test: s.req_usize("n_test")?,
+        data,
+        tiers,
+    })
+}
+
+fn parse_tier(t: &Json) -> Result<TierEntry, ManifestError> {
+    let f64s = |key: &str| -> Result<Vec<f64>, ManifestError> {
+        Ok(t.req_arr(key)?.iter().filter_map(|x| x.as_f64()).collect())
+    };
+    let hlo_map = |key: &str| -> Result<BTreeMap<usize, PathBuf>, ManifestError> {
+        let mut out = BTreeMap::new();
+        for (bucket, p) in t.req_obj(key)?.iter() {
+            let b: usize = bucket.parse().map_err(|_| {
+                ManifestError::Inconsistent(format!("bad bucket key {bucket:?}"))
+            })?;
+            out.insert(
+                b,
+                PathBuf::from(p.as_str().ok_or(
+                    crate::util::json::JsonError::Type {
+                        expected: "string",
+                        path: format!("{key}.{bucket}"),
+                    },
+                )?),
+            );
+        }
+        Ok(out)
+    };
+    Ok(TierEntry {
+        tier: t.req_usize("tier")?,
+        k: t.req_usize("k")?,
+        hidden: t
+            .req_arr("hidden")?
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect(),
+        input_slice: t.req_usize("input_slice")?,
+        flops_per_sample_member: t.req_f64("flops_per_sample_member")? as u64,
+        params_member: t.req_f64("params_member")? as u64,
+        val_acc_members: f64s("val_acc_members")?,
+        val_acc_ensemble: t.req_f64("val_acc_ensemble")?,
+        test_acc_members: f64s("test_acc_members")?,
+        test_acc_ensemble: t.req_f64("test_acc_ensemble")?,
+        weights: PathBuf::from(t.req_str("weights")?),
+        param_names: t
+            .req_arr("param_names")?
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect(),
+        ensemble_hlo: hlo_map("ensemble_hlo")?,
+        single_hlo: hlo_map("single_hlo")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "created_unix": 1,
+      "jax_version": "0.8.2",
+      "ensemble_buckets": [1, 8],
+      "single_buckets": [8],
+      "suites": [{
+        "name": "s1", "paper_dataset": "P", "classes": 3, "dim": 4,
+        "n_train": 10, "n_val": 5, "n_test": 5,
+        "data": {"train": "data/a.abds", "val": "data/b.abds", "test": "data/c.abds"},
+        "tiers": [{
+          "tier": 1, "k": 2, "hidden": [8], "input_slice": 2,
+          "flops_per_sample_member": 100, "params_member": 50,
+          "val_acc_members": [0.5, 0.6], "val_acc_ensemble": 0.62,
+          "test_acc_members": [0.5, 0.55], "test_acc_ensemble": 0.6,
+          "weights": "weights/s1_t1.npz",
+          "param_names": ["w0", "b0", "w1", "b1"],
+          "ensemble_hlo": {"1": "hlo/e1.txt", "8": "hlo/e8.txt"},
+          "single_hlo": {"8": "hlo/s8.txt"}
+        }]
+      }]
+    }"#;
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join(format!("mani-{}", std::process::id()));
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(m.ensemble_buckets, vec![1, 8]);
+        assert_eq!(m.suite_names(), vec!["s1"]);
+        let s = m.suite("s1").unwrap();
+        assert_eq!(s.classes, 3);
+        let t = s.tier(1).unwrap();
+        assert_eq!(t.k, 2);
+        assert_eq!(t.flops_ensemble(), 200);
+        assert_eq!(t.ensemble_hlo[&8], PathBuf::from("hlo/e8.txt"));
+        assert_eq!(s.top_tier().tier, 1);
+        assert!(m.suite("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join(format!("mani2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            SAMPLE.replace("\"format_version\": 1", "\"format_version\": 9"),
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, ManifestError::Version(9)));
+    }
+
+    #[test]
+    fn rejects_member_acc_mismatch() {
+        let dir = std::env::temp_dir().join(format!("mani3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            SAMPLE.replace("[0.5, 0.6]", "[0.5]"),
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, ManifestError::Inconsistent(_)));
+    }
+
+    #[test]
+    fn rejects_missing_bucket() {
+        let dir = std::env::temp_dir().join(format!("mani4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            SAMPLE.replace("\"1\": \"hlo/e1.txt\", ", ""),
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, ManifestError::Inconsistent(_)));
+    }
+}

@@ -1,0 +1,4 @@
+//! Model zoo: manifest parsing + live registry of loaded tier executables.
+
+pub mod manifest;
+pub mod registry;

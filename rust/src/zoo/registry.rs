@@ -1,0 +1,91 @@
+//! Model registry: loads and owns a suite's full tier ladder as live
+//! PJRT executables (the Rust-side "model zoo").
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::format::{self, Dataset};
+use crate::runtime::engine::Engine;
+use crate::runtime::executable::{TierExecutable, Variant};
+use crate::zoo::manifest::{Manifest, SuiteEntry};
+
+/// A fully loaded suite: datasets on the host, tier executables on the
+/// PJRT device, ready for the coordinator.
+pub struct SuiteRuntime {
+    pub suite: SuiteEntry,
+    /// Ensemble (ABC) executables, ascending tier order.
+    pub tiers: Vec<Arc<TierExecutable>>,
+    /// Single-model (baseline) executables, ascending tier order.
+    pub singles: Vec<Arc<TierExecutable>>,
+}
+
+impl SuiteRuntime {
+    /// Load every tier of `suite_name`.  `with_singles` also loads the
+    /// member-0 baseline artifacts (needed by WoC / single-model runs).
+    pub fn load(
+        engine: Arc<Engine>,
+        manifest: &Manifest,
+        suite_name: &str,
+        with_singles: bool,
+    ) -> Result<SuiteRuntime> {
+        let suite = manifest
+            .suite(suite_name)
+            .with_context(|| format!("suite {suite_name} not in manifest"))?
+            .clone();
+        let mut tiers = Vec::new();
+        let mut singles = Vec::new();
+        for t in &suite.tiers {
+            tiers.push(Arc::new(TierExecutable::load(
+                Arc::clone(&engine),
+                manifest,
+                suite.dim,
+                suite.classes,
+                t,
+                Variant::Ensemble,
+            )?));
+            if with_singles {
+                singles.push(Arc::new(TierExecutable::load(
+                    Arc::clone(&engine),
+                    manifest,
+                    suite.dim,
+                    suite.classes,
+                    t,
+                    Variant::Single,
+                )?));
+            }
+        }
+        Ok(SuiteRuntime { suite, tiers, singles })
+    }
+
+    /// Load a dataset split of this suite from the artifacts directory.
+    pub fn dataset(&self, manifest: &Manifest, split: &str) -> Result<Dataset> {
+        let rel = self
+            .suite
+            .data
+            .get(split)
+            .with_context(|| format!("split {split} not in manifest"))?;
+        let ds = format::read_file(manifest.path(rel))
+            .with_context(|| format!("reading {split} split"))?;
+        if ds.dim != self.suite.dim {
+            bail!(
+                "dataset dim {} != suite dim {} for {split}",
+                ds.dim,
+                self.suite.dim
+            );
+        }
+        Ok(ds)
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tier(&self, tier_id: usize) -> Option<&Arc<TierExecutable>> {
+        self.tiers.iter().find(|t| t.tier == tier_id)
+    }
+
+    pub fn single(&self, tier_id: usize) -> Option<&Arc<TierExecutable>> {
+        self.singles.iter().find(|t| t.tier == tier_id)
+    }
+}

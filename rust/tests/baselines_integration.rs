@@ -1,0 +1,152 @@
+//! Integration: baselines over real artifacts (WoC) and the API-LLM
+//! simulator (FrugalGPT / AutoMix / MoT), checking the paper's headline
+//! comparative shapes.
+
+use std::sync::Arc;
+
+use abc_serve::baselines::api_policies::{
+    run_abc_voting, run_automix, run_frugal_gpt, run_mot, run_single_model,
+    AutoMixKind,
+};
+use abc_serve::baselines::woc;
+use abc_serve::calib;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::sim::api_llm::{best_of_tier, build_agents, default_tasks, generate_samples};
+use abc_serve::types::RuleKind;
+use abc_serve::util::rng::Rng;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(root).unwrap())
+}
+
+#[test]
+fn woc_runs_and_abc_is_pareto_competitive() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = Arc::new(SuiteRuntime::load(engine, &m, "synth-cifar10", true).unwrap());
+    let val = rt.dataset(&m, "val").unwrap();
+    let test = rt.dataset(&m, "test").unwrap();
+    let test = test.slice(0, 4000);
+    let flops: Vec<f64> = rt
+        .suite
+        .tiers
+        .iter()
+        .map(|t| t.flops_per_sample_member as f64)
+        .collect();
+    let woc_rep = woc::tune_and_run(&rt.singles, &val, &test, &flops).unwrap();
+    assert!(woc_rep.accuracy > 0.5, "WoC sane accuracy");
+    let total: f64 = woc_rep.exit_fractions.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9);
+
+    // ABC with the same ladder
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05).unwrap();
+    let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+    let (_, abc) = cascade.evaluate(&test.x, &test.y, test.n).unwrap();
+    let mut reach = 1.0;
+    let mut abc_flops = 0.0;
+    for (t, &e) in rt.suite.tiers.iter().zip(&abc.exit_fractions) {
+        abc_flops += reach * t.flops_per_sample_member as f64;
+        reach -= e;
+    }
+    // Fig. 2 shape: ABC at least matches WoC accuracy, or is cheaper at
+    // comparable accuracy.
+    assert!(
+        abc.accuracy >= woc_rep.accuracy - 0.01
+            || abc_flops < woc_rep.mean_flops,
+        "ABC (acc {:.4}, flops {:.2e}) dominated by WoC (acc {:.4}, flops {:.2e})",
+        abc.accuracy,
+        abc_flops,
+        woc_rep.accuracy,
+        woc_rep.mean_flops
+    );
+}
+
+#[test]
+fn fig5_shape_abc_pareto_dominates_baselines() {
+    // The paper's Fig. 5 claim: ABC "matches their accuracy at
+    // significantly lower costs in all tasks".  Concretely: for EVERY
+    // baseline, some ABC operating point (majority or unanimity voting)
+    // costs no more and is within 1.5 accuracy points (usually above).
+    for task in default_tasks() {
+        let samples = generate_samples(&task);
+        let agents = build_agents(&task);
+        let tiers = [1usize, 2, 3];
+        let abc_maj =
+            run_abc_voting(&task, &samples, &agents, &tiers, 0.34, &mut Rng::new(11));
+        let abc_unan =
+            run_abc_voting(&task, &samples, &agents, &tiers, 0.67, &mut Rng::new(16));
+        let baselines = vec![
+            run_frugal_gpt(&task, &samples, &agents, &tiers, 0.6, &mut Rng::new(12)),
+            run_automix(&task, &samples, &agents, &tiers, AutoMixKind::Threshold, &mut Rng::new(13)),
+            run_automix(&task, &samples, &agents, &tiers, AutoMixKind::Pomdp, &mut Rng::new(14)),
+            run_mot(&task, &samples, &agents, &tiers, 5, 0.8, &mut Rng::new(15)),
+        ];
+        for b in &baselines {
+            let covered = [&abc_maj, &abc_unan].iter().any(|abc| {
+                abc.usd_per_query <= b.usd_per_query * 1.02
+                    && abc.accuracy >= b.accuracy - 0.015
+            });
+            assert!(
+                covered,
+                "{}: {} (acc {:.3}, ${:.5}) not covered by ABC points \
+                 maj(acc {:.3}, ${:.5}) / unan(acc {:.3}, ${:.5})",
+                task.name,
+                b.policy,
+                b.accuracy,
+                b.usd_per_query,
+                abc_maj.accuracy,
+                abc_maj.usd_per_query,
+                abc_unan.accuracy,
+                abc_unan.usd_per_query
+            );
+        }
+    }
+}
+
+#[test]
+fn fig5_shape_cost_reduction_vs_gpt4_class_model() {
+    // Paper: 2-25x reduction in average price vs always using the top
+    // model.  Check the 405B-only policy costs several times ABC.
+    let task = &default_tasks()[0]; // gsm8k: long generations
+    let samples = generate_samples(task);
+    let agents = build_agents(task);
+    let abc = run_abc_voting(task, &samples, &agents, &[1, 2, 3], 0.34, &mut Rng::new(21));
+    let big = run_single_model(task, &samples, best_of_tier(&agents, 3), &mut Rng::new(22));
+    let reduction = big.usd_per_query / abc.usd_per_query;
+    assert!(
+        reduction > 2.0,
+        "expected >2x cost reduction vs 405B-only, got {reduction:.2}x"
+    );
+    assert!(abc.accuracy >= big.accuracy - 0.02);
+}
+
+#[test]
+fn automix_always_pricier_than_abc() {
+    // Paper App. D.2: "it can be guaranteed that ABC will always be
+    // cheaper to use than AutoMix".
+    for task in default_tasks() {
+        let samples = generate_samples(&task);
+        let agents = build_agents(&task);
+        for kind in [AutoMixKind::Threshold, AutoMixKind::Pomdp] {
+            let abc =
+                run_abc_voting(&task, &samples, &agents, &[1, 2, 3], 0.34, &mut Rng::new(31));
+            let am = run_automix(&task, &samples, &agents, &[1, 2, 3], kind, &mut Rng::new(32));
+            assert!(
+                abc.usd_per_query < am.usd_per_query,
+                "{}: ABC {:.5} vs {} {:.5}",
+                task.name,
+                abc.usd_per_query,
+                am.policy,
+                am.usd_per_query
+            );
+        }
+    }
+}

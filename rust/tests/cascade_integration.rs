@@ -1,0 +1,178 @@
+//! Integration: the full calibrated cascade over real artifacts.
+//!
+//! The core paper claims as executable assertions:
+//! * drop-in property (Prop 4.1.1): cascade accuracy >= top-tier-ensemble
+//!   accuracy - epsilon (we use the manifest's recorded accuracy);
+//! * agreement kernel (L1, on-device) == host twin (coordinator::agreement);
+//! * deferral monotonicity in theta;
+//! * exit fractions form a distribution and tier-1 handles a nontrivial
+//!   share on an easy suite.
+
+use std::sync::Arc;
+
+use abc_serve::calib;
+use abc_serve::coordinator::agreement::agree_logits;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::deferral::{DeferralPolicy, TierRule};
+use abc_serve::runtime::engine::Engine;
+use abc_serve::types::RuleKind;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn setup(suite: &str) -> Option<(Manifest, Arc<SuiteRuntime>)> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(root).unwrap();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false).unwrap());
+    Some((manifest, rt))
+}
+
+#[test]
+fn drop_in_property_holds() {
+    let Some((manifest, rt)) = setup("synth-cifar10") else { return };
+    let val = rt.dataset(&manifest, "val").unwrap();
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let epsilon = 0.05;
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, epsilon).unwrap();
+    let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+    let (_, report) = cascade.evaluate(&test.x, &test.y, test.n).unwrap();
+
+    let top_acc = rt.suite.top_tier().test_acc_ensemble;
+    // Prop 4.1: R(cascade) <= R(top) + eps  (+ binomial slack on 10k samples)
+    assert!(
+        report.accuracy >= top_acc - epsilon - 0.02,
+        "cascade acc {:.4} vs top tier {top_acc:.4} (eps {epsilon})",
+        report.accuracy
+    );
+    // exit fractions are a distribution
+    let total: f64 = report.exit_fractions.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9);
+    // the cheap tier must matter (else the suite is miscalibrated)
+    assert!(
+        report.exit_fractions[0] > 0.3,
+        "tier-1 exit fraction too small: {:?}",
+        report.exit_fractions
+    );
+}
+
+#[test]
+fn cascade_saves_flops_vs_top_tier() {
+    let Some((manifest, rt)) = setup("synth-sst2") else { return };
+    let val = rt.dataset(&manifest, "val").unwrap();
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05).unwrap();
+    let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+    let (_, report) = cascade.evaluate(&test.x, &test.y, test.n).unwrap();
+    // mean per-sample member-FLOPs under rho=1
+    let mut reach = 1.0;
+    let mut flops = 0.0;
+    for (tier, &exit) in rt.suite.tiers.iter().zip(&report.exit_fractions) {
+        flops += reach * tier.flops_per_sample_member as f64;
+        reach -= exit;
+    }
+    let top = rt.suite.top_tier().flops_per_sample_member as f64;
+    assert!(
+        flops < top,
+        "cascade mean flops {flops:.0} not below top tier {top:.0} \
+         (exits {:?})",
+        report.exit_fractions
+    );
+}
+
+#[test]
+fn kernel_agreement_matches_host_twin() {
+    let Some((manifest, rt)) = setup("synth-swag") else { return };
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let tier = &rt.tiers[2];
+    let n = 64;
+    let (outs, logits) = tier
+        .run_with_logits(&test.x[..n * test.dim], n)
+        .unwrap();
+    let c = rt.suite.classes;
+    let k = tier.k;
+    let mut sample_logits = vec![0.0f32; k * c];
+    for i in 0..n {
+        for m in 0..k {
+            let off = (m * n + i) * c;
+            sample_logits[m * c..(m + 1) * c].copy_from_slice(&logits[off..off + c]);
+        }
+        let host = agree_logits(&sample_logits, k, c);
+        assert_eq!(host.majority, outs[i].majority, "sample {i} majority");
+        assert!((host.vote_frac - outs[i].vote_frac).abs() < 1e-5);
+        assert!((host.mean_score - outs[i].mean_score).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn deferral_monotone_in_theta() {
+    let Some((manifest, rt)) = setup("synth-twitterfin") else { return };
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let test = test.slice(0, 800);
+    let mut last_exit1 = 2.0;
+    for theta in [0.0f32, 0.5, 0.8, 0.95, 1.1] {
+        let policy = DeferralPolicy::new(
+            vec![TierRule { rule: RuleKind::MeanScore, theta }; rt.tiers.len() - 1],
+            rt.tiers.len(),
+        );
+        let cascade = Cascade::new(rt.tiers.clone(), policy);
+        let (_, report) = cascade.evaluate(&test.x, &test.y, test.n).unwrap();
+        assert!(
+            report.exit_fractions[0] <= last_exit1 + 1e-9,
+            "tier-1 exits must shrink as theta grows"
+        );
+        last_exit1 = report.exit_fractions[0];
+    }
+    // theta > 1 defers everything
+    assert_eq!(last_exit1, 0.0);
+}
+
+#[test]
+fn accuracy_improvement_shows_up_somewhere() {
+    // Paper §5.1.1: ABC often IMPROVES accuracy over the best single
+    // model.  Check the cascade matches-or-beats the top tier's member-0
+    // single model on at least half the suites.
+    let Some((manifest, _)) = setup("synth-cifar10") else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let mut wins = 0;
+    let mut total = 0;
+    for suite in ["synth-cifar10", "synth-sst2", "synth-twitterfin", "synth-swag"] {
+        let rt =
+            Arc::new(SuiteRuntime::load(Arc::clone(&engine), &manifest, suite, true).unwrap());
+        let val = rt.dataset(&manifest, "val").unwrap();
+        let test = rt.dataset(&manifest, "test").unwrap();
+        let cal =
+            calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05).unwrap();
+        let cascade = Cascade::new(rt.tiers.clone(), cal.policy.clone());
+        let (_, report) = cascade.evaluate(&test.x, &test.y, test.n).unwrap();
+        let outs = rt.singles.last().unwrap().run_single(&test.x, test.n).unwrap();
+        let single_acc = outs
+            .iter()
+            .zip(&test.y)
+            .filter(|(o, &y)| o.pred == y)
+            .count() as f64
+            / test.n as f64;
+        total += 1;
+        if report.accuracy >= single_acc {
+            wins += 1;
+        }
+    }
+    assert!(wins * 2 >= total, "ABC beat the single model on only {wins}/{total} suites");
+}
+
+#[test]
+fn calibration_selection_rates_monotone_in_epsilon() {
+    let Some((manifest, rt)) = setup("synth-imagenet") else { return };
+    let val = rt.dataset(&manifest, "val").unwrap();
+    let mut last = -1.0;
+    for eps in [0.01, 0.03, 0.05, 0.10] {
+        let cal =
+            calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 200, eps).unwrap();
+        let sel = cal.estimates[0].selection_rate;
+        assert!(sel >= last, "selection not monotone in epsilon");
+        last = sel;
+    }
+}

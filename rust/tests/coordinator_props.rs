@@ -1,0 +1,284 @@
+//! Property tests (minicheck) on coordinator invariants -- no PJRT
+//! needed: these exercise the pure logic (agreement, deferral, batcher,
+//! cost model, calibration) under randomized inputs with shrinking.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use abc_serve::calib::threshold::{estimate_theta, evaluate_theta, CalPoint};
+use abc_serve::coordinator::agreement::{agree_logits, agree_votes};
+use abc_serve::coordinator::batcher::{Batcher, BatcherConfig, Item};
+use abc_serve::cost::model::{
+    cost_from_exits, two_level_relative_cost, worst_case_bound,
+};
+use abc_serve::prop_assert;
+use abc_serve::types::Parallelism;
+use abc_serve::util::minicheck::check;
+use abc_serve::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// agreement
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_agreement_majority_is_a_member_prediction() {
+    check(
+        101,
+        300,
+        |r| {
+            let k = 1 + r.below(6);
+            let c = 2 + r.below(10);
+            let logits: Vec<f64> =
+                (0..k * c).map(|_| r.f64() * 8.0 - 4.0).collect();
+            (vec![k, c], logits)
+        },
+        |(kc, logits)| {
+            let (k, c) = (kc[0], kc[1]);
+            let lg: Vec<f32> = logits.iter().map(|&x| x as f32).collect();
+            let out = agree_logits(&lg, k, c);
+            // the majority label must be some member's argmax
+            let mut found = false;
+            for m in 0..k {
+                let row = &lg[m * c..(m + 1) * c];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if argmax as u32 == out.majority {
+                    found = true;
+                }
+            }
+            prop_assert!(found, "majority {} not any member's argmax", out.majority);
+            prop_assert!(
+                out.vote_frac >= 1.0 / k as f32 - 1e-6,
+                "vote frac below 1/k"
+            );
+            prop_assert!(out.vote_frac <= 1.0 + 1e-6, "vote frac above 1");
+            prop_assert!(
+                out.mean_score > 0.0 && out.mean_score <= 1.0 + 1e-6,
+                "score out of range: {}",
+                out.mean_score
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vote_majority_has_max_count() {
+    check(
+        102,
+        500,
+        |r| (0..1 + r.below(9)).map(|_| r.below(6) as u64).collect::<Vec<u64>>(),
+        |answers| {
+            let ans32: Vec<u32> = answers.iter().map(|&a| a as u32).collect();
+            let (maj, frac) = agree_votes(&ans32);
+            let count_of = |x: u32| ans32.iter().filter(|&&a| a == x).count();
+            let maj_count = count_of(maj);
+            for &a in &ans32 {
+                prop_assert!(
+                    count_of(a) <= maj_count,
+                    "answer {a} outvotes majority {maj}"
+                );
+            }
+            prop_assert!(
+                (frac - maj_count as f32 / ans32.len() as f32).abs() < 1e-6,
+                "frac mismatch"
+            );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// batcher: conservation + order, randomized configs and pacing
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_and_orders() {
+    check(
+        103,
+        12,
+        |r| {
+            let max_batch = 1 + r.below(16);
+            let n_items = r.below(120);
+            let pace_us = r.below(300);
+            vec![max_batch, n_items, pace_us]
+        },
+        |cfg| {
+            let (max_batch, n_items, pace_us) = (cfg[0], cfg[1], cfg[2]);
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let violations = Arc::new(Mutex::new(Vec::<String>::new()));
+            {
+                let seen2 = Arc::clone(&seen);
+                let viol = Arc::clone(&violations);
+                let b = Batcher::spawn(
+                    BatcherConfig {
+                        max_batch,
+                        max_wait: Duration::from_micros(400),
+                    },
+                    move |batch: Vec<Item<usize>>| {
+                        if batch.is_empty() {
+                            viol.lock().unwrap().push("empty flush".into());
+                        }
+                        if batch.len() > max_batch {
+                            viol.lock().unwrap().push("flush > max_batch".into());
+                        }
+                        seen2
+                            .lock()
+                            .unwrap()
+                            .extend(batch.into_iter().map(|i| i.payload));
+                    },
+                );
+                for i in 0..n_items {
+                    b.push(i).unwrap();
+                    if pace_us > 0 && i % 7 == 0 {
+                        std::thread::sleep(Duration::from_micros(pace_us as u64));
+                    }
+                }
+            } // drop drains
+            let got = seen.lock().unwrap().clone();
+            let viols = violations.lock().unwrap().clone();
+            prop_assert!(viols.is_empty(), "flush violations: {viols:?}");
+            prop_assert!(
+                got == (0..n_items).collect::<Vec<_>>(),
+                "conservation/order violated: got {} of {} items",
+                got.len(),
+                n_items
+            );
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// cost model
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cost_bounded_by_worst_case() {
+    check(
+        104,
+        400,
+        |r| {
+            let k = 1 + r.below(6);
+            vec![k as f64, r.f64(), r.f64(), r.f64()]
+        },
+        |v| {
+            let (k, gamma, p_defer, rho) = (v[0] as usize, v[1], v[2], v[3]);
+            let c = two_level_relative_cost(k, gamma, Parallelism(rho), p_defer);
+            let wc = worst_case_bound(&[(k, gamma), (1, 1.0)]);
+            prop_assert!(c <= wc + 1e-9, "cost {c} above worst case {wc}");
+            prop_assert!(c >= 0.0, "negative cost");
+            // cost at rho=1 is a lower bound over rho
+            let c1 = two_level_relative_cost(k, gamma, Parallelism(1.0), p_defer);
+            prop_assert!(c1 <= c + 1e-12, "rho=1 not cheapest");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cost_from_exits_between_extremes() {
+    check(
+        105,
+        300,
+        |r| {
+            let n = 2 + r.below(3);
+            let mut exits: Vec<f64> = (0..n).map(|_| r.f64() + 1e-6).collect();
+            let total: f64 = exits.iter().sum();
+            for e in &mut exits {
+                *e /= total;
+            }
+            exits
+        },
+        |exits| {
+            let n = exits.len();
+            if n < 2 {
+                return Ok(()); // shrinker may produce degenerate vectors
+            }
+            let total: f64 = exits.iter().sum();
+            if (total - 1.0).abs() > 1e-6 || exits.iter().any(|&e| e < 0.0) {
+                return Ok(()); // shrunk out of the valid domain
+            }
+            let levels: Vec<(usize, f64)> = (0..n)
+                .map(|i| (3usize, 10f64.powi(i as i32 - (n as i32 - 1))))
+                .collect();
+            let c = cost_from_exits(&levels, exits, Parallelism(1.0));
+            prop_assert!(c >= levels[0].1 - 1e-12, "below first-level cost");
+            let all: f64 = levels.iter().map(|(_, g)| g).sum();
+            prop_assert!(c <= all + 1e-9, "above pay-everything cost");
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// calibration
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_estimated_theta_meets_tolerance_in_sample() {
+    check(
+        106,
+        200,
+        |r| {
+            let n = 20 + r.below(400);
+            (0..n)
+                .map(|_| {
+                    let score = r.f64();
+                    let correct = r.bool(0.3 + 0.6 * score);
+                    (score, if correct { 1.0 } else { 0.0 })
+                })
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |data| {
+            if data.is_empty() {
+                return Ok(());
+            }
+            let points: Vec<CalPoint> = data
+                .iter()
+                .map(|&(s, c)| CalPoint { score: s as f32, correct: c > 0.5 })
+                .collect();
+            for eps in [0.0, 0.02, 0.05, 0.2] {
+                let est = estimate_theta(&points, eps);
+                // the IN-SAMPLE failure at the estimated theta must meet eps
+                let (fail, sel) = evaluate_theta(&points, est.theta);
+                prop_assert!(
+                    fail <= eps + 1e-9,
+                    "failure {fail} exceeds eps {eps}"
+                );
+                prop_assert!(
+                    (sel - est.selection_rate).abs() < 1e-9,
+                    "selection rate inconsistent: {sel} vs {}",
+                    est.selection_rate
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// threadpool scope_map under random shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scope_map_is_identity_preserving() {
+    let pool = Arc::new(abc_serve::util::threadpool::ThreadPool::new(4));
+    check(
+        107,
+        30,
+        |r: &mut Rng| (0..r.below(200)).map(|i| i as u64).collect::<Vec<u64>>(),
+        move |items| {
+            let out = pool.scope_map(items.clone(), |x| x * 3 + 1);
+            prop_assert!(
+                out == items.iter().map(|x| x * 3 + 1).collect::<Vec<_>>(),
+                "scope_map broke order"
+            );
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,151 @@
+//! Integration: load real AOT artifacts, execute via PJRT, and check
+//! numerics against the manifest's recorded accuracies.
+//!
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use std::sync::Arc;
+
+use abc_serve::runtime::engine::Engine;
+use abc_serve::util::stats::binomial_se;
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(root).expect("manifest loads"))
+}
+
+#[test]
+fn tier_accuracy_matches_manifest() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    // Smallest suite keeps this test fast.
+    let rt = SuiteRuntime::load(Arc::clone(&engine), &m, "synth-sst2", false).unwrap();
+    let test = rt.dataset(&m, "test").unwrap();
+    for tier_exe in &rt.tiers {
+        let outs = tier_exe.run(&test.x, test.n).unwrap();
+        assert_eq!(outs.len(), test.n);
+        let hits = outs
+            .iter()
+            .zip(&test.y)
+            .filter(|(o, &y)| o.majority == y)
+            .count();
+        let acc = hits as f64 / test.n as f64;
+        let entry = rt.suite.tier(tier_exe.tier).unwrap();
+        let want = entry.test_acc_ensemble;
+        // The PJRT path must agree with the python eval up to vote-tie
+        // handling noise; allow 4 standard errors + 1% slack.
+        let tol = 4.0 * binomial_se(want, test.n) + 0.01;
+        assert!(
+            (acc - want).abs() <= tol,
+            "tier {}: PJRT acc {acc:.4} vs manifest {want:.4} (tol {tol:.4})",
+            tier_exe.tier
+        );
+    }
+}
+
+#[test]
+fn outputs_are_well_formed() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = SuiteRuntime::load(engine, &m, "synth-sst2", true).unwrap();
+    let test = rt.dataset(&m, "test").unwrap();
+    let n = 37; // deliberately not a bucket size
+    let tier = &rt.tiers[0];
+    let outs = tier.run(&test.x[..n * test.dim], n).unwrap();
+    assert_eq!(outs.len(), n);
+    for o in &outs {
+        assert!((o.majority as usize) < rt.suite.classes);
+        assert!((0.0..=1.0 + 1e-6).contains(&(o.vote_frac as f64)));
+        assert!((0.0..=1.0 + 1e-6).contains(&(o.mean_score as f64)));
+        // vote fraction is a multiple of 1/k
+        let f = o.vote_frac * tier.k as f32;
+        assert!((f - f.round()).abs() < 1e-4, "vote_frac {}", o.vote_frac);
+    }
+    // single-model artifact
+    let single = rt.single(1).unwrap();
+    let souts = single.run_single(&test.x[..n * test.dim], n).unwrap();
+    assert_eq!(souts.len(), n);
+    for s in &souts {
+        assert!((s.pred as usize) < rt.suite.classes);
+        assert!(s.confidence >= 1.0 / rt.suite.classes as f32 - 1e-4);
+        assert!(s.confidence <= 1.0 + 1e-6);
+    }
+}
+
+#[test]
+fn batch_chunking_consistent_with_single_calls() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = SuiteRuntime::load(engine, &m, "synth-sst2", false).unwrap();
+    let test = rt.dataset(&m, "test").unwrap();
+    let tier = &rt.tiers[0];
+    // 300 rows forces chunking at max bucket 128
+    let n = 300;
+    let big = tier.run(&test.x[..n * test.dim], n).unwrap();
+    // run each row individually (bucket 1) and compare predictions
+    for i in (0..n).step_by(37) {
+        let one = tier.run(test.row(i), 1).unwrap();
+        assert_eq!(one[0].majority, big[i].majority, "row {i}");
+        assert!((one[0].vote_frac - big[i].vote_frac).abs() < 1e-5);
+        assert!((one[0].mean_score - big[i].mean_score).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn logits_shape_and_argmax_consistency() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = SuiteRuntime::load(engine, &m, "synth-sst2", false).unwrap();
+    let test = rt.dataset(&m, "test").unwrap();
+    let tier = &rt.tiers[1];
+    let n = 20;
+    let (outs, logits) = tier.run_with_logits(&test.x[..n * test.dim], n).unwrap();
+    let c = rt.suite.classes;
+    assert_eq!(logits.len(), tier.k * n * c);
+    // majority label must win the member-argmax plurality vote
+    for i in 0..n {
+        let mut counts = vec![0usize; c];
+        for mem in 0..tier.k {
+            let off = (mem * n + i) * c;
+            let row = &logits[off..off + c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            counts[argmax] += 1;
+        }
+        let best = counts.iter().enumerate().max_by_key(|&(i2, &v)| (v, c - i2)).unwrap().0;
+        assert_eq!(best as u32, outs[i].majority, "sample {i}");
+    }
+}
+
+#[test]
+fn parallel_execution_is_safe() {
+    let Some(m) = manifest() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = SuiteRuntime::load(engine, &m, "synth-sst2", false).unwrap();
+    let test = Arc::new(rt.dataset(&m, "test").unwrap());
+    let tier = Arc::clone(&rt.tiers[0]);
+    let baseline = tier.run(&test.x[..8 * test.dim], 8).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let tier = Arc::clone(&tier);
+            let test = Arc::clone(&test);
+            std::thread::spawn(move || tier.run(&test.x[..8 * test.dim], 8).unwrap())
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().unwrap();
+        for (a, b) in got.iter().zip(&baseline) {
+            assert_eq!(a.majority, b.majority);
+            assert!((a.mean_score - b.mean_score).abs() < 1e-5);
+        }
+    }
+}

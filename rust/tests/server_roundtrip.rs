@@ -1,0 +1,112 @@
+//! Integration: serving pipeline + TCP front end over real artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::calib;
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::metrics::Metrics;
+use abc_serve::runtime::engine::Engine;
+use abc_serve::server::{serve, Client};
+use abc_serve::types::{Request, RuleKind};
+use abc_serve::zoo::manifest::Manifest;
+use abc_serve::zoo::registry::SuiteRuntime;
+
+fn boot(suite: &str) -> Option<(Arc<Pipeline>, Arc<SuiteRuntime>, Manifest)> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(root).unwrap();
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false).unwrap());
+    let val = rt.dataset(&manifest, "val").unwrap();
+    let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05).unwrap();
+    let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy.clone()));
+    let pipeline = Arc::new(Pipeline::spawn(
+        cascade,
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
+        Metrics::new(),
+    ));
+    Some((pipeline, rt, manifest))
+}
+
+#[test]
+fn pipeline_single_and_concurrent_requests() {
+    let Some((pipeline, rt, manifest)) = boot("synth-sst2") else { return };
+    let test = rt.dataset(&manifest, "test").unwrap();
+
+    // single blocking request
+    let v = pipeline
+        .infer(Request { id: 1, features: test.row(0).to_vec(), arrival_s: 0.0 })
+        .unwrap();
+    assert_eq!(v.request_id, 1);
+    assert!((v.prediction as usize) < rt.suite.classes);
+    assert!(v.exit_tier >= 1 && v.exit_tier <= rt.n_tiers());
+    assert!(!v.tier_scores.is_empty());
+
+    // concurrent submits batch together and all complete
+    let rxs: Vec<_> = (0..50)
+        .map(|i| {
+            pipeline
+                .submit(Request {
+                    id: 100 + i,
+                    features: test.row(i as usize).to_vec(),
+                    arrival_s: 0.0,
+                })
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let v = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("verdict arrives")
+            .expect("no error");
+        assert_eq!(v.request_id, 100 + i as u64);
+    }
+    // metrics recorded
+    assert!(pipeline.metrics().counter("requests_submitted").get() >= 51);
+    assert!(pipeline.metrics().histogram("request_latency_s").count() >= 51);
+}
+
+#[test]
+fn pipeline_rejects_bad_dim() {
+    let Some((pipeline, _, _)) = boot("synth-sst2") else { return };
+    let err = pipeline
+        .submit(Request { id: 9, features: vec![0.0; 3], arrival_s: 0.0 })
+        .unwrap_err();
+    assert!(err.to_string().contains("features"));
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let Some((pipeline, rt, manifest)) = boot("synth-sst2") else { return };
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let port = 7991;
+    let server = std::thread::spawn(move || serve(pipeline, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    // valid inference
+    let (pred, exit_tier) = client.infer(5, test.row(3)).unwrap();
+    assert!((pred as usize) < rt.suite.classes);
+    assert!(exit_tier >= 1);
+    // metrics command
+    let reply = client.roundtrip(r#"{"cmd":"metrics"}"#).unwrap();
+    assert!(reply.contains("metrics"));
+    // malformed line gets an error, connection stays usable
+    let reply = client.roundtrip("garbage").unwrap();
+    assert!(reply.contains("error"));
+    let (_, _) = client.infer(6, test.row(4)).unwrap();
+    // wrong-dim features produce a server-side error reply
+    let reply = client
+        .roundtrip(r#"{"id": 7, "features": [1.0, 2.0]}"#)
+        .unwrap();
+    assert!(reply.contains("error"), "got {reply}");
+    // shutdown
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
