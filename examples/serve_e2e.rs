@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use abc_serve::calib;
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::Cascade;
-use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
 use abc_serve::runtime::engine::Engine;
@@ -32,6 +32,8 @@ const PORT: u16 = 7979;
 const N_REQUESTS: usize = 2000;
 const N_CLIENTS: usize = 8;
 const RATE_RPS: f64 = 800.0;
+const REPLICAS: usize = 2;
+const MAX_QUEUE: usize = 256;
 
 fn main() -> anyhow::Result<()> {
     // ---- boot the serving stack -------------------------------------
@@ -42,13 +44,16 @@ fn main() -> anyhow::Result<()> {
     let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05)?;
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy.clone()));
     let metrics = Metrics::new();
-    let pipeline = Arc::new(Pipeline::spawn(
-        Arc::clone(&cascade),
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+    let pool = Arc::new(ReplicaPool::spawn(
+        cascade,
+        PoolConfig {
+            replicas: REPLICAS,
+            max_queue: MAX_QUEUE,
+            batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        },
         Arc::clone(&metrics),
     ));
-    let server_pipeline = Arc::clone(&pipeline);
-    let server = std::thread::spawn(move || serve(server_pipeline, PORT));
+    let server = std::thread::spawn(move || serve(pool, PORT));
     std::thread::sleep(Duration::from_millis(200)); // listener up
 
     // ---- drive a Poisson workload from N_CLIENTS connections --------
@@ -102,7 +107,10 @@ fn main() -> anyhow::Result<()> {
     let wall = t_start.elapsed().as_secs_f64();
 
     // ---- report ------------------------------------------------------
-    println!("\n=== serve_e2e: {SUITE}, {N_REQUESTS} reqs, {N_CLIENTS} clients, Poisson {RATE_RPS} rps ===");
+    println!(
+        "\n=== serve_e2e: {SUITE}, {N_REQUESTS} reqs, {N_CLIENTS} clients, \
+         Poisson {RATE_RPS} rps, {REPLICAS} replicas (max-queue {MAX_QUEUE}) ==="
+    );
     println!("throughput     : {:.0} req/s (wall {:.2}s)", N_REQUESTS as f64 / wall, wall);
     println!("accuracy       : {:.3}", hits.load(Ordering::SeqCst) as f64 / N_REQUESTS as f64);
     println!("tier-1 exits   : {:.1}%", 100.0 * exit1.load(Ordering::SeqCst) as f64 / N_REQUESTS as f64);

@@ -36,10 +36,37 @@ pub struct CascadeReport {
     pub mean_levels_visited: f64,
 }
 
+/// Anything the serving pipeline can push a batch through: the real PJRT
+/// cascade, or a synthetic stand-in for load testing
+/// (`trafficgen::SyntheticClassifier`).  The `ReplicaPool` spawns one
+/// `Pipeline` per replica over a shared `Arc<dyn BatchClassifier>`.
+pub trait BatchClassifier: Send + Sync {
+    /// Feature dimensionality every request must match.
+    fn dim(&self) -> usize;
+    /// Number of cascade levels (bounds `exit_level`).
+    fn n_levels(&self) -> usize;
+    /// Classify `n` row-major `n x dim` rows, results in input order.
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>>;
+}
+
 /// A cascade of loaded tier executables + its deferral policy.
 pub struct Cascade {
     tiers: Vec<Arc<TierExecutable>>,
     policy: DeferralPolicy,
+}
+
+impl BatchClassifier for Cascade {
+    fn dim(&self) -> usize {
+        self.tiers[0].dim
+    }
+
+    fn n_levels(&self) -> usize {
+        self.tiers.len()
+    }
+
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        Cascade::classify_batch(self, features, n)
+    }
 }
 
 impl Cascade {

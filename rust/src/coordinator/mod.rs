@@ -1,8 +1,10 @@
 //! The paper's L3 contribution: agreement-based deferral, the cascade
-//! controller (Algorithm 1), dynamic batching and the serving pipeline.
+//! controller (Algorithm 1), dynamic batching, the serving pipeline, and
+//! the replicated serving pool with admission control.
 
 pub mod agreement;
 pub mod batcher;
 pub mod cascade;
 pub mod deferral;
 pub mod pipeline;
+pub mod replica;

@@ -1,11 +1,19 @@
-//! The serving pipeline: request -> dynamic batcher -> cascade -> verdict.
+//! The serving pipeline: request -> dynamic batcher -> classifier -> verdict.
 //!
-//! Ties the batcher to the cascade controller and the metrics registry.
-//! Responses are delivered through per-request channels (a poor man's
-//! oneshot); the whole pipeline is synchronous threads -- no async
-//! runtime exists in the offline registry, and a thread per stage is
-//! plenty for a CPU PJRT backend (DESIGN.md §3).
+//! Ties the batcher to a [`BatchClassifier`] (the PJRT cascade in
+//! production, a synthetic backend in load tests) and the metrics
+//! registry.  Responses are delivered through per-request channels (a
+//! poor man's oneshot); the whole pipeline is synchronous threads -- no
+//! async runtime exists in the offline registry, and a thread per stage
+//! is plenty for a CPU PJRT backend (DESIGN.md §3).
+//!
+//! The pipeline tracks its *outstanding* count (accepted but not yet
+//! answered); `try_submit` turns that into admission control for the
+//! `ReplicaPool`: the counter is bumped before the queue check, so the
+//! per-pipeline outstanding count can never exceed the cap, even under
+//! concurrent submitters.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -13,7 +21,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Item};
-use crate::coordinator::cascade::Cascade;
+use crate::coordinator::cascade::BatchClassifier;
 use crate::metrics::Metrics;
 use crate::types::{Request, Verdict};
 
@@ -22,22 +30,63 @@ struct Job {
     resp: Sender<Result<Verdict, String>>,
 }
 
+/// Why `try_submit` refused a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitRejection {
+    /// The pipeline already holds `outstanding` >= the caller's cap.
+    Full { outstanding: usize },
+    /// The request failed validation (e.g. wrong feature dim).
+    Invalid(String),
+    /// The batcher has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitRejection::Full { outstanding } => {
+                write!(f, "pipeline full ({outstanding} outstanding)")
+            }
+            SubmitRejection::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            SubmitRejection::Closed => write!(f, "pipeline is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitRejection {}
+
 /// Client-side handle to a running pipeline.
 pub struct Pipeline {
     batcher: Batcher<Job>,
     metrics: Arc<Metrics>,
+    outstanding: Arc<AtomicUsize>,
+    /// Pre-resolved `requests_submitted` counter: the submit hot path
+    /// must not pay a registry-lock lookup per request.
+    submitted: Arc<crate::metrics::Counter>,
     dim: usize,
 }
 
 impl Pipeline {
-    /// Spawn the pipeline over a loaded cascade.
-    pub fn spawn(cascade: Arc<Cascade>, cfg: BatcherConfig, metrics: Arc<Metrics>) -> Pipeline {
-        let dim = cascade.tiers()[0].dim;
+    /// Spawn the pipeline over a batch classifier.
+    pub fn spawn(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Pipeline {
+        let dim = classifier.dim();
         let m = Arc::clone(&metrics);
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let out = Arc::clone(&outstanding);
+        let submitted = metrics.counter("requests_submitted");
         let batcher = Batcher::spawn(cfg, move |batch: Vec<Item<Job>>| {
-            process_batch(&cascade, &m, batch);
+            process_batch(classifier.as_ref(), &m, &out, batch);
         });
-        Pipeline { batcher, metrics, dim }
+        Pipeline { batcher, metrics, outstanding, submitted, dim }
+    }
+
+    /// Requests accepted but not yet answered (queued + in execution).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
     }
 
     /// Submit a request; returns a receiver for its verdict.
@@ -50,10 +99,45 @@ impl Pipeline {
             self.dim
         );
         let (tx, rx) = channel();
-        self.batcher
-            .push(Job { request, resp: tx })
-            .map_err(|e| anyhow::anyhow!(e))?;
-        self.metrics.counter("requests_submitted").inc();
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        if let Err(e) = self.batcher.push(Job { request, resp: tx }) {
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+            return Err(anyhow::anyhow!(e));
+        }
+        self.submitted.inc();
+        Ok(rx)
+    }
+
+    /// Bounded-queue submit: refuse (rather than queue) when this
+    /// pipeline already holds `cap` outstanding requests.  The counter is
+    /// reserved optimistically before the check, so outstanding never
+    /// exceeds `cap` even with concurrent submitters.  Takes the request
+    /// by reference so a refused probe costs no clone (the dispatcher may
+    /// probe several replicas); the clone happens only on acceptance.
+    pub fn try_submit(
+        &self,
+        request: &Request,
+        cap: usize,
+    ) -> Result<Receiver<Result<Verdict, String>>, SubmitRejection> {
+        if request.features.len() != self.dim {
+            return Err(SubmitRejection::Invalid(format!(
+                "request {} has {} features, suite dim is {}",
+                request.id,
+                request.features.len(),
+                self.dim
+            )));
+        }
+        let prev = self.outstanding.fetch_add(1, Ordering::SeqCst);
+        if prev >= cap {
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitRejection::Full { outstanding: prev });
+        }
+        let (tx, rx) = channel();
+        if self.batcher.push(Job { request: request.clone(), resp: tx }).is_err() {
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitRejection::Closed);
+        }
+        self.submitted.inc();
         Ok(rx)
     }
 
@@ -70,15 +154,20 @@ impl Pipeline {
     }
 }
 
-fn process_batch(cascade: &Cascade, metrics: &Metrics, batch: Vec<Item<Job>>) {
+fn process_batch(
+    classifier: &dyn BatchClassifier,
+    metrics: &Metrics,
+    outstanding: &AtomicUsize,
+    batch: Vec<Item<Job>>,
+) {
     let n = batch.len();
-    let dim = cascade.tiers()[0].dim;
+    let dim = classifier.dim();
     let mut features = Vec::with_capacity(n * dim);
     for item in &batch {
         features.extend_from_slice(&item.payload.request.features);
     }
     let t0 = Instant::now();
-    match cascade.classify_batch(&features, n) {
+    match classifier.classify_batch(&features, n) {
         Ok(results) => {
             metrics.counter("batches_ok").inc();
             metrics.histogram("batch_size").record(n as f64);
@@ -98,13 +187,19 @@ fn process_batch(cascade: &Cascade, metrics: &Metrics, batch: Vec<Item<Job>>) {
                     tier_scores: res.scores,
                     latency_s: latency,
                 };
+                // free the admission slot BEFORE delivering, so a caller
+                // unblocked by its verdict never observes a stale
+                // nonzero outstanding count (and the slot is reusable
+                // the moment the answer exists)
+                outstanding.fetch_sub(1, Ordering::SeqCst);
                 let _ = item.payload.resp.send(Ok(verdict));
             }
         }
         Err(e) => {
             metrics.counter("batches_err").inc();
-            let msg = format!("cascade execution failed: {e:#}");
+            let msg = format!("classifier execution failed: {e:#}");
             for item in batch {
+                outstanding.fetch_sub(1, Ordering::SeqCst);
                 let _ = item.payload.resp.send(Err(msg.clone()));
             }
         }

@@ -1,0 +1,312 @@
+//! Replicated serving: N independent `Pipeline` replicas behind a
+//! least-outstanding-requests dispatcher with bounded queues and explicit
+//! load shedding.
+//!
+//! Each replica owns its own dynamic batcher thread over a shared
+//! `Arc<dyn BatchClassifier>` (the PJRT CPU client is thread-safe for
+//! execution, so replicas genuinely run concurrently; the synthetic
+//! backend sleeps, which parallelises trivially).  Admission control is
+//! enforced *inside* each pipeline (`Pipeline::try_submit` reserves a
+//! slot before checking the cap), so `outstanding <= max_queue` holds
+//! per replica even under concurrent submitters -- the pool never grows
+//! queues without bound.  When every replica is full the pool answers
+//! with a typed [`PoolError::Overloaded`] instead of queueing, which the
+//! TCP front end renders as the wire-protocol `overloaded` reply (see
+//! `server`).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::cascade::BatchClassifier;
+use crate::coordinator::pipeline::{Pipeline, SubmitRejection};
+use crate::metrics::Metrics;
+use crate::types::{Request, Verdict};
+
+/// Sizing knobs for a replica pool.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Number of independent pipeline replicas.
+    pub replicas: usize,
+    /// Max outstanding requests per replica before shedding.
+    pub max_queue: usize,
+    /// Batching policy for every replica.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { replicas: 1, max_queue: 256, batcher: BatcherConfig::default() }
+    }
+}
+
+/// Typed serving error surfaced to clients.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// Every replica's bounded queue is full; the request was shed.
+    Overloaded { outstanding: usize, limit: usize },
+    /// The request was refused before execution (validation / shutdown).
+    Rejected(String),
+    /// The request was admitted but execution failed.
+    Failed(String),
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Overloaded { outstanding, limit } => write!(
+                f,
+                "overloaded: {outstanding} outstanding across the pool (limit {limit})"
+            ),
+            PoolError::Rejected(msg) => write!(f, "rejected: {msg}"),
+            PoolError::Failed(msg) => write!(f, "failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// N pipeline replicas behind a least-outstanding-requests dispatcher.
+pub struct ReplicaPool {
+    replicas: Vec<Pipeline>,
+    /// Pre-resolved `replica_{i}_requests` counters: the dispatch path
+    /// must not pay a format!/registry-lock per request.
+    replica_counters: Vec<Arc<crate::metrics::Counter>>,
+    max_queue: usize,
+    shed_counter: Arc<crate::metrics::Counter>,
+    metrics: Arc<Metrics>,
+}
+
+impl ReplicaPool {
+    /// Spawn `cfg.replicas` pipelines over a shared classifier.  All
+    /// replicas share one metrics registry, so counters and histograms
+    /// aggregate across the pool.
+    pub fn spawn(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: PoolConfig,
+        metrics: Arc<Metrics>,
+    ) -> ReplicaPool {
+        assert!(cfg.replicas > 0, "pool needs at least one replica");
+        assert!(cfg.max_queue > 0, "max_queue must be > 0");
+        let replicas: Vec<Pipeline> = (0..cfg.replicas)
+            .map(|_| Pipeline::spawn(Arc::clone(&classifier), cfg.batcher, Arc::clone(&metrics)))
+            .collect();
+        let replica_counters = (0..cfg.replicas)
+            .map(|i| metrics.counter(&format!("replica_{i}_requests")))
+            .collect();
+        let shed_counter = metrics.counter("requests_shed");
+        ReplicaPool {
+            replicas,
+            replica_counters,
+            max_queue: cfg.max_queue,
+            shed_counter,
+            metrics,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Total outstanding requests across all replicas.
+    pub fn total_outstanding(&self) -> usize {
+        self.replicas.iter().map(|p| p.outstanding()).sum()
+    }
+
+    /// Per-replica outstanding counts (diagnostics / tests).
+    pub fn outstanding_per_replica(&self) -> Vec<usize> {
+        self.replicas.iter().map(|p| p.outstanding()).collect()
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Submit to the least-loaded replica with room; sheds with
+    /// [`PoolError::Overloaded`] when every replica is at `max_queue`.
+    ///
+    /// Fast path: one alloc-free argmin scan and a single `try_submit`
+    /// probe.  Only if that replica filled up between the scan and the
+    /// probe (or is genuinely full) do we fall back to probing the rest
+    /// in ascending-outstanding order -- so a stale snapshot costs extra
+    /// probes, never a false shed while any replica has room at probe
+    /// time.
+    pub fn submit(
+        &self,
+        request: Request,
+    ) -> Result<Receiver<Result<Verdict, String>>, PoolError> {
+        let mut least_i = 0usize;
+        let mut least = usize::MAX;
+        for (i, p) in self.replicas.iter().enumerate() {
+            let o = p.outstanding();
+            if o < least {
+                least = o;
+                least_i = i;
+            }
+        }
+        match self.try_one(least_i, &request) {
+            Ok(rx) => return Ok(rx),
+            Err(Some(e)) => return Err(e),
+            Err(None) => {} // full: fall through to the slow path
+        }
+        if self.replicas.len() > 1 {
+            let mut order: Vec<usize> =
+                (0..self.replicas.len()).filter(|&i| i != least_i).collect();
+            order.sort_by_key(|&i| self.replicas[i].outstanding());
+            for &i in &order {
+                match self.try_one(i, &request) {
+                    Ok(rx) => return Ok(rx),
+                    Err(Some(e)) => return Err(e),
+                    Err(None) => continue,
+                }
+            }
+        }
+        self.shed_counter.inc();
+        Err(PoolError::Overloaded {
+            outstanding: self.total_outstanding(),
+            limit: self.replicas.len() * self.max_queue,
+        })
+    }
+
+    /// Probe one replica: `Ok(rx)` accepted, `Err(None)` full (try the
+    /// next), `Err(Some(e))` terminal.
+    fn try_one(
+        &self,
+        i: usize,
+        request: &Request,
+    ) -> Result<Receiver<Result<Verdict, String>>, Option<PoolError>> {
+        match self.replicas[i].try_submit(request, self.max_queue) {
+            Ok(rx) => {
+                self.replica_counters[i].inc();
+                Ok(rx)
+            }
+            Err(SubmitRejection::Full { .. }) => Err(None),
+            Err(SubmitRejection::Invalid(msg)) => Err(Some(PoolError::Rejected(msg))),
+            Err(SubmitRejection::Closed) => {
+                Err(Some(PoolError::Rejected("replica shut down".to_string())))
+            }
+        }
+    }
+
+    /// Submit and block for the verdict.
+    pub fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
+        let rx = self.submit(request)?;
+        match rx.recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(msg)) => Err(PoolError::Failed(msg)),
+            Err(_) => Err(PoolError::Failed("pipeline dropped the request".to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trafficgen::SyntheticClassifier;
+    use std::time::Duration;
+
+    fn synth(per_row_us: u64) -> Arc<dyn BatchClassifier> {
+        Arc::new(SyntheticClassifier {
+            dim: 4,
+            levels: 3,
+            base: Duration::from_micros(0),
+            per_row: Duration::from_micros(per_row_us),
+        })
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, features: vec![0.5, -0.25, 0.125, 1.0], arrival_s: 0.0 }
+    }
+
+    #[test]
+    fn pool_serves_basic_requests() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig { replicas: 2, max_queue: 16, batcher: BatcherConfig::default() },
+            Metrics::new(),
+        );
+        for id in 0..20 {
+            let v = pool.infer(req(id)).unwrap();
+            assert_eq!(v.request_id, id);
+            assert!(v.exit_tier >= 1 && v.exit_tier <= 3);
+        }
+        assert_eq!(pool.total_outstanding(), 0);
+        assert!(pool.metrics().counter("requests_submitted").get() >= 20);
+    }
+
+    #[test]
+    fn pool_rejects_bad_dim() {
+        let pool =
+            ReplicaPool::spawn(synth(10), PoolConfig::default(), Metrics::new());
+        let err = pool
+            .infer(Request { id: 1, features: vec![0.0; 3], arrival_s: 0.0 })
+            .unwrap_err();
+        assert!(matches!(err, PoolError::Rejected(_)), "got {err:?}");
+        assert!(err.to_string().contains("features"));
+    }
+
+    #[test]
+    fn pool_sheds_when_full_and_bounds_queue() {
+        // slow classifier + tiny queue: the second wave must shed
+        let pool = ReplicaPool::spawn(
+            synth(20_000), // 20ms per row
+            PoolConfig {
+                replicas: 1,
+                max_queue: 2,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+            },
+            Metrics::new(),
+        );
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for id in 0..8 {
+            match pool.submit(req(id)) {
+                Ok(rx) => accepted.push(rx),
+                Err(PoolError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+            assert!(pool.total_outstanding() <= 2, "queue bound violated");
+        }
+        assert!(shed > 0, "expected sheds");
+        assert!(!accepted.is_empty(), "expected some accepts");
+        assert_eq!(pool.metrics().counter("requests_shed").get(), shed);
+        for rx in accepted {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        assert_eq!(pool.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn dispatch_spreads_across_replicas() {
+        let pool = ReplicaPool::spawn(
+            synth(2_000),
+            PoolConfig {
+                replicas: 3,
+                max_queue: 4,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            Metrics::new(),
+        );
+        let rxs: Vec<_> = (0..9).filter_map(|id| pool.submit(req(id)).ok()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        // least-outstanding routing must have touched every replica
+        for i in 0..3 {
+            assert!(
+                pool.metrics().counter(&format!("replica_{i}_requests")).get() > 0,
+                "replica {i} got no traffic"
+            );
+        }
+    }
+}

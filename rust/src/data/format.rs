@@ -23,18 +23,44 @@ pub const MAGIC: &[u8; 4] = b"ABDS";
 pub const VERSION: u32 = 1;
 pub const FLAG_DIFFICULTY: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FormatError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic {0:?} (expected \"ABDS\")")]
+    Io(std::io::Error),
     BadMagic([u8; 4]),
-    #[error("unsupported ABDS version {0}")]
     BadVersion(u32),
-    #[error("truncated file: wanted {wanted} bytes for {what}, got {got}")]
     Truncated { what: &'static str, wanted: usize, got: usize },
-    #[error("label {label} out of range for {classes} classes")]
     LabelRange { label: u32, classes: u32 },
+}
+
+impl std::fmt::Display for FormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FormatError::Io(e) => write!(f, "io error: {e}"),
+            FormatError::BadMagic(m) => write!(f, "bad magic {m:?} (expected \"ABDS\")"),
+            FormatError::BadVersion(v) => write!(f, "unsupported ABDS version {v}"),
+            FormatError::Truncated { what, wanted, got } => {
+                write!(f, "truncated file: wanted {wanted} bytes for {what}, got {got}")
+            }
+            FormatError::LabelRange { label, classes } => {
+                write!(f, "label {label} out of range for {classes} classes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FormatError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FormatError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FormatError {
+    fn from(e: std::io::Error) -> FormatError {
+        FormatError::Io(e)
+    }
 }
 
 /// An in-memory dataset split.

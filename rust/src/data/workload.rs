@@ -11,6 +11,10 @@ pub enum Arrival {
     Uniform { rate: f64 },
     /// Bursts of `burst` back-to-back requests, bursts Poisson at `rate`.
     Bursty { rate: f64, burst: usize },
+    /// On-off process: Poisson at `rate` during `on_s`-long active
+    /// windows, each followed by `off_s` of silence (diurnal/batchy
+    /// traffic for saturation tests).
+    OnOff { rate: f64, on_s: f64, off_s: f64 },
 }
 
 impl Arrival {
@@ -40,8 +44,29 @@ impl Arrival {
                     }
                 }
             }
+            Arrival::OnOff { rate, on_s, off_s } => {
+                // `t` accumulates *active* (on-window) time; wall-clock
+                // time inserts `off_s` of silence after every `on_s` of
+                // activity, which keeps the output sorted by
+                // construction.
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exp(rate);
+                    let completed_windows = (t / on_s).floor();
+                    out.push(t + completed_windows * off_s);
+                }
+            }
         }
         out
+    }
+
+    /// Mean offered rate in requests/second (accounting for off time).
+    pub fn offered_rate(&self) -> f64 {
+        match *self {
+            Arrival::Poisson { rate } | Arrival::Uniform { rate } => rate,
+            Arrival::Bursty { rate, burst } => rate * burst as f64,
+            Arrival::OnOff { rate, on_s, off_s } => rate * on_s / (on_s + off_s),
+        }
     }
 }
 
@@ -65,6 +90,26 @@ mod tests {
         let mut rng = Rng::new(2);
         let times = Arrival::Uniform { rate: 10.0 }.generate(5, &mut rng);
         assert_eq!(times, vec![0.1, 0.2, 0.30000000000000004, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn onoff_sorted_with_gaps() {
+        let mut rng = Rng::new(7);
+        let a = Arrival::OnOff { rate: 200.0, on_s: 0.05, off_s: 0.5 };
+        let times = a.generate(40, &mut rng);
+        assert_eq!(times.len(), 40);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // ~200 req/s over 0.05s windows => ~10 per window; 40 requests
+        // span several windows, so at least one inter-arrival gap must be
+        // close to the 0.5s silence.
+        let max_gap = times
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0f64, f64::max);
+        assert!(max_gap > 0.4, "expected an off-window gap, max {max_gap}");
+        // effective rate matches the duty-cycled offered rate (~18 rps)
+        let rate = a.offered_rate();
+        assert!((rate - 200.0 * 0.05 / 0.55).abs() < 1e-9);
     }
 
     #[test]

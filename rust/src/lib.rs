@@ -20,4 +20,5 @@ pub mod runtime;
 pub mod experiments;
 pub mod server;
 pub mod sim;
+pub mod trafficgen;
 pub mod zoo;

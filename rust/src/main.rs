@@ -5,20 +5,27 @@
 //! repro calibrate   --suite S [--rule vote|score] [--epsilon E] [--n N]
 //! repro classify    --suite S [--split test] [--rule vote|score] [--epsilon E]
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
+//!                   [--replicas 1] [--max-queue 256]
+//! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
+//!                   [--replicas 1] [--max-queue 64] [--workers 128]
+//!                   (synthetic backend: no artifacts needed)
 //! repro exp         <fig2|fig3|fig4a|fig4b|fig5|fig6|fig7|fig8|table5|all>
 //!                   [--out artifacts/results] [--quick]
 //! repro selftest    (loads every artifact and runs a smoke batch)
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use abc_serve::calib;
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::Cascade;
-use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
 use abc_serve::runtime::engine::Engine;
+use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
 use abc_serve::types::RuleKind;
 use abc_serve::util::cli::Args;
 use abc_serve::util::table::{fnum, human, Table};
@@ -44,6 +51,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "calibrate" => cmd_calibrate(&rest),
         "classify" => cmd_classify(&rest),
         "serve" => cmd_serve(&rest),
+        "loadgen" => cmd_loadgen(&rest),
         "exp" => cmd_exp(&rest),
         "selftest" => cmd_selftest(&rest),
         "help" | "--help" => {
@@ -62,6 +70,9 @@ fn print_usage() {
          \x20 calibrate --suite S           estimate per-tier thetas (App. B)\n\
          \x20 classify  --suite S           run the calibrated cascade on a split\n\
          \x20 serve     --suite S           line-JSON TCP serving (port 7878)\n\
+         \x20                               [--replicas N] [--max-queue Q]\n\
+         \x20 loadgen                       open-loop load test on the synthetic\n\
+         \x20                               backend (no artifacts needed)\n\
          \x20 exp <id|all>                  regenerate paper figures/tables\n\
          \x20 selftest                      load + smoke every artifact\n\n\
          common flags: --artifacts DIR (default ./artifacts), --rule vote|score,\n\
@@ -182,6 +193,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let epsilon = args.f64_or("epsilon", 0.03)?;
     let max_batch = args.usize_or("max-batch", 32)?;
     let max_wait_ms = args.u64_or("max-wait-ms", 2)?;
+    let replicas = args.usize_or("replicas", 1)?;
+    let max_queue = args.usize_or("max-queue", 256)?;
+    anyhow::ensure!(replicas > 0, "--replicas must be > 0");
+    anyhow::ensure!(max_queue > 0, "--max-queue must be > 0");
     let manifest = Manifest::load(artifacts_dir(args))?;
     let engine = Arc::new(Engine::cpu()?);
     let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false)?);
@@ -189,16 +204,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cal = calib::calibrate(&rt.tiers, rule, &val, 100, epsilon)?;
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy));
     let metrics = Metrics::new();
-    let pipeline = Arc::new(Pipeline::spawn(
+    let pool = Arc::new(ReplicaPool::spawn(
         cascade,
-        BatcherConfig {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(max_wait_ms),
+        PoolConfig {
+            replicas,
+            max_queue,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
         },
         Arc::clone(&metrics),
     ));
-    println!("serving {suite} on 127.0.0.1:{port} (line-JSON protocol)");
-    abc_serve::server::serve(pipeline, port)
+    println!(
+        "serving {suite} on 127.0.0.1:{port} (line-JSON protocol, \
+         {replicas} replicas, max-queue {max_queue}/replica)"
+    );
+    abc_serve::server::serve(pool, port)
+}
+
+/// Open-loop load generation against a synthetic replica pool -- the
+/// zero-artifact path for exploring throughput/latency/shedding.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let rate = args.f64_or("rate", 500.0)?;
+    let requests = args.usize_or("requests", 2000)?;
+    let replicas = args.usize_or("replicas", 1)?;
+    let max_queue = args.usize_or("max-queue", 64)?;
+    let workers = args.usize_or("workers", 128)?;
+    let dim = args.usize_or("dim", 16)?;
+    let levels = args.usize_or("levels", 3)?;
+    let base_us = args.u64_or("base-us", 200)?;
+    let row_us = args.u64_or("row-us", 100)?;
+    let max_batch = args.usize_or("max-batch", 32)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 1)?;
+    let burst = args.usize_or("burst", 16)?;
+    let seed = args.u64_or("seed", 42)?;
+    anyhow::ensure!(rate > 0.0, "--rate must be > 0");
+    anyhow::ensure!(requests > 0, "--requests must be > 0");
+    let arrival = match args.str_or("arrival", "poisson") {
+        "poisson" => Arrival::Poisson { rate },
+        "constant" | "uniform" => Arrival::Uniform { rate },
+        "bursty" => Arrival::Bursty { rate: rate / burst as f64, burst },
+        "onoff" => Arrival::OnOff { rate: rate * 2.0, on_s: 0.5, off_s: 0.5 },
+        other => bail!("bad --arrival {other:?} (poisson|constant|bursty|onoff)"),
+    };
+
+    let classifier = SyntheticClassifier::new(
+        dim,
+        levels,
+        Duration::from_micros(base_us),
+        Duration::from_micros(row_us),
+    );
+    let capacity = replicas as f64 * classifier.capacity_rps(max_batch);
+    let pool = Arc::new(ReplicaPool::spawn(
+        Arc::new(classifier),
+        PoolConfig {
+            replicas,
+            max_queue,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+        },
+        Metrics::new(),
+    ));
+    let trace = Arc::new(Trace::synth(arrival, requests, dim, seed));
+    println!(
+        "loadgen: {requests} requests at ~{rate:.0} rps ({}), {replicas} \
+         replica(s) x max-queue {max_queue}, est. pool capacity {capacity:.0} rows/s",
+        args.str_or("arrival", "poisson"),
+    );
+    let report = LoadGen { workers }
+        .run(&pool, trace, pool.metrics())
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut table = Table::new("loadgen report", LoadReport::header());
+    table.row(report.row_cells());
+    println!("{}", table.render());
+    let mut smetrics = Table::new("serving metrics", &["metric", "value"]);
+    for (name, value) in pool.metrics().snapshot() {
+        smetrics.row(vec![name, value]);
+    }
+    println!("{}", smetrics.render());
+    Ok(())
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {

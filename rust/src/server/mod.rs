@@ -1,4 +1,4 @@
-//! Line-delimited-JSON TCP serving front end.
+//! Line-delimited-JSON TCP serving front end over a [`ReplicaPool`].
 //!
 //! Protocol (one JSON object per line, both directions):
 //!
@@ -11,24 +11,53 @@
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
 //!
+//! When every replica's bounded queue is full, admission control sheds
+//! the request instead of queueing it; the reply is the typed
+//! `Overloaded` verdict:
+//!
+//! ```text
+//! <- {"error": "overloaded", "overloaded": true,
+//!     "outstanding": 128, "limit": 128}
+//! ```
+//!
+//! `outstanding` is the pool-wide in-flight count at shed time and
+//! `limit` is `replicas * max_queue`.  Load-aware clients key on
+//! `"overloaded": true` and back off; naive clients still see an
+//! `"error"` field.  Other request failures keep the plain
+//! `{"error": msg}` shape.
+//!
 //! Built on std TCP + threads (no hyper/tokio offline); each connection
-//! gets a handler thread, requests flow through the shared Pipeline's
-//! dynamic batcher, so concurrent clients batch together.
+//! gets a handler thread, requests flow through the pool's
+//! least-outstanding dispatcher, so concurrent clients batch together
+//! inside each replica's dynamic batcher.
+//!
+//! Shutdown: handler threads read with a short socket timeout and
+//! re-check the shared stop flag between reads, so `serve()` joins every
+//! handler within ~[`READ_POLL`] of a `{"cmd":"shutdown"}` even while
+//! other connections sit idle mid-`read` (the seed blocked forever in
+//! `read_line` here).  Complete lines already received are still
+//! answered before a handler exits ("drain in-flight").
 
 pub mod proto;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::pipeline::Pipeline;
-use proto::{parse_request_line, render_error, render_metrics, render_verdict};
+use crate::coordinator::replica::{PoolError, ReplicaPool};
+use proto::{
+    parse_request_line, render_error, render_metrics, render_overloaded, render_verdict,
+};
+
+/// How long a handler blocks in `read` before re-checking the stop flag.
+const READ_POLL: Duration = Duration::from_millis(50);
 
 /// Serve forever (until a client sends `{"cmd": "shutdown"}`).
-pub fn serve(pipeline: Arc<Pipeline>, port: u16) -> Result<()> {
+pub fn serve(pool: Arc<ReplicaPool>, port: u16) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let stop = Arc::new(AtomicBool::new(false));
     listener.set_nonblocking(true)?;
@@ -39,14 +68,14 @@ pub fn serve(pipeline: Arc<Pipeline>, port: u16) -> Result<()> {
                 stream.set_nonblocking(false)?;
                 // line-RPC: Nagle + delayed-ACK adds ~40-90ms per turn
                 stream.set_nodelay(true)?;
-                let pipeline = Arc::clone(&pipeline);
+                let pool = Arc::clone(&pool);
                 let stop = Arc::clone(&stop);
                 handlers.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, pipeline, stop);
+                    let _ = handle_conn(stream, pool, stop);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) => return Err(e.into()),
         }
@@ -57,33 +86,74 @@ pub fn serve(pipeline: Arc<Pipeline>, port: u16) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    pipeline: Arc<Pipeline>,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
+/// What one poll of the connection produced.
+enum Read1 {
+    Line(String),
+    Eof,
+    /// Timed out with no complete line while the server is stopping.
+    Stopping,
+}
+
+/// Pull one `\n`-terminated line out of `pending`/the socket, polling the
+/// stop flag between short read timeouts.  Partial lines survive timeouts
+/// because bytes accumulate in `pending` (a `BufReader::read_line` would
+/// discard the partial tail on every timeout).
+fn read_line_interruptible(
+    stream: &mut TcpStream,
+    pending: &mut Vec<u8>,
+    stop: &AtomicBool,
+) -> std::io::Result<Read1> {
+    let mut buf = [0u8; 4096];
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        if let Some(pos) = pending.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = pending.drain(..=pos).collect();
+            return Ok(Read1::Line(String::from_utf8_lossy(&raw).into_owned()));
         }
+        if stop.load(Ordering::SeqCst) {
+            return Ok(Read1::Stopping);
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(Read1::Eof),
+            Ok(n) => pending.extend_from_slice(&buf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // loop re-checks the stop flag
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(READ_POLL))?;
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    let mut pending: Vec<u8> = Vec::new();
+    loop {
+        let line = match read_line_interruptible(&mut reader, &mut pending, &stop)? {
+            Read1::Line(l) => l,
+            Read1::Eof => return Ok(()), // client closed
+            Read1::Stopping => return Ok(()),
+        };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
         }
         match parse_request_line(trimmed) {
             Ok(proto::Incoming::Infer(request)) => {
-                let reply = match pipeline.infer(request) {
+                let reply = match pool.infer(request) {
                     Ok(verdict) => render_verdict(&verdict),
-                    Err(e) => render_error(&format!("{e:#}")),
+                    Err(PoolError::Overloaded { outstanding, limit }) => {
+                        render_overloaded(outstanding, limit)
+                    }
+                    Err(e) => render_error(&e.to_string()),
                 };
                 writeln!(writer, "{reply}")?;
             }
             Ok(proto::Incoming::Metrics) => {
-                writeln!(writer, "{}", render_metrics(pipeline.metrics()))?;
+                writeln!(writer, "{}", render_metrics(pool.metrics()))?;
             }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
@@ -97,9 +167,18 @@ fn handle_conn(
     }
 }
 
-/// Minimal blocking client for tests/examples.
+/// Parsed reply to one infer line: answered, or shed by admission
+/// control.  (Failures surface as `Err` from [`Client::infer_reply`].)
+pub enum InferReply {
+    Verdict(crate::types::Verdict),
+    Overloaded { outstanding: usize, limit: usize },
+}
+
+/// Minimal blocking client for tests/examples/loadgen.  This is the
+/// single client-side implementation of the wire protocol; extend it
+/// rather than hand-building lines elsewhere.
 pub struct Client {
-    reader: BufReader<TcpStream>,
+    reader: std::io::BufReader<TcpStream>,
     writer: TcpStream,
 }
 
@@ -107,18 +186,24 @@ impl Client {
     pub fn connect(port: u16) -> Result<Client> {
         let stream = TcpStream::connect(("127.0.0.1", port))?;
         stream.set_nodelay(true)?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        Ok(Client {
+            reader: std::io::BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
     }
 
     pub fn roundtrip(&mut self, line: &str) -> Result<String> {
+        use std::io::BufRead;
         writeln!(self.writer, "{line}")?;
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         Ok(reply.trim().to_string())
     }
 
-    /// Classify one feature vector; returns (prediction, exit_tier).
-    pub fn infer(&mut self, id: u64, features: &[f32]) -> Result<(u32, usize)> {
+    /// Send one inference request and parse the reply, surfacing
+    /// admission-control sheds as [`InferReply::Overloaded`] rather
+    /// than as errors.
+    pub fn infer_reply(&mut self, id: u64, features: &[f32]) -> Result<InferReply> {
         let feats = features
             .iter()
             .map(|f| format!("{f}"))
@@ -128,13 +213,43 @@ impl Client {
             self.roundtrip(&format!(r#"{{"id":{id},"features":[{feats}]}}"#))?;
         let v = crate::util::json::Json::parse(&reply)
             .map_err(|e| anyhow::anyhow!("bad reply {reply:?}: {e}"))?;
+        if v.get("overloaded").as_bool() == Some(true) {
+            return Ok(InferReply::Overloaded {
+                outstanding: v.get("outstanding").as_usize().unwrap_or(0),
+                limit: v.get("limit").as_usize().unwrap_or(0),
+            });
+        }
         if let Some(err) = v.get("error").as_str() {
             anyhow::bail!("server error: {err}");
         }
-        Ok((
-            v.req_f64("prediction")? as u32,
-            v.req_f64("exit_tier")? as usize,
-        ))
+        Ok(InferReply::Verdict(crate::types::Verdict {
+            request_id: v.get("id").as_u64().unwrap_or(id),
+            prediction: v.req_f64("prediction")? as u32,
+            exit_tier: v.req_f64("exit_tier")? as usize,
+            tier_scores: v
+                .get("scores")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_f64())
+                        .map(|s| s as f32)
+                        .collect()
+                })
+                .unwrap_or_default(),
+            latency_s: v.get("latency_s").as_f64().unwrap_or(0.0),
+        }))
+    }
+
+    /// Classify one feature vector; returns (prediction, exit_tier).
+    /// Overload sheds are reported as errors here; use
+    /// [`Client::infer_reply`] to distinguish them.
+    pub fn infer(&mut self, id: u64, features: &[f32]) -> Result<(u32, usize)> {
+        match self.infer_reply(id, features)? {
+            InferReply::Verdict(v) => Ok((v.prediction, v.exit_tier)),
+            InferReply::Overloaded { outstanding, limit } => anyhow::bail!(
+                "server error: overloaded ({outstanding}/{limit} outstanding)"
+            ),
+        }
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

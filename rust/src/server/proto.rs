@@ -61,6 +61,19 @@ pub fn render_error(msg: &str) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the load-shedding reply: the request was refused by admission
+/// control, not failed.  Keeps an `"error"` field so clients that only
+/// check for errors still treat it as a non-answer, while load-aware
+/// clients key on `"overloaded": true` and back off / retry.
+pub fn render_overloaded(outstanding: usize, limit: usize) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("error", Json::str("overloaded"));
+    obj.insert("overloaded", Json::Bool(true));
+    obj.insert("outstanding", Json::num(outstanding as f64));
+    obj.insert("limit", Json::num(limit as f64));
+    Json::Obj(obj).to_string()
+}
+
 /// Render the metrics snapshot.
 pub fn render_metrics(metrics: &Metrics) -> String {
     let mut inner = JsonObj::new();
@@ -132,5 +145,15 @@ mod tests {
         let line = render_error("boom \"x\"");
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("error").as_str(), Some("boom \"x\""));
+    }
+
+    #[test]
+    fn overloaded_line_shape() {
+        let line = render_overloaded(128, 128);
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("overloaded").as_bool(), Some(true));
+        assert_eq!(parsed.get("error").as_str(), Some("overloaded"));
+        assert_eq!(parsed.get("outstanding").as_u64(), Some(128));
+        assert_eq!(parsed.get("limit").as_u64(), Some(128));
     }
 }

@@ -1,0 +1,326 @@
+//! Open-loop load generation against the serving stack.
+//!
+//! The generator fires requests at their *scheduled* arrival times
+//! regardless of completions (open-loop), which is the regime where
+//! queueing delay and load shedding actually show up -- a closed-loop
+//! client self-throttles and hides the saturation knee.  Per-request
+//! latency is measured from the scheduled arrival to the verdict, so
+//! time spent waiting for serving capacity counts against the target.
+//!
+//! Pieces:
+//! * [`Trace`] (`trace.rs`) -- the replayable schedule + feature rows,
+//!   serialised via the ABDS format in `data::format`;
+//! * arrival processes -- `data::workload::Arrival` (constant, Poisson,
+//!   bursty, on-off) feeding [`Trace::synth`];
+//! * [`LoadTarget`] -- what is being load-tested: an in-process
+//!   [`ReplicaPool`] or a TCP server ([`TcpTarget`]);
+//! * [`SyntheticClassifier`] (`synthetic.rs`) -- an artifact-free
+//!   backend so saturation experiments run anywhere;
+//! * [`LoadGen::run`] -- the clock + worker pool, recording into the
+//!   log-bucketed histograms of a `Metrics` registry and returning a
+//!   [`LoadReport`] (goodput, shed count, p50/p99/p999).
+//!
+//! A worker blocks on one in-flight call, so `workers` bounds the
+//! concurrency the generator itself can sustain; size it above the
+//! pool's total admission capacity (`replicas * max_queue`) or the
+//! generator, not the server, becomes the bottleneck.
+
+pub mod synthetic;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::replica::{PoolError, ReplicaPool};
+use crate::metrics::{Histogram, Metrics};
+use crate::server::{Client, InferReply};
+use crate::types::{Request, Verdict};
+
+pub use synthetic::SyntheticClassifier;
+pub use trace::Trace;
+
+/// Outcome of one fired request.
+pub enum CallOutcome {
+    /// Answered with a verdict.
+    Done(Verdict),
+    /// Explicitly shed by admission control (the `Overloaded` verdict).
+    Shed,
+}
+
+/// A system under load test.  `session()` is called once per worker so
+/// targets can hold per-worker state (e.g. one TCP connection each).
+pub trait LoadTarget: Send + Sync {
+    fn session(&self) -> Result<Box<dyn LoadSession>, String>;
+}
+
+/// One worker's handle onto the target; `call` blocks until the request
+/// is answered, shed, or failed.
+pub trait LoadSession: Send {
+    fn call(&mut self, request: Request) -> Result<CallOutcome, String>;
+}
+
+impl LoadTarget for Arc<ReplicaPool> {
+    fn session(&self) -> Result<Box<dyn LoadSession>, String> {
+        Ok(Box::new(PoolSession(Arc::clone(self))))
+    }
+}
+
+struct PoolSession(Arc<ReplicaPool>);
+
+impl LoadSession for PoolSession {
+    fn call(&mut self, request: Request) -> Result<CallOutcome, String> {
+        match self.0.infer(request) {
+            Ok(v) => Ok(CallOutcome::Done(v)),
+            Err(PoolError::Overloaded { .. }) => Ok(CallOutcome::Shed),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+/// Load-test a line-JSON TCP server (see `server`); each worker opens
+/// its own connection.
+pub struct TcpTarget {
+    pub port: u16,
+}
+
+impl LoadTarget for TcpTarget {
+    fn session(&self) -> Result<Box<dyn LoadSession>, String> {
+        let client = Client::connect(self.port).map_err(|e| format!("connect: {e:#}"))?;
+        Ok(Box::new(TcpSession(client)))
+    }
+}
+
+struct TcpSession(Client);
+
+impl LoadSession for TcpSession {
+    fn call(&mut self, request: Request) -> Result<CallOutcome, String> {
+        // the wire protocol lives in server::Client; this is just the
+        // outcome mapping
+        match self.0.infer_reply(request.id, &request.features) {
+            Ok(InferReply::Verdict(v)) => Ok(CallOutcome::Done(v)),
+            Ok(InferReply::Overloaded { .. }) => Ok(CallOutcome::Shed),
+            Err(e) => Err(format!("{e:#}")),
+        }
+    }
+}
+
+/// Open-loop generator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadGen {
+    /// Concurrent in-flight request slots (worker threads).
+    pub workers: usize,
+}
+
+impl Default for LoadGen {
+    fn default() -> Self {
+        LoadGen { workers: 64 }
+    }
+}
+
+/// Aggregate result of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub n: usize,
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    pub offered_rps: f64,
+    pub goodput_rps: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+}
+
+impl LoadReport {
+    /// Table row cells (pairs with [`LoadReport::header`]).
+    pub fn header() -> &'static [&'static str] {
+        &["offered rps", "goodput rps", "done", "shed", "err", "p50", "p99", "p999"]
+    }
+
+    pub fn row_cells(&self) -> Vec<String> {
+        use crate::benchkit::fmt_time;
+        vec![
+            format!("{:.0}", self.offered_rps),
+            format!("{:.0}", self.goodput_rps),
+            self.completed.to_string(),
+            self.shed.to_string(),
+            self.errors.to_string(),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+            fmt_time(self.p999_s),
+        ]
+    }
+}
+
+impl LoadGen {
+    /// Replay `trace` against `target`, open loop.  Blocks until every
+    /// request is answered, shed, or failed.  Latencies land in the
+    /// registry's `loadgen_e2e_s` histogram (plus `loadgen_done` /
+    /// `loadgen_shed` / `loadgen_err` counters) and in the returned
+    /// report.
+    pub fn run(
+        &self,
+        target: &dyn LoadTarget,
+        trace: Arc<Trace>,
+        metrics: &Arc<Metrics>,
+    ) -> Result<LoadReport, String> {
+        let n = trace.len();
+        if n == 0 {
+            return Err("empty trace".to_string());
+        }
+        let workers = self.workers.max(1);
+        let completed = Arc::new(AtomicU64::new(0));
+        let shed = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        // fresh histogram for this run's report; the shared registry
+        // histogram accumulates across runs.  Counters are resolved once
+        // here so workers never touch the registry lock per request.
+        let local_hist = Arc::new(Histogram::default());
+        let reg_hist = metrics.histogram("loadgen_e2e_s");
+        let done_counter = metrics.counter("loadgen_done");
+        let shed_counter = metrics.counter("loadgen_shed");
+        let err_counter = metrics.counter("loadgen_err");
+
+        let (tx, rx) = channel::<(usize, Instant)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mut session = target
+                .session()
+                .map_err(|e| format!("worker {w} session: {e}"))?;
+            let rx = Arc::clone(&rx);
+            let trace = Arc::clone(&trace);
+            let completed = Arc::clone(&completed);
+            let shed = Arc::clone(&shed);
+            let errors = Arc::clone(&errors);
+            let local_hist = Arc::clone(&local_hist);
+            let reg_hist = Arc::clone(&reg_hist);
+            let done_counter = Arc::clone(&done_counter);
+            let shed_counter = Arc::clone(&shed_counter);
+            let err_counter = Arc::clone(&err_counter);
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("loadgen-{w}"))
+                    .spawn(move || loop {
+                        // standard mutex-guarded mpsc work queue; exactly
+                        // one idle worker owns the receiver at a time
+                        let msg = { rx.lock().unwrap().recv() };
+                        let (i, scheduled) = match msg {
+                            Ok(m) => m,
+                            Err(_) => break, // clock hung up, queue drained
+                        };
+                        let request = Request {
+                            id: i as u64,
+                            features: trace.row(i).to_vec(),
+                            arrival_s: trace.arrivals[i],
+                        };
+                        match session.call(request) {
+                            Ok(CallOutcome::Done(_)) => {
+                                let e2e = Instant::now()
+                                    .saturating_duration_since(scheduled)
+                                    .as_secs_f64();
+                                local_hist.record(e2e);
+                                reg_hist.record(e2e);
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                done_counter.inc();
+                            }
+                            Ok(CallOutcome::Shed) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                                shed_counter.inc();
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                err_counter.inc();
+                            }
+                        }
+                    })
+                    .map_err(|e| format!("spawn worker: {e}"))?,
+            );
+        }
+
+        // the clock: fire each request at its scheduled arrival time
+        let start = Instant::now();
+        for i in 0..n {
+            let due = start + Duration::from_secs_f64(trace.arrivals[i].max(0.0));
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            if tx.send((i, due)).is_err() {
+                break; // every worker died; counted as errors below
+            }
+        }
+        drop(tx); // workers drain the queue then exit
+        for j in joins {
+            let _ = j.join();
+        }
+        let elapsed_s = start.elapsed().as_secs_f64();
+
+        let completed = completed.load(Ordering::Relaxed);
+        let shed = shed.load(Ordering::Relaxed);
+        let errors = errors.load(Ordering::Relaxed);
+        // anything neither answered, shed, nor failed was never fired
+        // (all workers died mid-run) -- count it as an error
+        let unaccounted = (n as u64).saturating_sub(completed + shed + errors);
+        Ok(LoadReport {
+            n,
+            completed,
+            shed,
+            errors: errors + unaccounted,
+            elapsed_s,
+            offered_rps: trace.offered_rps(),
+            goodput_rps: completed as f64 / elapsed_s.max(1e-9),
+            mean_s: local_hist.mean(),
+            p50_s: local_hist.p50(),
+            p99_s: local_hist.p99(),
+            p999_s: local_hist.p999(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::replica::{PoolConfig, ReplicaPool};
+    use crate::data::workload::Arrival;
+
+    #[test]
+    fn loadgen_completes_under_light_load() {
+        let pool = Arc::new(ReplicaPool::spawn(
+            Arc::new(SyntheticClassifier::new(
+                3,
+                2,
+                Duration::ZERO,
+                Duration::from_micros(200),
+            )),
+            PoolConfig {
+                replicas: 2,
+                max_queue: 32,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(500),
+                },
+            },
+            Metrics::new(),
+        ));
+        let trace = Arc::new(Trace::synth(Arrival::Uniform { rate: 500.0 }, 100, 3, 4));
+        let metrics = Metrics::new();
+        let report = LoadGen { workers: 16 }
+            .run(&pool, Arc::clone(&trace), &metrics)
+            .unwrap();
+        assert_eq!(report.n, 100);
+        assert_eq!(report.completed, 100, "report {report:?}");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
+        assert!(report.goodput_rps > 0.0);
+        assert!(report.p50_s >= 0.0);
+        assert_eq!(metrics.counter("loadgen_done").get(), 100);
+        assert_eq!(metrics.histogram("loadgen_e2e_s").count(), 100);
+        assert_eq!(pool.total_outstanding(), 0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Synthetic batch classifier: a deterministic, artifact-free backend
+//! for load generation, replica-pool tests and benches.
+//!
+//! Models a serial accelerator with an affine batch cost
+//! `base + per_row * n` (the same shape as a PJRT dispatch: fixed launch
+//! overhead plus per-row compute).  The sleep runs on the pipeline's
+//! batcher thread, so one `SyntheticClassifier`-backed pipeline behaves
+//! like one serially-executing replica with throughput approaching
+//! `max_batch / (base + per_row * max_batch)` rows/s at saturation --
+//! which is exactly what the throughput-vs-replicas experiments need.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::cascade::{BatchClassifier, CascadeResult};
+
+/// Deterministic fake classifier with tunable service time.
+#[derive(Debug, Clone)]
+pub struct SyntheticClassifier {
+    /// Feature dimensionality requests must match.
+    pub dim: usize,
+    /// Number of simulated cascade levels (exit tiers are 1..=levels).
+    pub levels: usize,
+    /// Fixed per-batch cost (dispatch overhead).
+    pub base: Duration,
+    /// Marginal cost per row.
+    pub per_row: Duration,
+}
+
+impl SyntheticClassifier {
+    pub fn new(dim: usize, levels: usize, base: Duration, per_row: Duration) -> Self {
+        assert!(dim > 0 && levels > 0);
+        SyntheticClassifier { dim, levels, base, per_row }
+    }
+
+    /// Rows/second one replica sustains at batch size `b`.
+    pub fn capacity_rps(&self, b: usize) -> f64 {
+        let batch_s = (self.base + self.per_row * b as u32).as_secs_f64();
+        if batch_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            b as f64 / batch_s
+        }
+    }
+}
+
+impl BatchClassifier for SyntheticClassifier {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_levels(&self) -> usize {
+        self.levels
+    }
+
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        anyhow::ensure!(
+            features.len() == n * self.dim,
+            "feature buffer has {} floats, expected {}",
+            features.len(),
+            n * self.dim
+        );
+        let service = self.base + self.per_row * n as u32;
+        if !service.is_zero() {
+            std::thread::sleep(service);
+        }
+        Ok((0..n)
+            .map(|i| {
+                // deterministic pseudo-routing from the first feature so
+                // exit tiers vary without an RNG
+                let h = (features[i * self.dim].abs() * 997.0) as usize;
+                let exit_level = 1 + h % self.levels;
+                CascadeResult {
+                    prediction: (h % 2) as u32,
+                    exit_level,
+                    scores: vec![0.9; exit_level],
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_results_and_dim_check() {
+        let c = SyntheticClassifier::new(2, 3, Duration::ZERO, Duration::ZERO);
+        let a = c.classify_batch(&[0.5, 0.0, 1.5, 0.0], 2).unwrap();
+        let b = c.classify_batch(&[0.5, 0.0, 1.5, 0.0], 2).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prediction, y.prediction);
+            assert_eq!(x.exit_level, y.exit_level);
+            assert!(x.exit_level >= 1 && x.exit_level <= 3);
+        }
+        assert!(c.classify_batch(&[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    fn service_time_scales_with_batch() {
+        let c = SyntheticClassifier::new(
+            1,
+            1,
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        );
+        let t0 = std::time::Instant::now();
+        c.classify_batch(&[0.0; 4], 4).unwrap();
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(9), "slept only {dt:?}");
+        // capacity: 4 rows / 9ms
+        let cap = c.capacity_rps(4);
+        assert!((cap - 4.0 / 0.009).abs() < 1.0, "cap {cap}");
+    }
+}

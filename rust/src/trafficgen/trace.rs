@@ -1,0 +1,147 @@
+//! Replayable request traces, stored in the existing ABDS binary format.
+//!
+//! A trace is "a dataset with timestamps": per-request feature rows plus
+//! arrival times.  Rather than inventing a second container we reuse
+//! `data::format` -- features go in `x`, labels are zeroed, and the
+//! optional `difficulty` field carries the arrival time in seconds (f32,
+//! which is plenty for the sub-hour traces the loadgen replays).  Any
+//! ABDS reader/tooling therefore works on traces unchanged.
+
+use std::path::Path;
+
+use crate::data::format::{self, Dataset};
+use crate::data::workload::Arrival;
+use crate::util::rng::Rng;
+
+/// An in-memory request trace: row-major features + sorted arrival times.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Arrival time of request `i`, seconds from run start, ascending.
+    pub arrivals: Vec<f64>,
+    /// Row-major `n x dim` feature matrix.
+    pub features: Vec<f32>,
+    pub dim: usize,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Duration of the schedule (time of the last arrival).
+    pub fn span_s(&self) -> f64 {
+        self.arrivals.last().copied().unwrap_or(0.0)
+    }
+
+    /// Mean offered rate over the schedule.
+    pub fn offered_rps(&self) -> f64 {
+        let span = self.span_s();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.len() as f64 / span
+        }
+    }
+
+    /// Build a synthetic trace: `n` arrivals from `arrival`, features
+    /// uniform in [-1, 1) -- deterministic from `seed`.
+    pub fn synth(arrival: Arrival, n: usize, dim: usize, seed: u64) -> Trace {
+        assert!(dim > 0);
+        let mut rng = Rng::new(seed);
+        let arrivals = arrival.generate(n, &mut rng);
+        let features = (0..n * dim).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        Trace { arrivals, features, dim }
+    }
+
+    /// Lower a trace into an ABDS dataset (arrival times in `difficulty`).
+    pub fn to_dataset(&self) -> Dataset {
+        Dataset {
+            x: self.features.clone(),
+            y: vec![0; self.len()],
+            difficulty: Some(self.arrivals.iter().map(|&t| t as f32).collect()),
+            n: self.len(),
+            dim: self.dim,
+            classes: 1,
+        }
+    }
+
+    /// Reconstruct a trace from an ABDS dataset.  Requires the
+    /// `difficulty` field (the arrival times) to be present, non-negative
+    /// and sorted.
+    pub fn from_dataset(ds: &Dataset) -> Result<Trace, String> {
+        let diff = ds
+            .difficulty
+            .as_ref()
+            .ok_or("trace dataset has no difficulty field (arrival times)")?;
+        let arrivals: Vec<f64> = diff.iter().map(|&t| t as f64).collect();
+        if arrivals.iter().any(|&t| t < 0.0) {
+            return Err("trace has negative arrival times".to_string());
+        }
+        if arrivals.windows(2).any(|w| w[0] > w[1]) {
+            return Err("trace arrival times are not sorted".to_string());
+        }
+        Ok(Trace { arrivals, features: ds.x.clone(), dim: ds.dim })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        format::write_file(path, &self.to_dataset()).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace, String> {
+        let ds = format::read_file(path).map_err(|e| e.to_string())?;
+        Trace::from_dataset(&ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_shape_and_determinism() {
+        let a = Trace::synth(Arrival::Poisson { rate: 50.0 }, 30, 5, 9);
+        let b = Trace::synth(Arrival::Poisson { rate: 50.0 }, 30, 5, 9);
+        assert_eq!(a.len(), 30);
+        assert_eq!(a.features.len(), 150);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.features, b.features);
+        assert!(a.span_s() > 0.0);
+        assert!(a.offered_rps() > 0.0);
+        assert_eq!(a.row(2).len(), 5);
+    }
+
+    #[test]
+    fn abds_roundtrip() {
+        let t = Trace::synth(Arrival::Uniform { rate: 100.0 }, 20, 3, 1);
+        let ds = t.to_dataset();
+        let back = Trace::from_dataset(&ds).unwrap();
+        assert_eq!(back.len(), 20);
+        assert_eq!(back.dim, 3);
+        assert_eq!(back.features, t.features);
+        for (a, b) in back.arrivals.iter().zip(&t.arrivals) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn from_dataset_validates() {
+        let t = Trace::synth(Arrival::Uniform { rate: 10.0 }, 5, 2, 2);
+        let mut ds = t.to_dataset();
+        ds.difficulty = None;
+        assert!(Trace::from_dataset(&ds).is_err());
+        let mut ds = t.to_dataset();
+        ds.difficulty.as_mut().unwrap()[0] = 99.0; // unsorted
+        assert!(Trace::from_dataset(&ds).is_err());
+        let mut ds = t.to_dataset();
+        ds.difficulty.as_mut().unwrap()[0] = -1.0;
+        assert!(Trace::from_dataset(&ds).is_err());
+    }
+}

@@ -13,15 +13,24 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("invalid value for --{0}: {1:?}")]
     Invalid(String, String),
-    #[error("unexpected argument {0:?}")]
     Unexpected(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required option --{name}"),
+            CliError::Invalid(name, v) => write!(f, "invalid value for --{name}: {v:?}"),
+            CliError::Unexpected(arg) => write!(f, "unexpected argument {arg:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse a raw arg list (without argv[0]).

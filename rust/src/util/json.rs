@@ -77,15 +77,28 @@ impl<S: Into<String>> FromIterator<(S, Json)> for JsonObj {
 }
 
 /// Parse or typed-access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("json missing key {0:?}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ----- constructors ---------------------------------------------------

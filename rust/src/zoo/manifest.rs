@@ -5,16 +5,47 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io error reading manifest: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("unsupported manifest format_version {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Version(u64),
-    #[error("manifest inconsistency: {0}")]
     Inconsistent(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io error reading manifest: {e}"),
+            ManifestError::Json(e) => write!(f, "manifest json error: {e}"),
+            ManifestError::Version(v) => {
+                write!(f, "unsupported manifest format_version {v}")
+            }
+            ManifestError::Inconsistent(msg) => write!(f, "manifest inconsistency: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(e) => Some(e),
+            ManifestError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> ManifestError {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> ManifestError {
+        ManifestError::Json(e)
+    }
 }
 
 /// One cascade tier's metadata (ensemble of k models).

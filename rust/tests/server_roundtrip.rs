@@ -1,4 +1,7 @@
 //! Integration: serving pipeline + TCP front end over real artifacts.
+//!
+//! (These tests skip when `artifacts/manifest.json` is absent; the
+//! artifact-free serving path is covered by `loadgen_integration.rs`.)
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -7,36 +10,36 @@ use abc_serve::calib;
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::Cascade;
 use abc_serve::coordinator::pipeline::Pipeline;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::metrics::Metrics;
-use abc_serve::runtime::engine::Engine;
 use abc_serve::server::{serve, Client};
 use abc_serve::types::{Request, RuleKind};
 use abc_serve::zoo::manifest::Manifest;
 use abc_serve::zoo::registry::SuiteRuntime;
 
-fn boot(suite: &str) -> Option<(Arc<Pipeline>, Arc<SuiteRuntime>, Manifest)> {
+fn boot(suite: &str) -> Option<(Arc<Cascade>, Arc<SuiteRuntime>, Manifest)> {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !root.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
     let manifest = Manifest::load(root).unwrap();
-    let engine = Arc::new(Engine::cpu().unwrap());
+    let engine = Arc::new(abc_serve::runtime::engine::Engine::cpu().unwrap());
     let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false).unwrap());
     let val = rt.dataset(&manifest, "val").unwrap();
     let cal = calib::calibrate(&rt.tiers, RuleKind::MeanScore, &val, 100, 0.05).unwrap();
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy.clone()));
-    let pipeline = Arc::new(Pipeline::spawn(
-        cascade,
-        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1) },
-        Metrics::new(),
-    ));
-    Some((pipeline, rt, manifest))
+    Some((cascade, rt, manifest))
+}
+
+fn batcher_cfg() -> BatcherConfig {
+    BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(1) }
 }
 
 #[test]
 fn pipeline_single_and_concurrent_requests() {
-    let Some((pipeline, rt, manifest)) = boot("synth-sst2") else { return };
+    let Some((cascade, rt, manifest)) = boot("synth-sst2") else { return };
+    let pipeline = Arc::new(Pipeline::spawn(cascade, batcher_cfg(), Metrics::new()));
     let test = rt.dataset(&manifest, "test").unwrap();
 
     // single blocking request
@@ -67,14 +70,16 @@ fn pipeline_single_and_concurrent_requests() {
             .expect("no error");
         assert_eq!(v.request_id, 100 + i as u64);
     }
-    // metrics recorded
+    // metrics recorded; all outstanding slots released
     assert!(pipeline.metrics().counter("requests_submitted").get() >= 51);
     assert!(pipeline.metrics().histogram("request_latency_s").count() >= 51);
+    assert_eq!(pipeline.outstanding(), 0);
 }
 
 #[test]
 fn pipeline_rejects_bad_dim() {
-    let Some((pipeline, _, _)) = boot("synth-sst2") else { return };
+    let Some((cascade, _, _)) = boot("synth-sst2") else { return };
+    let pipeline = Arc::new(Pipeline::spawn(cascade, batcher_cfg(), Metrics::new()));
     let err = pipeline
         .submit(Request { id: 9, features: vec![0.0; 3], arrival_s: 0.0 })
         .unwrap_err();
@@ -83,10 +88,15 @@ fn pipeline_rejects_bad_dim() {
 
 #[test]
 fn tcp_server_roundtrip() {
-    let Some((pipeline, rt, manifest)) = boot("synth-sst2") else { return };
+    let Some((cascade, rt, manifest)) = boot("synth-sst2") else { return };
+    let pool = Arc::new(ReplicaPool::spawn(
+        cascade,
+        PoolConfig { replicas: 2, max_queue: 64, batcher: batcher_cfg() },
+        Metrics::new(),
+    ));
     let test = rt.dataset(&manifest, "test").unwrap();
     let port = 7991;
-    let server = std::thread::spawn(move || serve(pipeline, port));
+    let server = std::thread::spawn(move || serve(pool, port));
     std::thread::sleep(Duration::from_millis(300));
 
     let mut client = Client::connect(port).unwrap();
@@ -106,7 +116,7 @@ fn tcp_server_roundtrip() {
         .roundtrip(r#"{"id": 7, "features": [1.0, 2.0]}"#)
         .unwrap();
     assert!(reply.contains("error"), "got {reply}");
-    // shutdown
+    // shutdown joins cleanly (handler read timeouts release the threads)
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }
