@@ -40,8 +40,21 @@ pub struct ThetaEstimate {
 /// Candidate thresholds are the distinct observed scores (plus a sentinel
 /// above the max, which always satisfies the constraint by deferring
 /// everything -- the paper's always-feasible r(x)=1).
+///
+/// An EMPTY calibration set degrades to that sentinel (theta = +inf,
+/// nothing selected): with no evidence, the only safe policy is to
+/// defer everything.  This is what `calibrate_conditional` needs for
+/// tiers that no calibration sample reaches, and what the gear planner
+/// gets for a candidate `k` with no data.
 pub fn estimate_theta(points: &[CalPoint], epsilon: f64) -> ThetaEstimate {
-    assert!(!points.is_empty(), "need calibration samples");
+    if points.is_empty() {
+        return ThetaEstimate {
+            theta: f32::INFINITY,
+            failure_rate: 0.0,
+            selection_rate: 0.0,
+            n: 0,
+        };
+    }
     let n = points.len();
     // Sort descending by score; sweep thresholds from high to low,
     // keeping running counts of selected-and-wrong.
@@ -51,7 +64,6 @@ pub fn estimate_theta(points: &[CalPoint], epsilon: f64) -> ThetaEstimate {
     // theta candidates: just below each distinct score value.  Using the
     // score value itself works because acceptance is strict (> theta):
     // theta = s_i accepts exactly the points with score > s_i.
-    let best: Option<(f32, usize, usize)> = None; // (theta, wrong_sel, n_sel)
     let mut wrong_sel = 0usize;
     let mut n_sel = 0usize;
     let mut i = 0;
@@ -80,7 +92,6 @@ pub fn estimate_theta(points: &[CalPoint], epsilon: f64) -> ThetaEstimate {
         } else {
             break; // failure rate only grows as theta decreases
         }
-        let _ = &best; // (kept for clarity; feasible tracks the best)
     }
     let (theta, wrong, sel) = feasible;
     ThetaEstimate {
@@ -195,6 +206,64 @@ mod tests {
         // generalisation slack: 5% tolerance + binomial noise
         assert!(fail <= 0.05 + 0.05, "holdout failure {fail}");
         assert!(sel > 0.0);
+    }
+
+    #[test]
+    fn empty_calibration_set_defers_everything() {
+        let est = estimate_theta(&[], 0.05);
+        assert_eq!(est.theta, f32::INFINITY);
+        assert_eq!(est.selection_rate, 0.0);
+        assert_eq!(est.failure_rate, 0.0);
+        assert_eq!(est.n, 0);
+        // the sentinel composes with evaluate_theta: nothing selected
+        let holdout = pts(&[(0.9, true), (0.5, false)]);
+        assert_eq!(evaluate_theta(&holdout, est.theta), (0.0, 0.0));
+    }
+
+    #[test]
+    fn all_agree_points_share_one_fate() {
+        // full agreement everywhere (score 1.0): a single threshold
+        // candidate -- select all (if clean) or nothing (if any wrong)
+        let clean = pts(&[(1.0, true), (1.0, true), (1.0, true)]);
+        let est = estimate_theta(&clean, 0.0);
+        assert_eq!(est.theta, f32::NEG_INFINITY);
+        assert_eq!(est.selection_rate, 1.0);
+        assert_eq!(est.failure_rate, 0.0);
+
+        let tainted = pts(&[(1.0, true), (1.0, true), (1.0, false)]);
+        let strict = estimate_theta(&tainted, 0.0);
+        assert_eq!(strict.selection_rate, 0.0, "one failure must block eps=0");
+        assert_eq!(strict.theta, 1.0);
+        // a budget of 1/3 admits the whole agreement group
+        let lax = estimate_theta(&tainted, 1.0 / 3.0 + 1e-9);
+        assert_eq!(lax.selection_rate, 1.0);
+        assert!((lax.failure_rate - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epsilon_zero_is_exact_not_lenient() {
+        // eps = 0.0 exactly (not 1e-9): only a perfect prefix selects
+        let p = pts(&[(0.9, true), (0.8, true), (0.7, false), (0.6, true)]);
+        let est = estimate_theta(&p, 0.0);
+        assert_eq!(est.failure_rate, 0.0);
+        // the wrong point at 0.7 caps selection at the two above it
+        assert!((est.selection_rate - 0.5).abs() < 1e-12);
+        assert!((est.theta - 0.7).abs() < 1e-6, "theta {}", est.theta);
+    }
+
+    #[test]
+    fn ties_at_the_sentinel_threshold() {
+        // every point shares the max score AND the sentinel equals that
+        // score: the group is admitted or refused atomically
+        let p = pts(&[(0.5, true), (0.5, true), (0.5, false)]);
+        let strict = estimate_theta(&p, 0.1);
+        // group failure rate 1/3 > 0.1: sentinel (defer all) wins
+        assert_eq!(strict.selection_rate, 0.0);
+        assert_eq!(strict.theta, 0.5);
+        assert_eq!(evaluate_theta(&p, strict.theta), (0.0, 0.0));
+        let lax = estimate_theta(&p, 0.5);
+        assert_eq!(lax.selection_rate, 1.0);
+        assert_eq!(lax.theta, f32::NEG_INFINITY);
     }
 
     #[test]

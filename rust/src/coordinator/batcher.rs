@@ -6,13 +6,21 @@
 //! leverage of §5.1.1).  Generic over the executor closure so the policy
 //! is testable without PJRT.
 //!
+//! `max_batch` is runtime-adjustable (`set_max_batch`): the gear
+//! controller retunes batch size on a gear shift without restarting the
+//! collector.  The cap is re-read at every collector step, so a change
+//! applies from the next flush decision on; items already queued are
+//! never dropped by a cap change (a shrink just splits them across more
+//! flushes).
+//!
 //! Invariants (property-tested in rust/tests/coordinator_props.rs):
 //! * no request is dropped or duplicated;
 //! * within a flush, requests keep arrival order;
 //! * flushes are FIFO: a request never overtakes an earlier one.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,6 +62,7 @@ struct Gate<T> {
 /// Handle for submitting items to a running batcher.
 pub struct Batcher<T> {
     gate: Mutex<Gate<T>>,
+    max_batch: Arc<AtomicUsize>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -65,12 +74,30 @@ impl<T: Send + 'static> Batcher<T> {
         F: FnMut(Vec<Item<T>>) + Send + 'static,
     {
         assert!(cfg.max_batch > 0);
+        let max_batch = Arc::new(AtomicUsize::new(cfg.max_batch));
+        let cap = Arc::clone(&max_batch);
         let (tx, rx) = channel::<Msg<T>>();
         let worker = std::thread::Builder::new()
             .name("abc-batcher".into())
-            .spawn(move || collector_loop(rx, cfg, &mut flush))
+            .spawn(move || collector_loop(rx, cfg, &cap, &mut flush))
             .expect("spawn batcher");
-        Batcher { gate: Mutex::new(Gate { tx, closed: false }), worker: Some(worker) }
+        Batcher {
+            gate: Mutex::new(Gate { tx, closed: false }),
+            max_batch,
+            worker: Some(worker),
+        }
+    }
+
+    /// Retune the flush size cap.  Takes effect at the collector's next
+    /// step; queued items are never dropped (a shrink splits them across
+    /// more flushes).  Zero is clamped to 1.
+    pub fn set_max_batch(&self, max_batch: usize) {
+        self.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+    }
+
+    /// The currently configured flush size cap.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
     }
 
     /// Enqueue one item.  Returns Err if the batcher has shut down;
@@ -112,8 +139,12 @@ impl<T> Drop for Batcher<T> {
     }
 }
 
-fn collector_loop<T, F>(rx: Receiver<Msg<T>>, cfg: BatcherConfig, flush: &mut F)
-where
+fn collector_loop<T, F>(
+    rx: Receiver<Msg<T>>,
+    cfg: BatcherConfig,
+    max_batch: &AtomicUsize,
+    flush: &mut F,
+) where
     F: FnMut(Vec<Item<T>>),
 {
     let mut pending: Vec<Item<T>> = Vec::with_capacity(cfg.max_batch);
@@ -127,13 +158,13 @@ where
             Some(dl) => {
                 let now = Instant::now();
                 if now >= dl {
-                    flush_batch(&mut pending, &mut deadline, flush);
+                    flush_batch(&mut pending, &mut deadline, max_batch, flush);
                     continue;
                 }
                 match rx.recv_timeout(dl - now) {
                     Ok(m) => m,
                     Err(RecvTimeoutError::Timeout) => {
-                        flush_batch(&mut pending, &mut deadline, flush);
+                        flush_batch(&mut pending, &mut deadline, max_batch, flush);
                         continue;
                     }
                     Err(RecvTimeoutError::Disconnected) => break,
@@ -146,8 +177,10 @@ where
                     deadline = Some(Instant::now() + cfg.max_wait);
                 }
                 pending.push(item);
-                if pending.len() >= cfg.max_batch {
-                    flush_batch(&mut pending, &mut deadline, flush);
+                // re-read the cap each step: a gear shift may have retuned
+                // it since the last flush
+                if pending.len() >= max_batch.load(Ordering::Relaxed).max(1) {
+                    flush_batch(&mut pending, &mut deadline, max_batch, flush);
                 }
             }
             Msg::Shutdown => break,
@@ -158,20 +191,29 @@ where
     // so `pending` is everything outstanding; the try_recv sweep is
     // defense in depth for the handle-dropped-without-shutdown path)
     if !pending.is_empty() {
-        flush(std::mem::take(&mut pending));
+        let mut no_deadline = None;
+        flush_batch(&mut pending, &mut no_deadline, max_batch, flush);
     }
     while let Ok(Msg::Push(item)) = rx.try_recv() {
         flush(vec![item]);
     }
 }
 
-fn flush_batch<T, F>(pending: &mut Vec<Item<T>>, deadline: &mut Option<Instant>, flush: &mut F)
-where
+/// Flush `pending` in FIFO chunks of at most the current cap, so the
+/// `1..=max_batch` flush-size invariant survives a cap shrink that
+/// happened while items were already queued.
+fn flush_batch<T, F>(
+    pending: &mut Vec<Item<T>>,
+    deadline: &mut Option<Instant>,
+    max_batch: &AtomicUsize,
+    flush: &mut F,
+) where
     F: FnMut(Vec<Item<T>>),
 {
     *deadline = None;
-    if !pending.is_empty() {
-        flush(std::mem::take(pending));
+    while !pending.is_empty() {
+        let take = pending.len().min(max_batch.load(Ordering::Relaxed).max(1));
+        flush(pending.drain(..take).collect());
     }
 }
 
@@ -294,6 +336,46 @@ mod tests {
         }
         // drop added nothing: the boundary batch was complete
         assert_eq!(flushes.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn set_max_batch_applies_to_later_flushes() {
+        let flushes = Arc::new(Mutex::new(Vec::new()));
+        {
+            let fl = Arc::clone(&flushes);
+            let cfg =
+                BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(3600) };
+            let b = Batcher::spawn(cfg, move |batch: Vec<Item<usize>>| {
+                fl.lock().unwrap().push(
+                    batch.into_iter().map(|i| i.payload).collect::<Vec<_>>(),
+                );
+            });
+            assert_eq!(b.max_batch(), 8);
+            b.set_max_batch(2);
+            assert_eq!(b.max_batch(), 2);
+            for i in 0..6 {
+                b.push(i).unwrap();
+            }
+            for _ in 0..500 {
+                if flushes.lock().unwrap().iter().flatten().count() == 6 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        let got = flushes.lock().unwrap().clone();
+        let all: Vec<usize> = got.iter().flatten().copied().collect();
+        assert_eq!(all, (0..6).collect::<Vec<_>>(), "order/conservation");
+        // cap 2 bounds every flush; the 3600s max_wait means only the
+        // size trigger can have fired
+        assert!(got.iter().all(|f| f.len() <= 2), "cap ignored: {got:?}");
+        // zero clamps to 1 instead of wedging the collector
+        let b2: Batcher<usize> = Batcher::spawn(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            |_| {},
+        );
+        b2.set_max_batch(0);
+        assert_eq!(b2.max_batch(), 1);
     }
 
     #[test]

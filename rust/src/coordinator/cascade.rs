@@ -47,6 +47,19 @@ pub trait BatchClassifier: Send + Sync {
     fn n_levels(&self) -> usize;
     /// Classify `n` row-major `n x dim` rows, results in input order.
     fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>>;
+    /// Classify under an active gear (`planner::GearConfig`): backends
+    /// that can retune per batch (threshold overrides, scaled synthetic
+    /// service time) override this; the default ignores the gear so
+    /// every backend stays usable behind a geared pipeline.
+    fn classify_batch_geared(
+        &self,
+        features: &[f32],
+        n: usize,
+        gear: &crate::planner::gear::GearConfig,
+    ) -> Result<Vec<CascadeResult>> {
+        let _ = gear;
+        self.classify_batch(features, n)
+    }
 }
 
 /// A cascade of loaded tier executables + its deferral policy.
@@ -66,6 +79,15 @@ impl BatchClassifier for Cascade {
 
     fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
         Cascade::classify_batch(self, features, n)
+    }
+
+    fn classify_batch_geared(
+        &self,
+        features: &[f32],
+        n: usize,
+        gear: &crate::planner::gear::GearConfig,
+    ) -> Result<Vec<CascadeResult>> {
+        self.classify_batch_with(features, n, Some(&gear.thetas))
     }
 }
 
@@ -91,6 +113,20 @@ impl Cascade {
     /// Classify `n` rows (row-major `n x dim`).  Returns per-sample
     /// results in input order.
     pub fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        self.classify_batch_with(features, n, None)
+    }
+
+    /// Classify with optional per-tier threshold overrides (the active
+    /// gear's thetas; see `planner`).  `thetas[i]` replaces the
+    /// calibrated threshold of tier `i+1` when present; tiers past the
+    /// override slice -- and always the final tier -- keep their policy
+    /// behaviour.
+    pub fn classify_batch_with(
+        &self,
+        features: &[f32],
+        n: usize,
+        thetas: Option<&[f32]>,
+    ) -> Result<Vec<CascadeResult>> {
         let dim = self.tiers[0].dim;
         assert_eq!(features.len(), n * dim, "feature buffer size");
         let mut results: Vec<Option<CascadeResult>> = vec![None; n];
@@ -102,6 +138,17 @@ impl Cascade {
             if active.is_empty() {
                 break;
             }
+            // the rule kind stays the policy's; only theta is overridden,
+            // and never for the final tier (it must accept everything)
+            let over = match (thetas, self.policy.rule(level0)) {
+                (Some(ts), Some(r)) if level0 + 1 < self.tiers.len() => ts
+                    .get(level0)
+                    .map(|&theta| crate::coordinator::deferral::TierRule {
+                        rule: r.rule,
+                        theta,
+                    }),
+                _ => None,
+            };
             // gather the active subset
             let mut sub = Vec::with_capacity(active.len() * dim);
             for &i in &active {
@@ -112,7 +159,11 @@ impl Cascade {
             for (j, &i) in active.iter().enumerate() {
                 let out = &outs[j];
                 active_scores[i].push(self.policy.score(level0, out));
-                match self.policy.decide(level0, out) {
+                let decision = match &over {
+                    Some(rule) => rule.decide(out),
+                    None => self.policy.decide(level0, out),
+                };
+                match decision {
                     Decision::Accept => {
                         results[i] = Some(CascadeResult {
                             prediction: out.majority,

@@ -23,6 +23,7 @@ use anyhow::Result;
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Item};
 use crate::coordinator::cascade::BatchClassifier;
 use crate::metrics::Metrics;
+use crate::planner::gear::GearHandle;
 use crate::types::{Request, Verdict};
 
 struct Job {
@@ -73,15 +74,35 @@ impl Pipeline {
         cfg: BatcherConfig,
         metrics: Arc<Metrics>,
     ) -> Pipeline {
+        Pipeline::spawn_with_gear(classifier, cfg, metrics, None)
+    }
+
+    /// Spawn with an optional shared gear handle: each flushed batch is
+    /// classified under the gear config active *at flush time*
+    /// (`BatchClassifier::classify_batch_geared`).  A gear swap touches
+    /// only batches formed after it; responses for in-flight requests
+    /// are unaffected, so shifts never drop or duplicate work.
+    pub fn spawn_with_gear(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+        gear: Option<Arc<GearHandle>>,
+    ) -> Pipeline {
         let dim = classifier.dim();
         let m = Arc::clone(&metrics);
         let outstanding = Arc::new(AtomicUsize::new(0));
         let out = Arc::clone(&outstanding);
         let submitted = metrics.counter("requests_submitted");
         let batcher = Batcher::spawn(cfg, move |batch: Vec<Item<Job>>| {
-            process_batch(classifier.as_ref(), &m, &out, batch);
+            process_batch(classifier.as_ref(), &m, &out, gear.as_deref(), batch);
         });
         Pipeline { batcher, metrics, outstanding, submitted, dim }
+    }
+
+    /// Retune the dynamic batcher's flush cap (gear shifts; takes
+    /// effect from the next flush decision on).
+    pub fn set_max_batch(&self, max_batch: usize) {
+        self.batcher.set_max_batch(max_batch);
     }
 
     /// Requests accepted but not yet answered (queued + in execution).
@@ -158,6 +179,7 @@ fn process_batch(
     classifier: &dyn BatchClassifier,
     metrics: &Metrics,
     outstanding: &AtomicUsize,
+    gear: Option<&GearHandle>,
     batch: Vec<Item<Job>>,
 ) {
     let n = batch.len();
@@ -166,8 +188,15 @@ fn process_batch(
     for item in &batch {
         features.extend_from_slice(&item.payload.request.features);
     }
+    // one gear snapshot per batch: every row in the batch runs under
+    // the same config even if the controller swaps mid-execution
+    let active = gear.map(|h| h.load());
     let t0 = Instant::now();
-    match classifier.classify_batch(&features, n) {
+    let classified = match &active {
+        Some(cfg) => classifier.classify_batch_geared(&features, n, cfg),
+        None => classifier.classify_batch(&features, n),
+    };
+    match classified {
         Ok(results) => {
             metrics.counter("batches_ok").inc();
             metrics.histogram("batch_size").record(n as f64);

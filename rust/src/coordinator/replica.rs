@@ -21,6 +21,7 @@ use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::cascade::BatchClassifier;
 use crate::coordinator::pipeline::{Pipeline, SubmitRejection};
 use crate::metrics::Metrics;
+use crate::planner::gear::GearHandle;
 use crate::types::{Request, Verdict};
 
 /// Sizing knobs for a replica pool.
@@ -75,6 +76,9 @@ pub struct ReplicaPool {
     max_queue: usize,
     shed_counter: Arc<crate::metrics::Counter>,
     metrics: Arc<Metrics>,
+    /// Shared gear handle when the pool serves under a gear plan
+    /// (`spawn_geared`); the controller swaps it, pipelines read it.
+    gear: Option<Arc<GearHandle>>,
 }
 
 impl ReplicaPool {
@@ -86,10 +90,39 @@ impl ReplicaPool {
         cfg: PoolConfig,
         metrics: Arc<Metrics>,
     ) -> ReplicaPool {
+        ReplicaPool::spawn_inner(classifier, cfg, metrics, None)
+    }
+
+    /// Spawn with a shared gear handle: every replica classifies each
+    /// batch under the gear config active at flush time, and
+    /// [`ReplicaPool::set_max_batch`] lets the controller retune the
+    /// batchers on a shift.
+    pub fn spawn_geared(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: PoolConfig,
+        metrics: Arc<Metrics>,
+        gear: Arc<GearHandle>,
+    ) -> ReplicaPool {
+        ReplicaPool::spawn_inner(classifier, cfg, metrics, Some(gear))
+    }
+
+    fn spawn_inner(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: PoolConfig,
+        metrics: Arc<Metrics>,
+        gear: Option<Arc<GearHandle>>,
+    ) -> ReplicaPool {
         assert!(cfg.replicas > 0, "pool needs at least one replica");
         assert!(cfg.max_queue > 0, "max_queue must be > 0");
         let replicas: Vec<Pipeline> = (0..cfg.replicas)
-            .map(|_| Pipeline::spawn(Arc::clone(&classifier), cfg.batcher, Arc::clone(&metrics)))
+            .map(|_| {
+                Pipeline::spawn_with_gear(
+                    Arc::clone(&classifier),
+                    cfg.batcher,
+                    Arc::clone(&metrics),
+                    gear.clone(),
+                )
+            })
             .collect();
         let replica_counters = (0..cfg.replicas)
             .map(|i| metrics.counter(&format!("replica_{i}_requests")))
@@ -101,6 +134,7 @@ impl ReplicaPool {
             max_queue: cfg.max_queue,
             shed_counter,
             metrics,
+            gear,
         }
     }
 
@@ -110,6 +144,18 @@ impl ReplicaPool {
 
     pub fn max_queue(&self) -> usize {
         self.max_queue
+    }
+
+    /// The shared gear handle, when serving under a plan.
+    pub fn gear(&self) -> Option<&Arc<GearHandle>> {
+        self.gear.as_ref()
+    }
+
+    /// Retune every replica's dynamic-batcher flush cap (gear shifts).
+    pub fn set_max_batch(&self, max_batch: usize) {
+        for p in &self.replicas {
+            p.set_max_batch(max_batch);
+        }
     }
 
     /// Total outstanding requests across all replicas.
@@ -281,6 +327,56 @@ mod tests {
             rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         assert_eq!(pool.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn geared_pool_swaps_without_losing_requests() {
+        use crate::planner::gear::{GearConfig, GearHandle};
+        let handle = GearHandle::new(GearConfig {
+            gear_id: 0,
+            thetas: vec![0.6],
+            work_factor: 1.0,
+            max_batch: 4,
+        });
+        let pool = ReplicaPool::spawn_geared(
+            synth(500),
+            PoolConfig {
+                replicas: 2,
+                max_queue: 64,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(200),
+                },
+            },
+            Metrics::new(),
+            Arc::clone(&handle),
+        );
+        assert!(pool.gear().is_some());
+        // submit a wave, swap gears mid-flight, submit another wave
+        let mut rxs = Vec::new();
+        for id in 0..30 {
+            rxs.push(pool.submit(req(id)).unwrap());
+        }
+        handle.store(GearConfig {
+            gear_id: 1,
+            thetas: vec![0.3],
+            work_factor: 0.25,
+            max_batch: 8,
+        });
+        pool.set_max_batch(8);
+        for id in 30..60 {
+            rxs.push(pool.submit(req(id)).unwrap());
+        }
+        // every request is answered exactly once, none dropped
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let v = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("verdict arrives")
+                .expect("no error");
+            assert_eq!(v.request_id, i as u64);
+        }
+        assert_eq!(pool.total_outstanding(), 0);
+        assert_eq!(handle.generation(), 1);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod cost;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod planner;
 pub mod error;
 pub mod types;
 pub mod util;

@@ -1,11 +1,17 @@
-//! abc-serve leader binary: serve / classify / calibrate / exp / info.
+//! abc-serve leader binary: serve / classify / calibrate / plan / exp.
 //!
 //! ```text
 //! repro info        [--artifacts DIR]
 //! repro calibrate   --suite S [--rule vote|score] [--epsilon E] [--n N]
 //! repro classify    --suite S [--split test] [--rule vote|score] [--epsilon E]
+//! repro plan        [--out plan.json] [--ks 1,3,5] [--epsilons 0.01,...]
+//!                   [--batches 4,8,16,32] [--replicas 2] [--gamma 0.05]
+//!                   [--rho 0.0] [--top-acc 0.95] [--cal-n 400]
+//!                   (synthetic calibration: no artifacts needed)
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
 //!                   [--replicas 1] [--max-queue 256]
+//!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
+//!                   re-calibrated on the suite, ladder rescaled to R)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
 //!                   [--replicas 1] [--max-queue 64] [--workers 128]
 //!                   (synthetic backend: no artifacts needed)
@@ -24,9 +30,12 @@ use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
+use abc_serve::planner::{
+    search, Controller, ControllerConfig, GearHandle, GearPlan, PlannerConfig,
+};
 use abc_serve::runtime::engine::Engine;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
-use abc_serve::types::RuleKind;
+use abc_serve::types::{Parallelism, RuleKind};
 use abc_serve::util::cli::Args;
 use abc_serve::util::table::{fnum, human, Table};
 use abc_serve::zoo::manifest::Manifest;
@@ -50,6 +59,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "info" => cmd_info(&rest),
         "calibrate" => cmd_calibrate(&rest),
         "classify" => cmd_classify(&rest),
+        "plan" => cmd_plan(&rest),
         "serve" => cmd_serve(&rest),
         "loadgen" => cmd_loadgen(&rest),
         "exp" => cmd_exp(&rest),
@@ -69,8 +79,11 @@ fn print_usage() {
          \x20 info                          show manifest / zoo summary\n\
          \x20 calibrate --suite S           estimate per-tier thetas (App. B)\n\
          \x20 classify  --suite S           run the calibrated cascade on a split\n\
+         \x20 plan      [--out plan.json]   emit a Pareto gear plan (synthetic\n\
+         \x20                               calibration; no artifacts needed)\n\
          \x20 serve     --suite S           line-JSON TCP serving (port 7878)\n\
          \x20                               [--replicas N] [--max-queue Q]\n\
+         \x20                               [--plan plan.json] (adaptive gears)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
          \x20                               backend (no artifacts needed)\n\
          \x20 exp <id|all>                  regenerate paper figures/tables\n\
@@ -186,6 +199,58 @@ fn cmd_classify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Emit a Pareto-optimal gear plan over synthetic calibration data
+/// (artifact-free; see planner::search for the candidate model).
+fn cmd_plan(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "plan.json");
+    let cfg = PlannerConfig {
+        ks: args.usize_list_or("ks", &[1, 3, 5])?,
+        epsilons: args.f64_list_or("epsilons", &[0.01, 0.03, 0.05, 0.10])?,
+        batches: args.usize_list_or("batches", &[4, 8, 16, 32])?,
+        replicas: args.usize_or("replicas", 2)?,
+        gamma: args.f64_or("gamma", 0.05)?,
+        rho: Parallelism(args.f64_or("rho", 0.0)?.clamp(0.0, 1.0)),
+        top_accuracy: args.f64_or("top-acc", 0.95)?,
+        batch_overhead_s: args.u64_or("base-us", 200)? as f64 * 1e-6,
+        top_row_s: args.u64_or("row-us", 2000)? as f64 * 1e-6,
+    };
+    let cal_n = args.usize_or("cal-n", 400)?;
+    let member_acc = args.f64_or("member-acc", 0.80)?;
+    let seed = args.u64_or("seed", 42)?;
+    anyhow::ensure!(cfg.replicas > 0, "--replicas must be > 0");
+    anyhow::ensure!(cal_n > 0, "--cal-n must be > 0");
+    let cal: Vec<_> = cfg
+        .ks
+        .iter()
+        .map(|&k| (k, search::synthetic_cal_points(k, cal_n, member_acc, seed)))
+        .collect();
+    let plan = search::plan(&cfg, &cal)?;
+    let mut table = Table::new(
+        format!(
+            "gear plan: {} gears over {} candidates (cal-n {cal_n})",
+            plan.len(),
+            cfg.ks.len() * cfg.epsilons.len() * cfg.batches.len()
+        ),
+        &["gear", "k", "eps", "theta", "batch", "accuracy", "rel cost", "sustainable rps"],
+    );
+    for g in &plan.gears {
+        table.row(vec![
+            g.id.to_string(),
+            g.k.to_string(),
+            fnum(g.epsilon, 3),
+            fnum(g.theta as f64, 3),
+            g.max_batch.to_string(),
+            fnum(g.accuracy, 4),
+            fnum(g.relative_cost, 3),
+            fnum(g.sustainable_rps, 0),
+        ]);
+    }
+    println!("{}", table.render());
+    plan.save(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let suite = args.req_str("suite")?;
     let port = args.u64_or("port", 7878)? as u16;
@@ -197,25 +262,107 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_queue = args.usize_or("max-queue", 256)?;
     anyhow::ensure!(replicas > 0, "--replicas must be > 0");
     anyhow::ensure!(max_queue > 0, "--max-queue must be > 0");
+    let plan = match args.get("plan") {
+        Some(path) => Some(GearPlan::load(path)?),
+        None => None,
+    };
     let manifest = Manifest::load(artifacts_dir(args))?;
     let engine = Arc::new(Engine::cpu()?);
     let rt = Arc::new(SuiteRuntime::load(engine, &manifest, suite, false)?);
     let val = rt.dataset(&manifest, "val")?;
     let cal = calib::calibrate(&rt.tiers, rule, &val, 100, epsilon)?;
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy));
+    // A plan's thetas were calibrated on the PLAN's data (synthetic vote
+    // fractions for `repro plan`), not this suite's score scale.
+    // Re-ground every gear's theta on this cascade's tier-1 calibration
+    // points at the gear's stored epsilon, so the Appendix-B failure
+    // bound the threshold encodes actually holds for this deployment.
+    // The gear's k/replicas stay advisory: serving uses the suite's
+    // tiers and the --replicas flag.
+    let plan = match plan {
+        Some(mut plan) => {
+            let points = calib::collect_points(&rt.tiers[0], rule, &val, 100)?;
+            for g in &mut plan.gears {
+                let est = calib::threshold::estimate_theta(&points, g.epsilon);
+                g.theta = est.theta;
+            }
+            println!(
+                "gear thetas re-calibrated on {suite}/val ({} points, rule {}); \
+                 plan k/replicas columns are advisory here",
+                points.len(),
+                rule.name()
+            );
+            // The controller's utilisation watermarks divide by
+            // sustainable_rps, which the plan priced with ITS deployment
+            // model.  --top-rps (this deployment's measured top-gear
+            // capacity, e.g. from `repro loadgen`) rescales the whole
+            // ladder; without it the planned absolute throughputs stand
+            // and only the queue-pressure/SLO triggers are model-free.
+            let top_rps = args.f64_or("top-rps", 0.0)?;
+            if top_rps > 0.0 {
+                let f = top_rps / plan.top().sustainable_rps;
+                for g in &mut plan.gears {
+                    g.sustainable_rps *= f;
+                }
+                println!(
+                    "gear ladder rescaled to measured top capacity {top_rps:.0} rps"
+                );
+            } else {
+                println!(
+                    "warning: no --top-rps given; utilisation watermarks use the \
+                     plan's modelled throughputs, which may not match this \
+                     hardware (queue-pressure shifting still applies)"
+                );
+            }
+            Some(plan)
+        }
+        None => None,
+    };
     let metrics = Metrics::new();
-    let pool = Arc::new(ReplicaPool::spawn(
-        cascade,
-        PoolConfig {
-            replicas,
-            max_queue,
-            batcher: BatcherConfig {
-                max_batch,
-                max_wait: Duration::from_millis(max_wait_ms),
-            },
+    let pool_cfg = |max_batch: usize| PoolConfig {
+        replicas,
+        max_queue,
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
         },
-        Arc::clone(&metrics),
-    ));
+    };
+    // keep the controller alive for the lifetime of serve(): dropping
+    // it stops the sampling thread
+    let _controller;
+    let pool = match plan {
+        Some(plan) => {
+            let top = plan.top();
+            let handle = GearHandle::new(top.config());
+            let pool = Arc::new(ReplicaPool::spawn_geared(
+                cascade,
+                pool_cfg(top.max_batch),
+                Arc::clone(&metrics),
+                Arc::clone(&handle),
+            ));
+            println!(
+                "gear plan: {} gears, top sustains {:.0} rps at accuracy {:.4}",
+                plan.len(),
+                top.sustainable_rps,
+                top.accuracy
+            );
+            _controller = Some(Controller::spawn(
+                Arc::clone(&pool),
+                plan,
+                handle,
+                ControllerConfig::default(),
+            ));
+            pool
+        }
+        None => {
+            _controller = None;
+            Arc::new(ReplicaPool::spawn(
+                cascade,
+                pool_cfg(max_batch),
+                Arc::clone(&metrics),
+            ))
+        }
+    };
     println!(
         "serving {suite} on 127.0.0.1:{port} (line-JSON protocol, \
          {replicas} replicas, max-queue {max_queue}/replica)"

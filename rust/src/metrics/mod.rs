@@ -1,4 +1,5 @@
-//! Serving metrics: named counters + log-bucketed histograms.
+//! Serving metrics: named counters, point-in-time gauges and
+//! log-bucketed histograms.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,6 +20,28 @@ impl Counter {
 
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time value (current gear, arrival-rate EWMA, queue depth):
+/// last write wins, unlike the monotone [`Counter`].  Stored as f64 bits
+/// in an `AtomicU64` so set/get are lock-free.
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0.0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }
 
@@ -109,12 +132,47 @@ impl Histogram {
     pub fn p999(&self) -> f64 {
         self.quantile(0.999)
     }
+
+    /// Cumulative per-bucket counts, for windowed quantiles: take one
+    /// snapshot per interval and feed consecutive pairs to
+    /// [`Histogram::quantile_between`].  (The histogram itself is
+    /// all-time; counts are monotone.)
+    pub fn bucket_snapshot(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Approximate quantile of ONLY the samples recorded between two
+    /// [`Histogram::bucket_snapshot`]s (`prev` taken before `cur`).
+    /// Returns NaN when the interval holds no samples.  This is what a
+    /// feedback controller must use: the all-time quantile latches past
+    /// overloads forever, a windowed one recovers with the workload.
+    pub fn quantile_between(prev: &[u64], cur: &[u64], q: f64) -> f64 {
+        assert_eq!(prev.len(), cur.len(), "snapshot size mismatch");
+        let n: u64 = cur
+            .iter()
+            .zip(prev)
+            .map(|(c, p)| c.saturating_sub(*p))
+            .sum();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, (c, p)) in cur.iter().zip(prev).enumerate() {
+            seen += c.saturating_sub(*p);
+            if seen >= target {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(HIST_BUCKETS - 1)
+    }
 }
 
-/// A registry of named counters and histograms.
+/// A registry of named counters, gauges and histograms.
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -128,6 +186,11 @@ impl Metrics {
         Arc::clone(g.entry(name.to_string()).or_default())
     }
 
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.gauges.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut g = self.histograms.lock().unwrap();
         Arc::clone(g.entry(name.to_string()).or_default())
@@ -138,6 +201,9 @@ impl Metrics {
         let mut out = Vec::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push((name.clone(), format!("{}", c.get())));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push((name.clone(), format!("{}", g.get())));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             if h.count() > 0 {
@@ -155,6 +221,40 @@ impl Metrics {
         }
         out
     }
+
+    /// Structured snapshot for the wire `stats` command: counters and
+    /// gauges as numbers, histograms as `{n, mean, p50, p99, p999}`
+    /// objects (machine-readable, unlike the display-string
+    /// [`Metrics::snapshot`]).
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{Json, JsonObj};
+        let mut counters = JsonObj::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            counters.insert(name.clone(), Json::num(c.get() as f64));
+        }
+        let mut gauges = JsonObj::new();
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(name.clone(), Json::num(g.get()));
+        }
+        let mut histograms = JsonObj::new();
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            if h.count() == 0 {
+                continue;
+            }
+            let mut o = JsonObj::new();
+            o.insert("n", Json::num(h.count() as f64));
+            o.insert("mean", Json::num(h.mean()));
+            o.insert("p50", Json::num(h.p50()));
+            o.insert("p99", Json::num(h.p99()));
+            o.insert("p999", Json::num(h.p999()));
+            histograms.insert(name.clone(), Json::Obj(o));
+        }
+        let mut root = JsonObj::new();
+        root.insert("counters", Json::Obj(counters));
+        root.insert("gauges", Json::Obj(gauges));
+        root.insert("histograms", Json::Obj(histograms));
+        Json::Obj(root)
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +268,50 @@ mod tests {
         m.counter("a").add(4);
         assert_eq!(m.counter("a").get(), 5);
         assert_eq!(m.counter("b").get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_get_last_wins() {
+        let m = Metrics::new();
+        let g = m.gauge("ewma");
+        assert_eq!(g.get(), 0.0);
+        g.set(123.5);
+        assert_eq!(m.gauge("ewma").get(), 123.5);
+        g.set(-2.0);
+        assert_eq!(g.get(), -2.0);
+        // same name resolves to the same gauge
+        m.gauge("ewma").set(7.0);
+        assert_eq!(g.get(), 7.0);
+    }
+
+    #[test]
+    fn gauge_appears_in_snapshot() {
+        let m = Metrics::new();
+        m.gauge("gear_current").set(2.0);
+        let snap = m.snapshot();
+        let entry = snap.iter().find(|(n, _)| n == "gear_current");
+        assert_eq!(entry.map(|(_, v)| v.as_str()), Some("2"));
+    }
+
+    #[test]
+    fn gauge_concurrent_set_is_one_of_written() {
+        let m = Metrics::new();
+        let g = m.gauge("x");
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let g = Arc::clone(&g);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        g.set(t as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let v = g.get();
+        assert!((0.0..4.0).contains(&v), "torn gauge read: {v}");
     }
 
     #[test]
@@ -211,6 +355,51 @@ mod tests {
         let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
         assert!(names.contains(&"reqs"));
         assert!(names.contains(&"lat"));
+    }
+
+    #[test]
+    fn windowed_quantile_sees_only_the_interval() {
+        let h = Histogram::default();
+        // interval 1: slow samples
+        for _ in 0..100 {
+            h.record(1.0);
+        }
+        let s1 = h.bucket_snapshot();
+        // interval 2: fast samples only
+        for _ in 0..100 {
+            h.record(0.001);
+        }
+        let s2 = h.bucket_snapshot();
+        // the all-time p99 still reads ~1s, the windowed one ~1ms
+        assert!(h.p99() > 0.9, "all-time p99 {}", h.p99());
+        let windowed = Histogram::quantile_between(&s1, &s2, 0.99);
+        assert!(
+            (0.0009..0.0012).contains(&windowed),
+            "windowed p99 {windowed}"
+        );
+        // an empty interval reads NaN, never a stale value
+        let s3 = h.bucket_snapshot();
+        assert!(Histogram::quantile_between(&s2, &s3, 0.99).is_nan());
+    }
+
+    #[test]
+    fn snapshot_json_is_structured() {
+        let m = Metrics::new();
+        m.counter("reqs").add(3);
+        m.gauge("gear_current").set(1.0);
+        m.histogram("lat").record(0.01);
+        m.histogram("empty"); // zero-count histograms are elided
+        let j = m.snapshot_json();
+        assert_eq!(j.get("counters").get("reqs").as_u64(), Some(3));
+        assert_eq!(j.get("gauges").get("gear_current").as_f64(), Some(1.0));
+        let lat = j.get("histograms").get("lat");
+        assert_eq!(lat.get("n").as_u64(), Some(1));
+        assert!(lat.get("p50").as_f64().unwrap() > 0.0);
+        assert!(j.get("histograms").get("empty").as_obj().is_none());
+        // round-trips through text
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").get("reqs").as_u64(), Some(3));
     }
 
     #[test]

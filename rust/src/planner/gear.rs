@@ -1,0 +1,420 @@
+//! Gear plans: precomputed cascade operating points, switched online.
+//!
+//! A [`Gear`] binds one cascade configuration -- tier-1 ensemble size
+//! `k`, calibrated agreement threshold theta, batch size, replica
+//! allocation -- to the accuracy/throughput point it was planned at.  A
+//! [`GearPlan`] is the ladder of Pareto-optimal gears the offline
+//! planner (`planner::search`) emits, ordered from **most accurate**
+//! (index 0, the "top" gear) to **highest sustainable throughput**.  The
+//! online controller (`planner::controller`) walks this ladder against
+//! observed load: shifting *down* trades accuracy for throughput under
+//! pressure, shifting *up* restores accuracy when load recedes
+//! (CascadeServe-style gear switching; see DESIGN.md "Gear planning").
+//!
+//! The runtime half is [`GearHandle`]: an atomically swappable
+//! `Arc<GearConfig>` the serving pipeline loads once per batch.  A swap
+//! only affects batches formed *after* it -- in-flight requests keep
+//! their response channels, so a shift can never drop or duplicate
+//! work (asserted in rust/tests/planner_integration.rs).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{Json, JsonObj};
+
+/// One cascade operating point, planned offline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Gear {
+    /// Position in the plan's ladder (0 = most accurate).
+    pub id: usize,
+    /// Tier-1 ensemble size.
+    pub k: usize,
+    /// Error budget the threshold was calibrated at (Appendix B epsilon).
+    pub epsilon: f64,
+    /// Calibrated tier-1 agreement threshold (defer when score <= theta).
+    pub theta: f32,
+    /// Dynamic-batcher flush cap while this gear is active.
+    pub max_batch: usize,
+    /// Replica allocation the throughput estimate assumes.
+    pub replicas: usize,
+    /// Expected end-to-end accuracy at this operating point.
+    pub accuracy: f64,
+    /// Expected cost per request relative to always running the top
+    /// model (Eq. 1 cost model; 1.0 == top-only).
+    pub relative_cost: f64,
+    /// Offered load (requests/s) this gear sustains at `replicas`.
+    pub sustainable_rps: f64,
+}
+
+impl Gear {
+    /// The runtime view the serving pipeline reads per batch.
+    pub fn config(&self) -> GearConfig {
+        GearConfig {
+            gear_id: self.id,
+            thetas: vec![self.theta],
+            work_factor: self.relative_cost,
+            max_batch: self.max_batch,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("id", Json::num(self.id as f64));
+        o.insert("k", Json::num(self.k as f64));
+        o.insert("epsilon", Json::num(self.epsilon));
+        o.insert("theta", Json::num(self.theta as f64));
+        o.insert("max_batch", Json::num(self.max_batch as f64));
+        o.insert("replicas", Json::num(self.replicas as f64));
+        o.insert("accuracy", Json::num(self.accuracy));
+        o.insert("relative_cost", Json::num(self.relative_cost));
+        o.insert("sustainable_rps", Json::num(self.sustainable_rps));
+        Json::Obj(o)
+    }
+
+    fn from_json(v: &Json) -> Result<Gear> {
+        Ok(Gear {
+            id: v.req_usize("id").context("gear.id")?,
+            k: v.req_usize("k").context("gear.k")?,
+            epsilon: v.req_f64("epsilon").context("gear.epsilon")?,
+            theta: v.req_f64("theta").context("gear.theta")? as f32,
+            max_batch: v.req_usize("max_batch").context("gear.max_batch")?,
+            replicas: v.req_usize("replicas").context("gear.replicas")?,
+            accuracy: v.req_f64("accuracy").context("gear.accuracy")?,
+            relative_cost: v.req_f64("relative_cost").context("gear.relative_cost")?,
+            sustainable_rps: v
+                .req_f64("sustainable_rps")
+                .context("gear.sustainable_rps")?,
+        })
+    }
+}
+
+/// The ladder of gears, most accurate first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GearPlan {
+    pub version: u32,
+    pub gears: Vec<Gear>,
+}
+
+pub const PLAN_VERSION: u32 = 1;
+
+impl GearPlan {
+    /// Build a plan from gears, enforcing the ladder invariants: at
+    /// least one gear, ids re-assigned by position, ordered by strictly
+    /// descending accuracy and ascending sustainable throughput.
+    pub fn new(mut gears: Vec<Gear>) -> Result<GearPlan> {
+        anyhow::ensure!(!gears.is_empty(), "a gear plan needs at least one gear");
+        gears.sort_by(|a, b| {
+            b.accuracy
+                .partial_cmp(&a.accuracy)
+                .expect("accuracy is never NaN")
+        });
+        for w in gears.windows(2) {
+            anyhow::ensure!(
+                w[0].sustainable_rps <= w[1].sustainable_rps,
+                "gear ladder not monotone: accuracy {:.4} sustains {:.0} rps but \
+                 accuracy {:.4} sustains {:.0} rps (dominated gear in plan)",
+                w[0].accuracy,
+                w[0].sustainable_rps,
+                w[1].accuracy,
+                w[1].sustainable_rps,
+            );
+        }
+        for (i, g) in gears.iter_mut().enumerate() {
+            g.id = i;
+        }
+        Ok(GearPlan { version: PLAN_VERSION, gears })
+    }
+
+    pub fn len(&self) -> usize {
+        self.gears.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gears.is_empty()
+    }
+
+    /// The most accurate gear (ladder index 0).
+    pub fn top(&self) -> &Gear {
+        &self.gears[0]
+    }
+
+    /// The highest-throughput gear (last in the ladder).
+    pub fn fastest(&self) -> &Gear {
+        self.gears.last().expect("plan is non-empty")
+    }
+
+    /// The most accurate gear that sustains `offered_rps` with
+    /// `headroom` (e.g. 0.85 targets 85% utilisation).  Falls back to
+    /// the fastest gear when nothing sustains the load.  This is the
+    /// controller's rate-driven downshift target (`ControlState::step`
+    /// calls it with `down_util` as the headroom, clamped to at least
+    /// one rung down).
+    pub fn gear_for_load(&self, offered_rps: f64, headroom: f64) -> usize {
+        self.gears
+            .iter()
+            .position(|g| offered_rps <= g.sustainable_rps * headroom)
+            .unwrap_or(self.gears.len() - 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("version", Json::num(self.version as f64));
+        o.insert(
+            "gears",
+            Json::Arr(self.gears.iter().map(|g| g.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<GearPlan> {
+        let version = v.req_usize("version").context("plan.version")? as u32;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "unsupported gear plan version {version} (supported: {PLAN_VERSION})"
+        );
+        let gears = v
+            .req_arr("gears")
+            .context("plan.gears")?
+            .iter()
+            .map(Gear::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        // re-validate the ladder invariants on load
+        GearPlan::new(gears)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+            .with_context(|| format!("writing gear plan {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<GearPlan> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading gear plan {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("parsing gear plan {}", path.display()))?;
+        GearPlan::from_json(&v)
+    }
+}
+
+/// The runtime slice of a gear: what the serving pipeline consults once
+/// per batch.  Deliberately small -- swapped wholesale on a shift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GearConfig {
+    pub gear_id: usize,
+    /// Per-non-final-tier agreement thresholds overriding the cascade's
+    /// calibrated policy (index 0 = tier 1).
+    pub thetas: Vec<f32>,
+    /// Expected per-request compute relative to top-only (1.0); the
+    /// synthetic backend scales its service time by this so gears have
+    /// real throughput consequences without artifacts.
+    pub work_factor: f64,
+    /// Batch-size cap while this gear is active.
+    pub max_batch: usize,
+}
+
+/// Atomically swappable `Arc<GearConfig>` shared between the controller
+/// (writer) and every pipeline replica (readers, once per batch).
+///
+/// Readers pay one `RwLock` read + `Arc` clone per *batch* (not per
+/// request), which is noise next to a classifier dispatch.  `generation`
+/// counts swaps so tests and the wire `stats` reply can observe shifts
+/// without racing the lock.
+#[derive(Debug)]
+pub struct GearHandle {
+    current: RwLock<Arc<GearConfig>>,
+    generation: AtomicU64,
+}
+
+impl GearHandle {
+    pub fn new(cfg: GearConfig) -> Arc<GearHandle> {
+        Arc::new(GearHandle {
+            current: RwLock::new(Arc::new(cfg)),
+            generation: AtomicU64::new(0),
+        })
+    }
+
+    /// Snapshot the active config (cheap: read lock + Arc clone).
+    pub fn load(&self) -> Arc<GearConfig> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Swap in a new config; visible to every subsequent `load`.
+    pub fn store(&self, cfg: GearConfig) {
+        *self.current.write().unwrap() = Arc::new(cfg);
+        self.generation.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Number of swaps since creation.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Ladder index of the active gear.
+    pub fn gear_id(&self) -> usize {
+        self.load().gear_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gear(id: usize, acc: f64, rps: f64) -> Gear {
+        Gear {
+            id,
+            k: 3,
+            epsilon: 0.03,
+            theta: 0.6,
+            max_batch: 8,
+            replicas: 2,
+            accuracy: acc,
+            relative_cost: 1.0 / rps,
+            sustainable_rps: rps,
+        }
+    }
+
+    #[test]
+    fn plan_sorts_and_reassigns_ids() {
+        let plan = GearPlan::new(vec![
+            gear(9, 0.80, 3000.0),
+            gear(7, 0.95, 1000.0),
+            gear(5, 0.90, 2000.0),
+        ])
+        .unwrap();
+        let accs: Vec<f64> = plan.gears.iter().map(|g| g.accuracy).collect();
+        assert_eq!(accs, vec![0.95, 0.90, 0.80]);
+        let ids: Vec<usize> = plan.gears.iter().map(|g| g.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(plan.top().accuracy, 0.95);
+        assert_eq!(plan.fastest().sustainable_rps, 3000.0);
+    }
+
+    #[test]
+    fn plan_rejects_dominated_ladder() {
+        // higher accuracy AND higher throughput than the next gear:
+        // the "slower" gear is pointless, the plan is malformed
+        let err = GearPlan::new(vec![gear(0, 0.95, 3000.0), gear(1, 0.90, 1000.0)]);
+        assert!(err.is_err());
+        assert!(GearPlan::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn gear_for_load_walks_the_ladder() {
+        let plan = GearPlan::new(vec![
+            gear(0, 0.95, 1000.0),
+            gear(1, 0.90, 2000.0),
+            gear(2, 0.80, 4000.0),
+        ])
+        .unwrap();
+        assert_eq!(plan.gear_for_load(100.0, 1.0), 0);
+        assert_eq!(plan.gear_for_load(1500.0, 1.0), 1);
+        assert_eq!(plan.gear_for_load(3000.0, 1.0), 2);
+        // over everything: fastest gear
+        assert_eq!(plan.gear_for_load(99_999.0, 1.0), 2);
+        // headroom biases down the ladder
+        assert_eq!(plan.gear_for_load(900.0, 0.8), 1);
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let plan = GearPlan::new(vec![gear(0, 0.95, 1000.0), gear(1, 0.85, 2500.0)])
+            .unwrap();
+        let v = plan.to_json();
+        let back = GearPlan::from_json(&v).unwrap();
+        assert_eq!(back, plan);
+        // and through text
+        let text = v.to_pretty();
+        let back2 = GearPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, plan);
+    }
+
+    #[test]
+    fn plan_file_roundtrip() {
+        let dir =
+            std::env::temp_dir().join(format!("abc-plan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = GearPlan::new(vec![gear(0, 0.9, 500.0)]).unwrap();
+        plan.save(&path).unwrap();
+        let back = GearPlan::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_versions_and_shapes() {
+        assert!(GearPlan::from_json(&Json::parse(r#"{"version":99,"gears":[]}"#).unwrap())
+            .is_err());
+        assert!(GearPlan::from_json(&Json::parse(r#"{"gears":[]}"#).unwrap()).is_err());
+        assert!(
+            GearPlan::from_json(&Json::parse(r#"{"version":1,"gears":[{}]}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn handle_swaps_atomically_and_counts_generations() {
+        let plan =
+            GearPlan::new(vec![gear(0, 0.95, 1000.0), gear(1, 0.85, 2500.0)]).unwrap();
+        let handle = GearHandle::new(plan.top().config());
+        assert_eq!(handle.gear_id(), 0);
+        assert_eq!(handle.generation(), 0);
+        handle.store(plan.gears[1].config());
+        assert_eq!(handle.gear_id(), 1);
+        assert_eq!(handle.generation(), 1);
+        // a loaded snapshot is immutable across a later swap
+        let snap = handle.load();
+        handle.store(plan.gears[0].config());
+        assert_eq!(snap.gear_id, 1);
+        assert_eq!(handle.gear_id(), 0);
+    }
+
+    #[test]
+    fn concurrent_load_store_never_tears() {
+        let handle = GearHandle::new(GearConfig {
+            gear_id: 0,
+            thetas: vec![0.0],
+            work_factor: 0.0,
+            max_batch: 1,
+        });
+        let writer = {
+            let h = Arc::clone(&handle);
+            std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    let id = (i % 3) as usize;
+                    h.store(GearConfig {
+                        gear_id: id,
+                        thetas: vec![id as f32],
+                        work_factor: id as f64,
+                        max_batch: id + 1,
+                    });
+                }
+            })
+        };
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let h = Arc::clone(&handle);
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        let c = h.load();
+                        // every field must be from the same config
+                        assert_eq!(c.thetas, vec![c.gear_id as f32]);
+                        assert_eq!(c.work_factor, c.gear_id as f64);
+                        assert_eq!(c.max_batch, c.gear_id + 1);
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(handle.generation(), 2000);
+    }
+}

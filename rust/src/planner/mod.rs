@@ -1,0 +1,32 @@
+//! Load-adaptive cascade configuration ("gear planning").
+//!
+//! The static cascade has one operating point: ensemble sizes, agreement
+//! thresholds and batch sizes fixed at calibration time.  Under bursty
+//! traffic that is the wrong trade on both sides of the burst -- too
+//! slow during it (shedding work the cheap tiers could have answered),
+//! too inaccurate after it if tuned for the peak.  This subsystem
+//! precomputes a ladder of Pareto-optimal operating points offline and
+//! switches between them online from observed load, CascadeServe-style:
+//!
+//! * [`gear`] -- the [`gear::GearPlan`] / [`gear::Gear`] data model,
+//!   JSON (de)serialisation, and [`gear::GearHandle`], the atomically
+//!   swappable runtime config the serving pipeline reads per batch;
+//! * [`search`] -- the offline planner: enumerate `(k, epsilon, batch)`
+//!   candidates over calibration data, price them with the Eq. 1 cost
+//!   model, keep the accuracy-vs-throughput Pareto frontier;
+//! * [`controller`] -- the online controller thread: arrival-rate EWMA,
+//!   queue pressure and latency quantiles in; hysteretic up/down gear
+//!   shifts out.
+//!
+//! Entry points: `repro plan` (emit a plan JSON), `repro serve --plan`
+//! (serve with the controller engaged), `benches/bench_gears.rs`
+//! (fixed vs adaptive under on-off load) and
+//! `rust/tests/planner_integration.rs`.
+
+pub mod controller;
+pub mod gear;
+pub mod search;
+
+pub use controller::{Controller, ControllerConfig};
+pub use gear::{Gear, GearConfig, GearHandle, GearPlan};
+pub use search::{synthetic_cal_points, PlannerConfig};

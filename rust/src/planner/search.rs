@@ -1,0 +1,352 @@
+//! Offline gear planning: enumerate candidate cascade configurations
+//! over calibration data, keep the accuracy-vs-throughput Pareto
+//! frontier, and emit a [`GearPlan`].
+//!
+//! For each candidate `(k, epsilon, max_batch)` the planner
+//!
+//! 1. calibrates a tier-1 threshold with `calib::estimate_theta` on the
+//!    `(score, correct)` points observed at ensemble size `k`;
+//! 2. prices the operating point with the paper's Eq. 1 cost model
+//!    (`cost::model::two_level_relative_cost`): expected per-request
+//!    compute relative to always running the top model;
+//! 3. converts cost + batching into sustainable offered load for the
+//!    deployment's replica allocation;
+//! 4. estimates end-to-end accuracy from the calibration set:
+//!    `P(select AND correct) + P(defer) * top_accuracy`.
+//!
+//! Candidates that another candidate beats on both axes are dropped
+//! (`analysis::pareto::frontier`), so every gear in the plan is a
+//! defensible operating point -- the online controller never has a
+//! reason to pick a dominated configuration.
+//!
+//! Calibration points come from real tier executables in artifact
+//! deployments (`calib::collect_points`) or from
+//! [`synthetic_cal_points`] for the artifact-free path (`repro plan`,
+//! tests, benches).
+
+use anyhow::Result;
+
+use crate::analysis::pareto::{frontier, Point};
+use crate::calib::threshold::{estimate_theta, CalPoint};
+use crate::cost::model::two_level_relative_cost;
+use crate::planner::gear::{Gear, GearPlan};
+use crate::types::Parallelism;
+use crate::util::rng::Rng;
+
+/// Deployment model + candidate grid for the planner.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Candidate tier-1 ensemble sizes (must match the calibration data).
+    pub ks: Vec<usize>,
+    /// Candidate per-tier error budgets (Appendix B epsilon).
+    pub epsilons: Vec<f64>,
+    /// Candidate dynamic-batcher flush caps.
+    pub batches: Vec<usize>,
+    /// Replica allocation the plan targets.
+    pub replicas: usize,
+    /// Cost of one tier-1 member relative to the top model (Eq. 1 gamma).
+    pub gamma: f64,
+    /// Ensemble execution model (Eq. 1 rho).
+    pub rho: Parallelism,
+    /// Accuracy of the top model alone (deferred samples get this).
+    pub top_accuracy: f64,
+    /// Fixed per-batch dispatch overhead of one replica, seconds.
+    pub batch_overhead_s: f64,
+    /// Per-row service time of the top model on one replica, seconds
+    /// (cost 1.0 in the relative model).
+    pub top_row_s: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            ks: vec![1, 3, 5],
+            epsilons: vec![0.01, 0.03, 0.05, 0.10],
+            batches: vec![4, 8, 16, 32],
+            replicas: 2,
+            gamma: 0.05,
+            rho: Parallelism::SEQUENTIAL,
+            top_accuracy: 0.95,
+            batch_overhead_s: 200e-6,
+            top_row_s: 2e-3,
+        }
+    }
+}
+
+/// One evaluated configuration (pre-Pareto).
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub k: usize,
+    pub epsilon: f64,
+    pub max_batch: usize,
+    pub theta: f32,
+    pub accuracy: f64,
+    pub relative_cost: f64,
+    pub sustainable_rps: f64,
+}
+
+impl Candidate {
+    /// Evaluate one grid point against its calibration sample.
+    pub fn evaluate(
+        cfg: &PlannerConfig,
+        k: usize,
+        epsilon: f64,
+        max_batch: usize,
+        points: &[CalPoint],
+    ) -> Candidate {
+        let est = estimate_theta(points, epsilon);
+        let p_defer = 1.0 - est.selection_rate;
+        let relative_cost = two_level_relative_cost(k, cfg.gamma, cfg.rho, p_defer);
+        // accuracy: accepted samples are right unless they were a
+        // calibration failure; deferred samples get the top model
+        let accuracy = (est.selection_rate - est.failure_rate)
+            + p_defer * cfg.top_accuracy;
+        // a replica serves max_batch rows per (overhead + per-row *
+        // relative_cost * max_batch) seconds; the pool has `replicas`
+        let batch_s =
+            cfg.batch_overhead_s + cfg.top_row_s * relative_cost * max_batch as f64;
+        let sustainable_rps = if batch_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            cfg.replicas as f64 * max_batch as f64 / batch_s
+        };
+        Candidate {
+            k,
+            epsilon,
+            max_batch,
+            theta: est.theta,
+            accuracy,
+            relative_cost,
+            sustainable_rps,
+        }
+    }
+
+    fn into_gear(self, cfg: &PlannerConfig) -> Gear {
+        Gear {
+            id: 0, // assigned by GearPlan::new
+            k: self.k,
+            epsilon: self.epsilon,
+            theta: self.theta,
+            max_batch: self.max_batch,
+            replicas: cfg.replicas,
+            accuracy: self.accuracy,
+            relative_cost: self.relative_cost,
+            sustainable_rps: self.sustainable_rps,
+        }
+    }
+}
+
+/// Evaluate the full candidate grid.  `cal` maps each candidate `k` to
+/// its calibration points; ks missing from `cal` are skipped.
+pub fn enumerate_candidates(
+    cfg: &PlannerConfig,
+    cal: &[(usize, Vec<CalPoint>)],
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for &k in &cfg.ks {
+        let Some((_, points)) = cal.iter().find(|(ck, _)| *ck == k) else {
+            continue;
+        };
+        if points.is_empty() {
+            continue;
+        }
+        for &eps in &cfg.epsilons {
+            for &b in &cfg.batches {
+                out.push(Candidate::evaluate(cfg, k, eps, b, points));
+            }
+        }
+    }
+    out
+}
+
+/// Keep the Pareto-efficient candidates (accuracy up, capacity up) and
+/// assemble them into a ladder.  `1/sustainable_rps` is the Pareto
+/// "cost" axis so the existing frontier tooling applies unchanged.
+pub fn plan(cfg: &PlannerConfig, cal: &[(usize, Vec<CalPoint>)]) -> Result<GearPlan> {
+    let candidates = enumerate_candidates(cfg, cal);
+    anyhow::ensure!(
+        !candidates.is_empty(),
+        "no plannable candidates: empty grid or no calibration data for any k"
+    );
+    let points: Vec<Point> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Point::new(i.to_string(), 1.0 / c.sustainable_rps, c.accuracy))
+        .collect();
+    // frontier() drops dominated candidates AND dedups identical
+    // (cost, value) pairs, so this is already one gear per operating point
+    let gears: Vec<Gear> = frontier(&points)
+        .iter()
+        .map(|p| {
+            let idx: usize = p.label.parse().expect("frontier label is an index");
+            candidates[idx].clone().into_gear(cfg)
+        })
+        .collect();
+    GearPlan::new(gears)
+}
+
+/// Synthetic `(score, correct)` calibration points for ensemble size
+/// `k`, artifact-free.  Per sample: difficulty `d ~ U[0,1)` sets each
+/// member's independent correctness probability (easy samples near
+/// `member_accuracy`'s ceiling, hard ones near chance); `k` members
+/// vote, the agreement score is the majority vote fraction (Eq. 3) and
+/// the point is correct when the strict majority is.  Larger `k`
+/// concentrates the vote, reproducing the paper's ensemble-agreement
+/// effect: accuracy and score separation both improve with `k`.
+pub fn synthetic_cal_points(
+    k: usize,
+    n: usize,
+    member_accuracy: f64,
+    seed: u64,
+) -> Vec<CalPoint> {
+    assert!(k >= 1, "ensemble size must be >= 1");
+    let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..n)
+        .map(|_| {
+            let d = rng.f64();
+            // easy (d~0): ~min(0.99, member_accuracy + 0.15); hard (d~1): ~0.5
+            let p = (member_accuracy + 0.15 - (member_accuracy - 0.35) * d)
+                .clamp(0.5, 0.99);
+            let votes_correct = (0..k).filter(|_| rng.bool(p)).count();
+            let majority = votes_correct.max(k - votes_correct);
+            CalPoint {
+                score: majority as f32 / k as f32,
+                correct: 2 * votes_correct > k,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> PlannerConfig {
+        PlannerConfig {
+            ks: vec![1, 3, 5],
+            epsilons: vec![0.02, 0.05, 0.10],
+            batches: vec![4, 16],
+            replicas: 2,
+            ..PlannerConfig::default()
+        }
+    }
+
+    fn small_cal(cfg: &PlannerConfig) -> Vec<(usize, Vec<CalPoint>)> {
+        cfg.ks
+            .iter()
+            .map(|&k| (k, synthetic_cal_points(k, 200, 0.8, 7)))
+            .collect()
+    }
+
+    #[test]
+    fn synthetic_points_improve_with_k() {
+        let acc_of = |k: usize| {
+            let pts = synthetic_cal_points(k, 4000, 0.8, 3);
+            pts.iter().filter(|p| p.correct).count() as f64 / pts.len() as f64
+        };
+        let a1 = acc_of(1);
+        let a5 = acc_of(5);
+        let a9 = acc_of(9);
+        assert!(a5 > a1 + 0.02, "k=5 ({a5}) not better than k=1 ({a1})");
+        assert!(a9 >= a5 - 0.01, "k=9 ({a9}) collapsed vs k=5 ({a5})");
+        // scores are valid vote fractions
+        let pts = synthetic_cal_points(4, 500, 0.8, 1);
+        assert!(pts.iter().all(|p| (0.5..=1.0).contains(&p.score)));
+        // deterministic
+        assert_eq!(
+            synthetic_cal_points(3, 50, 0.8, 11)
+                .iter()
+                .map(|p| p.score)
+                .collect::<Vec<_>>(),
+            synthetic_cal_points(3, 50, 0.8, 11)
+                .iter()
+                .map(|p| p.score)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn plan_is_pareto_optimal_against_brute_force() {
+        let cfg = small_cfg();
+        let cal = small_cal(&cfg);
+        let plan = plan(&cfg, &cal).unwrap();
+        assert!(!plan.is_empty());
+        let all = enumerate_candidates(&cfg, &cal);
+        // no enumerated candidate may dominate any emitted gear
+        for g in &plan.gears {
+            for c in &all {
+                let dominates = c.accuracy >= g.accuracy
+                    && c.sustainable_rps >= g.sustainable_rps
+                    && (c.accuracy > g.accuracy
+                        || c.sustainable_rps > g.sustainable_rps);
+                assert!(
+                    !dominates,
+                    "candidate k={} eps={} b={} (acc {:.4}, {:.0} rps) dominates \
+                     gear {} (acc {:.4}, {:.0} rps)",
+                    c.k,
+                    c.epsilon,
+                    c.max_batch,
+                    c.accuracy,
+                    c.sustainable_rps,
+                    g.id,
+                    g.accuracy,
+                    g.sustainable_rps
+                );
+            }
+        }
+        // and every gear is an enumerated candidate, not an invention
+        for g in &plan.gears {
+            assert!(all.iter().any(|c| c.k == g.k
+                && c.epsilon == g.epsilon
+                && c.max_batch == g.max_batch
+                && c.accuracy == g.accuracy
+                && c.sustainable_rps == g.sustainable_rps));
+        }
+    }
+
+    #[test]
+    fn plan_ladder_trades_accuracy_for_throughput() {
+        let cfg = small_cfg();
+        let plan = plan(&cfg, &small_cal(&cfg)).unwrap();
+        for w in plan.gears.windows(2) {
+            assert!(w[0].accuracy >= w[1].accuracy);
+            assert!(w[0].sustainable_rps <= w[1].sustainable_rps);
+        }
+        // the grid spans lax-enough epsilons that the frontier has real
+        // spread to control against
+        if plan.len() >= 2 {
+            assert!(plan.fastest().sustainable_rps > plan.top().sustainable_rps);
+        }
+    }
+
+    #[test]
+    fn plan_errors_without_calibration_data() {
+        let cfg = small_cfg();
+        assert!(plan(&cfg, &[]).is_err());
+        let empty: Vec<(usize, Vec<CalPoint>)> =
+            cfg.ks.iter().map(|&k| (k, Vec::new())).collect();
+        assert!(plan(&cfg, &empty).is_err());
+    }
+
+    #[test]
+    fn bigger_batch_raises_capacity_at_fixed_config() {
+        let cfg = PlannerConfig::default();
+        let pts = synthetic_cal_points(3, 300, 0.8, 5);
+        let small = Candidate::evaluate(&cfg, 3, 0.05, 4, &pts);
+        let large = Candidate::evaluate(&cfg, 3, 0.05, 32, &pts);
+        assert!(large.sustainable_rps > small.sustainable_rps);
+        // same cascade config => same accuracy/cost, batching is free
+        assert_eq!(small.accuracy, large.accuracy);
+        assert_eq!(small.relative_cost, large.relative_cost);
+    }
+
+    #[test]
+    fn laxer_epsilon_cuts_cost() {
+        let cfg = PlannerConfig::default();
+        let pts = synthetic_cal_points(3, 300, 0.8, 5);
+        let strict = Candidate::evaluate(&cfg, 3, 0.0, 8, &pts);
+        let lax = Candidate::evaluate(&cfg, 3, 0.25, 8, &pts);
+        assert!(lax.relative_cost <= strict.relative_cost);
+        assert!(lax.sustainable_rps >= strict.sustainable_rps);
+    }
+}

@@ -8,8 +8,16 @@
 //!     "scores": [0.67]}
 //! -> {"cmd": "metrics"}
 //! <- {"metrics": {"requests_submitted": "42", ...}}
+//! -> {"cmd": "stats"}
+//! <- {"stats": {"counters": {...}, "gauges": {...},
+//!     "histograms": {"request_latency_s": {"n":..,"p99":..}, ...}}}
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
+//!
+//! When the pool serves under a gear plan (`serve --plan`), verdict
+//! replies additionally carry `"gear": <ladder index>` -- the gear
+//! active at reply time -- and the `stats` gauges include
+//! `gear_current` / `arrival_ewma_rps` from the controller.
 //!
 //! When every replica's bounded queue is full, admission control sheds
 //! the request instead of queueing it; the reply is the typed
@@ -50,7 +58,8 @@ use anyhow::Result;
 
 use crate::coordinator::replica::{PoolError, ReplicaPool};
 use proto::{
-    parse_request_line, render_error, render_metrics, render_overloaded, render_verdict,
+    parse_request_line, render_error, render_metrics, render_overloaded, render_stats,
+    render_verdict,
 };
 
 /// How long a handler blocks in `read` before re-checking the stop flag.
@@ -144,7 +153,12 @@ fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>)
         match parse_request_line(trimmed) {
             Ok(proto::Incoming::Infer(request)) => {
                 let reply = match pool.infer(request) {
-                    Ok(verdict) => render_verdict(&verdict),
+                    // report the gear active at *reply* time: cheap, and
+                    // a shift mid-request is visible either way
+                    Ok(verdict) => render_verdict(
+                        &verdict,
+                        pool.gear().map(|h| h.gear_id()),
+                    ),
                     Err(PoolError::Overloaded { outstanding, limit }) => {
                         render_overloaded(outstanding, limit)
                     }
@@ -154,6 +168,9 @@ fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>)
             }
             Ok(proto::Incoming::Metrics) => {
                 writeln!(writer, "{}", render_metrics(pool.metrics()))?;
+            }
+            Ok(proto::Incoming::Stats) => {
+                writeln!(writer, "{}", render_stats(pool.metrics()))?;
             }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
@@ -250,6 +267,18 @@ impl Client {
                 "server error: overloaded ({outstanding}/{limit} outstanding)"
             ),
         }
+    }
+
+    /// Fetch the structured stats snapshot (`{"cmd":"stats"}`).
+    pub fn stats(&mut self) -> Result<crate::util::json::Json> {
+        let reply = self.roundtrip(r#"{"cmd":"stats"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad stats reply {reply:?}: {e}"))?;
+        anyhow::ensure!(
+            v.get("stats").as_obj().is_some(),
+            "stats reply missing 'stats' object: {reply}"
+        );
+        Ok(v)
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

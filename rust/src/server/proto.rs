@@ -9,6 +9,7 @@ use crate::util::json::{Json, JsonObj};
 pub enum Incoming {
     Infer(Request),
     Metrics,
+    Stats,
     Shutdown,
 }
 
@@ -18,6 +19,7 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
     if let Some(cmd) = v.get("cmd").as_str() {
         return match cmd {
             "metrics" => Ok(Incoming::Metrics),
+            "stats" => Ok(Incoming::Stats),
             "shutdown" => Ok(Incoming::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -40,8 +42,10 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
     Ok(Incoming::Infer(Request { id, features, arrival_s: 0.0 }))
 }
 
-/// Render a verdict reply line.
-pub fn render_verdict(v: &Verdict) -> String {
+/// Render a verdict reply line.  `gear` is the active gear's ladder
+/// index when the server runs under a gear plan; ungeared deployments
+/// omit the field, keeping the PR-1 wire shape byte-compatible.
+pub fn render_verdict(v: &Verdict, gear: Option<usize>) -> String {
     let mut obj = JsonObj::new();
     obj.insert("id", Json::num(v.request_id as f64));
     obj.insert("prediction", Json::num(v.prediction as f64));
@@ -51,6 +55,9 @@ pub fn render_verdict(v: &Verdict) -> String {
         "scores",
         Json::Arr(v.tier_scores.iter().map(|&s| Json::num(s as f64)).collect()),
     );
+    if let Some(g) = gear {
+        obj.insert("gear", Json::num(g as f64));
+    }
     Json::Obj(obj).to_string()
 }
 
@@ -85,6 +92,15 @@ pub fn render_metrics(metrics: &Metrics) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the structured stats snapshot (`{"cmd":"stats"}` reply):
+/// counters/gauges as numbers, histograms as quantile objects --
+/// machine-readable where `metrics` is display-oriented.
+pub fn render_stats(metrics: &Metrics) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("stats", metrics.snapshot_json());
+    Json::Obj(obj).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +122,10 @@ mod tests {
         assert!(matches!(
             parse_request_line(r#"{"cmd": "metrics"}"#).unwrap(),
             Incoming::Metrics
+        ));
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "stats"}"#).unwrap(),
+            Incoming::Stats
         ));
         assert!(matches!(
             parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
@@ -132,12 +152,41 @@ mod tests {
             tier_scores: vec![0.33, 1.0],
             latency_s: 0.004,
         };
-        let line = render_verdict(&v);
+        let line = render_verdict(&v, None);
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("id").as_u64(), Some(3));
         assert_eq!(parsed.get("prediction").as_u64(), Some(9));
         assert_eq!(parsed.get("exit_tier").as_u64(), Some(2));
         assert_eq!(parsed.get("scores").as_arr().unwrap().len(), 2);
+        // ungeared replies omit the gear field entirely
+        assert!(parsed.get("gear").as_u64().is_none());
+        // geared replies carry the active ladder index
+        let geared = Json::parse(&render_verdict(&v, Some(2))).unwrap();
+        assert_eq!(geared.get("gear").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn stats_line_is_structured() {
+        let m = Metrics::new();
+        m.counter("requests_submitted").add(5);
+        m.gauge("gear_current").set(1.0);
+        m.histogram("request_latency_s").record(0.002);
+        let line = render_stats(&m);
+        let parsed = Json::parse(&line).unwrap();
+        let stats = parsed.get("stats");
+        assert_eq!(
+            stats.get("counters").get("requests_submitted").as_u64(),
+            Some(5)
+        );
+        assert_eq!(stats.get("gauges").get("gear_current").as_f64(), Some(1.0));
+        assert_eq!(
+            stats
+                .get("histograms")
+                .get("request_latency_s")
+                .get("n")
+                .as_u64(),
+            Some(1)
+        );
     }
 
     #[test]

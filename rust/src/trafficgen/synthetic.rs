@@ -36,32 +36,41 @@ impl SyntheticClassifier {
 
     /// Rows/second one replica sustains at batch size `b`.
     pub fn capacity_rps(&self, b: usize) -> f64 {
-        let batch_s = (self.base + self.per_row * b as u32).as_secs_f64();
+        self.capacity_rps_geared(b, 1.0)
+    }
+
+    /// Rows/second one replica sustains at batch size `b` under a gear
+    /// with the given `work_factor` (see `classify_batch_geared`).
+    pub fn capacity_rps_geared(&self, b: usize, work_factor: f64) -> f64 {
+        let batch_s = (self.base + self.per_row * b as u32).as_secs_f64()
+            * work_factor.max(0.0);
         if batch_s <= 0.0 {
             f64::INFINITY
         } else {
             b as f64 / batch_s
         }
     }
-}
 
-impl BatchClassifier for SyntheticClassifier {
-    fn dim(&self) -> usize {
-        self.dim
-    }
-
-    fn n_levels(&self) -> usize {
-        self.levels
-    }
-
-    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+    /// Shared execution path: sleep `work_factor`-scaled service time,
+    /// then produce deterministic results.  `work_factor` 1.0 is the
+    /// plain backend; a gear's expected relative cost scales the
+    /// per-row compute so cheaper gears genuinely run faster.
+    fn run_batch(
+        &self,
+        features: &[f32],
+        n: usize,
+        work_factor: f64,
+    ) -> Result<Vec<CascadeResult>> {
         anyhow::ensure!(
             features.len() == n * self.dim,
             "feature buffer has {} floats, expected {}",
             features.len(),
             n * self.dim
         );
-        let service = self.base + self.per_row * n as u32;
+        let service = self
+            .base
+            .mul_f64(work_factor.max(0.0))
+            .saturating_add(self.per_row.mul_f64(work_factor.max(0.0) * n as f64));
         if !service.is_zero() {
             std::thread::sleep(service);
         }
@@ -81,6 +90,29 @@ impl BatchClassifier for SyntheticClassifier {
     }
 }
 
+impl BatchClassifier for SyntheticClassifier {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_levels(&self) -> usize {
+        self.levels
+    }
+
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        self.run_batch(features, n, 1.0)
+    }
+
+    fn classify_batch_geared(
+        &self,
+        features: &[f32],
+        n: usize,
+        gear: &crate::planner::gear::GearConfig,
+    ) -> Result<Vec<CascadeResult>> {
+        self.run_batch(features, n, gear.work_factor)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +129,35 @@ mod tests {
             assert!(x.exit_level >= 1 && x.exit_level <= 3);
         }
         assert!(c.classify_batch(&[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    fn geared_work_factor_scales_service_time() {
+        use crate::planner::gear::GearConfig;
+        let c = SyntheticClassifier::new(1, 2, Duration::ZERO, Duration::from_millis(4));
+        let cheap = GearConfig {
+            gear_id: 1,
+            thetas: vec![0.5],
+            work_factor: 0.25,
+            max_batch: 8,
+        };
+        let t0 = std::time::Instant::now();
+        let r = c.classify_batch_geared(&[0.5; 4], 4, &cheap).unwrap();
+        let cheap_dt = t0.elapsed();
+        assert_eq!(r.len(), 4);
+        // 4 rows * 4ms * 0.25 = 4ms; the ungeared path sleeps 16ms
+        assert!(cheap_dt >= Duration::from_millis(3), "slept only {cheap_dt:?}");
+        let t0 = std::time::Instant::now();
+        c.classify_batch(&[0.5; 4], 4).unwrap();
+        let full_dt = t0.elapsed();
+        assert!(full_dt >= Duration::from_millis(15), "slept only {full_dt:?}");
+        // results are identical either way: gears change cost, not routing
+        let a = c.classify_batch(&[0.5; 2], 2).unwrap();
+        let b = c.classify_batch_geared(&[0.5; 2], 2, &cheap).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prediction, y.prediction);
+            assert_eq!(x.exit_level, y.exit_level);
+        }
     }
 
     #[test]

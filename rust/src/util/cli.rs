@@ -157,6 +157,45 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Comma-separated list of any parseable type (backs the typed
+    /// `*_list_or` getters).
+    fn parsed_list_or<T: std::str::FromStr + Clone>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse()
+                        .map_err(|_| CliError::Invalid(name.to_string(), s.to_string()))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated numeric list: `--ks 1,3,5`.
+    pub fn usize_list_or(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CliError> {
+        self.parsed_list_or(name, default)
+    }
+
+    /// Comma-separated float list: `--epsilons 0.01,0.05`.
+    pub fn f64_list_or(
+        &self,
+        name: &str,
+        default: &[f64],
+    ) -> Result<Vec<f64>, CliError> {
+        self.parsed_list_or(name, default)
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +248,16 @@ mod tests {
         assert_eq!(a.list_or("suites", &[]), vec!["a", "b"]);
         let b = args("");
         assert_eq!(b.list_or("suites", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn numeric_list_options() {
+        let a = args("--ks 1,3,5 --epsilons 0.01,0.05 --bad 1,x");
+        assert_eq!(a.usize_list_or("ks", &[]).unwrap(), vec![1, 3, 5]);
+        assert_eq!(a.usize_list_or("missing", &[2, 4]).unwrap(), vec![2, 4]);
+        assert_eq!(a.f64_list_or("epsilons", &[]).unwrap(), vec![0.01, 0.05]);
+        assert_eq!(a.f64_list_or("missing", &[0.5]).unwrap(), vec![0.5]);
+        assert!(a.usize_list_or("bad", &[]).is_err());
     }
 
     #[test]

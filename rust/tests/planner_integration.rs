@@ -1,0 +1,274 @@
+//! Integration: the gear planner's online controller against on-off
+//! load -- no PJRT artifacts needed (synthetic backend).
+//!
+//! Covers the claims the subsystem exists for:
+//! * under an on-off trace at 2x the top gear's saturation, the
+//!   adaptive controller completes strictly more work (sheds strictly
+//!   less) than the fixed top gear;
+//! * after the load ends the controller shifts back up to the top gear
+//!   within one dwell period (plus sampling slack);
+//! * gear shifts never drop or duplicate an in-flight request, under
+//!   both open-loop load and adversarial shift churn.
+//!
+//! Timing margins follow loadgen_integration.rs: the synthetic
+//! classifier's sleep-based service time is a *lower* bound on real
+//! elapsed time, so a slow CI machine only lowers capacity -- and every
+//! comparison below is against a baseline that the same slowdown hurts
+//! at least as much.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::planner::{Controller, ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::trafficgen::{LoadGen, SyntheticClassifier, Trace};
+
+const DIM: usize = 4;
+const MAX_BATCH: usize = 8;
+const MAX_QUEUE: usize = 16;
+/// 2ms per row, batches of 8: the top gear sustains ~500 rows/s on one
+/// replica regardless of host speed (sleep only overshoots).
+const PER_ROW: Duration = Duration::from_millis(2);
+/// The fast gear runs at a quarter of the top gear's per-row compute.
+const FAST_WORK: f64 = 0.25;
+const DWELL: Duration = Duration::from_millis(200);
+
+/// Wall-clock tests run one at a time (same pattern as
+/// loadgen_integration.rs).
+static TIMING_LOCK: Mutex<()> = Mutex::new(());
+
+fn classifier() -> Arc<SyntheticClassifier> {
+    Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, PER_ROW))
+}
+
+fn top_capacity_rps() -> f64 {
+    classifier().capacity_rps(MAX_BATCH)
+}
+
+/// Two-gear ladder over the synthetic backend: the top gear is the
+/// plain classifier (work 1.0), the fast gear trades accuracy for 4x
+/// throughput.  `sustainable_rps` matches the classifier's actual
+/// capacities so the controller's watermarks mean what they say.
+fn plan() -> GearPlan {
+    let cap = top_capacity_rps();
+    let gear = |acc: f64, work: f64, rps: f64| Gear {
+        id: 0,
+        k: 3,
+        epsilon: 0.03,
+        theta: 0.6,
+        max_batch: MAX_BATCH,
+        replicas: 1,
+        accuracy: acc,
+        relative_cost: work,
+        sustainable_rps: rps,
+    };
+    GearPlan::new(vec![
+        gear(0.95, 1.0, cap),
+        gear(0.85, FAST_WORK, cap / FAST_WORK),
+    ])
+    .unwrap()
+}
+
+fn pool_cfg() -> PoolConfig {
+    PoolConfig {
+        replicas: 1,
+        max_queue: MAX_QUEUE,
+        batcher: BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(1),
+        },
+    }
+}
+
+fn controller_cfg() -> ControllerConfig {
+    ControllerConfig {
+        sample_every: Duration::from_millis(10),
+        dwell: DWELL,
+        ..ControllerConfig::default()
+    }
+}
+
+/// On-off trace at 2x the top gear's saturation during on-windows.
+fn onoff_trace(n: usize) -> Arc<Trace> {
+    let rate = 2.0 * top_capacity_rps();
+    Arc::new(Trace::synth(
+        Arrival::OnOff { rate, on_s: 0.3, off_s: 0.3 },
+        n,
+        DIM,
+        17,
+    ))
+}
+
+#[test]
+fn adaptive_beats_fixed_top_gear_under_onoff_overload() {
+    let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let n = 600;
+    let trace = onoff_trace(n);
+    let gen = LoadGen { workers: 64 };
+
+    // ---- fixed top gear: the plain pool IS the top gear (work 1.0) ----
+    let fixed_pool = Arc::new(ReplicaPool::spawn(classifier(), pool_cfg(), Metrics::new()));
+    let fixed = gen
+        .run(&fixed_pool, Arc::clone(&trace), &Metrics::new())
+        .unwrap();
+
+    // ---- adaptive: same pool shape + controller over the gear plan ----
+    let plan = plan();
+    let handle = GearHandle::new(plan.top().config());
+    let metrics = Metrics::new();
+    let adaptive_pool = Arc::new(ReplicaPool::spawn_geared(
+        classifier(),
+        pool_cfg(),
+        Arc::clone(&metrics),
+        Arc::clone(&handle),
+    ));
+    let mut controller = Controller::spawn(
+        Arc::clone(&adaptive_pool),
+        plan,
+        Arc::clone(&handle),
+        controller_cfg(),
+    );
+    let adaptive = gen
+        .run(&adaptive_pool, Arc::clone(&trace), &Metrics::new())
+        .unwrap();
+
+    // per-request accounting: nothing dropped, nothing duplicated, no
+    // failures -- on BOTH sides of the comparison
+    assert_eq!(fixed.errors, 0, "{fixed:?}");
+    assert_eq!(adaptive.errors, 0, "{adaptive:?}");
+    assert_eq!(fixed.completed + fixed.shed, n as u64, "{fixed:?}");
+    assert_eq!(adaptive.completed + adaptive.shed, n as u64, "{adaptive:?}");
+    assert_eq!(fixed_pool.total_outstanding(), 0);
+    assert_eq!(adaptive_pool.total_outstanding(), 0);
+
+    // the fixed top gear at 2x saturation must shed; the controller must
+    // have reacted by downshifting at least once
+    assert!(fixed.shed > 0, "fixed gear at 2x saturation never shed: {fixed:?}");
+    assert!(
+        metrics.counter("gear_shift_down").get() > 0,
+        "controller never downshifted; metrics: {:?}",
+        metrics.snapshot()
+    );
+
+    // headline: strictly higher goodput, strictly fewer sheds
+    assert!(
+        adaptive.completed > fixed.completed,
+        "adaptive {} vs fixed {} completed",
+        adaptive.completed,
+        fixed.completed
+    );
+    assert!(
+        adaptive.shed < fixed.shed,
+        "adaptive {} vs fixed {} shed",
+        adaptive.shed,
+        fixed.shed
+    );
+
+    // after the load ends the controller must restore the top gear
+    // within one dwell period (plus sampling/EWMA-decay slack)
+    let deadline = std::time::Instant::now() + DWELL + Duration::from_millis(300);
+    loop {
+        if handle.gear_id() == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "controller stuck in gear {} after the burst; metrics: {:?}",
+            handle.gear_id(),
+            metrics.snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        metrics.counter("gear_shift_up").get() > 0,
+        "no upshift recorded"
+    );
+    controller.stop();
+}
+
+#[test]
+fn shift_churn_never_drops_or_duplicates_requests() {
+    let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let plan = plan();
+    let handle = GearHandle::new(plan.top().config());
+    // fast classifier so the test is about the swap path, not capacity
+    let fast = Arc::new(SyntheticClassifier::new(
+        DIM,
+        3,
+        Duration::ZERO,
+        Duration::from_micros(50),
+    ));
+    let pool = Arc::new(ReplicaPool::spawn_geared(
+        fast,
+        PoolConfig {
+            replicas: 2,
+            max_queue: 256,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+        },
+        Metrics::new(),
+        Arc::clone(&handle),
+    ));
+
+    // adversarial churn: swap gears + retune batchers as fast as possible
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let churn = {
+        let handle = Arc::clone(&handle);
+        let pool = Arc::clone(&pool);
+        let plan = plan.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let gear = &plan.gears[i % plan.len()];
+                handle.store(gear.config());
+                pool.set_max_batch(1 + i % 8);
+                i += 1;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            i
+        })
+    };
+
+    // hammer the pool from several submitter threads
+    let n_threads = 4u64;
+    let per_thread = 250u64;
+    let submitters: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                let mut answered = Vec::new();
+                for i in 0..per_thread {
+                    let id = t * per_thread + i;
+                    let req = abc_serve::types::Request {
+                        id,
+                        features: vec![0.5; DIM],
+                        arrival_s: 0.0,
+                    };
+                    let v = pool.infer(req).expect("infer under churn");
+                    answered.push(v.request_id);
+                }
+                answered
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = Vec::new();
+    for s in submitters {
+        all.extend(s.join().unwrap());
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let swaps = churn.join().unwrap();
+
+    // exactly-once accounting: every id answered, none twice
+    all.sort_unstable();
+    let expect: Vec<u64> = (0..n_threads * per_thread).collect();
+    assert_eq!(all, expect, "dropped or duplicated requests under churn");
+    assert_eq!(pool.total_outstanding(), 0);
+    assert!(swaps > 10, "churn thread barely ran ({swaps} swaps)");
+    assert_eq!(handle.generation(), swaps as u64);
+}

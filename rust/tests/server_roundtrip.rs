@@ -1,7 +1,8 @@
 //! Integration: serving pipeline + TCP front end over real artifacts.
 //!
-//! (These tests skip when `artifacts/manifest.json` is absent; the
-//! artifact-free serving path is covered by `loadgen_integration.rs`.)
+//! (The artifact-backed tests skip when `artifacts/manifest.json` is
+//! absent; the `stats`/gear wire tests at the bottom run anywhere on
+//! the synthetic backend, like `loadgen_integration.rs`.)
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,8 +13,11 @@ use abc_serve::coordinator::cascade::Cascade;
 use abc_serve::coordinator::pipeline::Pipeline;
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::metrics::Metrics;
+use abc_serve::planner::{GearHandle, GearPlan};
 use abc_serve::server::{serve, Client};
+use abc_serve::trafficgen::SyntheticClassifier;
 use abc_serve::types::{Request, RuleKind};
+use abc_serve::util::json::Json;
 use abc_serve::zoo::manifest::Manifest;
 use abc_serve::zoo::registry::SuiteRuntime;
 
@@ -117,6 +121,98 @@ fn tcp_server_roundtrip() {
         .unwrap();
     assert!(reply.contains("error"), "got {reply}");
     // shutdown joins cleanly (handler read timeouts release the threads)
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ----- artifact-free wire tests (synthetic backend) --------------------
+
+fn synthetic_pool(gear: Option<Arc<GearHandle>>) -> Arc<ReplicaPool> {
+    let classifier = Arc::new(SyntheticClassifier::new(
+        4,
+        3,
+        Duration::ZERO,
+        Duration::from_micros(100),
+    ));
+    let cfg = PoolConfig {
+        replicas: 1,
+        max_queue: 64,
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+    };
+    Arc::new(match gear {
+        Some(h) => ReplicaPool::spawn_geared(classifier, cfg, Metrics::new(), h),
+        None => ReplicaPool::spawn(classifier, cfg, Metrics::new()),
+    })
+}
+
+#[test]
+fn stats_command_roundtrips_structured_snapshot() {
+    let port = 7992;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    // before any inference the reply is already well-formed
+    let empty = client.stats().unwrap();
+    assert!(empty.get("stats").get("counters").as_obj().is_some());
+
+    for id in 0..3 {
+        client.infer(id, &[0.5, -0.5, 0.25, 1.0]).unwrap();
+    }
+    let v = client.stats().unwrap();
+    let stats = v.get("stats");
+    assert!(
+        stats.get("counters").get("requests_submitted").as_u64().unwrap() >= 3,
+        "stats: {v}"
+    );
+    let lat = stats.get("histograms").get("request_latency_s");
+    assert!(lat.get("n").as_u64().unwrap() >= 3, "stats: {v}");
+    assert!(lat.get("p99").as_f64().unwrap() > 0.0);
+    // ungeared pool: no gear field on verdicts
+    let reply = client
+        .roundtrip(r#"{"id": 9, "features": [0.1, 0.2, 0.3, 0.4]}"#)
+        .unwrap();
+    let parsed = Json::parse(&reply).unwrap();
+    assert!(parsed.get("gear").as_u64().is_none(), "got {reply}");
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn geared_server_reports_active_gear_on_the_wire() {
+    let port = 7994;
+    // minimal one-gear plan; no controller needed to test the wire shape
+    let plan = GearPlan::new(vec![abc_serve::planner::Gear {
+        id: 0,
+        k: 3,
+        epsilon: 0.03,
+        theta: 0.6,
+        max_batch: 8,
+        replicas: 1,
+        accuracy: 0.9,
+        relative_cost: 1.0,
+        sustainable_rps: 1000.0,
+    }])
+    .unwrap();
+    let handle = GearHandle::new(plan.top().config());
+    let pool = synthetic_pool(Some(Arc::clone(&handle)));
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    let reply = client
+        .roundtrip(r#"{"id": 1, "features": [0.5, 0.5, 0.5, 0.5]}"#)
+        .unwrap();
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("gear").as_u64(), Some(0), "got {reply}");
+    assert_eq!(parsed.get("id").as_u64(), Some(1));
+    // the typed client still parses geared replies
+    let (pred, exit_tier) = client.infer(2, &[0.1, 0.1, 0.1, 0.1]).unwrap();
+    assert!(pred <= 1);
+    assert!((1..=3).contains(&exit_tier));
+
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }
