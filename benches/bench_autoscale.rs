@@ -1,0 +1,193 @@
+//! Serving-scale bench: fixed-N replica fleets vs the elastic
+//! autoscaler under on-off load.
+//!
+//! Replays the same on-off trace (bursts at ~60% of the max fleet's
+//! capacity, idle gaps between them) against three deployments of the
+//! same classifier:
+//!
+//! * **fixed max** -- `MAX_REPLICAS` pinned for the whole run: absorbs
+//!   every burst but bills for the idle gaps too;
+//! * **fixed min** -- one replica pinned: cheap, but sheds most of
+//!   every burst;
+//! * **elastic** -- the autoscaler growing the fleet into bursts and
+//!   draining it back to the floor between them.
+//!
+//! The rendered table shows goodput, sheds, p99 and **replica-seconds**
+//! (the simulated rental bill; multiply by $/replica-hour for dollars,
+//! e.g. the paper's Table 4 prices in `cost::rental`).  The verdict
+//! line checks the acceptance bar: elastic goodput within 5% of fixed
+//! max at measurably fewer replica-seconds.
+//!
+//! Run: `cargo bench --bench bench_autoscale`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::autoscale::{Autoscaler, ScaleConfig};
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::planner::{ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
+use abc_serve::util::table::{fnum, Table};
+
+const DIM: usize = 8;
+const MAX_BATCH: usize = 8;
+const MAX_QUEUE: usize = 64;
+const PER_ROW: Duration = Duration::from_millis(2); // ~500 rows/s/replica
+const MAX_REPLICAS: usize = 4;
+const N_REQUESTS: usize = 1600;
+
+fn classifier() -> Arc<SyntheticClassifier> {
+    Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, PER_ROW))
+}
+
+fn per_replica_rps() -> f64 {
+    classifier().capacity_rps(MAX_BATCH)
+}
+
+fn one_gear_plan() -> GearPlan {
+    GearPlan::new(vec![Gear {
+        id: 0,
+        k: 3,
+        epsilon: 0.03,
+        theta: 0.6,
+        mid: vec![],
+        max_batch: MAX_BATCH,
+        replicas: 1,
+        accuracy: 0.95,
+        relative_cost: 1.0,
+        sustainable_rps: per_replica_rps(),
+    }])
+    .unwrap()
+}
+
+fn pool_cfg(replicas: usize) -> PoolConfig {
+    PoolConfig {
+        replicas,
+        max_queue: MAX_QUEUE,
+        batcher: BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(1),
+        },
+    }
+}
+
+fn onoff_trace() -> Arc<Trace> {
+    let rate = 0.6 * MAX_REPLICAS as f64 * per_replica_rps();
+    Arc::new(Trace::synth(
+        Arrival::OnOff { rate, on_s: 0.4, off_s: 0.6 },
+        N_REQUESTS,
+        DIM,
+        29,
+    ))
+}
+
+/// (report, replica-seconds) for a pinned fleet of `n` replicas.
+fn run_fixed(n: usize, trace: Arc<Trace>) -> (LoadReport, f64) {
+    let pool = Arc::new(ReplicaPool::spawn(classifier(), pool_cfg(n), Metrics::new()));
+    let report = LoadGen { workers: 64 }
+        .run(&pool, trace, &Metrics::new())
+        .expect("fixed run");
+    let rs = pool.replica_seconds();
+    (report, rs)
+}
+
+/// (report, replica-seconds, scale-ups, scale-downs) for the elastic
+/// fleet.
+fn run_elastic(trace: Arc<Trace>) -> (LoadReport, f64, u64, u64) {
+    let plan = one_gear_plan();
+    let handle = GearHandle::new(plan.top().config());
+    let metrics = Metrics::new();
+    let pool = Arc::new(ReplicaPool::spawn_geared(
+        classifier(),
+        pool_cfg(1),
+        Arc::clone(&metrics),
+        Arc::clone(&handle),
+    ));
+    let _autoscaler = Autoscaler::spawn(
+        Arc::clone(&pool),
+        plan,
+        handle,
+        ControllerConfig {
+            sample_every: Duration::from_millis(10),
+            dwell: Duration::from_millis(80),
+            ..ControllerConfig::default()
+        },
+        ScaleConfig {
+            min_replicas: 1,
+            max_replicas: MAX_REPLICAS,
+            warmup: Duration::ZERO,
+            ..ScaleConfig::default()
+        },
+    );
+    let report = LoadGen { workers: 64 }
+        .run(&pool, trace, &Metrics::new())
+        .expect("elastic run");
+    let rs = pool.replica_seconds();
+    (
+        report,
+        rs,
+        metrics.counter("scale_up_total").get(),
+        metrics.counter("scale_down_total").get(),
+    )
+}
+
+fn main() {
+    let trace = onoff_trace();
+    let burst = 0.6 * MAX_REPLICAS as f64 * per_replica_rps();
+    println!(
+        "on-off trace: {} requests, bursts at {:.0} rps (60% of the {}-replica \
+         fleet's {:.0} rps), {:.0} rps/replica",
+        trace.len(),
+        burst,
+        MAX_REPLICAS,
+        MAX_REPLICAS as f64 * per_replica_rps(),
+        per_replica_rps(),
+    );
+
+    let (fixed_max, max_rs) = run_fixed(MAX_REPLICAS, Arc::clone(&trace));
+    let (fixed_min, min_rs) = run_fixed(1, Arc::clone(&trace));
+    let (elastic, elastic_rs, ups, downs) = run_elastic(Arc::clone(&trace));
+
+    let mut table = Table::new(
+        "fixed-N vs elastic under on-off load",
+        &["config", "done", "shed", "err", "goodput rps", "p99", "replica-s",
+          "rep-s/1k done"],
+    );
+    let mut row = |name: &str, r: &LoadReport, rs: f64| {
+        table.row(vec![
+            name.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.errors.to_string(),
+            format!("{:.0}", r.goodput_rps),
+            abc_serve::benchkit::fmt_time(r.p99_s),
+            fnum(rs, 2),
+            fnum(rs * 1000.0 / (r.completed.max(1) as f64), 2),
+        ]);
+    };
+    row(&format!("fixed max ({MAX_REPLICAS} replicas)"), &fixed_max, max_rs);
+    row("fixed min (1 replica)", &fixed_min, min_rs);
+    row(
+        &format!("elastic (1..={MAX_REPLICAS}, autoscaler)"),
+        &elastic,
+        elastic_rs,
+    );
+    println!("{}", table.render());
+
+    let goodput_ratio = elastic.completed as f64 / fixed_max.completed.max(1) as f64;
+    let rent_ratio = elastic_rs / max_rs.max(1e-9);
+    println!(
+        "autoscaler scaled up {ups}x / down {downs}x.  elastic goodput = \
+         {:.1}% of fixed max at {:.1}% of its replica-seconds.",
+        100.0 * goodput_ratio,
+        100.0 * rent_ratio,
+    );
+    println!(
+        "verdict: goodput within 5% of fixed max: {};  fewer replica-seconds: {}",
+        if goodput_ratio >= 0.95 { "YES" } else { "NO" },
+        if rent_ratio < 0.9 { "YES" } else { "NO" },
+    );
+}

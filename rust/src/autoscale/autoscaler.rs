@@ -1,0 +1,389 @@
+//! The autoscaler thread: gear control + replica scaling as one
+//! atomic decision per sample tick.
+//!
+//! Replaces `planner::Controller` when elasticity is on (`repro serve
+//! --autoscale`): ONE thread samples the pool (`Sampler`), advances
+//! the replica lifecycle (`ReplicaPool::advance`), runs the gear state
+//! machine fleet-aware (`ControlState::step_fleet` at `max_replicas`,
+//! so renting machines is preferred over trading accuracy), and then
+//! sizes the fleet for the -- possibly new -- gear with
+//! [`ScaleConfig::target`].  Shift and scale share the state machine's
+//! dwell clock: neither happens within `dwell` of the other, except
+//! that a shift and its matching resize land together in the same tick
+//! (shifting to a cheaper gear without releasing the machines it no
+//! longer needs would waste exactly the rent the shift saved).
+//!
+//! The decision core is [`decide`], a pure function of (state, plan,
+//! configs, observation, live + warming counts, dt), unit-tested below
+//! without threads; the thread half only samples, applies, and records.
+//!
+//! Applying a decision:
+//! * shift: swap the shared `GearHandle`, retune batcher caps -- only
+//!   batches formed later are affected;
+//! * scale up: `ReplicaPool::scale_up` (Warming with the configured
+//!   warm-up; the rental clock starts immediately);
+//! * scale down: `ReplicaPool::drain` -- graceful: the drained
+//!   replicas stop admitting, finish their queues, and are retired by
+//!   a later tick's `advance`.  No request is dropped or duplicated.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::autoscale::policy::ScaleConfig;
+use crate::coordinator::replica::ReplicaPool;
+use crate::metrics::EventKind;
+use crate::planner::controller::{
+    ControlState, ControllerConfig, Observation, Sampler, Shift, Trigger,
+};
+use crate::planner::gear::{GearHandle, GearPlan};
+
+/// One joint (gear, fleet) decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// Gear shift to apply, with its trigger.
+    pub shift: Option<(Shift, Trigger)>,
+    /// Fleet resize to apply: (target, trigger).  Absent when the
+    /// current fleet already matches the policy target or the dwell
+    /// clock blocks action.
+    pub scale: Option<(usize, Trigger)>,
+}
+
+/// The pure joint decision: fold one observation into the gear state
+/// machine (fleet-aware at `scale.max_replicas`), then size the fleet
+/// for whatever gear is now active.  `live` is the admitting replica
+/// count, `warming` the replicas already provisioned but not yet
+/// serving -- the policy sizes against `live + warming` so a slow
+/// warm-up cannot trick it into re-provisioning the same capacity
+/// every dwell.  A resize is actionable only when the target exceeds
+/// the provisioned fleet (scale up) or undercuts the live count
+/// (drain); a target inside `[live, live + warming]` just means
+/// "wait for the warm-ups".  Mutates `state` exactly as the
+/// controller would.
+pub fn decide(
+    state: &mut ControlState,
+    plan: &GearPlan,
+    ctrl: &ControllerConfig,
+    scale: &ScaleConfig,
+    obs: Observation,
+    live: usize,
+    warming: usize,
+    dt_s: f64,
+) -> Decision {
+    let shift = state.step_fleet(plan, ctrl, obs, dt_s, Some(scale.max_replicas));
+    // a shift already consumed the dwell; it still gets its matching
+    // resize this tick (one atomic capacity decision)
+    let may_scale = shift.is_some() || state.dwell_ok(ctrl);
+    let mut scale_action = None;
+    if may_scale {
+        let fleet = live + warming;
+        let gear = &plan.gears[state.current()];
+        // the pressure kicker rents one extra machine for queue debt the
+        // rate EWMA cannot see -- but only when nothing is already
+        // warming: capacity in flight will relieve the same debt, and
+        // kicking every dwell until it goes Live would re-rent it
+        let pressured =
+            obs.outstanding_frac > ctrl.queue_pressure && warming == 0;
+        let target =
+            scale.target(state.ewma_rps(), gear.per_replica_rps(), fleet, pressured);
+        if target > fleet || target < live {
+            let trigger = if pressured && target > fleet {
+                Trigger::Pressure
+            } else {
+                Trigger::Rate
+            };
+            scale_action = Some((target, trigger));
+            state.note_action();
+        }
+    }
+    Decision { shift, scale: scale_action }
+}
+
+/// Handle to a running autoscaler thread; stops and joins on drop.
+pub struct Autoscaler {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Autoscaler {
+    /// Spawn the coupled control loop over a geared pool + plan.  The
+    /// pool must have been spawned with the same `handle`
+    /// (`ReplicaPool::spawn_geared`); the handle's active gear id
+    /// picks the starting ladder position.
+    pub fn spawn(
+        pool: Arc<ReplicaPool>,
+        plan: GearPlan,
+        handle: Arc<GearHandle>,
+        ctrl: ControllerConfig,
+        scale: ScaleConfig,
+    ) -> Autoscaler {
+        assert!(
+            handle.gear_id() < plan.len(),
+            "gear handle points past the plan's ladder"
+        );
+        assert!(
+            ctrl.up_util < ctrl.down_util,
+            "hysteresis requires up_util < down_util"
+        );
+        assert!(ctrl.ewma_alpha > 0.0 && ctrl.ewma_alpha <= 1.0);
+        scale.validate();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stopf = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("abc-autoscaler".into())
+            .spawn(move || autoscale_loop(&pool, &plan, &handle, ctrl, scale, &stopf))
+            .expect("spawn autoscaler");
+        Autoscaler { stop, join: Some(join) }
+    }
+
+    /// Ask the thread to exit and wait for it.  Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn autoscale_loop(
+    pool: &ReplicaPool,
+    plan: &GearPlan,
+    handle: &GearHandle,
+    ctrl: ControllerConfig,
+    scale: ScaleConfig,
+    stop: &AtomicBool,
+) {
+    let metrics = Arc::clone(pool.metrics());
+    let shifts_up = metrics.counter("gear_shift_up");
+    let shifts_down = metrics.counter("gear_shift_down");
+    let scale_ups = metrics.counter("scale_up_total");
+    let scale_downs = metrics.counter("scale_down_total");
+    let gear_gauge = metrics.gauge("gear_current");
+    let ewma_gauge = metrics.gauge("arrival_ewma_rps");
+    let p99_gauge = metrics.gauge("latency_p99_s");
+    let live_gauge = metrics.gauge("replicas_live");
+    let warming_gauge = metrics.gauge("replicas_warming");
+    let draining_gauge = metrics.gauge("replicas_draining");
+    let seconds_gauge = metrics.gauge("replica_seconds");
+
+    let mut state = ControlState::new(handle.gear_id(), &ctrl);
+    gear_gauge.set(state.current() as f64);
+    let mut sampler = Sampler::new(&metrics);
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(ctrl.sample_every);
+        // lifecycle first: promote warmed replicas / retire drained
+        // ones, so this tick's live count and capacity are current
+        pool.advance(Instant::now());
+        let (obs, dt_s) = sampler.sample(pool);
+        let (warming, live, _) = pool.counts();
+        let old_gear = state.current();
+        let decision =
+            decide(&mut state, plan, &ctrl, &scale, obs, live, warming, dt_s);
+        ewma_gauge.set(state.ewma_rps());
+        if obs.p99_s.is_finite() {
+            p99_gauge.set(obs.p99_s);
+        }
+        if let Some((shift, trigger)) = decision.shift {
+            let gear = &plan.gears[state.current()];
+            handle.store(gear.config());
+            pool.set_max_batch(gear.max_batch);
+            gear_gauge.set(gear.id as f64);
+            match shift {
+                Shift::Up => shifts_up.inc(),
+                Shift::Down => shifts_down.inc(),
+            }
+            metrics.events().record(
+                EventKind::Shift,
+                trigger.name(),
+                old_gear,
+                gear.id,
+                live,
+                live,
+            );
+        }
+        if let Some((target, trigger)) = decision.scale {
+            let fleet = live + warming;
+            if target > fleet {
+                pool.scale_up(target - fleet, scale.warmup);
+                scale_ups.inc();
+            } else {
+                pool.drain(live - target);
+                scale_downs.inc();
+            }
+            metrics.events().record(
+                EventKind::Scale,
+                trigger.name(),
+                state.current(),
+                state.current(),
+                fleet,
+                target,
+            );
+        }
+        // rental + lifecycle telemetry every tick
+        let (warming, live_now, draining) = pool.counts();
+        live_gauge.set(live_now as f64);
+        warming_gauge.set(warming as f64);
+        draining_gauge.set(draining as f64);
+        seconds_gauge.set(pool.replica_seconds());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::gear::Gear;
+    use std::time::Duration;
+
+    fn plan2() -> GearPlan {
+        // per-replica: top 500 rps, fast 2000 rps (quoted at 2 replicas)
+        let gear = |acc: f64, work: f64, rps: f64| Gear {
+            id: 0,
+            k: 3,
+            epsilon: 0.03,
+            theta: 0.6,
+            mid: vec![],
+            max_batch: 8,
+            replicas: 2,
+            accuracy: acc,
+            relative_cost: work,
+            sustainable_rps: rps,
+        };
+        GearPlan::new(vec![gear(0.95, 1.0, 1000.0), gear(0.85, 0.25, 4000.0)])
+            .unwrap()
+    }
+
+    fn ctrl() -> ControllerConfig {
+        ControllerConfig {
+            dwell: Duration::from_millis(100),
+            ewma_alpha: 1.0,
+            ..ControllerConfig::default()
+        }
+    }
+
+    fn scale() -> ScaleConfig {
+        ScaleConfig { min_replicas: 1, max_replicas: 4, ..ScaleConfig::default() }
+    }
+
+    fn obs(rps: f64) -> Observation {
+        Observation { arrival_rps: rps, outstanding_frac: 0.0, p99_s: f64::NAN }
+    }
+
+    #[test]
+    fn rising_load_rents_replicas_before_trading_accuracy() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(0, &ctrl);
+        // 1500 rps: the max fleet of the top gear sustains 4*500=2000,
+        // so no shift -- but the 1-replica fleet must grow to 4
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 1, 0, 0.2);
+        assert_eq!(d.shift, None);
+        assert_eq!(d.scale, Some((4, Trigger::Rate)));
+        assert_eq!(s.current(), 0, "accuracy held while machines are cheap");
+    }
+
+    #[test]
+    fn drowning_load_shifts_and_resizes_in_one_tick() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(0, &ctrl);
+        // 3000 rps drowns even 4x top (1700 effective): downshift to the
+        // fast gear AND size its fleet in the same decision -- the fast
+        // gear (2000 rps/replica) releases down to 3 machines (the
+        // conservative scale_down_util sizing; 2 would run at 75%)
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(3000.0), 4, 0, 0.2);
+        assert_eq!(d.shift, Some((Shift::Down, Trigger::Rate)));
+        assert_eq!(s.current(), 1);
+        assert_eq!(d.scale, Some((3, Trigger::Rate)));
+    }
+
+    #[test]
+    fn calm_load_upshifts_then_drains_the_surplus() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(1, &ctrl);
+        // 300 rps on the fast gear: upshift (top's max fleet runs at
+        // 0.15) and size the top-gear fleet for 300 rps (1 replica)
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(300.0), 4, 0, 0.2);
+        assert_eq!(d.shift, Some((Shift::Up, Trigger::Rate)));
+        assert_eq!(d.scale, Some((1, Trigger::Rate)));
+    }
+
+    #[test]
+    fn dwell_blocks_lone_scale_actions_but_not_the_shift_resize_pair() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(0, &ctrl);
+        // consume the dwell with an action
+        s.note_action();
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 1, 0, 0.02);
+        assert_eq!(d.shift, None);
+        assert_eq!(d.scale, None, "dwell must gate scale actions too");
+        // once the dwell expires the pending resize applies
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 1, 0, 0.2);
+        assert_eq!(d.scale, Some((4, Trigger::Rate)));
+        // and the next decision's dwell is consumed by that scale action
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(3000.0), 4, 0, 0.02);
+        assert_eq!(d.shift, None);
+        assert_eq!(d.scale, None);
+    }
+
+    #[test]
+    fn queue_pressure_scales_up_even_at_calm_ewma() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(1, &ctrl);
+        // rate looks idle but queues are jammed: the gear machine steps
+        // down if it can (it cannot: already fastest), the fleet grows
+        let jammed =
+            Observation { arrival_rps: 5.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        let d = decide(&mut s, &plan, &ctrl, &scale, jammed, 2, 0, 0.2);
+        assert_eq!(d.shift, None, "already in the fastest gear");
+        assert_eq!(d.scale, Some((3, Trigger::Pressure)));
+    }
+
+    #[test]
+    fn warming_replicas_count_against_reprovisioning() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(0, &ctrl);
+        // first decision provisions 3 more machines (slow warm-up: they
+        // stay Warming)
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 1, 0, 0.2);
+        assert_eq!(d.scale, Some((4, Trigger::Rate)));
+        // while they warm, the same load must NOT re-provision: the
+        // in-flight capacity already covers the target
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 1, 3, 0.2);
+        assert_eq!(d.scale, None, "re-provisioned capacity already in flight");
+        // even a jammed queue doesn't kick the fleet past the in-flight
+        // capacity: the warm-ups will relieve the same debt
+        let jammed = Observation {
+            arrival_rps: 1500.0,
+            outstanding_frac: 0.9,
+            p99_s: f64::NAN,
+        };
+        let d = decide(&mut s, &plan, &ctrl, &scale, jammed, 1, 3, 0.2);
+        assert_eq!(d.scale, None, "pressure re-rented warming capacity");
+        // once they go live nothing changes either
+        let d = decide(&mut s, &plan, &ctrl, &scale, obs(1500.0), 4, 0, 0.2);
+        assert_eq!(d.scale, None);
+    }
+
+    #[test]
+    fn steady_state_decides_nothing() {
+        let plan = plan2();
+        let (ctrl, scale) = (ctrl(), scale());
+        let mut s = ControlState::new(0, &ctrl);
+        // 600 rps on 2 live top-gear replicas: util 0.6, inside every band
+        for _ in 0..10 {
+            let d = decide(&mut s, &plan, &ctrl, &scale, obs(600.0), 2, 0, 0.2);
+            assert_eq!(d, Decision { shift: None, scale: None });
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Elastic replica autoscaling: gear-coupled scale-up/down with
+//! graceful drain and rental-cost accounting.
+//!
+//! The paper's cloud-serving claim is about **rental** cost --
+//! replica-hours, not per-request FLOPs.  A fixed-size `ReplicaPool`
+//! can only cash in the per-request savings: a gear shift retunes
+//! thetas and batch sizes, but the idle machines keep billing.  This
+//! subsystem closes that gap:
+//!
+//! * [`policy`] -- [`ScaleConfig`]: the pure policy mapping the
+//!   controller's arrival EWMA + the active gear's per-replica
+//!   capacity to a target replica count, with distinct scale-up /
+//!   scale-down watermarks for hysteresis;
+//! * [`autoscaler`] -- [`Autoscaler`]: ONE sampling thread that makes
+//!   the gear decision (reusing `planner::controller::ControlState`)
+//!   and the scale decision from the same observation in the same
+//!   tick, sharing a single dwell clock -- a gear shift and a scale
+//!   action are one atomic capacity decision, never two fighting
+//!   control loops.  Rate-driven gear downshifts are evaluated against
+//!   the *maximum* fleet (`ControlState::step_fleet`), so the coupled
+//!   controller prefers renting replicas over trading accuracy and
+//!   only downshifts when even the full fleet cannot carry the load.
+//!
+//! The replica lifecycle itself (`Warming -> Live -> Draining ->
+//! Retired`, graceful drain, exactly-once guarantees, the
+//! `replica_seconds` rental clock) lives in
+//! `coordinator::replica::ReplicaPool`; the autoscaler drives it via
+//! `scale_up` / `drain` / `advance`.
+//!
+//! Telemetry: `replicas_live` / `replicas_warming` /
+//! `replicas_draining` / `replica_seconds` gauges, `scale_up_total` /
+//! `scale_down_total` counters, and one `EventLog` entry per decision
+//! (`{"cmd":"events"}` on the wire, `repro stats --events` offline).
+//!
+//! Entry points: `repro serve --plan P --autoscale --min-replicas A
+//! --max-replicas B`, `rust/tests/autoscale_integration.rs`, and
+//! `benches/bench_autoscale.rs` (fixed-N vs elastic under on-off
+//! load: goodput, p99 and replica-hours).
+
+pub mod autoscaler;
+pub mod policy;
+
+pub use autoscaler::Autoscaler;
+pub use policy::ScaleConfig;

@@ -1,0 +1,189 @@
+//! The scale policy: arrival EWMA + active gear -> target replica
+//! count.  Pure and clock-free, like `ControlState::step`, so the
+//! sizing math is unit-testable without threads.
+//!
+//! Sizing is M/D/1-flavoured provisioning rather than queueing-exact:
+//! hold the fleet where the EWMA runs at or below `scale_up_util` of
+//! capacity, and release machines only down to a size that would still
+//! run below the stricter `scale_down_util` -- the gap between the two
+//! watermarks is the hysteresis band that keeps on-off traffic from
+//! flapping the fleet at the sample rate (the shared dwell clock in
+//! the autoscaler bounds it further).  Queue pressure adds a kicker:
+//! when outstanding work crosses the controller's `queue_pressure`
+//! watermark the target is bumped at least one above the current fleet
+//! even if the rate EWMA looks calm (a stuck queue is capacity debt
+//! the arrival rate cannot see).
+
+/// Fleet bounds + watermarks for the autoscaler.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleConfig {
+    /// Never drain below this many replicas (>= 1).
+    pub min_replicas: usize,
+    /// Never provision above this many replicas.
+    pub max_replicas: usize,
+    /// Scale up when the fleet would otherwise run above this
+    /// utilisation; new fleets are sized to run at it.
+    pub scale_up_util: f64,
+    /// Scale down only to a fleet that would still run below this
+    /// (must be < `scale_up_util` for hysteresis).
+    pub scale_down_util: f64,
+    /// Simulated provisioning delay for new replicas (Warming ->
+    /// Live); the rental clock runs during it.
+    pub warmup: std::time::Duration,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            scale_up_util: 0.85,
+            scale_down_util: 0.60,
+            warmup: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl ScaleConfig {
+    /// Panic early on nonsense configs (mirrors `Controller::spawn`).
+    pub fn validate(&self) {
+        assert!(self.min_replicas >= 1, "min_replicas must be >= 1");
+        assert!(
+            self.min_replicas <= self.max_replicas,
+            "min_replicas {} > max_replicas {}",
+            self.min_replicas,
+            self.max_replicas
+        );
+        assert!(
+            self.scale_down_util < self.scale_up_util,
+            "hysteresis requires scale_down_util < scale_up_util"
+        );
+        assert!(self.scale_up_util > 0.0 && self.scale_up_util <= 1.0);
+        assert!(self.scale_down_util > 0.0);
+    }
+
+    /// Replicas needed to serve `rps` at `util` utilisation of
+    /// `per_replica_rps`-capacity machines.
+    fn needed(&self, rps: f64, per_replica_rps: f64, util: f64) -> usize {
+        if rps <= 0.0 {
+            return 0;
+        }
+        (rps / (per_replica_rps.max(1e-9) * util)).ceil() as usize
+    }
+
+    /// The target fleet size for the observed load.  `per_replica_rps`
+    /// is the ACTIVE gear's per-replica capacity (a gear shift changes
+    /// it, which is why the autoscaler re-evaluates the target in the
+    /// same tick as the shift).  `pressured` is the controller's
+    /// queue-pressure signal.  Pure; the caller clamps nothing -- the
+    /// result is already within `[min_replicas, max_replicas]`.
+    pub fn target(
+        &self,
+        ewma_rps: f64,
+        per_replica_rps: f64,
+        current: usize,
+        pressured: bool,
+    ) -> usize {
+        let up = self.needed(ewma_rps, per_replica_rps, self.scale_up_util);
+        let down = self.needed(ewma_rps, per_replica_rps, self.scale_down_util);
+        // `down >= up` always (stricter watermark needs more machines):
+        // the [up, down] band is where the current fleet is left alone
+        let mut t = if up > current {
+            up
+        } else if down < current {
+            down
+        } else {
+            current
+        };
+        if pressured {
+            t = t.max(current + 1);
+        }
+        t.clamp(self.min_replicas, self.max_replicas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(min: usize, max: usize) -> ScaleConfig {
+        ScaleConfig { min_replicas: min, max_replicas: max, ..ScaleConfig::default() }
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        cfg(1, 4).validate();
+        let r = std::panic::catch_unwind(|| {
+            ScaleConfig { min_replicas: 0, ..cfg(1, 4) }.validate()
+        });
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(|| cfg(5, 4).validate());
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(|| {
+            ScaleConfig { scale_down_util: 0.9, ..cfg(1, 4) }.validate()
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sizes_fleet_to_the_up_watermark() {
+        let c = cfg(1, 8);
+        // 500 rps machines at 85%: 425 effective each
+        assert_eq!(c.target(100.0, 500.0, 1, false), 1);
+        assert_eq!(c.target(426.0, 500.0, 1, false), 2, "past one machine");
+        assert_eq!(c.target(1700.0, 500.0, 1, false), 4);
+        // jumps straight to the needed size, no one-at-a-time crawl
+        assert_eq!(c.target(3000.0, 500.0, 1, false), 8, "clamped at max");
+        assert_eq!(c.target(1e9, 500.0, 1, false), 8);
+    }
+
+    #[test]
+    fn holds_inside_the_hysteresis_band() {
+        let c = cfg(1, 8);
+        // 4 machines at 500 rps: up-sized for >1700, down-sized for
+        // loads where 3 machines stay under 60% (900)
+        for rps in [1000.0, 1200.0, 1500.0, 1700.0] {
+            assert_eq!(c.target(rps, 500.0, 4, false), 4, "flapped at {rps}");
+        }
+        // calm enough that a smaller fleet runs under 60%: release
+        assert_eq!(c.target(850.0, 500.0, 4, false), 3);
+        assert_eq!(c.target(500.0, 500.0, 4, false), 2);
+        assert_eq!(c.target(0.0, 500.0, 4, false), 1, "idle drains to min");
+    }
+
+    #[test]
+    fn scale_down_is_conservative_not_greedy() {
+        let c = cfg(1, 8);
+        // 4 -> 3 only if 3 machines would run below scale_down_util:
+        // 1000 rps on 3x500 = 67% > 60% -> hold the 4th
+        assert_eq!(c.target(1000.0, 500.0, 4, false), 4);
+        // at 890 rps, 3 machines run at 59% -> release one
+        assert_eq!(c.target(890.0, 500.0, 4, false), 3);
+    }
+
+    #[test]
+    fn pressure_kicks_the_fleet_up_even_when_rate_looks_calm() {
+        let c = cfg(1, 8);
+        assert_eq!(c.target(10.0, 500.0, 2, true), 3, "queue debt adds one");
+        // but never past the fleet cap
+        assert_eq!(c.target(10.0, 500.0, 8, true), 8);
+    }
+
+    #[test]
+    fn respects_min_and_max() {
+        let c = cfg(2, 5);
+        assert_eq!(c.target(0.0, 500.0, 3, false), 2);
+        assert_eq!(c.target(1e9, 500.0, 3, false), 5);
+        // degenerate per-replica capacity never divides by zero
+        assert_eq!(c.target(100.0, 0.0, 3, false), 5);
+    }
+
+    #[test]
+    fn gear_shift_changes_the_target_through_per_replica_capacity() {
+        let c = cfg(1, 8);
+        // same 1600 rps load: the top gear (400 rps/replica) needs 5
+        // machines, the fast gear (1600 rps/replica) needs 2
+        assert_eq!(c.target(1600.0, 400.0, 5, false), 5);
+        assert_eq!(c.target(1600.0, 1600.0, 5, false), 2);
+    }
+}

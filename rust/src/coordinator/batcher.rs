@@ -63,7 +63,9 @@ struct Gate<T> {
 pub struct Batcher<T> {
     gate: Mutex<Gate<T>>,
     max_batch: Arc<AtomicUsize>,
-    worker: Option<JoinHandle<()>>,
+    /// Behind a mutex so [`Batcher::join`] can take it from `&self`
+    /// (replica drain joins the worker without owning the batcher).
+    worker: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl<T: Send + 'static> Batcher<T> {
@@ -84,7 +86,7 @@ impl<T: Send + 'static> Batcher<T> {
         Batcher {
             gate: Mutex::new(Gate { tx, closed: false }),
             max_batch,
-            worker: Some(worker),
+            worker: Mutex::new(Some(worker)),
         }
     }
 
@@ -122,20 +124,25 @@ impl<T: Send + 'static> Batcher<T> {
             let _ = gate.tx.send(Msg::Shutdown);
         }
     }
+
+    /// Drain-aware teardown: shut the gate, then *wait* for the
+    /// collector to flush every previously accepted item and exit.
+    /// This is what replica retirement calls -- by the time it returns,
+    /// no flush callback will ever run again and the worker thread is
+    /// gone.  Idempotent; must not be called from the flush callback
+    /// itself (the collector cannot join itself).
+    pub fn join(&self) {
+        self.shutdown();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(w) = handle {
+            let _ = w.join();
+        }
+    }
 }
 
 impl<T> Drop for Batcher<T> {
     fn drop(&mut self) {
-        {
-            let mut gate = self.gate.lock().unwrap();
-            if !gate.closed {
-                gate.closed = true;
-                let _ = gate.tx.send(Msg::Shutdown);
-            }
-        }
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.join();
     }
 }
 
@@ -306,6 +313,27 @@ mod tests {
         drop(b); // joins the worker
         // the accepted push was still flushed, the rejected ones weren't
         assert_eq!(*flushed.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn join_waits_for_accepted_items_then_is_idempotent() {
+        let flushed = Arc::new(Mutex::new(0usize));
+        let fl = Arc::clone(&flushed);
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_secs(100) };
+        let b: Batcher<u32> = Batcher::spawn(cfg, move |batch| {
+            std::thread::sleep(Duration::from_millis(5));
+            *fl.lock().unwrap() += batch.len();
+        });
+        for _ in 0..7 {
+            b.push(1).unwrap();
+        }
+        // join returns only after the pending items were flushed
+        b.join();
+        assert_eq!(*flushed.lock().unwrap(), 7);
+        assert_eq!(b.push(2), Err("batcher is shut down"));
+        b.join(); // idempotent
+        drop(b); // and Drop after join is a no-op
+        assert_eq!(*flushed.lock().unwrap(), 7);
     }
 
     #[test]

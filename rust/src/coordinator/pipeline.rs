@@ -110,6 +110,15 @@ impl Pipeline {
         self.outstanding.load(Ordering::SeqCst)
     }
 
+    /// Drain-aware teardown (replica retirement): close the batcher
+    /// gate, flush everything already accepted, and join the collector
+    /// thread.  Every request admitted before this call still gets its
+    /// verdict; `try_submit`/`submit` afterwards return `Closed`.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.batcher.join();
+    }
+
     /// Submit a request; returns a receiver for its verdict.
     pub fn submit(&self, request: Request) -> Result<Receiver<Result<Verdict, String>>> {
         anyhow::ensure!(

@@ -1,6 +1,6 @@
-//! Replicated serving: N independent `Pipeline` replicas behind a
-//! least-outstanding-requests dispatcher with bounded queues and explicit
-//! load shedding.
+//! Replicated serving: an **elastic** pool of independent `Pipeline`
+//! replicas behind a least-outstanding-requests dispatcher with bounded
+//! queues and explicit load shedding.
 //!
 //! Each replica owns its own dynamic batcher thread over a shared
 //! `Arc<dyn BatchClassifier>` (the PJRT CPU client is thread-safe for
@@ -9,13 +9,49 @@
 //! enforced *inside* each pipeline (`Pipeline::try_submit` reserves a
 //! slot before checking the cap), so `outstanding <= max_queue` holds
 //! per replica even under concurrent submitters -- the pool never grows
-//! queues without bound.  When every replica is full the pool answers
-//! with a typed [`PoolError::Overloaded`] instead of queueing, which the
-//! TCP front end renders as the wire-protocol `overloaded` reply (see
-//! `server`).
+//! queues without bound.  When every admitting replica is full the pool
+//! answers with a typed [`PoolError::Overloaded`] instead of queueing,
+//! which the TCP front end renders as the wire-protocol `overloaded`
+//! reply (see `server`).
+//!
+//! # Replica lifecycle (elastic scaling)
+//!
+//! ```text
+//!   scale_up()            warmup elapses        drain()
+//!  ------------> Warming ----------------> Live --------> Draining
+//!                   |  (advance())                           |
+//!                   | fallback admission                     | outstanding
+//!                   | only when no Live                      | reaches 0
+//!                   | replica admits                         v (advance())
+//!                   +----------------------------------> Retired
+//!                                             (batcher joined, slot removed)
+//! ```
+//!
+//! * **Warming**: the replica's threads are up but it is still paying
+//!   its simulated provisioning delay; the dispatcher skips it unless
+//!   *no* live replica can admit (a stall is worse than a cold batch).
+//!   The rental clock ([`ReplicaPool::replica_seconds`]) runs from
+//!   `scale_up` -- you pay for a machine from the moment you rent it,
+//!   not from the moment it is useful.
+//! * **Live**: normal dispatch target.
+//! * **Draining**: stops admitting (any `submit` that starts after
+//!   `drain` returns will never route here) but keeps executing; once
+//!   its outstanding count hits zero, [`ReplicaPool::advance`] retires
+//!   it -- the batcher gate is closed, every accepted item was already
+//!   flushed and answered, and the worker thread is joined.  No request
+//!   is ever dropped or duplicated by scale-down (property-tested in
+//!   rust/tests/autoscale_integration.rs).
+//!
+//! Retirement removes the slot under the pool's write lock while every
+//! admission probe holds the read lock, so an "idle" check here cannot
+//! race an in-flight admission: either the probe finished first (its
+//! request is counted in `outstanding`, blocking retirement) or the
+//! slot is already gone when the probe looks.
 
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::cascade::BatchClassifier;
@@ -27,7 +63,7 @@ use crate::types::{Request, Verdict};
 /// Sizing knobs for a replica pool.
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
-    /// Number of independent pipeline replicas.
+    /// Number of independent pipeline replicas at spawn (all Live).
     pub replicas: usize,
     /// Max outstanding requests per replica before shedding.
     pub max_queue: usize,
@@ -67,14 +103,97 @@ impl std::fmt::Display for PoolError {
 
 impl std::error::Error for PoolError {}
 
-/// N pipeline replicas behind a least-outstanding-requests dispatcher.
+/// Where a replica sits in its lifecycle.  `Retired` is not a state a
+/// slot can be observed in -- retirement removes the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ReplicaState {
+    Warming = 0,
+    Live = 1,
+    Draining = 2,
+}
+
+impl ReplicaState {
+    fn from_u8(v: u8) -> ReplicaState {
+        match v {
+            0 => ReplicaState::Warming,
+            1 => ReplicaState::Live,
+            _ => ReplicaState::Draining,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaState::Warming => "warming",
+            ReplicaState::Live => "live",
+            ReplicaState::Draining => "draining",
+        }
+    }
+}
+
+/// One replica: a pipeline plus its lifecycle state and bookkeeping.
+struct ReplicaSlot {
+    /// Stable id (monotone across the pool's lifetime); names the
+    /// `replica_{id}_requests` counter.
+    id: usize,
+    pipeline: Pipeline,
+    state: AtomicU8,
+    /// Pre-resolved per-replica request counter: the dispatch path must
+    /// not pay a format!/registry-lock per request.
+    requests: Arc<crate::metrics::Counter>,
+    /// When the replica was provisioned (rental clock origin).
+    started: Instant,
+    /// When warm-up completes (== `started` for instant replicas).
+    warm_at: Instant,
+}
+
+impl ReplicaSlot {
+    fn state(&self) -> ReplicaState {
+        ReplicaState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    fn transition(&self, from: ReplicaState, to: ReplicaState) -> bool {
+        self.state
+            .compare_exchange(from as u8, to as u8, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+}
+
+/// Diagnostic snapshot of one replica (tests, `stats`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaInfo {
+    pub id: usize,
+    pub state: ReplicaState,
+    pub outstanding: usize,
+    pub requests: u64,
+}
+
+/// Lifecycle transitions applied by one [`ReplicaPool::advance`] call.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Lifecycle {
+    /// Warming replicas promoted to Live.
+    pub warmed: usize,
+    /// Draining replicas retired (batcher joined, slot removed).
+    pub retired: usize,
+}
+
+/// An elastic pool of pipeline replicas behind a least-outstanding
+/// dispatcher.
 pub struct ReplicaPool {
-    replicas: Vec<Pipeline>,
-    /// Pre-resolved `replica_{i}_requests` counters: the dispatch path
-    /// must not pay a format!/registry-lock per request.
-    replica_counters: Vec<Arc<crate::metrics::Counter>>,
+    classifier: Arc<dyn BatchClassifier>,
+    /// Batcher template for new replicas; `max_batch` is shadowed by
+    /// `cur_max_batch` so replicas spawned after a gear shift inherit
+    /// the *current* cap, not the spawn-time one.
+    batcher: BatcherConfig,
+    cur_max_batch: AtomicUsize,
+    slots: RwLock<Vec<Arc<ReplicaSlot>>>,
+    next_id: AtomicUsize,
     max_queue: usize,
     shed_counter: Arc<crate::metrics::Counter>,
+    retired_counter: Arc<crate::metrics::Counter>,
+    /// Accumulated replica-seconds of retired replicas; active replicas
+    /// contribute `started.elapsed()` on top (see `replica_seconds`).
+    retired_seconds: Mutex<f64>,
     metrics: Arc<Metrics>,
     /// Shared gear handle when the pool serves under a gear plan
     /// (`spawn_geared`); the controller swaps it, pipelines read it.
@@ -114,32 +233,209 @@ impl ReplicaPool {
     ) -> ReplicaPool {
         assert!(cfg.replicas > 0, "pool needs at least one replica");
         assert!(cfg.max_queue > 0, "max_queue must be > 0");
-        let replicas: Vec<Pipeline> = (0..cfg.replicas)
-            .map(|_| {
-                Pipeline::spawn_with_gear(
-                    Arc::clone(&classifier),
-                    cfg.batcher,
-                    Arc::clone(&metrics),
-                    gear.clone(),
-                )
-            })
-            .collect();
-        let replica_counters = (0..cfg.replicas)
-            .map(|i| metrics.counter(&format!("replica_{i}_requests")))
-            .collect();
-        let shed_counter = metrics.counter("requests_shed");
-        ReplicaPool {
-            replicas,
-            replica_counters,
+        let pool = ReplicaPool {
+            classifier,
+            batcher: cfg.batcher,
+            cur_max_batch: AtomicUsize::new(cfg.batcher.max_batch),
+            slots: RwLock::new(Vec::new()),
+            next_id: AtomicUsize::new(0),
             max_queue: cfg.max_queue,
-            shed_counter,
+            shed_counter: metrics.counter("requests_shed"),
+            retired_counter: metrics.counter("replicas_retired"),
+            retired_seconds: Mutex::new(0.0),
             metrics,
             gear,
-        }
+        };
+        pool.scale_up(cfg.replicas, Duration::ZERO);
+        pool
     }
 
+    fn spawn_slot(&self, warmup: Duration) -> Arc<ReplicaSlot> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let pipeline = Pipeline::spawn_with_gear(
+            Arc::clone(&self.classifier),
+            BatcherConfig {
+                max_batch: self.cur_max_batch.load(Ordering::Relaxed),
+                max_wait: self.batcher.max_wait,
+            },
+            Arc::clone(&self.metrics),
+            self.gear.clone(),
+        );
+        let state = if warmup.is_zero() {
+            ReplicaState::Live
+        } else {
+            ReplicaState::Warming
+        };
+        let now = Instant::now();
+        Arc::new(ReplicaSlot {
+            id,
+            pipeline,
+            state: AtomicU8::new(state as u8),
+            requests: self.metrics.counter(&format!("replica_{id}_requests")),
+            started: now,
+            warm_at: now + warmup,
+        })
+    }
+
+    /// Provision `n` new replicas.  With a zero `warmup` they are Live
+    /// immediately; otherwise they start Warming and [`advance`]
+    /// promotes them once the warm-up elapses.  Returns the new ids.
+    /// The rental clock starts now either way.
+    ///
+    /// [`advance`]: ReplicaPool::advance
+    pub fn scale_up(&self, n: usize, warmup: Duration) -> Vec<usize> {
+        let mut created = Vec::with_capacity(n);
+        let mut slots = self.slots.write().unwrap();
+        for _ in 0..n {
+            let slot = self.spawn_slot(warmup);
+            created.push(slot.id);
+            slots.push(slot);
+        }
+        created
+    }
+
+    /// Begin graceful scale-down: mark up to `n` Live replicas as
+    /// Draining, least-outstanding first (they finish soonest).  A
+    /// draining replica stops admitting -- any `submit` that starts
+    /// after this returns will never route to it -- but keeps executing
+    /// until its queue empties, at which point [`advance`] retires it.
+    /// Never drains the last Live replica.  Returns the drained ids.
+    ///
+    /// [`advance`]: ReplicaPool::advance
+    pub fn drain(&self, n: usize) -> Vec<usize> {
+        // WRITE lock: concurrent drain() calls must serialise, or two
+        // callers could each see 2 Live replicas and between them drain
+        // both -- violating the last-Live guarantee.  (scale_up and
+        // retirement also hold the write lock, so the Live set cannot
+        // shift under us.)
+        let slots = self.slots.write().unwrap();
+        let mut live: Vec<&Arc<ReplicaSlot>> = slots
+            .iter()
+            .filter(|s| s.state() == ReplicaState::Live)
+            .collect();
+        let allowed = n.min(live.len().saturating_sub(1));
+        live.sort_by_key(|s| s.pipeline.outstanding());
+        let mut drained = Vec::new();
+        for slot in live.into_iter().take(allowed) {
+            if slot.transition(ReplicaState::Live, ReplicaState::Draining) {
+                drained.push(slot.id);
+            }
+        }
+        drained
+    }
+
+    /// Advance the lifecycle: promote Warming replicas whose warm-up
+    /// has elapsed, and retire Draining replicas whose queues are
+    /// empty (close + join their batcher, remove the slot, bank their
+    /// replica-seconds).  The autoscaler calls this every sample tick;
+    /// tests call it directly.
+    pub fn advance(&self, now: Instant) -> Lifecycle {
+        let mut changes = Lifecycle::default();
+        {
+            let slots = self.slots.read().unwrap();
+            for slot in slots.iter() {
+                if slot.state() == ReplicaState::Warming
+                    && now >= slot.warm_at
+                    && slot.transition(ReplicaState::Warming, ReplicaState::Live)
+                {
+                    changes.warmed += 1;
+                }
+            }
+        }
+        // Retirement must re-check idleness under the WRITE lock: every
+        // admission probe runs under the read lock, so a probe either
+        // completed before we got here (outstanding > 0 blocks retire)
+        // or starts after and no longer sees the slot.
+        let mut retired = Vec::new();
+        {
+            let mut slots = self.slots.write().unwrap();
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].state() == ReplicaState::Draining
+                    && slots[i].pipeline.outstanding() == 0
+                {
+                    retired.push(slots.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for slot in retired {
+            // queue already empty: shutdown flushes nothing, joins the
+            // collector thread deterministically
+            slot.pipeline.shutdown();
+            *self.retired_seconds.lock().unwrap() +=
+                slot.started.elapsed().as_secs_f64();
+            self.retired_counter.inc();
+            changes.retired += 1;
+        }
+        changes
+    }
+
+    /// Replicas currently admitting traffic (Live).  This is what the
+    /// controller's admission-capacity math and the wire `overloaded`
+    /// limit use.
     pub fn n_replicas(&self) -> usize {
-        self.replicas.len()
+        self.count_state(ReplicaState::Live)
+    }
+
+    /// All slots regardless of state (Warming + Live + Draining).
+    pub fn n_slots(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    /// (warming, live, draining) slot counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let slots = self.slots.read().unwrap();
+        let mut c = (0, 0, 0);
+        for s in slots.iter() {
+            match s.state() {
+                ReplicaState::Warming => c.0 += 1,
+                ReplicaState::Live => c.1 += 1,
+                ReplicaState::Draining => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    fn count_state(&self, state: ReplicaState) -> usize {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.state() == state)
+            .count()
+    }
+
+    /// Total replica-seconds provisioned so far: retired replicas'
+    /// lifetimes plus every active slot's age.  This is the simulated
+    /// rental bill -- multiply by $/replica-hour for dollars (see
+    /// `cost::rental` for the paper's Table 4 prices).
+    pub fn replica_seconds(&self) -> f64 {
+        let active: f64 = self
+            .slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.started.elapsed().as_secs_f64())
+            .sum();
+        active + *self.retired_seconds.lock().unwrap()
+    }
+
+    /// Per-replica diagnostic snapshot (id, state, outstanding,
+    /// request count), in slot order.
+    pub fn snapshot_replicas(&self) -> Vec<ReplicaInfo> {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| ReplicaInfo {
+                id: s.id,
+                state: s.state(),
+                outstanding: s.pipeline.outstanding(),
+                requests: s.requests.get(),
+            })
+            .collect()
     }
 
     pub fn max_queue(&self) -> usize {
@@ -152,89 +448,138 @@ impl ReplicaPool {
     }
 
     /// Retune every replica's dynamic-batcher flush cap (gear shifts).
+    /// Replicas provisioned later inherit the new cap too.
     pub fn set_max_batch(&self, max_batch: usize) {
-        for p in &self.replicas {
-            p.set_max_batch(max_batch);
+        self.cur_max_batch.store(max_batch.max(1), Ordering::Relaxed);
+        for s in self.slots.read().unwrap().iter() {
+            s.pipeline.set_max_batch(max_batch);
         }
     }
 
-    /// Total outstanding requests across all replicas.
+    /// Total outstanding requests across all replicas (any state).
     pub fn total_outstanding(&self) -> usize {
-        self.replicas.iter().map(|p| p.outstanding()).sum()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.pipeline.outstanding())
+            .sum()
     }
 
     /// Per-replica outstanding counts (diagnostics / tests).
     pub fn outstanding_per_replica(&self) -> Vec<usize> {
-        self.replicas.iter().map(|p| p.outstanding()).collect()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.pipeline.outstanding())
+            .collect()
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
 
-    /// Submit to the least-loaded replica with room; sheds with
-    /// [`PoolError::Overloaded`] when every replica is at `max_queue`.
+    /// Submit to the least-loaded admitting replica; sheds with
+    /// [`PoolError::Overloaded`] when every one is at `max_queue`.
     ///
-    /// Fast path: one alloc-free argmin scan and a single `try_submit`
-    /// probe.  Only if that replica filled up between the scan and the
-    /// probe (or is genuinely full) do we fall back to probing the rest
-    /// in ascending-outstanding order -- so a stale snapshot costs extra
-    /// probes, never a false shed while any replica has room at probe
-    /// time.
+    /// Fast path: one alloc-free argmin scan over Live replicas and a
+    /// single `try_submit` probe.  Only if that replica filled up (or
+    /// retired) between the scan and the probe do we fall back to
+    /// probing the rest in ascending-outstanding order -- a stale
+    /// snapshot costs extra probes, never a false shed while any
+    /// admitting replica has room at probe time.  When *no* Live
+    /// replica admits, Warming replicas are probed as a fallback (a
+    /// cold batch beats a stall); Draining replicas are never probed.
     pub fn submit(
         &self,
         request: Request,
     ) -> Result<Receiver<Result<Verdict, String>>, PoolError> {
-        let mut least_i = 0usize;
-        let mut least = usize::MAX;
-        for (i, p) in self.replicas.iter().enumerate() {
-            let o = p.outstanding();
-            if o < least {
-                least = o;
-                least_i = i;
-            }
-        }
-        match self.try_one(least_i, &request) {
+        let slots = self.slots.read().unwrap();
+        match self.dispatch(&slots, ReplicaState::Live, &request) {
             Ok(rx) => return Ok(rx),
             Err(Some(e)) => return Err(e),
-            Err(None) => {} // full: fall through to the slow path
+            Err(None) => {}
         }
-        if self.replicas.len() > 1 {
-            let mut order: Vec<usize> =
-                (0..self.replicas.len()).filter(|&i| i != least_i).collect();
-            order.sort_by_key(|&i| self.replicas[i].outstanding());
-            for &i in &order {
-                match self.try_one(i, &request) {
-                    Ok(rx) => return Ok(rx),
-                    Err(Some(e)) => return Err(e),
-                    Err(None) => continue,
-                }
-            }
+        match self.dispatch(&slots, ReplicaState::Warming, &request) {
+            Ok(rx) => return Ok(rx),
+            Err(Some(e)) => return Err(e),
+            Err(None) => {}
         }
+        let live = slots
+            .iter()
+            .filter(|s| s.state() == ReplicaState::Live)
+            .count();
+        if slots.is_empty() {
+            return Err(PoolError::Rejected("pool has no replicas".to_string()));
+        }
+        let outstanding: usize =
+            slots.iter().map(|s| s.pipeline.outstanding()).sum();
         self.shed_counter.inc();
         Err(PoolError::Overloaded {
-            outstanding: self.total_outstanding(),
-            limit: self.replicas.len() * self.max_queue,
+            outstanding,
+            limit: live.max(1) * self.max_queue,
         })
     }
 
-    /// Probe one replica: `Ok(rx)` accepted, `Err(None)` full (try the
-    /// next), `Err(Some(e))` terminal.
-    fn try_one(
+    /// Probe every `state` replica, least-outstanding first: `Ok(rx)`
+    /// accepted, `Err(None)` all full/unavailable, `Err(Some(e))`
+    /// terminal.
+    fn dispatch(
         &self,
-        i: usize,
+        slots: &[Arc<ReplicaSlot>],
+        state: ReplicaState,
         request: &Request,
     ) -> Result<Receiver<Result<Verdict, String>>, Option<PoolError>> {
-        match self.replicas[i].try_submit(request, self.max_queue) {
+        let mut least: Option<(usize, usize)> = None; // (outstanding, index)
+        for (i, s) in slots.iter().enumerate() {
+            if s.state() != state {
+                continue;
+            }
+            let o = s.pipeline.outstanding();
+            if least.map(|(lo, _)| o < lo).unwrap_or(true) {
+                least = Some((o, i));
+            }
+        }
+        let Some((_, least_i)) = least else {
+            return Err(None); // no replica in this state
+        };
+        match self.try_slot(&slots[least_i], request) {
+            Ok(rx) => return Ok(rx),
+            Err(Some(e)) => return Err(Some(e)),
+            Err(None) => {} // full: fall through to the slow path
+        }
+        let mut order: Vec<usize> = (0..slots.len())
+            .filter(|&i| i != least_i && slots[i].state() == state)
+            .collect();
+        order.sort_by_key(|&i| slots[i].pipeline.outstanding());
+        for &i in &order {
+            match self.try_slot(&slots[i], request) {
+                Ok(rx) => return Ok(rx),
+                Err(Some(e)) => return Err(Some(e)),
+                Err(None) => continue,
+            }
+        }
+        Err(None)
+    }
+
+    /// Probe one replica: `Ok(rx)` accepted, `Err(None)` full or gone
+    /// (try the next), `Err(Some(e))` terminal.  A `Closed` pipeline is
+    /// a replica that retired between our state load and the probe --
+    /// with other replicas available that is a retry, not an error.
+    fn try_slot(
+        &self,
+        slot: &ReplicaSlot,
+        request: &Request,
+    ) -> Result<Receiver<Result<Verdict, String>>, Option<PoolError>> {
+        match slot.pipeline.try_submit(request, self.max_queue) {
             Ok(rx) => {
-                self.replica_counters[i].inc();
+                slot.requests.inc();
                 Ok(rx)
             }
             Err(SubmitRejection::Full { .. }) => Err(None),
+            Err(SubmitRejection::Closed) => Err(None),
             Err(SubmitRejection::Invalid(msg)) => Err(Some(PoolError::Rejected(msg))),
-            Err(SubmitRejection::Closed) => {
-                Err(Some(PoolError::Rejected("replica shut down".to_string())))
-            }
         }
     }
 
@@ -282,6 +627,7 @@ mod tests {
         }
         assert_eq!(pool.total_outstanding(), 0);
         assert!(pool.metrics().counter("requests_submitted").get() >= 20);
+        assert_eq!(pool.counts(), (0, 2, 0));
     }
 
     #[test]
@@ -404,5 +750,149 @@ mod tests {
                 "replica {i} got no traffic"
             );
         }
+    }
+
+    #[test]
+    fn scale_up_warms_then_goes_live() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig { replicas: 1, max_queue: 16, batcher: BatcherConfig::default() },
+            Metrics::new(),
+        );
+        assert_eq!(pool.counts(), (0, 1, 0));
+        let ids = pool.scale_up(2, Duration::from_millis(30));
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(pool.counts(), (2, 1, 0));
+        // not warm yet: advance promotes nothing
+        assert_eq!(pool.advance(Instant::now()).warmed, 0);
+        std::thread::sleep(Duration::from_millis(40));
+        let changes = pool.advance(Instant::now());
+        assert_eq!(changes.warmed, 2);
+        assert_eq!(pool.counts(), (0, 3, 0));
+        assert_eq!(pool.n_replicas(), 3);
+        assert_eq!(pool.n_slots(), 3);
+    }
+
+    #[test]
+    fn warming_replica_admits_only_as_a_last_resort() {
+        // one live replica with a tiny queue + one warming replica
+        let pool = ReplicaPool::spawn(
+            synth(20_000),
+            PoolConfig {
+                replicas: 1,
+                max_queue: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+            },
+            Metrics::new(),
+        );
+        pool.scale_up(1, Duration::from_secs(3600));
+        assert_eq!(pool.counts(), (1, 1, 0));
+        // first request lands on the live replica, second overflows to
+        // the warming one instead of shedding
+        let rx0 = pool.submit(req(0)).unwrap();
+        let rx1 = pool.submit(req(1)).unwrap();
+        let snap = pool.snapshot_replicas();
+        assert_eq!(snap[0].requests + snap[1].requests, 2);
+        assert_eq!(snap[0].requests, 1, "live replica skipped: {snap:?}");
+        rx0.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        rx1.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    }
+
+    #[test]
+    fn drain_blocks_admission_and_retires_when_idle() {
+        let pool = ReplicaPool::spawn(
+            synth(5_000), // 5ms/row: queued work takes a beat to finish
+            PoolConfig {
+                replicas: 2,
+                max_queue: 8,
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_wait: Duration::from_micros(200),
+                },
+            },
+            Metrics::new(),
+        );
+        // park some work on both replicas
+        let rxs: Vec<_> = (0..6).map(|id| pool.submit(req(id)).unwrap()).collect();
+        let drained = pool.drain(1);
+        assert_eq!(drained.len(), 1);
+        let victim = drained[0];
+        let before = pool
+            .snapshot_replicas()
+            .iter()
+            .find(|r| r.id == victim)
+            .unwrap()
+            .requests;
+        // a draining replica never admits new work: traffic keeps
+        // flowing, its counter stays frozen
+        let mut more = Vec::new();
+        for id in 6..18 {
+            if let Ok(rx) = pool.submit(req(id)) {
+                more.push(rx);
+            }
+        }
+        let after = pool
+            .snapshot_replicas()
+            .iter()
+            .find(|r| r.id == victim)
+            .unwrap()
+            .requests;
+        assert_eq!(before, after, "draining replica admitted new work");
+        let victim_alive = |pool: &ReplicaPool| {
+            pool.snapshot_replicas().iter().any(|r| r.id == victim)
+        };
+        // an early advance is harmless: it may only retire the victim
+        // once its queue is empty (write-lock re-check)
+        let _ = pool.advance(Instant::now());
+        // every admitted request -- including the victim's queue -- is
+        // still answered: drain never drops work
+        for rx in rxs.into_iter().chain(more) {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        // now idle: retires, slot disappears, rental seconds are banked
+        let _ = pool.advance(Instant::now());
+        assert!(!victim_alive(&pool), "drained replica still present");
+        assert_eq!(pool.n_slots(), 1);
+        assert_eq!(pool.counts(), (0, 1, 0));
+        assert_eq!(pool.metrics().counter("replicas_retired").get(), 1);
+        assert!(pool.replica_seconds() > 0.0);
+        // pool still serves
+        pool.infer(req(99)).unwrap();
+    }
+
+    #[test]
+    fn drain_never_takes_the_last_live_replica() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig { replicas: 2, max_queue: 8, batcher: BatcherConfig::default() },
+            Metrics::new(),
+        );
+        assert_eq!(pool.drain(5).len(), 1, "only one of two may drain");
+        assert_eq!(pool.drain(5).len(), 0, "last live replica is protected");
+        assert_eq!(pool.counts().1, 1);
+        pool.infer(req(1)).unwrap();
+    }
+
+    #[test]
+    fn replica_seconds_accumulate_across_retirement() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig { replicas: 2, max_queue: 8, batcher: BatcherConfig::default() },
+            Metrics::new(),
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        let before = pool.replica_seconds();
+        assert!(before >= 2.0 * 0.020 * 0.5, "clock barely ran: {before}");
+        pool.drain(1);
+        pool.advance(Instant::now());
+        assert_eq!(pool.n_slots(), 1);
+        std::thread::sleep(Duration::from_millis(20));
+        let after = pool.replica_seconds();
+        // monotone: the retired replica's time is banked, the survivor
+        // keeps accruing
+        assert!(after > before, "{after} <= {before}");
     }
 }

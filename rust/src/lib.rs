@@ -6,6 +6,7 @@
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod analysis;
+pub mod autoscale;
 pub mod baselines;
 pub mod benchkit;
 pub mod calib;

@@ -5,13 +5,20 @@
 //! repro calibrate   --suite S [--rule vote|score] [--epsilon E] [--n N]
 //! repro classify    --suite S [--split test] [--rule vote|score] [--epsilon E]
 //! repro plan        [--out plan.json] [--ks 1,3,5] [--epsilons 0.01,...]
+//!                   [--mid-ks 3,5] [--mid-gamma 0.2] [--mid-member-acc 0.9]
 //!                   [--batches 4,8,16,32] [--replicas 2] [--gamma 0.05]
 //!                   [--rho 0.0] [--top-acc 0.95] [--cal-n 400]
-//!                   (synthetic calibration: no artifacts needed)
+//!                   [--design-rps R] [--design-util 0.85]
+//!                   (synthetic calibration: no artifacts needed;
+//!                   --mid-ks adds three-level ladders to the grid)
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
 //!                   [--replicas 1] [--max-queue 256]
 //!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
 //!                   re-calibrated on the suite, ladder rescaled to R)
+//!                   [--autoscale --min-replicas 1 --max-replicas N
+//!                    --warmup-ms 0] (elastic replicas; requires --plan)
+//!                   [--events-file events.jsonl]
+//! repro stats       [--port 7878] [--events]  (query a running server)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
 //!                   [--replicas 1] [--max-queue 64] [--workers 128]
 //!                   (synthetic backend: no artifacts needed)
@@ -23,6 +30,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use abc_serve::autoscale::{Autoscaler, ScaleConfig};
 use abc_serve::calib;
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::Cascade;
@@ -61,6 +69,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "classify" => cmd_classify(&rest),
         "plan" => cmd_plan(&rest),
         "serve" => cmd_serve(&rest),
+        "stats" => cmd_stats(&rest),
         "loadgen" => cmd_loadgen(&rest),
         "exp" => cmd_exp(&rest),
         "selftest" => cmd_selftest(&rest),
@@ -84,6 +93,10 @@ fn print_usage() {
          \x20 serve     --suite S           line-JSON TCP serving (port 7878)\n\
          \x20                               [--replicas N] [--max-queue Q]\n\
          \x20                               [--plan plan.json] (adaptive gears)\n\
+         \x20                               [--autoscale --min-replicas A\n\
+         \x20                               --max-replicas B] (elastic replicas)\n\
+         \x20 stats     [--port P]          stats snapshot of a running server\n\
+         \x20                               [--events] (+ controller event JSONL)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
          \x20                               backend (no artifacts needed)\n\
          \x20 exp <id|all>                  regenerate paper figures/tables\n\
@@ -201,11 +214,15 @@ fn cmd_classify(args: &Args) -> Result<()> {
 
 /// Emit a Pareto-optimal gear plan over synthetic calibration data
 /// (artifact-free; see planner::search for the candidate model).
+/// `--mid-ks` adds three-level ladders (tier-1 -> interior ensemble ->
+/// top) to the candidate grid.
 fn cmd_plan(args: &Args) -> Result<()> {
     let out = args.str_or("out", "plan.json");
     let cfg = PlannerConfig {
         ks: args.usize_list_or("ks", &[1, 3, 5])?,
         epsilons: args.f64_list_or("epsilons", &[0.01, 0.03, 0.05, 0.10])?,
+        mid_ks: args.usize_list_or("mid-ks", &[])?,
+        mid_gamma: args.f64_or("mid-gamma", 0.20)?,
         batches: args.usize_list_or("batches", &[4, 8, 16, 32])?,
         replicas: args.usize_or("replicas", 2)?,
         gamma: args.f64_or("gamma", 0.05)?,
@@ -213,9 +230,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
         top_accuracy: args.f64_or("top-acc", 0.95)?,
         batch_overhead_s: args.u64_or("base-us", 200)? as f64 * 1e-6,
         top_row_s: args.u64_or("row-us", 2000)? as f64 * 1e-6,
+        design_rps: args.f64_or("design-rps", 0.0)?,
+        design_util: args.f64_or("design-util", 0.85)?,
     };
     let cal_n = args.usize_or("cal-n", 400)?;
     let member_acc = args.f64_or("member-acc", 0.80)?;
+    let mid_member_acc = args.f64_or("mid-member-acc", 0.90)?;
     let seed = args.u64_or("seed", 42)?;
     anyhow::ensure!(cfg.replicas > 0, "--replicas must be > 0");
     anyhow::ensure!(cal_n > 0, "--cal-n must be > 0");
@@ -224,22 +244,50 @@ fn cmd_plan(args: &Args) -> Result<()> {
         .iter()
         .map(|&k| (k, search::synthetic_cal_points(k, cal_n, member_acc, seed)))
         .collect();
-    let plan = search::plan(&cfg, &cal)?;
+    // interior tiers are bigger models: stronger members, distinct seed
+    let mid_cal: Vec<_> = cfg
+        .mid_ks
+        .iter()
+        .map(|&k| {
+            (k, search::synthetic_cal_points(k, cal_n, mid_member_acc, seed ^ 0x9E37))
+        })
+        .collect();
+    let plan = search::plan_with_mid(&cfg, &cal, &mid_cal)?;
+    let n_candidates = cfg.ks.len()
+        * cfg.epsilons.len()
+        * cfg.batches.len()
+        * (1 + cfg.mid_ks.len() * cfg.epsilons.len());
     let mut table = Table::new(
         format!(
             "gear plan: {} gears over {} candidates (cal-n {cal_n})",
             plan.len(),
-            cfg.ks.len() * cfg.epsilons.len() * cfg.batches.len()
+            n_candidates
         ),
-        &["gear", "k", "eps", "theta", "batch", "accuracy", "rel cost", "sustainable rps"],
+        &["gear", "ks", "eps", "thetas", "batch", "replicas", "accuracy",
+          "rel cost", "sustainable rps"],
     );
     for g in &plan.gears {
+        let ks = std::iter::once(g.k.to_string())
+            .chain(g.mid.iter().map(|t| t.k.to_string()))
+            .collect::<Vec<_>>()
+            .join("+");
+        let epss = std::iter::once(fnum(g.epsilon, 3))
+            .chain(g.mid.iter().map(|t| fnum(t.epsilon, 3)))
+            .collect::<Vec<_>>()
+            .join("/");
+        let thetas = g
+            .thetas()
+            .iter()
+            .map(|&t| fnum(t as f64, 3))
+            .collect::<Vec<_>>()
+            .join("/");
         table.row(vec![
             g.id.to_string(),
-            g.k.to_string(),
-            fnum(g.epsilon, 3),
-            fnum(g.theta as f64, 3),
+            ks,
+            epss,
+            thetas,
             g.max_batch.to_string(),
+            g.replicas.to_string(),
             fnum(g.accuracy, 4),
             fnum(g.relative_cost, 3),
             fnum(g.sustainable_rps, 0),
@@ -253,15 +301,31 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let suite = args.req_str("suite")?;
-    let port = args.u64_or("port", 7878)? as u16;
+    let port = args.u16_or("port", 7878)?;
     let rule = rule_of(args)?;
     let epsilon = args.f64_or("epsilon", 0.03)?;
     let max_batch = args.usize_or("max-batch", 32)?;
     let max_wait_ms = args.u64_or("max-wait-ms", 2)?;
     let replicas = args.usize_or("replicas", 1)?;
     let max_queue = args.usize_or("max-queue", 256)?;
+    let autoscale = args.flag("autoscale");
+    let min_replicas = args.usize_or("min-replicas", 1)?;
+    let max_replicas = args.usize_or("max-replicas", replicas.max(min_replicas))?;
+    let warmup = Duration::from_millis(args.u64_or("warmup-ms", 0)?);
     anyhow::ensure!(replicas > 0, "--replicas must be > 0");
     anyhow::ensure!(max_queue > 0, "--max-queue must be > 0");
+    if autoscale {
+        anyhow::ensure!(
+            args.get("plan").is_some(),
+            "--autoscale needs a gear plan (--plan): replica targets come \
+             from the plan's per-gear capacities"
+        );
+        anyhow::ensure!(min_replicas >= 1, "--min-replicas must be >= 1");
+        anyhow::ensure!(
+            min_replicas <= max_replicas,
+            "--min-replicas {min_replicas} > --max-replicas {max_replicas}"
+        );
+    }
     let plan = match args.get("plan") {
         Some(path) => Some(GearPlan::load(path)?),
         None => None,
@@ -274,22 +338,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy));
     // A plan's thetas were calibrated on the PLAN's data (synthetic vote
     // fractions for `repro plan`), not this suite's score scale.
-    // Re-ground every gear's theta on this cascade's tier-1 calibration
-    // points at the gear's stored epsilon, so the Appendix-B failure
+    // Re-ground every gear's thetas -- tier 1 AND any interior tiers the
+    // suite actually has -- on this cascade's per-tier calibration
+    // points at each tier's stored epsilon, so the Appendix-B failure
     // bound the threshold encodes actually holds for this deployment.
     // The gear's k/replicas stay advisory: serving uses the suite's
-    // tiers and the --replicas flag.
+    // tiers and the --replicas flags.
     let plan = match plan {
         Some(mut plan) => {
-            let points = calib::collect_points(&rt.tiers[0], rule, &val, 100)?;
+            // one calibration-point set per non-final suite tier,
+            // collected lazily (interior tiers only matter when some
+            // gear plans that deep)
+            let mut tier_points: Vec<Option<Vec<calib::threshold::CalPoint>>> =
+                vec![None; rt.tiers.len().saturating_sub(1)];
+            type CalPoints = Vec<calib::threshold::CalPoint>;
+            let mut points_for = |tier: usize| -> Result<CalPoints> {
+                if tier_points[tier].is_none() {
+                    tier_points[tier] =
+                        Some(calib::collect_points(&rt.tiers[tier], rule, &val, 100)?);
+                }
+                Ok(tier_points[tier].clone().expect("just filled"))
+            };
             for g in &mut plan.gears {
+                let points = points_for(0)?;
                 let est = calib::threshold::estimate_theta(&points, g.epsilon);
                 g.theta = est.theta;
+                for (i, m) in g.mid.iter_mut().enumerate() {
+                    let tier = i + 1;
+                    if tier + 1 >= rt.tiers.len() {
+                        break; // deeper than this suite's ladder: advisory
+                    }
+                    let points = points_for(tier)?;
+                    m.theta =
+                        calib::threshold::estimate_theta(&points, m.epsilon).theta;
+                }
             }
             println!(
-                "gear thetas re-calibrated on {suite}/val ({} points, rule {}); \
+                "gear thetas re-calibrated on {suite}/val (rule {}); \
                  plan k/replicas columns are advisory here",
-                points.len(),
                 rule.name()
             );
             // The controller's utilisation watermarks divide by
@@ -319,7 +405,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let metrics = Metrics::new();
-    let pool_cfg = |max_batch: usize| PoolConfig {
+    if let Some(path) = args.get("events-file") {
+        metrics
+            .events()
+            .set_file_sink(path)
+            .with_context(|| format!("opening --events-file {path}"))?;
+        println!("controller events mirrored to {path} (JSONL)");
+    }
+    let pool_cfg = |max_batch: usize, replicas: usize| PoolConfig {
         replicas,
         max_queue,
         batcher: BatcherConfig {
@@ -327,16 +420,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(max_wait_ms),
         },
     };
-    // keep the controller alive for the lifetime of serve(): dropping
-    // it stops the sampling thread
-    let _controller;
+    // keep the controller/autoscaler alive for the lifetime of serve():
+    // dropping them stops the sampling thread
+    let _controller: Option<Controller>;
+    let _autoscaler: Option<Autoscaler>;
     let pool = match plan {
         Some(plan) => {
             let top = plan.top();
+            // elastic pools start at the top gear's planned allocation
+            // (clamped to the fleet bounds); fixed pools at --replicas
+            let start_replicas = if autoscale {
+                top.replicas.clamp(min_replicas, max_replicas)
+            } else {
+                replicas
+            };
             let handle = GearHandle::new(top.config());
             let pool = Arc::new(ReplicaPool::spawn_geared(
                 cascade,
-                pool_cfg(top.max_batch),
+                pool_cfg(top.max_batch, start_replicas),
                 Arc::clone(&metrics),
                 Arc::clone(&handle),
             ));
@@ -346,28 +447,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 top.sustainable_rps,
                 top.accuracy
             );
-            _controller = Some(Controller::spawn(
-                Arc::clone(&pool),
-                plan,
-                handle,
-                ControllerConfig::default(),
-            ));
+            if autoscale {
+                println!(
+                    "autoscale: elastic fleet {min_replicas}..{max_replicas} \
+                     replicas (starting at {start_replicas}, warm-up {warmup:?})"
+                );
+                _controller = None;
+                _autoscaler = Some(Autoscaler::spawn(
+                    Arc::clone(&pool),
+                    plan,
+                    handle,
+                    ControllerConfig::default(),
+                    ScaleConfig {
+                        min_replicas,
+                        max_replicas,
+                        warmup,
+                        ..ScaleConfig::default()
+                    },
+                ));
+            } else {
+                _autoscaler = None;
+                _controller = Some(Controller::spawn(
+                    Arc::clone(&pool),
+                    plan,
+                    handle,
+                    ControllerConfig::default(),
+                ));
+            }
             pool
         }
         None => {
             _controller = None;
+            _autoscaler = None;
             Arc::new(ReplicaPool::spawn(
                 cascade,
-                pool_cfg(max_batch),
+                pool_cfg(max_batch, replicas),
                 Arc::clone(&metrics),
             ))
         }
     };
     println!(
         "serving {suite} on 127.0.0.1:{port} (line-JSON protocol, \
-         {replicas} replicas, max-queue {max_queue}/replica)"
+         {} replicas, max-queue {max_queue}/replica)",
+        pool.n_replicas()
     );
     abc_serve::server::serve(pool, port)
+}
+
+/// Query a running server's stats snapshot; with `--events`, also dump
+/// the controller event log as JSONL (gear shifts + scale actions).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let port = args.u16_or("port", 7878)?;
+    let mut client = abc_serve::server::Client::connect(port)
+        .with_context(|| format!("connecting to 127.0.0.1:{port}"))?;
+    let v = client.stats()?;
+    println!("{}", v.get("stats").to_pretty());
+    if args.flag("events") {
+        let reply = client.events()?;
+        for e in reply.get("events").as_arr().unwrap_or(&[]) {
+            println!("{e}");
+        }
+        let dropped = reply.get("dropped").as_u64().unwrap_or(0);
+        if dropped > 0 {
+            eprintln!("({dropped} older events evicted from the ring)");
+        }
+    }
+    Ok(())
 }
 
 /// Open-loop load generation against a synthetic replica pool -- the

@@ -1,0 +1,271 @@
+//! Controller/autoscaler event log: a timestamped, bounded ring of gear
+//! shifts and replica scale actions for post-hoc analysis.
+//!
+//! Gauges answer "what is the system doing *now*"; the event log
+//! answers "what did the controller decide, when, and why".  Every
+//! entry records the decision's before/after (gear id, replica count)
+//! and the trigger that forced it (`rate` | `pressure` | `slo`).  The
+//! log renders as JSONL (one JSON object per line) for the wire
+//! `{"cmd":"events"}` command and `repro stats --events`, and can
+//! optionally mirror every record into an append-only JSONL file
+//! (`serve --events-file`).
+//!
+//! The ring is bounded ([`EVENT_CAPACITY`]) so a long-running server
+//! cannot grow without bound; `dropped` counts evictions so readers
+//! know the log is a suffix, not the full history.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{Json, JsonObj};
+
+/// Max retained events; older entries are evicted (and counted).
+pub const EVENT_CAPACITY: usize = 4096;
+
+/// What a controller decision changed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Gear shift (ladder walk): `old_gear != new_gear`.
+    Shift,
+    /// Replica scale action: `old_replicas != new_replicas`.
+    Scale,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Shift => "shift",
+            EventKind::Scale => "scale",
+        }
+    }
+}
+
+/// One recorded controller decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Monotone per-log sequence number (survives ring eviction).
+    pub seq: u64,
+    /// Wall-clock seconds since the UNIX epoch at record time.
+    pub ts_s: f64,
+    pub kind: EventKind,
+    /// What forced the decision: "rate" | "pressure" | "slo".
+    pub trigger: &'static str,
+    pub old_gear: usize,
+    pub new_gear: usize,
+    pub old_replicas: usize,
+    pub new_replicas: usize,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("seq", Json::num(self.seq as f64));
+        o.insert("ts_s", Json::num(self.ts_s));
+        o.insert("kind", Json::str(self.kind.name()));
+        o.insert("trigger", Json::str(self.trigger));
+        o.insert("old_gear", Json::num(self.old_gear as f64));
+        o.insert("new_gear", Json::num(self.new_gear as f64));
+        o.insert("old_replicas", Json::num(self.old_replicas as f64));
+        o.insert("new_replicas", Json::num(self.new_replicas as f64));
+        Json::Obj(o)
+    }
+}
+
+struct LogState {
+    ring: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+    sink: Option<std::fs::File>,
+}
+
+/// Bounded, thread-safe event ring + optional JSONL file sink.  One
+/// lives in every [`crate::metrics::Metrics`] registry, so the pool,
+/// the controller and the serving front end all share it without extra
+/// plumbing.
+pub struct EventLog {
+    state: Mutex<LogState>,
+}
+
+impl std::fmt::Debug for EventLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.state.lock().unwrap();
+        write!(f, "EventLog(len={}, dropped={})", s.ring.len(), s.dropped)
+    }
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog {
+            state: Mutex::new(LogState {
+                ring: VecDeque::new(),
+                next_seq: 0,
+                dropped: 0,
+                sink: None,
+            }),
+        }
+    }
+}
+
+impl EventLog {
+    /// Record one decision; stamps `seq` + wall-clock time.  Appends
+    /// the JSONL line to the file sink when one is set (best effort:
+    /// sink IO errors never fail the control loop).
+    pub fn record(
+        &self,
+        kind: EventKind,
+        trigger: &'static str,
+        old_gear: usize,
+        new_gear: usize,
+        old_replicas: usize,
+        new_replicas: usize,
+    ) {
+        let ts_s = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let mut s = self.state.lock().unwrap();
+        let event = Event {
+            seq: s.next_seq,
+            ts_s,
+            kind,
+            trigger,
+            old_gear,
+            new_gear,
+            old_replicas,
+            new_replicas,
+        };
+        s.next_seq += 1;
+        if let Some(f) = s.sink.as_mut() {
+            let _ = writeln!(f, "{}", event.to_json());
+        }
+        if s.ring.len() >= EVENT_CAPACITY {
+            s.ring.pop_front();
+            s.dropped += 1;
+        }
+        s.ring.push_back(event);
+    }
+
+    /// Mirror every future record into `path` as append-only JSONL.
+    pub fn set_file_sink(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        self.state.lock().unwrap().sink = Some(f);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted from the ring (history truncated this many).
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Copy of the retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.state.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// The retained events as a JSON array (wire `events` reply body).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(|e| e.to_json()).collect())
+    }
+
+    /// The retained events as JSONL text (one object per line).
+    pub fn to_jsonl(&self) -> String {
+        self.snapshot()
+            .iter()
+            .map(|e| e.to_json().to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_stamps_sequence_and_fields() {
+        let log = EventLog::default();
+        assert!(log.is_empty());
+        log.record(EventKind::Shift, "rate", 0, 1, 2, 2);
+        log.record(EventKind::Scale, "pressure", 1, 1, 2, 4);
+        let events = log.snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].seq, 0);
+        assert_eq!(events[1].seq, 1);
+        assert_eq!(events[0].kind, EventKind::Shift);
+        assert_eq!(events[0].trigger, "rate");
+        assert_eq!(events[0].new_gear, 1);
+        assert_eq!(events[1].kind, EventKind::Scale);
+        assert_eq!(events[1].old_replicas, 2);
+        assert_eq!(events[1].new_replicas, 4);
+        assert!(events[0].ts_s > 0.0);
+        assert!(events[1].ts_s >= events[0].ts_s);
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn json_and_jsonl_shapes() {
+        let log = EventLog::default();
+        log.record(EventKind::Shift, "slo", 2, 3, 1, 1);
+        let arr = log.to_json();
+        let first = &arr.as_arr().unwrap()[0];
+        assert_eq!(first.get("kind").as_str(), Some("shift"));
+        assert_eq!(first.get("trigger").as_str(), Some("slo"));
+        assert_eq!(first.get("old_gear").as_u64(), Some(2));
+        assert_eq!(first.get("new_gear").as_u64(), Some(3));
+        // JSONL: one parseable object per line
+        log.record(EventKind::Scale, "rate", 3, 3, 1, 2);
+        let lines: Vec<&str> = log.to_jsonl().lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("seq").as_u64().is_some());
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let log = EventLog::default();
+        for i in 0..(EVENT_CAPACITY + 10) {
+            log.record(EventKind::Scale, "rate", 0, 0, i, i + 1);
+        }
+        assert_eq!(log.len(), EVENT_CAPACITY);
+        assert_eq!(log.dropped(), 10);
+        let events = log.snapshot();
+        // suffix survives: oldest retained is seq 10
+        assert_eq!(events[0].seq, 10);
+        assert_eq!(events.last().unwrap().seq, (EVENT_CAPACITY + 10 - 1) as u64);
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let dir = std::env::temp_dir().join(format!("abc-ev-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let log = EventLog::default();
+        log.set_file_sink(&path).unwrap();
+        log.record(EventKind::Shift, "rate", 0, 1, 1, 1);
+        log.record(EventKind::Scale, "rate", 1, 1, 1, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().get("new_replicas").as_u64(),
+            Some(3)
+        );
+    }
+}

@@ -1,9 +1,13 @@
-//! Serving metrics: named counters, point-in-time gauges and
-//! log-bucketed histograms.
+//! Serving metrics: named counters, point-in-time gauges, log-bucketed
+//! histograms, and the controller event log (`events`).
+
+pub mod events;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+pub use events::{Event, EventKind, EventLog};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -168,12 +172,14 @@ impl Histogram {
     }
 }
 
-/// A registry of named counters, gauges and histograms.
+/// A registry of named counters, gauges and histograms, plus the
+/// shared controller [`EventLog`].
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    events: EventLog,
 }
 
 impl Metrics {
@@ -194,6 +200,13 @@ impl Metrics {
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut g = self.histograms.lock().unwrap();
         Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// The registry's controller event log (gear shifts + scale
+    /// actions).  Writers: controller/autoscaler threads; readers: the
+    /// wire `{"cmd":"events"}` command and `repro stats --events`.
+    pub fn events(&self) -> &EventLog {
+        &self.events
     }
 
     /// Snapshot all metrics as display lines (name, value description).

@@ -22,9 +22,21 @@
 //! replica's batcher cap -- both only affect batches formed later, so a
 //! shift never drops or duplicates in-flight requests.
 //!
+//! The sampling half is factored into [`Sampler`] so the elastic
+//! autoscaler (`autoscale`) can reuse it: its loop makes gear and
+//! replica-count decisions from the *same* observation in the same
+//! tick, sharing this state machine's dwell clock
+//! ([`ControlState::dwell_ok`] / [`ControlState::note_action`]).
+//! [`ControlState::step_fleet`] is the fleet-aware variant: the
+//! downshift watermark is evaluated against what the *maximum* fleet
+//! could sustain, so the coupled controller prefers renting replicas
+//! over trading accuracy and only downshifts when even the full fleet
+//! cannot carry the load.
+//!
 //! Telemetry (shared registry): `gear_shift_up` / `gear_shift_down`
 //! counters; `gear_current`, `arrival_ewma_rps`, `latency_p99_s`
-//! gauges.
+//! gauges; and a [`crate::metrics::EventLog`] entry per shift
+//! (timestamped, with the trigger that forced it).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -32,6 +44,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::replica::ReplicaPool;
+use crate::metrics::{EventKind, Metrics};
 use crate::planner::gear::{GearHandle, GearPlan};
 
 /// Watermarks + pacing for the online controller.
@@ -93,6 +106,27 @@ pub enum Shift {
     Down,
 }
 
+/// What forced a controller decision (event-log attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Arrival-rate EWMA crossed a utilisation watermark.
+    Rate,
+    /// Outstanding work crossed the queue-pressure watermark.
+    Pressure,
+    /// The windowed p99 breached the SLO.
+    Slo,
+}
+
+impl Trigger {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Trigger::Rate => "rate",
+            Trigger::Pressure => "pressure",
+            Trigger::Slo => "slo",
+        }
+    }
+}
+
 /// The controller's pure decision state.
 #[derive(Debug, Clone)]
 pub struct ControlState {
@@ -121,6 +155,19 @@ impl ControlState {
         self.ewma_rps
     }
 
+    /// Whether the shared dwell clock permits another action.  The
+    /// autoscaler consults this before a scale action so gear shifts
+    /// and scale decisions share one hysteresis clock.
+    pub fn dwell_ok(&self, cfg: &ControllerConfig) -> bool {
+        self.since_shift_s >= cfg.dwell.as_secs_f64()
+    }
+
+    /// Reset the shared dwell clock (a scale action counts like a
+    /// shift: both are capacity decisions and must not thrash).
+    pub fn note_action(&mut self) {
+        self.since_shift_s = 0.0;
+    }
+
     /// Fold in one observation over `dt_s` seconds; returns the shift to
     /// apply, if any.  Pure: no clocks, no metrics, no locks.
     pub fn step(
@@ -130,14 +177,38 @@ impl ControlState {
         obs: Observation,
         dt_s: f64,
     ) -> Option<Shift> {
+        self.step_fleet(plan, cfg, obs, dt_s, None).map(|(s, _)| s)
+    }
+
+    /// [`ControlState::step`] with fleet-aware capacity and trigger
+    /// attribution.  With `fleet = Some(n)` every gear's capacity is
+    /// evaluated at `n` replicas (`per_replica_rps * n`) instead of its
+    /// planned allocation -- the autoscaler passes its `max_replicas`
+    /// so rate-driven downshifts fire only when even the full fleet
+    /// cannot sustain the load (renting machines is tried first; see
+    /// `autoscale`).
+    pub fn step_fleet(
+        &mut self,
+        plan: &GearPlan,
+        cfg: &ControllerConfig,
+        obs: Observation,
+        dt_s: f64,
+        fleet: Option<usize>,
+    ) -> Option<(Shift, Trigger)> {
         self.ewma_rps = cfg.ewma_alpha * obs.arrival_rps
             + (1.0 - cfg.ewma_alpha) * self.ewma_rps;
         self.since_shift_s += dt_s.max(0.0);
         if self.since_shift_s < cfg.dwell.as_secs_f64() {
             return None;
         }
-        let gear = &plan.gears[self.current];
-        let util = self.ewma_rps / gear.sustainable_rps.max(1e-9);
+        let capacity = |idx: usize| {
+            let g = &plan.gears[idx];
+            match fleet {
+                Some(n) => g.per_replica_rps() * n as f64,
+                None => g.sustainable_rps,
+            }
+        };
+        let util = self.ewma_rps / capacity(self.current).max(1e-9);
         let slo_breached = cfg.p99_slo_s > 0.0 && obs.p99_s > cfg.p99_slo_s;
         if (util > cfg.down_util
             || obs.outstanding_frac > cfg.queue_pressure
@@ -147,26 +218,99 @@ impl ControlState {
             // rate-driven overload jumps straight to the most accurate
             // gear that sustains the EWMA at the downshift watermark
             // (one dwell per rung would crawl through a deep burst);
-            // pressure/SLO-driven shifts without rate evidence step one
-            self.current = plan
-                .gear_for_load(self.ewma_rps, cfg.down_util)
-                .clamp(self.current + 1, plan.len() - 1);
+            // pressure/SLO-driven shifts without rate evidence step one.
+            // The rung is chosen at the SAME capacity basis as the
+            // trigger (fleet-scaled when `fleet` is set): judging the
+            // jump by the plan's smaller per-allocation quotes would
+            // overshoot to the bottom of the ladder when one rung down
+            // at the full fleet already sustains the load.
+            let target = (0..plan.len())
+                .find(|&i| self.ewma_rps <= capacity(i) * cfg.down_util)
+                .unwrap_or(plan.len() - 1);
+            self.current = target.clamp(self.current + 1, plan.len() - 1);
             self.since_shift_s = 0.0;
-            return Some(Shift::Down);
+            let trigger = if util > cfg.down_util {
+                Trigger::Rate
+            } else if slo_breached {
+                Trigger::Slo
+            } else {
+                Trigger::Pressure
+            };
+            return Some((Shift::Down, trigger));
         }
         if self.current > 0 {
-            let above = &plan.gears[self.current - 1];
-            let projected = self.ewma_rps / above.sustainable_rps.max(1e-9);
+            let projected = self.ewma_rps / capacity(self.current - 1).max(1e-9);
             if projected < cfg.up_util
                 && obs.outstanding_frac < cfg.queue_pressure / 2.0
                 && !slo_breached
             {
                 self.current -= 1;
                 self.since_shift_s = 0.0;
-                return Some(Shift::Up);
+                return Some((Shift::Up, Trigger::Rate));
             }
         }
         None
+    }
+}
+
+/// Pool metrics sampler shared by the gear controller thread and the
+/// autoscaler loop: counter/bucket deltas in, one [`Observation`] +
+/// elapsed seconds out per call.  Resolves every metric handle once so
+/// the sample path never pays a registry lock.
+pub struct Sampler {
+    submitted: Arc<crate::metrics::Counter>,
+    shed: Arc<crate::metrics::Counter>,
+    latency: Arc<crate::metrics::Histogram>,
+    last_arrivals: u64,
+    last_buckets: Vec<u64>,
+    last_tick: Instant,
+}
+
+impl Sampler {
+    pub fn new(metrics: &Metrics) -> Sampler {
+        let submitted = metrics.counter("requests_submitted");
+        let shed = metrics.counter("requests_shed");
+        let latency = metrics.histogram("request_latency_s");
+        Sampler {
+            last_arrivals: submitted.get() + shed.get(),
+            last_buckets: latency.bucket_snapshot(),
+            last_tick: Instant::now(),
+            submitted,
+            shed,
+            latency,
+        }
+    }
+
+    /// Take one sample: offered arrival rate since the last call, the
+    /// pool's outstanding fraction of provisioned queue capacity, and
+    /// the WINDOWED p99 (this interval's samples only -- the all-time
+    /// quantile would latch one past overload into a permanent SLO
+    /// breach and pin the pool at the fastest gear forever).
+    pub fn sample(&mut self, pool: &ReplicaPool) -> (Observation, f64) {
+        let now = Instant::now();
+        let dt_s = now.duration_since(self.last_tick).as_secs_f64().max(1e-9);
+        self.last_tick = now;
+        let arrivals = self.submitted.get() + self.shed.get();
+        let buckets = self.latency.bucket_snapshot();
+        let p99_s = crate::metrics::Histogram::quantile_between(
+            &self.last_buckets,
+            &buckets,
+            0.99,
+        );
+        self.last_buckets = buckets;
+        // capacity tracks the current fleet: elastic pools change it
+        // between samples.  ALL slots count -- total_outstanding()
+        // includes work still queued on Draining (and Warming) replicas,
+        // so a live-only denominator would read >1.0 right after a
+        // drain and flap the pressure trigger.
+        let capacity = (pool.n_slots() * pool.max_queue()).max(1) as f64;
+        let obs = Observation {
+            arrival_rps: arrivals.saturating_sub(self.last_arrivals) as f64 / dt_s,
+            outstanding_frac: pool.total_outstanding() as f64 / capacity,
+            p99_s,
+        };
+        self.last_arrivals = arrivals;
+        (obs, dt_s)
     }
 }
 
@@ -227,52 +371,28 @@ fn control_loop(
     cfg: ControllerConfig,
     stop: &AtomicBool,
 ) {
-    let metrics = pool.metrics();
+    let metrics = Arc::clone(pool.metrics());
     // resolve everything once: the sample loop must not pay registry
     // locks per tick
-    let submitted = metrics.counter("requests_submitted");
-    let shed = metrics.counter("requests_shed");
-    let latency = metrics.histogram("request_latency_s");
     let shifts_up = metrics.counter("gear_shift_up");
     let shifts_down = metrics.counter("gear_shift_down");
     let gear_gauge = metrics.gauge("gear_current");
     let ewma_gauge = metrics.gauge("arrival_ewma_rps");
     let p99_gauge = metrics.gauge("latency_p99_s");
 
-    let capacity = (pool.n_replicas() * pool.max_queue()).max(1) as f64;
     let mut state = ControlState::new(handle.gear_id(), &cfg);
     gear_gauge.set(state.current() as f64);
-    let mut last_arrivals = submitted.get() + shed.get();
-    let mut last_buckets = latency.bucket_snapshot();
-    let mut last_tick = Instant::now();
+    let mut sampler = Sampler::new(&metrics);
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(cfg.sample_every);
-        let now = Instant::now();
-        let dt_s = now.duration_since(last_tick).as_secs_f64().max(1e-9);
-        last_tick = now;
-        let arrivals = submitted.get() + shed.get();
-        // WINDOWED p99 (this interval's samples only): the all-time
-        // quantile would latch one past overload into a permanent SLO
-        // breach and pin the pool at the fastest gear forever
-        let buckets = latency.bucket_snapshot();
-        let p99_s = crate::metrics::Histogram::quantile_between(
-            &last_buckets,
-            &buckets,
-            0.99,
-        );
-        last_buckets = buckets;
-        let obs = Observation {
-            arrival_rps: arrivals.saturating_sub(last_arrivals) as f64 / dt_s,
-            outstanding_frac: pool.total_outstanding() as f64 / capacity,
-            p99_s,
-        };
-        last_arrivals = arrivals;
-        let shift = state.step(plan, &cfg, obs, dt_s);
+        let (obs, dt_s) = sampler.sample(pool);
+        let old_gear = state.current();
+        let shift = state.step_fleet(plan, &cfg, obs, dt_s, None);
         ewma_gauge.set(state.ewma_rps());
         if obs.p99_s.is_finite() {
             p99_gauge.set(obs.p99_s);
         }
-        if let Some(shift) = shift {
+        if let Some((shift, trigger)) = shift {
             let gear = &plan.gears[state.current()];
             handle.store(gear.config());
             pool.set_max_batch(gear.max_batch);
@@ -281,6 +401,15 @@ fn control_loop(
                 Shift::Up => shifts_up.inc(),
                 Shift::Down => shifts_down.inc(),
             }
+            let replicas = pool.n_replicas();
+            metrics.events().record(
+                EventKind::Shift,
+                trigger.name(),
+                old_gear,
+                gear.id,
+                replicas,
+                replicas,
+            );
         }
     }
 }
@@ -296,6 +425,7 @@ mod tests {
             k: 3,
             epsilon: 0.03,
             theta: 0.6,
+            mid: vec![],
             max_batch: 8,
             replicas: 1,
             accuracy: acc,
@@ -439,5 +569,69 @@ mod tests {
             s.step(&plan, &cfg, obs(100.0), 0.2);
         }
         assert_eq!(s.current(), 0, "spike left the controller downshifted");
+    }
+
+    #[test]
+    fn fleet_capacity_suppresses_downshift_until_the_max_fleet_drowns() {
+        // plan quotes 1-replica capacities; a 4-replica max fleet
+        // quadruples what each gear can carry
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        // 1500 rps would downshift at planned capacity (1000), but the
+        // max fleet sustains 4000: rent replicas instead of shifting
+        assert_eq!(s.step_fleet(&plan, &cfg, obs(1500.0), 0.2, Some(4)), None);
+        assert_eq!(s.current(), 0);
+        // 5000 rps drowns even 4x gear 0 (3400 effective): shift, with
+        // rate attribution
+        let got = s.step_fleet(&plan, &cfg, obs(5000.0), 0.2, Some(4));
+        assert_eq!(got, Some((Shift::Down, Trigger::Rate)));
+        // upshift projection is fleet-aware too: back at 1500 rps the
+        // 4-replica gear 0 runs at 0.375 < up_util -> up
+        let got = s.step_fleet(&plan, &cfg, obs(1500.0), 0.2, Some(4));
+        assert_eq!(got, Some((Shift::Up, Trigger::Rate)));
+    }
+
+    #[test]
+    fn triggers_attribute_the_cause() {
+        let plan = plan3();
+        let base = cfg();
+        let cfg = ControllerConfig { p99_slo_s: 0.050, ..base };
+        // pure pressure (rate calm, p99 fine)
+        let mut s = ControlState::new(0, &cfg);
+        let pressured =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, pressured, 0.2, None),
+            Some((Shift::Down, Trigger::Pressure))
+        );
+        // pure SLO breach
+        let mut s = ControlState::new(0, &cfg);
+        let slow =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.0, p99_s: 0.2 };
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, slow, 0.2, None),
+            Some((Shift::Down, Trigger::Slo))
+        );
+        // rate wins attribution when it is the cause
+        let mut s = ControlState::new(0, &cfg);
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, obs(5000.0), 0.2, None),
+            Some((Shift::Down, Trigger::Rate))
+        );
+    }
+
+    #[test]
+    fn shared_dwell_clock_blocks_and_resets() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        assert!(s.dwell_ok(&cfg), "dwell starts satisfied");
+        // a scale action consumes the dwell...
+        s.note_action();
+        assert!(!s.dwell_ok(&cfg));
+        // ...and blocks gear shifts until it expires
+        assert_eq!(s.step(&plan, &cfg, obs(5000.0), 0.02), None);
+        assert_eq!(s.step(&plan, &cfg, obs(5000.0), 0.2), Some(Shift::Down));
     }
 }

@@ -25,6 +25,19 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{Json, JsonObj};
 
+/// One interior (non-final, non-tier-1) rung of a deeper ladder: the
+/// planner's choice of ensemble size + calibrated threshold for that
+/// tier.  Two-level gears have no interior tiers (`Gear::mid` empty).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierPlan {
+    /// Ensemble size at this tier.
+    pub k: usize,
+    /// Error budget the threshold was calibrated at.
+    pub epsilon: f64,
+    /// Calibrated agreement threshold (defer when score <= theta).
+    pub theta: f32,
+}
+
 /// One cascade operating point, planned offline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Gear {
@@ -32,13 +45,19 @@ pub struct Gear {
     pub id: usize,
     /// Tier-1 ensemble size.
     pub k: usize,
-    /// Error budget the threshold was calibrated at (Appendix B epsilon).
+    /// Error budget the tier-1 threshold was calibrated at (Appendix B
+    /// epsilon).
     pub epsilon: f64,
     /// Calibrated tier-1 agreement threshold (defer when score <= theta).
     pub theta: f32,
+    /// Interior tiers between tier 1 and the top model (empty for
+    /// two-level cascades); index 0 = tier 2.
+    pub mid: Vec<TierPlan>,
     /// Dynamic-batcher flush cap while this gear is active.
     pub max_batch: usize,
-    /// Replica allocation the throughput estimate assumes.
+    /// Planned replica allocation for this gear at the plan's design
+    /// load -- what the autoscaler's rental accounting prices and the
+    /// denominator of [`Gear::per_replica_rps`].
     pub replicas: usize,
     /// Expected end-to-end accuracy at this operating point.
     pub accuracy: f64,
@@ -50,11 +69,35 @@ pub struct Gear {
 }
 
 impl Gear {
+    /// Number of cascade levels this gear configures (tier 1 + interior
+    /// tiers + the top model).
+    pub fn n_levels(&self) -> usize {
+        2 + self.mid.len()
+    }
+
+    /// Per-non-final-tier thresholds, tier 1 first.
+    pub fn thetas(&self) -> Vec<f32> {
+        std::iter::once(self.theta)
+            .chain(self.mid.iter().map(|t| t.theta))
+            .collect()
+    }
+
+    /// Requests/s one replica sustains under this gear.
+    pub fn per_replica_rps(&self) -> f64 {
+        self.sustainable_rps / self.replicas.max(1) as f64
+    }
+
+    /// Replica-seconds consumed per request (the rental price of one
+    /// request in machine time; `1 / per_replica_rps`).
+    pub fn replica_s_per_req(&self) -> f64 {
+        self.replicas.max(1) as f64 / self.sustainable_rps.max(1e-12)
+    }
+
     /// The runtime view the serving pipeline reads per batch.
     pub fn config(&self) -> GearConfig {
         GearConfig {
             gear_id: self.id,
-            thetas: vec![self.theta],
+            thetas: self.thetas(),
             work_factor: self.relative_cost,
             max_batch: self.max_batch,
         }
@@ -66,6 +109,23 @@ impl Gear {
         o.insert("k", Json::num(self.k as f64));
         o.insert("epsilon", Json::num(self.epsilon));
         o.insert("theta", Json::num(self.theta as f64));
+        if !self.mid.is_empty() {
+            o.insert(
+                "mid",
+                Json::Arr(
+                    self.mid
+                        .iter()
+                        .map(|t| {
+                            let mut m = JsonObj::new();
+                            m.insert("k", Json::num(t.k as f64));
+                            m.insert("epsilon", Json::num(t.epsilon));
+                            m.insert("theta", Json::num(t.theta as f64));
+                            Json::Obj(m)
+                        })
+                        .collect(),
+                ),
+            );
+        }
         o.insert("max_batch", Json::num(self.max_batch as f64));
         o.insert("replicas", Json::num(self.replicas as f64));
         o.insert("accuracy", Json::num(self.accuracy));
@@ -75,11 +135,27 @@ impl Gear {
     }
 
     fn from_json(v: &Json) -> Result<Gear> {
+        // `mid` is optional: plans written before multi-tier ladders
+        // (and two-level gears today) simply omit it
+        let mid = match v.get("mid").as_arr() {
+            None => Vec::new(),
+            Some(arr) => arr
+                .iter()
+                .map(|t| {
+                    Ok(TierPlan {
+                        k: t.req_usize("k").context("gear.mid.k")?,
+                        epsilon: t.req_f64("epsilon").context("gear.mid.epsilon")?,
+                        theta: t.req_f64("theta").context("gear.mid.theta")? as f32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(Gear {
             id: v.req_usize("id").context("gear.id")?,
             k: v.req_usize("k").context("gear.k")?,
             epsilon: v.req_f64("epsilon").context("gear.epsilon")?,
             theta: v.req_f64("theta").context("gear.theta")? as f32,
+            mid,
             max_batch: v.req_usize("max_batch").context("gear.max_batch")?,
             replicas: v.req_usize("replicas").context("gear.replicas")?,
             accuracy: v.req_f64("accuracy").context("gear.accuracy")?,
@@ -271,6 +347,7 @@ mod tests {
             k: 3,
             epsilon: 0.03,
             theta: 0.6,
+            mid: vec![],
             max_batch: 8,
             replicas: 2,
             accuracy: acc,
@@ -332,6 +409,34 @@ mod tests {
         let text = v.to_pretty();
         let back2 = GearPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back2, plan);
+    }
+
+    #[test]
+    fn multi_tier_gear_roundtrips_and_configures_all_thetas() {
+        let mut g = gear(0, 0.93, 800.0);
+        g.mid = vec![TierPlan { k: 5, epsilon: 0.05, theta: 0.72 }];
+        assert_eq!(g.n_levels(), 3);
+        assert_eq!(g.thetas(), vec![0.6, 0.72]);
+        // the runtime config carries every non-final tier's theta
+        let cfg = g.config();
+        assert_eq!(cfg.thetas, vec![0.6, 0.72]);
+        // JSON roundtrip preserves the interior tier
+        let plan = GearPlan::new(vec![g.clone(), gear(1, 0.80, 3000.0)]).unwrap();
+        let back = GearPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.top().mid.len(), 1);
+        assert_eq!(back.top().mid[0].k, 5);
+        // a two-level gear omits "mid" entirely and still loads
+        let two = gear(0, 0.9, 500.0).to_json();
+        assert!(two.get("mid").as_arr().is_none());
+        assert!(Gear::from_json(&two).unwrap().mid.is_empty());
+    }
+
+    #[test]
+    fn per_replica_capacity_helpers() {
+        let g = gear(0, 0.9, 1000.0); // 2 replicas -> 500 rps each
+        assert!((g.per_replica_rps() - 500.0).abs() < 1e-9);
+        assert!((g.replica_s_per_req() - 0.002).abs() < 1e-12);
     }
 
     #[test]

@@ -27,6 +27,6 @@ pub mod controller;
 pub mod gear;
 pub mod search;
 
-pub use controller::{Controller, ControllerConfig};
-pub use gear::{Gear, GearConfig, GearHandle, GearPlan};
+pub use controller::{Controller, ControllerConfig, Observation, Sampler, Shift, Trigger};
+pub use gear::{Gear, GearConfig, GearHandle, GearPlan, TierPlan};
 pub use search::{synthetic_cal_points, PlannerConfig};

@@ -1,23 +1,43 @@
 //! Offline gear planning: enumerate candidate cascade configurations
-//! over calibration data, keep the accuracy-vs-throughput Pareto
+//! over calibration data, keep the accuracy-vs-rental-cost Pareto
 //! frontier, and emit a [`GearPlan`].
 //!
-//! For each candidate `(k, epsilon, max_batch)` the planner
+//! For each candidate ladder -- two-level `(k, epsilon, max_batch)` or
+//! three-level `(k1, eps1, k2, eps2, max_batch)` when `mid_ks` is
+//! non-empty -- the planner
 //!
-//! 1. calibrates a tier-1 threshold with `calib::estimate_theta` on the
-//!    `(score, correct)` points observed at ensemble size `k`;
-//! 2. prices the operating point with the paper's Eq. 1 cost model
-//!    (`cost::model::two_level_relative_cost`): expected per-request
-//!    compute relative to always running the top model;
-//! 3. converts cost + batching into sustainable offered load for the
-//!    deployment's replica allocation;
-//! 4. estimates end-to-end accuracy from the calibration set:
-//!    `P(select AND correct) + P(defer) * top_accuracy`.
+//! 1. calibrates per-tier thresholds with `calib::estimate_theta` on
+//!    each tier's `(score, correct)` points at its ensemble size;
+//! 2. prices the operating point with the paper's cost model
+//!    (`cost::model::two_level_relative_cost` /
+//!    `multi_level_relative_cost`): expected per-request compute
+//!    relative to always running the top model;
+//! 3. converts cost + batching into **replica-seconds per request**
+//!    (service time of one request's share of a replica, dispatch
+//!    overhead included) -- the Pareto cost axis.  This prices
+//!    *rental* cost, not just FLOPs: a gear that amortises dispatch
+//!    across a bigger batch is genuinely cheaper in machine-hours even
+//!    at identical per-request compute;
+//! 4. estimates end-to-end accuracy from the calibration sets:
+//!    each accepting tier contributes `P(select AND correct)`, the
+//!    remainder cascades down, the top model answers the rest.
 //!
 //! Candidates that another candidate beats on both axes are dropped
 //! (`analysis::pareto::frontier`), so every gear in the plan is a
 //! defensible operating point -- the online controller never has a
 //! reason to pick a dominated configuration.
+//!
+//! After the frontier is fixed, an **allocation pass** fills each
+//! gear's `replicas` from the cost model: the fewest replicas that
+//! sustain the plan's design load (`design_rps`, default: the top
+//! gear's full-fleet capacity) at `design_util` utilisation --
+//! cheaper gears need fewer machines for the same load, which is the
+//! paper's cloud-rental claim made concrete.  Each gear's
+//! `sustainable_rps` is quoted at its own allocation, and allocations
+//! are bumped where needed so the ladder stays strictly monotone
+//! (every faster gear really is faster); gears that cannot beat a more
+//! accurate gear's capacity even at the full fleet are dropped as
+//! runtime-dominated.
 //!
 //! Calibration points come from real tier executables in artifact
 //! deployments (`calib::collect_points`) or from
@@ -28,8 +48,8 @@ use anyhow::Result;
 
 use crate::analysis::pareto::{frontier, Point};
 use crate::calib::threshold::{estimate_theta, CalPoint};
-use crate::cost::model::two_level_relative_cost;
-use crate::planner::gear::{Gear, GearPlan};
+use crate::cost::model::{multi_level_relative_cost, two_level_relative_cost};
+use crate::planner::gear::{Gear, GearPlan, TierPlan};
 use crate::types::Parallelism;
 use crate::util::rng::Rng;
 
@@ -38,11 +58,18 @@ use crate::util::rng::Rng;
 pub struct PlannerConfig {
     /// Candidate tier-1 ensemble sizes (must match the calibration data).
     pub ks: Vec<usize>,
-    /// Candidate per-tier error budgets (Appendix B epsilon).
+    /// Candidate per-tier error budgets (Appendix B epsilon); shared by
+    /// tier 1 and interior tiers.
     pub epsilons: Vec<f64>,
+    /// Candidate interior-tier (tier 2) ensemble sizes for three-level
+    /// ladders; empty plans two-level cascades only.
+    pub mid_ks: Vec<usize>,
+    /// Cost of one interior-tier member relative to the top model.
+    pub mid_gamma: f64,
     /// Candidate dynamic-batcher flush caps.
     pub batches: Vec<usize>,
-    /// Replica allocation the plan targets.
+    /// Max replica fleet the plan may allocate (the allocation pass
+    /// fills per-gear `replicas` in `1..=replicas`).
     pub replicas: usize,
     /// Cost of one tier-1 member relative to the top model (Eq. 1 gamma).
     pub gamma: f64,
@@ -55,6 +82,11 @@ pub struct PlannerConfig {
     /// Per-row service time of the top model on one replica, seconds
     /// (cost 1.0 in the relative model).
     pub top_row_s: f64,
+    /// Offered load the allocation pass provisions each gear for; 0 =
+    /// auto (the top gear's capacity at the full `replicas` fleet).
+    pub design_rps: f64,
+    /// Utilisation the allocation pass sizes fleets at (headroom).
+    pub design_util: f64,
 }
 
 impl Default for PlannerConfig {
@@ -62,6 +94,8 @@ impl Default for PlannerConfig {
         PlannerConfig {
             ks: vec![1, 3, 5],
             epsilons: vec![0.01, 0.03, 0.05, 0.10],
+            mid_ks: vec![],
+            mid_gamma: 0.20,
             batches: vec![4, 8, 16, 32],
             replicas: 2,
             gamma: 0.05,
@@ -69,6 +103,8 @@ impl Default for PlannerConfig {
             top_accuracy: 0.95,
             batch_overhead_s: 200e-6,
             top_row_s: 2e-3,
+            design_rps: 0.0,
+            design_util: 0.85,
         }
     }
 }
@@ -78,15 +114,22 @@ impl Default for PlannerConfig {
 pub struct Candidate {
     pub k: usize,
     pub epsilon: f64,
+    /// Interior (tier 2) choice for three-level ladders.
+    pub mid: Option<TierPlan>,
     pub max_batch: usize,
     pub theta: f32,
     pub accuracy: f64,
     pub relative_cost: f64,
+    /// Replica-seconds one request costs (dispatch overhead included):
+    /// the Pareto rental-cost axis; `1 /` per-replica capacity.
+    pub replica_s_per_req: f64,
+    /// Offered load sustained at the full `cfg.replicas` fleet.
     pub sustainable_rps: f64,
 }
 
 impl Candidate {
-    /// Evaluate one grid point against its calibration sample.
+    /// Evaluate one two-level grid point against its calibration
+    /// sample.
     pub fn evaluate(
         cfg: &PlannerConfig,
         k: usize,
@@ -94,29 +137,77 @@ impl Candidate {
         max_batch: usize,
         points: &[CalPoint],
     ) -> Candidate {
-        let est = estimate_theta(points, epsilon);
-        let p_defer = 1.0 - est.selection_rate;
-        let relative_cost = two_level_relative_cost(k, cfg.gamma, cfg.rho, p_defer);
-        // accuracy: accepted samples are right unless they were a
-        // calibration failure; deferred samples get the top model
-        let accuracy = (est.selection_rate - est.failure_rate)
-            + p_defer * cfg.top_accuracy;
+        Candidate::evaluate_ladder(cfg, k, epsilon, max_batch, points, None)
+    }
+
+    /// Evaluate a grid point; `mid` adds an interior tier
+    /// `(k2, eps2, its calibration points)` for a three-level ladder.
+    pub fn evaluate_ladder(
+        cfg: &PlannerConfig,
+        k: usize,
+        epsilon: f64,
+        max_batch: usize,
+        points: &[CalPoint],
+        mid: Option<(usize, f64, &[CalPoint])>,
+    ) -> Candidate {
+        let est1 = estimate_theta(points, epsilon);
+        let p_defer1 = 1.0 - est1.selection_rate;
+        let (accuracy, relative_cost, mid_plan) = match mid {
+            None => {
+                let cost = two_level_relative_cost(k, cfg.gamma, cfg.rho, p_defer1);
+                // accuracy: accepted samples are right unless they were
+                // a calibration failure; deferred samples get the top
+                // model
+                let acc = (est1.selection_rate - est1.failure_rate)
+                    + p_defer1 * cfg.top_accuracy;
+                (acc, cost, None)
+            }
+            Some((k2, eps2, mid_points)) => {
+                let est2 = estimate_theta(mid_points, eps2);
+                let p_defer2 = 1.0 - est2.selection_rate;
+                // tier 2 sees only tier-1 deferrals; its selection and
+                // failure rates condition on reaching it (independence
+                // approximation -- the mid calibration set stands in
+                // for the deferred slice)
+                let acc = (est1.selection_rate - est1.failure_rate)
+                    + p_defer1
+                        * ((est2.selection_rate - est2.failure_rate)
+                            + p_defer2 * cfg.top_accuracy);
+                let cost = multi_level_relative_cost(
+                    &[(k, cfg.gamma), (k2, cfg.mid_gamma), (1, 1.0)],
+                    &[1.0, p_defer1, p_defer1 * p_defer2],
+                    cfg.rho,
+                );
+                (
+                    acc,
+                    cost,
+                    Some(TierPlan { k: k2, epsilon: eps2, theta: est2.theta }),
+                )
+            }
+        };
         // a replica serves max_batch rows per (overhead + per-row *
-        // relative_cost * max_batch) seconds; the pool has `replicas`
+        // relative_cost * max_batch) seconds; replica-seconds per
+        // request is that divided by the batch -- the rental price of
+        // one request in machine time
         let batch_s =
             cfg.batch_overhead_s + cfg.top_row_s * relative_cost * max_batch as f64;
-        let sustainable_rps = if batch_s <= 0.0 {
-            f64::INFINITY
+        let (replica_s_per_req, sustainable_rps) = if batch_s <= 0.0 {
+            (0.0, f64::INFINITY)
         } else {
-            cfg.replicas as f64 * max_batch as f64 / batch_s
+            (
+                batch_s / max_batch as f64,
+                cfg.replicas as f64 * max_batch as f64 / batch_s,
+            )
         };
         Candidate {
             k,
             epsilon,
+            mid: mid_plan,
             max_batch,
-            theta: est.theta,
+            theta: est1.theta,
             accuracy,
             relative_cost,
+            replica_s_per_req,
             sustainable_rps,
         }
     }
@@ -127,6 +218,7 @@ impl Candidate {
             k: self.k,
             epsilon: self.epsilon,
             theta: self.theta,
+            mid: self.mid.into_iter().collect(),
             max_batch: self.max_batch,
             replicas: cfg.replicas,
             accuracy: self.accuracy,
@@ -136,34 +228,69 @@ impl Candidate {
     }
 }
 
-/// Evaluate the full candidate grid.  `cal` maps each candidate `k` to
-/// its calibration points; ks missing from `cal` are skipped.
+/// Evaluate the full candidate grid.  `cal` maps each tier-1 `k` to its
+/// calibration points and `mid_cal` each interior-tier `k` to its own;
+/// ks missing from their set are skipped.
 pub fn enumerate_candidates(
     cfg: &PlannerConfig,
     cal: &[(usize, Vec<CalPoint>)],
+    mid_cal: &[(usize, Vec<CalPoint>)],
 ) -> Vec<Candidate> {
+    let points_for = |set: &'_ [(usize, Vec<CalPoint>)], k: usize| {
+        set.iter()
+            .find(|(ck, _)| *ck == k)
+            .map(|(_, p)| p)
+            .filter(|p| !p.is_empty())
+    };
     let mut out = Vec::new();
     for &k in &cfg.ks {
-        let Some((_, points)) = cal.iter().find(|(ck, _)| *ck == k) else {
+        let Some(points) = points_for(cal, k) else {
             continue;
         };
-        if points.is_empty() {
-            continue;
-        }
         for &eps in &cfg.epsilons {
             for &b in &cfg.batches {
                 out.push(Candidate::evaluate(cfg, k, eps, b, points));
+            }
+            // three-level ladders: every interior (k2, eps2) choice
+            for &k2 in &cfg.mid_ks {
+                let Some(mid_points) = points_for(mid_cal, k2) else {
+                    continue;
+                };
+                for &eps2 in &cfg.epsilons {
+                    for &b in &cfg.batches {
+                        out.push(Candidate::evaluate_ladder(
+                            cfg,
+                            k,
+                            eps,
+                            b,
+                            points,
+                            Some((k2, eps2, mid_points.as_slice())),
+                        ));
+                    }
+                }
             }
         }
     }
     out
 }
 
-/// Keep the Pareto-efficient candidates (accuracy up, capacity up) and
-/// assemble them into a ladder.  `1/sustainable_rps` is the Pareto
-/// "cost" axis so the existing frontier tooling applies unchanged.
+/// Keep the Pareto-efficient candidates (accuracy up, replica-seconds
+/// per request down), allocate replicas per gear, and assemble the
+/// ladder.  Two-level-only entry point; see [`plan_with_mid`] for
+/// three-level ladders.
 pub fn plan(cfg: &PlannerConfig, cal: &[(usize, Vec<CalPoint>)]) -> Result<GearPlan> {
-    let candidates = enumerate_candidates(cfg, cal);
+    plan_with_mid(cfg, cal, &[])
+}
+
+/// [`plan`] with interior-tier calibration sets: when both
+/// `cfg.mid_ks` and `mid_cal` are non-empty, the grid also explores
+/// three-level ladders.
+pub fn plan_with_mid(
+    cfg: &PlannerConfig,
+    cal: &[(usize, Vec<CalPoint>)],
+    mid_cal: &[(usize, Vec<CalPoint>)],
+) -> Result<GearPlan> {
+    let candidates = enumerate_candidates(cfg, cal, mid_cal);
     anyhow::ensure!(
         !candidates.is_empty(),
         "no plannable candidates: empty grid or no calibration data for any k"
@@ -171,18 +298,72 @@ pub fn plan(cfg: &PlannerConfig, cal: &[(usize, Vec<CalPoint>)]) -> Result<GearP
     let points: Vec<Point> = candidates
         .iter()
         .enumerate()
-        .map(|(i, c)| Point::new(i.to_string(), 1.0 / c.sustainable_rps, c.accuracy))
+        .map(|(i, c)| Point::new(i.to_string(), c.replica_s_per_req, c.accuracy))
         .collect();
     // frontier() drops dominated candidates AND dedups identical
     // (cost, value) pairs, so this is already one gear per operating point
-    let gears: Vec<Gear> = frontier(&points)
+    let mut gears: Vec<Gear> = frontier(&points)
         .iter()
         .map(|p| {
             let idx: usize = p.label.parse().expect("frontier label is an index");
             candidates[idx].clone().into_gear(cfg)
         })
         .collect();
+    allocate_replicas(cfg, &mut gears);
     GearPlan::new(gears)
+}
+
+/// Fill each gear's `replicas` from the cost model: the fewest
+/// replicas sustaining the design load at `design_util`, bumped where
+/// needed so capacity still strictly ascends down the ladder, and
+/// requote `sustainable_rps` at that allocation.  Gears that cannot
+/// out-sustain a more accurate gear even at the full fleet are dropped
+/// (runtime-dominated: lower accuracy and no capacity win).
+fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<Gear>) {
+    gears.sort_by(|a, b| {
+        b.accuracy
+            .partial_cmp(&a.accuracy)
+            .expect("accuracy is never NaN")
+    });
+    // per-replica capacity before any reallocation: quoted at the full
+    // fleet, so divide it back out
+    let per_replica =
+        |g: &Gear| g.sustainable_rps / cfg.replicas.max(1) as f64;
+    let design_rps = if cfg.design_rps > 0.0 {
+        cfg.design_rps
+    } else {
+        // auto: what the most accurate gear delivers on the full fleet
+        gears.first().map(per_replica).unwrap_or(0.0) * cfg.replicas as f64
+    };
+    let util = cfg.design_util.clamp(0.05, 1.0);
+    let mut prev_rps = 0.0f64;
+    let mut kept: Vec<Gear> = Vec::with_capacity(gears.len());
+    for mut g in gears.drain(..) {
+        let rps1 = per_replica(&g);
+        if !rps1.is_finite() {
+            // infinite-capacity degenerate point: one replica suffices
+            g.replicas = 1;
+            kept.push(g);
+            continue;
+        }
+        // fewest replicas covering the design load at target
+        // utilisation...
+        let needed = (design_rps / (rps1 * util)).ceil() as usize;
+        // ...but never fewer than it takes to beat every more accurate
+        // gear's capacity (otherwise the ladder loses monotonicity and
+        // the gear is pointless at runtime)
+        let monotone = (prev_rps / rps1).floor() as usize + 1;
+        g.replicas = needed.max(monotone).clamp(1, cfg.replicas.max(1));
+        g.sustainable_rps = g.replicas as f64 * rps1;
+        if g.sustainable_rps <= prev_rps {
+            // even the capped fleet cannot out-sustain the gear above:
+            // runtime-dominated, drop it
+            continue;
+        }
+        prev_rps = g.sustainable_rps;
+        kept.push(g);
+    }
+    *gears = kept;
 }
 
 /// Synthetic `(score, correct)` calibration points for ensemble size
@@ -271,36 +452,41 @@ mod tests {
         let cal = small_cal(&cfg);
         let plan = plan(&cfg, &cal).unwrap();
         assert!(!plan.is_empty());
-        let all = enumerate_candidates(&cfg, &cal);
-        // no enumerated candidate may dominate any emitted gear
+        let all = enumerate_candidates(&cfg, &cal, &[]);
+        // no enumerated candidate may dominate any emitted gear on the
+        // (accuracy, replica-seconds-per-request) axes the frontier ran
+        // over
         for g in &plan.gears {
             for c in &all {
                 let dominates = c.accuracy >= g.accuracy
-                    && c.sustainable_rps >= g.sustainable_rps
+                    && c.replica_s_per_req <= g.replica_s_per_req()
                     && (c.accuracy > g.accuracy
-                        || c.sustainable_rps > g.sustainable_rps);
+                        || c.replica_s_per_req < g.replica_s_per_req() - 1e-15);
                 assert!(
                     !dominates,
-                    "candidate k={} eps={} b={} (acc {:.4}, {:.0} rps) dominates \
-                     gear {} (acc {:.4}, {:.0} rps)",
+                    "candidate k={} eps={} b={} (acc {:.4}, {:.3e} rep-s/req) \
+                     dominates gear {} (acc {:.4}, {:.3e} rep-s/req)",
                     c.k,
                     c.epsilon,
                     c.max_batch,
                     c.accuracy,
-                    c.sustainable_rps,
+                    c.replica_s_per_req,
                     g.id,
                     g.accuracy,
-                    g.sustainable_rps
+                    g.replica_s_per_req()
                 );
             }
         }
         // and every gear is an enumerated candidate, not an invention
+        // (sustainable_rps is requoted at the gear's allocation, so
+        // compare per-replica capacity instead)
         for g in &plan.gears {
             assert!(all.iter().any(|c| c.k == g.k
                 && c.epsilon == g.epsilon
                 && c.max_batch == g.max_batch
                 && c.accuracy == g.accuracy
-                && c.sustainable_rps == g.sustainable_rps));
+                && (1.0 / c.replica_s_per_req - g.per_replica_rps()).abs()
+                    < 1e-6 * g.per_replica_rps()));
         }
     }
 
@@ -320,6 +506,120 @@ mod tests {
     }
 
     #[test]
+    fn allocation_prices_cheaper_gears_with_fewer_replicas() {
+        let cfg = PlannerConfig { replicas: 8, ..small_cfg() };
+        let plan = plan(&cfg, &small_cal(&cfg)).unwrap();
+        // the top gear is provisioned at the full fleet (design load ==
+        // its own full-fleet capacity at design_util headroom)
+        assert_eq!(plan.top().replicas, cfg.replicas);
+        for g in &plan.gears {
+            assert!(g.replicas >= 1 && g.replicas <= cfg.replicas);
+            // quoted capacity is consistent with the allocation
+            assert!(
+                (g.sustainable_rps - g.replicas as f64 * g.per_replica_rps()).abs()
+                    < 1e-6 * g.sustainable_rps
+            );
+            // every gear covers the design load (the top gear's
+            // full-fleet capacity) at <= 1.0 utilisation of its fleet
+            assert!(
+                g.sustainable_rps * 1.0001
+                    >= plan.top().sustainable_rps * cfg.design_util,
+                "gear {} underprovisioned: {} rps vs design {}",
+                g.id,
+                g.sustainable_rps,
+                plan.top().sustainable_rps
+            );
+        }
+        if plan.len() >= 2 {
+            // at least one cheaper gear needs strictly fewer machines:
+            // the rental-cost win the allocation exists for
+            assert!(
+                plan.fastest().replicas < plan.top().replicas,
+                "fastest gear rents as much as the top gear: {:?}",
+                plan.gears
+                    .iter()
+                    .map(|g| (g.id, g.replicas, g.sustainable_rps as u64))
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_design_rps_provisions_the_ladder() {
+        let mut cfg = PlannerConfig { replicas: 16, ..small_cfg() };
+        cfg.design_rps = 500.0;
+        let plan = plan(&cfg, &small_cal(&cfg)).unwrap();
+        for g in &plan.gears {
+            // enough capacity for the design load at headroom, unless
+            // capped by the fleet
+            if g.replicas < cfg.replicas {
+                assert!(
+                    g.sustainable_rps * 1.0001 >= cfg.design_rps * cfg.design_util,
+                    "gear {} misses design load: {}",
+                    g.id,
+                    g.sustainable_rps
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn three_level_grid_emits_multi_tier_gears_on_the_frontier() {
+        let cfg = PlannerConfig {
+            ks: vec![1, 3],
+            mid_ks: vec![3, 5],
+            mid_gamma: 0.20,
+            epsilons: vec![0.02, 0.05, 0.10],
+            batches: vec![8],
+            replicas: 2,
+            ..PlannerConfig::default()
+        };
+        let cal = small_cal(&cfg);
+        // interior tier: stronger members (it is a bigger model)
+        let mid_cal: Vec<_> = cfg
+            .mid_ks
+            .iter()
+            .map(|&k| (k, synthetic_cal_points(k, 200, 0.9, 13)))
+            .collect();
+        let candidates = enumerate_candidates(&cfg, &cal, &mid_cal);
+        // grid: 2 ks x 3 eps x (1 two-level + 2 mid_ks x 3 eps2) x 1 batch
+        assert_eq!(candidates.len(), 2 * 3 * (1 + 2 * 3));
+        let multi: Vec<_> = candidates.iter().filter(|c| c.mid.is_some()).collect();
+        assert!(!multi.is_empty());
+        // a three-level candidate defers less to the top than its
+        // two-level base, so it must be cheaper than the SAME (k, eps,
+        // batch) without the interior tier whenever the interior tier
+        // accepts anything
+        for c in &multi {
+            let base = candidates
+                .iter()
+                .find(|b| {
+                    b.mid.is_none()
+                        && b.k == c.k
+                        && b.epsilon == c.epsilon
+                        && b.max_batch == c.max_batch
+                })
+                .expect("two-level base exists");
+            let k2 = c.mid.as_ref().unwrap().k as f64;
+            assert!(
+                c.relative_cost <= base.relative_cost + k2 * cfg.mid_gamma + 1e-12,
+                "interior tier cost unaccounted"
+            );
+        }
+        // and the full planner accepts the mixed grid
+        let plan = plan_with_mid(&cfg, &cal, &mid_cal).unwrap();
+        assert!(!plan.is_empty());
+        for g in &plan.gears {
+            assert_eq!(g.thetas().len(), 1 + g.mid.len());
+        }
+        // ladder invariants hold across mixed-depth gears
+        for w in plan.gears.windows(2) {
+            assert!(w[0].accuracy >= w[1].accuracy);
+            assert!(w[0].sustainable_rps <= w[1].sustainable_rps);
+        }
+    }
+
+    #[test]
     fn plan_errors_without_calibration_data() {
         let cfg = small_cfg();
         assert!(plan(&cfg, &[]).is_err());
@@ -335,6 +635,10 @@ mod tests {
         let small = Candidate::evaluate(&cfg, 3, 0.05, 4, &pts);
         let large = Candidate::evaluate(&cfg, 3, 0.05, 32, &pts);
         assert!(large.sustainable_rps > small.sustainable_rps);
+        // and bigger batches amortise dispatch overhead: cheaper in
+        // replica-seconds per request, which is exactly what the
+        // rental-cost axis must see
+        assert!(large.replica_s_per_req < small.replica_s_per_req);
         // same cascade config => same accuracy/cost, batching is free
         assert_eq!(small.accuracy, large.accuracy);
         assert_eq!(small.relative_cost, large.relative_cost);

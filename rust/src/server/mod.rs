@@ -11,6 +11,10 @@
 //! -> {"cmd": "stats"}
 //! <- {"stats": {"counters": {...}, "gauges": {...},
 //!     "histograms": {"request_latency_s": {"n":..,"p99":..}, ...}}}
+//! -> {"cmd": "events"}
+//! <- {"events": [{"seq":0,"ts_s":...,"kind":"shift","trigger":"rate",
+//!     "old_gear":0,"new_gear":1,"old_replicas":2,"new_replicas":2},
+//!     ...], "dropped": 0}          (controller/autoscaler decisions)
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
 //!
@@ -58,8 +62,8 @@ use anyhow::Result;
 
 use crate::coordinator::replica::{PoolError, ReplicaPool};
 use proto::{
-    parse_request_line, render_error, render_metrics, render_overloaded, render_stats,
-    render_verdict,
+    parse_request_line, render_error, render_events, render_metrics,
+    render_overloaded, render_stats, render_verdict,
 };
 
 /// How long a handler blocks in `read` before re-checking the stop flag.
@@ -172,6 +176,9 @@ fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>)
             Ok(proto::Incoming::Stats) => {
                 writeln!(writer, "{}", render_stats(pool.metrics()))?;
             }
+            Ok(proto::Incoming::Events) => {
+                writeln!(writer, "{}", render_events(pool.metrics()))?;
+            }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 writeln!(writer, "{}", r#"{"ok":true,"shutdown":true}"#)?;
@@ -267,6 +274,19 @@ impl Client {
                 "server error: overloaded ({outstanding}/{limit} outstanding)"
             ),
         }
+    }
+
+    /// Fetch the controller event log (`{"cmd":"events"}`): gear
+    /// shifts + scale actions, oldest first.
+    pub fn events(&mut self) -> Result<crate::util::json::Json> {
+        let reply = self.roundtrip(r#"{"cmd":"events"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad events reply {reply:?}: {e}"))?;
+        anyhow::ensure!(
+            v.get("events").as_arr().is_some(),
+            "events reply missing 'events' array: {reply}"
+        );
+        Ok(v)
     }
 
     /// Fetch the structured stats snapshot (`{"cmd":"stats"}`).

@@ -10,6 +10,7 @@ pub enum Incoming {
     Infer(Request),
     Metrics,
     Stats,
+    Events,
     Shutdown,
 }
 
@@ -20,6 +21,7 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
         return match cmd {
             "metrics" => Ok(Incoming::Metrics),
             "stats" => Ok(Incoming::Stats),
+            "events" => Ok(Incoming::Events),
             "shutdown" => Ok(Incoming::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -101,6 +103,16 @@ pub fn render_stats(metrics: &Metrics) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the controller event log (`{"cmd":"events"}` reply): the
+/// retained gear-shift/scale-action events, oldest first, plus how
+/// many older events the bounded ring evicted.
+pub fn render_events(metrics: &Metrics) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("events", metrics.events().to_json());
+    obj.insert("dropped", Json::num(metrics.events().dropped() as f64));
+    Json::Obj(obj).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,9 +140,30 @@ mod tests {
             Incoming::Stats
         ));
         assert!(matches!(
+            parse_request_line(r#"{"cmd": "events"}"#).unwrap(),
+            Incoming::Events
+        ));
+        assert!(matches!(
             parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
             Incoming::Shutdown
         ));
+    }
+
+    #[test]
+    fn events_line_shape() {
+        use crate::metrics::EventKind;
+        let m = Metrics::new();
+        m.events().record(EventKind::Shift, "rate", 0, 1, 2, 2);
+        m.events().record(EventKind::Scale, "pressure", 1, 1, 2, 4);
+        let line = render_events(&m);
+        let parsed = Json::parse(&line).unwrap();
+        let events = parsed.get("events").as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("kind").as_str(), Some("shift"));
+        assert_eq!(events[1].get("kind").as_str(), Some("scale"));
+        assert_eq!(events[1].get("trigger").as_str(), Some("pressure"));
+        assert_eq!(events[1].get("new_replicas").as_u64(), Some(4));
+        assert_eq!(parsed.get("dropped").as_u64(), Some(0));
     }
 
     #[test]

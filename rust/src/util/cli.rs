@@ -137,6 +137,18 @@ impl Args {
         }
     }
 
+    /// Port-sized option: rejects values outside `u16` instead of
+    /// silently truncating (the old `u64_or(..) as u16` wrapped 70000
+    /// to 4464).
+    pub fn u16_or(&self, name: &str, default: u16) -> Result<u16, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.to_string(), v.to_string())),
+        }
+    }
+
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -233,6 +245,14 @@ mod tests {
         assert!((a.f64_or("x", 0.0).unwrap() - 2.5).abs() < 1e-12);
         assert!(a.usize_or("bad", 0).is_err());
         assert!(a.req_str("nope").is_err());
+    }
+
+    #[test]
+    fn u16_rejects_out_of_range_ports() {
+        let a = args("--port 7878 --big 70000");
+        assert_eq!(a.u16_or("port", 1).unwrap(), 7878);
+        assert_eq!(a.u16_or("missing", 9).unwrap(), 9);
+        assert!(a.u16_or("big", 1).is_err(), "70000 must not wrap");
     }
 
     #[test]

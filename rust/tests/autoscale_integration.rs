@@ -1,0 +1,306 @@
+//! Integration: the elastic replica autoscaler -- no PJRT artifacts
+//! needed (synthetic backend).
+//!
+//! Covers the claims the subsystem exists for:
+//! * **drain correctness**: under continuous multi-threaded load with
+//!   adversarial scale up/down churn, `completed + shed == submitted`
+//!   EXACTLY -- no drops, no duplicates -- and a draining replica never
+//!   admits new work once `drain()` returns;
+//! * **rental win**: under on-off load the elastic pool tracks the
+//!   fixed-max-fleet pool's goodput while consuming measurably fewer
+//!   replica-seconds, scaling up into bursts and draining back to the
+//!   floor afterwards;
+//! * the autoscaler's telemetry (gauges, scale counters, event log)
+//!   reflects what happened.
+//!
+//! Timing margins follow loadgen_integration.rs: the synthetic
+//! classifier's sleep-based service time is a *lower* bound on real
+//! elapsed time, so a slow CI machine only lowers capacity -- and every
+//! comparison below is against a baseline the same slowdown hurts at
+//! least as much.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use abc_serve::autoscale::{Autoscaler, ScaleConfig};
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::replica::{PoolConfig, PoolError, ReplicaPool};
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::planner::{ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::trafficgen::{LoadGen, SyntheticClassifier, Trace};
+use abc_serve::types::Request;
+
+const DIM: usize = 4;
+const MAX_BATCH: usize = 8;
+/// 2ms per row, batches of 8: one replica sustains ~500 rows/s
+/// regardless of host speed (sleep only overshoots).
+const PER_ROW: Duration = Duration::from_millis(2);
+const MAX_REPLICAS: usize = 4;
+
+/// Wall-clock tests run one at a time (same pattern as
+/// loadgen_integration.rs).
+static TIMING_LOCK: Mutex<()> = Mutex::new(());
+
+fn classifier() -> Arc<SyntheticClassifier> {
+    Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, PER_ROW))
+}
+
+fn per_replica_rps() -> f64 {
+    classifier().capacity_rps(MAX_BATCH)
+}
+
+/// One-gear plan: isolates replica elasticity from gear shifting (the
+/// coupled decision itself is unit-tested in autoscale::autoscaler).
+fn one_gear_plan() -> GearPlan {
+    GearPlan::new(vec![Gear {
+        id: 0,
+        k: 3,
+        epsilon: 0.03,
+        theta: 0.6,
+        mid: vec![],
+        max_batch: MAX_BATCH,
+        replicas: 1,
+        accuracy: 0.95,
+        relative_cost: 1.0,
+        sustainable_rps: per_replica_rps(),
+    }])
+    .unwrap()
+}
+
+fn pool_cfg(replicas: usize) -> PoolConfig {
+    PoolConfig {
+        replicas,
+        max_queue: 64,
+        batcher: BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(1),
+        },
+    }
+}
+
+#[test]
+fn drain_churn_accounts_every_request_exactly_once() {
+    let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // fast classifier so the test exercises the scale path, not capacity
+    let fast = Arc::new(SyntheticClassifier::new(
+        DIM,
+        3,
+        Duration::ZERO,
+        Duration::from_micros(50),
+    ));
+    let pool = Arc::new(ReplicaPool::spawn(
+        fast,
+        PoolConfig {
+            replicas: 2,
+            max_queue: 256,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+        },
+        Metrics::new(),
+    ));
+
+    // adversarial churn: drain + re-provision + advance as fast as possible
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let pool = Arc::clone(&pool);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut cycles = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                pool.drain(1);
+                pool.scale_up(1, Duration::ZERO);
+                pool.advance(Instant::now());
+                cycles += 1;
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            // settle: retire whatever is still draining
+            for _ in 0..200 {
+                pool.advance(Instant::now());
+                if pool.counts().2 == 0 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            cycles
+        })
+    };
+
+    // hammer the pool from several submitter threads; count every outcome
+    let n_threads = 4u64;
+    let per_thread = 250u64;
+    let submitters: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                let mut answered = Vec::new();
+                let mut shed = 0u64;
+                for i in 0..per_thread {
+                    let id = t * per_thread + i;
+                    let req = Request {
+                        id,
+                        features: vec![0.5; DIM],
+                        arrival_s: 0.0,
+                    };
+                    match pool.infer(req) {
+                        Ok(v) => answered.push(v.request_id),
+                        Err(PoolError::Overloaded { .. }) => shed += 1,
+                        Err(e) => panic!("request {id} failed under churn: {e}"),
+                    }
+                }
+                (answered, shed)
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = Vec::new();
+    let mut shed_total = 0u64;
+    for s in submitters {
+        let (answered, shed) = s.join().unwrap();
+        all.extend(answered);
+        shed_total += shed;
+    }
+    stop.store(true, Ordering::SeqCst);
+    let cycles = churn.join().unwrap();
+
+    // exactly-once accounting: completed + shed == submitted, no id
+    // answered twice, nothing silently lost
+    let submitted = n_threads * per_thread;
+    assert_eq!(all.len() as u64 + shed_total, submitted);
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(
+        all.len() as u64 + shed_total,
+        submitted,
+        "duplicate verdicts under churn"
+    );
+    assert_eq!(pool.total_outstanding(), 0);
+    assert!(cycles > 10, "churn thread barely ran ({cycles} cycles)");
+    // the lifecycle genuinely cycled: replicas were retired and replaced
+    assert!(
+        pool.metrics().counter("replicas_retired").get() > 0,
+        "churn never retired a replica"
+    );
+    assert!(pool.replica_seconds() > 0.0);
+    // the pool still serves after all that
+    pool.infer(Request { id: 9999, features: vec![0.5; DIM], arrival_s: 0.0 })
+        .unwrap();
+}
+
+#[test]
+fn elastic_pool_matches_fixed_goodput_with_fewer_replica_seconds() {
+    let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // bursts at 60% of the max fleet's capacity: the fixed-max pool
+    // absorbs them outright, the elastic pool must scale into them
+    let burst_rps = 0.6 * MAX_REPLICAS as f64 * per_replica_rps();
+    let n = 700;
+    let trace = Arc::new(Trace::synth(
+        Arrival::OnOff { rate: burst_rps, on_s: 0.4, off_s: 0.5 },
+        n,
+        DIM,
+        31,
+    ));
+    let gen = LoadGen { workers: 64 };
+
+    // ---- fixed-N baseline: max fleet pinned for the whole run ----
+    let fixed_pool = Arc::new(ReplicaPool::spawn(
+        classifier(),
+        pool_cfg(MAX_REPLICAS),
+        Metrics::new(),
+    ));
+    let fixed = gen.run(&fixed_pool, Arc::clone(&trace), &Metrics::new()).unwrap();
+    let fixed_rs = fixed_pool.replica_seconds();
+
+    // ---- elastic: autoscaler over the same classifier, 1..=4 fleet ----
+    let plan = one_gear_plan();
+    let handle = GearHandle::new(plan.top().config());
+    let metrics = Metrics::new();
+    let elastic_pool = Arc::new(ReplicaPool::spawn_geared(
+        classifier(),
+        pool_cfg(1),
+        Arc::clone(&metrics),
+        Arc::clone(&handle),
+    ));
+    let mut autoscaler = Autoscaler::spawn(
+        Arc::clone(&elastic_pool),
+        plan,
+        handle,
+        ControllerConfig {
+            sample_every: Duration::from_millis(10),
+            dwell: Duration::from_millis(80),
+            ..ControllerConfig::default()
+        },
+        ScaleConfig {
+            min_replicas: 1,
+            max_replicas: MAX_REPLICAS,
+            warmup: Duration::ZERO,
+            ..ScaleConfig::default()
+        },
+    );
+    let elastic = gen
+        .run(&elastic_pool, Arc::clone(&trace), &Metrics::new())
+        .unwrap();
+    let elastic_rs = elastic_pool.replica_seconds();
+
+    // exact per-request accounting on both sides
+    assert_eq!(fixed.errors, 0, "{fixed:?}");
+    assert_eq!(elastic.errors, 0, "{elastic:?}");
+    assert_eq!(fixed.completed + fixed.shed, n as u64, "{fixed:?}");
+    assert_eq!(elastic.completed + elastic.shed, n as u64, "{elastic:?}");
+
+    // the autoscaler actually scaled, both directions
+    assert!(
+        metrics.counter("scale_up_total").get() > 0,
+        "never scaled up; metrics: {:?}",
+        metrics.snapshot()
+    );
+    assert!(
+        metrics.counter("scale_down_total").get() > 0,
+        "never scaled down; metrics: {:?}",
+        metrics.snapshot()
+    );
+    // ...and logged its decisions
+    let events = metrics.events().snapshot();
+    assert!(
+        events.iter().any(|e| e.kind == abc_serve::metrics::EventKind::Scale),
+        "no scale events logged"
+    );
+
+    // headline: goodput within 10% of the always-max fleet (the 5%
+    // target is asserted as the bench's verdict under calmer
+    // conditions; CI boxes get slack here) at measurably lower rent
+    assert!(
+        elastic.completed as f64 >= 0.90 * fixed.completed as f64,
+        "elastic {} vs fixed {} completed",
+        elastic.completed,
+        fixed.completed
+    );
+    assert!(
+        elastic_rs < 0.85 * fixed_rs,
+        "no rental win: elastic {elastic_rs:.2} vs fixed {fixed_rs:.2} replica-s"
+    );
+
+    // after the load ends the fleet drains back to the floor
+    let deadline = Instant::now() + Duration::from_secs(3);
+    loop {
+        let (warming, live, draining) = elastic_pool.counts();
+        if warming == 0 && draining == 0 && live == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet stuck at {:?}; metrics: {:?}",
+            elastic_pool.counts(),
+            metrics.snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // lifecycle gauges ended consistent with the drained fleet (give
+    // the sampler a few ticks to publish the final state)
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(metrics.gauge("replicas_live").get(), 1.0);
+    assert!(metrics.gauge("replica_seconds").get() > 0.0);
+    autoscaler.stop();
+}

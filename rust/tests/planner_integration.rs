@@ -59,6 +59,7 @@ fn plan() -> GearPlan {
         k: 3,
         epsilon: 0.03,
         theta: 0.6,
+        mid: vec![],
         max_batch: MAX_BATCH,
         replicas: 1,
         accuracy: acc,

@@ -181,6 +181,36 @@ fn stats_command_roundtrips_structured_snapshot() {
 }
 
 #[test]
+fn events_command_roundtrips_the_controller_log() {
+    let port = 7995;
+    let pool = synthetic_pool(None);
+    // seed the shared registry's event log the way a controller would
+    pool.metrics()
+        .events()
+        .record(abc_serve::metrics::EventKind::Shift, "rate", 0, 1, 2, 2);
+    pool.metrics()
+        .events()
+        .record(abc_serve::metrics::EventKind::Scale, "pressure", 1, 1, 2, 4);
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    let reply = client.events().unwrap();
+    let events = reply.get("events").as_arr().unwrap();
+    assert_eq!(events.len(), 2, "got {reply}");
+    assert_eq!(events[0].get("kind").as_str(), Some("shift"));
+    assert_eq!(events[0].get("trigger").as_str(), Some("rate"));
+    assert_eq!(events[1].get("kind").as_str(), Some("scale"));
+    assert_eq!(events[1].get("old_replicas").as_u64(), Some(2));
+    assert_eq!(events[1].get("new_replicas").as_u64(), Some(4));
+    assert!(events[0].get("ts_s").as_f64().unwrap() > 0.0);
+    assert_eq!(reply.get("dropped").as_u64(), Some(0));
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn geared_server_reports_active_gear_on_the_wire() {
     let port = 7994;
     // minimal one-gear plan; no controller needed to test the wire shape
@@ -189,6 +219,7 @@ fn geared_server_reports_active_gear_on_the_wire() {
         k: 3,
         epsilon: 0.03,
         theta: 0.6,
+        mid: vec![],
         max_batch: 8,
         replicas: 1,
         accuracy: 0.9,
