@@ -56,6 +56,8 @@ fn one_gear_plan() -> GearPlan {
         mid: vec![],
         max_batch: MAX_BATCH,
         replicas: 1,
+        tier_fleet: vec![],
+        dollar_per_req: 0.0,
         accuracy: 0.95,
         relative_cost: 1.0,
         sustainable_rps: per_replica_rps(),
@@ -71,6 +73,7 @@ fn pool_cfg(replicas: usize) -> PoolConfig {
             max_batch: MAX_BATCH,
             max_wait: Duration::from_millis(1),
         },
+        ..PoolConfig::default()
     }
 }
 

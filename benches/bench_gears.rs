@@ -52,6 +52,8 @@ fn plan() -> GearPlan {
         mid: vec![],
         max_batch: MAX_BATCH,
         replicas: 1,
+        tier_fleet: vec![],
+        dollar_per_req: 0.0,
         accuracy: acc,
         relative_cost: work,
         sustainable_rps: cap / work,
@@ -67,6 +69,7 @@ fn pool_cfg() -> PoolConfig {
             max_batch: MAX_BATCH,
             max_wait: Duration::from_millis(1),
         },
+        ..PoolConfig::default()
     }
 }
 

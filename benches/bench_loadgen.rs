@@ -40,6 +40,7 @@ fn run_point(replicas: usize, offered_rps: f64) -> LoadReport {
                 max_batch: MAX_BATCH,
                 max_wait: Duration::from_millis(1),
             },
+            ..PoolConfig::default()
         },
         Metrics::new(),
     ));

@@ -1,0 +1,162 @@
+//! Serving-cost bench: monolithic replicas vs the tiered fleet under
+//! on-off load (the §5.2.2 rental-cost claim as a head-to-head).
+//!
+//! Replays the same on-off trace (bursts at 2x the monolithic pool's
+//! saturation) against two layouts of the same cascade:
+//!
+//! * **monolithic** -- every replica runs the whole cascade, so every
+//!   machine is provisioned for the top model (H100);
+//! * **tiered** -- one pool per cascade level with deferral routed
+//!   between pools: cheap GPUs (V100/A6000) serve the cheap tiers that
+//!   answer most traffic, ONE H100 serves the deferral tail.
+//!
+//! The rendered table shows goodput, p99, **$/1k completed** (each
+//! pool's `replica_seconds` priced at its own GPU class, `cost::rental`
+//! Table 4) and the per-tier replica counts.  The verdict line checks
+//! the acceptance bar: tiered goodput within 5% of monolithic at
+//! measurably fewer fleet-dollars.
+//!
+//! Run: `cargo bench --bench bench_tiers`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::StageClassifier;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::coordinator::router::{TierSpec, TieredFleet, TieredFleetConfig};
+use abc_serve::cost::rental::Gpu;
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::trafficgen::{
+    LoadGen, LoadReport, StagedSynthetic, SyntheticClassifier, Trace,
+};
+use abc_serve::util::table::{fnum, Table};
+
+const DIM: usize = 8;
+const LEVELS: usize = 3;
+const MAX_BATCH: usize = 8;
+const MAX_QUEUE: usize = 32;
+const PER_ROW: Duration = Duration::from_millis(2); // ~500 rows/s/replica
+const WEIGHTS: [f64; 3] = [0.15, 0.25, 0.60];
+const MONO_REPLICAS: usize = 4;
+const N_REQUESTS: usize = 6000;
+const WORKERS: usize = 192;
+
+fn inner() -> SyntheticClassifier {
+    SyntheticClassifier::new(DIM, LEVELS, Duration::ZERO, PER_ROW)
+}
+
+fn batcher() -> BatcherConfig {
+    BatcherConfig { max_batch: MAX_BATCH, max_wait: Duration::from_millis(1) }
+}
+
+fn onoff_trace() -> Arc<Trace> {
+    let rate = 2.0 * MONO_REPLICAS as f64 * inner().capacity_rps(MAX_BATCH);
+    Arc::new(Trace::synth(
+        Arrival::OnOff { rate, on_s: 0.4, off_s: 0.5 },
+        N_REQUESTS,
+        DIM,
+        53,
+    ))
+}
+
+/// (report, fleet dollars, per-tier replica description).
+fn run_monolithic(trace: Arc<Trace>) -> (LoadReport, f64, String) {
+    let pool = Arc::new(ReplicaPool::spawn(
+        Arc::new(inner()),
+        PoolConfig {
+            replicas: MONO_REPLICAS,
+            max_queue: MAX_QUEUE,
+            batcher: batcher(),
+            ..PoolConfig::default() // gpu: H100 -- the top model rides along
+        },
+        Metrics::new(),
+    ));
+    let report = LoadGen { workers: WORKERS }
+        .run(&pool, trace, &Metrics::new())
+        .expect("monolithic run");
+    let dollars = pool.dollars();
+    let desc = format!("{}x{}", MONO_REPLICAS, pool.gpu().name());
+    (report, dollars, desc)
+}
+
+fn run_tiered(trace: Arc<Trace>) -> (LoadReport, f64, String) {
+    let stage = Arc::new(StagedSynthetic::new(inner(), WEIGHTS.to_vec()));
+    let fleet = Arc::new(
+        TieredFleet::spawn(
+            stage as Arc<dyn StageClassifier>,
+            TieredFleetConfig {
+                tiers: vec![
+                    TierSpec::fixed(Gpu::V100, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::A6000, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
+                ],
+                batcher: batcher(),
+            },
+            Metrics::new(),
+        )
+        .expect("fleet spawn"),
+    );
+    let report = LoadGen { workers: WORKERS }
+        .run(&fleet, trace, &Metrics::new())
+        .expect("tiered run");
+    let dollars = fleet.dollars();
+    let desc = fleet
+        .tiers()
+        .iter()
+        .map(|t| format!("{}x{}", t.pool().n_replicas(), t.gpu().name()))
+        .collect::<Vec<_>>()
+        .join("+");
+    (report, dollars, desc)
+}
+
+fn main() {
+    let trace = onoff_trace();
+    let mono_cap = MONO_REPLICAS as f64 * inner().capacity_rps(MAX_BATCH);
+    println!(
+        "on-off trace: {} requests, bursts at {:.0} rps (2x the monolithic \
+         pool's {:.0} rps saturation), cascade weights {:?}",
+        trace.len(),
+        2.0 * mono_cap,
+        mono_cap,
+        WEIGHTS,
+    );
+
+    let (mono, mono_dollars, mono_desc) = run_monolithic(Arc::clone(&trace));
+    let (tiered, tiered_dollars, tiered_desc) = run_tiered(Arc::clone(&trace));
+
+    let mut table = Table::new(
+        "monolithic vs tiered fleet under on-off load (2x saturation)",
+        &["config", "fleet", "done", "shed", "goodput rps", "p99",
+          "$ total", "$/1k done"],
+    );
+    let mut row = |name: &str, desc: &str, r: &LoadReport, d: f64| {
+        table.row(vec![
+            name.to_string(),
+            desc.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            format!("{:.0}", r.goodput_rps),
+            abc_serve::benchkit::fmt_time(r.p99_s),
+            fnum(d, 6),
+            fnum(d * 1000.0 / (r.completed.max(1) as f64), 6),
+        ]);
+    };
+    row("monolithic", &mono_desc, &mono, mono_dollars);
+    row("tiered", &tiered_desc, &tiered, tiered_dollars);
+    println!("{}", table.render());
+
+    let goodput_ratio = tiered.completed as f64 / mono.completed.max(1) as f64;
+    let dollar_ratio = tiered_dollars / mono_dollars.max(1e-12);
+    println!(
+        "tiered goodput = {:.1}% of monolithic at {:.1}% of its fleet-dollars.",
+        100.0 * goodput_ratio,
+        100.0 * dollar_ratio,
+    );
+    println!(
+        "verdict: goodput within 5% of monolithic: {};  fewer fleet-dollars: {}",
+        if goodput_ratio >= 0.95 { "YES" } else { "NO" },
+        if dollar_ratio < 0.9 { "YES" } else { "NO" },
+    );
+}

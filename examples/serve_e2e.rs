@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             replicas: REPLICAS,
             max_queue: MAX_QUEUE,
             batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+            ..PoolConfig::default()
         },
         Arc::clone(&metrics),
     ));

@@ -251,6 +251,8 @@ mod tests {
             mid: vec![],
             max_batch: 8,
             replicas: 2,
+            tier_fleet: vec![],
+            dollar_per_req: 0.0,
             accuracy: acc,
             relative_cost: work,
             sustainable_rps: rps,

@@ -19,7 +19,13 @@
 //!   control loops.  Rate-driven gear downshifts are evaluated against
 //!   the *maximum* fleet (`ControlState::step_fleet`), so the coupled
 //!   controller prefers renting replicas over trading accuracy and
-//!   only downshifts when even the full fleet cannot carry the load.
+//!   only downshifts when even the full fleet cannot carry the load;
+//! * [`tiered`] -- [`TieredAutoscaler`]: the heterogeneous-fleet loop
+//!   for `coordinator::router::TieredFleet` -- each cascade level's
+//!   pool is sized independently against its own arrival rate (tier
+//!   N's arrivals are tier N-1's deferrals), and decisions are priced
+//!   in dollars via `cost::rental` (per-tier GPU classes, optional
+//!   fleet-wide $/hour budget granted cheapest-tier-first).
 //!
 //! The replica lifecycle itself (`Warming -> Live -> Draining ->
 //! Retired`, graceful drain, exactly-once guarantees, the
@@ -39,6 +45,8 @@
 
 pub mod autoscaler;
 pub mod policy;
+pub mod tiered;
 
 pub use autoscaler::Autoscaler;
 pub use policy::ScaleConfig;
+pub use tiered::{FleetScaleConfig, TierScale, TieredAutoscaler};

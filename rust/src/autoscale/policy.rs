@@ -37,8 +37,8 @@ impl Default for ScaleConfig {
         ScaleConfig {
             min_replicas: 1,
             max_replicas: 4,
-            scale_up_util: 0.85,
-            scale_down_util: 0.60,
+            scale_up_util: crate::types::UTIL_HIGH_WATERMARK,
+            scale_down_util: crate::types::UTIL_LOW_WATERMARK,
             warmup: std::time::Duration::ZERO,
         }
     }

@@ -1,0 +1,437 @@
+//! Per-tier autoscaling for the [`TieredFleet`], priced in dollars.
+//!
+//! The monolithic [`crate::autoscale::Autoscaler`] sizes ONE pool whose
+//! replicas all run the whole cascade.  A tiered fleet has one pool per
+//! cascade level, and each level sees a different arrival process:
+//! tier N's arrivals ARE tier N-1's deferrals.  Because every tier pool
+//! keeps its own metrics registry, a per-tier [`Sampler`] measures
+//! exactly that deferral stream (submitted + shed deltas on the tier's
+//! own pool), and each tier is sized independently against its own
+//! load with the shared [`ScaleConfig`] policy -- same watermarks, same
+//! hysteresis band, separate dwell clocks (tier fleets are independent
+//! capacity pools; serialising their decisions through one clock would
+//! starve the deep tiers behind the busy front tier).
+//!
+//! What IS global is money.  Decisions are priced in dollars via
+//! `cost::rental`: every provisioned slot (Warming, Live, *and*
+//! Draining -- a machine bills until it is returned) burns its tier's
+//! GPU class rate, and an optional fleet-wide budget
+//! ([`FleetScaleConfig::max_dollars_per_hour`]) caps the total burn.
+//! Scale-ups are granted tier-ascending -- under the §5.2.2 placement
+//! that is cheapest-first, so budget pressure starves the expensive top
+//! pool last-rented-first rather than the cheap capacity that serves
+//! most traffic.  Drains are always allowed (they only return money).
+//!
+//! The decision core is [`decide_fleet`], a pure function of (states,
+//! config, per-tier observations and counts, dt) -- unit-tested below
+//! without threads; the thread half samples, applies, and records one
+//! `EventLog` entry per action (the event's gear fields carry the tier
+//! index; a tiered fleet has no gears).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::autoscale::policy::ScaleConfig;
+use crate::coordinator::router::TieredFleet;
+use crate::cost::rental::Gpu;
+use crate::metrics::EventKind;
+use crate::planner::controller::{Observation, Sampler, Trigger};
+
+/// Scaling knobs for one tier's pool.
+#[derive(Debug, Clone, Copy)]
+pub struct TierScale {
+    /// Bounds + watermarks + warmup for this tier (min/max here should
+    /// match the pool's own `PoolConfig` bounds).
+    pub scale: ScaleConfig,
+    /// Offered load one replica of this tier sustains (rows/s of the
+    /// TIER's stage, not the whole cascade).  The rate-driven sizing
+    /// divides by it; measure it (e.g. `StagedSynthetic::
+    /// stage_capacity_rps`) or take it from a plan's per-tier quote.
+    pub per_replica_rps: f64,
+}
+
+/// Fleet-wide autoscaler configuration.
+#[derive(Debug, Clone)]
+pub struct FleetScaleConfig {
+    /// One entry per cascade level, tier 1 first.
+    pub tiers: Vec<TierScale>,
+    /// Fleet burn-rate budget in $/hour; 0 disables the cap.  Warming,
+    /// Live and Draining slots all count against it (a rented machine
+    /// bills until returned).
+    pub max_dollars_per_hour: f64,
+    /// Metrics sampling period.
+    pub sample_every: Duration,
+    /// Minimum time between scale actions PER TIER.
+    pub dwell: Duration,
+    /// Queue-pressure watermark (fraction of a tier's admission
+    /// capacity) that forces a one-replica kicker.
+    pub queue_pressure: f64,
+    /// Per-sample EWMA smoothing factor in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+impl FleetScaleConfig {
+    pub fn validate(&self) {
+        assert!(!self.tiers.is_empty(), "fleet scale config needs tiers");
+        for t in &self.tiers {
+            t.scale.validate();
+        }
+        assert!(self.max_dollars_per_hour >= 0.0);
+        assert!(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0);
+        assert!(self.queue_pressure > 0.0);
+    }
+}
+
+/// One tier's controller state (EWMA + its own dwell clock).
+#[derive(Debug, Clone, Copy)]
+pub struct TierState {
+    ewma_rps: f64,
+    since_action_s: f64,
+}
+
+impl TierState {
+    /// Dwell starts satisfied, like `ControlState::new`: a fleet dropped
+    /// into an overload reacts on the first sample.
+    pub fn new(cfg: &FleetScaleConfig) -> TierState {
+        TierState {
+            ewma_rps: 0.0,
+            since_action_s: cfg.dwell.as_secs_f64(),
+        }
+    }
+
+    pub fn ewma_rps(&self) -> f64 {
+        self.ewma_rps
+    }
+}
+
+/// One applied-or-proposed resize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierDecision {
+    /// Cascade level (0-based).
+    pub tier: usize,
+    /// Target fleet size (Warming + Live) for that tier's pool.
+    pub target: usize,
+    pub trigger: Trigger,
+}
+
+/// Per-tier slot counts the decision consumes: (warming, live,
+/// draining), as returned by `ReplicaPool::counts`.
+pub type TierCounts = (usize, usize, usize);
+
+/// The pure fleet decision: fold one observation per tier into its
+/// state, size each tier independently, then clamp scale-ups to the
+/// dollar budget tier-ascending.  Mutates `states` (EWMA, dwell) the
+/// way the thread would.
+pub fn decide_fleet(
+    states: &mut [TierState],
+    cfg: &FleetScaleConfig,
+    gpus: &[Gpu],
+    obs: &[Observation],
+    counts: &[TierCounts],
+    dt_s: f64,
+) -> Vec<TierDecision> {
+    assert_eq!(states.len(), cfg.tiers.len());
+    assert_eq!(obs.len(), cfg.tiers.len());
+    assert_eq!(counts.len(), cfg.tiers.len());
+    assert_eq!(gpus.len(), cfg.tiers.len());
+    // current burn: every provisioned slot bills, draining included
+    let mut bill: f64 = counts
+        .iter()
+        .zip(gpus)
+        .map(|(&(w, l, d), g)| (w + l + d) as f64 * g.dollars_per_hour())
+        .sum();
+    let dwell_s = cfg.dwell.as_secs_f64();
+    let mut out = Vec::new();
+    for i in 0..cfg.tiers.len() {
+        let (warming, live, _) = counts[i];
+        let state = &mut states[i];
+        state.ewma_rps = cfg.ewma_alpha * obs[i].arrival_rps
+            + (1.0 - cfg.ewma_alpha) * state.ewma_rps;
+        state.since_action_s += dt_s.max(0.0);
+        if state.since_action_s < dwell_s {
+            continue;
+        }
+        let tier = &cfg.tiers[i];
+        let fleet = live + warming;
+        // the pressure kicker only fires when nothing is already
+        // warming (capacity in flight will relieve the same debt)
+        let pressured =
+            obs[i].outstanding_frac > cfg.queue_pressure && warming == 0;
+        let mut target =
+            tier.scale
+                .target(state.ewma_rps, tier.per_replica_rps, fleet, pressured);
+        if target > fleet && cfg.max_dollars_per_hour > 0.0 {
+            // grant what the budget affords; earlier (cheaper, under the
+            // §5.2.2 placement) tiers were served first and already
+            // consumed their share of `bill`
+            let price = gpus[i].dollars_per_hour();
+            let headroom = (cfg.max_dollars_per_hour - bill).max(0.0);
+            let affordable = (headroom / price).floor() as usize;
+            target = fleet + (target - fleet).min(affordable);
+        }
+        if target > fleet {
+            bill += (target - fleet) as f64 * gpus[i].dollars_per_hour();
+            let trigger = if pressured { Trigger::Pressure } else { Trigger::Rate };
+            out.push(TierDecision { tier: i, target, trigger });
+            state.since_action_s = 0.0;
+        } else if target < live {
+            // drains return money only once the replica retires; do not
+            // discount `bill` yet -- the next tick sees the real counts
+            out.push(TierDecision { tier: i, target, trigger: Trigger::Rate });
+            state.since_action_s = 0.0;
+        }
+    }
+    out
+}
+
+/// Handle to a running tiered-autoscaler thread; stops and joins on
+/// drop.
+pub struct TieredAutoscaler {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl TieredAutoscaler {
+    /// Spawn the per-tier control loop over a fleet.  `cfg.tiers` must
+    /// match the fleet's tier count.
+    pub fn spawn(fleet: Arc<TieredFleet>, cfg: FleetScaleConfig) -> TieredAutoscaler {
+        cfg.validate();
+        assert_eq!(
+            cfg.tiers.len(),
+            fleet.n_tiers(),
+            "scale config has {} tiers, fleet has {}",
+            cfg.tiers.len(),
+            fleet.n_tiers()
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let stopf = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("abc-tiered-autoscaler".into())
+            .spawn(move || scale_loop(&fleet, &cfg, &stopf))
+            .expect("spawn tiered autoscaler");
+        TieredAutoscaler { stop, join: Some(join) }
+    }
+
+    /// Ask the thread to exit and wait for it.  Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TieredAutoscaler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn scale_loop(fleet: &TieredFleet, cfg: &FleetScaleConfig, stop: &AtomicBool) {
+    let metrics = Arc::clone(fleet.metrics());
+    let scale_ups = metrics.counter("scale_up_total");
+    let scale_downs = metrics.counter("scale_down_total");
+    let gpus: Vec<Gpu> = fleet.tiers().iter().map(|t| t.gpu()).collect();
+    // one sampler per tier, over the TIER's registry: its submitted +
+    // shed deltas are exactly the upstream tier's deferral stream
+    let mut samplers: Vec<Sampler> = fleet
+        .tiers()
+        .iter()
+        .map(|t| Sampler::new(t.pool().metrics()))
+        .collect();
+    let mut states: Vec<TierState> =
+        (0..fleet.n_tiers()).map(|_| TierState::new(cfg)).collect();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.sample_every);
+        // lifecycle first so this tick's counts are current
+        fleet.advance(Instant::now());
+        let mut obs = Vec::with_capacity(fleet.n_tiers());
+        let mut counts = Vec::with_capacity(fleet.n_tiers());
+        let mut dt_s = 0.0f64;
+        for (i, t) in fleet.tiers().iter().enumerate() {
+            let (o, dt) = samplers[i].sample(t.pool());
+            obs.push(o);
+            counts.push(t.pool().counts());
+            dt_s = dt_s.max(dt);
+        }
+        let decisions = decide_fleet(&mut states, cfg, &gpus, &obs, &counts, dt_s);
+        for d in &decisions {
+            let (warming, live, _) = counts[d.tier];
+            let fleet_size = warming + live;
+            let tier_pool = fleet.tier(d.tier).pool();
+            if d.target > fleet_size {
+                tier_pool.scale_up(
+                    d.target - fleet_size,
+                    cfg.tiers[d.tier].scale.warmup,
+                );
+                scale_ups.inc();
+            } else {
+                tier_pool.drain(live - d.target);
+                scale_downs.inc();
+            }
+            // the event's gear fields carry the tier index (no gears in
+            // a tiered fleet)
+            metrics.events().record(
+                EventKind::Scale,
+                d.trigger.name(),
+                d.tier,
+                d.tier,
+                fleet_size,
+                d.target,
+            );
+        }
+        fleet.refresh_gauges();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg3() -> FleetScaleConfig {
+        let tier = |min: usize, max: usize, rps: f64| TierScale {
+            scale: ScaleConfig {
+                min_replicas: min,
+                max_replicas: max,
+                warmup: Duration::ZERO,
+                ..ScaleConfig::default()
+            },
+            per_replica_rps: rps,
+        };
+        FleetScaleConfig {
+            // cheap fast front tier, midsize interior, slow top
+            tiers: vec![tier(1, 4, 2000.0), tier(1, 4, 1000.0), tier(1, 4, 400.0)],
+            max_dollars_per_hour: 0.0,
+            sample_every: Duration::from_millis(10),
+            dwell: Duration::from_millis(100),
+            queue_pressure: 0.5,
+            ewma_alpha: 1.0,
+        }
+    }
+
+    fn gpus() -> Vec<Gpu> {
+        vec![Gpu::V100, Gpu::A6000, Gpu::H100]
+    }
+
+    fn obs(rps: f64) -> Observation {
+        Observation { arrival_rps: rps, outstanding_frac: 0.0, p99_s: f64::NAN }
+    }
+
+    fn states(cfg: &FleetScaleConfig) -> Vec<TierState> {
+        (0..cfg.tiers.len()).map(|_| TierState::new(cfg)).collect()
+    }
+
+    #[test]
+    fn tiers_size_independently_against_their_own_arrivals() {
+        let cfg = cfg3();
+        let mut st = states(&cfg);
+        // tier arrivals thin out down the cascade: 3000 offered, 40%
+        // defer to tier 2, a third of that reaches the top
+        let o = [obs(3000.0), obs(1200.0), obs(400.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        // 3000/(2000*0.85) -> 2; 1200/(1000*0.85) -> 2; 400/(400*0.85) -> 2
+        assert_eq!(
+            d,
+            vec![
+                TierDecision { tier: 0, target: 2, trigger: Trigger::Rate },
+                TierDecision { tier: 1, target: 2, trigger: Trigger::Rate },
+                TierDecision { tier: 2, target: 2, trigger: Trigger::Rate },
+            ]
+        );
+        // a calm interior tier is left alone while the top grows
+        let mut st = states(&cfg);
+        let o = [obs(1000.0), obs(100.0), obs(700.0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(
+            d,
+            vec![TierDecision { tier: 2, target: 3, trigger: Trigger::Rate }]
+        );
+    }
+
+    #[test]
+    fn dwell_gates_each_tier_separately() {
+        let cfg = cfg3();
+        let mut st = states(&cfg);
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        // first decision consumes tier 0's dwell only
+        let o = [obs(3000.0), obs(0.0), obs(0.0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(d.len(), 1);
+        // immediately after, tier 0 is blocked but tier 2 can still act
+        let o = [obs(3000.0), obs(0.0), obs(700.0)];
+        let c2 = [(0, 2, 0), (0, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c2, 0.01);
+        assert_eq!(
+            d,
+            vec![TierDecision { tier: 2, target: 3, trigger: Trigger::Rate }]
+        );
+    }
+
+    #[test]
+    fn queue_pressure_kicks_a_tier_without_rate_evidence() {
+        let cfg = cfg3();
+        let mut st = states(&cfg);
+        let jammed =
+            Observation { arrival_rps: 5.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        let o = [obs(5.0), jammed, obs(5.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(
+            d,
+            vec![TierDecision { tier: 1, target: 2, trigger: Trigger::Pressure }]
+        );
+        // warming capacity suppresses the kicker
+        let mut st = states(&cfg);
+        let c = [(0, 1, 0), (1, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn dollar_budget_clamps_cheapest_first() {
+        let mut cfg = cfg3();
+        // current bill: 1xV100 + 1xA6000 + 1xH100 = 3.79 $/h.  Budget
+        // leaves 1.60 of headroom: tier 0 can afford 3 more V100s
+        // (1.50), then nothing is left for the H100 the top tier wants.
+        cfg.max_dollars_per_hour = 5.39;
+        let mut st = states(&cfg);
+        let o = [obs(6000.0), obs(0.0), obs(3000.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(
+            d,
+            vec![TierDecision { tier: 0, target: 4, trigger: Trigger::Rate }],
+            "cheap tier funded, expensive tier starved"
+        );
+        // drains are always allowed: they only return money
+        let mut st = states(&cfg);
+        let o = [obs(0.0), obs(0.0), obs(0.0)];
+        let c = [(0, 4, 0), (0, 1, 0), (0, 2, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.target == 1));
+        // draining slots still count against the budget: with 3 slots
+        // draining elsewhere the headroom is gone entirely
+        let mut cfg2 = cfg3();
+        cfg2.max_dollars_per_hour = 4.0;
+        let mut st = states(&cfg2);
+        let o = [obs(6000.0), obs(0.0), obs(0.0)];
+        let c = [(0, 1, 0), (0, 1, 3), (0, 1, 0)]; // 3 A6000s draining
+        let d = decide_fleet(&mut st, &cfg2, &gpus(), &o, &c, 0.2);
+        assert!(d.is_empty(), "budget must count draining slots: {d:?}");
+    }
+
+    #[test]
+    fn unbounded_budget_never_clamps() {
+        let cfg = cfg3(); // max_dollars_per_hour = 0
+        let mut st = states(&cfg);
+        let o = [obs(1e9), obs(1e9), obs(1e9)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let d = decide_fleet(&mut st, &cfg, &gpus(), &o, &c, 0.2);
+        assert_eq!(d.len(), 3);
+        assert!(d.iter().all(|x| x.target == 4), "max bound still applies");
+    }
+}

@@ -62,6 +62,95 @@ pub trait BatchClassifier: Send + Sync {
     }
 }
 
+/// Per-sample outcome of ONE tier's pass over a (sub-)batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageResult {
+    /// Deferral-rule score observed at this tier.
+    pub score: f32,
+    /// `Some(prediction)`: the sample exits at this tier; `None`: defer
+    /// to the next tier.  The final tier never returns `None`.
+    pub decision: Option<Label>,
+}
+
+/// Stage-wise execution: run ONE cascade tier over a batch and report
+/// per-row exit/defer decisions, without touching any other tier.
+///
+/// This is the unit both execution layouts are built from:
+/// * **monolithic** -- [`classify_batch_staged`] drives every stage
+///   in-process over the active subset (what `Cascade::classify_batch`
+///   does on a single replica);
+/// * **tiered** -- `coordinator::router::TieredFleet` puts each stage
+///   behind its own `ReplicaPool` (its own GPU class, queue and
+///   autoscaling) and routes deferrals between pools.
+///
+/// Both layouts MUST produce identical results on the same inputs and
+/// thetas (property-tested in rust/tests/coordinator_props.rs and
+/// rust/tests/tiered_integration.rs).
+pub trait StageClassifier: BatchClassifier {
+    /// Run tier `level0` (0-based) on `n` row-major rows.  `theta`
+    /// overrides the tier's calibrated threshold when given (the active
+    /// gear's theta); the final tier ignores it and always exits.
+    fn classify_stage(
+        &self,
+        level0: usize,
+        features: &[f32],
+        n: usize,
+        theta: Option<f32>,
+    ) -> Result<Vec<StageResult>>;
+}
+
+/// Drive a [`StageClassifier`] through the full sieve: run stage 0 on
+/// everything, gather the deferred subset (with its original indices),
+/// run stage 1 on it, and so on.  This IS the monolithic cascade
+/// execution -- `Cascade::classify_batch` delegates here -- and the
+/// degenerate one-pool case of the tiered fleet's routed handoff.
+pub fn classify_batch_staged(
+    stage: &dyn StageClassifier,
+    features: &[f32],
+    n: usize,
+    thetas: Option<&[f32]>,
+) -> Result<Vec<CascadeResult>> {
+    let dim = stage.dim();
+    assert_eq!(features.len(), n * dim, "feature buffer size");
+    let n_levels = stage.n_levels();
+    let mut results: Vec<Option<CascadeResult>> = vec![None; n];
+    // indices of samples still in flight
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut active_scores: Vec<Vec<f32>> = vec![Vec::new(); n];
+    for level0 in 0..n_levels {
+        if active.is_empty() {
+            break;
+        }
+        // gather the active subset
+        let mut sub = Vec::with_capacity(active.len() * dim);
+        for &i in &active {
+            sub.extend_from_slice(&features[i * dim..(i + 1) * dim]);
+        }
+        let theta = thetas.and_then(|ts| ts.get(level0)).copied();
+        let outs = stage.classify_stage(level0, &sub, active.len(), theta)?;
+        let mut still_active = Vec::new();
+        for (j, &i) in active.iter().enumerate() {
+            active_scores[i].push(outs[j].score);
+            match outs[j].decision {
+                Some(prediction) => {
+                    results[i] = Some(CascadeResult {
+                        prediction,
+                        exit_level: level0 + 1,
+                        scores: std::mem::take(&mut active_scores[i]),
+                    });
+                }
+                None => still_active.push(i),
+            }
+        }
+        active = still_active;
+    }
+    debug_assert!(active.is_empty(), "final tier must accept everything");
+    Ok(results
+        .into_iter()
+        .map(|r| r.expect("all samples resolved"))
+        .collect())
+}
+
 /// A cascade of loaded tier executables + its deferral policy.
 pub struct Cascade {
     tiers: Vec<Arc<TierExecutable>>,
@@ -88,6 +177,18 @@ impl BatchClassifier for Cascade {
         gear: &crate::planner::gear::GearConfig,
     ) -> Result<Vec<CascadeResult>> {
         self.classify_batch_with(features, n, Some(&gear.thetas))
+    }
+}
+
+impl StageClassifier for Cascade {
+    fn classify_stage(
+        &self,
+        level0: usize,
+        features: &[f32],
+        n: usize,
+        theta: Option<f32>,
+    ) -> Result<Vec<StageResult>> {
+        Cascade::classify_stage(self, level0, features, n, theta)
     }
 }
 
@@ -120,64 +221,54 @@ impl Cascade {
     /// gear's thetas; see `planner`).  `thetas[i]` replaces the
     /// calibrated threshold of tier `i+1` when present; tiers past the
     /// override slice -- and always the final tier -- keep their policy
-    /// behaviour.
+    /// behaviour.  Implemented as the stage-wise sieve driver over
+    /// [`Cascade::classify_stage`], so monolithic execution and the
+    /// tiered fleet's routed execution share one code path.
     pub fn classify_batch_with(
         &self,
         features: &[f32],
         n: usize,
         thetas: Option<&[f32]>,
     ) -> Result<Vec<CascadeResult>> {
-        let dim = self.tiers[0].dim;
-        assert_eq!(features.len(), n * dim, "feature buffer size");
-        let mut results: Vec<Option<CascadeResult>> = vec![None; n];
-        // indices of samples still in flight
-        let mut active: Vec<usize> = (0..n).collect();
-        let mut active_scores: Vec<Vec<f32>> = vec![Vec::new(); n];
+        classify_batch_staged(self, features, n, thetas)
+    }
 
-        for (level0, tier) in self.tiers.iter().enumerate() {
-            if active.is_empty() {
-                break;
+    /// Run ONE tier over `n` rows (see [`StageClassifier`]).  The rule
+    /// kind stays the policy's; only theta is overridden, and never for
+    /// the final tier (it must accept everything).
+    pub fn classify_stage(
+        &self,
+        level0: usize,
+        features: &[f32],
+        n: usize,
+        theta: Option<f32>,
+    ) -> Result<Vec<StageResult>> {
+        let tier = &self.tiers[level0];
+        assert_eq!(features.len(), n * tier.dim, "feature buffer size");
+        let last = level0 + 1 == self.tiers.len();
+        let over = match (theta, self.policy.rule(level0)) {
+            (Some(theta), Some(r)) if !last => {
+                Some(crate::coordinator::deferral::TierRule { rule: r.rule, theta })
             }
-            // the rule kind stays the policy's; only theta is overridden,
-            // and never for the final tier (it must accept everything)
-            let over = match (thetas, self.policy.rule(level0)) {
-                (Some(ts), Some(r)) if level0 + 1 < self.tiers.len() => ts
-                    .get(level0)
-                    .map(|&theta| crate::coordinator::deferral::TierRule {
-                        rule: r.rule,
-                        theta,
-                    }),
-                _ => None,
-            };
-            // gather the active subset
-            let mut sub = Vec::with_capacity(active.len() * dim);
-            for &i in &active {
-                sub.extend_from_slice(&features[i * dim..(i + 1) * dim]);
-            }
-            let outs = tier.run(&sub, active.len())?;
-            let mut still_active = Vec::new();
-            for (j, &i) in active.iter().enumerate() {
-                let out = &outs[j];
-                active_scores[i].push(self.policy.score(level0, out));
+            _ => None,
+        };
+        let outs = tier.run(features, n)?;
+        Ok(outs
+            .iter()
+            .map(|out| {
                 let decision = match &over {
                     Some(rule) => rule.decide(out),
                     None => self.policy.decide(level0, out),
                 };
-                match decision {
-                    Decision::Accept => {
-                        results[i] = Some(CascadeResult {
-                            prediction: out.majority,
-                            exit_level: level0 + 1,
-                            scores: std::mem::take(&mut active_scores[i]),
-                        });
-                    }
-                    Decision::Defer => still_active.push(i),
+                StageResult {
+                    score: self.policy.score(level0, out),
+                    decision: match decision {
+                        Decision::Accept => Some(out.majority),
+                        Decision::Defer => None,
+                    },
                 }
-            }
-            active = still_active;
-        }
-        debug_assert!(active.is_empty(), "final tier must accept everything");
-        Ok(results.into_iter().map(|r| r.expect("all samples resolved")).collect())
+            })
+            .collect())
     }
 
     /// Classify and score against labels.

@@ -1,6 +1,7 @@
 //! The paper's L3 contribution: agreement-based deferral, the cascade
-//! controller (Algorithm 1), dynamic batching, the serving pipeline, and
-//! the replicated serving pool with admission control.
+//! controller (Algorithm 1), dynamic batching, the serving pipeline, the
+//! replicated serving pool with admission control, and the tiered fleet
+//! (pool-per-tier with routed deferral, `router`).
 
 pub mod agreement;
 pub mod batcher;
@@ -8,3 +9,4 @@ pub mod cascade;
 pub mod deferral;
 pub mod pipeline;
 pub mod replica;
+pub mod router;

@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::cascade::BatchClassifier;
 use crate::coordinator::pipeline::{Pipeline, SubmitRejection};
+use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
 use crate::planner::gear::GearHandle;
 use crate::types::{Request, Verdict};
@@ -69,11 +70,31 @@ pub struct PoolConfig {
     pub max_queue: usize,
     /// Batching policy for every replica.
     pub batcher: BatcherConfig,
+    /// GPU class every replica of this pool rents (prices the pool's
+    /// `replica_seconds` in dollars; see [`ReplicaPool::dollars`]).  A
+    /// monolithic pool runs the whole cascade, so it must be provisioned
+    /// for the top model -- hence the expensive default.  Tiered fleets
+    /// give each tier's pool its own class (`coordinator::router`).
+    pub gpu: Gpu,
+    /// Hard floor on Live replicas: `drain` never takes the fleet below
+    /// it (1 preserves the pre-tiered "never drain the last Live
+    /// replica" guarantee).
+    pub min_replicas: usize,
+    /// Hard ceiling on total slots: `scale_up` clamps provisioning so
+    /// the pool never holds more (Warming + Live + Draining).
+    pub max_replicas: usize,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { replicas: 1, max_queue: 256, batcher: BatcherConfig::default() }
+        PoolConfig {
+            replicas: 1,
+            max_queue: 256,
+            batcher: BatcherConfig::default(),
+            gpu: Gpu::H100,
+            min_replicas: 1,
+            max_replicas: usize::MAX,
+        }
     }
 }
 
@@ -189,6 +210,9 @@ pub struct ReplicaPool {
     slots: RwLock<Vec<Arc<ReplicaSlot>>>,
     next_id: AtomicUsize,
     max_queue: usize,
+    gpu: Gpu,
+    min_replicas: usize,
+    max_replicas: usize,
     shed_counter: Arc<crate::metrics::Counter>,
     retired_counter: Arc<crate::metrics::Counter>,
     /// Accumulated replica-seconds of retired replicas; active replicas
@@ -233,6 +257,19 @@ impl ReplicaPool {
     ) -> ReplicaPool {
         assert!(cfg.replicas > 0, "pool needs at least one replica");
         assert!(cfg.max_queue > 0, "max_queue must be > 0");
+        assert!(cfg.min_replicas >= 1, "min_replicas must be >= 1");
+        assert!(
+            cfg.min_replicas <= cfg.max_replicas,
+            "min_replicas {} > max_replicas {}",
+            cfg.min_replicas,
+            cfg.max_replicas
+        );
+        assert!(
+            cfg.replicas <= cfg.max_replicas,
+            "replicas {} > max_replicas {}",
+            cfg.replicas,
+            cfg.max_replicas
+        );
         let pool = ReplicaPool {
             classifier,
             batcher: cfg.batcher,
@@ -240,6 +277,9 @@ impl ReplicaPool {
             slots: RwLock::new(Vec::new()),
             next_id: AtomicUsize::new(0),
             max_queue: cfg.max_queue,
+            gpu: cfg.gpu,
+            min_replicas: cfg.min_replicas,
+            max_replicas: cfg.max_replicas,
             shed_counter: metrics.counter("requests_shed"),
             retired_counter: metrics.counter("replicas_retired"),
             retired_seconds: Mutex::new(0.0),
@@ -277,15 +317,18 @@ impl ReplicaPool {
         })
     }
 
-    /// Provision `n` new replicas.  With a zero `warmup` they are Live
+    /// Provision `n` new replicas (clamped so total slots never exceed
+    /// the pool's `max_replicas`).  With a zero `warmup` they are Live
     /// immediately; otherwise they start Warming and [`advance`]
     /// promotes them once the warm-up elapses.  Returns the new ids.
     /// The rental clock starts now either way.
     ///
     /// [`advance`]: ReplicaPool::advance
     pub fn scale_up(&self, n: usize, warmup: Duration) -> Vec<usize> {
-        let mut created = Vec::with_capacity(n);
         let mut slots = self.slots.write().unwrap();
+        let room = self.max_replicas.saturating_sub(slots.len());
+        let n = n.min(room);
+        let mut created = Vec::with_capacity(n);
         for _ in 0..n {
             let slot = self.spawn_slot(warmup);
             created.push(slot.id);
@@ -299,13 +342,15 @@ impl ReplicaPool {
     /// draining replica stops admitting -- any `submit` that starts
     /// after this returns will never route to it -- but keeps executing
     /// until its queue empties, at which point [`advance`] retires it.
-    /// Never drains the last Live replica.  Returns the drained ids.
+    /// Never drains below the pool's `min_replicas` Live floor (1 by
+    /// default: the last Live replica is protected).  Returns the
+    /// drained ids.
     ///
     /// [`advance`]: ReplicaPool::advance
     pub fn drain(&self, n: usize) -> Vec<usize> {
         // WRITE lock: concurrent drain() calls must serialise, or two
         // callers could each see 2 Live replicas and between them drain
-        // both -- violating the last-Live guarantee.  (scale_up and
+        // both -- violating the Live-floor guarantee.  (scale_up and
         // retirement also hold the write lock, so the Live set cannot
         // shift under us.)
         let slots = self.slots.write().unwrap();
@@ -313,7 +358,7 @@ impl ReplicaPool {
             .iter()
             .filter(|s| s.state() == ReplicaState::Live)
             .collect();
-        let allowed = n.min(live.len().saturating_sub(1));
+        let allowed = n.min(live.len().saturating_sub(self.min_replicas.max(1)));
         live.sort_by_key(|s| s.pipeline.outstanding());
         let mut drained = Vec::new();
         for slot in live.into_iter().take(allowed) {
@@ -420,6 +465,25 @@ impl ReplicaPool {
             .map(|s| s.started.elapsed().as_secs_f64())
             .sum();
         active + *self.retired_seconds.lock().unwrap()
+    }
+
+    /// The GPU class this pool's replicas rent.
+    pub fn gpu(&self) -> Gpu {
+        self.gpu
+    }
+
+    /// Rental dollars this pool has accrued: [`replica_seconds`] priced
+    /// at the pool's GPU class (paper Table 4 $/hour).
+    ///
+    /// [`replica_seconds`]: ReplicaPool::replica_seconds
+    pub fn dollars(&self) -> f64 {
+        self.gpu.dollars_for(self.replica_seconds())
+    }
+
+    /// Current burn rate in $/hour: every provisioned slot (Warming +
+    /// Live + Draining) bills at the pool's GPU class.
+    pub fn dollars_per_hour(&self) -> f64 {
+        self.n_slots() as f64 * self.gpu.dollars_per_hour()
     }
 
     /// Per-replica diagnostic snapshot (id, state, outstanding,
@@ -617,7 +681,11 @@ mod tests {
     fn pool_serves_basic_requests() {
         let pool = ReplicaPool::spawn(
             synth(10),
-            PoolConfig { replicas: 2, max_queue: 16, batcher: BatcherConfig::default() },
+            PoolConfig {
+                replicas: 2,
+                max_queue: 16,
+                ..PoolConfig::default()
+            },
             Metrics::new(),
         );
         for id in 0..20 {
@@ -653,6 +721,7 @@ mod tests {
                     max_batch: 1,
                     max_wait: Duration::from_micros(100),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
         );
@@ -693,6 +762,7 @@ mod tests {
                     max_batch: 4,
                     max_wait: Duration::from_micros(200),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
             Arc::clone(&handle),
@@ -736,6 +806,7 @@ mod tests {
                     max_batch: 4,
                     max_wait: Duration::from_millis(1),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
         );
@@ -756,7 +827,11 @@ mod tests {
     fn scale_up_warms_then_goes_live() {
         let pool = ReplicaPool::spawn(
             synth(10),
-            PoolConfig { replicas: 1, max_queue: 16, batcher: BatcherConfig::default() },
+            PoolConfig {
+                replicas: 1,
+                max_queue: 16,
+                ..PoolConfig::default()
+            },
             Metrics::new(),
         );
         assert_eq!(pool.counts(), (0, 1, 0));
@@ -785,6 +860,7 @@ mod tests {
                     max_batch: 1,
                     max_wait: Duration::from_micros(100),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
         );
@@ -812,6 +888,7 @@ mod tests {
                     max_batch: 2,
                     max_wait: Duration::from_micros(200),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
         );
@@ -867,7 +944,11 @@ mod tests {
     fn drain_never_takes_the_last_live_replica() {
         let pool = ReplicaPool::spawn(
             synth(10),
-            PoolConfig { replicas: 2, max_queue: 8, batcher: BatcherConfig::default() },
+            PoolConfig {
+                replicas: 2,
+                max_queue: 8,
+                ..PoolConfig::default()
+            },
             Metrics::new(),
         );
         assert_eq!(pool.drain(5).len(), 1, "only one of two may drain");
@@ -877,10 +958,64 @@ mod tests {
     }
 
     #[test]
+    fn pool_bounds_clamp_scale_up_and_drain() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig {
+                replicas: 2,
+                max_queue: 8,
+                min_replicas: 2,
+                max_replicas: 3,
+                ..PoolConfig::default()
+            },
+            Metrics::new(),
+        );
+        // scale_up clamps at max_replicas slots
+        let ids = pool.scale_up(5, Duration::ZERO);
+        assert_eq!(ids.len(), 1, "only one slot of headroom");
+        assert_eq!(pool.n_slots(), 3);
+        assert!(pool.scale_up(1, Duration::ZERO).is_empty());
+        // drain respects the min_replicas Live floor (not just last-Live)
+        assert_eq!(pool.drain(5).len(), 1);
+        assert_eq!(pool.drain(5).len(), 0, "floor of 2 Live replicas holds");
+        assert_eq!(pool.counts().1, 2);
+        pool.infer(req(1)).unwrap();
+    }
+
+    #[test]
+    fn dollars_price_replica_seconds_at_the_pool_gpu() {
+        use crate::cost::rental::Gpu;
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig {
+                replicas: 2,
+                max_queue: 8,
+                gpu: Gpu::V100,
+                ..PoolConfig::default()
+            },
+            Metrics::new(),
+        );
+        assert_eq!(pool.gpu(), Gpu::V100);
+        std::thread::sleep(Duration::from_millis(20));
+        let rs = pool.replica_seconds();
+        let d = pool.dollars();
+        assert!(d > 0.0);
+        // the clock keeps running between the two reads: allow a loose
+        // margin, the price factor is what matters
+        assert!((d - rs / 3600.0 * 0.50).abs() < 1e-5, "{d} vs {rs}");
+        // burn rate counts every provisioned slot at the class price
+        assert!((pool.dollars_per_hour() - 2.0 * 0.50).abs() < 1e-12);
+    }
+
+    #[test]
     fn replica_seconds_accumulate_across_retirement() {
         let pool = ReplicaPool::spawn(
             synth(10),
-            PoolConfig { replicas: 2, max_queue: 8, batcher: BatcherConfig::default() },
+            PoolConfig {
+                replicas: 2,
+                max_queue: 8,
+                ..PoolConfig::default()
+            },
             Metrics::new(),
         );
         std::thread::sleep(Duration::from_millis(20));

@@ -1,0 +1,642 @@
+//! Tiered fleet: one [`ReplicaPool`] per cascade level, deferral as an
+//! explicit routed handoff between pools.
+//!
+//! The monolithic serving path runs the ENTIRE cascade inside every
+//! replica (`Cascade::classify_batch` on one `ReplicaPool` slot), so
+//! every machine must be provisioned for the top model even though most
+//! requests exit at tier 1.  The paper's §5.2.2 rental-cost win comes
+//! from the opposite layout: cheap GPUs serve the cheap tiers, one
+//! small expensive pool serves the rarely-reached top model.  This
+//! module is that layout:
+//!
+//! ```text
+//!             +--------------+  defer  +--------------+  defer  +-------------+
+//!  request -> | tier-1 pool  | ------> | tier-2 pool  | ------> | top pool    |
+//!             | V100 x N1    |  exit   | A6000 x N2   |  exit   | H100 x N3   |
+//!             +--------------+   |     +--------------+   |     +-------------+
+//!                                v                        v            |
+//!                              verdict                  verdict      verdict
+//! ```
+//!
+//! Each tier pool is an ordinary [`ReplicaPool`] (bounded queues,
+//! least-outstanding dispatch, Warming/Live/Draining lifecycle, its own
+//! `replica_seconds` rental clock priced at its own [`Gpu`] class) over
+//! a [`StageAdapter`]: a `BatchClassifier` that runs exactly ONE
+//! [`StageClassifier`] stage and encodes "defer" as the reserved exit
+//! level [`DEFERRED`].  The fleet's router submits a request to tier
+//! 1's pool, reads the stage verdict, and forwards only non-exited
+//! requests (with their ids and accumulated scores) to the next tier's
+//! pool -- the distributed form of the same sieve
+//! `classify_batch_staged` drives in-process, so both layouts produce
+//! identical results (rust/tests/tiered_integration.rs).
+//!
+//! Accounting is exactly-once at the fleet boundary: every submitted
+//! request is either completed (exited at some tier) or shed (refused
+//! by some tier's admission control), never both, never lost --
+//! including across mid-run drains of interior pools (a draining
+//! replica still answers everything it admitted) and shedding at any
+//! depth.  `fleet_submitted == fleet_completed + fleet_shed` holds at
+//! quiescence.
+//!
+//! Telemetry (fleet registry): `fleet_submitted` / `fleet_completed` /
+//! `fleet_shed` counters, per-tier `tier_{i}_exited` /
+//! `tier_{i}_deferred` counters, `request_latency_s` histogram (routed
+//! end-to-end), and -- via [`TieredFleet::refresh_gauges`] -- per-tier
+//! queue depth / live replicas, per-tier exit fractions, and the fleet
+//! rental bill in dollars (`fleet_dollars`, `fleet_dollars_per_hour`).
+//! Each tier pool additionally keeps its own private registry so the
+//! per-tier autoscaler (`autoscale::tiered`) can sample per-tier
+//! arrival rates: tier N's arrivals ARE tier N-1's deferrals.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::cascade::{
+    BatchClassifier, CascadeResult, StageClassifier,
+};
+use crate::coordinator::replica::{
+    Lifecycle, PoolConfig, PoolError, ReplicaPool,
+};
+use crate::cost::rental::Gpu;
+use crate::metrics::Metrics;
+use crate::types::{Request, Verdict};
+
+/// Reserved exit level a [`StageAdapter`] reports for "defer to the
+/// next tier".  Real exit levels are 1-based, so 0 can never collide;
+/// the sentinel never escapes the fleet -- the router either forwards
+/// the request or answers with a real tier.
+pub const DEFERRED: usize = 0;
+
+/// `BatchClassifier` view of ONE stage of a [`StageClassifier`]: what a
+/// tier's `ReplicaPool` executes.  Accepted rows report the tier's
+/// 1-based global level; deferred rows report [`DEFERRED`] and carry
+/// only this tier's score.
+pub struct StageAdapter {
+    stage: Arc<dyn StageClassifier>,
+    level0: usize,
+    /// Per-tier threshold override (None = the stage's own policy).
+    theta: Option<f32>,
+}
+
+impl StageAdapter {
+    pub fn new(
+        stage: Arc<dyn StageClassifier>,
+        level0: usize,
+        theta: Option<f32>,
+    ) -> StageAdapter {
+        assert!(level0 < stage.n_levels(), "stage index out of range");
+        StageAdapter { stage, level0, theta }
+    }
+}
+
+impl BatchClassifier for StageAdapter {
+    fn dim(&self) -> usize {
+        self.stage.dim()
+    }
+
+    fn n_levels(&self) -> usize {
+        self.stage.n_levels()
+    }
+
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        Ok(self
+            .stage
+            .classify_stage(self.level0, features, n, self.theta)?
+            .into_iter()
+            .map(|r| CascadeResult {
+                prediction: r.decision.unwrap_or(0),
+                exit_level: match r.decision {
+                    Some(_) => self.level0 + 1,
+                    None => DEFERRED,
+                },
+                scores: vec![r.score],
+            })
+            .collect())
+    }
+}
+
+/// One tier of a [`TieredFleet`]: which GPU class it rents and how many
+/// replicas it starts with / may scale between.
+#[derive(Debug, Clone, Copy)]
+pub struct TierSpec {
+    /// GPU class every replica of this tier's pool rents.
+    pub gpu: Gpu,
+    /// Replicas at spawn.
+    pub replicas: usize,
+    /// Autoscaling floor (Live replicas; >= 1).
+    pub min_replicas: usize,
+    /// Autoscaling ceiling (total slots).
+    pub max_replicas: usize,
+    /// Max outstanding requests per replica before this tier sheds.
+    pub max_queue: usize,
+    /// Per-tier threshold override (None = the stage's own policy).
+    pub theta: Option<f32>,
+}
+
+impl TierSpec {
+    /// A fixed-size tier: `replicas` pinned (min == max == replicas,
+    /// floored at 1 -- a tier cannot be empty).
+    pub fn fixed(gpu: Gpu, replicas: usize, max_queue: usize) -> TierSpec {
+        let replicas = replicas.max(1);
+        TierSpec {
+            gpu,
+            replicas,
+            min_replicas: replicas,
+            max_replicas: replicas,
+            max_queue,
+            theta: None,
+        }
+    }
+
+    /// An elastic tier scaling between `min` and `max`, starting at
+    /// `min`.
+    pub fn elastic(gpu: Gpu, min: usize, max: usize, max_queue: usize) -> TierSpec {
+        TierSpec {
+            gpu,
+            replicas: min.max(1),
+            min_replicas: min.max(1),
+            max_replicas: max.max(min.max(1)),
+            max_queue,
+            theta: None,
+        }
+    }
+}
+
+/// Fleet-wide knobs.
+#[derive(Debug, Clone)]
+pub struct TieredFleetConfig {
+    /// One spec per cascade level, tier 1 first; the length must match
+    /// the stage classifier's `n_levels`.
+    pub tiers: Vec<TierSpec>,
+    /// Batching policy shared by every tier's replicas.
+    pub batcher: BatcherConfig,
+}
+
+/// One tier's pool + its fleet-level accounting handles.  Counters and
+/// gauges are resolved once at spawn so the routing hot path and the
+/// per-tick gauge publish never pay a format!/registry-lock.
+pub struct TierPool {
+    gpu: Gpu,
+    pool: Arc<ReplicaPool>,
+    exited: Arc<crate::metrics::Counter>,
+    deferred: Arc<crate::metrics::Counter>,
+    outstanding_gauge: Arc<crate::metrics::Gauge>,
+    live_gauge: Arc<crate::metrics::Gauge>,
+    exit_frac_gauge: Arc<crate::metrics::Gauge>,
+}
+
+impl TierPool {
+    /// The underlying replica pool (scale_up / drain / advance /
+    /// replica_seconds all apply per tier).
+    pub fn pool(&self) -> &Arc<ReplicaPool> {
+        &self.pool
+    }
+
+    pub fn gpu(&self) -> Gpu {
+        self.gpu
+    }
+
+    /// Requests that exited the cascade at this tier.
+    pub fn exited(&self) -> u64 {
+        self.exited.get()
+    }
+
+    /// Requests this tier deferred onward.
+    pub fn deferred(&self) -> u64 {
+        self.deferred.get()
+    }
+}
+
+/// The tiered fleet: one pool per cascade level plus the deferral
+/// router.  See the module docs for layout and guarantees.
+pub struct TieredFleet {
+    tiers: Vec<TierPool>,
+    metrics: Arc<Metrics>,
+    submitted: Arc<crate::metrics::Counter>,
+    completed: Arc<crate::metrics::Counter>,
+    shed: Arc<crate::metrics::Counter>,
+    latency: Arc<crate::metrics::Histogram>,
+    dollars_gauge: Arc<crate::metrics::Gauge>,
+    dollars_per_hour_gauge: Arc<crate::metrics::Gauge>,
+}
+
+impl TieredFleet {
+    /// Spawn one pool per cascade level over a shared stage classifier.
+    /// `metrics` is the FLEET registry (router counters, gauges, event
+    /// log); each tier pool gets its own private registry so per-tier
+    /// arrival rates stay separable for the autoscaler.
+    pub fn spawn(
+        stage: Arc<dyn StageClassifier>,
+        cfg: TieredFleetConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<TieredFleet> {
+        anyhow::ensure!(
+            cfg.tiers.len() == stage.n_levels(),
+            "fleet has {} tier specs but the cascade has {} levels",
+            cfg.tiers.len(),
+            stage.n_levels()
+        );
+        let tiers = cfg
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let adapter = Arc::new(StageAdapter::new(
+                    Arc::clone(&stage),
+                    i,
+                    spec.theta,
+                ));
+                let pool = Arc::new(ReplicaPool::spawn(
+                    adapter,
+                    PoolConfig {
+                        replicas: spec.replicas,
+                        max_queue: spec.max_queue,
+                        batcher: cfg.batcher,
+                        gpu: spec.gpu,
+                        min_replicas: spec.min_replicas,
+                        max_replicas: spec.max_replicas,
+                    },
+                    Metrics::new(),
+                ));
+                TierPool {
+                    gpu: spec.gpu,
+                    pool,
+                    exited: metrics.counter(&format!("tier_{i}_exited")),
+                    deferred: metrics.counter(&format!("tier_{i}_deferred")),
+                    outstanding_gauge: metrics
+                        .gauge(&format!("tier_{i}_outstanding")),
+                    live_gauge: metrics.gauge(&format!("tier_{i}_live")),
+                    exit_frac_gauge: metrics.gauge(&format!("tier_{i}_exit_frac")),
+                }
+            })
+            .collect();
+        Ok(TieredFleet {
+            tiers,
+            submitted: metrics.counter("fleet_submitted"),
+            completed: metrics.counter("fleet_completed"),
+            shed: metrics.counter("fleet_shed"),
+            latency: metrics.histogram("request_latency_s"),
+            dollars_gauge: metrics.gauge("fleet_dollars"),
+            dollars_per_hour_gauge: metrics.gauge("fleet_dollars_per_hour"),
+            metrics,
+        })
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn tier(&self, i: usize) -> &TierPool {
+        &self.tiers[i]
+    }
+
+    pub fn tiers(&self) -> &[TierPool] {
+        &self.tiers
+    }
+
+    /// The fleet-level registry (router counters, gauges, event log).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Route one request through the cascade: submit to tier 1's pool,
+    /// forward on deferral, answer at the first exit.  Blocks until the
+    /// verdict (the serving front end and loadgen both call through
+    /// worker/handler threads).  Exactly one of completed/shed is
+    /// counted per call; an `Overloaded` from ANY tier sheds the whole
+    /// request (work already done at earlier tiers is sunk cost -- the
+    /// paper's queueing model makes the same call).
+    pub fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
+        let t0 = Instant::now();
+        self.submitted.inc();
+        let mut scores: Vec<f32> = Vec::with_capacity(self.tiers.len());
+        for tier in &self.tiers {
+            let hop = match tier.pool.infer(request.clone()) {
+                Ok(v) => v,
+                Err(e) => {
+                    // any refusal (overloaded / rejected / failed) is the
+                    // request's single terminal outcome; counting it keeps
+                    // submitted == completed + shed exact.  The error
+                    // itself tells the caller which tier refused and why.
+                    self.shed.inc();
+                    return Err(e);
+                }
+            };
+            scores.extend(hop.tier_scores);
+            if hop.exit_tier != DEFERRED {
+                tier.exited.inc();
+                self.completed.inc();
+                let latency_s = t0.elapsed().as_secs_f64();
+                self.latency.record(latency_s);
+                return Ok(Verdict {
+                    request_id: hop.request_id,
+                    prediction: hop.prediction,
+                    exit_tier: hop.exit_tier,
+                    tier_scores: scores,
+                    latency_s,
+                });
+            }
+            tier.deferred.inc();
+        }
+        // unreachable by the StageClassifier contract (the final tier
+        // never defers); fail loudly rather than silently dropping
+        self.shed.inc();
+        Err(PoolError::Failed(format!(
+            "request {} deferred past the final tier",
+            request.id
+        )))
+    }
+
+    /// Advance every tier pool's replica lifecycle (promote warmed,
+    /// retire drained).  Returns the aggregate transitions.
+    pub fn advance(&self, now: Instant) -> Lifecycle {
+        let mut total = Lifecycle::default();
+        for t in &self.tiers {
+            let l = t.pool.advance(now);
+            total.warmed += l.warmed;
+            total.retired += l.retired;
+        }
+        total
+    }
+
+    /// Total outstanding requests across every tier's pool.
+    pub fn total_outstanding(&self) -> usize {
+        self.tiers.iter().map(|t| t.pool.total_outstanding()).sum()
+    }
+
+    /// The fleet rental bill so far: every tier's `replica_seconds`
+    /// priced at its own GPU class (paper Table 4).
+    pub fn dollars(&self) -> f64 {
+        self.tiers.iter().map(|t| t.pool.dollars()).sum()
+    }
+
+    /// Current burn rate: every provisioned slot at its tier's price.
+    pub fn dollars_per_hour(&self) -> f64 {
+        self.tiers.iter().map(|t| t.pool.dollars_per_hour()).sum()
+    }
+
+    /// Per-tier live replica counts (diagnostics / benches).
+    pub fn replicas_per_tier(&self) -> Vec<usize> {
+        self.tiers.iter().map(|t| t.pool.n_replicas()).collect()
+    }
+
+    /// Publish the fleet's derived telemetry as gauges in the fleet
+    /// registry: per-tier queue depth and live replicas, per-tier exit
+    /// fractions, and the rental bill.  Called by the tiered autoscaler
+    /// every tick and by the serving front end before a `stats`
+    /// snapshot.
+    pub fn refresh_gauges(&self) {
+        let done = self.completed.get().max(1) as f64;
+        for t in &self.tiers {
+            t.outstanding_gauge.set(t.pool.total_outstanding() as f64);
+            t.live_gauge.set(t.pool.n_replicas() as f64);
+            t.exit_frac_gauge.set(t.exited.get() as f64 / done);
+        }
+        self.dollars_gauge.set(self.dollars());
+        self.dollars_per_hour_gauge.set(self.dollars_per_hour());
+    }
+
+    /// Gracefully wind the fleet down: begin draining every pool to its
+    /// `min_replicas` floor, then advance until nothing is left
+    /// Draining (bounded wait).  In-flight work still completes; no
+    /// request is dropped.
+    pub fn quiesce(&self, timeout: Duration) {
+        for t in &self.tiers {
+            // the pool's own floor bounds how far this can go
+            t.pool.drain(usize::MAX);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.advance(Instant::now());
+            let draining: usize =
+                self.tiers.iter().map(|t| t.pool.counts().2).sum();
+            if draining == 0 || Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cascade::classify_batch_staged;
+    use crate::trafficgen::{StagedSynthetic, SyntheticClassifier};
+
+    const DIM: usize = 3;
+    const LEVELS: usize = 3;
+
+    fn staged(per_row_us: u64) -> Arc<StagedSynthetic> {
+        Arc::new(StagedSynthetic::new(
+            SyntheticClassifier::new(
+                DIM,
+                LEVELS,
+                Duration::ZERO,
+                Duration::from_micros(per_row_us),
+            ),
+            vec![0.15, 0.25, 0.60],
+        ))
+    }
+
+    fn fleet_cfg(replicas: usize, max_queue: usize) -> TieredFleetConfig {
+        TieredFleetConfig {
+            tiers: vec![
+                TierSpec::fixed(Gpu::V100, replicas, max_queue),
+                TierSpec::fixed(Gpu::A6000, replicas, max_queue),
+                TierSpec::fixed(Gpu::H100, replicas, max_queue),
+            ],
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+        }
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            features: vec![id as f32 * 0.37 - 3.0, 0.0, 0.0],
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn routed_results_match_the_inprocess_sieve() {
+        let stage = staged(50);
+        let fleet = TieredFleet::spawn(
+            Arc::clone(&stage) as Arc<dyn StageClassifier>,
+            fleet_cfg(1, 64),
+            Metrics::new(),
+        )
+        .unwrap();
+        let n = 40;
+        let mut feats = Vec::with_capacity(n * DIM);
+        for id in 0..n as u64 {
+            feats.extend_from_slice(&req(id).features);
+        }
+        let want = classify_batch_staged(stage.as_ref(), &feats, n, None).unwrap();
+        for id in 0..n as u64 {
+            let v = fleet.infer(req(id)).unwrap();
+            let w = &want[id as usize];
+            assert_eq!(v.prediction, w.prediction, "id {id}");
+            assert_eq!(v.exit_tier, w.exit_level, "id {id}");
+            assert_eq!(v.tier_scores, w.scores, "id {id}");
+        }
+        // conservation + routing counters
+        assert_eq!(fleet.metrics().counter("fleet_completed").get(), n as u64);
+        assert_eq!(fleet.metrics().counter("fleet_shed").get(), 0);
+        let exited: u64 = (0..LEVELS).map(|i| fleet.tier(i).exited()).sum();
+        assert_eq!(exited, n as u64);
+        // tier-2 arrivals == tier-1 deferrals (the autoscaler's signal)
+        assert_eq!(
+            fleet.tier(0).deferred(),
+            fleet.tier(1).exited() + fleet.tier(1).deferred()
+        );
+        assert_eq!(fleet.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn interior_shed_counts_once_and_propagates() {
+        // tier 2 (A6000) has a tiny queue and a slow stage: deferred
+        // requests shed there while tier-1 exits still complete
+        let stage = Arc::new(StagedSynthetic::new(
+            SyntheticClassifier::new(
+                DIM,
+                LEVELS,
+                Duration::ZERO,
+                Duration::from_millis(30),
+            ),
+            vec![0.0, 1.0, 1.0], // tier 1 free, deeper tiers slow
+        ));
+        let fleet = TieredFleet::spawn(
+            stage as Arc<dyn StageClassifier>,
+            TieredFleetConfig {
+                tiers: vec![
+                    TierSpec::fixed(Gpu::V100, 1, 64),
+                    TierSpec::fixed(Gpu::A6000, 1, 1),
+                    TierSpec::fixed(Gpu::H100, 1, 1),
+                ],
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+            },
+            Metrics::new(),
+        )
+        .unwrap();
+        let n = 24u64;
+        let mut done = 0u64;
+        let mut shed = 0u64;
+        let fleet_ref = &fleet;
+        std::thread::scope(|s| {
+            let results: Vec<_> = (0..n)
+                .map(|id| s.spawn(move || fleet_ref.infer(req(id))))
+                .collect();
+            for h in results {
+                match h.join().unwrap() {
+                    Ok(_) => done += 1,
+                    Err(PoolError::Overloaded { .. }) => shed += 1,
+                    Err(e) => panic!("unexpected {e:?}"),
+                }
+            }
+        });
+        assert_eq!(done + shed, n, "exactly-once at the fleet boundary");
+        assert!(shed > 0, "tiny interior queue never shed");
+        assert_eq!(fleet.metrics().counter("fleet_completed").get(), done);
+        assert_eq!(fleet.metrics().counter("fleet_shed").get(), shed);
+        assert_eq!(
+            fleet.metrics().counter("fleet_submitted").get(),
+            done + shed
+        );
+        assert_eq!(fleet.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn dollars_sum_per_tier_prices_and_gauges_publish() {
+        let fleet = TieredFleet::spawn(
+            staged(10) as Arc<dyn StageClassifier>,
+            fleet_cfg(2, 16),
+            Metrics::new(),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        for id in 0..10 {
+            let _ = fleet.infer(req(id));
+        }
+        let d = fleet.dollars();
+        assert!(d > 0.0);
+        let by_hand: f64 = (0..LEVELS).map(|i| fleet.tier(i).pool().dollars()).sum();
+        assert!((d - by_hand).abs() < 1e-6);
+        // burn rate: 2 replicas per tier at V100+A6000+H100 prices
+        let burn = fleet.dollars_per_hour();
+        assert!((burn - 2.0 * (0.50 + 0.80 + 2.49)).abs() < 1e-9, "{burn}");
+        fleet.refresh_gauges();
+        assert!(fleet.metrics().gauge("fleet_dollars").get() > 0.0);
+        assert!(fleet.metrics().gauge("fleet_dollars_per_hour").get() > 0.0);
+        let fracs: f64 = (0..LEVELS)
+            .map(|i| fleet.metrics().gauge(&format!("tier_{i}_exit_frac")).get())
+            .sum();
+        assert!((fracs - 1.0).abs() < 1e-9, "exit fractions sum to 1: {fracs}");
+        assert_eq!(fleet.replicas_per_tier(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn interior_drain_never_loses_requests() {
+        let fleet = Arc::new(
+            TieredFleet::spawn(
+                staged(2_000) as Arc<dyn StageClassifier>,
+                TieredFleetConfig {
+                    tiers: vec![
+                        TierSpec::elastic(Gpu::V100, 1, 2, 32),
+                        TierSpec::elastic(Gpu::A6000, 1, 2, 32),
+                        TierSpec::fixed(Gpu::H100, 1, 32),
+                    ],
+                    batcher: BatcherConfig {
+                        max_batch: 2,
+                        max_wait: Duration::from_micros(200),
+                    },
+                },
+                Metrics::new(),
+            )
+            .unwrap(),
+        );
+        // grow the interior tier, park work everywhere, then drain it
+        fleet.tier(1).pool().scale_up(1, Duration::ZERO);
+        std::thread::scope(|s| {
+            let submitters: Vec<_> = (0..30u64)
+                .map(|id| {
+                    let f = Arc::clone(&fleet);
+                    s.spawn(move || f.infer(req(id)))
+                })
+                .collect();
+            // mid-run: drain the interior tier back to one replica
+            std::thread::sleep(Duration::from_millis(5));
+            let drained = fleet.tier(1).pool().drain(1);
+            assert_eq!(drained.len(), 1);
+            let mut done = 0u64;
+            let mut shed = 0u64;
+            for h in submitters {
+                match h.join().unwrap() {
+                    Ok(_) => done += 1,
+                    Err(PoolError::Overloaded { .. }) => shed += 1,
+                    Err(e) => panic!("unexpected {e:?}"),
+                }
+            }
+            assert_eq!(done + shed, 30);
+            assert_eq!(
+                fleet.metrics().counter("fleet_completed").get()
+                    + fleet.metrics().counter("fleet_shed").get(),
+                30
+            );
+        });
+        // the drained replica retires once idle; the fleet still serves
+        fleet.quiesce(Duration::from_secs(5));
+        assert_eq!(fleet.tier(1).pool().counts().2, 0, "nothing left draining");
+        fleet.infer(req(999)).unwrap();
+        assert_eq!(fleet.total_outstanding(), 0);
+    }
+}

@@ -44,6 +44,36 @@ impl Gpu {
 
     /// Ladder in ascending sophistication, as placed per tier in §5.2.2.
     pub const LADDER: [Gpu; 4] = [Gpu::V100, Gpu::A6000, Gpu::A100, Gpu::H100];
+
+    /// Parse a class name (case-insensitive), e.g. for `--tier-gpus`.
+    pub fn parse(s: &str) -> Option<Gpu> {
+        match s.to_ascii_lowercase().as_str() {
+            "v100" => Some(Gpu::V100),
+            "a6000" => Some(Gpu::A6000),
+            "a100" => Some(Gpu::A100),
+            "h100" => Some(Gpu::H100),
+            _ => None,
+        }
+    }
+
+    /// Default §5.2.2-style placement for an `n`-tier cascade: cheap
+    /// classes on the early tiers, the top model on the most expensive
+    /// one.  The first `n - 1` tiers take the cheapest rungs of
+    /// [`Gpu::LADDER`] (repeating the last rung when the cascade is
+    /// deeper than the ladder); the final tier always gets the top GPU.
+    pub fn spread(n: usize) -> Vec<Gpu> {
+        assert!(n >= 1, "a cascade has at least one tier");
+        let mut out: Vec<Gpu> = (0..n.saturating_sub(1))
+            .map(|i| Gpu::LADDER[i.min(Gpu::LADDER.len() - 2)])
+            .collect();
+        out.push(*Gpu::LADDER.last().expect("ladder is non-empty"));
+        out
+    }
+
+    /// Price `seconds` of one rented machine of this class.
+    pub fn dollars_for(&self, seconds: f64) -> f64 {
+        seconds / 3600.0 * self.dollars_per_hour()
+    }
 }
 
 /// §5.2.2 accounting: tier i lives on its own GPU; the fleet serves a
@@ -125,5 +155,74 @@ mod tests {
         };
         let (_, total, single) = m.dollars(&[0.0, 1.0]);
         assert!(total > single);
+    }
+
+    #[test]
+    fn mixed_classes_price_per_level_busy_fractions() {
+        // three levels on three different classes; check every per-level
+        // contribution against the §5.2.2 formula by hand:
+        //   busy_i = reach_i * (flops_i / tflops_i) / (flops_top / tflops_top)
+        //   per_i  = $_i/h * min(1, busy_i)
+        let levels = vec![
+            (Gpu::V100, 2.0e7),
+            (Gpu::A100, 1.5e8),
+            (Gpu::H100, 9.0e8),
+        ];
+        let exits = [0.6, 0.25, 0.15];
+        let m = RentalModel { levels: levels.clone() };
+        let (per, total, single) = m.dollars(&exits);
+        assert_eq!(per.len(), 3);
+        let single_rate = 9.0e8 / Gpu::H100.rated_tflops();
+        let mut reach = 1.0;
+        for (i, (gpu, flops)) in levels.iter().enumerate() {
+            let busy = reach * (flops / gpu.rated_tflops()) / single_rate;
+            let expect = gpu.dollars_per_hour() * busy.min(1.0);
+            assert!(
+                (per[i] - expect).abs() < 1e-12,
+                "level {i}: {} vs {expect}",
+                per[i]
+            );
+            reach -= exits[i];
+        }
+        assert!((total - per.iter().sum::<f64>()).abs() < 1e-12);
+        assert_eq!(single, Gpu::H100.dollars_per_hour());
+        // the mixed fleet beats the single top deployment here: most
+        // traffic exits on the cheap classes
+        assert!(total < single);
+    }
+
+    #[test]
+    fn busy_fraction_clamps_at_a_full_hour_per_node() {
+        // a cheap level with pathological compute cannot bill more than
+        // its own full-hour price, no matter how "busy" the model says
+        // it is relative to the top node
+        let m = RentalModel {
+            levels: vec![(Gpu::V100, 1.0e12), (Gpu::H100, 1.0e8)],
+        };
+        let (per, _, _) = m.dollars(&[0.5, 0.5]);
+        assert_eq!(per[0], Gpu::V100.dollars_per_hour(), "clamp at 1.0 busy");
+    }
+
+    #[test]
+    fn parse_spread_and_seconds_pricing() {
+        assert_eq!(Gpu::parse("v100"), Some(Gpu::V100));
+        assert_eq!(Gpu::parse("H100"), Some(Gpu::H100));
+        assert_eq!(Gpu::parse("a6000"), Some(Gpu::A6000));
+        assert_eq!(Gpu::parse("tpu"), None);
+        // spread: cheap classes first, top model on the top GPU
+        assert_eq!(Gpu::spread(1), vec![Gpu::H100]);
+        assert_eq!(Gpu::spread(2), vec![Gpu::V100, Gpu::H100]);
+        assert_eq!(
+            Gpu::spread(4),
+            vec![Gpu::V100, Gpu::A6000, Gpu::A100, Gpu::H100]
+        );
+        // deeper than the ladder: repeat the second-best interior rung
+        assert_eq!(
+            Gpu::spread(6),
+            vec![Gpu::V100, Gpu::A6000, Gpu::A100, Gpu::A100, Gpu::A100, Gpu::H100]
+        );
+        // seconds pricing matches the hourly rate
+        assert!((Gpu::V100.dollars_for(3600.0) - 0.50).abs() < 1e-12);
+        assert!((Gpu::H100.dollars_for(1800.0) - 1.245).abs() < 1e-12);
     }
 }

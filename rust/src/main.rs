@@ -9,6 +9,9 @@
 //!                   [--batches 4,8,16,32] [--replicas 2] [--gamma 0.05]
 //!                   [--rho 0.0] [--top-acc 0.95] [--cal-n 400]
 //!                   [--design-rps R] [--design-util 0.85]
+//!                   [--tier-gpus v100,h100]  (heterogeneous fleet: the
+//!                   Pareto cost axis becomes $/request and gears carry
+//!                   per-tier (gpu, replicas) allocations)
 //!                   (synthetic calibration: no artifacts needed;
 //!                   --mid-ks adds three-level ladders to the grid)
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
@@ -16,7 +19,12 @@
 //!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
 //!                   re-calibrated on the suite, ladder rescaled to R)
 //!                   [--autoscale --min-replicas 1 --max-replicas N
-//!                    --warmup-ms 0] (elastic replicas; requires --plan)
+//!                    --warmup-ms 0] (elastic replicas; requires --plan,
+//!                   or --tier-rps when tiered)
+//!                   [--tiered [--tier-gpus v100,a6000,h100]
+//!                    [--tier-replicas 2,2,1] [--tier-rps 3000,2000,800]
+//!                    [--max-dollars-hour D]]  (one pool per cascade level,
+//!                   deferral routed between pools, per-tier GPU pricing)
 //!                   [--events-file events.jsonl]
 //! repro stats       [--port 7878] [--events]  (query a running server)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
@@ -30,11 +38,15 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use abc_serve::autoscale::{Autoscaler, ScaleConfig};
+use abc_serve::autoscale::{
+    Autoscaler, FleetScaleConfig, ScaleConfig, TierScale, TieredAutoscaler,
+};
 use abc_serve::calib;
 use abc_serve::coordinator::batcher::BatcherConfig;
-use abc_serve::coordinator::cascade::Cascade;
+use abc_serve::coordinator::cascade::{Cascade, StageClassifier};
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::coordinator::router::{TierSpec, TieredFleet, TieredFleetConfig};
+use abc_serve::cost::rental::Gpu;
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
@@ -95,6 +107,8 @@ fn print_usage() {
          \x20                               [--plan plan.json] (adaptive gears)\n\
          \x20                               [--autoscale --min-replicas A\n\
          \x20                               --max-replicas B] (elastic replicas)\n\
+         \x20                               [--tiered --tier-gpus v100,...,h100]\n\
+         \x20                               (pool per tier, routed deferral)\n\
          \x20 stats     [--port P]          stats snapshot of a running server\n\
          \x20                               [--events] (+ controller event JSONL)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
@@ -113,6 +127,31 @@ fn artifacts_dir(args: &Args) -> String {
 fn rule_of(args: &Args) -> Result<RuleKind> {
     let name = args.str_or("rule", "score");
     RuleKind::parse(name).with_context(|| format!("bad --rule {name:?}"))
+}
+
+/// Wire `--events-file` (when given) as a JSONL sink on the registry's
+/// event log; `who` names the decision source in the announcement.
+fn events_file_sink(args: &Args, metrics: &Metrics, who: &str) -> Result<()> {
+    if let Some(path) = args.get("events-file") {
+        metrics
+            .events()
+            .set_file_sink(path)
+            .with_context(|| format!("opening --events-file {path}"))?;
+        println!("{who} events mirrored to {path} (JSONL)");
+    }
+    Ok(())
+}
+
+/// Parse `--tier-gpus v100,a6000,h100`; empty when the flag is absent.
+fn gpu_list(args: &Args, name: &str) -> Result<Vec<Gpu>> {
+    args.list_or(name, &[])
+        .iter()
+        .map(|s| {
+            Gpu::parse(s).with_context(|| {
+                format!("bad --{name} entry {s:?} (v100|a6000|a100|h100)")
+            })
+        })
+        .collect()
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -232,6 +271,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         top_row_s: args.u64_or("row-us", 2000)? as f64 * 1e-6,
         design_rps: args.f64_or("design-rps", 0.0)?,
         design_util: args.f64_or("design-util", 0.85)?,
+        tier_gpus: gpu_list(args, "tier-gpus")?,
     };
     let cal_n = args.usize_or("cal-n", 400)?;
     let member_acc = args.f64_or("member-acc", 0.80)?;
@@ -263,8 +303,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
             plan.len(),
             n_candidates
         ),
-        &["gear", "ks", "eps", "thetas", "batch", "replicas", "accuracy",
-          "rel cost", "sustainable rps"],
+        &["gear", "ks", "eps", "thetas", "batch", "replicas", "fleet",
+          "accuracy", "rel cost", "$/1k req", "sustainable rps"],
     );
     for g in &plan.gears {
         let ks = std::iter::once(g.k.to_string())
@@ -281,6 +321,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
             .map(|&t| fnum(t as f64, 3))
             .collect::<Vec<_>>()
             .join("/");
+        // per-tier fleet, e.g. "2xV100+1xH100"; "-" for homogeneous plans
+        let fleet = if g.tier_fleet.is_empty() {
+            "-".to_string()
+        } else {
+            g.tier_fleet
+                .iter()
+                .map(|t| format!("{}x{}", t.replicas, t.gpu.name()))
+                .collect::<Vec<_>>()
+                .join("+")
+        };
         table.row(vec![
             g.id.to_string(),
             ks,
@@ -288,8 +338,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
             thetas,
             g.max_batch.to_string(),
             g.replicas.to_string(),
+            fleet,
             fnum(g.accuracy, 4),
             fnum(g.relative_cost, 3),
+            fnum(g.dollar_per_req * 1000.0, 5),
             fnum(g.sustainable_rps, 0),
         ]);
     }
@@ -309,17 +361,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 1)?;
     let max_queue = args.usize_or("max-queue", 256)?;
     let autoscale = args.flag("autoscale");
+    let tiered = args.flag("tiered");
     let min_replicas = args.usize_or("min-replicas", 1)?;
     let max_replicas = args.usize_or("max-replicas", replicas.max(min_replicas))?;
     let warmup = Duration::from_millis(args.u64_or("warmup-ms", 0)?);
     anyhow::ensure!(replicas > 0, "--replicas must be > 0");
     anyhow::ensure!(max_queue > 0, "--max-queue must be > 0");
+    anyhow::ensure!(
+        !(tiered && args.get("plan").is_some()),
+        "--tiered serves the suite's calibrated cascade per tier; gear \
+         plans are monolithic-only (drop --plan)"
+    );
     if autoscale {
-        anyhow::ensure!(
-            args.get("plan").is_some(),
-            "--autoscale needs a gear plan (--plan): replica targets come \
-             from the plan's per-gear capacities"
-        );
+        if tiered {
+            anyhow::ensure!(
+                args.get("tier-rps").is_some(),
+                "--tiered --autoscale needs --tier-rps R1,R2,...: each \
+                 tier's per-replica capacity (rows/s of that STAGE), \
+                 e.g. measured with `repro loadgen`"
+            );
+        } else {
+            anyhow::ensure!(
+                args.get("plan").is_some(),
+                "--autoscale needs a gear plan (--plan): replica targets come \
+                 from the plan's per-gear capacities"
+            );
+        }
         anyhow::ensure!(min_replicas >= 1, "--min-replicas must be >= 1");
         anyhow::ensure!(
             min_replicas <= max_replicas,
@@ -336,6 +403,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let val = rt.dataset(&manifest, "val")?;
     let cal = calib::calibrate(&rt.tiers, rule, &val, 100, epsilon)?;
     let cascade = Arc::new(Cascade::new(rt.tiers.clone(), cal.policy));
+    if tiered {
+        return serve_tiered(args, suite, port, cascade);
+    }
     // A plan's thetas were calibrated on the PLAN's data (synthetic vote
     // fractions for `repro plan`), not this suite's score scale.
     // Re-ground every gear's thetas -- tier 1 AND any interior tiers the
@@ -405,13 +475,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let metrics = Metrics::new();
-    if let Some(path) = args.get("events-file") {
-        metrics
-            .events()
-            .set_file_sink(path)
-            .with_context(|| format!("opening --events-file {path}"))?;
-        println!("controller events mirrored to {path} (JSONL)");
-    }
+    events_file_sink(args, &metrics, "controller")?;
     let pool_cfg = |max_batch: usize, replicas: usize| PoolConfig {
         replicas,
         max_queue,
@@ -419,6 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
         },
+        ..PoolConfig::default()
     };
     // keep the controller/autoscaler alive for the lifetime of serve():
     // dropping them stops the sampling thread
@@ -494,6 +559,165 @@ fn cmd_serve(args: &Args) -> Result<()> {
     abc_serve::server::serve(pool, port)
 }
 
+/// `serve --tiered`: one ReplicaPool per cascade level with deferral
+/// routed between pools, each level on its own GPU class (the §5.2.2
+/// placement).  `--tier-gpus v100,a6000,h100` picks classes (default:
+/// `Gpu::spread` over the rental ladder), `--tier-replicas N1,N2,...`
+/// sets per-tier starting fleets (default: `--replicas` everywhere),
+/// and `--autoscale` sizes every tier independently against its own
+/// deferral-driven arrival rate (needs `--tier-rps`, each tier's
+/// measured per-replica stage capacity; `--max-dollars-hour` caps the
+/// fleet's burn rate).
+fn serve_tiered(
+    args: &Args,
+    suite: &str,
+    port: u16,
+    cascade: Arc<Cascade>,
+) -> Result<()> {
+    let n_levels = cascade.n_levels();
+    let max_batch = args.usize_or("max-batch", 32)?;
+    let max_wait_ms = args.u64_or("max-wait-ms", 2)?;
+    let max_queue = args.usize_or("max-queue", 256)?;
+    let replicas = args.usize_or("replicas", 1)?;
+    let autoscale = args.flag("autoscale");
+    let min_replicas = args.usize_or("min-replicas", 1)?;
+    let warmup = Duration::from_millis(args.u64_or("warmup-ms", 0)?);
+
+    let gpus = {
+        let listed = gpu_list(args, "tier-gpus")?;
+        if listed.is_empty() {
+            Gpu::spread(n_levels)
+        } else {
+            anyhow::ensure!(
+                listed.len() == n_levels,
+                "--tier-gpus lists {} classes but {suite} has {n_levels} tiers",
+                listed.len()
+            );
+            listed
+        }
+    };
+    let start_replicas = {
+        let listed = args.usize_list_or("tier-replicas", &[])?;
+        if listed.is_empty() {
+            vec![replicas; n_levels]
+        } else {
+            anyhow::ensure!(
+                listed.len() == n_levels,
+                "--tier-replicas lists {} fleets but {suite} has {n_levels} tiers",
+                listed.len()
+            );
+            listed
+        }
+    };
+    // the ceiling defaults to covering every explicitly requested start
+    // fleet -- otherwise `--tier-replicas 4,2,1 --autoscale` without an
+    // explicit --max-replicas would silently clamp to the 1-replica
+    // default and pin every tier
+    let default_max = start_replicas
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(replicas)
+        .max(min_replicas);
+    let max_replicas = args.usize_or("max-replicas", default_max)?;
+    anyhow::ensure!(
+        start_replicas.iter().all(|&n| n.max(1) <= max_replicas),
+        "--tier-replicas {start_replicas:?} exceeds --max-replicas \
+         {max_replicas}"
+    );
+
+    let specs: Vec<TierSpec> = gpus
+        .iter()
+        .zip(&start_replicas)
+        .map(|(&gpu, &n)| {
+            let n = n.max(1);
+            TierSpec {
+                gpu,
+                replicas: if autoscale {
+                    n.clamp(min_replicas, max_replicas)
+                } else {
+                    n
+                },
+                min_replicas: if autoscale { min_replicas } else { n },
+                max_replicas: if autoscale { max_replicas } else { n },
+                max_queue,
+                theta: None, // the cascade's policy is already calibrated
+            }
+        })
+        .collect();
+
+    let metrics = Metrics::new();
+    events_file_sink(args, &metrics, "autoscaler")?;
+    let fleet = Arc::new(TieredFleet::spawn(
+        cascade as Arc<dyn StageClassifier>,
+        TieredFleetConfig {
+            tiers: specs,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+        },
+        Arc::clone(&metrics),
+    )?);
+
+    // keep the autoscaler alive for the lifetime of serve()
+    let _tiered_autoscaler: Option<TieredAutoscaler> = if autoscale {
+        let tier_rps = args.f64_list_or("tier-rps", &[])?;
+        anyhow::ensure!(
+            tier_rps.len() == n_levels,
+            "--tier-rps lists {} capacities but {suite} has {n_levels} tiers",
+            tier_rps.len()
+        );
+        let budget = args.f64_or("max-dollars-hour", 0.0)?;
+        let scale_cfg = FleetScaleConfig {
+            tiers: tier_rps
+                .iter()
+                .map(|&rps| TierScale {
+                    scale: ScaleConfig {
+                        min_replicas,
+                        max_replicas,
+                        warmup,
+                        ..ScaleConfig::default()
+                    },
+                    per_replica_rps: rps,
+                })
+                .collect(),
+            max_dollars_per_hour: budget,
+            sample_every: Duration::from_millis(20),
+            dwell: Duration::from_millis(250),
+            queue_pressure: 0.50,
+            ewma_alpha: 0.30,
+        };
+        println!(
+            "tiered autoscale: {min_replicas}..{max_replicas} replicas per \
+             tier (warm-up {warmup:?}{})",
+            if budget > 0.0 {
+                format!(", budget ${budget:.2}/h")
+            } else {
+                String::new()
+            }
+        );
+        Some(TieredAutoscaler::spawn(Arc::clone(&fleet), scale_cfg))
+    } else {
+        None
+    };
+
+    let placement = fleet
+        .tiers()
+        .iter()
+        .zip(&start_replicas)
+        .map(|(t, &n)| format!("{}x{}", n, t.gpu().name()))
+        .collect::<Vec<_>>()
+        .join(" + ");
+    fleet.refresh_gauges();
+    println!(
+        "serving {suite} TIERED on 127.0.0.1:{port} ({placement}, \
+         max-queue {max_queue}/replica, ${:.2}/h at spawn)",
+        fleet.dollars_per_hour()
+    );
+    abc_serve::server::serve(fleet, port)
+}
+
 /// Query a running server's stats snapshot; with `--events`, also dump
 /// the controller event log as JSONL (gear shifts + scale actions).
 fn cmd_stats(args: &Args) -> Result<()> {
@@ -557,6 +781,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 max_batch,
                 max_wait: Duration::from_millis(max_wait_ms),
             },
+            ..PoolConfig::default()
         },
         Metrics::new(),
     ));

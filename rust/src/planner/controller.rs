@@ -75,8 +75,8 @@ impl Default for ControllerConfig {
         ControllerConfig {
             sample_every: Duration::from_millis(20),
             dwell: Duration::from_millis(250),
-            down_util: 0.85,
-            up_util: 0.60,
+            down_util: crate::types::UTIL_HIGH_WATERMARK,
+            up_util: crate::types::UTIL_LOW_WATERMARK,
             queue_pressure: 0.50,
             p99_slo_s: 0.0,
             ewma_alpha: 0.30,
@@ -428,6 +428,8 @@ mod tests {
             mid: vec![],
             max_batch: 8,
             replicas: 1,
+            tier_fleet: vec![],
+            dollar_per_req: 0.0,
             accuracy: acc,
             relative_cost: 1.0,
             sustainable_rps: rps,

@@ -23,7 +23,39 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{Context, Result};
 
+use crate::cost::rental::Gpu;
 use crate::util::json::{Json, JsonObj};
+
+/// One tier's slice of a heterogeneous fleet: which GPU class it rents
+/// and how many replicas of it the plan allocates (tentpole of the
+/// tiered fleet: the planner emits per-tier `(gpu, replicas)` and
+/// `serve --tiered` provisions pools from it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierAlloc {
+    pub gpu: Gpu,
+    pub replicas: usize,
+}
+
+impl TierAlloc {
+    fn to_json(self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("gpu", Json::str(self.gpu.name()));
+        o.insert("replicas", Json::num(self.replicas as f64));
+        Json::Obj(o)
+    }
+
+    fn from_json(v: &Json) -> Result<TierAlloc> {
+        let name = v
+            .get("gpu")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("tier_fleet.gpu missing"))?;
+        Ok(TierAlloc {
+            gpu: Gpu::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown gpu class {name:?}"))?,
+            replicas: v.req_usize("replicas").context("tier_fleet.replicas")?,
+        })
+    }
+}
 
 /// One interior (non-final, non-tier-1) rung of a deeper ladder: the
 /// planner's choice of ensemble size + calibrated threshold for that
@@ -59,6 +91,15 @@ pub struct Gear {
     /// load -- what the autoscaler's rental accounting prices and the
     /// denominator of [`Gear::per_replica_rps`].
     pub replicas: usize,
+    /// Per-tier `(gpu, replicas)` for a heterogeneous (tiered) fleet,
+    /// tier 1 first; empty when the plan was priced homogeneously
+    /// (no `--tier-gpus`).
+    pub tier_fleet: Vec<TierAlloc>,
+    /// Rental dollars one request costs on the planned fleet (the mixed
+    /// fleet's $/request when `tier_fleet` is set, else the whole
+    /// cascade priced on the top GPU).  The Pareto cost axis of
+    /// heterogeneous plans.
+    pub dollar_per_req: f64,
     /// Expected end-to-end accuracy at this operating point.
     pub accuracy: f64,
     /// Expected cost per request relative to always running the top
@@ -128,6 +169,13 @@ impl Gear {
         }
         o.insert("max_batch", Json::num(self.max_batch as f64));
         o.insert("replicas", Json::num(self.replicas as f64));
+        if !self.tier_fleet.is_empty() {
+            o.insert(
+                "tier_fleet",
+                Json::Arr(self.tier_fleet.iter().map(|t| t.to_json()).collect()),
+            );
+        }
+        o.insert("dollar_per_req", Json::num(self.dollar_per_req));
         o.insert("accuracy", Json::num(self.accuracy));
         o.insert("relative_cost", Json::num(self.relative_cost));
         o.insert("sustainable_rps", Json::num(self.sustainable_rps));
@@ -150,6 +198,15 @@ impl Gear {
                 })
                 .collect::<Result<Vec<_>>>()?,
         };
+        // `tier_fleet`/`dollar_per_req` are optional: homogeneous plans
+        // (and plans written before tiered fleets) omit or predate them
+        let tier_fleet = match v.get("tier_fleet").as_arr() {
+            None => Vec::new(),
+            Some(arr) => arr
+                .iter()
+                .map(TierAlloc::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(Gear {
             id: v.req_usize("id").context("gear.id")?,
             k: v.req_usize("k").context("gear.k")?,
@@ -158,6 +215,8 @@ impl Gear {
             mid,
             max_batch: v.req_usize("max_batch").context("gear.max_batch")?,
             replicas: v.req_usize("replicas").context("gear.replicas")?,
+            tier_fleet,
+            dollar_per_req: v.get("dollar_per_req").as_f64().unwrap_or(0.0),
             accuracy: v.req_f64("accuracy").context("gear.accuracy")?,
             relative_cost: v.req_f64("relative_cost").context("gear.relative_cost")?,
             sustainable_rps: v
@@ -350,6 +409,8 @@ mod tests {
             mid: vec![],
             max_batch: 8,
             replicas: 2,
+            tier_fleet: vec![],
+            dollar_per_req: 0.0,
             accuracy: acc,
             relative_cost: 1.0 / rps,
             sustainable_rps: rps,
@@ -430,6 +491,42 @@ mod tests {
         let two = gear(0, 0.9, 500.0).to_json();
         assert!(two.get("mid").as_arr().is_none());
         assert!(Gear::from_json(&two).unwrap().mid.is_empty());
+    }
+
+    #[test]
+    fn tier_fleet_roundtrips_and_stays_optional() {
+        let mut g = gear(0, 0.93, 800.0);
+        g.tier_fleet = vec![
+            TierAlloc { gpu: Gpu::V100, replicas: 3 },
+            TierAlloc { gpu: Gpu::H100, replicas: 1 },
+        ];
+        g.dollar_per_req = 1.25e-6;
+        let plan = GearPlan::new(vec![g, gear(1, 0.80, 3000.0)]).unwrap();
+        let back = GearPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.top().tier_fleet.len(), 2);
+        assert_eq!(back.top().tier_fleet[0].gpu, Gpu::V100);
+        assert_eq!(back.top().tier_fleet[1].replicas, 1);
+        assert!((back.top().dollar_per_req - 1.25e-6).abs() < 1e-18);
+        // homogeneous gears omit the field and still load (and plans
+        // written before the dollar axis load with 0.0)
+        let hom = gear(0, 0.9, 500.0).to_json();
+        assert!(hom.get("tier_fleet").as_arr().is_none());
+        let legacy = Json::parse(
+            r#"{"id":0,"k":3,"epsilon":0.03,"theta":0.6,"max_batch":8,
+                "replicas":2,"accuracy":0.9,"relative_cost":1.0,
+                "sustainable_rps":500.0}"#,
+        )
+        .unwrap();
+        let loaded = Gear::from_json(&legacy).unwrap();
+        assert!(loaded.tier_fleet.is_empty());
+        assert_eq!(loaded.dollar_per_req, 0.0);
+        // unknown gpu classes are rejected, not silently defaulted
+        let bad = Json::parse(
+            r#"{"gpu":"tpu-v9","replicas":1}"#,
+        )
+        .unwrap();
+        assert!(TierAlloc::from_json(&bad).is_err());
     }
 
     #[test]

@@ -49,7 +49,8 @@ use anyhow::Result;
 use crate::analysis::pareto::{frontier, Point};
 use crate::calib::threshold::{estimate_theta, CalPoint};
 use crate::cost::model::{multi_level_relative_cost, two_level_relative_cost};
-use crate::planner::gear::{Gear, GearPlan, TierPlan};
+use crate::cost::rental::Gpu;
+use crate::planner::gear::{Gear, GearPlan, TierAlloc, TierPlan};
 use crate::types::Parallelism;
 use crate::util::rng::Rng;
 
@@ -87,6 +88,14 @@ pub struct PlannerConfig {
     pub design_rps: f64,
     /// Utilisation the allocation pass sizes fleets at (headroom).
     pub design_util: f64,
+    /// Per-level GPU placement for a heterogeneous (tiered) fleet,
+    /// tier 1 first; levels past the list take its last entry.  Empty
+    /// plans a homogeneous deployment: everything priced on the top
+    /// GPU, the Pareto cost axis stays replica-seconds/request.  Non-
+    /// empty switches the Pareto cost axis to **$/request on the mixed
+    /// fleet** and makes the allocation pass emit per-tier
+    /// `(gpu, replicas)` (`Gear::tier_fleet`).
+    pub tier_gpus: Vec<Gpu>,
 }
 
 impl Default for PlannerConfig {
@@ -104,8 +113,22 @@ impl Default for PlannerConfig {
             batch_overhead_s: 200e-6,
             top_row_s: 2e-3,
             design_rps: 0.0,
-            design_util: 0.85,
+            design_util: crate::types::UTIL_HIGH_WATERMARK,
+            tier_gpus: vec![],
         }
+    }
+}
+
+impl PlannerConfig {
+    /// The GPU class level `i` runs on: the placement list entry, its
+    /// last entry for deeper levels, or the top of the rental ladder
+    /// for homogeneous plans.
+    fn gpu_for_level(&self, i: usize) -> Gpu {
+        self.tier_gpus
+            .get(i)
+            .or(self.tier_gpus.last())
+            .copied()
+            .unwrap_or(*Gpu::LADDER.last().expect("ladder non-empty"))
     }
 }
 
@@ -121,10 +144,22 @@ pub struct Candidate {
     pub accuracy: f64,
     pub relative_cost: f64,
     /// Replica-seconds one request costs (dispatch overhead included):
-    /// the Pareto rental-cost axis; `1 /` per-replica capacity.
+    /// the Pareto rental-cost axis of homogeneous plans; `1 /`
+    /// per-replica capacity.
     pub replica_s_per_req: f64,
     /// Offered load sustained at the full `cfg.replicas` fleet.
     pub sustainable_rps: f64,
+    /// Per-level unit execution cost relative to one top-model row
+    /// (rho-adjusted ensemble factor x gamma), tier 1 first; the last
+    /// entry (the top model) is 1.
+    pub tier_costs: Vec<f64>,
+    /// P(a request reaches level i); `reach[0] == 1`.
+    pub reach: Vec<f64>,
+    /// Rental dollars one request costs on `cfg.tier_gpus`' placement:
+    /// each level's busy time priced at its own GPU class (the Pareto
+    /// cost axis of heterogeneous plans).  Homogeneous plans price the
+    /// monolithic layout on the top GPU.
+    pub dollar_per_req: f64,
 }
 
 impl Candidate {
@@ -152,7 +187,7 @@ impl Candidate {
     ) -> Candidate {
         let est1 = estimate_theta(points, epsilon);
         let p_defer1 = 1.0 - est1.selection_rate;
-        let (accuracy, relative_cost, mid_plan) = match mid {
+        let (accuracy, relative_cost, mid_plan, tier_costs, reach) = match mid {
             None => {
                 let cost = two_level_relative_cost(k, cfg.gamma, cfg.rho, p_defer1);
                 // accuracy: accepted samples are right unless they were
@@ -160,7 +195,10 @@ impl Candidate {
                 // model
                 let acc = (est1.selection_rate - est1.failure_rate)
                     + p_defer1 * cfg.top_accuracy;
-                (acc, cost, None)
+                let tier_costs =
+                    vec![cfg.rho.ensemble_factor(k) * cfg.gamma, 1.0];
+                let reach = vec![1.0, p_defer1];
+                (acc, cost, None, tier_costs, reach)
             }
             Some((k2, eps2, mid_points)) => {
                 let est2 = estimate_theta(mid_points, eps2);
@@ -178,10 +216,18 @@ impl Candidate {
                     &[1.0, p_defer1, p_defer1 * p_defer2],
                     cfg.rho,
                 );
+                let tier_costs = vec![
+                    cfg.rho.ensemble_factor(k) * cfg.gamma,
+                    cfg.rho.ensemble_factor(k2) * cfg.mid_gamma,
+                    1.0,
+                ];
+                let reach = vec![1.0, p_defer1, p_defer1 * p_defer2];
                 (
                     acc,
                     cost,
                     Some(TierPlan { k: k2, epsilon: eps2, theta: est2.theta }),
+                    tier_costs,
+                    reach,
                 )
             }
         };
@@ -199,6 +245,26 @@ impl Candidate {
                 cfg.replicas as f64 * max_batch as f64 / batch_s,
             )
         };
+        // $/request: homogeneous plans price the monolithic layout on
+        // the top GPU; heterogeneous plans price each level's share of
+        // machine time at its own class (every tier's pool re-batches,
+        // so each level pays its own dispatch overhead for the traffic
+        // that reaches it)
+        let dollar_per_req = if cfg.tier_gpus.is_empty() {
+            // gpu_for_level falls back to the ladder top on empty lists
+            cfg.gpu_for_level(0).dollars_for(replica_s_per_req)
+        } else {
+            let overhead_per_row = cfg.batch_overhead_s / max_batch as f64;
+            tier_costs
+                .iter()
+                .zip(&reach)
+                .enumerate()
+                .map(|(i, (&c, &r))| {
+                    let rs = r * (overhead_per_row + cfg.top_row_s * c);
+                    cfg.gpu_for_level(i).dollars_for(rs)
+                })
+                .sum()
+        };
         Candidate {
             k,
             epsilon,
@@ -209,6 +275,21 @@ impl Candidate {
             relative_cost,
             replica_s_per_req,
             sustainable_rps,
+            tier_costs,
+            reach,
+            dollar_per_req,
+        }
+    }
+
+    /// Per-replica rows/s one machine of level `i`'s pool sustains
+    /// (its own dispatch overhead amortised over its own batches).
+    fn level_capacity_rps(&self, cfg: &PlannerConfig, i: usize) -> f64 {
+        let row_s = cfg.batch_overhead_s / self.max_batch as f64
+            + cfg.top_row_s * self.tier_costs[i];
+        if row_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / row_s
         }
     }
 
@@ -221,6 +302,8 @@ impl Candidate {
             mid: self.mid.into_iter().collect(),
             max_batch: self.max_batch,
             replicas: cfg.replicas,
+            tier_fleet: vec![], // filled by the allocation pass
+            dollar_per_req: self.dollar_per_req,
             accuracy: self.accuracy,
             relative_cost: self.relative_cost,
             sustainable_rps: self.sustainable_rps,
@@ -295,22 +378,35 @@ pub fn plan_with_mid(
         !candidates.is_empty(),
         "no plannable candidates: empty grid or no calibration data for any k"
     );
+    // The Pareto cost axis: replica-seconds/request for homogeneous
+    // plans, $/request on the mixed fleet when `tier_gpus` places the
+    // levels on different classes (the §5.2.2 claim made a planning
+    // axis -- a gear that defers little is disproportionately expensive
+    // when the deferral target is an H100).
+    let cost_axis = |c: &Candidate| {
+        if cfg.tier_gpus.is_empty() {
+            c.replica_s_per_req
+        } else {
+            c.dollar_per_req
+        }
+    };
     let points: Vec<Point> = candidates
         .iter()
         .enumerate()
-        .map(|(i, c)| Point::new(i.to_string(), c.replica_s_per_req, c.accuracy))
+        .map(|(i, c)| Point::new(i.to_string(), cost_axis(c), c.accuracy))
         .collect();
     // frontier() drops dominated candidates AND dedups identical
     // (cost, value) pairs, so this is already one gear per operating point
-    let mut gears: Vec<Gear> = frontier(&points)
+    let mut gears: Vec<(Gear, Candidate)> = frontier(&points)
         .iter()
         .map(|p| {
             let idx: usize = p.label.parse().expect("frontier label is an index");
-            candidates[idx].clone().into_gear(cfg)
+            let c = candidates[idx].clone();
+            (c.clone().into_gear(cfg), c)
         })
         .collect();
     allocate_replicas(cfg, &mut gears);
-    GearPlan::new(gears)
+    GearPlan::new(gears.into_iter().map(|(g, _)| g).collect())
 }
 
 /// Fill each gear's `replicas` from the cost model: the fewest
@@ -319,8 +415,14 @@ pub fn plan_with_mid(
 /// requote `sustainable_rps` at that allocation.  Gears that cannot
 /// out-sustain a more accurate gear even at the full fleet are dropped
 /// (runtime-dominated: lower accuracy and no capacity win).
-fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<Gear>) {
-    gears.sort_by(|a, b| {
+///
+/// With a heterogeneous placement (`cfg.tier_gpus` non-empty) the pass
+/// also emits each gear's per-tier fleet (`Gear::tier_fleet`): level
+/// `i` gets the fewest replicas of its own GPU class that carry the
+/// design load *thinned by the deferral reach* (`design_rps * reach_i`)
+/// at `design_util` -- the §5.2.2 placement as concrete provisioning.
+fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<(Gear, Candidate)>) {
+    gears.sort_by(|(a, _), (b, _)| {
         b.accuracy
             .partial_cmp(&a.accuracy)
             .expect("accuracy is never NaN")
@@ -333,17 +435,39 @@ fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<Gear>) {
         cfg.design_rps
     } else {
         // auto: what the most accurate gear delivers on the full fleet
-        gears.first().map(per_replica).unwrap_or(0.0) * cfg.replicas as f64
+        gears
+            .first()
+            .map(|(g, _)| per_replica(g))
+            .unwrap_or(0.0)
+            * cfg.replicas as f64
     };
     let util = cfg.design_util.clamp(0.05, 1.0);
     let mut prev_rps = 0.0f64;
-    let mut kept: Vec<Gear> = Vec::with_capacity(gears.len());
-    for mut g in gears.drain(..) {
+    let mut kept: Vec<(Gear, Candidate)> = Vec::with_capacity(gears.len());
+    for (mut g, c) in gears.drain(..) {
+        if !cfg.tier_gpus.is_empty() {
+            g.tier_fleet = c
+                .reach
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| {
+                    let cap = c.level_capacity_rps(cfg, i);
+                    let arrivals = design_rps * r;
+                    let replicas = if cap.is_finite() {
+                        ((arrivals / (cap * util)).ceil() as usize)
+                            .clamp(1, cfg.replicas.max(1))
+                    } else {
+                        1
+                    };
+                    TierAlloc { gpu: cfg.gpu_for_level(i), replicas }
+                })
+                .collect();
+        }
         let rps1 = per_replica(&g);
         if !rps1.is_finite() {
             // infinite-capacity degenerate point: one replica suffices
             g.replicas = 1;
-            kept.push(g);
+            kept.push((g, c));
             continue;
         }
         // fewest replicas covering the design load at target
@@ -361,7 +485,7 @@ fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<Gear>) {
             continue;
         }
         prev_rps = g.sustainable_rps;
-        kept.push(g);
+        kept.push((g, c));
     }
     *gears = kept;
 }
@@ -617,6 +741,78 @@ mod tests {
             assert!(w[0].accuracy >= w[1].accuracy);
             assert!(w[0].sustainable_rps <= w[1].sustainable_rps);
         }
+    }
+
+    #[test]
+    fn heterogeneous_placement_prices_dollars_below_all_top() {
+        let hom = small_cfg();
+        let het = PlannerConfig {
+            tier_gpus: vec![Gpu::V100, Gpu::H100],
+            ..small_cfg()
+        };
+        let pts = synthetic_cal_points(3, 300, 0.8, 5);
+        let all_top = Candidate::evaluate(&hom, 3, 0.05, 8, &pts);
+        let mixed = Candidate::evaluate(&het, 3, 0.05, 8, &pts);
+        // placement changes pricing, never the cascade itself
+        assert_eq!(mixed.accuracy, all_top.accuracy);
+        assert_eq!(mixed.relative_cost, all_top.relative_cost);
+        assert_eq!(mixed.replica_s_per_req, all_top.replica_s_per_req);
+        // the cheap tier-1 GPU undercuts pricing everything on the top
+        assert!(
+            mixed.dollar_per_req < all_top.dollar_per_req,
+            "{} !< {}",
+            mixed.dollar_per_req,
+            all_top.dollar_per_req
+        );
+        // homogeneous $ axis is the monolithic layout on the ladder top
+        let top = *Gpu::LADDER.last().unwrap();
+        assert!(
+            (all_top.dollar_per_req - top.dollars_for(all_top.replica_s_per_req))
+                .abs()
+                < 1e-15
+        );
+        // per-level reach/cost bookkeeping is consistent
+        assert_eq!(mixed.reach.len(), 2);
+        assert_eq!(mixed.tier_costs.len(), 2);
+        assert_eq!(mixed.reach[0], 1.0);
+        assert_eq!(*mixed.tier_costs.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn heterogeneous_plan_emits_per_tier_fleets_on_the_dollar_axis() {
+        let cfg = PlannerConfig {
+            tier_gpus: vec![Gpu::V100, Gpu::H100],
+            replicas: 8,
+            ..small_cfg()
+        };
+        let plan = plan(&cfg, &small_cal(&cfg)).unwrap();
+        assert!(!plan.is_empty());
+        for g in &plan.gears {
+            // two-level gears: one allocation per level, placed per cfg
+            assert_eq!(g.tier_fleet.len(), 2, "gear {}: {:?}", g.id, g.tier_fleet);
+            assert_eq!(g.tier_fleet[0].gpu, Gpu::V100);
+            assert_eq!(g.tier_fleet[1].gpu, Gpu::H100);
+            for t in &g.tier_fleet {
+                assert!(t.replicas >= 1 && t.replicas <= cfg.replicas);
+            }
+            assert!(g.dollar_per_req > 0.0);
+        }
+        // the frontier ran on $/request: down the ladder (accuracy
+        // descending) every gear must be strictly cheaper in dollars,
+        // or it would have been dominated
+        for w in plan.gears.windows(2) {
+            assert!(w[0].accuracy >= w[1].accuracy);
+            assert!(
+                w[0].dollar_per_req > w[1].dollar_per_req,
+                "ladder not $-monotone: {} then {}",
+                w[0].dollar_per_req,
+                w[1].dollar_per_req
+            );
+        }
+        // homogeneous plans carry no tier fleet
+        let hom = plan_with_mid(&small_cfg(), &small_cal(&small_cfg()), &[]).unwrap();
+        assert!(hom.gears.iter().all(|g| g.tier_fleet.is_empty()));
+        assert!(hom.gears.iter().all(|g| g.dollar_per_req > 0.0));
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //! active at reply time -- and the `stats` gauges include
 //! `gear_current` / `arrival_ewma_rps` from the controller.
 //!
+//! When serving a tiered fleet (`serve --tiered`; see
+//! `coordinator::router`), the `stats` gauges include per-tier queue
+//! depth (`tier_{i}_outstanding`), live replicas (`tier_{i}_live`),
+//! exit fractions (`tier_{i}_exit_frac`) and the fleet rental bill
+//! (`fleet_dollars`, `fleet_dollars_per_hour`), refreshed at snapshot
+//! time; `events` carries the per-tier autoscaler's scale decisions.
+//!
 //! When every replica's bounded queue is full, admission control sheds
 //! the request instead of queueing it; the reply is the typed
 //! `Overloaded` verdict:
@@ -61,6 +68,9 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::coordinator::replica::{PoolError, ReplicaPool};
+use crate::coordinator::router::TieredFleet;
+use crate::metrics::Metrics;
+use crate::types::{Request, Verdict};
 use proto::{
     parse_request_line, render_error, render_events, render_metrics,
     render_overloaded, render_stats, render_verdict,
@@ -69,8 +79,55 @@ use proto::{
 /// How long a handler blocks in `read` before re-checking the stop flag.
 const READ_POLL: Duration = Duration::from_millis(50);
 
+/// What the TCP front end serves over: a monolithic [`ReplicaPool`]
+/// (every replica runs the whole cascade) or a [`TieredFleet`] (one
+/// pool per cascade level, routed deferral).  The protocol, admission
+/// control rendering and stats plumbing are identical either way -- the
+/// monolithic pool is just the degenerate one-pool case.
+pub trait InferBackend: Send + Sync {
+    /// Classify one request, blocking for the verdict.
+    fn infer(&self, request: Request) -> Result<Verdict, PoolError>;
+    /// The registry `stats` / `metrics` / `events` render from.
+    fn metrics(&self) -> &Arc<Metrics>;
+    /// Active gear ladder index when serving under a plan (monolithic
+    /// geared pools only).
+    fn gear_id(&self) -> Option<usize> {
+        None
+    }
+    /// Refresh derived telemetry (gauges) before a snapshot command.
+    fn publish(&self) {}
+}
+
+impl InferBackend for ReplicaPool {
+    fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
+        ReplicaPool::infer(self, request)
+    }
+
+    fn metrics(&self) -> &Arc<Metrics> {
+        ReplicaPool::metrics(self)
+    }
+
+    fn gear_id(&self) -> Option<usize> {
+        self.gear().map(|h| h.gear_id())
+    }
+}
+
+impl InferBackend for TieredFleet {
+    fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
+        TieredFleet::infer(self, request)
+    }
+
+    fn metrics(&self) -> &Arc<Metrics> {
+        TieredFleet::metrics(self)
+    }
+
+    fn publish(&self) {
+        self.refresh_gauges();
+    }
+}
+
 /// Serve forever (until a client sends `{"cmd": "shutdown"}`).
-pub fn serve(pool: Arc<ReplicaPool>, port: u16) -> Result<()> {
+pub fn serve(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let stop = Arc::new(AtomicBool::new(false));
     listener.set_nonblocking(true)?;
@@ -139,7 +196,11 @@ fn read_line_interruptible(
     }
 }
 
-fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    pool: Arc<dyn InferBackend>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     stream.set_read_timeout(Some(READ_POLL))?;
     let mut reader = stream.try_clone()?;
     let mut writer = stream;
@@ -159,10 +220,7 @@ fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>)
                 let reply = match pool.infer(request) {
                     // report the gear active at *reply* time: cheap, and
                     // a shift mid-request is visible either way
-                    Ok(verdict) => render_verdict(
-                        &verdict,
-                        pool.gear().map(|h| h.gear_id()),
-                    ),
+                    Ok(verdict) => render_verdict(&verdict, pool.gear_id()),
                     Err(PoolError::Overloaded { outstanding, limit }) => {
                         render_overloaded(outstanding, limit)
                     }
@@ -171,9 +229,11 @@ fn handle_conn(stream: TcpStream, pool: Arc<ReplicaPool>, stop: Arc<AtomicBool>)
                 writeln!(writer, "{reply}")?;
             }
             Ok(proto::Incoming::Metrics) => {
+                pool.publish();
                 writeln!(writer, "{}", render_metrics(pool.metrics()))?;
             }
             Ok(proto::Incoming::Stats) => {
+                pool.publish();
                 writeln!(writer, "{}", render_stats(pool.metrics()))?;
             }
             Ok(proto::Incoming::Events) => {

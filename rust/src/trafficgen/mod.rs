@@ -34,11 +34,12 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::replica::{PoolError, ReplicaPool};
+use crate::coordinator::router::TieredFleet;
 use crate::metrics::{Histogram, Metrics};
 use crate::server::{Client, InferReply};
 use crate::types::{Request, Verdict};
 
-pub use synthetic::SyntheticClassifier;
+pub use synthetic::{StagedSynthetic, SyntheticClassifier};
 pub use trace::Trace;
 
 /// Outcome of one fired request.
@@ -70,6 +71,24 @@ impl LoadTarget for Arc<ReplicaPool> {
 struct PoolSession(Arc<ReplicaPool>);
 
 impl LoadSession for PoolSession {
+    fn call(&mut self, request: Request) -> Result<CallOutcome, String> {
+        match self.0.infer(request) {
+            Ok(v) => Ok(CallOutcome::Done(v)),
+            Err(PoolError::Overloaded { .. }) => Ok(CallOutcome::Shed),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+impl LoadTarget for Arc<TieredFleet> {
+    fn session(&self) -> Result<Box<dyn LoadSession>, String> {
+        Ok(Box::new(FleetSession(Arc::clone(self))))
+    }
+}
+
+struct FleetSession(Arc<TieredFleet>);
+
+impl LoadSession for FleetSession {
     fn call(&mut self, request: Request) -> Result<CallOutcome, String> {
         match self.0.infer(request) {
             Ok(v) => Ok(CallOutcome::Done(v)),
@@ -305,6 +324,7 @@ mod tests {
                     max_batch: 8,
                     max_wait: Duration::from_micros(500),
                 },
+                ..PoolConfig::default()
             },
             Metrics::new(),
         ));

@@ -13,7 +13,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::cascade::{BatchClassifier, CascadeResult};
+use crate::coordinator::cascade::{
+    BatchClassifier, CascadeResult, StageClassifier, StageResult,
+};
 
 /// Deterministic fake classifier with tunable service time.
 #[derive(Debug, Clone)]
@@ -78,12 +80,131 @@ impl SyntheticClassifier {
             .map(|i| {
                 // deterministic pseudo-routing from the first feature so
                 // exit tiers vary without an RNG
-                let h = (features[i * self.dim].abs() * 997.0) as usize;
-                let exit_level = 1 + h % self.levels;
+                let (prediction, exit_level) = self.route(features[i * self.dim]);
                 CascadeResult {
-                    prediction: (h % 2) as u32,
+                    prediction,
                     exit_level,
                     scores: vec![0.9; exit_level],
+                }
+            })
+            .collect())
+    }
+}
+
+impl SyntheticClassifier {
+    /// Deterministic pseudo-routing from the first feature (shared by
+    /// the monolithic and stage-wise paths so both produce identical
+    /// predictions and exit levels).
+    fn route(&self, first_feature: f32) -> (u32, usize) {
+        let h = (first_feature.abs() * 997.0) as usize;
+        (
+            (h % 2) as u32,
+            1 + h % self.levels, // 1-based exit level
+        )
+    }
+}
+
+/// Stage-wise synthetic backend for tiered-fleet tests and benches: the
+/// same deterministic routing as [`SyntheticClassifier`], but each tier
+/// is independently executable ([`StageClassifier`]) with its own share
+/// of the per-row cost.
+///
+/// `weights[t]` scales tier `t`'s per-row service time relative to the
+/// monolithic `per_row` (cheap early tiers, expensive top model -- the
+/// paper's §5.2.2 fleet shape).  Each stage batch pays the full `base`
+/// dispatch overhead: a tiered fleet genuinely re-batches per tier.
+/// Stage-wise results are byte-identical to the monolithic path
+/// (property-tested in rust/tests/coordinator_props.rs); only the cost
+/// layout differs.
+#[derive(Debug, Clone)]
+pub struct StagedSynthetic {
+    inner: SyntheticClassifier,
+    weights: Vec<f64>,
+}
+
+impl StagedSynthetic {
+    /// Per-tier cost weights; `weights.len()` must equal the inner
+    /// classifier's `levels`.
+    pub fn new(inner: SyntheticClassifier, weights: Vec<f64>) -> StagedSynthetic {
+        assert_eq!(weights.len(), inner.levels, "one weight per tier");
+        assert!(weights.iter().all(|w| *w >= 0.0), "weights must be >= 0");
+        StagedSynthetic { inner, weights }
+    }
+
+    /// Uniform weights: every tier costs `1/levels` of the monolithic
+    /// per-row time.
+    pub fn uniform(inner: SyntheticClassifier) -> StagedSynthetic {
+        let w = 1.0 / inner.levels as f64;
+        let weights = vec![w; inner.levels];
+        StagedSynthetic { inner, weights }
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Rows/second ONE replica of tier `level0`'s pool sustains at
+    /// batch size `b` (its share of the per-row cost + full dispatch
+    /// overhead per batch).
+    pub fn stage_capacity_rps(&self, level0: usize, b: usize) -> f64 {
+        let batch_s = self.inner.base.as_secs_f64()
+            + self.inner.per_row.as_secs_f64() * self.weights[level0] * b as f64;
+        if batch_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            b as f64 / batch_s
+        }
+    }
+}
+
+impl BatchClassifier for StagedSynthetic {
+    fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    fn n_levels(&self) -> usize {
+        self.inner.levels
+    }
+
+    fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
+        self.inner.classify_batch(features, n)
+    }
+}
+
+impl StageClassifier for StagedSynthetic {
+    fn classify_stage(
+        &self,
+        level0: usize,
+        features: &[f32],
+        n: usize,
+        _theta: Option<f32>,
+    ) -> Result<Vec<StageResult>> {
+        anyhow::ensure!(level0 < self.inner.levels, "stage {level0} out of range");
+        anyhow::ensure!(
+            features.len() == n * self.inner.dim,
+            "feature buffer has {} floats, expected {}",
+            features.len(),
+            n * self.inner.dim
+        );
+        let service = self.inner.base.saturating_add(
+            self.inner
+                .per_row
+                .mul_f64(self.weights[level0] * n as f64),
+        );
+        if !service.is_zero() && n > 0 {
+            std::thread::sleep(service);
+        }
+        let last = level0 + 1 == self.inner.levels;
+        Ok((0..n)
+            .map(|i| {
+                let (prediction, exit_level) =
+                    self.inner.route(features[i * self.inner.dim]);
+                // a row exits at its routed level; the final tier
+                // accepts whatever reaches it
+                let exits = exit_level <= level0 + 1 || last;
+                StageResult {
+                    score: 0.9,
+                    decision: exits.then_some(prediction),
                 }
             })
             .collect())
@@ -158,6 +279,48 @@ mod tests {
             assert_eq!(x.prediction, y.prediction);
             assert_eq!(x.exit_level, y.exit_level);
         }
+    }
+
+    #[test]
+    fn staged_results_match_monolithic_exactly() {
+        use crate::coordinator::cascade::classify_batch_staged;
+        let inner = SyntheticClassifier::new(2, 3, Duration::ZERO, Duration::ZERO);
+        let staged = StagedSynthetic::new(inner.clone(), vec![0.1, 0.3, 0.6]);
+        let n = 25;
+        let feats: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.37 - 3.0).collect();
+        let mono = inner.classify_batch(&feats, n).unwrap();
+        let st = classify_batch_staged(&staged, &feats, n, None).unwrap();
+        assert_eq!(mono.len(), st.len());
+        for (a, b) in mono.iter().zip(&st) {
+            assert_eq!(a.prediction, b.prediction);
+            assert_eq!(a.exit_level, b.exit_level);
+            assert_eq!(a.scores, b.scores);
+        }
+    }
+
+    #[test]
+    fn stage_weights_shape_cost_not_routing() {
+        let inner =
+            SyntheticClassifier::new(1, 2, Duration::ZERO, Duration::from_millis(4));
+        let staged = StagedSynthetic::new(inner.clone(), vec![0.25, 0.75]);
+        // tier 0 at weight 0.25: 4 rows x 4ms x 0.25 = 4ms
+        let t0 = std::time::Instant::now();
+        let r = staged.classify_stage(0, &[0.5; 4], 4, None).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(3));
+        assert_eq!(r.len(), 4);
+        // the final tier always exits
+        for s in staged.classify_stage(1, &[0.5; 4], 4, None).unwrap() {
+            assert!(s.decision.is_some());
+        }
+        // capacity helper agrees with the weight split
+        let cap0 = staged.stage_capacity_rps(0, 8);
+        let cap1 = staged.stage_capacity_rps(1, 8);
+        assert!((cap0 / cap1 - 3.0).abs() < 1e-9, "{cap0} vs {cap1}");
+        // uniform weights sum to 1
+        let u = StagedSynthetic::uniform(inner);
+        assert!((u.weights().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // out-of-range stage errors
+        assert!(u.classify_stage(7, &[0.5], 1, None).is_err());
     }
 
     #[test]

@@ -4,6 +4,17 @@
 /// Identifies a cascade tier (1-based, matching the paper's Tier 1..n).
 pub type TierId = usize;
 
+/// Shared capacity-controller watermarks.  Every hysteretic controller
+/// in the stack (gear controller downshift/upshift, replica autoscaler
+/// scale-up/scale-down, planner design utilisation) acts above the HIGH
+/// mark and relaxes only below the LOW mark; defining them once keeps
+/// the hysteresis band identical everywhere so coupled controllers
+/// cannot fight across a gap in their bands.
+pub const UTIL_HIGH_WATERMARK: f64 = 0.85;
+
+/// See [`UTIL_HIGH_WATERMARK`]; the relax-below mark of the band.
+pub const UTIL_LOW_WATERMARK: f64 = 0.60;
+
 /// A class label.
 pub type Label = u32;
 

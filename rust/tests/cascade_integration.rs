@@ -131,6 +131,81 @@ fn deferral_monotone_in_theta() {
 }
 
 #[test]
+fn staged_execution_matches_an_independent_reference_sieve() {
+    // The tiered fleet routes per-tier stages between pools, and
+    // `Cascade::classify_batch_with` drives the SAME stages in-process.
+    // Both must reproduce the original inline sieve exactly -- this
+    // test IS that original algorithm, hand-rolled over the tier
+    // executables + policy, compared byte-for-byte (preds, exit levels,
+    // scores, exit fractions) against the stage-wise path, with and
+    // without gear theta overrides.
+    let Some((manifest, rt)) = setup("synth-cifar10") else { return };
+    let test = rt.dataset(&manifest, "test").unwrap();
+    let test = test.slice(0, 400);
+    let policy = DeferralPolicy::new(
+        vec![TierRule { rule: RuleKind::MeanScore, theta: 0.8 }; rt.tiers.len() - 1],
+        rt.tiers.len(),
+    );
+    let cascade = Cascade::new(rt.tiers.clone(), policy.clone());
+    let thetas: Vec<Option<Vec<f32>>> = vec![
+        None,
+        Some(vec![0.6; rt.tiers.len() - 1]),
+        Some(vec![1.1; rt.tiers.len() - 1]), // defer-everything override
+    ];
+    for over in thetas {
+        let got = cascade
+            .classify_batch_with(&test.x, test.n, over.as_deref())
+            .unwrap();
+        // reference: the pre-tiered inline sieve
+        let dim = rt.tiers[0].dim;
+        let mut active: Vec<usize> = (0..test.n).collect();
+        let mut want: Vec<Option<(u32, usize, Vec<f32>)>> = vec![None; test.n];
+        let mut scores: Vec<Vec<f32>> = vec![Vec::new(); test.n];
+        for (level0, tier) in rt.tiers.iter().enumerate() {
+            if active.is_empty() {
+                break;
+            }
+            let mut sub = Vec::with_capacity(active.len() * dim);
+            for &i in &active {
+                sub.extend_from_slice(&test.x[i * dim..(i + 1) * dim]);
+            }
+            let outs = tier.run(&sub, active.len()).unwrap();
+            let last = level0 + 1 == rt.tiers.len();
+            let rule = over
+                .as_ref()
+                .and_then(|ts| ts.get(level0))
+                .filter(|_| !last)
+                .map(|&theta| TierRule { rule: RuleKind::MeanScore, theta });
+            let mut still = Vec::new();
+            for (j, &i) in active.iter().enumerate() {
+                scores[i].push(policy.score(level0, &outs[j]));
+                let decision = match &rule {
+                    Some(r) => r.decide(&outs[j]),
+                    None => policy.decide(level0, &outs[j]),
+                };
+                if decision == abc_serve::types::Decision::Accept {
+                    want[i] = Some((
+                        outs[j].majority,
+                        level0 + 1,
+                        std::mem::take(&mut scores[i]),
+                    ));
+                } else {
+                    still.push(i);
+                }
+            }
+            active = still;
+        }
+        assert!(active.is_empty());
+        for (i, g) in got.iter().enumerate() {
+            let (pred, exit, sc) = want[i].clone().unwrap();
+            assert_eq!(g.prediction, pred, "sample {i}");
+            assert_eq!(g.exit_level, exit, "sample {i}");
+            assert_eq!(g.scores, sc, "sample {i}");
+        }
+    }
+}
+
+#[test]
 fn accuracy_improvement_shows_up_somewhere() {
     // Paper §5.1.1: ABC often IMPROVES accuracy over the best single
     // model.  Check the cascade matches-or-beats the top tier's member-0

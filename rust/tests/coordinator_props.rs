@@ -282,3 +282,61 @@ fn prop_scope_map_is_identity_preserving() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// stage-wise execution equivalence (tiered-fleet tentpole)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_staged_sieve_matches_monolithic_classify_batch() {
+    use abc_serve::coordinator::cascade::{classify_batch_staged, BatchClassifier};
+    use abc_serve::trafficgen::{StagedSynthetic, SyntheticClassifier};
+    check(
+        109,
+        120,
+        |r: &mut Rng| {
+            let dim = 1 + r.below(4);
+            let levels = 1 + r.below(4);
+            let n = r.below(50);
+            let weights: Vec<f64> = (0..levels).map(|_| r.f64()).collect();
+            let features: Vec<f64> =
+                (0..n * dim).map(|_| r.f64() * 10.0 - 5.0).collect();
+            ((vec![dim, levels, n], weights), features)
+        },
+        |((shape, weights), features)| {
+            // shrinking may desynchronise the pieces; skip invalid shapes
+            if shape.len() != 3 {
+                return Ok(());
+            }
+            let (dim, levels, n) = (shape[0], shape[1], shape[2]);
+            if dim == 0
+                || levels == 0
+                || weights.len() != levels
+                || features.len() != n * dim
+            {
+                return Ok(());
+            }
+            let feats: Vec<f32> = features.iter().map(|&x| x as f32).collect();
+            let inner = SyntheticClassifier::new(
+                dim,
+                levels,
+                Duration::ZERO,
+                Duration::ZERO,
+            );
+            let staged = StagedSynthetic::new(inner.clone(), weights.clone());
+            // monolithic execution vs the stage-wise sieve driver: the
+            // tiered fleet routes the SAME stages between pools, so this
+            // equivalence is what makes `--tiered` answer-preserving
+            let mono = inner.classify_batch(&feats, n).map_err(|e| e.to_string())?;
+            let st = classify_batch_staged(&staged, &feats, n, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(mono.len() == st.len(), "length mismatch");
+            for (i, (a, b)) in mono.iter().zip(&st).enumerate() {
+                prop_assert!(a.prediction == b.prediction, "pred differs at {i}");
+                prop_assert!(a.exit_level == b.exit_level, "exit differs at {i}");
+                prop_assert!(a.scores == b.scores, "scores differ at {i}");
+            }
+            Ok(())
+        },
+    );
+}

@@ -55,6 +55,7 @@ fn pool(replicas: usize, max_queue: usize) -> Arc<ReplicaPool> {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
             },
+            ..PoolConfig::default()
         },
         Metrics::new(),
     ))

@@ -62,6 +62,8 @@ fn plan() -> GearPlan {
         mid: vec![],
         max_batch: MAX_BATCH,
         replicas: 1,
+        tier_fleet: vec![],
+        dollar_per_req: 0.0,
         accuracy: acc,
         relative_cost: work,
         sustainable_rps: rps,
@@ -81,6 +83,7 @@ fn pool_cfg() -> PoolConfig {
             max_batch: MAX_BATCH,
             max_wait: Duration::from_millis(1),
         },
+        ..PoolConfig::default()
     }
 }
 
@@ -211,6 +214,7 @@ fn shift_churn_never_drops_or_duplicates_requests() {
                 max_batch: 4,
                 max_wait: Duration::from_micros(200),
             },
+            ..PoolConfig::default()
         },
         Metrics::new(),
         Arc::clone(&handle),

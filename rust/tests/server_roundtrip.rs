@@ -95,7 +95,12 @@ fn tcp_server_roundtrip() {
     let Some((cascade, rt, manifest)) = boot("synth-sst2") else { return };
     let pool = Arc::new(ReplicaPool::spawn(
         cascade,
-        PoolConfig { replicas: 2, max_queue: 64, batcher: batcher_cfg() },
+        PoolConfig {
+            replicas: 2,
+            max_queue: 64,
+            batcher: batcher_cfg(),
+            ..PoolConfig::default()
+        },
         Metrics::new(),
     ));
     let test = rt.dataset(&manifest, "test").unwrap();
@@ -138,6 +143,7 @@ fn synthetic_pool(gear: Option<Arc<GearHandle>>) -> Arc<ReplicaPool> {
         replicas: 1,
         max_queue: 64,
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ..PoolConfig::default()
     };
     Arc::new(match gear {
         Some(h) => ReplicaPool::spawn_geared(classifier, cfg, Metrics::new(), h),
@@ -222,6 +228,8 @@ fn geared_server_reports_active_gear_on_the_wire() {
         mid: vec![],
         max_batch: 8,
         replicas: 1,
+        tier_fleet: vec![],
+        dollar_per_req: 0.0,
         accuracy: 0.9,
         relative_cost: 1.0,
         sustainable_rps: 1000.0,
