@@ -23,12 +23,14 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use abc_serve::autoscale::{Autoscaler, ScaleConfig};
+use abc_serve::control::{
+    ControlConfig, ControlLoop, ControlTarget, ControllerConfig, ScaleConfig,
+};
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
-use abc_serve::planner::{ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
 use abc_serve::util::table::{fnum, Table};
 
@@ -109,21 +111,23 @@ fn run_elastic(trace: Arc<Trace>) -> (LoadReport, f64, u64, u64) {
         Arc::clone(&metrics),
         Arc::clone(&handle),
     ));
-    let _autoscaler = Autoscaler::spawn(
-        Arc::clone(&pool),
-        plan,
-        handle,
-        ControllerConfig {
-            sample_every: Duration::from_millis(10),
-            dwell: Duration::from_millis(80),
-            ..ControllerConfig::default()
-        },
-        ScaleConfig {
-            min_replicas: 1,
-            max_replicas: MAX_REPLICAS,
-            warmup: Duration::ZERO,
-            ..ScaleConfig::default()
-        },
+    let _autoscaler = ControlLoop::spawn(
+        Arc::clone(&pool) as Arc<dyn ControlTarget>,
+        ControlConfig::autoscaled(
+            plan,
+            ControllerConfig {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(80),
+                ..ControllerConfig::default()
+            },
+            ScaleConfig {
+                min_replicas: 1,
+                max_replicas: MAX_REPLICAS,
+                warmup: Duration::ZERO,
+                ..ScaleConfig::default()
+            },
+            0.0,
+        ),
     );
     let report = LoadGen { workers: 64 }
         .run(&pool, trace, &Metrics::new())

@@ -27,7 +27,8 @@ use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
-use abc_serve::planner::{Controller, ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::control::{ControlConfig, ControlLoop, ControlTarget, ControllerConfig};
+use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
 use abc_serve::util::table::{fnum, Table};
 
@@ -108,15 +109,16 @@ fn run_adaptive(plan: &GearPlan, trace: Arc<Trace>) -> (LoadReport, u64, u64) {
         Arc::clone(&metrics),
         Arc::clone(&handle),
     ));
-    let _controller = Controller::spawn(
-        Arc::clone(&pool),
-        plan.clone(),
-        Arc::clone(&handle),
-        ControllerConfig {
-            sample_every: Duration::from_millis(10),
-            dwell: Duration::from_millis(200),
-            ..ControllerConfig::default()
-        },
+    let _controller = ControlLoop::spawn(
+        Arc::clone(&pool) as Arc<dyn ControlTarget>,
+        ControlConfig::gear_plan(
+            plan.clone(),
+            ControllerConfig {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(200),
+                ..ControllerConfig::default()
+            },
+        ),
     );
     let report = LoadGen { workers: 64 }
         .run(&pool, trace, &Metrics::new())

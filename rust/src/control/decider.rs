@@ -1,0 +1,1074 @@
+//! The decider stack: pure per-tick decisions for the unified control
+//! loop.
+//!
+//! One tick folds one [`Observation`] per unit into that unit's
+//! [`ControlState`] and runs three deciders over the result:
+//!
+//! 1. **[`GearDecider`]** -- walks a ladder per configured unit.  A
+//!    monolithic geared pool walks its offline [`GearPlan`]
+//!    (`ControlState::step_fleet`, fleet-aware so renting precedes
+//!    accuracy trades).  A tiered fleet walks per-tier **theta rungs**
+//!    ([`GearLadder::Thetas`]): the decider observing tier N's pool
+//!    actuates tier N-1's deferral threshold -- tier N's arrivals ARE
+//!    tier N-1's deferrals, so lowering the upstream theta is the knob
+//!    that thins exactly the stream drowning tier N.
+//! 2. **The scale decider** (per elastic unit, policy in
+//!    [`ScaleConfig`]) -- sizes the unit's fleet for the active gear's
+//!    per-replica capacity at
+//!    `max(EWMA, forecast)` (the [`crate::control::Forecaster`] hook:
+//!    rising trends provision a warm-up early), with the queue-pressure
+//!    kicker and the warming-counts-against-reprovisioning rule.
+//! 3. **[`BudgetArbiter`]** -- reconciles the proposals under the
+//!    fleet-wide `--max-dollars-hour` burn cap: drains always pass
+//!    (they only return money), scale-ups are granted cheapest-unit
+//!    first (under the paper's §5.2.2 placement that is
+//!    cheapest-tier-first, starving the expensive top pool last), and
+//!    gear downshifts are evaluated at the *attainable* fleet -- max
+//!    replicas clamped to what the budget still affords -- so the
+//!    stack prefers renting before trading accuracy, and trades
+//!    accuracy exactly when it can no longer afford to rent.
+//!
+//! Dwell coupling: a plan-gear shift and its matching resize land in
+//! the same tick (one atomic capacity decision).  A theta shift
+//! instead consumes the OBSERVING tier's dwell -- gear and scale share
+//! one clock per unit -- which is the fleet-level hysteresis guard:
+//! the two levers that relieve an overloaded tier (rent it more
+//! machines; lower the adjacent tier's theta) cannot both slam in at
+//! once and then both reverse, and the tier whose arrival stream the
+//! shift just thinned cannot resize against pre-shift numbers.  The
+//! ACTUATED tier is deliberately not blocked: its own arrivals are
+//! unchanged by its theta (the stage still runs on every row; theta
+//! only splits exit from defer), so its scale decisions stay live.
+//!
+//! Everything here is a pure function of (config, states, observations,
+//! counts, prices, forecasts, dt) -- unit-tested below without threads.
+
+use crate::control::scale::ScaleConfig;
+use crate::control::state::{
+    ControlState, ControllerConfig, Observation, Shift, Trigger,
+};
+use crate::cost::rental::Gpu;
+use crate::planner::gear::{GearConfig, GearPlan};
+
+/// One rung of a per-tier theta ladder: the runtime operating point a
+/// tiered fleet's gear decider actuates.  Rung 0 is the most accurate
+/// (usually `theta: None` -- the stage's own calibrated policy); deeper
+/// rungs lower the threshold so the tier exits more requests locally
+/// instead of deferring them to the more expensive tier below.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierRung {
+    /// Threshold override; `None` restores the calibrated policy.
+    pub theta: Option<f32>,
+    /// Batch cap while this rung is active.
+    pub max_batch: usize,
+}
+
+/// What ladder a [`GearDecider`] walks.
+#[derive(Debug, Clone)]
+pub enum GearLadder {
+    /// A full offline plan (monolithic geared pools): rungs quote real
+    /// capacities, so downshifts jump to the sustaining gear.
+    Plan(GearPlan),
+    /// Per-tier theta rungs (tiered fleets), most accurate first:
+    /// rungs do not change the observed unit's own capacity, so the
+    /// walk is one hysteretic rung per dwell.
+    Thetas(Vec<TierRung>),
+}
+
+/// One ladder-walking decider; see the module docs.
+#[derive(Debug, Clone)]
+pub struct GearDecider {
+    /// Unit whose observation drives the walk.
+    pub obs_unit: usize,
+    /// Unit actuated on a shift.  Equal to `obs_unit` for plan ladders;
+    /// the upstream tier (`obs_unit - 1`) for theta ladders.
+    pub act_unit: usize,
+    pub ladder: GearLadder,
+}
+
+impl GearDecider {
+    pub fn ladder_len(&self) -> usize {
+        match &self.ladder {
+            GearLadder::Plan(p) => p.len(),
+            GearLadder::Thetas(t) => t.len(),
+        }
+    }
+
+    /// The runtime config actuated at rung `r`.
+    pub fn config_at(&self, r: usize) -> GearConfig {
+        match &self.ladder {
+            GearLadder::Plan(p) => p.gears[r].config(),
+            GearLadder::Thetas(t) => GearConfig {
+                gear_id: r,
+                thetas: t[r].theta.into_iter().collect(),
+                work_factor: 1.0,
+                max_batch: t[r].max_batch,
+            },
+        }
+    }
+
+    /// Fold the observation into the obs unit's state and propose a
+    /// shift.  `fleet` is the attainable replica basis (None: judge
+    /// plan rungs by their planned allocations); `per_replica_rps` is
+    /// the obs unit's per-replica capacity (theta ladders only).
+    fn decide(
+        &self,
+        state: &mut ControlState,
+        ctrl: &ControllerConfig,
+        obs: Observation,
+        dt_s: f64,
+        fleet: Option<usize>,
+        per_replica_rps: f64,
+    ) -> Option<(Shift, Trigger)> {
+        match &self.ladder {
+            GearLadder::Plan(p) => state.step_fleet(p, ctrl, obs, dt_s, fleet),
+            GearLadder::Thetas(t) => {
+                let capacity = per_replica_rps * fleet.unwrap_or(1).max(1) as f64;
+                state.step_watermark(ctrl, obs, dt_s, capacity, t.len())
+            }
+        }
+    }
+}
+
+/// Per-unit knobs for the scale decider.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitControl {
+    /// Offered load one replica of this unit sustains (rows/s of ITS
+    /// stage).  `None`: derive from the unit's active plan gear
+    /// (monolithic geared pools).
+    pub per_replica_rps: Option<f64>,
+    /// Elastic sizing policy; `None` pins the unit's fleet.
+    pub scale: Option<ScaleConfig>,
+}
+
+/// The fleet-wide burn-rate cap; see the module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetArbiter {
+    /// $/hour ceiling; 0 disables the cap.  Warming, Live and Draining
+    /// slots all bill (a rented machine bills until returned).
+    pub max_dollars_per_hour: f64,
+}
+
+impl BudgetArbiter {
+    pub fn uncapped(&self) -> bool {
+        self.max_dollars_per_hour <= 0.0
+    }
+
+    /// Current burn: every provisioned slot at its unit's price.
+    pub fn bill(counts: &[(usize, usize, usize)], gpus: &[Gpu]) -> f64 {
+        counts
+            .iter()
+            .zip(gpus)
+            .map(|(&(w, l, d), g)| (w + l + d) as f64 * g.dollars_per_hour())
+            .sum()
+    }
+
+    /// Extra replicas of `gpu` the headroom above `bill` affords.
+    pub fn affordable(&self, bill: f64, gpu: Gpu) -> usize {
+        if self.uncapped() {
+            return usize::MAX;
+        }
+        let headroom = (self.max_dollars_per_hour - bill).max(0.0);
+        (headroom / gpu.dollars_per_hour()).floor() as usize
+    }
+}
+
+/// The decider stack's full configuration: what one
+/// [`crate::control::ControlLoop`] ticks.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Watermarks, dwell, sampling period, EWMA smoothing.
+    pub ctrl: ControllerConfig,
+    /// One entry per target unit.
+    pub units: Vec<UnitControl>,
+    /// Ladder deciders (at most one per observed unit).
+    pub gears: Vec<GearDecider>,
+    /// Fleet-wide burn budget in $/hour; 0 disables the cap.
+    pub max_dollars_per_hour: f64,
+}
+
+impl ControlConfig {
+    /// Gear-only control of a monolithic geared pool (what
+    /// `planner::Controller` used to spawn).
+    pub fn gear_plan(plan: GearPlan, ctrl: ControllerConfig) -> ControlConfig {
+        ControlConfig {
+            ctrl,
+            units: vec![UnitControl { per_replica_rps: None, scale: None }],
+            gears: vec![GearDecider {
+                obs_unit: 0,
+                act_unit: 0,
+                ladder: GearLadder::Plan(plan),
+            }],
+            max_dollars_per_hour: 0.0,
+        }
+    }
+
+    /// Coupled gear + elastic-fleet control of a monolithic geared pool
+    /// (what `autoscale::Autoscaler` used to spawn), optionally under a
+    /// burn budget.
+    pub fn autoscaled(
+        plan: GearPlan,
+        ctrl: ControllerConfig,
+        scale: ScaleConfig,
+        max_dollars_per_hour: f64,
+    ) -> ControlConfig {
+        ControlConfig {
+            ctrl,
+            units: vec![UnitControl { per_replica_rps: None, scale: Some(scale) }],
+            gears: vec![GearDecider {
+                obs_unit: 0,
+                act_unit: 0,
+                ladder: GearLadder::Plan(plan),
+            }],
+            max_dollars_per_hour,
+        }
+    }
+
+    /// Per-tier control of a tiered fleet: each tier sized against its
+    /// own deferral-driven arrivals (what `autoscale::TieredAutoscaler`
+    /// used to spawn), plus per-tier gear shifting for every tier with
+    /// theta rungs -- tier `i`'s rungs are walked by the decider
+    /// observing tier `i + 1`'s pool (the stream those rungs thin).
+    /// The last tier's rungs are ignored: it has no downstream observer
+    /// and its theta is meaningless (the final stage always exits).
+    pub fn tiered(
+        tiers: Vec<TierControl>,
+        ctrl: ControllerConfig,
+        max_dollars_per_hour: f64,
+    ) -> ControlConfig {
+        let n = tiers.len();
+        let mut units = Vec::with_capacity(n);
+        let mut gears = Vec::new();
+        for (i, t) in tiers.into_iter().enumerate() {
+            units.push(UnitControl {
+                per_replica_rps: Some(t.per_replica_rps),
+                scale: t.scale,
+            });
+            if !t.rungs.is_empty() && i + 1 < n {
+                gears.push(GearDecider {
+                    obs_unit: i + 1,
+                    act_unit: i,
+                    ladder: GearLadder::Thetas(t.rungs),
+                });
+            }
+        }
+        ControlConfig { ctrl, units, gears, max_dollars_per_hour }
+    }
+
+    /// Panic early on nonsense configs (the loop thread cannot surface
+    /// errors later).
+    pub fn validate(&self, n_units: usize) {
+        assert_eq!(
+            self.units.len(),
+            n_units,
+            "config has {} units, target has {n_units}",
+            self.units.len()
+        );
+        assert!(
+            self.ctrl.up_util < self.ctrl.down_util,
+            "hysteresis requires up_util < down_util"
+        );
+        assert!(self.ctrl.ewma_alpha > 0.0 && self.ctrl.ewma_alpha <= 1.0);
+        assert!(self.max_dollars_per_hour >= 0.0);
+        for u in &self.units {
+            if let Some(s) = &u.scale {
+                s.validate();
+            }
+        }
+        let mut seen = vec![false; n_units];
+        for g in &self.gears {
+            assert!(g.obs_unit < n_units && g.act_unit < n_units);
+            assert!(
+                !std::mem::replace(&mut seen[g.obs_unit], true),
+                "unit {} has two gear deciders",
+                g.obs_unit
+            );
+            assert!(g.ladder_len() >= 1, "empty gear ladder");
+            if matches!(g.ladder, GearLadder::Thetas(_)) {
+                assert!(
+                    self.units[g.obs_unit].per_replica_rps.unwrap_or(0.0) > 0.0,
+                    "theta ladder on unit {} needs its per_replica_rps",
+                    g.obs_unit
+                );
+            }
+        }
+        for (i, u) in self.units.iter().enumerate() {
+            if u.scale.is_some() && u.per_replica_rps.is_none() {
+                assert!(
+                    self.plan_for(i).is_some(),
+                    "elastic unit {i} needs per_replica_rps or a plan ladder"
+                );
+            }
+        }
+    }
+
+    /// The plan ladder actuating `unit`, if any (the scale decider's
+    /// per-replica capacity source for monolithic geared pools).
+    fn plan_for(&self, unit: usize) -> Option<&GearPlan> {
+        self.gears.iter().find_map(|g| match &g.ladder {
+            GearLadder::Plan(p) if g.act_unit == unit => Some(p),
+            _ => None,
+        })
+    }
+
+    /// The decider observing `unit`, if any.
+    pub fn decider_for_obs(&self, unit: usize) -> Option<&GearDecider> {
+        self.gears.iter().find(|g| g.obs_unit == unit)
+    }
+}
+
+/// One tier's control knobs (input to [`ControlConfig::tiered`]).
+#[derive(Debug, Clone)]
+pub struct TierControl {
+    /// Rows/s one replica of this tier sustains (its own stage).
+    pub per_replica_rps: f64,
+    /// Elastic sizing; `None` pins the tier's fleet.
+    pub scale: Option<ScaleConfig>,
+    /// Theta ladder for THIS tier's deferral threshold, rung 0 most
+    /// accurate; empty = no gear shifting at this tier.
+    pub rungs: Vec<TierRung>,
+}
+
+/// One applied-or-proposed gear shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShiftAction {
+    pub obs_unit: usize,
+    pub act_unit: usize,
+    pub from: usize,
+    pub to: usize,
+    pub shift: Shift,
+    pub trigger: Trigger,
+}
+
+/// One applied-or-proposed fleet resize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleAction {
+    pub unit: usize,
+    /// Provisioned fleet (warming + live) the decision was made at.
+    pub fleet: usize,
+    /// Live count at decision time (the drain basis).
+    pub live: usize,
+    pub target: usize,
+    pub trigger: Trigger,
+    /// "scale", or "budget" when the arbiter clamped the policy's ask.
+    pub decider: &'static str,
+}
+
+/// Everything one tick decided.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Tick {
+    pub shifts: Vec<ShiftAction>,
+    pub scales: Vec<ScaleAction>,
+}
+
+/// Run the full decider stack over one tick's observations.  Mutates
+/// `states` (EWMA, dwell, rung) exactly as the loop thread would; the
+/// thread half only samples, applies and records.  `forecasts[i]` is
+/// unit `i`'s predicted arrival rate (0 = none).
+pub fn decide_tick(
+    cfg: &ControlConfig,
+    states: &mut [ControlState],
+    obs: &[Observation],
+    counts: &[(usize, usize, usize)],
+    gpus: &[Gpu],
+    forecasts: &[f64],
+    dt_s: f64,
+) -> Tick {
+    let n = cfg.units.len();
+    assert_eq!(states.len(), n);
+    assert_eq!(obs.len(), n);
+    assert_eq!(counts.len(), n);
+    assert_eq!(gpus.len(), n);
+    assert_eq!(forecasts.len(), n);
+    let budget = BudgetArbiter { max_dollars_per_hour: cfg.max_dollars_per_hour };
+    let mut bill = if budget.uncapped() {
+        0.0
+    } else {
+        BudgetArbiter::bill(counts, gpus)
+    };
+    let mut tick = Tick::default();
+    let mut folded = vec![false; n];
+    // plan shifts keep the shifted unit's resize in the same tick (one
+    // atomic capacity decision)
+    let mut plan_shifted = vec![false; n];
+
+    // -- gear phase ------------------------------------------------------
+    for g in &cfg.gears {
+        let u = g.obs_unit;
+        let (w, l, _) = counts[u];
+        let fleet = w + l;
+        // the attainable fleet: what the unit could actually grow to
+        // under its bounds AND the budget -- renting is tried first,
+        // accuracy trades start where affording more machines stops
+        let basis = match &cfg.units[u].scale {
+            Some(s) => {
+                let extra = s
+                    .max_replicas
+                    .saturating_sub(fleet)
+                    .min(budget.affordable(bill, gpus[u]));
+                Some(fleet + extra)
+            }
+            None => match &g.ladder {
+                // fixed fleets judge plan rungs by their planned quotes
+                GearLadder::Plan(_) => None,
+                // theta rungs are judged at the fixed fleet itself
+                GearLadder::Thetas(_) => Some(fleet),
+            },
+        };
+        let per_rps = cfg.units[u].per_replica_rps.unwrap_or(0.0);
+        let from = states[u].current();
+        let shift =
+            g.decide(&mut states[u], &cfg.ctrl, obs[u], dt_s, basis, per_rps);
+        folded[u] = true;
+        if let Some((shift, trigger)) = shift {
+            if matches!(g.ladder, GearLadder::Plan(_)) {
+                plan_shifted[u] = true;
+            }
+            tick.shifts.push(ShiftAction {
+                obs_unit: u,
+                act_unit: g.act_unit,
+                from,
+                to: states[u].current(),
+                shift,
+                trigger,
+            });
+        }
+    }
+    // (the fleet-level hysteresis guard needs no extra bookkeeping
+    // here: a theta shift reset its OBSERVING unit's state inside
+    // step_watermark, and gear + scale share that clock, so the tier
+    // whose arrivals the shift just changed skips the scale phase
+    // below until the dwell expires)
+
+    // every unit folds its observation exactly once per tick -- also
+    // the ones with no decider at all, so their EWMA telemetry (and a
+    // later-enabled decider's starting state) tracks real traffic
+    for i in 0..n {
+        if !folded[i] {
+            states[i].observe(&cfg.ctrl, obs[i], dt_s);
+            folded[i] = true;
+        }
+    }
+
+    // -- scale phase, cheapest unit first --------------------------------
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        gpus[a]
+            .dollars_per_hour()
+            .partial_cmp(&gpus[b].dollars_per_hour())
+            .expect("prices are never NaN")
+            .then(a.cmp(&b))
+    });
+    for i in order {
+        let Some(scale) = &cfg.units[i].scale else {
+            continue;
+        };
+        // a plan shift already consumed the dwell; it still gets its
+        // matching resize this tick (shifting to a cheaper gear without
+        // releasing the machines it no longer needs would waste exactly
+        // the rent the shift saved)
+        if !plan_shifted[i] && !states[i].dwell_ok(&cfg.ctrl) {
+            continue;
+        }
+        let (warming, live, _) = counts[i];
+        let fleet = live + warming;
+        // the pressure kicker rents one extra machine for queue debt
+        // the rate EWMA cannot see -- but only when nothing is already
+        // warming: capacity in flight will relieve the same debt, and
+        // kicking every dwell until it goes Live would re-rent it
+        let pressured =
+            obs[i].outstanding_frac > cfg.ctrl.queue_pressure && warming == 0;
+        let per_rps = cfg.units[i].per_replica_rps.unwrap_or_else(|| {
+            let plan = cfg.plan_for(i).expect("validated: plan or rps");
+            plan.gears[states[i].current()].per_replica_rps()
+        });
+        // the Forecaster hook: a rising trend provisions a warm-up
+        // early; falling trends forecast 0 so drains stay reactive
+        let rps = states[i].ewma_rps().max(forecasts[i]);
+        let asked = scale.target(rps, per_rps, fleet, pressured);
+        if asked > fleet {
+            let granted =
+                fleet + (asked - fleet).min(budget.affordable(bill, gpus[i]));
+            if granted > fleet {
+                bill += (granted - fleet) as f64 * gpus[i].dollars_per_hour();
+                tick.scales.push(ScaleAction {
+                    unit: i,
+                    fleet,
+                    live,
+                    target: granted,
+                    trigger: if pressured { Trigger::Pressure } else { Trigger::Rate },
+                    decider: if granted < asked { "budget" } else { "scale" },
+                });
+                states[i].note_action();
+            }
+        } else if asked < live {
+            // drains are always allowed (they only return money), but
+            // the bill is not discounted yet: a draining slot bills
+            // until it retires, and the next tick sees the real counts
+            tick.scales.push(ScaleAction {
+                unit: i,
+                fleet,
+                live,
+                target: asked,
+                trigger: Trigger::Rate,
+                decider: "scale",
+            });
+            states[i].note_action();
+        }
+    }
+    tick
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::gear::Gear;
+    use std::time::Duration;
+
+    fn gear(acc: f64, work: f64, rps: f64) -> Gear {
+        Gear {
+            id: 0,
+            k: 3,
+            epsilon: 0.03,
+            theta: 0.6,
+            mid: vec![],
+            max_batch: 8,
+            replicas: 2,
+            tier_fleet: vec![],
+            dollar_per_req: 0.0,
+            accuracy: acc,
+            relative_cost: work,
+            sustainable_rps: rps,
+        }
+    }
+
+    /// per-replica: top 500 rps, fast 2000 rps (quoted at 2 replicas).
+    fn plan2() -> GearPlan {
+        GearPlan::new(vec![gear(0.95, 1.0, 1000.0), gear(0.85, 0.25, 4000.0)])
+            .unwrap()
+    }
+
+    fn ctrl() -> ControllerConfig {
+        ControllerConfig {
+            dwell: Duration::from_millis(100),
+            ewma_alpha: 1.0,
+            ..ControllerConfig::default()
+        }
+    }
+
+    fn scale(min: usize, max: usize) -> ScaleConfig {
+        ScaleConfig {
+            min_replicas: min,
+            max_replicas: max,
+            ..ScaleConfig::default()
+        }
+    }
+
+    fn obs(rps: f64) -> Observation {
+        Observation { arrival_rps: rps, outstanding_frac: 0.0, p99_s: f64::NAN }
+    }
+
+    fn mono_cfg() -> ControlConfig {
+        ControlConfig::autoscaled(plan2(), ctrl(), scale(1, 4), 0.0)
+    }
+
+    fn states(cfg: &ControlConfig) -> Vec<ControlState> {
+        cfg.units
+            .iter()
+            .map(|_| ControlState::new(0, &cfg.ctrl))
+            .collect()
+    }
+
+    /// One-unit tick with no forecast and an H100 price tag.
+    fn tick1(
+        cfg: &ControlConfig,
+        st: &mut [ControlState],
+        o: Observation,
+        warming: usize,
+        live: usize,
+    ) -> Tick {
+        decide_tick(
+            cfg,
+            st,
+            &[o],
+            &[(warming, live, 0)],
+            &[Gpu::H100],
+            &[0.0],
+            0.2,
+        )
+    }
+
+    #[test]
+    fn rising_load_rents_replicas_before_trading_accuracy() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        // 1500 rps: the max fleet of the top gear sustains 4*500=2000,
+        // so no shift -- but the 1-replica fleet must grow to 4
+        let t = tick1(&cfg, &mut st, obs(1500.0), 0, 1);
+        assert!(t.shifts.is_empty());
+        assert_eq!(t.scales.len(), 1);
+        let s = t.scales[0];
+        assert_eq!((s.target, s.trigger, s.decider), (4, Trigger::Rate, "scale"));
+        assert_eq!(st[0].current(), 0, "accuracy held while machines are cheap");
+    }
+
+    #[test]
+    fn drowning_load_shifts_and_resizes_in_one_tick() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        // 3000 rps drowns even 4x top (1700 effective): downshift to
+        // the fast gear AND size its fleet in the same decision -- the
+        // fast gear (2000 rps/replica) releases down to 3 machines (the
+        // conservative scale_down_util sizing; 2 would run at 75%)
+        let t = tick1(&cfg, &mut st, obs(3000.0), 0, 4);
+        assert_eq!(t.shifts.len(), 1);
+        assert_eq!(
+            (t.shifts[0].shift, t.shifts[0].trigger),
+            (Shift::Down, Trigger::Rate)
+        );
+        assert_eq!(st[0].current(), 1);
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!(t.scales[0].target, 3);
+    }
+
+    #[test]
+    fn calm_load_upshifts_then_drains_the_surplus() {
+        let cfg = mono_cfg();
+        let mut st = vec![ControlState::new(1, &cfg.ctrl)];
+        // 300 rps on the fast gear: upshift (top's max fleet runs at
+        // 0.15) and size the top-gear fleet for 300 rps (1 replica)
+        let t = tick1(&cfg, &mut st, obs(300.0), 0, 4);
+        assert_eq!(t.shifts.len(), 1);
+        assert_eq!(t.shifts[0].shift, Shift::Up);
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!(t.scales[0].target, 1);
+    }
+
+    #[test]
+    fn dwell_blocks_lone_scale_actions_but_not_the_shift_resize_pair() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        st[0].note_action();
+        let t = decide_tick(
+            &cfg,
+            &mut st,
+            &[obs(1500.0)],
+            &[(0, 1, 0)],
+            &[Gpu::H100],
+            &[0.0],
+            0.02,
+        );
+        assert!(t.shifts.is_empty());
+        assert!(t.scales.is_empty(), "dwell must gate scale actions too");
+        // once the dwell expires the pending resize applies
+        let t = tick1(&cfg, &mut st, obs(1500.0), 0, 1);
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!(t.scales[0].target, 4);
+        // and the next decision's dwell is consumed by that scale action
+        let t = decide_tick(
+            &cfg,
+            &mut st,
+            &[obs(3000.0)],
+            &[(0, 4, 0)],
+            &[Gpu::H100],
+            &[0.0],
+            0.02,
+        );
+        assert_eq!(t, Tick::default());
+    }
+
+    #[test]
+    fn queue_pressure_scales_up_even_at_calm_ewma() {
+        let cfg = mono_cfg();
+        let mut st = vec![ControlState::new(1, &cfg.ctrl)];
+        // rate looks idle but queues are jammed: the gear machine steps
+        // down if it can (it cannot: already fastest), the fleet grows
+        let jammed =
+            Observation { arrival_rps: 5.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        let t = tick1(&cfg, &mut st, jammed, 0, 2);
+        assert!(t.shifts.is_empty(), "already in the fastest gear");
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!(t.scales[0].target, 3);
+        assert_eq!(t.scales[0].trigger, Trigger::Pressure);
+    }
+
+    #[test]
+    fn warming_replicas_count_against_reprovisioning() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        // first decision provisions 3 more machines (slow warm-up: they
+        // stay Warming)
+        let t = tick1(&cfg, &mut st, obs(1500.0), 0, 1);
+        assert_eq!(t.scales[0].target, 4);
+        // while they warm, the same load must NOT re-provision: the
+        // in-flight capacity already covers the target
+        let t = tick1(&cfg, &mut st, obs(1500.0), 3, 1);
+        assert!(t.scales.is_empty(), "re-provisioned capacity in flight");
+        // even a jammed queue doesn't kick the fleet past the in-flight
+        // capacity: the warm-ups will relieve the same debt
+        let jammed = Observation {
+            arrival_rps: 1500.0,
+            outstanding_frac: 0.9,
+            p99_s: f64::NAN,
+        };
+        let t = tick1(&cfg, &mut st, jammed, 3, 1);
+        assert!(t.scales.is_empty(), "pressure re-rented warming capacity");
+        // once they go live nothing changes either
+        let t = tick1(&cfg, &mut st, obs(1500.0), 0, 4);
+        assert!(t.scales.is_empty());
+    }
+
+    #[test]
+    fn steady_state_decides_nothing() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        // 600 rps on 2 live top-gear replicas: util 0.6, inside every band
+        for _ in 0..10 {
+            let t = tick1(&cfg, &mut st, obs(600.0), 0, 2);
+            assert_eq!(t, Tick::default());
+        }
+    }
+
+    #[test]
+    fn forecast_provisions_ahead_of_the_ewma() {
+        let cfg = mono_cfg();
+        let mut st = states(&cfg);
+        // EWMA says 300 rps (1 replica is plenty) but the trend
+        // forecasts 1500: provision for the forecast now
+        let t = decide_tick(
+            &cfg,
+            &mut st,
+            &[obs(300.0)],
+            &[(0, 1, 0)],
+            &[Gpu::H100],
+            &[1500.0],
+            0.2,
+        );
+        assert_eq!(t.scales.len(), 1, "{t:?}");
+        assert_eq!(t.scales[0].target, 4);
+        // a forecast never drains below what the EWMA needs: with the
+        // fleet already at 4 and both signals calm, release follows the
+        // EWMA (forecast 0 = no prediction)
+        let t = decide_tick(
+            &cfg,
+            &mut st,
+            &[obs(300.0)],
+            &[(0, 4, 0)],
+            &[Gpu::H100],
+            &[0.0],
+            0.2,
+        );
+        assert_eq!(t.scales[0].target, 1);
+    }
+
+    // ----- tiered fleets ------------------------------------------------
+
+    /// cheap fast front tier, midsize interior, slow top; no gear
+    /// shifting (the TieredAutoscaler-equivalent shape).
+    fn fleet_cfg(max_dollars: f64) -> ControlConfig {
+        let tier = |rps: f64| TierControl {
+            per_replica_rps: rps,
+            scale: Some(scale(1, 4)),
+            rungs: vec![],
+        };
+        ControlConfig::tiered(
+            vec![tier(2000.0), tier(1000.0), tier(400.0)],
+            ctrl(),
+            max_dollars,
+        )
+    }
+
+    fn gpus3() -> Vec<Gpu> {
+        vec![Gpu::V100, Gpu::A6000, Gpu::H100]
+    }
+
+    #[test]
+    fn tiers_size_independently_against_their_own_arrivals() {
+        let cfg = fleet_cfg(0.0);
+        cfg.validate(3);
+        let mut st = states(&cfg);
+        // tier arrivals thin out down the cascade: 3000 offered, 40%
+        // defer to tier 2, a third of that reaches the top
+        let o = [obs(3000.0), obs(1200.0), obs(400.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        // 3000/(2000*0.85) -> 2; 1200/(1000*0.85) -> 2; 400/(400*0.85) -> 2
+        assert_eq!(t.scales.len(), 3);
+        assert!(t.scales.iter().all(|s| s.target == 2), "{t:?}");
+        // a calm interior tier is left alone while the top grows
+        let mut st = states(&cfg);
+        let o = [obs(1000.0), obs(100.0), obs(700.0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!((t.scales[0].unit, t.scales[0].target), (2, 3));
+    }
+
+    #[test]
+    fn dwell_gates_each_tier_separately() {
+        let cfg = fleet_cfg(0.0);
+        let mut st = states(&cfg);
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        // first decision consumes tier 0's dwell only
+        let o = [obs(3000.0), obs(0.0), obs(0.0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 1);
+        // immediately after, tier 0 is blocked but tier 2 can still act
+        let o = [obs(3000.0), obs(0.0), obs(700.0)];
+        let c2 = [(0, 2, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c2, &gpus3(), &[0.0; 3], 0.01);
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!((t.scales[0].unit, t.scales[0].target), (2, 3));
+    }
+
+    #[test]
+    fn queue_pressure_kicks_a_tier_without_rate_evidence() {
+        let cfg = fleet_cfg(0.0);
+        let mut st = states(&cfg);
+        let jammed =
+            Observation { arrival_rps: 5.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        let o = [obs(5.0), jammed, obs(5.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 1);
+        let s = t.scales[0];
+        assert_eq!((s.unit, s.target, s.trigger), (1, 2, Trigger::Pressure));
+        // warming capacity suppresses the kicker
+        let mut st = states(&cfg);
+        let c = [(0, 1, 0), (1, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert!(t.scales.is_empty(), "{t:?}");
+    }
+
+    #[test]
+    fn dollar_budget_clamps_cheapest_first() {
+        // current bill: 1xV100 + 1xA6000 + 1xH100 = 3.79 $/h.  Budget
+        // leaves 1.60 of headroom: tier 0 can afford 3 more V100s
+        // (1.50), then nothing is left for the H100 the top tier wants.
+        let cfg = fleet_cfg(5.39);
+        let mut st = states(&cfg);
+        let o = [obs(6000.0), obs(0.0), obs(3000.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 1, "expensive tier starved: {t:?}");
+        assert_eq!((t.scales[0].unit, t.scales[0].target), (0, 4));
+        // drains are always allowed: they only return money
+        let mut st = states(&cfg);
+        let o = [obs(0.0), obs(0.0), obs(0.0)];
+        let c = [(0, 4, 0), (0, 1, 0), (0, 2, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 2);
+        assert!(t.scales.iter().all(|s| s.target == 1));
+        // draining slots still count against the budget: with 3 slots
+        // draining elsewhere the headroom is gone entirely
+        let cfg2 = fleet_cfg(4.0);
+        let mut st = states(&cfg2);
+        let o = [obs(6000.0), obs(0.0), obs(0.0)];
+        let c = [(0, 1, 0), (0, 1, 3), (0, 1, 0)]; // 3 A6000s draining
+        let t = decide_tick(&cfg2, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert!(t.scales.is_empty(), "budget must count draining slots: {t:?}");
+    }
+
+    #[test]
+    fn partial_budget_grants_attribute_the_arbiter() {
+        // headroom affords exactly one more V100 though the policy asks
+        // for three: the grant is clamped and attributed to "budget"
+        let cfg = fleet_cfg(4.29);
+        let mut st = states(&cfg);
+        let o = [obs(6000.0), obs(0.0), obs(0.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 1);
+        let s = t.scales[0];
+        assert_eq!((s.unit, s.target, s.decider), (0, 2, "budget"));
+    }
+
+    #[test]
+    fn unbounded_budget_never_clamps() {
+        let cfg = fleet_cfg(0.0);
+        let mut st = states(&cfg);
+        let o = [obs(1e9), obs(1e9), obs(1e9)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.scales.len(), 3);
+        assert!(t.scales.iter().all(|s| s.target == 4), "max bound applies");
+    }
+
+    // ----- per-tier gear shifting ---------------------------------------
+
+    /// 3 tiers, fixed single-replica fleets, theta ladders on tiers 0
+    /// and 1 (walked by the deciders observing tiers 1 and 2).
+    fn geared_fleet_cfg() -> ControlConfig {
+        let rungs = vec![
+            TierRung { theta: None, max_batch: 8 },
+            TierRung { theta: Some(0.6), max_batch: 8 },
+            TierRung { theta: Some(0.3), max_batch: 8 },
+        ];
+        let tier = |rps: f64, rungs: Vec<TierRung>| TierControl {
+            per_replica_rps: rps,
+            scale: None,
+            rungs,
+        };
+        ControlConfig::tiered(
+            vec![
+                tier(2000.0, rungs.clone()),
+                tier(1000.0, rungs.clone()),
+                tier(400.0, rungs), // last tier: rungs ignored
+            ],
+            ctrl(),
+            0.0,
+        )
+    }
+
+    #[test]
+    fn downstream_overload_lowers_the_upstream_theta() {
+        let cfg = geared_fleet_cfg();
+        cfg.validate(3);
+        assert_eq!(cfg.gears.len(), 2, "last tier gets no decider");
+        let mut st = states(&cfg);
+        // the top tier (capacity 400) drowns at 800 rps of deferrals:
+        // the decider observing unit 2 lowers unit 1's theta one rung
+        let o = [obs(100.0), obs(300.0), obs(800.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.shifts.len(), 1, "{t:?}");
+        let s = t.shifts[0];
+        assert_eq!((s.obs_unit, s.act_unit), (2, 1));
+        assert_eq!((s.from, s.to, s.shift), (0, 1, Shift::Down));
+        // the actuated rung's config carries the theta override
+        let dec = cfg.decider_for_obs(2).unwrap();
+        assert_eq!(dec.config_at(1).thetas, vec![0.6]);
+        assert!(dec.config_at(0).thetas.is_empty(), "rung 0 is calibrated");
+        // once the deferral stream calms, the theta is restored
+        let o = [obs(100.0), obs(300.0), obs(100.0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.shifts.len(), 1);
+        assert_eq!((t.shifts[0].to, t.shifts[0].shift), (0, Shift::Up));
+    }
+
+    #[test]
+    fn theta_shift_guards_the_observing_tiers_resize() {
+        // tier 2 elastic under a budget with zero headroom (bill at
+        // (1,1,2) slots = 0.5 + 0.8 + 2*2.49 = 6.28): renting is
+        // exhausted, so relief comes from tier 1's theta ladder
+        let rungs = vec![
+            TierRung { theta: None, max_batch: 8 },
+            TierRung { theta: Some(0.5), max_batch: 8 },
+        ];
+        let cfg = ControlConfig::tiered(
+            vec![
+                TierControl {
+                    per_replica_rps: 2000.0,
+                    scale: None,
+                    rungs: rungs.clone(),
+                },
+                TierControl { per_replica_rps: 1000.0, scale: None, rungs },
+                TierControl {
+                    per_replica_rps: 400.0,
+                    scale: Some(scale(1, 4)),
+                    rungs: vec![],
+                },
+            ],
+            ctrl(),
+            6.28,
+        );
+        cfg.validate(3);
+        let mut st = states(&cfg);
+        // tier 2 drowning: the theta shift lands, and the SAME tick can
+        // not also resize tier 2 -- the shift consumed its dwell (gear
+        // and scale share one clock: the fleet-level hysteresis guard)
+        let o = [obs(100.0), obs(300.0), obs(1600.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 2, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.shifts.len(), 1);
+        assert_eq!((t.shifts[0].obs_unit, t.shifts[0].act_unit), (2, 1));
+        assert!(t.scales.is_empty(), "resize raced the shift: {t:?}");
+        // within the dwell, even post-shift (thinned) arrivals that
+        // would justify draining tier 2 are held: no reacting to a
+        // stream the shift just changed until a full dwell of evidence
+        let o2 = [obs(100.0), obs(300.0), obs(100.0)];
+        let t = decide_tick(&cfg, &mut st, &o2, &c, &gpus3(), &[0.0; 3], 0.02);
+        assert_eq!(t, Tick::default(), "acted inside the guard dwell");
+        // once the dwell expires the stack moves again (here: the calm
+        // stream restores the theta first -- accuracy before release)
+        let t = decide_tick(&cfg, &mut st, &o2, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert_eq!(t.shifts.len(), 1);
+        assert_eq!(t.shifts[0].shift, Shift::Up);
+    }
+
+    #[test]
+    fn undecided_units_still_fold_their_observations() {
+        // tier 0 fixed, no rungs, no scale: nothing decides on it, but
+        // its EWMA must still track traffic (per-tier gauges, and any
+        // decider enabled later must not start from a frozen state)
+        let cfg = ControlConfig::tiered(
+            vec![
+                TierControl {
+                    per_replica_rps: 2000.0,
+                    scale: None,
+                    rungs: vec![],
+                },
+                TierControl {
+                    per_replica_rps: 1000.0,
+                    scale: Some(scale(1, 4)),
+                    rungs: vec![],
+                },
+            ],
+            ctrl(),
+            0.0,
+        );
+        cfg.validate(2);
+        let mut st = states(&cfg);
+        let o = [obs(1234.0), obs(10.0)];
+        let c = [(0, 1, 0), (0, 1, 0)];
+        let gpus = vec![Gpu::V100, Gpu::H100];
+        decide_tick(&cfg, &mut st, &o, &c, &gpus, &[0.0; 2], 0.2);
+        assert_eq!(st[0].ewma_rps(), 1234.0, "undecided unit's EWMA froze");
+    }
+
+    #[test]
+    fn unaffordable_rent_falls_back_to_accuracy_trades() {
+        // top tier elastic 1..4 but the budget affords nothing beyond
+        // the current bill: renting is denied, so the decider observing
+        // the drowned top tier trades accuracy upstream instead
+        let rungs = vec![
+            TierRung { theta: None, max_batch: 8 },
+            TierRung { theta: Some(0.5), max_batch: 8 },
+        ];
+        let mut cfg = ControlConfig::tiered(
+            vec![
+                TierControl {
+                    per_replica_rps: 2000.0,
+                    scale: None,
+                    rungs: rungs.clone(),
+                },
+                TierControl {
+                    per_replica_rps: 1000.0,
+                    scale: None,
+                    rungs: rungs.clone(),
+                },
+                TierControl {
+                    per_replica_rps: 400.0,
+                    scale: Some(scale(1, 4)),
+                    rungs: vec![],
+                },
+            ],
+            ctrl(),
+            3.79, // exactly the current 1+1+1 bill: zero headroom
+        );
+        cfg.validate(3);
+        let mut st = states(&cfg);
+        let o = [obs(100.0), obs(300.0), obs(800.0)];
+        let c = [(0, 1, 0), (0, 1, 0), (0, 1, 0)];
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert!(t.scales.is_empty(), "budget affords nothing: {t:?}");
+        assert_eq!(t.shifts.len(), 1, "accuracy trade must step in: {t:?}");
+        assert_eq!(t.shifts[0].act_unit, 1);
+        // with budget headroom instead, renting wins and no shift fires
+        cfg.max_dollars_per_hour = 0.0;
+        let mut st = states(&cfg);
+        let t = decide_tick(&cfg, &mut st, &o, &c, &gpus3(), &[0.0; 3], 0.2);
+        assert!(t.shifts.is_empty(), "rented instead: {t:?}");
+        assert_eq!(t.scales.len(), 1);
+        assert_eq!(t.scales[0].unit, 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Arrival-trend forecasting for predictive scale-up.
+//!
+//! A purely reactive autoscaler rents a machine only after the EWMA has
+//! already crossed the watermark; with a non-zero warm-up the new
+//! capacity arrives one warm-up late, and the queue eats the
+//! difference.  The [`Forecaster`] closes that gap (the ROADMAP's
+//! "predictive scale-up" item): it keeps a short window of the arrival
+//! EWMA, fits a least-squares line over it, and extrapolates
+//! `horizon_s` ahead -- the scale decider sizes the fleet to
+//! `max(ewma, forecast)`, so a *rising* trend provisions before the
+//! watermark breach instead of after it.
+//!
+//! Only the warm-up side is predictive: a falling trend forecasts 0
+//! (ignored), so drains stay reactive -- releasing a machine early on a
+//! guess risks goodput, holding it a little longer only risks rent the
+//! hysteresis band already tolerates.
+
+use std::collections::VecDeque;
+
+/// EWMA samples retained for the trend fit (at the default 20ms sample
+/// period this spans ~640ms -- a few dwells, short enough to track
+/// on-off edges).
+pub const FORECAST_WINDOW: usize = 32;
+
+/// Linear-trend extrapolator over the arrival EWMA; see module docs.
+#[derive(Debug, Clone)]
+pub struct Forecaster {
+    window: VecDeque<(f64, f64)>,
+    cap: usize,
+    horizon_s: f64,
+}
+
+impl Forecaster {
+    /// `horizon_s` is how far ahead to extrapolate -- the control loop
+    /// passes warm-up + dwell, the time a scale-up decision takes to
+    /// become serving capacity.
+    pub fn new(cap: usize, horizon_s: f64) -> Forecaster {
+        assert!(cap >= 3, "a trend needs at least 3 samples");
+        Forecaster { window: VecDeque::with_capacity(cap), cap, horizon_s }
+    }
+
+    /// Record one (time, EWMA) sample; evicts beyond the window.
+    pub fn push(&mut self, t_s: f64, ewma_rps: f64) {
+        if self.window.len() >= self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back((t_s, ewma_rps));
+    }
+
+    /// Predicted arrival rate `horizon_s` past the newest sample, from
+    /// the least-squares line over the window.  Returns 0.0 -- "no
+    /// prediction" -- when the window holds fewer than 3 samples, has
+    /// no time spread, or the trend is flat/falling (predictive
+    /// scale-up only; drains stay reactive).
+    pub fn forecast(&self) -> f64 {
+        let n = self.window.len();
+        if n < 3 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        let mean_t = self.window.iter().map(|(t, _)| t).sum::<f64>() / nf;
+        let mean_y = self.window.iter().map(|(_, y)| y).sum::<f64>() / nf;
+        let mut cov = 0.0;
+        let mut var = 0.0;
+        for (t, y) in &self.window {
+            cov += (t - mean_t) * (y - mean_y);
+            var += (t - mean_t) * (t - mean_t);
+        }
+        if var <= 1e-12 {
+            return 0.0;
+        }
+        let slope = cov / var;
+        if slope <= 0.0 {
+            return 0.0;
+        }
+        let t_last = self.window.back().expect("non-empty").0;
+        (mean_y + slope * (t_last + self.horizon_s - mean_t)).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rising_trend_extrapolates_ahead() {
+        // 1000 rps/s ramp sampled every 20ms; horizon 100ms
+        let mut f = Forecaster::new(16, 0.1);
+        for i in 0..10 {
+            let t = i as f64 * 0.02;
+            f.push(t, 1000.0 * t);
+        }
+        let got = f.forecast();
+        // last sample is 180 rps at t=0.18; the line predicts ~280 at
+        // t=0.28
+        assert!((got - 280.0).abs() < 1.0, "forecast {got}");
+    }
+
+    #[test]
+    fn flat_and_falling_trends_predict_nothing() {
+        let mut f = Forecaster::new(16, 0.1);
+        for i in 0..10 {
+            f.push(i as f64 * 0.02, 500.0);
+        }
+        assert_eq!(f.forecast(), 0.0, "flat trend must not predict");
+        let mut f = Forecaster::new(16, 0.1);
+        for i in 0..10 {
+            f.push(i as f64 * 0.02, 1000.0 - 50.0 * i as f64);
+        }
+        assert_eq!(f.forecast(), 0.0, "falling trend must not predict");
+    }
+
+    #[test]
+    fn needs_three_samples_and_time_spread() {
+        let mut f = Forecaster::new(8, 0.1);
+        assert_eq!(f.forecast(), 0.0);
+        f.push(0.0, 100.0);
+        f.push(0.02, 200.0);
+        assert_eq!(f.forecast(), 0.0, "two samples are not a trend");
+        // zero time spread is degenerate, not a division by zero
+        let mut f = Forecaster::new(8, 0.1);
+        for _ in 0..5 {
+            f.push(1.0, 100.0);
+        }
+        assert_eq!(f.forecast(), 0.0);
+    }
+
+    #[test]
+    fn window_evicts_old_regimes() {
+        let mut f = Forecaster::new(4, 0.1);
+        // an old falling regime...
+        for i in 0..10 {
+            f.push(i as f64 * 0.02, 1000.0 - 90.0 * i as f64);
+        }
+        // ...followed by a sharp rise: only the window's 4 samples count
+        for i in 10..14 {
+            f.push(i as f64 * 0.02, 100.0 + 500.0 * (i - 9) as f64);
+        }
+        assert!(f.forecast() > 0.0, "rise hidden by evicted history");
+    }
+}

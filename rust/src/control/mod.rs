@@ -1,0 +1,71 @@
+//! The unified control plane: one decider loop for gears + scaling.
+//!
+//! PR 2-4 grew three divergent control threads -- the gear controller
+//! (`planner::controller`), the gear-coupled monolithic autoscaler
+//! (`autoscale::autoscaler`) and the per-tier fleet autoscaler
+//! (`autoscale::tiered`) -- each with its own copy of the sampler,
+//! EWMA, dwell and watermark logic.  CascadeServe's result (and the
+//! paper's 3x rental-cost claim) depends on adapting cascade
+//! configuration and fleet size *jointly*, in a single coordinated
+//! loop; this module is that loop:
+//!
+//! * [`target`] -- [`ControlTarget`]: the per-registry observation +
+//!   actuation surface a backend exposes.  A monolithic `ReplicaPool`
+//!   is one unit; a `TieredFleet` is one unit per cascade level (tier
+//!   N's arrivals = tier N-1's deferrals);
+//! * [`sampler`] -- [`Sampler`]: counter/bucket deltas -> one
+//!   [`Observation`] per unit per tick (windowed p99, so past
+//!   overloads never latch the SLO);
+//! * [`state`] -- [`ControlState`]: the pure EWMA + dwell + ladder-rung
+//!   state machine both ladder styles walk;
+//! * [`decider`] -- the pure per-tick stack: [`GearDecider`] (plan
+//!   ladders for monolithic pools, per-tier theta rungs for fleets),
+//!   the scale decider ([`ScaleConfig`] sizing with the queue-pressure
+//!   kicker), and the [`BudgetArbiter`] reconciling both under
+//!   `--max-dollars-hour` (rent before trading accuracy; grant
+//!   cheapest-tier-first; trade accuracy exactly where renting stops
+//!   being affordable);
+//! * [`forecast`] -- [`Forecaster`]: linear trend over the EWMA window
+//!   consulted by the scale decider for predictive warm-up;
+//! * [`plane`] -- [`ControlLoop`]: the ONE thread per serve process
+//!   that samples, ticks the stack, and actuates.
+//!
+//! **Per-tier gear shifting** (new with this module): each tier of a
+//! tiered fleet carries a ladder of theta rungs actuated through
+//! `TieredFleet::set_tier_gear`.  The rungs of tier N are walked by the
+//! decider observing tier N+1's pool -- lowering tier N's theta exits
+//! more requests locally, thinning exactly the deferral stream that
+//! drowns the (more expensive) tier below.  The fleet-level hysteresis
+//! guard: gear and scale share one dwell clock per unit, and a theta
+//! shift consumes the OBSERVING tier's dwell -- the tier whose arrival
+//! stream the shift just thinned can neither re-shift nor resize on
+//! pre-shift numbers, so adjacent tiers cannot oscillate against each
+//! other (the actuated tier is deliberately not blocked: its own
+//! arrivals are unchanged by its theta).
+//!
+//! Entry points: `repro serve --plan` (gear-only), `repro serve
+//! --autoscale` (gears + elasticity; synthesizes a one-gear plan from
+//! `--top-rps` when no plan is given), `repro serve --tiered
+//! --autoscale` (per-tier scaling + gear shifting + budget), and the
+//! integration suites `rust/tests/planner_integration.rs`,
+//! `rust/tests/autoscale_integration.rs`,
+//! `rust/tests/tiered_integration.rs`.
+
+pub mod decider;
+pub mod forecast;
+pub mod plane;
+pub mod sampler;
+pub mod scale;
+pub mod state;
+pub mod target;
+
+pub use decider::{
+    decide_tick, BudgetArbiter, ControlConfig, GearDecider, GearLadder,
+    ScaleAction, ShiftAction, Tick, TierControl, TierRung, UnitControl,
+};
+pub use forecast::Forecaster;
+pub use plane::ControlLoop;
+pub use sampler::Sampler;
+pub use scale::ScaleConfig;
+pub use state::{ControlState, ControllerConfig, Observation, Shift, Trigger};
+pub use target::ControlTarget;

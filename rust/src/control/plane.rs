@@ -1,0 +1,263 @@
+//! The control loop: ONE thread per serve process that observes,
+//! decides and actuates for every unit of a [`ControlTarget`].
+//!
+//! Each tick the loop advances replica lifecycles, samples every unit's
+//! registry ([`crate::control::Sampler`]), consults the per-unit
+//! [`crate::control::Forecaster`]s, runs the pure decider stack
+//! ([`decide_tick`]), and applies the result: gear actuation through
+//! [`ControlTarget::set_gear`] and fleet resizes through
+//! [`ControlTarget::scale_up`] / [`ControlTarget::drain`].  Gear swaps
+//! only affect batches formed later and drains are graceful, so no
+//! decision ever drops or duplicates an in-flight request.
+//!
+//! Telemetry (target's control registry): `gear_shift_up` /
+//! `gear_shift_down` / `scale_up_total` / `scale_down_total` counters;
+//! `gear_current`, `arrival_ewma_rps`, `latency_p99_s`,
+//! `replicas_live` / `replicas_warming` / `replicas_draining`,
+//! `replica_seconds` gauges for single-unit targets (`tier_{i}_`-
+//! prefixed `ewma_rps` / `gear` gauges for fleets, whose remaining
+//! per-tier gauges come from the fleet's own `publish`); and one
+//! [`crate::metrics::EventLog`] entry per action, recording the decider
+//! ("gear" | "scale" | "budget"), the trigger, and the tier index.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::control::decider::{decide_tick, ControlConfig, GearLadder};
+use crate::control::forecast::{Forecaster, FORECAST_WINDOW};
+use crate::control::sampler::Sampler;
+use crate::control::state::{ControlState, Shift};
+use crate::control::target::ControlTarget;
+use crate::metrics::{EventKind, EventRecord};
+
+/// Handle to the running control thread; stops and joins on drop.
+pub struct ControlLoop {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ControlLoop {
+    /// Spawn the loop over a target.  Geared pools must have been
+    /// spawned with the shared `GearHandle` for plan actuation to take
+    /// effect; the handle's active gear id picks the starting rung.
+    pub fn spawn(target: Arc<dyn ControlTarget>, cfg: ControlConfig) -> ControlLoop {
+        cfg.validate(target.n_units());
+        for g in &cfg.gears {
+            assert!(
+                target.initial_gear(g.act_unit) < g.ladder_len(),
+                "unit {} starts past its ladder",
+                g.act_unit
+            );
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stopf = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("abc-control".into())
+            .spawn(move || run(target.as_ref(), &cfg, &stopf))
+            .expect("spawn control loop");
+        ControlLoop { stop, join: Some(join) }
+    }
+
+    /// Ask the thread to exit and wait for it.  Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ControlLoop {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Pre-resolved per-unit gauges (the tick path must not pay a
+/// format!/registry lock).
+struct UnitGauges {
+    ewma: Arc<crate::metrics::Gauge>,
+    p99: Arc<crate::metrics::Gauge>,
+    lifecycle: Option<LifecycleGauges>,
+}
+
+struct LifecycleGauges {
+    live: Arc<crate::metrics::Gauge>,
+    warming: Arc<crate::metrics::Gauge>,
+    draining: Arc<crate::metrics::Gauge>,
+    seconds: Arc<crate::metrics::Gauge>,
+}
+
+fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
+    let n = target.n_units();
+    let control = Arc::clone(target.control_metrics());
+    let shifts_up = control.counter("gear_shift_up");
+    let shifts_down = control.counter("gear_shift_down");
+    let scale_ups = control.counter("scale_up_total");
+    let scale_downs = control.counter("scale_down_total");
+    // single-unit targets keep the legacy gauge names; fleets get
+    // tier-prefixed EWMA gauges (their lifecycle gauges come from the
+    // fleet's own publish)
+    let gauges: Vec<UnitGauges> = (0..n)
+        .map(|i| {
+            if n == 1 {
+                UnitGauges {
+                    ewma: control.gauge("arrival_ewma_rps"),
+                    p99: control.gauge("latency_p99_s"),
+                    lifecycle: Some(LifecycleGauges {
+                        live: control.gauge("replicas_live"),
+                        warming: control.gauge("replicas_warming"),
+                        draining: control.gauge("replicas_draining"),
+                        seconds: control.gauge("replica_seconds"),
+                    }),
+                }
+            } else {
+                UnitGauges {
+                    ewma: control.gauge(&format!("tier_{i}_ewma_rps")),
+                    p99: control.gauge(&format!("tier_{i}_p99_s")),
+                    lifecycle: None,
+                }
+            }
+        })
+        .collect();
+    // one gear gauge per ACTUATED unit
+    let gear_gauges: Vec<Arc<crate::metrics::Gauge>> = cfg
+        .gears
+        .iter()
+        .map(|g| {
+            if n == 1 {
+                control.gauge("gear_current")
+            } else {
+                control.gauge(&format!("tier_{}_gear", g.act_unit))
+            }
+        })
+        .collect();
+
+    let gpus: Vec<_> = (0..n).map(|i| target.unit_gpu(i)).collect();
+    let mut samplers: Vec<Sampler> = (0..n)
+        .map(|i| Sampler::new(&target.unit_metrics(i)))
+        .collect();
+    let mut states: Vec<ControlState> = (0..n)
+        .map(|i| {
+            let start = match cfg.decider_for_obs(i) {
+                Some(g) if matches!(g.ladder, GearLadder::Plan(_)) => {
+                    target.initial_gear(g.act_unit)
+                }
+                _ => 0,
+            };
+            ControlState::new(start, &cfg.ctrl)
+        })
+        .collect();
+    for (g, gauge) in cfg.gears.iter().zip(&gear_gauges) {
+        gauge.set(states[g.obs_unit].current() as f64);
+    }
+    let mut forecasters: Vec<Forecaster> = (0..n)
+        .map(|i| {
+            let warmup = cfg.units[i]
+                .scale
+                .map(|s| s.warmup.as_secs_f64())
+                .unwrap_or(0.0);
+            Forecaster::new(FORECAST_WINDOW, warmup + cfg.ctrl.dwell.as_secs_f64())
+        })
+        .collect();
+    let t0 = Instant::now();
+
+    let mut obs = Vec::with_capacity(n);
+    let mut counts = Vec::with_capacity(n);
+    let mut forecasts = Vec::with_capacity(n);
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(cfg.ctrl.sample_every);
+        // lifecycle first: promote warmed replicas / retire drained
+        // ones, so this tick's counts and capacities are current
+        target.advance(Instant::now());
+        obs.clear();
+        counts.clear();
+        forecasts.clear();
+        let mut dt_s = 0.0f64;
+        for i in 0..n {
+            let (o, dt) = samplers[i].sample(
+                target.unit_outstanding(i),
+                target.unit_queue_capacity(i),
+            );
+            obs.push(o);
+            counts.push(target.unit_counts(i));
+            forecasts.push(if cfg.units[i].scale.is_some() {
+                forecasters[i].forecast()
+            } else {
+                0.0
+            });
+            dt_s = dt_s.max(dt);
+        }
+        let tick =
+            decide_tick(cfg, &mut states, &obs, &counts, &gpus, &forecasts, dt_s);
+        let now_s = t0.elapsed().as_secs_f64();
+        for i in 0..n {
+            forecasters[i].push(now_s, states[i].ewma_rps());
+            gauges[i].ewma.set(states[i].ewma_rps());
+            if obs[i].p99_s.is_finite() {
+                gauges[i].p99.set(obs[i].p99_s);
+            }
+        }
+        for s in &tick.shifts {
+            let decider = cfg
+                .decider_for_obs(s.obs_unit)
+                .expect("shift came from a decider");
+            target.set_gear(s.act_unit, &decider.config_at(s.to));
+            match s.shift {
+                Shift::Up => shifts_up.inc(),
+                Shift::Down => shifts_down.inc(),
+            }
+            let live = target.unit_counts(s.act_unit).1;
+            control.events().record(EventRecord {
+                kind: EventKind::Shift,
+                decider: "gear",
+                trigger: s.trigger.name(),
+                tier: s.act_unit,
+                old_gear: s.from,
+                new_gear: s.to,
+                old_replicas: live,
+                new_replicas: live,
+            });
+        }
+        for (gi, g) in cfg.gears.iter().enumerate() {
+            gear_gauges[gi].set(states[g.obs_unit].current() as f64);
+        }
+        for a in &tick.scales {
+            if a.target > a.fleet {
+                let warmup = cfg.units[a.unit]
+                    .scale
+                    .map(|s| s.warmup)
+                    .unwrap_or_default();
+                target.scale_up(a.unit, a.target - a.fleet, warmup);
+                scale_ups.inc();
+            } else {
+                target.drain(a.unit, a.live - a.target);
+                scale_downs.inc();
+            }
+            let rung = states[a.unit].current();
+            control.events().record(EventRecord {
+                kind: EventKind::Scale,
+                decider: a.decider,
+                trigger: a.trigger.name(),
+                tier: a.unit,
+                old_gear: rung,
+                new_gear: rung,
+                old_replicas: a.fleet,
+                new_replicas: a.target,
+            });
+        }
+        // lifecycle + rental telemetry every tick
+        for (i, g) in gauges.iter().enumerate() {
+            if let Some(l) = &g.lifecycle {
+                let (warming, live, draining) = target.unit_counts(i);
+                l.live.set(live as f64);
+                l.warming.set(warming as f64);
+                l.draining.set(draining as f64);
+                l.seconds.set(target.unit_replica_seconds(i));
+            }
+        }
+        target.publish();
+    }
+}

@@ -1,0 +1,123 @@
+//! Per-unit metrics sampler: counter/bucket deltas in, one
+//! [`Observation`] + elapsed seconds out per call.
+//!
+//! One [`Sampler`] watches one metrics registry -- a monolithic pool's
+//! shared registry, or one tier pool's private registry in a tiered
+//! fleet (whose submitted + shed deltas are exactly the upstream tier's
+//! deferral stream).  Every metric handle is resolved once so the
+//! sample path never pays a registry lock, and the latency quantile is
+//! WINDOWED (bucket-snapshot deltas) so a past overload can never latch
+//! the SLO.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::control::state::Observation;
+use crate::metrics::Metrics;
+
+/// Delta sampler over one registry; see the module docs.
+pub struct Sampler {
+    submitted: Arc<crate::metrics::Counter>,
+    shed: Arc<crate::metrics::Counter>,
+    latency: Arc<crate::metrics::Histogram>,
+    last_arrivals: u64,
+    last_buckets: Vec<u64>,
+    last_tick: Instant,
+}
+
+impl Sampler {
+    pub fn new(metrics: &Metrics) -> Sampler {
+        let submitted = metrics.counter("requests_submitted");
+        let shed = metrics.counter("requests_shed");
+        let latency = metrics.histogram("request_latency_s");
+        Sampler {
+            last_arrivals: submitted.get() + shed.get(),
+            last_buckets: latency.bucket_snapshot(),
+            last_tick: Instant::now(),
+            submitted,
+            shed,
+            latency,
+        }
+    }
+
+    /// Take one sample: offered arrival rate since the last call, the
+    /// unit's outstanding work as a fraction of `queue_capacity` (its
+    /// provisioned admission slots -- pass ALL slots' worth, Draining
+    /// and Warming included, or the fraction reads >1.0 right after a
+    /// drain and flaps the pressure trigger), and the WINDOWED p99
+    /// (this interval's samples only -- the all-time quantile would
+    /// latch one past overload into a permanent SLO breach).
+    pub fn sample(
+        &mut self,
+        outstanding: usize,
+        queue_capacity: usize,
+    ) -> (Observation, f64) {
+        let now = Instant::now();
+        let dt_s = now.duration_since(self.last_tick).as_secs_f64().max(1e-9);
+        self.last_tick = now;
+        let arrivals = self.submitted.get() + self.shed.get();
+        let buckets = self.latency.bucket_snapshot();
+        let p99_s = crate::metrics::Histogram::quantile_between(
+            &self.last_buckets,
+            &buckets,
+            0.99,
+        );
+        self.last_buckets = buckets;
+        let obs = Observation {
+            arrival_rps: arrivals.saturating_sub(self.last_arrivals) as f64 / dt_s,
+            outstanding_frac: outstanding as f64 / queue_capacity.max(1) as f64,
+            p99_s,
+        };
+        self.last_arrivals = arrivals;
+        (obs, dt_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_reads_deltas_not_totals() {
+        let m = Metrics::new();
+        m.counter("requests_submitted").add(100);
+        let mut s = Sampler::new(&m);
+        // arrivals before construction are the baseline, not a delta
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (obs, dt) = s.sample(0, 10);
+        assert_eq!(obs.arrival_rps, 0.0);
+        assert!(dt > 0.0);
+        // submitted + shed both count as offered load
+        m.counter("requests_submitted").add(30);
+        m.counter("requests_shed").add(10);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (obs, dt) = s.sample(5, 10);
+        assert!((obs.arrival_rps - 40.0 / dt).abs() < 1e-6);
+        assert!((obs.outstanding_frac - 0.5).abs() < 1e-12);
+        // empty latency window reads NaN, never a stale value
+        assert!(obs.p99_s.is_nan());
+        // zero capacity never divides by zero
+        let (obs, _) = s.sample(3, 0);
+        assert!((obs.outstanding_frac - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_p99_is_windowed() {
+        let m = Metrics::new();
+        let h = m.histogram("request_latency_s");
+        for _ in 0..100 {
+            h.record(1.0); // a past overload
+        }
+        let mut s = Sampler::new(&m);
+        for _ in 0..100 {
+            h.record(0.001); // the current calm window
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let (obs, _) = s.sample(0, 1);
+        assert!(
+            obs.p99_s < 0.01,
+            "windowed p99 latched the past overload: {}",
+            obs.p99_s
+        );
+    }
+}

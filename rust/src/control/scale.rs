@@ -1,6 +1,6 @@
 //! The scale policy: arrival EWMA + active gear -> target replica
-//! count.  Pure and clock-free, like `ControlState::step`, so the
-//! sizing math is unit-testable without threads.
+//! count.  Pure and clock-free, like `ControlState`, so the sizing math
+//! is unit-testable without threads.
 //!
 //! Sizing is M/D/1-flavoured provisioning rather than queueing-exact:
 //! hold the fleet where the EWMA runs at or below `scale_up_util` of
@@ -8,13 +8,13 @@
 //! run below the stricter `scale_down_util` -- the gap between the two
 //! watermarks is the hysteresis band that keeps on-off traffic from
 //! flapping the fleet at the sample rate (the shared dwell clock in
-//! the autoscaler bounds it further).  Queue pressure adds a kicker:
+//! the control loop bounds it further).  Queue pressure adds a kicker:
 //! when outstanding work crosses the controller's `queue_pressure`
 //! watermark the target is bumped at least one above the current fleet
 //! even if the rate EWMA looks calm (a stuck queue is capacity debt
 //! the arrival rate cannot see).
 
-/// Fleet bounds + watermarks for the autoscaler.
+/// Fleet bounds + watermarks for one unit's scale decider.
 #[derive(Debug, Clone, Copy)]
 pub struct ScaleConfig {
     /// Never drain below this many replicas (>= 1).
@@ -45,7 +45,7 @@ impl Default for ScaleConfig {
 }
 
 impl ScaleConfig {
-    /// Panic early on nonsense configs (mirrors `Controller::spawn`).
+    /// Panic early on nonsense configs (mirrors `ControlLoop::spawn`).
     pub fn validate(&self) {
         assert!(self.min_replicas >= 1, "min_replicas must be >= 1");
         assert!(
@@ -73,7 +73,7 @@ impl ScaleConfig {
 
     /// The target fleet size for the observed load.  `per_replica_rps`
     /// is the ACTIVE gear's per-replica capacity (a gear shift changes
-    /// it, which is why the autoscaler re-evaluates the target in the
+    /// it, which is why the control loop re-evaluates the target in the
     /// same tick as the shift).  `pressured` is the controller's
     /// queue-pressure signal.  Pure; the caller clamps nothing -- the
     /// result is already within `[min_replicas, max_replicas]`.

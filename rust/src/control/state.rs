@@ -1,0 +1,564 @@
+//! The control plane's pure decision state: one EWMA + dwell clock +
+//! ladder position per controlled unit.
+//!
+//! [`ControlState`] is a pure function of (configuration, observation,
+//! elapsed time) -- no clocks, no metrics, no locks -- so every decider
+//! in the stack (`control::decider`) is unit-testable without threads.
+//! Two ladder-walking styles share it:
+//!
+//! * [`ControlState::step_fleet`] walks a [`GearPlan`] whose rungs quote
+//!   real capacities: rate-driven downshifts jump straight to the most
+//!   accurate gear that sustains the EWMA (one dwell per rung would
+//!   crawl through a deep burst), upshifts project the next gear up
+//!   against the stricter watermark;
+//! * [`ControlState::step_watermark`] walks a ladder whose rungs do NOT
+//!   change the observed unit's own capacity (per-tier theta rungs: a
+//!   lower theta thins the *downstream* arrival stream, not this
+//!   pool's).  It steps one rung per dwell on the same watermark
+//!   triggers -- there is no capacity model to jump by.
+//!
+//! Both styles fold the observation through [`ControlState::observe`]
+//! exactly once per tick and share the dwell clock with scale decisions
+//! ([`ControlState::dwell_ok`] / [`ControlState::note_action`]), so a
+//! gear shift and a fleet resize can never thrash against each other.
+
+use std::time::Duration;
+
+use crate::planner::gear::GearPlan;
+
+/// Watermarks + pacing for the control plane.
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerConfig {
+    /// Metrics sampling period.
+    pub sample_every: Duration,
+    /// Minimum time between actions per unit (hysteresis dwell).
+    pub dwell: Duration,
+    /// Downshift when `ewma_rps / capacity` exceeds this.
+    pub down_util: f64,
+    /// Upshift only when the next gear up would still sit below this
+    /// (must be < `down_util` for hysteresis).
+    pub up_util: f64,
+    /// Downshift when outstanding work exceeds this fraction of the
+    /// unit's total admission capacity; upshifts require calm queues
+    /// (below half of it).
+    pub queue_pressure: f64,
+    /// Optional p99 SLO in seconds; breaching it forces a downshift
+    /// (0 disables).
+    pub p99_slo_s: f64,
+    /// Per-sample EWMA smoothing factor in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            sample_every: Duration::from_millis(20),
+            dwell: Duration::from_millis(250),
+            down_util: crate::types::UTIL_HIGH_WATERMARK,
+            up_util: crate::types::UTIL_LOW_WATERMARK,
+            queue_pressure: 0.50,
+            p99_slo_s: 0.0,
+            ewma_alpha: 0.30,
+        }
+    }
+}
+
+/// One metrics sample the state machine consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Instantaneous arrival rate over the last sample period, req/s
+    /// (admitted + shed: offered load, not goodput).
+    pub arrival_rps: f64,
+    /// Outstanding work / unit admission capacity, in [0, 1].
+    pub outstanding_frac: f64,
+    /// Request latency p99 over the last sample window only, seconds
+    /// (NaN when the window holds no samples -- never triggers the SLO).
+    pub p99_s: f64,
+}
+
+/// Direction of a gear shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shift {
+    /// Toward accuracy (lower ladder index).
+    Up,
+    /// Toward throughput (higher ladder index).
+    Down,
+}
+
+/// What forced a controller decision (event-log attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Arrival-rate EWMA crossed a utilisation watermark.
+    Rate,
+    /// Outstanding work crossed the queue-pressure watermark.
+    Pressure,
+    /// The windowed p99 breached the SLO.
+    Slo,
+}
+
+impl Trigger {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Trigger::Rate => "rate",
+            Trigger::Pressure => "pressure",
+            Trigger::Slo => "slo",
+        }
+    }
+}
+
+/// One unit's pure decision state (EWMA, dwell clock, ladder rung).
+#[derive(Debug, Clone)]
+pub struct ControlState {
+    current: usize,
+    ewma_rps: f64,
+    since_shift_s: f64,
+}
+
+impl ControlState {
+    /// Start at ladder rung `current` (usually the top, index 0).  The
+    /// dwell clock starts satisfied so a controller dropped into an
+    /// already-overloaded system reacts on the first sample.
+    pub fn new(current: usize, cfg: &ControllerConfig) -> ControlState {
+        ControlState {
+            current,
+            ewma_rps: 0.0,
+            since_shift_s: cfg.dwell.as_secs_f64(),
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn ewma_rps(&self) -> f64 {
+        self.ewma_rps
+    }
+
+    /// Fold one observation over `dt_s` seconds into the EWMA and
+    /// advance the dwell clock, WITHOUT deciding anything.  The decider
+    /// stack calls this exactly once per unit per tick: through
+    /// [`ControlState::step_fleet`] / [`ControlState::step_watermark`]
+    /// when the unit has a gear decider, directly when it only scales.
+    pub fn observe(&mut self, cfg: &ControllerConfig, obs: Observation, dt_s: f64) {
+        self.ewma_rps =
+            cfg.ewma_alpha * obs.arrival_rps + (1.0 - cfg.ewma_alpha) * self.ewma_rps;
+        self.since_shift_s += dt_s.max(0.0);
+    }
+
+    /// Whether the shared dwell clock permits another action.  The
+    /// scale decider consults this before a resize so gear shifts and
+    /// scale decisions share one hysteresis clock.
+    pub fn dwell_ok(&self, cfg: &ControllerConfig) -> bool {
+        self.since_shift_s >= cfg.dwell.as_secs_f64()
+    }
+
+    /// Reset the shared dwell clock (a scale action counts like a
+    /// shift: both are capacity decisions and must not thrash).
+    pub fn note_action(&mut self) {
+        self.since_shift_s = 0.0;
+    }
+
+    /// Fold in one observation over `dt_s` seconds; returns the shift to
+    /// apply, if any.  Pure: no clocks, no metrics, no locks.
+    pub fn step(
+        &mut self,
+        plan: &GearPlan,
+        cfg: &ControllerConfig,
+        obs: Observation,
+        dt_s: f64,
+    ) -> Option<Shift> {
+        self.step_fleet(plan, cfg, obs, dt_s, None).map(|(s, _)| s)
+    }
+
+    /// [`ControlState::step`] with fleet-aware capacity and trigger
+    /// attribution.  With `fleet = Some(n)` every gear's capacity is
+    /// evaluated at `n` replicas (`per_replica_rps * n`) instead of its
+    /// planned allocation -- the control plane passes the *attainable*
+    /// fleet (max replicas, clamped to what the dollar budget affords)
+    /// so rate-driven downshifts fire only when even the fleet it could
+    /// actually rent cannot sustain the load (renting machines is tried
+    /// before trading accuracy; see `control::decider`).
+    pub fn step_fleet(
+        &mut self,
+        plan: &GearPlan,
+        cfg: &ControllerConfig,
+        obs: Observation,
+        dt_s: f64,
+        fleet: Option<usize>,
+    ) -> Option<(Shift, Trigger)> {
+        self.observe(cfg, obs, dt_s);
+        if self.since_shift_s < cfg.dwell.as_secs_f64() {
+            return None;
+        }
+        let capacity = |idx: usize| {
+            let g = &plan.gears[idx];
+            match fleet {
+                Some(n) => g.per_replica_rps() * n as f64,
+                None => g.sustainable_rps,
+            }
+        };
+        let util = self.ewma_rps / capacity(self.current).max(1e-9);
+        let slo_breached = cfg.p99_slo_s > 0.0 && obs.p99_s > cfg.p99_slo_s;
+        if (util > cfg.down_util
+            || obs.outstanding_frac > cfg.queue_pressure
+            || slo_breached)
+            && self.current + 1 < plan.len()
+        {
+            // rate-driven overload jumps straight to the most accurate
+            // gear that sustains the EWMA at the downshift watermark
+            // (one dwell per rung would crawl through a deep burst);
+            // pressure/SLO-driven shifts without rate evidence step one.
+            // The rung is chosen at the SAME capacity basis as the
+            // trigger (fleet-scaled when `fleet` is set): judging the
+            // jump by the plan's smaller per-allocation quotes would
+            // overshoot to the bottom of the ladder when one rung down
+            // at the full fleet already sustains the load.
+            let target = (0..plan.len())
+                .find(|&i| self.ewma_rps <= capacity(i) * cfg.down_util)
+                .unwrap_or(plan.len() - 1);
+            self.current = target.clamp(self.current + 1, plan.len() - 1);
+            self.since_shift_s = 0.0;
+            let trigger = if util > cfg.down_util {
+                Trigger::Rate
+            } else if slo_breached {
+                Trigger::Slo
+            } else {
+                Trigger::Pressure
+            };
+            return Some((Shift::Down, trigger));
+        }
+        if self.current > 0 {
+            let projected = self.ewma_rps / capacity(self.current - 1).max(1e-9);
+            if projected < cfg.up_util
+                && obs.outstanding_frac < cfg.queue_pressure / 2.0
+                && !slo_breached
+            {
+                self.current -= 1;
+                self.since_shift_s = 0.0;
+                return Some((Shift::Up, Trigger::Rate));
+            }
+        }
+        None
+    }
+
+    /// Walk a ladder whose rungs leave the observed unit's own capacity
+    /// unchanged (per-tier theta rungs): one rung per dwell, same
+    /// watermark triggers as [`ControlState::step_fleet`], judged
+    /// against the fixed `capacity_rps`.  There is no per-rung capacity
+    /// model to jump by, so deep overloads descend one dwell at a time;
+    /// the dwell clock bounds the rung-oscillation a theta shift's own
+    /// arrival-thinning can otherwise cause.
+    pub fn step_watermark(
+        &mut self,
+        cfg: &ControllerConfig,
+        obs: Observation,
+        dt_s: f64,
+        capacity_rps: f64,
+        ladder_len: usize,
+    ) -> Option<(Shift, Trigger)> {
+        self.observe(cfg, obs, dt_s);
+        if self.since_shift_s < cfg.dwell.as_secs_f64() {
+            return None;
+        }
+        let util = self.ewma_rps / capacity_rps.max(1e-9);
+        let slo_breached = cfg.p99_slo_s > 0.0 && obs.p99_s > cfg.p99_slo_s;
+        if (util > cfg.down_util
+            || obs.outstanding_frac > cfg.queue_pressure
+            || slo_breached)
+            && self.current + 1 < ladder_len
+        {
+            self.current += 1;
+            self.since_shift_s = 0.0;
+            let trigger = if util > cfg.down_util {
+                Trigger::Rate
+            } else if slo_breached {
+                Trigger::Slo
+            } else {
+                Trigger::Pressure
+            };
+            return Some((Shift::Down, trigger));
+        }
+        if self.current > 0
+            && util < cfg.up_util
+            && obs.outstanding_frac < cfg.queue_pressure / 2.0
+            && !slo_breached
+        {
+            self.current -= 1;
+            self.since_shift_s = 0.0;
+            return Some((Shift::Up, Trigger::Rate));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::gear::Gear;
+
+    fn plan3() -> GearPlan {
+        let gear = |acc: f64, rps: f64| Gear {
+            id: 0,
+            k: 3,
+            epsilon: 0.03,
+            theta: 0.6,
+            mid: vec![],
+            max_batch: 8,
+            replicas: 1,
+            tier_fleet: vec![],
+            dollar_per_req: 0.0,
+            accuracy: acc,
+            relative_cost: 1.0,
+            sustainable_rps: rps,
+        };
+        GearPlan::new(vec![
+            gear(0.95, 1000.0),
+            gear(0.90, 2000.0),
+            gear(0.80, 4000.0),
+        ])
+        .unwrap()
+    }
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            dwell: Duration::from_millis(100),
+            ewma_alpha: 1.0, // no smoothing: tests reason about exact rates
+            ..ControllerConfig::default()
+        }
+    }
+
+    fn obs(rps: f64) -> Observation {
+        Observation { arrival_rps: rps, outstanding_frac: 0.0, p99_s: f64::NAN }
+    }
+
+    #[test]
+    fn overload_shifts_down_until_sustainable() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        // 1500 rps >> gear 0's 850 effective (0.85 * 1000): down
+        assert_eq!(s.step(&plan, &cfg, obs(1500.0), 0.02), Some(Shift::Down));
+        assert_eq!(s.current(), 1);
+        // dwell blocks an immediate second shift
+        assert_eq!(s.step(&plan, &cfg, obs(1500.0), 0.02), None);
+        // after the dwell expires: 1500 < 0.85 * 2000 so no downshift, and
+        // gear 0 would run at 1.5 > up_util so no upshift -- stable
+        assert_eq!(s.step(&plan, &cfg, obs(1500.0), 0.2), None);
+        assert_eq!(s.current(), 1);
+    }
+
+    #[test]
+    fn deep_overload_jumps_straight_to_the_fastest_gear_and_stops() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        // 9000 rps exceeds every gear: one decision reaches the bottom
+        // of the ladder instead of crawling one dwell per rung
+        assert_eq!(s.step(&plan, &cfg, obs(9000.0), 0.2), Some(Shift::Down));
+        assert_eq!(s.current(), plan.len() - 1, "bottom of the ladder");
+        // and never indexes past the end
+        assert_eq!(s.step(&plan, &cfg, obs(90_000.0), 0.2), None);
+        // a moderate overload from the top lands on the matching middle
+        // gear, not the bottom: 1500 <= 0.85 * 2000
+        let mut s = ControlState::new(0, &cfg);
+        assert_eq!(s.step(&plan, &cfg, obs(1500.0), 0.2), Some(Shift::Down));
+        assert_eq!(s.current(), 1);
+    }
+
+    #[test]
+    fn calm_load_shifts_back_up_with_hysteresis() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(2, &cfg);
+        // 1500 rps: gear 1 (2000 rps) would run at 0.75 > up_util 0.6 ->
+        // stay despite being < down_util on the current gear
+        assert_eq!(s.step(&plan, &cfg, obs(1500.0), 0.2), None);
+        assert_eq!(s.current(), 2);
+        // 500 rps: gear 1 would run at 0.25 < 0.6 -> up
+        assert_eq!(s.step(&plan, &cfg, obs(500.0), 0.2), Some(Shift::Up));
+        assert_eq!(s.current(), 1);
+        // and further up once the dwell passes
+        assert_eq!(s.step(&plan, &cfg, obs(500.0), 0.2), Some(Shift::Up));
+        assert_eq!(s.current(), 0);
+        // at the top there is no further up
+        assert_eq!(s.step(&plan, &cfg, obs(1.0), 0.2), None);
+    }
+
+    #[test]
+    fn queue_pressure_forces_downshift_even_at_low_ewma() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        let pressured =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        assert_eq!(s.step(&plan, &cfg, pressured, 0.2), Some(Shift::Down));
+        // busy queues also veto upshifts
+        let mut s = ControlState::new(1, &cfg);
+        let busyish =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.4, p99_s: f64::NAN };
+        assert_eq!(s.step(&plan, &cfg, busyish, 0.2), None);
+        assert_eq!(s.current(), 1);
+    }
+
+    #[test]
+    fn p99_slo_breach_forces_downshift() {
+        let plan = plan3();
+        let cfg = ControllerConfig { p99_slo_s: 0.050, ..cfg() };
+        let mut s = ControlState::new(0, &cfg);
+        let slow =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.0, p99_s: 0.200 };
+        assert_eq!(s.step(&plan, &cfg, slow, 0.2), Some(Shift::Down));
+        // NaN p99 (no samples yet) never triggers
+        let mut s = ControlState::new(0, &cfg);
+        assert_eq!(s.step(&plan, &cfg, obs(10.0), 0.2), None);
+    }
+
+    #[test]
+    fn dwell_bounds_shift_rate_under_oscillating_load() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        let mut shifts = 0;
+        // 10 Hz flip-flop between idle and overload for 2 simulated
+        // seconds; 100ms dwell caps shifts at ~1 per dwell
+        for i in 0..40 {
+            let rps = if i % 2 == 0 { 5000.0 } else { 0.0 };
+            if s.step(&plan, &cfg, obs(rps), 0.05).is_some() {
+                shifts += 1;
+            }
+        }
+        assert!(shifts <= 20, "dwell failed to bound thrash: {shifts} shifts");
+        assert!(shifts >= 1, "controller never reacted");
+    }
+
+    #[test]
+    fn ewma_smooths_a_single_spike_away() {
+        let plan = plan3();
+        let cfg = ControllerConfig { ewma_alpha: 0.2, ..cfg() };
+        let mut s = ControlState::new(0, &cfg);
+        // steady calm traffic...
+        for _ in 0..5 {
+            assert_eq!(s.step(&plan, &cfg, obs(100.0), 0.2), None);
+        }
+        // ...one wild sample: EWMA only reaches 0.2*5000 + 0.8*~100 ~ 1080,
+        // barely over gear 0; with alpha=0.2 a single spike may shift once
+        // at most, and calm samples pull it back up
+        s.step(&plan, &cfg, obs(5000.0), 0.2);
+        for _ in 0..20 {
+            s.step(&plan, &cfg, obs(100.0), 0.2);
+        }
+        assert_eq!(s.current(), 0, "spike left the controller downshifted");
+    }
+
+    #[test]
+    fn fleet_capacity_suppresses_downshift_until_the_max_fleet_drowns() {
+        // plan quotes 1-replica capacities; a 4-replica max fleet
+        // quadruples what each gear can carry
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        // 1500 rps would downshift at planned capacity (1000), but the
+        // max fleet sustains 4000: rent replicas instead of shifting
+        assert_eq!(s.step_fleet(&plan, &cfg, obs(1500.0), 0.2, Some(4)), None);
+        assert_eq!(s.current(), 0);
+        // 5000 rps drowns even 4x gear 0 (3400 effective): shift, with
+        // rate attribution
+        let got = s.step_fleet(&plan, &cfg, obs(5000.0), 0.2, Some(4));
+        assert_eq!(got, Some((Shift::Down, Trigger::Rate)));
+        // upshift projection is fleet-aware too: back at 1500 rps the
+        // 4-replica gear 0 runs at 0.375 < up_util -> up
+        let got = s.step_fleet(&plan, &cfg, obs(1500.0), 0.2, Some(4));
+        assert_eq!(got, Some((Shift::Up, Trigger::Rate)));
+    }
+
+    #[test]
+    fn triggers_attribute_the_cause() {
+        let plan = plan3();
+        let base = cfg();
+        let cfg = ControllerConfig { p99_slo_s: 0.050, ..base };
+        // pure pressure (rate calm, p99 fine)
+        let mut s = ControlState::new(0, &cfg);
+        let pressured =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, pressured, 0.2, None),
+            Some((Shift::Down, Trigger::Pressure))
+        );
+        // pure SLO breach
+        let mut s = ControlState::new(0, &cfg);
+        let slow =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.0, p99_s: 0.2 };
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, slow, 0.2, None),
+            Some((Shift::Down, Trigger::Slo))
+        );
+        // rate wins attribution when it is the cause
+        let mut s = ControlState::new(0, &cfg);
+        assert_eq!(
+            s.step_fleet(&plan, &cfg, obs(5000.0), 0.2, None),
+            Some((Shift::Down, Trigger::Rate))
+        );
+    }
+
+    #[test]
+    fn shared_dwell_clock_blocks_and_resets() {
+        let plan = plan3();
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        assert!(s.dwell_ok(&cfg), "dwell starts satisfied");
+        // a scale action consumes the dwell...
+        s.note_action();
+        assert!(!s.dwell_ok(&cfg));
+        // ...and blocks gear shifts until it expires
+        assert_eq!(s.step(&plan, &cfg, obs(5000.0), 0.02), None);
+        assert_eq!(s.step(&plan, &cfg, obs(5000.0), 0.2), Some(Shift::Down));
+    }
+
+    #[test]
+    fn watermark_ladder_steps_one_rung_per_dwell() {
+        let cfg = cfg();
+        let mut s = ControlState::new(0, &cfg);
+        // capacity 1000 rps, ladder of 3 rungs: 2000 rps overloads
+        let got = s.step_watermark(&cfg, obs(2000.0), 0.2, 1000.0, 3);
+        assert_eq!(got, Some((Shift::Down, Trigger::Rate)));
+        assert_eq!(s.current(), 1);
+        // dwell blocks the next rung...
+        assert_eq!(s.step_watermark(&cfg, obs(2000.0), 0.02, 1000.0, 3), None);
+        // ...then it descends again, and stops at the bottom
+        let got = s.step_watermark(&cfg, obs(2000.0), 0.2, 1000.0, 3);
+        assert_eq!(got, Some((Shift::Down, Trigger::Rate)));
+        assert_eq!(s.current(), 2);
+        assert_eq!(s.step_watermark(&cfg, obs(2000.0), 0.2, 1000.0, 3), None);
+        // calm load climbs back one rung per dwell
+        let got = s.step_watermark(&cfg, obs(100.0), 0.2, 1000.0, 3);
+        assert_eq!(got, Some((Shift::Up, Trigger::Rate)));
+        let got = s.step_watermark(&cfg, obs(100.0), 0.2, 1000.0, 3);
+        assert_eq!(got, Some((Shift::Up, Trigger::Rate)));
+        assert_eq!(s.current(), 0);
+        assert_eq!(s.step_watermark(&cfg, obs(100.0), 0.2, 1000.0, 3), None);
+    }
+
+    #[test]
+    fn watermark_ladder_hysteresis_band_holds() {
+        let cfg = cfg();
+        let mut s = ControlState::new(1, &cfg);
+        // 700 rps on 1000 capacity: util 0.7 sits between up (0.6) and
+        // down (0.85) watermarks -- no shift either way
+        for _ in 0..5 {
+            assert_eq!(s.step_watermark(&cfg, obs(700.0), 0.2, 1000.0, 3), None);
+        }
+        assert_eq!(s.current(), 1);
+        // pressure forces a downshift even at calm rate, busy queues
+        // veto the upshift
+        let jam =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.9, p99_s: f64::NAN };
+        assert_eq!(
+            s.step_watermark(&cfg, jam, 0.2, 1000.0, 3),
+            Some((Shift::Down, Trigger::Pressure))
+        );
+        let busyish =
+            Observation { arrival_rps: 10.0, outstanding_frac: 0.4, p99_s: f64::NAN };
+        assert_eq!(s.step_watermark(&cfg, busyish, 0.2, 1000.0, 3), None);
+        assert_eq!(s.current(), 2);
+    }
+}

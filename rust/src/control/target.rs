@@ -1,0 +1,185 @@
+//! What the control plane observes and actuates: [`ControlTarget`], the
+//! per-registry view a serving backend exposes to the single
+//! [`crate::control::ControlLoop`] thread.
+//!
+//! A target is a set of **units**, each an independently observable and
+//! actuable capacity pool with its own metrics registry:
+//!
+//! * a monolithic [`ReplicaPool`] is one unit (its shared registry);
+//! * a [`TieredFleet`] is one unit per cascade level (each tier pool's
+//!   private registry, so unit N's arrivals are tier N-1's deferrals).
+//!
+//! Observation is registry-shaped (counter deltas, outstanding
+//! fractions, slot counts) and actuation is uniform: set a gear
+//! ([`ControlTarget::set_gear`] -- swap the shared `GearHandle` on a
+//! geared pool, retune one tier's theta/batch on a fleet), rent
+//! ([`ControlTarget::scale_up`]) or release ([`ControlTarget::drain`])
+//! replicas, and advance replica lifecycles.  The deciders never see
+//! the concrete backend, so gear + scale policy is written once and
+//! serves both layouts.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::replica::ReplicaPool;
+use crate::coordinator::router::TieredFleet;
+use crate::cost::rental::Gpu;
+use crate::metrics::Metrics;
+use crate::planner::gear::GearConfig;
+
+/// One serving backend as seen by the control loop; see module docs.
+pub trait ControlTarget: Send + Sync {
+    /// Independently controlled units (1 for a pool, tiers for a fleet).
+    fn n_units(&self) -> usize;
+    /// Unit `i`'s own metrics registry (the sampler's counter source).
+    fn unit_metrics(&self, unit: usize) -> Arc<Metrics>;
+    /// Unit `i`'s (warming, live, draining) slot counts.
+    fn unit_counts(&self, unit: usize) -> (usize, usize, usize);
+    /// Outstanding requests across all of unit `i`'s slots.
+    fn unit_outstanding(&self, unit: usize) -> usize;
+    /// Unit `i`'s provisioned admission capacity (slots x queue depth).
+    fn unit_queue_capacity(&self, unit: usize) -> usize;
+    /// GPU class unit `i` rents (the budget arbiter's price basis).
+    fn unit_gpu(&self, unit: usize) -> Gpu;
+    /// Replica-seconds unit `i` has accrued (rental telemetry).
+    fn unit_replica_seconds(&self, unit: usize) -> f64;
+    /// Ladder rung unit `i`'s actuator starts at (a geared pool reports
+    /// its handle's active gear; everything else starts at 0).
+    fn initial_gear(&self, unit: usize) -> usize {
+        let _ = unit;
+        0
+    }
+    /// Advance every replica lifecycle (promote warmed, retire drained).
+    fn advance(&self, now: Instant);
+    /// Actuate a gear on unit `i`: thresholds + batch cap, affecting
+    /// only batches formed later (never in-flight requests).
+    fn set_gear(&self, unit: usize, cfg: &GearConfig);
+    /// Provision `n` replicas on unit `i` (Warming for `warmup`).
+    fn scale_up(&self, unit: usize, n: usize, warmup: Duration);
+    /// Begin gracefully draining `n` of unit `i`'s Live replicas.
+    fn drain(&self, unit: usize, n: usize);
+    /// The target-level registry the loop records events and publishes
+    /// control gauges into (== the unit registry for a pool, the fleet
+    /// registry for a tiered fleet).
+    fn control_metrics(&self) -> &Arc<Metrics>;
+    /// Refresh derived telemetry (gauges) after a tick.
+    fn publish(&self) {}
+}
+
+impl ControlTarget for ReplicaPool {
+    fn n_units(&self) -> usize {
+        1
+    }
+
+    fn unit_metrics(&self, _unit: usize) -> Arc<Metrics> {
+        Arc::clone(self.metrics())
+    }
+
+    fn unit_counts(&self, _unit: usize) -> (usize, usize, usize) {
+        self.counts()
+    }
+
+    fn unit_outstanding(&self, _unit: usize) -> usize {
+        self.total_outstanding()
+    }
+
+    fn unit_queue_capacity(&self, _unit: usize) -> usize {
+        // ALL slots count -- outstanding includes work still queued on
+        // Draining (and Warming) replicas, so a live-only denominator
+        // would read >1.0 right after a drain and flap the pressure
+        // trigger.
+        self.n_slots() * self.max_queue()
+    }
+
+    fn unit_gpu(&self, _unit: usize) -> Gpu {
+        self.gpu()
+    }
+
+    fn unit_replica_seconds(&self, _unit: usize) -> f64 {
+        self.replica_seconds()
+    }
+
+    fn initial_gear(&self, _unit: usize) -> usize {
+        self.gear().map(|h| h.gear_id()).unwrap_or(0)
+    }
+
+    fn advance(&self, now: Instant) {
+        ReplicaPool::advance(self, now);
+    }
+
+    fn set_gear(&self, _unit: usize, cfg: &GearConfig) {
+        if let Some(handle) = self.gear() {
+            handle.store(cfg.clone());
+        }
+        self.set_max_batch(cfg.max_batch);
+    }
+
+    fn scale_up(&self, _unit: usize, n: usize, warmup: Duration) {
+        ReplicaPool::scale_up(self, n, warmup);
+    }
+
+    fn drain(&self, _unit: usize, n: usize) {
+        ReplicaPool::drain(self, n);
+    }
+
+    fn control_metrics(&self) -> &Arc<Metrics> {
+        self.metrics()
+    }
+}
+
+impl ControlTarget for TieredFleet {
+    fn n_units(&self) -> usize {
+        self.n_tiers()
+    }
+
+    fn unit_metrics(&self, unit: usize) -> Arc<Metrics> {
+        Arc::clone(self.tier(unit).pool().metrics())
+    }
+
+    fn unit_counts(&self, unit: usize) -> (usize, usize, usize) {
+        self.tier(unit).pool().counts()
+    }
+
+    fn unit_outstanding(&self, unit: usize) -> usize {
+        self.tier(unit).pool().total_outstanding()
+    }
+
+    fn unit_queue_capacity(&self, unit: usize) -> usize {
+        let pool = self.tier(unit).pool();
+        pool.n_slots() * pool.max_queue()
+    }
+
+    fn unit_gpu(&self, unit: usize) -> Gpu {
+        self.tier(unit).gpu()
+    }
+
+    fn unit_replica_seconds(&self, unit: usize) -> f64 {
+        self.tier(unit).pool().replica_seconds()
+    }
+
+    fn advance(&self, now: Instant) {
+        TieredFleet::advance(self, now);
+    }
+
+    fn set_gear(&self, unit: usize, cfg: &GearConfig) {
+        // a tier's gear is (theta override, batch cap); an empty theta
+        // list restores the stage's own calibrated policy
+        self.set_tier_gear(unit, cfg.thetas.first().copied(), cfg.max_batch);
+    }
+
+    fn scale_up(&self, unit: usize, n: usize, warmup: Duration) {
+        self.tier(unit).pool().scale_up(n, warmup);
+    }
+
+    fn drain(&self, unit: usize, n: usize) {
+        self.tier(unit).pool().drain(n);
+    }
+
+    fn control_metrics(&self) -> &Arc<Metrics> {
+        self.metrics()
+    }
+
+    fn publish(&self) {
+        self.refresh_gauges();
+    }
+}

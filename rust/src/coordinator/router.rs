@@ -45,9 +45,12 @@
 //! queue depth / live replicas, per-tier exit fractions, and the fleet
 //! rental bill in dollars (`fleet_dollars`, `fleet_dollars_per_hour`).
 //! Each tier pool additionally keeps its own private registry so the
-//! per-tier autoscaler (`autoscale::tiered`) can sample per-tier
-//! arrival rates: tier N's arrivals ARE tier N-1's deferrals.
+//! control plane (`control`) can sample per-tier arrival rates: tier
+//! N's arrivals ARE tier N-1's deferrals.  The control plane also
+//! actuates per-tier gears through [`TieredFleet::set_tier_gear`]
+//! (runtime theta/batch retuning; see `control::decider`).
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -74,11 +77,17 @@ pub const DEFERRED: usize = 0;
 /// tier's `ReplicaPool` executes.  Accepted rows report the tier's
 /// 1-based global level; deferred rows report [`DEFERRED`] and carry
 /// only this tier's score.
+///
+/// The threshold override is runtime-adjustable (f32 bits in an atomic;
+/// NaN encodes "no override, use the stage's own calibrated policy"):
+/// the control plane's per-tier gear shifting writes it through
+/// [`TieredFleet::set_tier_gear`], and every batch reads it once -- a
+/// swap only affects batches formed later, like a monolithic gear
+/// shift.
 pub struct StageAdapter {
     stage: Arc<dyn StageClassifier>,
     level0: usize,
-    /// Per-tier threshold override (None = the stage's own policy).
-    theta: Option<f32>,
+    theta_bits: AtomicU32,
 }
 
 impl StageAdapter {
@@ -88,7 +97,29 @@ impl StageAdapter {
         theta: Option<f32>,
     ) -> StageAdapter {
         assert!(level0 < stage.n_levels(), "stage index out of range");
-        StageAdapter { stage, level0, theta }
+        let adapter = StageAdapter {
+            stage,
+            level0,
+            theta_bits: AtomicU32::new(0),
+        };
+        adapter.set_theta(theta);
+        adapter
+    }
+
+    /// The active threshold override (None = the stage's own policy).
+    pub fn theta(&self) -> Option<f32> {
+        let t = f32::from_bits(self.theta_bits.load(Ordering::Relaxed));
+        if t.is_nan() {
+            None
+        } else {
+            Some(t)
+        }
+    }
+
+    /// Swap the threshold override; visible to every later batch.
+    pub fn set_theta(&self, theta: Option<f32>) {
+        let bits = theta.unwrap_or(f32::NAN).to_bits();
+        self.theta_bits.store(bits, Ordering::Relaxed);
     }
 }
 
@@ -104,7 +135,7 @@ impl BatchClassifier for StageAdapter {
     fn classify_batch(&self, features: &[f32], n: usize) -> Result<Vec<CascadeResult>> {
         Ok(self
             .stage
-            .classify_stage(self.level0, features, n, self.theta)?
+            .classify_stage(self.level0, features, n, self.theta())?
             .into_iter()
             .map(|r| CascadeResult {
                 prediction: r.decision.unwrap_or(0),
@@ -181,6 +212,7 @@ pub struct TieredFleetConfig {
 pub struct TierPool {
     gpu: Gpu,
     pool: Arc<ReplicaPool>,
+    adapter: Arc<StageAdapter>,
     exited: Arc<crate::metrics::Counter>,
     deferred: Arc<crate::metrics::Counter>,
     outstanding_gauge: Arc<crate::metrics::Gauge>,
@@ -250,7 +282,7 @@ impl TieredFleet {
                     spec.theta,
                 ));
                 let pool = Arc::new(ReplicaPool::spawn(
-                    adapter,
+                    Arc::clone(&adapter) as Arc<dyn BatchClassifier>,
                     PoolConfig {
                         replicas: spec.replicas,
                         max_queue: spec.max_queue,
@@ -264,6 +296,7 @@ impl TieredFleet {
                 TierPool {
                     gpu: spec.gpu,
                     pool,
+                    adapter,
                     exited: metrics.counter(&format!("tier_{i}_exited")),
                     deferred: metrics.counter(&format!("tier_{i}_deferred")),
                     outstanding_gauge: metrics
@@ -300,6 +333,26 @@ impl TieredFleet {
     /// The fleet-level registry (router counters, gauges, event log).
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// Actuate one tier's gear: swap its deferral-threshold override
+    /// (None restores the stage's own calibrated policy) and retune its
+    /// pool's batch cap.  Both only affect batches formed later, so a
+    /// per-tier shift never drops or duplicates in-flight requests --
+    /// the tiered form of a monolithic `GearHandle` swap.  The control
+    /// plane (`control::ControlLoop`) drives this from the DOWNSTREAM
+    /// tier's load: lowering tier N's theta exits more requests at tier
+    /// N, thinning tier N+1's arrival stream.  The final tier's theta
+    /// is ignored by the stage contract (it always exits).
+    pub fn set_tier_gear(&self, tier: usize, theta: Option<f32>, max_batch: usize) {
+        let t = &self.tiers[tier];
+        t.adapter.set_theta(theta);
+        t.pool.set_max_batch(max_batch);
+    }
+
+    /// The active threshold override of one tier (diagnostics/tests).
+    pub fn tier_theta(&self, tier: usize) -> Option<f32> {
+        self.tiers[tier].adapter.theta()
     }
 
     /// Route one request through the cascade: submit to tier 1's pool,
@@ -582,6 +635,49 @@ mod tests {
             .sum();
         assert!((fracs - 1.0).abs() < 1e-9, "exit fractions sum to 1: {fracs}");
         assert_eq!(fleet.replicas_per_tier(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn set_tier_gear_swaps_theta_and_widens_tier1_exits() {
+        let fleet = TieredFleet::spawn(
+            staged(20) as Arc<dyn StageClassifier>,
+            fleet_cfg(1, 256),
+            Metrics::new(),
+        )
+        .unwrap();
+        assert_eq!(fleet.tier_theta(0), None, "specs start at the policy");
+        let n = 120u64;
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        let exits_default = fleet.tier(0).exited();
+        // lower tier 1's theta: would-defer rows now exit early, so the
+        // SAME request population exits tier 1 strictly more often
+        fleet.set_tier_gear(0, Some(0.2), 8);
+        assert_eq!(fleet.tier_theta(0), Some(0.2));
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        let exits_shifted = fleet.tier(0).exited() - exits_default;
+        assert!(
+            exits_shifted > exits_default,
+            "theta 0.2 exits {exits_shifted} <= default {exits_default}"
+        );
+        // restoring the policy restores the default split exactly
+        fleet.set_tier_gear(0, None, 8);
+        assert_eq!(fleet.tier_theta(0), None);
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        let exits_restored =
+            fleet.tier(0).exited() - exits_default - exits_shifted;
+        assert_eq!(exits_restored, exits_default);
+        // exactly-once accounting held across the swaps
+        assert_eq!(
+            fleet.metrics().counter("fleet_completed").get(),
+            3 * n,
+        );
+        assert_eq!(fleet.metrics().counter("fleet_shed").get(), 0);
     }
 
     #[test]

@@ -6,10 +6,10 @@
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod analysis;
-pub mod autoscale;
 pub mod baselines;
 pub mod benchkit;
 pub mod calib;
+pub mod control;
 pub mod cost;
 pub mod coordinator;
 pub mod data;

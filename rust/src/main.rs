@@ -19,12 +19,17 @@
 //!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
 //!                   re-calibrated on the suite, ladder rescaled to R)
 //!                   [--autoscale --min-replicas 1 --max-replicas N
-//!                    --warmup-ms 0] (elastic replicas; requires --plan,
-//!                   or --tier-rps when tiered)
+//!                    --warmup-ms 0 --max-dollars-hour D] (elastic
+//!                   replicas; without --plan, synthesizes a one-gear
+//!                   plan from --top-rps, the measured per-replica
+//!                   capacity; --tier-rps when tiered)
 //!                   [--tiered [--tier-gpus v100,a6000,h100]
 //!                    [--tier-replicas 2,2,1] [--tier-rps 3000,2000,800]
 //!                    [--max-dollars-hour D]]  (one pool per cascade level,
-//!                   deferral routed between pools, per-tier GPU pricing)
+//!                   deferral routed between pools, per-tier GPU pricing;
+//!                   with --autoscale the control loop also shifts
+//!                   per-tier gears: theta rungs derived from the
+//!                   suite's calibrated thresholds)
 //!                   [--events-file events.jsonl]
 //! repro stats       [--port 7878] [--events]  (query a running server)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
@@ -38,10 +43,11 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use abc_serve::autoscale::{
-    Autoscaler, FleetScaleConfig, ScaleConfig, TierScale, TieredAutoscaler,
-};
 use abc_serve::calib;
+use abc_serve::control::{
+    ControlConfig, ControlLoop, ControlTarget, ControllerConfig, ScaleConfig,
+    TierControl, TierRung,
+};
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::{Cascade, StageClassifier};
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
@@ -50,9 +56,7 @@ use abc_serve::cost::rental::Gpu;
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
-use abc_serve::planner::{
-    search, Controller, ControllerConfig, GearHandle, GearPlan, PlannerConfig,
-};
+use abc_serve::planner::{search, GearHandle, GearPlan, PlannerConfig};
 use abc_serve::runtime::engine::Engine;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
 use abc_serve::types::{Parallelism, RuleKind};
@@ -380,12 +384,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  tier's per-replica capacity (rows/s of that STAGE), \
                  e.g. measured with `repro loadgen`"
             );
-        } else {
-            anyhow::ensure!(
-                args.get("plan").is_some(),
-                "--autoscale needs a gear plan (--plan): replica targets come \
-                 from the plan's per-gear capacities"
-            );
         }
         anyhow::ensure!(min_replicas >= 1, "--min-replicas must be >= 1");
         anyhow::ensure!(
@@ -393,8 +391,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "--min-replicas {min_replicas} > --max-replicas {max_replicas}"
         );
     }
+    // when a one-gear plan is synthesized it is already grounded at
+    // measured capacity: the --top-rps ladder rescale must not reapply
+    let mut synthesized = false;
     let plan = match args.get("plan") {
         Some(path) => Some(GearPlan::load(path)?),
+        // --autoscale without a plan: synthesize a one-gear plan from
+        // the MEASURED top-tier capacity so the scale decider has a
+        // grounded per-replica quote (the ladder never shifts -- one
+        // gear -- but elasticity adapts to load).  The gear is quoted
+        // at --replicas machines so serving starts at the requested
+        // fleet, not the floor.
+        None if autoscale && !tiered => {
+            let top_rps = args.f64_or("top-rps", 0.0)?;
+            anyhow::ensure!(
+                top_rps > 0.0,
+                "--autoscale without --plan synthesizes a one-gear plan \
+                 from measured capacity: pass --top-rps R, this suite's \
+                 per-replica rows/s (e.g. from `repro loadgen --replicas 1`)"
+            );
+            println!(
+                "no --plan: synthesized a one-gear plan at the measured \
+                 {top_rps:.0} rows/s per replica"
+            );
+            synthesized = true;
+            Some(search::one_gear_plan(
+                top_rps * replicas as f64,
+                replicas,
+                max_batch,
+                epsilon,
+                args.f64_or("top-acc", 0.95)?,
+            )?)
+        }
         None => None,
     };
     let manifest = Manifest::load(artifacts_dir(args))?;
@@ -454,8 +482,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // capacity, e.g. from `repro loadgen`) rescales the whole
             // ladder; without it the planned absolute throughputs stand
             // and only the queue-pressure/SLO triggers are model-free.
+            // a synthesized plan is already quoted at the measured
+            // per-replica rate; rescaling it against --top-rps again
+            // would divide capacity by the start-fleet size
             let top_rps = args.f64_or("top-rps", 0.0)?;
-            if top_rps > 0.0 {
+            if top_rps > 0.0 && !synthesized {
                 let f = top_rps / plan.top().sustainable_rps;
                 for g in &mut plan.gears {
                     g.sustainable_rps *= f;
@@ -463,7 +494,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 println!(
                     "gear ladder rescaled to measured top capacity {top_rps:.0} rps"
                 );
-            } else {
+            } else if !synthesized {
                 println!(
                     "warning: no --top-rps given; utilisation watermarks use the \
                      plan's modelled throughputs, which may not match this \
@@ -475,7 +506,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let metrics = Metrics::new();
-    events_file_sink(args, &metrics, "controller")?;
+    events_file_sink(args, &metrics, "control")?;
     let pool_cfg = |max_batch: usize, replicas: usize| PoolConfig {
         replicas,
         max_queue,
@@ -485,10 +516,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         ..PoolConfig::default()
     };
-    // keep the controller/autoscaler alive for the lifetime of serve():
-    // dropping them stops the sampling thread
-    let _controller: Option<Controller>;
-    let _autoscaler: Option<Autoscaler>;
+    // keep the control loop alive for the lifetime of serve():
+    // dropping it stops the (single) decider thread
+    let _control: Option<ControlLoop>;
     let pool = match plan {
         Some(plan) => {
             let top = plan.top();
@@ -512,16 +542,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 top.sustainable_rps,
                 top.accuracy
             );
-            if autoscale {
+            let cfg = if autoscale {
+                let budget = args.f64_or("max-dollars-hour", 0.0)?;
                 println!(
                     "autoscale: elastic fleet {min_replicas}..{max_replicas} \
-                     replicas (starting at {start_replicas}, warm-up {warmup:?})"
+                     replicas (starting at {start_replicas}, warm-up \
+                     {warmup:?}{})",
+                    if budget > 0.0 {
+                        format!(", budget ${budget:.2}/h")
+                    } else {
+                        String::new()
+                    }
                 );
-                _controller = None;
-                _autoscaler = Some(Autoscaler::spawn(
-                    Arc::clone(&pool),
+                ControlConfig::autoscaled(
                     plan,
-                    handle,
                     ControllerConfig::default(),
                     ScaleConfig {
                         min_replicas,
@@ -529,21 +563,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         warmup,
                         ..ScaleConfig::default()
                     },
-                ));
+                    budget,
+                )
             } else {
-                _autoscaler = None;
-                _controller = Some(Controller::spawn(
-                    Arc::clone(&pool),
-                    plan,
-                    handle,
-                    ControllerConfig::default(),
-                ));
-            }
+                ControlConfig::gear_plan(plan, ControllerConfig::default())
+            };
+            _control = Some(ControlLoop::spawn(
+                Arc::clone(&pool) as Arc<dyn ControlTarget>,
+                cfg,
+            ));
             pool
         }
         None => {
-            _controller = None;
-            _autoscaler = None;
+            _control = None;
             Arc::new(ReplicaPool::spawn(
                 cascade,
                 pool_cfg(max_batch, replicas),
@@ -564,10 +596,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// placement).  `--tier-gpus v100,a6000,h100` picks classes (default:
 /// `Gpu::spread` over the rental ladder), `--tier-replicas N1,N2,...`
 /// sets per-tier starting fleets (default: `--replicas` everywhere),
-/// and `--autoscale` sizes every tier independently against its own
-/// deferral-driven arrival rate (needs `--tier-rps`, each tier's
-/// measured per-replica stage capacity; `--max-dollars-hour` caps the
-/// fleet's burn rate).
+/// and `--autoscale` engages the unified control loop: every tier is
+/// sized independently against its own deferral-driven arrival rate
+/// (needs `--tier-rps`, each tier's measured per-replica stage
+/// capacity; `--max-dollars-hour` caps the fleet's burn rate) AND
+/// shifts per-tier gears -- theta rungs derived from the suite's
+/// calibrated thresholds, walked by each tier's downstream observer.
 fn serve_tiered(
     args: &Args,
     suite: &str,
@@ -646,8 +680,14 @@ fn serve_tiered(
         })
         .collect();
 
+    // the calibrated per-tier thresholds seed each tier's theta ladder
+    // (None for the final tier: it always exits)
+    let tier_thetas: Vec<Option<f32>> = (0..n_levels)
+        .map(|i| cascade.policy().rule(i).map(|r| r.theta))
+        .collect();
+
     let metrics = Metrics::new();
-    events_file_sink(args, &metrics, "autoscaler")?;
+    events_file_sink(args, &metrics, "control")?;
     let fleet = Arc::new(TieredFleet::spawn(
         cascade as Arc<dyn StageClassifier>,
         TieredFleetConfig {
@@ -660,8 +700,9 @@ fn serve_tiered(
         Arc::clone(&metrics),
     )?);
 
-    // keep the autoscaler alive for the lifetime of serve()
-    let _tiered_autoscaler: Option<TieredAutoscaler> = if autoscale {
+    // keep the control loop alive for the lifetime of serve(): ONE
+    // thread decides per-tier scaling AND per-tier gear shifting
+    let _control: Option<ControlLoop> = if autoscale {
         let tier_rps = args.f64_list_or("tier-rps", &[])?;
         anyhow::ensure!(
             tier_rps.len() == n_levels,
@@ -669,35 +710,47 @@ fn serve_tiered(
             tier_rps.len()
         );
         let budget = args.f64_or("max-dollars-hour", 0.0)?;
-        let scale_cfg = FleetScaleConfig {
-            tiers: tier_rps
-                .iter()
-                .map(|&rps| TierScale {
-                    scale: ScaleConfig {
+        let tiers: Vec<TierControl> = tier_rps
+            .iter()
+            .enumerate()
+            .map(|(i, &rps)| {
+                // theta rungs: the calibrated policy first, then
+                // progressively laxer fractions of its threshold --
+                // each rung exits more requests at this tier instead of
+                // deferring them to the pricier tier below
+                let rungs = match tier_thetas[i] {
+                    Some(t) if i + 1 < n_levels => vec![
+                        TierRung { theta: None, max_batch },
+                        TierRung { theta: Some(t * 0.75), max_batch },
+                        TierRung { theta: Some(t * 0.5), max_batch },
+                    ],
+                    _ => Vec::new(),
+                };
+                TierControl {
+                    per_replica_rps: rps,
+                    scale: Some(ScaleConfig {
                         min_replicas,
                         max_replicas,
                         warmup,
                         ..ScaleConfig::default()
-                    },
-                    per_replica_rps: rps,
-                })
-                .collect(),
-            max_dollars_per_hour: budget,
-            sample_every: Duration::from_millis(20),
-            dwell: Duration::from_millis(250),
-            queue_pressure: 0.50,
-            ewma_alpha: 0.30,
-        };
+                    }),
+                    rungs,
+                }
+            })
+            .collect();
         println!(
-            "tiered autoscale: {min_replicas}..{max_replicas} replicas per \
-             tier (warm-up {warmup:?}{})",
+            "tiered control plane: {min_replicas}..{max_replicas} replicas \
+             per tier, per-tier gear shifting (warm-up {warmup:?}{})",
             if budget > 0.0 {
                 format!(", budget ${budget:.2}/h")
             } else {
                 String::new()
             }
         );
-        Some(TieredAutoscaler::spawn(Arc::clone(&fleet), scale_cfg))
+        Some(ControlLoop::spawn(
+            Arc::clone(&fleet) as Arc<dyn ControlTarget>,
+            ControlConfig::tiered(tiers, ControllerConfig::default(), budget),
+        ))
     } else {
         None
     };

@@ -3,8 +3,10 @@
 //!
 //! Gauges answer "what is the system doing *now*"; the event log
 //! answers "what did the controller decide, when, and why".  Every
-//! entry records the decision's before/after (gear id, replica count)
-//! and the trigger that forced it (`rate` | `pressure` | `slo`).  The
+//! entry records the decision's before/after (gear id, replica count),
+//! which decider produced it (`gear` | `scale` | `budget`), the tier it
+//! acted on, and the trigger that forced it (`rate` | `pressure` |
+//! `slo`).  The
 //! log renders as JSONL (one JSON object per line) for the wire
 //! `{"cmd":"events"}` command and `repro stats --events`, and can
 //! optionally mirror every record into an append-only JSONL file
@@ -43,6 +45,28 @@ impl EventKind {
     }
 }
 
+/// What one decision changed, as handed to [`EventLog::record`] -- the
+/// stamped [`Event`] adds `seq` and wall-clock time.  `decider` names
+/// the stack member that produced the action ("gear" | "scale" |
+/// "budget" when the arbiter clamped a grant) and `tier` is the unit
+/// index it acted on (0 for monolithic pools), so shift and scale
+/// events attribute uniformly across both serving layouts -- the tier
+/// index no longer rides in the gear slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventRecord {
+    pub kind: EventKind,
+    /// Decider that produced the action: "gear" | "scale" | "budget".
+    pub decider: &'static str,
+    /// What forced the decision: "rate" | "pressure" | "slo".
+    pub trigger: &'static str,
+    /// Unit/tier index the action applied to (0 for monolithic pools).
+    pub tier: usize,
+    pub old_gear: usize,
+    pub new_gear: usize,
+    pub old_replicas: usize,
+    pub new_replicas: usize,
+}
+
 /// One recorded controller decision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Event {
@@ -51,8 +75,12 @@ pub struct Event {
     /// Wall-clock seconds since the UNIX epoch at record time.
     pub ts_s: f64,
     pub kind: EventKind,
+    /// Decider that produced the action: "gear" | "scale" | "budget".
+    pub decider: &'static str,
     /// What forced the decision: "rate" | "pressure" | "slo".
     pub trigger: &'static str,
+    /// Unit/tier index the action applied to (0 for monolithic pools).
+    pub tier: usize,
     pub old_gear: usize,
     pub new_gear: usize,
     pub old_replicas: usize,
@@ -65,7 +93,9 @@ impl Event {
         o.insert("seq", Json::num(self.seq as f64));
         o.insert("ts_s", Json::num(self.ts_s));
         o.insert("kind", Json::str(self.kind.name()));
+        o.insert("decider", Json::str(self.decider));
         o.insert("trigger", Json::str(self.trigger));
+        o.insert("tier", Json::num(self.tier as f64));
         o.insert("old_gear", Json::num(self.old_gear as f64));
         o.insert("new_gear", Json::num(self.new_gear as f64));
         o.insert("old_replicas", Json::num(self.old_replicas as f64));
@@ -113,15 +143,7 @@ impl EventLog {
     /// Record one decision; stamps `seq` + wall-clock time.  Appends
     /// the JSONL line to the file sink when one is set (best effort:
     /// sink IO errors never fail the control loop).
-    pub fn record(
-        &self,
-        kind: EventKind,
-        trigger: &'static str,
-        old_gear: usize,
-        new_gear: usize,
-        old_replicas: usize,
-        new_replicas: usize,
-    ) {
+    pub fn record(&self, r: EventRecord) {
         let ts_s = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_secs_f64())
@@ -130,12 +152,14 @@ impl EventLog {
         let event = Event {
             seq: s.next_seq,
             ts_s,
-            kind,
-            trigger,
-            old_gear,
-            new_gear,
-            old_replicas,
-            new_replicas,
+            kind: r.kind,
+            decider: r.decider,
+            trigger: r.trigger,
+            tier: r.tier,
+            old_gear: r.old_gear,
+            new_gear: r.new_gear,
+            old_replicas: r.old_replicas,
+            new_replicas: r.new_replicas,
         };
         s.next_seq += 1;
         if let Some(f) = s.sink.as_mut() {
@@ -195,20 +219,46 @@ impl EventLog {
 mod tests {
     use super::*;
 
+    fn rec(kind: EventKind, trigger: &'static str) -> EventRecord {
+        EventRecord {
+            kind,
+            decider: "gear",
+            trigger,
+            tier: 0,
+            old_gear: 0,
+            new_gear: 1,
+            old_replicas: 2,
+            new_replicas: 2,
+        }
+    }
+
     #[test]
     fn record_stamps_sequence_and_fields() {
         let log = EventLog::default();
         assert!(log.is_empty());
-        log.record(EventKind::Shift, "rate", 0, 1, 2, 2);
-        log.record(EventKind::Scale, "pressure", 1, 1, 2, 4);
+        log.record(rec(EventKind::Shift, "rate"));
+        log.record(EventRecord {
+            kind: EventKind::Scale,
+            decider: "scale",
+            trigger: "pressure",
+            tier: 2,
+            old_gear: 1,
+            new_gear: 1,
+            old_replicas: 2,
+            new_replicas: 4,
+        });
         let events = log.snapshot();
         assert_eq!(events.len(), 2);
         assert_eq!(events[0].seq, 0);
         assert_eq!(events[1].seq, 1);
         assert_eq!(events[0].kind, EventKind::Shift);
+        assert_eq!(events[0].decider, "gear");
         assert_eq!(events[0].trigger, "rate");
+        assert_eq!(events[0].tier, 0);
         assert_eq!(events[0].new_gear, 1);
         assert_eq!(events[1].kind, EventKind::Scale);
+        assert_eq!(events[1].decider, "scale");
+        assert_eq!(events[1].tier, 2);
         assert_eq!(events[1].old_replicas, 2);
         assert_eq!(events[1].new_replicas, 4);
         assert!(events[0].ts_s > 0.0);
@@ -219,20 +269,33 @@ mod tests {
     #[test]
     fn json_and_jsonl_shapes() {
         let log = EventLog::default();
-        log.record(EventKind::Shift, "slo", 2, 3, 1, 1);
+        log.record(EventRecord {
+            kind: EventKind::Shift,
+            decider: "gear",
+            trigger: "slo",
+            tier: 1,
+            old_gear: 2,
+            new_gear: 3,
+            old_replicas: 1,
+            new_replicas: 1,
+        });
         let arr = log.to_json();
         let first = &arr.as_arr().unwrap()[0];
         assert_eq!(first.get("kind").as_str(), Some("shift"));
+        assert_eq!(first.get("decider").as_str(), Some("gear"));
         assert_eq!(first.get("trigger").as_str(), Some("slo"));
+        assert_eq!(first.get("tier").as_u64(), Some(1));
         assert_eq!(first.get("old_gear").as_u64(), Some(2));
         assert_eq!(first.get("new_gear").as_u64(), Some(3));
         // JSONL: one parseable object per line
-        log.record(EventKind::Scale, "rate", 3, 3, 1, 2);
+        log.record(rec(EventKind::Scale, "rate"));
         let lines: Vec<&str> = log.to_jsonl().lines().collect();
         assert_eq!(lines.len(), 2);
         for line in lines {
             let v = Json::parse(line).unwrap();
             assert!(v.get("seq").as_u64().is_some());
+            assert!(v.get("decider").as_str().is_some());
+            assert!(v.get("tier").as_u64().is_some());
         }
     }
 
@@ -240,7 +303,11 @@ mod tests {
     fn ring_is_bounded_and_counts_drops() {
         let log = EventLog::default();
         for i in 0..(EVENT_CAPACITY + 10) {
-            log.record(EventKind::Scale, "rate", 0, 0, i, i + 1);
+            log.record(EventRecord {
+                old_replicas: i,
+                new_replicas: i + 1,
+                ..rec(EventKind::Scale, "rate")
+            });
         }
         assert_eq!(log.len(), EVENT_CAPACITY);
         assert_eq!(log.dropped(), 10);
@@ -257,8 +324,11 @@ mod tests {
         let path = dir.join("events.jsonl");
         let log = EventLog::default();
         log.set_file_sink(&path).unwrap();
-        log.record(EventKind::Shift, "rate", 0, 1, 1, 1);
-        log.record(EventKind::Scale, "rate", 1, 1, 1, 3);
+        log.record(rec(EventKind::Shift, "rate"));
+        log.record(EventRecord {
+            new_replicas: 3,
+            ..rec(EventKind::Scale, "rate")
+        });
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_dir_all(&dir).ok();
         let lines: Vec<&str> = text.lines().collect();

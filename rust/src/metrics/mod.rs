@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-pub use events::{Event, EventKind, EventLog};
+pub use events::{Event, EventKind, EventLog, EventRecord};
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -203,8 +203,8 @@ impl Metrics {
     }
 
     /// The registry's controller event log (gear shifts + scale
-    /// actions).  Writers: controller/autoscaler threads; readers: the
-    /// wire `{"cmd":"events"}` command and `repro stats --events`.
+    /// actions).  Writers: the control loop; readers: the wire
+    /// `{"cmd":"events"}` command and `repro stats --events`.
     pub fn events(&self) -> &EventLog {
         &self.events
     }
@@ -393,6 +393,78 @@ mod tests {
         // an empty interval reads NaN, never a stale value
         let s3 = h.bucket_snapshot();
         assert!(Histogram::quantile_between(&s2, &s3, 0.99).is_nan());
+    }
+
+    #[test]
+    fn windowed_quantile_empty_window_is_nan_at_every_q() {
+        let h = Histogram::default();
+        // a completely empty histogram: identical empty snapshots
+        let s0 = h.bucket_snapshot();
+        let s1 = h.bucket_snapshot();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert!(Histogram::quantile_between(&s0, &s1, q).is_nan(), "q={q}");
+        }
+        // a busy histogram whose WINDOW is empty must also read NaN --
+        // the all-time count must never leak into the interval
+        for _ in 0..50 {
+            h.record(0.25);
+        }
+        let s2 = h.bucket_snapshot();
+        let s3 = h.bucket_snapshot();
+        assert!(Histogram::quantile_between(&s2, &s3, 0.99).is_nan());
+        assert!(h.p99() > 0.0, "all-time quantile still works");
+    }
+
+    #[test]
+    fn windowed_quantile_single_bucket_window() {
+        let h = Histogram::default();
+        let s0 = h.bucket_snapshot();
+        // every interval sample lands in one bucket: every quantile of
+        // the window reads that bucket's value, q extremes included
+        for _ in 0..7 {
+            h.record(0.010);
+        }
+        let s1 = h.bucket_snapshot();
+        let lo = Histogram::quantile_between(&s0, &s1, 0.0);
+        let hi = Histogram::quantile_between(&s0, &s1, 1.0);
+        let p99 = Histogram::quantile_between(&s0, &s1, 0.99);
+        assert_eq!(lo, hi, "one-bucket window has one value");
+        assert_eq!(p99, hi);
+        assert!((0.009..0.0115).contains(&p99), "p99 {p99} off the bucket");
+        // a single sample is the degenerate single-bucket window
+        let s2 = h.bucket_snapshot();
+        h.record(2.0);
+        let s3 = h.bucket_snapshot();
+        let one = Histogram::quantile_between(&s2, &s3, 0.99);
+        assert!((1.8..2.3).contains(&one), "single-sample window {one}");
+    }
+
+    #[test]
+    fn windowed_quantile_recovers_after_a_past_overload() {
+        // the SLO-latch scenario the controller depends on: a brutal
+        // overload, then recovery -- later windows must NOT keep
+        // breaching the SLO the way the all-time quantile does
+        let h = Histogram::default();
+        for _ in 0..10_000 {
+            h.record(5.0); // the overload
+        }
+        let mut prev = h.bucket_snapshot();
+        let slo_s = 0.050;
+        for _ in 0..3 {
+            for _ in 0..100 {
+                h.record(0.002); // healthy traffic
+            }
+            let cur = h.bucket_snapshot();
+            let windowed = Histogram::quantile_between(&prev, &cur, 0.99);
+            assert!(
+                windowed < slo_s,
+                "recovered window still breaches the SLO: {windowed}"
+            );
+            prev = cur;
+        }
+        // the all-time p99 stays latched at the overload -- which is
+        // exactly why the sampler must not use it
+        assert!(h.p99() > 1.0, "all-time p99 {}", h.p99());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! [`GearPlan`] is the ladder of Pareto-optimal gears the offline
 //! planner (`planner::search`) emits, ordered from **most accurate**
 //! (index 0, the "top" gear) to **highest sustainable throughput**.  The
-//! online controller (`planner::controller`) walks this ladder against
+//! control plane (`control::ControlLoop`) walks this ladder against
 //! observed load: shifting *down* trades accuracy for throughput under
 //! pressure, shifting *up* restores accuracy when load recedes
 //! (CascadeServe-style gear switching; see DESIGN.md "Gear planning").

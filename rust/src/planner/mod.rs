@@ -14,12 +14,13 @@
 //! * [`search`] -- the offline planner: enumerate `(k, epsilon, batch)`
 //!   candidates over calibration data, price them with the Eq. 1 cost
 //!   model, keep the accuracy-vs-throughput Pareto frontier;
-//! * [`controller`] -- the online controller thread: arrival-rate EWMA,
-//!   queue pressure and latency quantiles in; hysteretic up/down gear
-//!   shifts out.
+//! * the online half -- the thread that walks the ladder against
+//!   observed load -- lives in the unified control plane
+//!   ([`crate::control`]); [`controller`] is a thin re-export kept for
+//!   its old paths.
 //!
 //! Entry points: `repro plan` (emit a plan JSON), `repro serve --plan`
-//! (serve with the controller engaged), `benches/bench_gears.rs`
+//! (serve with the control loop engaged), `benches/bench_gears.rs`
 //! (fixed vs adaptive under on-off load) and
 //! `rust/tests/planner_integration.rs`.
 
@@ -27,6 +28,6 @@ pub mod controller;
 pub mod gear;
 pub mod search;
 
-pub use controller::{Controller, ControllerConfig, Observation, Sampler, Shift, Trigger};
+pub use controller::{ControllerConfig, Observation, Sampler, Shift, Trigger};
 pub use gear::{Gear, GearConfig, GearHandle, GearPlan, TierPlan};
 pub use search::{synthetic_cal_points, PlannerConfig};

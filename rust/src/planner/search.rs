@@ -490,6 +490,47 @@ fn allocate_replicas(cfg: &PlannerConfig, gears: &mut Vec<(Gear, Candidate)>) {
     *gears = kept;
 }
 
+/// Synthesize a one-gear plan from a MEASURED top-tier capacity: what
+/// `serve --autoscale` runs on when no offline plan is given.  The
+/// single gear pins the suite's own calibrated cascade (work factor
+/// 1.0; `serve` re-grounds its theta on the suite's calibration at
+/// `epsilon` like any loaded plan) and quotes `sustainable_rps` at the
+/// measured rate -- e.g. `--top-rps` from a `repro loadgen` run -- so
+/// the scale decider's sizing math is grounded in this deployment's
+/// hardware instead of a cost model.  One gear means the ladder never
+/// shifts; elasticity alone adapts to load.
+pub fn one_gear_plan(
+    top_rps: f64,
+    replicas: usize,
+    max_batch: usize,
+    epsilon: f64,
+    top_accuracy: f64,
+) -> Result<GearPlan> {
+    anyhow::ensure!(
+        top_rps > 0.0,
+        "a synthesized plan needs a measured capacity (--top-rps > 0)"
+    );
+    anyhow::ensure!(replicas >= 1, "a synthesized plan needs >= 1 replica");
+    anyhow::ensure!(max_batch >= 1, "a synthesized plan needs a batch cap");
+    GearPlan::new(vec![Gear {
+        id: 0,
+        k: 1,
+        epsilon,
+        // placeholder until serve re-grounds it on the suite's own
+        // calibration points (the defer-nothing sentinel would be wrong
+        // to serve raw, but gear thetas are always re-grounded)
+        theta: 0.0,
+        mid: vec![],
+        max_batch,
+        replicas,
+        tier_fleet: vec![],
+        dollar_per_req: 0.0,
+        accuracy: top_accuracy,
+        relative_cost: 1.0,
+        sustainable_rps: top_rps,
+    }])
+}
+
 /// Synthetic `(score, correct)` calibration points for ensemble size
 /// `k`, artifact-free.  Per sample: difficulty `d ~ U[0,1)` sets each
 /// member's independent correctness probability (easy samples near
@@ -813,6 +854,25 @@ mod tests {
         let hom = plan_with_mid(&small_cfg(), &small_cal(&small_cfg()), &[]).unwrap();
         assert!(hom.gears.iter().all(|g| g.tier_fleet.is_empty()));
         assert!(hom.gears.iter().all(|g| g.dollar_per_req > 0.0));
+    }
+
+    #[test]
+    fn one_gear_plan_quotes_the_measured_capacity() {
+        let plan = one_gear_plan(480.0, 1, 16, 0.03, 0.95).unwrap();
+        assert_eq!(plan.len(), 1);
+        let g = plan.top();
+        assert_eq!(g.sustainable_rps, 480.0);
+        assert_eq!(g.replicas, 1);
+        assert!((g.per_replica_rps() - 480.0).abs() < 1e-9);
+        assert_eq!(g.max_batch, 16);
+        assert_eq!(g.relative_cost, 1.0, "the whole cascade runs");
+        assert_eq!(g.epsilon, 0.03);
+        // the runtime config carries the single theta for re-grounding
+        assert_eq!(g.config().thetas.len(), 1);
+        // nonsense inputs are rejected, not served
+        assert!(one_gear_plan(0.0, 1, 16, 0.03, 0.95).is_err());
+        assert!(one_gear_plan(100.0, 0, 16, 0.03, 0.95).is_err());
+        assert!(one_gear_plan(100.0, 1, 0, 0.03, 0.95).is_err());
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //! <- {"stats": {"counters": {...}, "gauges": {...},
 //!     "histograms": {"request_latency_s": {"n":..,"p99":..}, ...}}}
 //! -> {"cmd": "events"}
-//! <- {"events": [{"seq":0,"ts_s":...,"kind":"shift","trigger":"rate",
-//!     "old_gear":0,"new_gear":1,"old_replicas":2,"new_replicas":2},
-//!     ...], "dropped": 0}          (controller/autoscaler decisions)
+//! <- {"events": [{"seq":0,"ts_s":...,"kind":"shift","decider":"gear",
+//!     "trigger":"rate","tier":0,"old_gear":0,"new_gear":1,
+//!     "old_replicas":2,"new_replicas":2},
+//!     ...], "dropped": 0}          (control-plane decisions)
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
 //!
@@ -28,7 +29,8 @@
 //! depth (`tier_{i}_outstanding`), live replicas (`tier_{i}_live`),
 //! exit fractions (`tier_{i}_exit_frac`) and the fleet rental bill
 //! (`fleet_dollars`, `fleet_dollars_per_hour`), refreshed at snapshot
-//! time; `events` carries the per-tier autoscaler's scale decisions.
+//! time; `events` carries the control plane's per-tier shift and scale
+//! decisions (decider + tier index on every entry).
 //!
 //! When every replica's bounded queue is full, admission control sheds
 //! the request instead of queueing it; the reply is the typed

@@ -151,16 +151,37 @@ mod tests {
 
     #[test]
     fn events_line_shape() {
-        use crate::metrics::EventKind;
+        use crate::metrics::{EventKind, EventRecord};
         let m = Metrics::new();
-        m.events().record(EventKind::Shift, "rate", 0, 1, 2, 2);
-        m.events().record(EventKind::Scale, "pressure", 1, 1, 2, 4);
+        m.events().record(EventRecord {
+            kind: EventKind::Shift,
+            decider: "gear",
+            trigger: "rate",
+            tier: 0,
+            old_gear: 0,
+            new_gear: 1,
+            old_replicas: 2,
+            new_replicas: 2,
+        });
+        m.events().record(EventRecord {
+            kind: EventKind::Scale,
+            decider: "budget",
+            trigger: "pressure",
+            tier: 1,
+            old_gear: 1,
+            new_gear: 1,
+            old_replicas: 2,
+            new_replicas: 4,
+        });
         let line = render_events(&m);
         let parsed = Json::parse(&line).unwrap();
         let events = parsed.get("events").as_arr().unwrap();
         assert_eq!(events.len(), 2);
         assert_eq!(events[0].get("kind").as_str(), Some("shift"));
+        assert_eq!(events[0].get("decider").as_str(), Some("gear"));
         assert_eq!(events[1].get("kind").as_str(), Some("scale"));
+        assert_eq!(events[1].get("decider").as_str(), Some("budget"));
+        assert_eq!(events[1].get("tier").as_u64(), Some(1));
         assert_eq!(events[1].get("trigger").as_str(), Some("pressure"));
         assert_eq!(events[1].get("new_replicas").as_u64(), Some(4));
         assert_eq!(parsed.get("dropped").as_u64(), Some(0));

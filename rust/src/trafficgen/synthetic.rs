@@ -155,6 +155,26 @@ impl StagedSynthetic {
             b as f64 / batch_s
         }
     }
+
+    /// Deterministic pseudo-agreement of a row at tier `level0`: rows
+    /// the default routing exits at or before this tier agree at the
+    /// reported score (0.9); rows that would defer get a spread of
+    /// lower values in [0, 0.9).  A theta override therefore works like
+    /// the real agreement rule -- defer when agreement <= theta -- and
+    /// lowering theta below 0.9 pulls progressively more would-defer
+    /// rows into an early exit.  This is the knob the control plane's
+    /// per-tier gear shifting turns (`TieredFleet::set_tier_gear`);
+    /// with no override the routing is exactly the historical
+    /// byte-identical-to-monolithic behaviour.
+    fn agreement(&self, first_feature: f32, level0: usize) -> f32 {
+        let h = (first_feature.abs() * 997.0) as usize;
+        let exit_level = 1 + h % self.inner.levels;
+        if exit_level <= level0 + 1 {
+            return 0.9;
+        }
+        let spread = (h / self.inner.levels).wrapping_mul(2_654_435_761) % 1000;
+        0.9 * (spread as f32 / 1000.0)
+    }
 }
 
 impl BatchClassifier for StagedSynthetic {
@@ -177,7 +197,7 @@ impl StageClassifier for StagedSynthetic {
         level0: usize,
         features: &[f32],
         n: usize,
-        _theta: Option<f32>,
+        theta: Option<f32>,
     ) -> Result<Vec<StageResult>> {
         anyhow::ensure!(level0 < self.inner.levels, "stage {level0} out of range");
         anyhow::ensure!(
@@ -197,11 +217,16 @@ impl StageClassifier for StagedSynthetic {
         let last = level0 + 1 == self.inner.levels;
         Ok((0..n)
             .map(|i| {
-                let (prediction, exit_level) =
-                    self.inner.route(features[i * self.inner.dim]);
-                // a row exits at its routed level; the final tier
-                // accepts whatever reaches it
-                let exits = exit_level <= level0 + 1 || last;
+                let first = features[i * self.inner.dim];
+                let (prediction, exit_level) = self.inner.route(first);
+                // default policy: a row exits at its routed level; a
+                // theta override applies the agreement rule instead
+                // (defer when agreement <= theta).  The final tier
+                // accepts whatever reaches it either way.
+                let exits = match theta {
+                    None => exit_level <= level0 + 1 || last,
+                    Some(t) => last || self.agreement(first, level0) > t,
+                };
                 StageResult {
                     score: 0.9,
                     decision: exits.then_some(prediction),
@@ -321,6 +346,40 @@ mod tests {
         assert!((u.weights().iter().sum::<f64>() - 1.0).abs() < 1e-12);
         // out-of-range stage errors
         assert!(u.classify_stage(7, &[0.5], 1, None).is_err());
+    }
+
+    #[test]
+    fn theta_override_monotonically_widens_early_exits() {
+        let inner = SyntheticClassifier::new(1, 3, Duration::ZERO, Duration::ZERO);
+        let staged = StagedSynthetic::new(inner, vec![0.2, 0.3, 0.5]);
+        let n = 400;
+        let feats: Vec<f32> = (0..n).map(|i| i as f32 * 0.61 - 7.0).collect();
+        let exits_at = |theta: Option<f32>| {
+            staged
+                .classify_stage(0, &feats, n, theta)
+                .unwrap()
+                .iter()
+                .filter(|r| r.decision.is_some())
+                .count()
+        };
+        let default = exits_at(None);
+        // default-routed exits all carry agreement 0.9, would-defer rows
+        // spread below it: lowering theta pulls more rows into tier 1
+        let lax = exits_at(Some(0.45));
+        let laxer = exits_at(Some(0.1));
+        assert!(lax > default, "theta 0.45 exits {lax} <= default {default}");
+        assert!(laxer > lax, "theta 0.1 exits {laxer} <= {lax}");
+        // a theta override never flips a prediction, only the exit split
+        let want = staged.classify_stage(0, &feats, n, None).unwrap();
+        let got = staged.classify_stage(0, &feats, n, Some(0.45)).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            if let (Some(a), Some(b)) = (w.decision, g.decision) {
+                assert_eq!(a, b);
+            }
+        }
+        // the final tier exits everything regardless of theta
+        let finals = staged.classify_stage(2, &feats, n, Some(5.0)).unwrap();
+        assert!(finals.iter().all(|r| r.decision.is_some()));
     }
 
     #[test]

@@ -23,12 +23,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use abc_serve::autoscale::{Autoscaler, ScaleConfig};
+use abc_serve::control::{
+    ControlConfig, ControlLoop, ControlTarget, ControllerConfig, ScaleConfig,
+};
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::replica::{PoolConfig, PoolError, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
-use abc_serve::planner::{ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, SyntheticClassifier, Trace};
 use abc_serve::types::Request;
 
@@ -52,7 +54,7 @@ fn per_replica_rps() -> f64 {
 }
 
 /// One-gear plan: isolates replica elasticity from gear shifting (the
-/// coupled decision itself is unit-tested in autoscale::autoscaler).
+/// coupled decision itself is unit-tested in control::decider).
 fn one_gear_plan() -> GearPlan {
     GearPlan::new(vec![Gear {
         id: 0,
@@ -227,21 +229,25 @@ fn elastic_pool_matches_fixed_goodput_with_fewer_replica_seconds() {
         Arc::clone(&metrics),
         Arc::clone(&handle),
     ));
-    let mut autoscaler = Autoscaler::spawn(
-        Arc::clone(&elastic_pool),
-        plan,
-        handle,
-        ControllerConfig {
-            sample_every: Duration::from_millis(10),
-            dwell: Duration::from_millis(80),
-            ..ControllerConfig::default()
-        },
-        ScaleConfig {
-            min_replicas: 1,
-            max_replicas: MAX_REPLICAS,
-            warmup: Duration::ZERO,
-            ..ScaleConfig::default()
-        },
+    // the unified control plane: ONE loop thread making the gear and
+    // scale decision from the same observation each tick
+    let mut autoscaler = ControlLoop::spawn(
+        Arc::clone(&elastic_pool) as Arc<dyn ControlTarget>,
+        ControlConfig::autoscaled(
+            plan,
+            ControllerConfig {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(80),
+                ..ControllerConfig::default()
+            },
+            ScaleConfig {
+                min_replicas: 1,
+                max_replicas: MAX_REPLICAS,
+                warmup: Duration::ZERO,
+                ..ScaleConfig::default()
+            },
+            0.0,
+        ),
     );
     let elastic = gen
         .run(&elastic_pool, Arc::clone(&trace), &Metrics::new())

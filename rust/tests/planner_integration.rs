@@ -19,11 +19,12 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use abc_serve::control::{ControlConfig, ControlLoop, ControlTarget, ControllerConfig};
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
-use abc_serve::planner::{Controller, ControllerConfig, Gear, GearHandle, GearPlan};
+use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, SyntheticClassifier, Trace};
 
 const DIM: usize = 4;
@@ -129,11 +130,11 @@ fn adaptive_beats_fixed_top_gear_under_onoff_overload() {
         Arc::clone(&metrics),
         Arc::clone(&handle),
     ));
-    let mut controller = Controller::spawn(
-        Arc::clone(&adaptive_pool),
-        plan,
-        Arc::clone(&handle),
-        controller_cfg(),
+    // the unified control plane in gear-only mode: one loop thread,
+    // walking the plan ladder through the pool's shared gear handle
+    let mut controller = ControlLoop::spawn(
+        Arc::clone(&adaptive_pool) as Arc<dyn ControlTarget>,
+        ControlConfig::gear_plan(plan, controller_cfg()),
     );
     let adaptive = gen
         .run(&adaptive_pool, Arc::clone(&trace), &Metrics::new())

@@ -190,13 +190,28 @@ fn stats_command_roundtrips_structured_snapshot() {
 fn events_command_roundtrips_the_controller_log() {
     let port = 7995;
     let pool = synthetic_pool(None);
-    // seed the shared registry's event log the way a controller would
-    pool.metrics()
-        .events()
-        .record(abc_serve::metrics::EventKind::Shift, "rate", 0, 1, 2, 2);
-    pool.metrics()
-        .events()
-        .record(abc_serve::metrics::EventKind::Scale, "pressure", 1, 1, 2, 4);
+    // seed the shared registry's event log the way the control loop
+    // would
+    pool.metrics().events().record(abc_serve::metrics::EventRecord {
+        kind: abc_serve::metrics::EventKind::Shift,
+        decider: "gear",
+        trigger: "rate",
+        tier: 0,
+        old_gear: 0,
+        new_gear: 1,
+        old_replicas: 2,
+        new_replicas: 2,
+    });
+    pool.metrics().events().record(abc_serve::metrics::EventRecord {
+        kind: abc_serve::metrics::EventKind::Scale,
+        decider: "scale",
+        trigger: "pressure",
+        tier: 0,
+        old_gear: 1,
+        new_gear: 1,
+        old_replicas: 2,
+        new_replicas: 4,
+    });
     let server = std::thread::spawn(move || serve(pool, port));
     std::thread::sleep(Duration::from_millis(300));
 
@@ -206,7 +221,10 @@ fn events_command_roundtrips_the_controller_log() {
     assert_eq!(events.len(), 2, "got {reply}");
     assert_eq!(events[0].get("kind").as_str(), Some("shift"));
     assert_eq!(events[0].get("trigger").as_str(), Some("rate"));
+    assert_eq!(events[0].get("decider").as_str(), Some("gear"));
+    assert_eq!(events[0].get("tier").as_u64(), Some(0));
     assert_eq!(events[1].get("kind").as_str(), Some("scale"));
+    assert_eq!(events[1].get("decider").as_str(), Some("scale"));
     assert_eq!(events[1].get("old_replicas").as_u64(), Some(2));
     assert_eq!(events[1].get("new_replicas").as_u64(), Some(4));
     assert!(events[0].get("ts_s").as_f64().unwrap() > 0.0);

@@ -25,7 +25,10 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use abc_serve::autoscale::{FleetScaleConfig, ScaleConfig, TierScale, TieredAutoscaler};
+use abc_serve::control::{
+    ControlConfig, ControlLoop, ControlTarget, ControllerConfig, ScaleConfig,
+    TierControl, TierRung,
+};
 use abc_serve::coordinator::batcher::BatcherConfig;
 use abc_serve::coordinator::cascade::{BatchClassifier, StageClassifier};
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
@@ -280,6 +283,160 @@ fn tiered_fleet_matches_monolithic_goodput_for_fewer_dollars() {
     assert!((frac_sum - 1.0).abs() < 0.05, "exit fracs sum to ~1: {frac_sum}");
 }
 
+/// The per-tier gear-shifting headline: under 2x-saturation on-off
+/// load, a tiered fleet whose control loop walks per-tier theta rungs
+/// (driven by each tier's downstream pool, where the deferral stream
+/// lands) completes at least as much work as the fixed-gear tiered
+/// fleet while spending no more fleet-dollars -- and the books stay
+/// exactly-once across concurrent shift + scale actions in one run.
+#[test]
+fn per_tier_gear_shifting_beats_fixed_gears_at_no_more_dollars() {
+    let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // longer on-windows than the other suites: theta relief compounds
+    // over a burst, while the fixed fleet drowns at the top tier for
+    // the whole window
+    let burst_rps = 2.0 * mono_capacity_rps();
+    let n = 4800;
+    let trace = Arc::new(Trace::synth(
+        Arrival::OnOff { rate: burst_rps, on_s: 0.5, off_s: 0.25 },
+        n,
+        DIM,
+        43,
+    ));
+    let gen = LoadGen { workers: 192 };
+
+    // ---- fixed gears: the PR-4 fleet shape, no control loop ----
+    let (fixed_fleet, _) = spawn_fleet(vec![
+        TierSpec::fixed(Gpu::V100, 2, MAX_QUEUE),
+        TierSpec::fixed(Gpu::A6000, 2, MAX_QUEUE),
+        TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
+    ]);
+    let fixed = gen
+        .run(&fixed_fleet, Arc::clone(&trace), &Metrics::new())
+        .unwrap();
+    let fixed_dollars = fixed_fleet.dollars();
+    // at 2x saturation the fixed top tier genuinely drowns
+    assert!(fixed.shed > 0, "baseline never saturated: {fixed:?}");
+
+    // ---- geared: same ceilings, elastic floors, theta ladders on the
+    // non-final tiers, budget pinned to the fixed fleet's burn rate so
+    // the dollars bound is structural ----
+    let stage = staged();
+    let (fleet, metrics) = spawn_fleet(vec![
+        TierSpec::elastic(Gpu::V100, 1, 2, MAX_QUEUE),
+        TierSpec::elastic(Gpu::A6000, 1, 2, MAX_QUEUE),
+        TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
+    ]);
+    let rungs = vec![
+        TierRung { theta: None, max_batch: MAX_BATCH },
+        TierRung { theta: Some(0.6), max_batch: MAX_BATCH },
+        TierRung { theta: Some(0.3), max_batch: MAX_BATCH },
+    ];
+    let fixed_burn = 2.0 * 0.50 + 2.0 * 0.80 + 2.49;
+    let tiers: Vec<TierControl> = (0..LEVELS)
+        .map(|i| TierControl {
+            per_replica_rps: stage.stage_capacity_rps(i, MAX_BATCH),
+            scale: (i < 2).then(|| ScaleConfig {
+                min_replicas: 1,
+                max_replicas: 2,
+                warmup: Duration::ZERO,
+                ..ScaleConfig::default()
+            }),
+            rungs: if i + 1 < LEVELS { rungs.clone() } else { vec![] },
+        })
+        .collect();
+    let mut control = ControlLoop::spawn(
+        Arc::clone(&fleet) as Arc<dyn ControlTarget>,
+        ControlConfig::tiered(
+            tiers,
+            ControllerConfig {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(80),
+                ..ControllerConfig::default()
+            },
+            fixed_burn,
+        ),
+    );
+    let geared = gen.run(&fleet, Arc::clone(&trace), &Metrics::new()).unwrap();
+    let geared_dollars = fleet.dollars();
+
+    // exactly-once on both sides, and the fleet's own books agree with
+    // the generator's across concurrent shift + scale actions
+    assert_eq!(fixed.errors, 0, "{fixed:?}");
+    assert_eq!(geared.errors, 0, "{geared:?}");
+    assert_eq!(fixed.completed + fixed.shed, n as u64, "{fixed:?}");
+    assert_eq!(geared.completed + geared.shed, n as u64, "{geared:?}");
+    assert_eq!(metrics.counter("fleet_submitted").get(), n as u64);
+    assert_eq!(metrics.counter("fleet_completed").get(), geared.completed);
+    assert_eq!(metrics.counter("fleet_shed").get(), geared.shed);
+    let exited: u64 = (0..LEVELS).map(|i| fleet.tier(i).exited()).sum();
+    assert_eq!(exited, geared.completed);
+    assert_eq!(fleet.total_outstanding(), 0);
+
+    // both decider families genuinely acted in the same run
+    assert!(
+        metrics.counter("gear_shift_down").get() > 0,
+        "no per-tier downshift; events: {}",
+        metrics.events().to_jsonl()
+    );
+    assert!(
+        metrics.counter("scale_up_total").get() > 0,
+        "never scaled up; metrics: {:?}",
+        metrics.snapshot()
+    );
+    let events = metrics.events().snapshot();
+    assert!(
+        events.iter().any(|e| {
+            e.kind == abc_serve::metrics::EventKind::Shift
+                && e.decider == "gear"
+                && e.tier < 2
+        }),
+        "shift events must attribute the gear decider + tier index"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == abc_serve::metrics::EventKind::Scale),
+        "no scale events logged"
+    );
+
+    // headline (acceptance bar): at least the fixed-gear goodput, at
+    // no more fleet-dollars
+    assert!(
+        geared.completed >= fixed.completed,
+        "geared {} < fixed {} completed",
+        geared.completed,
+        fixed.completed
+    );
+    assert!(
+        geared_dollars <= fixed_dollars,
+        "geared ${geared_dollars:.6} > fixed ${fixed_dollars:.6}"
+    );
+
+    // after the load ends the ladder restores the calibrated policy
+    // and the fleet drains back to its floors
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let restored =
+            fleet.tier_theta(0).is_none() && fleet.tier_theta(1).is_none();
+        let floors = fleet.replicas_per_tier() == vec![1, 1, 1];
+        if restored && floors {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stuck at thetas {:?}/{:?}, replicas {:?}; events: {}",
+            fleet.tier_theta(0),
+            fleet.tier_theta(1),
+            fleet.replicas_per_tier(),
+            metrics.events().to_jsonl()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(metrics.counter("gear_shift_up").get() > 0, "never restored");
+    control.stop();
+}
+
 #[test]
 fn tiered_autoscaler_scales_tiers_independently_and_drains_back() {
     let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
@@ -290,25 +447,32 @@ fn tiered_autoscaler_scales_tiers_independently_and_drains_back() {
         .map(|&gpu| TierSpec::elastic(gpu, 1, 3, MAX_QUEUE))
         .collect();
     let (fleet, metrics) = spawn_fleet(specs);
-    let scale_cfg = FleetScaleConfig {
-        tiers: (0..LEVELS)
-            .map(|i| TierScale {
-                scale: ScaleConfig {
-                    min_replicas: 1,
-                    max_replicas: 3,
-                    warmup: Duration::ZERO,
-                    ..ScaleConfig::default()
-                },
-                per_replica_rps: stage.stage_capacity_rps(i, MAX_BATCH),
-            })
-            .collect(),
-        max_dollars_per_hour: 0.0,
-        sample_every: Duration::from_millis(10),
-        dwell: Duration::from_millis(80),
-        queue_pressure: 0.5,
-        ewma_alpha: 0.3,
-    };
-    let mut autoscaler = TieredAutoscaler::spawn(Arc::clone(&fleet), scale_cfg);
+    // the unified control plane, scale deciders only (no theta rungs):
+    // the TieredAutoscaler-equivalent shape
+    let tiers: Vec<TierControl> = (0..LEVELS)
+        .map(|i| TierControl {
+            per_replica_rps: stage.stage_capacity_rps(i, MAX_BATCH),
+            scale: Some(ScaleConfig {
+                min_replicas: 1,
+                max_replicas: 3,
+                warmup: Duration::ZERO,
+                ..ScaleConfig::default()
+            }),
+            rungs: vec![],
+        })
+        .collect();
+    let mut autoscaler = ControlLoop::spawn(
+        Arc::clone(&fleet) as Arc<dyn ControlTarget>,
+        ControlConfig::tiered(
+            tiers,
+            ControllerConfig {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(80),
+                ..ControllerConfig::default()
+            },
+            0.0,
+        ),
+    );
     // bursts hot enough that every single-replica tier must grow
     // (tier arrivals thin with depth, but 2x monolithic saturation
     // overloads even the fast front tier's floor)
