@@ -32,6 +32,7 @@ use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
 use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::table::{fnum, Table};
 
 const DIM: usize = 8;
@@ -197,4 +198,33 @@ fn main() {
         if goodput_ratio >= 0.95 { "YES" } else { "NO" },
         if rent_ratio < 0.9 { "YES" } else { "NO" },
     );
+
+    let case = |name: &str, r: &LoadReport, rs: f64| {
+        let mut o = JsonObj::new();
+        o.insert("config", Json::str(name));
+        o.insert("replica_seconds", Json::num(rs));
+        o.insert(
+            "replica_seconds_per_1k",
+            Json::num(rs * 1000.0 / (r.completed.max(1) as f64)),
+        );
+        o.insert("report", r.to_json());
+        Json::Obj(o)
+    };
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("autoscale"));
+    o.insert(
+        "cases",
+        Json::Arr(vec![
+            case("fixed_max", &fixed_max, max_rs),
+            case("fixed_min", &fixed_min, min_rs),
+            case("elastic", &elastic, elastic_rs),
+        ]),
+    );
+    o.insert("scale_ups", Json::num(ups as f64));
+    o.insert("scale_downs", Json::num(downs as f64));
+    o.insert("goodput_ratio", Json::num(goodput_ratio));
+    o.insert("rent_ratio", Json::num(rent_ratio));
+    o.insert("goodput_within_5pct", Json::Bool(goodput_ratio >= 0.95));
+    o.insert("fewer_replica_seconds", Json::Bool(rent_ratio < 0.9));
+    abc_serve::benchkit::emit_json("autoscale", Json::Obj(o)).expect("emit json");
 }

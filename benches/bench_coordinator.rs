@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use abc_serve::benchkit::{black_box, Bench};
+use abc_serve::benchkit::{black_box, emit_json, Bench};
 use abc_serve::calib;
 use abc_serve::coordinator::agreement::agree_logits;
 use abc_serve::coordinator::batcher::{Batcher, BatcherConfig, Item};
@@ -16,6 +16,7 @@ use abc_serve::coordinator::pipeline::Pipeline;
 use abc_serve::metrics::Metrics;
 use abc_serve::runtime::engine::Engine;
 use abc_serve::types::{Request, RuleKind};
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::rng::Rng;
 use abc_serve::zoo::manifest::Manifest;
 use abc_serve::zoo::registry::SuiteRuntime;
@@ -41,12 +42,20 @@ fn main() -> anyhow::Result<()> {
         drop(sink); // drains
     });
     b.report();
+    let mut groups = vec![b.to_json()];
+    let emit = |groups: Vec<Json>| -> anyhow::Result<()> {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("coordinator"));
+        o.insert("groups", Json::Arr(groups));
+        emit_json("coordinator", Json::Obj(o))?;
+        Ok(())
+    };
 
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(_) => {
             eprintln!("skipping cascade benches: run `make artifacts` first");
-            return Ok(());
+            return emit(groups);
         }
     };
     let engine = Arc::new(Engine::cpu()?);
@@ -65,6 +74,7 @@ fn main() -> anyhow::Result<()> {
         println!("batch {n}: {:.0} samples/s", n as f64 / r.mean_s);
     }
     b.report();
+    groups.push(b.to_json());
 
     // end-to-end pipeline (batcher + cascade + verdict channels)
     let pipeline = Arc::new(Pipeline::spawn(
@@ -97,5 +107,6 @@ fn main() -> anyhow::Result<()> {
         }
     });
     b.report();
-    Ok(())
+    groups.push(b.to_json());
+    emit(groups)
 }

@@ -6,8 +6,9 @@
 
 use std::sync::Arc;
 
-use abc_serve::benchkit::{black_box, Bench};
+use abc_serve::benchkit::{black_box, emit_json, Bench};
 use abc_serve::runtime::engine::Engine;
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::zoo::manifest::Manifest;
 use abc_serve::zoo::registry::SuiteRuntime;
 
@@ -57,5 +58,10 @@ fn main() -> anyhow::Result<()> {
         });
     }
     b3.report();
+
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("engine"));
+    o.insert("groups", Json::Arr(vec![b.to_json(), b2.to_json(), b3.to_json()]));
+    emit_json("engine", Json::Obj(o))?;
     Ok(())
 }

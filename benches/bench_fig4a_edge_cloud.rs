@@ -4,6 +4,7 @@
 //! Run: `cargo bench --bench bench_fig4a_edge_cloud` (or `make bench`).
 
 use abc_serve::experiments::{self, common::ExpContext};
+use abc_serve::util::json::{Json, JsonObj};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -11,10 +12,16 @@ fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new("artifacts", "artifacts/results", quick)?;
     let t0 = std::time::Instant::now();
     experiments::run("fig4a", &ctx)?;
+    let wall_s = t0.elapsed().as_secs_f64();
     println!(
-        "[bench_fig4a_edge_cloud] regenerated fig4a in {:.2}s{}",
-        t0.elapsed().as_secs_f64(),
+        "[bench_fig4a_edge_cloud] regenerated fig4a in {wall_s:.2}s{}",
         if quick { " (quick mode)" } else { "" }
     );
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("fig4a_edge_cloud"));
+    o.insert("exp", Json::str("fig4a"));
+    o.insert("wall_s", Json::num(wall_s));
+    o.insert("quick", Json::Bool(quick));
+    abc_serve::benchkit::emit_json("fig4a_edge_cloud", Json::Obj(o))?;
     Ok(())
 }

@@ -30,6 +30,7 @@ use abc_serve::metrics::Metrics;
 use abc_serve::control::{ControlConfig, ControlLoop, ControlTarget, ControllerConfig};
 use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::table::{fnum, Table};
 
 const DIM: usize = 8;
@@ -192,4 +193,26 @@ fn main() {
          fixed top which sheds the burst excess) while its quality range sits \
          above fixed fast because idle stretches are served at the top gear."
     );
+
+    let case = |name: &str, r: &LoadReport, q_lo: f64, q_hi: f64| {
+        let mut o = JsonObj::new();
+        o.insert("config", Json::str(name));
+        o.insert("quality_lower", Json::num(q_lo));
+        o.insert("quality_upper", Json::num(q_hi));
+        o.insert("report", r.to_json());
+        Json::Obj(o)
+    };
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("gears"));
+    o.insert(
+        "cases",
+        Json::Arr(vec![
+            case("fixed_top", &top, top_q, top_q),
+            case("fixed_fast", &fast, fast_q, fast_q),
+            case("adaptive", &adaptive, adaptive_q_lower, adaptive_q_upper),
+        ]),
+    );
+    o.insert("shifts_down", Json::num(down as f64));
+    o.insert("shifts_up", Json::num(up as f64));
+    abc_serve::benchkit::emit_json("gears", Json::Obj(o)).expect("emit json");
 }

@@ -21,6 +21,7 @@ use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::table::Table;
 
 const DIM: usize = 8;
@@ -69,6 +70,7 @@ fn main() {
 
     // offered load as multiples of ONE replica's capacity
     let load_factors = [0.5, 1.0, 2.0, 4.0, 6.0];
+    let mut cases = Vec::new();
     for replicas in [1usize, 2, 4] {
         let mut table = Table::new(
             format!("{replicas} replica(s): goodput vs offered load"),
@@ -77,6 +79,11 @@ fn main() {
         for f in load_factors {
             let report = run_point(replicas, f * single_capacity);
             table.row(report.row_cells());
+            let mut o = JsonObj::new();
+            o.insert("replicas", Json::num(replicas as f64));
+            o.insert("load_factor", Json::num(f));
+            o.insert("report", report.to_json());
+            cases.push(Json::Obj(o));
         }
         println!("{}", table.render());
     }
@@ -85,4 +92,8 @@ fn main() {
          then plateaus with the excess shed; the p99 knee shifts right \
          with each doubling of replicas."
     );
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("loadgen"));
+    o.insert("cases", Json::Arr(cases));
+    abc_serve::benchkit::emit_json("loadgen", Json::Obj(o)).expect("emit json");
 }

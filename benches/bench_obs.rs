@@ -1,0 +1,151 @@
+//! Observability-overhead bench: goodput with tracing off vs sampled
+//! vs tracing everything (the ISSUE 6 acceptance bar).
+//!
+//! Drives the open-loop trafficgen at 2x a two-replica pool's
+//! saturation -- so goodput measures *capacity*, not offered load --
+//! under three hooks on the same synthetic cascade:
+//!
+//! * **no-trace** -- `ObsHook::monolithic(None)`: the baseline;
+//! * **sample-100** -- 1-in-100 requests traced (`--trace-sample 100`):
+//!   must stay within 5% of the baseline's goodput;
+//! * **sample-1** -- every request traced: the worst case, reported for
+//!   the record (no bar).
+//!
+//! A micro group times the hot-path primitives themselves (striped
+//! counter inc, histogram record, span record, unsampled branch).
+//!
+//! Run: `cargo bench --bench bench_obs`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::benchkit::{black_box, emit_json, Bench};
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::obs::{ObsHook, SpanKind, Tracer};
+use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
+use abc_serve::util::json::{Json, JsonObj};
+use abc_serve::util::table::Table;
+
+const DIM: usize = 8;
+const MAX_BATCH: usize = 8;
+const MAX_QUEUE: usize = 32;
+const PER_ROW: Duration = Duration::from_millis(2); // ~500 rows/s/replica
+const REPLICAS: usize = 2;
+const RUN_S: f64 = 0.6;
+
+fn classifier() -> Arc<SyntheticClassifier> {
+    Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, PER_ROW))
+}
+
+fn run_point(tracer: Option<Arc<Tracer>>, seed: u64) -> LoadReport {
+    let pool = Arc::new(ReplicaPool::spawn_with_obs(
+        classifier(),
+        PoolConfig {
+            replicas: REPLICAS,
+            max_queue: MAX_QUEUE,
+            batcher: BatcherConfig {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_millis(1),
+            },
+            ..PoolConfig::default()
+        },
+        Metrics::new(),
+        None,
+        ObsHook::monolithic(tracer),
+    ));
+    let capacity = REPLICAS as f64 * classifier().capacity_rps(MAX_BATCH);
+    let offered = 2.0 * capacity;
+    let n = (offered * RUN_S) as usize;
+    let trace = Arc::new(Trace::synth(Arrival::Poisson { rate: offered }, n, DIM, seed));
+    let workers = (REPLICAS * MAX_QUEUE * 2).clamp(32, 512);
+    LoadGen { workers }
+        .run(&pool, trace, &Metrics::new())
+        .expect("load run")
+}
+
+fn main() {
+    // hot-path primitives first: what one operation costs
+    let metrics = Metrics::new();
+    let counter = metrics.counter("bench_ops");
+    let hist = metrics.histogram("bench_lat_s");
+    let tracer = Tracer::new(1);
+    let unsampled = Tracer::new(1_000_000);
+    const OPS: usize = 1000;
+    let mut micro = Bench::new("obs: hot-path primitives (x1000 per iter)");
+    micro.run("counter inc", || {
+        for _ in 0..OPS {
+            counter.inc();
+        }
+    });
+    micro.run("histogram record", || {
+        for _ in 0..OPS {
+            hist.record(0.0015);
+        }
+    });
+    micro.run("span record (sampled)", || {
+        for i in 0..OPS as u64 {
+            tracer.record(i, SpanKind::Infer, 0, 0.001);
+        }
+    });
+    micro.run("sampling branch (unsampled)", || {
+        for i in 0..OPS as u64 {
+            black_box(unsampled.sampled(i));
+        }
+    });
+    micro.report();
+
+    let capacity = REPLICAS as f64 * classifier().capacity_rps(MAX_BATCH);
+    println!(
+        "pool: {REPLICAS} replicas x {:.0} rows/s, offered at 2x saturation \
+         so goodput below measures capacity under each hook\n",
+        capacity / REPLICAS as f64,
+    );
+    let none = run_point(None, 11);
+    let sampled = run_point(Some(Tracer::new(100)), 11);
+    let all = run_point(Some(Tracer::new(1)), 11);
+
+    let mut table =
+        Table::new("goodput under tracing hooks (2x saturation)", LoadReport::header());
+    table.row(none.row_cells());
+    table.row(sampled.row_cells());
+    table.row(all.row_cells());
+    println!("{}", table.render());
+
+    let ratio_100 = sampled.goodput_rps / none.goodput_rps.max(1e-9);
+    let ratio_1 = all.goodput_rps / none.goodput_rps.max(1e-9);
+    println!(
+        "goodput vs no-trace: sample-100 = {:.1}%, sample-1 = {:.1}%",
+        100.0 * ratio_100,
+        100.0 * ratio_1,
+    );
+    println!(
+        "verdict: --trace-sample 100 within 5% of no-trace goodput: {}",
+        if ratio_100 >= 0.95 { "YES" } else { "NO" },
+    );
+
+    let case = |name: &str, sample_every: u64, r: &LoadReport| {
+        let mut o = JsonObj::new();
+        o.insert("config", Json::str(name));
+        o.insert("sample_every", Json::num(sample_every as f64));
+        o.insert("report", r.to_json());
+        Json::Obj(o)
+    };
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("obs"));
+    o.insert(
+        "cases",
+        Json::Arr(vec![
+            case("no_trace", 0, &none),
+            case("sample_100", 100, &sampled),
+            case("sample_1", 1, &all),
+        ]),
+    );
+    o.insert("goodput_ratio_sample_100", Json::num(ratio_100));
+    o.insert("goodput_ratio_sample_1", Json::num(ratio_1));
+    o.insert("sample_100_within_5pct", Json::Bool(ratio_100 >= 0.95));
+    o.insert("micro", micro.to_json());
+    emit_json("obs", Json::Obj(o)).expect("emit json");
+}

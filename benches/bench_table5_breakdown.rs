@@ -4,6 +4,7 @@
 //! Run: `cargo bench --bench bench_table5_breakdown` (or `make bench`).
 
 use abc_serve::experiments::{self, common::ExpContext};
+use abc_serve::util::json::{Json, JsonObj};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick")
@@ -11,10 +12,16 @@ fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new("artifacts", "artifacts/results", quick)?;
     let t0 = std::time::Instant::now();
     experiments::run("table5", &ctx)?;
+    let wall_s = t0.elapsed().as_secs_f64();
     println!(
-        "[bench_table5_breakdown] regenerated table5 in {:.2}s{}",
-        t0.elapsed().as_secs_f64(),
+        "[bench_table5_breakdown] regenerated table5 in {wall_s:.2}s{}",
         if quick { " (quick mode)" } else { "" }
     );
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("table5_breakdown"));
+    o.insert("exp", Json::str("table5"));
+    o.insert("wall_s", Json::num(wall_s));
+    o.insert("quick", Json::Bool(quick));
+    abc_serve::benchkit::emit_json("table5_breakdown", Json::Obj(o))?;
     Ok(())
 }

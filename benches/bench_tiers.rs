@@ -31,6 +31,7 @@ use abc_serve::metrics::Metrics;
 use abc_serve::trafficgen::{
     LoadGen, LoadReport, StagedSynthetic, SyntheticClassifier, Trace,
 };
+use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::table::{fnum, Table};
 
 const DIM: usize = 8;
@@ -159,4 +160,31 @@ fn main() {
         if goodput_ratio >= 0.95 { "YES" } else { "NO" },
         if dollar_ratio < 0.9 { "YES" } else { "NO" },
     );
+
+    let case = |name: &str, desc: &str, r: &LoadReport, d: f64| {
+        let mut o = JsonObj::new();
+        o.insert("config", Json::str(name));
+        o.insert("fleet", Json::str(desc));
+        o.insert("dollars", Json::num(d));
+        o.insert(
+            "dollars_per_1k",
+            Json::num(d * 1000.0 / (r.completed.max(1) as f64)),
+        );
+        o.insert("report", r.to_json());
+        Json::Obj(o)
+    };
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("tiers"));
+    o.insert(
+        "cases",
+        Json::Arr(vec![
+            case("monolithic", &mono_desc, &mono, mono_dollars),
+            case("tiered", &tiered_desc, &tiered, tiered_dollars),
+        ]),
+    );
+    o.insert("goodput_ratio", Json::num(goodput_ratio));
+    o.insert("dollar_ratio", Json::num(dollar_ratio));
+    o.insert("goodput_within_5pct", Json::Bool(goodput_ratio >= 0.95));
+    o.insert("fewer_fleet_dollars", Json::Bool(dollar_ratio < 0.9));
+    abc_serve::benchkit::emit_json("tiers", Json::Obj(o)).expect("emit json");
 }

@@ -4,9 +4,18 @@
 //! timed iterations, reports mean / p50 / p99 / throughput, and renders a
 //! criterion-style summary table.  Used by every `benches/*.rs`
 //! (harness = false targets).
+//!
+//! Every bench also writes a machine-readable `BENCH_<name>.json` via
+//! [`emit_json`] / [`Bench::emit_json`] so CI can upload the numbers
+//! as artifacts and chart the perf trajectory across commits.  The
+//! output directory defaults to the working directory and is
+//! overridable with the `BENCH_OUT` env var.
 
+use std::io;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::{Json, JsonObj};
 use crate::util::stats::Samples;
 use crate::util::table::Table;
 
@@ -110,6 +119,54 @@ impl Bench {
     pub fn results(&self) -> &[CaseResult] {
         &self.results
     }
+
+    /// Machine-readable form: `{"bench": name, "cases": [{name, iters,
+    /// mean_s, p50_s, p99_s, min_s}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let cases = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = JsonObj::new();
+                o.insert("name", Json::str(r.name.as_str()));
+                o.insert("iters", Json::num(r.iters as f64));
+                o.insert("mean_s", Json::num(r.mean_s));
+                o.insert("p50_s", Json::num(r.p50_s));
+                o.insert("p99_s", Json::num(r.p99_s));
+                o.insert("min_s", Json::num(r.min_s));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str(self.name.as_str()));
+        o.insert("cases", Json::Arr(cases));
+        Json::Obj(o)
+    }
+
+    /// Write `BENCH_<name>.json` (see [`emit_json`]).
+    pub fn emit_json(&self) -> io::Result<PathBuf> {
+        emit_json(&self.name, self.to_json())
+    }
+}
+
+/// Where `BENCH_<name>.json` lands: `$BENCH_OUT/` when set, else the
+/// working directory (CI sets `BENCH_OUT` and uploads the directory).
+pub fn bench_out_path(name: &str) -> PathBuf {
+    let dir = std::env::var_os("BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    dir.join(format!("BENCH_{name}.json"))
+}
+
+/// Write a bench's machine-readable result as pretty JSON (trailing
+/// newline) to [`bench_out_path`] and announce the path on stdout.
+/// Benches with domain metrics beyond timings (goodput, $/1k, ...)
+/// build their own `Json` and call this directly.
+pub fn emit_json(name: &str, payload: Json) -> io::Result<PathBuf> {
+    let path = bench_out_path(name);
+    std::fs::write(&path, format!("{}\n", payload.to_pretty()))?;
+    println!("wrote {}", path.display());
+    Ok(path)
 }
 
 /// Pretty time formatting (ns/us/ms/s).
@@ -149,6 +206,34 @@ mod tests {
         assert!(r.mean_s >= 0.001);
         assert!(r.p50_s >= 0.0009);
         b.report(); // must not panic
+    }
+
+    #[test]
+    fn json_emission_roundtrip() {
+        let mut b = Bench::new("unit").with_config(BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            max_time: Duration::from_millis(50),
+        });
+        b.run("noop", || 1 + 1);
+        let j = b.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("unit"));
+        let cases = j.get("cases").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("noop"));
+        assert_eq!(cases[0].get("iters").as_u64(), Some(2));
+
+        let dir = std::env::temp_dir().join(format!("bench_out_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("BENCH_OUT", &dir);
+        let path = b.emit_json().unwrap();
+        std::env::remove_var("BENCH_OUT");
+        assert_eq!(path, dir.join("BENCH_unit.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("unit"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -22,13 +22,54 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig, Item};
 use crate::coordinator::cascade::BatchClassifier;
-use crate::metrics::Metrics;
+use crate::metrics::{Counter, Histogram, Metrics};
+use crate::obs::{ObsHook, SpanKind};
 use crate::planner::gear::GearHandle;
 use crate::types::{Request, Verdict};
 
 struct Job {
     request: Request,
     resp: Sender<Result<Verdict, String>>,
+}
+
+/// Every metric the batch-execution path touches, resolved ONCE at
+/// spawn: the hot path increments through these `Arc` handles and never
+/// takes the registry's map locks (those are for registration and
+/// snapshots only -- DESIGN.md §12).
+struct BatchMetrics {
+    batches_ok: Arc<Counter>,
+    batches_err: Arc<Counter>,
+    batch_size: Arc<Histogram>,
+    batch_exec_s: Arc<Histogram>,
+    request_latency_s: Arc<Histogram>,
+    /// Time a request sat in the batcher queue before its batch flushed.
+    queue_wait_s: Arc<Histogram>,
+    /// Classifier execution time attributed to each request of a batch.
+    service_s: Arc<Histogram>,
+    /// `exit_level_{i}` counters pre-registered for every level the
+    /// classifier can exit at (plus one clamp slot for out-of-range).
+    exit_levels: Vec<Arc<Counter>>,
+}
+
+impl BatchMetrics {
+    fn resolve(metrics: &Metrics, n_levels: usize) -> BatchMetrics {
+        BatchMetrics {
+            batches_ok: metrics.counter("batches_ok"),
+            batches_err: metrics.counter("batches_err"),
+            batch_size: metrics.histogram("batch_size"),
+            batch_exec_s: metrics.histogram("batch_exec_s"),
+            request_latency_s: metrics.histogram("request_latency_s"),
+            queue_wait_s: metrics.histogram("queue_wait_s"),
+            service_s: metrics.histogram("service_s"),
+            exit_levels: (0..=n_levels.max(1))
+                .map(|i| metrics.counter(&format!("exit_level_{i}")))
+                .collect(),
+        }
+    }
+
+    fn exit_level(&self, level: usize) -> &Counter {
+        &self.exit_levels[level.min(self.exit_levels.len() - 1)]
+    }
 }
 
 /// Why `try_submit` refused a request.
@@ -88,13 +129,26 @@ impl Pipeline {
         metrics: Arc<Metrics>,
         gear: Option<Arc<GearHandle>>,
     ) -> Pipeline {
+        Pipeline::spawn_with_obs(classifier, cfg, metrics, gear, ObsHook::default())
+    }
+
+    /// Spawn with an observability hook: sampled requests get
+    /// queue-wait / batch-assembly / infer (and, for terminal hooks,
+    /// complete) trace spans, tagged with the hook's tier index.
+    pub fn spawn_with_obs(
+        classifier: Arc<dyn BatchClassifier>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+        gear: Option<Arc<GearHandle>>,
+        obs: ObsHook,
+    ) -> Pipeline {
         let dim = classifier.dim();
-        let m = Arc::clone(&metrics);
+        let bm = BatchMetrics::resolve(&metrics, classifier.n_levels());
         let outstanding = Arc::new(AtomicUsize::new(0));
         let out = Arc::clone(&outstanding);
         let submitted = metrics.counter("requests_submitted");
         let batcher = Batcher::spawn(cfg, move |batch: Vec<Item<Job>>| {
-            process_batch(classifier.as_ref(), &m, &out, gear.as_deref(), batch);
+            process_batch(classifier.as_ref(), &bm, &out, gear.as_deref(), &obs, batch);
         });
         Pipeline { batcher, metrics, outstanding, submitted, dim }
     }
@@ -186,9 +240,10 @@ impl Pipeline {
 
 fn process_batch(
     classifier: &dyn BatchClassifier,
-    metrics: &Metrics,
+    bm: &BatchMetrics,
     outstanding: &AtomicUsize,
     gear: Option<&GearHandle>,
+    obs: &ObsHook,
     batch: Vec<Item<Job>>,
 ) {
     let n = batch.len();
@@ -201,23 +256,54 @@ fn process_batch(
     // the same config even if the controller swaps mid-execution
     let active = gear.map(|h| h.load());
     let t0 = Instant::now();
+    // queue wait ends when execution starts; `duration_since` saturates
+    // to zero, so a clock hiccup can't panic the pipeline thread
+    for item in &batch {
+        bm.queue_wait_s
+            .record(t0.duration_since(item.enqueued).as_secs_f64());
+    }
+    if let Some(tracer) = obs.tracer() {
+        // the batch's assembly span (oldest member's wait) is emitted
+        // once, attributed to its first sampled member
+        let mut assembly_owner = None;
+        let mut oldest_wait = 0.0f64;
+        for item in &batch {
+            let wait = t0.duration_since(item.enqueued).as_secs_f64();
+            oldest_wait = oldest_wait.max(wait);
+            let id = item.payload.request.id;
+            if tracer.sampled(id) {
+                tracer.record(id, SpanKind::QueueWait, obs.tier, wait);
+                assembly_owner.get_or_insert(id);
+            }
+        }
+        if let Some(id) = assembly_owner {
+            tracer.record(id, SpanKind::BatchAssembly, obs.tier, oldest_wait);
+        }
+    }
     let classified = match &active {
         Some(cfg) => classifier.classify_batch_geared(&features, n, cfg),
         None => classifier.classify_batch(&features, n),
     };
+    let exec_s = t0.elapsed().as_secs_f64();
     match classified {
         Ok(results) => {
-            metrics.counter("batches_ok").inc();
-            metrics.histogram("batch_size").record(n as f64);
-            metrics
-                .histogram("batch_exec_s")
-                .record(t0.elapsed().as_secs_f64());
+            bm.batches_ok.inc();
+            bm.batch_size.record(n as f64);
+            bm.batch_exec_s.record(exec_s);
             for (item, res) in batch.into_iter().zip(results) {
                 let latency = item.enqueued.elapsed().as_secs_f64();
-                metrics.histogram("request_latency_s").record(latency);
-                metrics
-                    .counter(&format!("exit_level_{}", res.exit_level))
-                    .inc();
+                bm.request_latency_s.record(latency);
+                bm.service_s.record(exec_s);
+                bm.exit_level(res.exit_level).inc();
+                if let Some(tracer) = obs.tracer() {
+                    let id = item.payload.request.id;
+                    if tracer.sampled(id) {
+                        tracer.record(id, SpanKind::Infer, obs.tier, exec_s);
+                        if obs.terminal {
+                            tracer.record(id, SpanKind::Complete, obs.tier, latency);
+                        }
+                    }
+                }
                 let verdict = Verdict {
                     request_id: item.payload.request.id,
                     prediction: res.prediction,
@@ -234,7 +320,7 @@ fn process_batch(
             }
         }
         Err(e) => {
-            metrics.counter("batches_err").inc();
+            bm.batches_err.inc();
             let msg = format!("classifier execution failed: {e:#}");
             for item in batch {
                 outstanding.fetch_sub(1, Ordering::SeqCst);

@@ -58,6 +58,7 @@ use crate::coordinator::cascade::BatchClassifier;
 use crate::coordinator::pipeline::{Pipeline, SubmitRejection};
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
+use crate::obs::{ObsHook, SpanKind, Tracer};
 use crate::planner::gear::GearHandle;
 use crate::types::{Request, Verdict};
 
@@ -222,6 +223,9 @@ pub struct ReplicaPool {
     /// Shared gear handle when the pool serves under a gear plan
     /// (`spawn_geared`); the controller swaps it, pipelines read it.
     gear: Option<Arc<GearHandle>>,
+    /// Observability hook cloned into every replica pipeline; also
+    /// drives the pool's own enqueue/shed spans when it is terminal.
+    obs: ObsHook,
 }
 
 impl ReplicaPool {
@@ -233,7 +237,7 @@ impl ReplicaPool {
         cfg: PoolConfig,
         metrics: Arc<Metrics>,
     ) -> ReplicaPool {
-        ReplicaPool::spawn_inner(classifier, cfg, metrics, None)
+        ReplicaPool::spawn_with_obs(classifier, cfg, metrics, None, ObsHook::default())
     }
 
     /// Spawn with a shared gear handle: every replica classifies each
@@ -246,14 +250,20 @@ impl ReplicaPool {
         metrics: Arc<Metrics>,
         gear: Arc<GearHandle>,
     ) -> ReplicaPool {
-        ReplicaPool::spawn_inner(classifier, cfg, metrics, Some(gear))
+        ReplicaPool::spawn_with_obs(classifier, cfg, metrics, Some(gear), ObsHook::default())
     }
 
-    fn spawn_inner(
+    /// Spawn with an observability hook: sampled requests get trace
+    /// spans (enqueue/shed here; queue-wait/infer inside the replica
+    /// pipelines), tagged with the hook's tier index.  A fleet passes
+    /// [`ObsHook::for_tier`] so the router owns the terminal spans; a
+    /// monolithic deployment passes [`ObsHook::monolithic`].
+    pub fn spawn_with_obs(
         classifier: Arc<dyn BatchClassifier>,
         cfg: PoolConfig,
         metrics: Arc<Metrics>,
         gear: Option<Arc<GearHandle>>,
+        obs: ObsHook,
     ) -> ReplicaPool {
         assert!(cfg.replicas > 0, "pool needs at least one replica");
         assert!(cfg.max_queue > 0, "max_queue must be > 0");
@@ -285,6 +295,7 @@ impl ReplicaPool {
             retired_seconds: Mutex::new(0.0),
             metrics,
             gear,
+            obs,
         };
         pool.scale_up(cfg.replicas, Duration::ZERO);
         pool
@@ -292,7 +303,7 @@ impl ReplicaPool {
 
     fn spawn_slot(&self, warmup: Duration) -> Arc<ReplicaSlot> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let pipeline = Pipeline::spawn_with_gear(
+        let pipeline = Pipeline::spawn_with_obs(
             Arc::clone(&self.classifier),
             BatcherConfig {
                 max_batch: self.cur_max_batch.load(Ordering::Relaxed),
@@ -300,6 +311,7 @@ impl ReplicaPool {
             },
             Arc::clone(&self.metrics),
             self.gear.clone(),
+            self.obs.clone(),
         );
         let state = if warmup.is_zero() {
             ReplicaState::Live
@@ -544,6 +556,11 @@ impl ReplicaPool {
         &self.metrics
     }
 
+    /// The attached tracer, when sampling is enabled.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.obs.tracer()
+    }
+
     /// Submit to the least-loaded admitting replica; sheds with
     /// [`PoolError::Overloaded`] when every one is at `max_queue`.
     ///
@@ -559,14 +576,32 @@ impl ReplicaPool {
         &self,
         request: Request,
     ) -> Result<Receiver<Result<Verdict, String>>, PoolError> {
+        // resolve the span decision once: terminal pools own the
+        // enqueue/shed markers, a fleet's tier pools leave them to the
+        // router (which sees the whole request, deferrals included)
+        let span_tracer = if self.obs.terminal {
+            self.obs.tracer().filter(|t| t.sampled(request.id))
+        } else {
+            None
+        };
         let slots = self.slots.read().unwrap();
         match self.dispatch(&slots, ReplicaState::Live, &request) {
-            Ok(rx) => return Ok(rx),
+            Ok(rx) => {
+                if let Some(t) = span_tracer {
+                    t.record(request.id, SpanKind::Enqueue, self.obs.tier, 0.0);
+                }
+                return Ok(rx);
+            }
             Err(Some(e)) => return Err(e),
             Err(None) => {}
         }
         match self.dispatch(&slots, ReplicaState::Warming, &request) {
-            Ok(rx) => return Ok(rx),
+            Ok(rx) => {
+                if let Some(t) = span_tracer {
+                    t.record(request.id, SpanKind::Enqueue, self.obs.tier, 0.0);
+                }
+                return Ok(rx);
+            }
             Err(Some(e)) => return Err(e),
             Err(None) => {}
         }
@@ -580,6 +615,9 @@ impl ReplicaPool {
         let outstanding: usize =
             slots.iter().map(|s| s.pipeline.outstanding()).sum();
         self.shed_counter.inc();
+        if let Some(t) = span_tracer {
+            t.record(request.id, SpanKind::Shed, self.obs.tier, 0.0);
+        }
         Err(PoolError::Overloaded {
             outstanding,
             limit: live.max(1) * self.max_queue,

@@ -65,6 +65,7 @@ use crate::coordinator::replica::{
 };
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
+use crate::obs::{ObsHook, SpanKind, Tracer};
 use crate::types::{Request, Verdict};
 
 /// Reserved exit level a [`StageAdapter`] reports for "defer to the
@@ -253,6 +254,9 @@ pub struct TieredFleet {
     latency: Arc<crate::metrics::Histogram>,
     dollars_gauge: Arc<crate::metrics::Gauge>,
     dollars_per_hour_gauge: Arc<crate::metrics::Gauge>,
+    /// Shared tracer (when tracing is on): the router owns each
+    /// request's terminal spans; tier pools record the per-hop ones.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl TieredFleet {
@@ -264,6 +268,24 @@ impl TieredFleet {
         stage: Arc<dyn StageClassifier>,
         cfg: TieredFleetConfig,
         metrics: Arc<Metrics>,
+    ) -> Result<TieredFleet> {
+        TieredFleet::spawn_with_obs(stage, cfg, metrics, None)
+    }
+
+    /// Spawn with an optional shared tracer: the router emits each
+    /// sampled request's terminal spans (enqueue / defer hops / shed /
+    /// complete) and every tier pool records its queue-wait / infer
+    /// spans tagged with its tier index.  Each tier's private
+    /// `queue_wait_s` / `service_s` histograms are also ALIASED into
+    /// the fleet registry as `tier_{i}_queue_wait_s` /
+    /// `tier_{i}_service_s` -- same atomics, second name -- so the
+    /// per-tier latency breakdown is scrapeable from the fleet without
+    /// any extra hot-path work.
+    pub fn spawn_with_obs(
+        stage: Arc<dyn StageClassifier>,
+        cfg: TieredFleetConfig,
+        metrics: Arc<Metrics>,
+        tracer: Option<Arc<Tracer>>,
     ) -> Result<TieredFleet> {
         anyhow::ensure!(
             cfg.tiers.len() == stage.n_levels(),
@@ -281,7 +303,16 @@ impl TieredFleet {
                     i,
                     spec.theta,
                 ));
-                let pool = Arc::new(ReplicaPool::spawn(
+                let tier_metrics = Metrics::new();
+                metrics.register_histogram(
+                    &format!("tier_{i}_queue_wait_s"),
+                    tier_metrics.histogram("queue_wait_s"),
+                );
+                metrics.register_histogram(
+                    &format!("tier_{i}_service_s"),
+                    tier_metrics.histogram("service_s"),
+                );
+                let pool = Arc::new(ReplicaPool::spawn_with_obs(
                     Arc::clone(&adapter) as Arc<dyn BatchClassifier>,
                     PoolConfig {
                         replicas: spec.replicas,
@@ -291,7 +322,9 @@ impl TieredFleet {
                         min_replicas: spec.min_replicas,
                         max_replicas: spec.max_replicas,
                     },
-                    Metrics::new(),
+                    tier_metrics,
+                    None,
+                    ObsHook::for_tier(tracer.clone(), i),
                 ));
                 TierPool {
                     gpu: spec.gpu,
@@ -315,7 +348,13 @@ impl TieredFleet {
             dollars_gauge: metrics.gauge("fleet_dollars"),
             dollars_per_hour_gauge: metrics.gauge("fleet_dollars_per_hour"),
             metrics,
+            tracer,
         })
+    }
+
+    /// The attached tracer, when sampling is enabled.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref().filter(|t| t.sample_every() > 0)
     }
 
     pub fn n_tiers(&self) -> usize {
@@ -365,8 +404,15 @@ impl TieredFleet {
     pub fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
         let t0 = Instant::now();
         self.submitted.inc();
+        // one sampling decision covers the whole routed path; the tier
+        // pools make the same deterministic call for their own spans
+        let span_tracer = self.tracer().filter(|t| t.sampled(request.id));
+        if let Some(t) = span_tracer {
+            t.record(request.id, SpanKind::Enqueue, 0, 0.0);
+        }
         let mut scores: Vec<f32> = Vec::with_capacity(self.tiers.len());
-        for tier in &self.tiers {
+        for (i, tier) in self.tiers.iter().enumerate() {
+            let hop_t0 = Instant::now();
             let hop = match tier.pool.infer(request.clone()) {
                 Ok(v) => v,
                 Err(e) => {
@@ -375,6 +421,9 @@ impl TieredFleet {
                     // submitted == completed + shed exact.  The error
                     // itself tells the caller which tier refused and why.
                     self.shed.inc();
+                    if let Some(t) = span_tracer {
+                        t.record(request.id, SpanKind::Shed, i, 0.0);
+                    }
                     return Err(e);
                 }
             };
@@ -384,6 +433,9 @@ impl TieredFleet {
                 self.completed.inc();
                 let latency_s = t0.elapsed().as_secs_f64();
                 self.latency.record(latency_s);
+                if let Some(t) = span_tracer {
+                    t.record(request.id, SpanKind::Complete, i, latency_s);
+                }
                 return Ok(Verdict {
                     request_id: hop.request_id,
                     prediction: hop.prediction,
@@ -393,6 +445,15 @@ impl TieredFleet {
                 });
             }
             tier.deferred.inc();
+            if let Some(t) = span_tracer {
+                // the defer hop's duration is the full stay at this tier
+                t.record(
+                    request.id,
+                    SpanKind::Defer,
+                    i,
+                    hop_t0.elapsed().as_secs_f64(),
+                );
+            }
         }
         // unreachable by the StageClassifier contract (the final tier
         // never defers); fail loudly rather than silently dropping

@@ -14,6 +14,7 @@ pub mod cost;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod planner;
 pub mod error;
 pub mod types;

@@ -31,7 +31,14 @@
 //!                   per-tier gears: theta rungs derived from the
 //!                   suite's calibrated thresholds)
 //!                   [--events-file events.jsonl]
-//! repro stats       [--port 7878] [--events]  (query a running server)
+//!                   [--trace-sample N] [--trace-file trace.jsonl]
+//!                   (trace 1-in-N requests through the serving path;
+//!                   a file without --trace-sample implies N=1)
+//! repro stats       [--port 7878] [--events] [--traces] [--prom]
+//!                   (query a running server; --prom prints the
+//!                   Prometheus text exposition instead of the
+//!                   pretty snapshot, --traces dumps sampled trace
+//!                   spans grouped per request as JSONL)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
 //!                   [--replicas 1] [--max-queue 64] [--workers 128]
 //!                   (synthetic backend: no artifacts needed)
@@ -56,6 +63,7 @@ use abc_serve::cost::rental::Gpu;
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
+use abc_serve::obs::{JsonlSink, ObsHook, Tracer};
 use abc_serve::planner::{search, GearHandle, GearPlan, PlannerConfig};
 use abc_serve::runtime::engine::Engine;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
@@ -113,8 +121,12 @@ fn print_usage() {
          \x20                               --max-replicas B] (elastic replicas)\n\
          \x20                               [--tiered --tier-gpus v100,...,h100]\n\
          \x20                               (pool per tier, routed deferral)\n\
+         \x20                               [--trace-sample N] [--trace-file F]\n\
+         \x20                               (trace 1-in-N requests)\n\
          \x20 stats     [--port P]          stats snapshot of a running server\n\
          \x20                               [--events] (+ controller event JSONL)\n\
+         \x20                               [--traces] (+ trace-span JSONL)\n\
+         \x20                               [--prom] (Prometheus exposition)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
          \x20                               backend (no artifacts needed)\n\
          \x20 exp <id|all>                  regenerate paper figures/tables\n\
@@ -144,6 +156,35 @@ fn events_file_sink(args: &Args, metrics: &Metrics, who: &str) -> Result<()> {
         println!("{who} events mirrored to {path} (JSONL)");
     }
     Ok(())
+}
+
+/// Build the request tracer from `--trace-sample N` / `--trace-file
+/// PATH`: 1-in-N deterministic sampling into the bounded span ring,
+/// optionally mirrored to a JSONL file.  A file without an explicit
+/// sample rate implies N=1 (trace everything).
+fn trace_config(args: &Args) -> Result<Option<Arc<Tracer>>> {
+    let mut sample = args.u64_or("trace-sample", 0)?;
+    let file = args.get("trace-file");
+    if sample == 0 && file.is_some() {
+        sample = 1;
+    }
+    if sample == 0 {
+        return Ok(None);
+    }
+    Ok(Some(match file {
+        Some(path) => {
+            let sink = JsonlSink::open(path)
+                .with_context(|| format!("opening --trace-file {path}"))?;
+            println!(
+                "tracing 1-in-{sample} requests, spans mirrored to {path} (JSONL)"
+            );
+            Tracer::with_sink(sample, sink)
+        }
+        None => {
+            println!("tracing 1-in-{sample} requests");
+            Tracer::new(sample)
+        }
+    }))
 }
 
 /// Parse `--tier-gpus v100,a6000,h100`; empty when the flag is absent.
@@ -507,6 +548,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let metrics = Metrics::new();
     events_file_sink(args, &metrics, "control")?;
+    let tracer = trace_config(args)?;
     let pool_cfg = |max_batch: usize, replicas: usize| PoolConfig {
         replicas,
         max_queue,
@@ -530,11 +572,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 replicas
             };
             let handle = GearHandle::new(top.config());
-            let pool = Arc::new(ReplicaPool::spawn_geared(
+            let pool = Arc::new(ReplicaPool::spawn_with_obs(
                 cascade,
                 pool_cfg(top.max_batch, start_replicas),
                 Arc::clone(&metrics),
-                Arc::clone(&handle),
+                Some(Arc::clone(&handle)),
+                ObsHook::monolithic(tracer.clone()),
             ));
             println!(
                 "gear plan: {} gears, top sustains {:.0} rps at accuracy {:.4}",
@@ -576,10 +619,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => {
             _control = None;
-            Arc::new(ReplicaPool::spawn(
+            Arc::new(ReplicaPool::spawn_with_obs(
                 cascade,
                 pool_cfg(max_batch, replicas),
                 Arc::clone(&metrics),
+                None,
+                ObsHook::monolithic(tracer.clone()),
             ))
         }
     };
@@ -688,7 +733,8 @@ fn serve_tiered(
 
     let metrics = Metrics::new();
     events_file_sink(args, &metrics, "control")?;
-    let fleet = Arc::new(TieredFleet::spawn(
+    let tracer = trace_config(args)?;
+    let fleet = Arc::new(TieredFleet::spawn_with_obs(
         cascade as Arc<dyn StageClassifier>,
         TieredFleetConfig {
             tiers: specs,
@@ -698,6 +744,7 @@ fn serve_tiered(
             },
         },
         Arc::clone(&metrics),
+        tracer,
     )?);
 
     // keep the control loop alive for the lifetime of serve(): ONE
@@ -772,13 +819,20 @@ fn serve_tiered(
 }
 
 /// Query a running server's stats snapshot; with `--events`, also dump
-/// the controller event log as JSONL (gear shifts + scale actions).
+/// the controller event log as JSONL (gear shifts + scale actions);
+/// with `--traces`, the sampled trace spans grouped per request; with
+/// `--prom`, print the Prometheus text exposition INSTEAD of the
+/// pretty snapshot (scrape-friendly: nothing else on stdout).
 fn cmd_stats(args: &Args) -> Result<()> {
     let port = args.u16_or("port", 7878)?;
     let mut client = abc_serve::server::Client::connect(port)
         .with_context(|| format!("connecting to 127.0.0.1:{port}"))?;
-    let v = client.stats()?;
-    println!("{}", v.get("stats").to_pretty());
+    if args.flag("prom") {
+        print!("{}", client.prom()?);
+    } else {
+        let v = client.stats()?;
+        println!("{}", v.get("stats").to_pretty());
+    }
     if args.flag("events") {
         let reply = client.events()?;
         for e in reply.get("events").as_arr().unwrap_or(&[]) {
@@ -787,6 +841,20 @@ fn cmd_stats(args: &Args) -> Result<()> {
         let dropped = reply.get("dropped").as_u64().unwrap_or(0);
         if dropped > 0 {
             eprintln!("({dropped} older events evicted from the ring)");
+        }
+    }
+    if args.flag("traces") {
+        let reply = client.traces()?;
+        for t in reply.get("traces").as_arr().unwrap_or(&[]) {
+            println!("{t}");
+        }
+        let sample = reply.get("sample_every").as_u64().unwrap_or(0);
+        if sample == 0 {
+            eprintln!("(server is not tracing: start it with --trace-sample N)");
+        }
+        let dropped = reply.get("dropped").as_u64().unwrap_or(0);
+        if dropped > 0 {
+            eprintln!("({dropped} older spans evicted from the ring)");
         }
     }
     Ok(())

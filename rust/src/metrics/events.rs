@@ -15,13 +15,18 @@
 //! The ring is bounded ([`EVENT_CAPACITY`]) so a long-running server
 //! cannot grow without bound; `dropped` counts evictions so readers
 //! know the log is a suffix, not the full history.
+//!
+//! `record` never blocks on IO: the file sink is a
+//! [`crate::obs::JsonlSink`], whose `append` only buffers in memory (a
+//! background thread owns the disk writes), and even that append
+//! happens AFTER the ring mutex is released.
 
 use std::collections::VecDeque;
-use std::io::Write;
 use std::path::Path;
 use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
+use crate::obs::JsonlSink;
 use crate::util::json::{Json, JsonObj};
 
 /// Max retained events; older entries are evicted (and counted).
@@ -108,7 +113,7 @@ struct LogState {
     ring: VecDeque<Event>,
     next_seq: u64,
     dropped: u64,
-    sink: Option<std::fs::File>,
+    sink: Option<JsonlSink>,
 }
 
 /// Bounded, thread-safe event ring + optional JSONL file sink.  One
@@ -140,46 +145,59 @@ impl Default for EventLog {
 }
 
 impl EventLog {
-    /// Record one decision; stamps `seq` + wall-clock time.  Appends
-    /// the JSONL line to the file sink when one is set (best effort:
-    /// sink IO errors never fail the control loop).
+    /// Record one decision; stamps `seq` + wall-clock time.  The file
+    /// sink (when set) is appended to OUTSIDE the ring mutex, and the
+    /// append itself is an in-memory buffer push -- recording never
+    /// blocks on IO (best effort: sink IO errors never fail the
+    /// control loop).
     pub fn record(&self, r: EventRecord) {
         let ts_s = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_secs_f64())
             .unwrap_or(0.0);
-        let mut s = self.state.lock().unwrap();
-        let event = Event {
-            seq: s.next_seq,
-            ts_s,
-            kind: r.kind,
-            decider: r.decider,
-            trigger: r.trigger,
-            tier: r.tier,
-            old_gear: r.old_gear,
-            new_gear: r.new_gear,
-            old_replicas: r.old_replicas,
-            new_replicas: r.new_replicas,
+        let (event, sink) = {
+            let mut s = self.state.lock().unwrap();
+            let event = Event {
+                seq: s.next_seq,
+                ts_s,
+                kind: r.kind,
+                decider: r.decider,
+                trigger: r.trigger,
+                tier: r.tier,
+                old_gear: r.old_gear,
+                new_gear: r.new_gear,
+                old_replicas: r.old_replicas,
+                new_replicas: r.new_replicas,
+            };
+            s.next_seq += 1;
+            if s.ring.len() >= EVENT_CAPACITY {
+                s.ring.pop_front();
+                s.dropped += 1;
+            }
+            s.ring.push_back(event.clone());
+            (event, s.sink.clone())
         };
-        s.next_seq += 1;
-        if let Some(f) = s.sink.as_mut() {
-            let _ = writeln!(f, "{}", event.to_json());
+        if let Some(sink) = sink {
+            sink.append(&event.to_json().to_string());
         }
-        if s.ring.len() >= EVENT_CAPACITY {
-            s.ring.pop_front();
-            s.dropped += 1;
-        }
-        s.ring.push_back(event);
     }
 
-    /// Mirror every future record into `path` as append-only JSONL.
+    /// Mirror every future record into `path` as append-only JSONL
+    /// (buffered; a background thread flushes -- see
+    /// [`EventLog::flush`]).
     pub fn set_file_sink(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        let f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)?;
-        self.state.lock().unwrap().sink = Some(f);
+        let sink = JsonlSink::open(path)?;
+        self.state.lock().unwrap().sink = Some(sink);
         Ok(())
+    }
+
+    /// Force the file sink's buffer (if any) to disk -- for shutdown
+    /// and tests; steady-state flushing is the sink thread's job.
+    pub fn flush(&self) {
+        let sink = self.state.lock().unwrap().sink.clone();
+        if let Some(sink) = sink {
+            sink.flush();
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -329,6 +347,8 @@ mod tests {
             new_replicas: 3,
             ..rec(EventKind::Scale, "rate")
         });
+        // record() only buffers; force the sink to disk before reading
+        log.flush();
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_dir_all(&dir).ok();
         let lines: Vec<&str> = text.lines().collect();

@@ -4,26 +4,60 @@
 pub mod events;
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 pub use events::{Event, EventKind, EventLog, EventRecord};
 
-/// A monotonically increasing counter.
+/// Shards per [`Counter`]: enough to spread the replica/pipeline
+/// threads of one deployment, small enough that the snapshot fold is
+/// trivial.
+const COUNTER_SHARDS: usize = 8;
+
+/// One cache line per shard, so two threads bumping different shards
+/// of the same counter never false-share.
+#[repr(align(64))]
 #[derive(Debug, Default)]
-pub struct Counter(AtomicU64);
+struct CounterShard(AtomicU64);
+
+/// Each thread sticks to one shard index for its lifetime; indices are
+/// dealt round-robin so concurrent hot threads land on distinct shards.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_SHARD: usize =
+        NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % COUNTER_SHARDS;
+}
+
+/// A monotonically increasing counter, striped across per-thread
+/// shards: `inc`/`add` touch only the calling thread's shard (one
+/// uncontended atomic), `get` folds all shards for an exact total.
+#[derive(Debug, Default)]
+pub struct Counter {
+    shards: [CounterShard; COUNTER_SHARDS],
+}
 
 impl Counter {
+    #[inline]
+    fn my_shard(&self) -> &AtomicU64 {
+        &self.shards[MY_SHARD.with(|s| *s)].0
+    }
+
     pub fn inc(&self) {
-        self.0.fetch_add(1, Ordering::Relaxed);
+        self.my_shard().fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add(&self, v: u64) {
-        self.0.fetch_add(v, Ordering::Relaxed);
+        self.my_shard().fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Exact total across shards.  Each shard is monotone, so a
+    /// concurrent `get` is a valid point-in-time lower bound.
     pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
+        self.shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
     }
 }
 
@@ -105,7 +139,12 @@ impl Histogram {
         if n == 0 {
             return f64::NAN;
         }
-        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        self.sum() / n as f64
+    }
+
+    /// Sum of all recorded values (0 when empty, unlike the NaN mean).
+    pub fn sum(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
     }
 
     /// Approximate quantile (within one bucket's ~5% resolution).
@@ -202,6 +241,19 @@ impl Metrics {
         Arc::clone(g.entry(name.to_string()).or_default())
     }
 
+    /// Publish an EXISTING histogram under `name` (replacing any prior
+    /// binding).  This is how a fleet aliases its tier pools' private
+    /// `queue_wait_s`/`service_s` histograms into its own registry as
+    /// `tier_{i}_queue_wait_s`/`tier_{i}_service_s`: the pipelines keep
+    /// recording through their pre-resolved handles, the fleet registry
+    /// snapshots the very same atomics -- zero hot-path cost.
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), h);
+    }
+
     /// The registry's controller event log (gear shifts + scale
     /// actions).  Writers: the control loop; readers: the wire
     /// `{"cmd":"events"}` command and `repro stats --events`.
@@ -267,6 +319,42 @@ impl Metrics {
         root.insert("gauges", Json::Obj(gauges));
         root.insert("histograms", Json::Obj(histograms));
         Json::Obj(root)
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of the whole
+    /// registry, for the wire `{"cmd":"prom"}` command: counters as
+    /// `counter`, gauges as `gauge`, histograms as `summary` with
+    /// p50/p99/p999 quantile series plus `_sum`/`_count`.  Registry
+    /// names are already `snake_case` identifiers, i.e. valid metric
+    /// names; no escaping needed.
+    pub fn render_prom(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let n = h.count();
+            let _ = writeln!(out, "# TYPE {name} summary");
+            if n > 0 {
+                for (q, v) in [
+                    ("0.5", h.p50()),
+                    ("0.99", h.p99()),
+                    ("0.999", h.p999()),
+                ] {
+                    let _ =
+                        writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+                }
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {n}");
+        }
+        out
     }
 }
 
@@ -509,5 +597,133 @@ mod tests {
         }
         assert_eq!(c.get(), 8000);
         assert_eq!(hs.count(), 8000);
+    }
+
+    #[test]
+    fn counter_stripe_fold_is_exact_across_many_threads() {
+        // more threads than shards: wrap-around sharing must still fold
+        // to the exact total, and mixed inc/add must both stripe
+        let c = Arc::new(Counter::default());
+        let threads: Vec<_> = (0..3 * COUNTER_SHARDS)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        if (t + i as usize) % 2 == 0 {
+                            c.inc();
+                        } else {
+                            c.add(1);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 3 * COUNTER_SHARDS as u64 * 1000);
+        // and the count actually spread: a single shard can't hold it
+        // all when distinct threads were dealt distinct shard indices
+        let max_shard = c
+            .shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .max()
+            .unwrap();
+        assert!(max_shard < c.get(), "all increments on one shard");
+    }
+
+    #[test]
+    fn histogram_snapshot_consistent_under_load() {
+        // readers folding quantiles/counts mid-write must only ever see
+        // monotone, bounded values -- never a torn or over-total count
+        let h = Arc::new(Histogram::default());
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 1..=2000 {
+                        h.record(i as f64 * 1e-5);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                let mut last_n = 0u64;
+                for _ in 0..200 {
+                    let n = h.count();
+                    assert!(n >= last_n, "count went backwards");
+                    assert!(n <= 8000, "count overshot: {n}");
+                    last_n = n;
+                    if n > 0 {
+                        let p99 = h.p99();
+                        assert!(
+                            p99 > 0.0 && p99 < 0.03,
+                            "p99 {p99} outside recorded range"
+                        );
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(h.count(), 8000);
+    }
+
+    #[test]
+    fn registered_histogram_is_an_alias_not_a_copy() {
+        let pool = Metrics::new();
+        let fleet = Metrics::new();
+        let h = pool.histogram("queue_wait_s");
+        fleet.register_histogram("tier_1_queue_wait_s", Arc::clone(&h));
+        h.record(0.004); // pool-side write ...
+        let j = fleet.snapshot_json();
+        let seen = j.get("histograms").get("tier_1_queue_wait_s");
+        assert_eq!(seen.get("n").as_u64(), Some(1)); // ... fleet-side read
+        // re-registering replaces the binding
+        fleet.register_histogram("tier_1_queue_wait_s", Arc::new(Histogram::default()));
+        let j2 = fleet.snapshot_json();
+        assert!(j2.get("histograms").get("tier_1_queue_wait_s").as_obj().is_none());
+    }
+
+    #[test]
+    fn render_prom_shape() {
+        let m = Metrics::new();
+        m.counter("requests_total").add(5);
+        m.gauge("gear_current").set(2.0);
+        m.histogram("request_latency_s").record(0.01);
+        m.histogram("request_latency_s").record(0.02);
+        m.histogram("empty_hist"); // declared but empty
+        let text = m.render_prom();
+        assert!(text.contains("# TYPE requests_total counter\nrequests_total 5\n"));
+        assert!(text.contains("# TYPE gear_current gauge\ngear_current 2\n"));
+        assert!(text.contains("# TYPE request_latency_s summary\n"));
+        assert!(text.contains("request_latency_s{quantile=\"0.5\"} "));
+        assert!(text.contains("request_latency_s{quantile=\"0.99\"} "));
+        assert!(text.contains("request_latency_s{quantile=\"0.999\"} "));
+        assert!(text.contains("request_latency_s_count 2\n"));
+        // _sum is ~0.03 within micro rounding
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("request_latency_s_sum "))
+            .expect("missing _sum");
+        let sum: f64 = sum_line.split(' ').nth(1).unwrap().parse().unwrap();
+        assert!((0.029..0.031).contains(&sum), "sum {sum}");
+        // empty histograms expose zero count and NO quantile series
+        assert!(text.contains("empty_hist_count 0\n"));
+        assert!(!text.contains("empty_hist{quantile"));
+        // every line is a comment or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE ")
+                    || line.split(' ').count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
     }
 }

@@ -1,0 +1,73 @@
+//! Observability: per-request trace spans and the non-blocking JSONL
+//! sink they (and the controller event log) flush through.
+//!
+//! The serving hot path must never pay a registry-map lock or a
+//! blocking file write per request (ROADMAP's hot-path audit; DESIGN.md
+//! §12).  This module is the instrumentation that respects that
+//! contract:
+//!
+//! * [`Tracer`] -- 1-in-N sampled per-request [`SpanRecord`]s (enqueue,
+//!   queue-wait, batch-assembly, per-tier infer, defer hop, shed,
+//!   complete) into a bounded ring of per-slot micro-locks.  Recording
+//!   a span costs one atomic index bump plus one uncontended slot lock;
+//!   unsampled requests pay a single branch.
+//! * [`JsonlSink`] -- append-only JSONL file sink whose `append` only
+//!   pushes into an in-memory buffer; a background flusher thread owns
+//!   all file IO.  Shared by `--trace-file` and the event log's
+//!   `--events-file`.
+//! * [`ObsHook`] -- how a `ReplicaPool`/`Pipeline` learns which tracer
+//!   (if any) it reports into, which tier it is, and whether it owns
+//!   the request's terminal spans.
+//!
+//! Wire surface: `{"cmd":"traces"}` (spans grouped per request) and
+//! `repro stats --traces`; the derived per-tier queue-wait/service-time
+//! histograms land in the metrics registry and are scrapeable via
+//! `{"cmd":"prom"}` ([`crate::metrics::Metrics::render_prom`]).
+
+pub mod sink;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use sink::JsonlSink;
+pub use trace::{SpanKind, SpanRecord, Tracer, TRACE_RING_CAPACITY};
+
+/// How a serving component reports into the tracing layer.  Cloned into
+/// every pipeline a pool spawns, so it must stay cheap to clone.
+#[derive(Clone, Debug)]
+pub struct ObsHook {
+    /// The shared tracer; `None` disables span recording entirely (the
+    /// per-request cost is then zero branches past the `Option` check).
+    pub tracer: Option<Arc<Tracer>>,
+    /// Tier index spans from this component carry (0 for monolithic
+    /// pools; the fleet's 0-based tier otherwise -- matches the
+    /// `tier_{i}_*` metric naming).
+    pub tier: usize,
+    /// Whether this component owns the request's terminal spans
+    /// (enqueue / shed / complete).  True for monolithic pools; false
+    /// for a fleet's tier pools, where the router emits them.
+    pub terminal: bool,
+}
+
+impl Default for ObsHook {
+    fn default() -> Self {
+        ObsHook { tracer: None, tier: 0, terminal: true }
+    }
+}
+
+impl ObsHook {
+    /// Hook for a monolithic pool: tier 0, owns terminal spans.
+    pub fn monolithic(tracer: Option<Arc<Tracer>>) -> ObsHook {
+        ObsHook { tracer, tier: 0, terminal: true }
+    }
+
+    /// Hook for one tier of a fleet: the router owns terminal spans.
+    pub fn for_tier(tracer: Option<Arc<Tracer>>, tier: usize) -> ObsHook {
+        ObsHook { tracer, tier, terminal: false }
+    }
+
+    /// The tracer, when one is attached AND sampling is enabled.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref().filter(|t| t.sample_every() > 0)
+    }
+}

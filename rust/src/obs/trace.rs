@@ -1,0 +1,350 @@
+//! Per-request trace spans: what a request did, where, for how long.
+//!
+//! A request's *trace* is the set of [`SpanRecord`]s sharing its id.
+//! Spans are emitted independently by whichever component measured them
+//! (pool admission, pipeline flush, fleet router) and assembled at READ
+//! time ([`Tracer::snapshot_traces`]) -- the collector pattern: the hot
+//! path never correlates, it only appends.
+//!
+//! Sampling is deterministic by request id (`id % N == 0`), so every
+//! hop of a sampled request is sampled without any shared decision
+//! state, `--trace-sample 1` captures everything, and a sequential id
+//! stream yields exactly 1-in-N traces (property-tested in
+//! rust/tests/obs_integration.rs).
+//!
+//! The ring is a fixed array of per-slot micro-locks indexed by an
+//! atomic head: writers never contend with each other except on a wrap
+//! race, and a snapshot locks each slot only long enough to clone it.
+//! Recording a span is one `fetch_add` + one uncontended `Mutex` slot
+//! store (+ a buffered [`JsonlSink::append`] when `--trace-file` is
+//! set) -- no registry locks, no file IO.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::obs::sink::JsonlSink;
+use crate::util::json::{Json, JsonObj};
+
+/// Max retained spans; older entries are overwritten (and counted via
+/// [`Tracer::dropped`]).
+pub const TRACE_RING_CAPACITY: usize = 8192;
+
+/// What a span measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request admitted (zero-duration marker at arrival).
+    Enqueue,
+    /// Waiting in a replica's batcher queue (enqueue -> batch flush).
+    QueueWait,
+    /// How long the flushed batch spent assembling (oldest member's
+    /// wait); one per batch, attributed to its first sampled member.
+    BatchAssembly,
+    /// Classifier execution of the request's batch at one tier.
+    Infer,
+    /// Deferral hop: the full stay at a tier that answered "defer".
+    Defer,
+    /// Shed by admission control (terminal).
+    Shed,
+    /// Answered (terminal); `tier` is the exit tier, duration is the
+    /// end-to-end latency.
+    Complete,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchAssembly => "batch_assembly",
+            SpanKind::Infer => "infer",
+            SpanKind::Defer => "defer",
+            SpanKind::Shed => "shed",
+            SpanKind::Complete => "complete",
+        }
+    }
+}
+
+/// One timed observation of one request at one place in the stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub request_id: u64,
+    pub kind: SpanKind,
+    /// Tier index the span happened at (0 for monolithic pools; the
+    /// exit tier for `Complete`).
+    pub tier: usize,
+    /// Wall-clock seconds since the UNIX epoch at span end.
+    pub ts_s: f64,
+    /// Measured duration (0 for point markers like `Enqueue`).
+    pub dur_s: f64,
+}
+
+impl SpanRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("request_id", Json::num(self.request_id as f64));
+        o.insert("kind", Json::str(self.kind.name()));
+        o.insert("tier", Json::num(self.tier as f64));
+        o.insert("ts_s", Json::num(self.ts_s));
+        o.insert("dur_s", Json::num(self.dur_s));
+        Json::Obj(o)
+    }
+}
+
+/// Sampled span collector: deterministic 1-in-N admission, bounded
+/// ring, optional JSONL mirror.  One per serving deployment, shared by
+/// the pool/fleet and every pipeline under it (see
+/// [`crate::obs::ObsHook`]).
+pub struct Tracer {
+    sample_every: u64,
+    /// `(seq, span)` slots; seq orders a snapshot and detects wraps.
+    slots: Vec<Mutex<Option<(u64, SpanRecord)>>>,
+    head: AtomicU64,
+    /// Wall clock anchored once: span timestamps are epoch + a cheap
+    /// monotonic elapsed, not a `SystemTime::now` syscall per span.
+    epoch_unix_s: f64,
+    epoch: Instant,
+    sink: Option<JsonlSink>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Tracer(sample_every={}, recorded={})",
+            self.sample_every,
+            self.recorded()
+        )
+    }
+}
+
+impl Tracer {
+    /// A tracer sampling every `sample_every`-th request id (0 disables
+    /// recording entirely, 1 captures every request).
+    pub fn new(sample_every: u64) -> Arc<Tracer> {
+        Tracer::build(sample_every, None)
+    }
+
+    /// Like [`Tracer::new`], mirroring every span into a JSONL sink
+    /// (`serve --trace-file`).
+    pub fn with_sink(sample_every: u64, sink: JsonlSink) -> Arc<Tracer> {
+        Tracer::build(sample_every, Some(sink))
+    }
+
+    fn build(sample_every: u64, sink: Option<JsonlSink>) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            sample_every,
+            slots: (0..TRACE_RING_CAPACITY).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            epoch_unix_s: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0),
+            epoch: Instant::now(),
+            sink,
+        })
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Deterministic sampling decision: the SAME id answers the same at
+    /// every hop, with no shared state.
+    pub fn sampled(&self, request_id: u64) -> bool {
+        match self.sample_every {
+            0 => false,
+            1 => true,
+            n => request_id % n == 0,
+        }
+    }
+
+    /// Wall-clock now, from the anchored epoch (cheap).
+    pub fn now_s(&self) -> f64 {
+        self.epoch_unix_s + self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record one span.  Callers gate on [`Tracer::sampled`] first; the
+    /// cost is one atomic bump + one (uncontended) slot lock.
+    pub fn record(&self, request_id: u64, kind: SpanKind, tier: usize, dur_s: f64) {
+        let span = SpanRecord {
+            request_id,
+            kind,
+            tier,
+            ts_s: self.now_s(),
+            dur_s,
+        };
+        if let Some(sink) = &self.sink {
+            sink.append(&span.to_json().to_string());
+        }
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let i = (seq % TRACE_RING_CAPACITY as u64) as usize;
+        *self.slots[i].lock().unwrap() = Some((seq, span));
+    }
+
+    /// Total spans ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans evicted from the ring (history is a suffix).
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(TRACE_RING_CAPACITY as u64)
+    }
+
+    /// Force the JSONL mirror (if any) to disk.
+    pub fn flush(&self) {
+        if let Some(sink) = &self.sink {
+            sink.flush();
+        }
+    }
+
+    /// Retained spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut entries: Vec<(u64, SpanRecord)> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        entries.sort_by_key(|(seq, _)| *seq);
+        entries.into_iter().map(|(_, span)| span).collect()
+    }
+
+    /// Retained spans grouped per request (ascending request id), the
+    /// wire `{"cmd":"traces"}` body:
+    /// `[{"request_id": .., "spans": [{kind,tier,ts_s,dur_s}, ..]}, ..]`.
+    pub fn snapshot_traces(&self) -> Json {
+        let mut by_req: std::collections::BTreeMap<u64, Vec<SpanRecord>> =
+            std::collections::BTreeMap::new();
+        for span in self.snapshot() {
+            by_req.entry(span.request_id).or_default().push(span);
+        }
+        Json::Arr(
+            by_req
+                .into_iter()
+                .map(|(id, spans)| {
+                    let mut o = JsonObj::new();
+                    o.insert("request_id", Json::num(id as f64));
+                    o.insert(
+                        "spans",
+                        Json::Arr(
+                            spans
+                                .iter()
+                                .map(|s| {
+                                    let mut so = JsonObj::new();
+                                    so.insert("kind", Json::str(s.kind.name()));
+                                    so.insert("tier", Json::num(s.tier as f64));
+                                    so.insert("ts_s", Json::num(s.ts_s));
+                                    so.insert("dur_s", Json::num(s.dur_s));
+                                    Json::Obj(so)
+                                })
+                                .collect(),
+                        ),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_by_id() {
+        let t0 = Tracer::new(0);
+        let t1 = Tracer::new(1);
+        let t10 = Tracer::new(10);
+        for id in 0..100u64 {
+            assert!(!t0.sampled(id), "disabled tracer sampled {id}");
+            assert!(t1.sampled(id), "sample=1 skipped {id}");
+            assert_eq!(t10.sampled(id), id % 10 == 0, "id {id}");
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot_order() {
+        let t = Tracer::new(1);
+        t.record(7, SpanKind::Enqueue, 0, 0.0);
+        t.record(7, SpanKind::QueueWait, 0, 0.001);
+        t.record(7, SpanKind::Complete, 2, 0.004);
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].kind, SpanKind::Enqueue);
+        assert_eq!(spans[2].kind, SpanKind::Complete);
+        assert_eq!(spans[2].tier, 2);
+        assert!(spans[0].ts_s > 0.0);
+        assert!(spans[2].ts_s >= spans[0].ts_s);
+        assert_eq!(t.recorded(), 3);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let t = Tracer::new(1);
+        let n = TRACE_RING_CAPACITY as u64 + 16;
+        for i in 0..n {
+            t.record(i, SpanKind::Infer, 0, 0.0);
+        }
+        assert_eq!(t.recorded(), n);
+        assert_eq!(t.dropped(), 16);
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), TRACE_RING_CAPACITY);
+        // suffix survives: the oldest retained span is request 16
+        assert_eq!(spans[0].request_id, 16);
+        assert_eq!(spans.last().unwrap().request_id, n - 1);
+    }
+
+    #[test]
+    fn traces_group_by_request() {
+        let t = Tracer::new(1);
+        t.record(2, SpanKind::Enqueue, 0, 0.0);
+        t.record(1, SpanKind::Enqueue, 0, 0.0);
+        t.record(2, SpanKind::Complete, 1, 0.002);
+        let traces = t.snapshot_traces();
+        let arr = traces.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("request_id").as_u64(), Some(1));
+        assert_eq!(arr[1].get("request_id").as_u64(), Some(2));
+        let spans2 = arr[1].get("spans").as_arr().unwrap();
+        assert_eq!(spans2.len(), 2);
+        assert_eq!(spans2[1].get("kind").as_str(), Some("complete"));
+        assert_eq!(spans2[1].get("tier").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing_under_capacity() {
+        let t = Tracer::new(1);
+        std::thread::scope(|s| {
+            for w in 0..8u64 {
+                let t = &t;
+                s.spawn(move || {
+                    for i in 0..500u64 {
+                        t.record(w * 1000 + i, SpanKind::Infer, 0, 0.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.recorded(), 4000);
+        assert_eq!(t.snapshot().len(), 4000);
+    }
+
+    #[test]
+    fn sink_mirrors_spans_as_jsonl() {
+        let dir = std::env::temp_dir()
+            .join(format!("abc-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let t = Tracer::with_sink(1, JsonlSink::open(&path).unwrap());
+        t.record(3, SpanKind::Shed, 1, 0.0);
+        t.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let v = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("request_id").as_u64(), Some(3));
+        assert_eq!(v.get("kind").as_str(), Some("shed"));
+        assert_eq!(v.get("tier").as_u64(), Some(1));
+    }
+}

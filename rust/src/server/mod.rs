@@ -16,6 +16,19 @@
 //!     "trigger":"rate","tier":0,"old_gear":0,"new_gear":1,
 //!     "old_replicas":2,"new_replicas":2},
 //!     ...], "dropped": 0}          (control-plane decisions)
+//! -> {"cmd": "prom"}
+//! <- {"prom": "# TYPE requests_submitted counter\n..."}
+//!                                  (Prometheus text exposition as one
+//!                                   JSON string field)
+//! -> {"cmd": "traces"}
+//! <- {"traces": [{"request_id": 42, "spans":
+//!     [{"kind":"enqueue","tier":0,"ts_s":...,"dur_s":0},
+//!      {"kind":"queue_wait","tier":0,...}, ...]}, ...],
+//!     "spans": 97, "dropped": 0, "sample_every": 100}
+//!                                  (retained sampled trace spans,
+//!                                   grouped per request; empty with
+//!                                   the same shape when tracing is
+//!                                   off -- see `serve --trace-sample`)
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
 //!
@@ -72,10 +85,12 @@ use anyhow::Result;
 use crate::coordinator::replica::{PoolError, ReplicaPool};
 use crate::coordinator::router::TieredFleet;
 use crate::metrics::Metrics;
+use crate::obs::Tracer;
 use crate::types::{Request, Verdict};
 use proto::{
     parse_request_line, render_error, render_events, render_metrics,
-    render_overloaded, render_stats, render_verdict,
+    render_overloaded, render_prom_reply, render_stats, render_traces,
+    render_verdict,
 };
 
 /// How long a handler blocks in `read` before re-checking the stop flag.
@@ -98,6 +113,11 @@ pub trait InferBackend: Send + Sync {
     }
     /// Refresh derived telemetry (gauges) before a snapshot command.
     fn publish(&self) {}
+    /// The attached request tracer, when tracing is enabled
+    /// (`serve --trace-sample`); `{"cmd":"traces"}` renders from it.
+    fn tracer(&self) -> Option<&Arc<Tracer>> {
+        None
+    }
 }
 
 impl InferBackend for ReplicaPool {
@@ -112,6 +132,10 @@ impl InferBackend for ReplicaPool {
     fn gear_id(&self) -> Option<usize> {
         self.gear().map(|h| h.gear_id())
     }
+
+    fn tracer(&self) -> Option<&Arc<Tracer>> {
+        ReplicaPool::tracer(self)
+    }
 }
 
 impl InferBackend for TieredFleet {
@@ -125,6 +149,10 @@ impl InferBackend for TieredFleet {
 
     fn publish(&self) {
         self.refresh_gauges();
+    }
+
+    fn tracer(&self) -> Option<&Arc<Tracer>> {
+        TieredFleet::tracer(self)
     }
 }
 
@@ -240,6 +268,13 @@ fn handle_conn(
             }
             Ok(proto::Incoming::Events) => {
                 writeln!(writer, "{}", render_events(pool.metrics()))?;
+            }
+            Ok(proto::Incoming::Prom) => {
+                pool.publish();
+                writeln!(writer, "{}", render_prom_reply(pool.metrics()))?;
+            }
+            Ok(proto::Incoming::Traces) => {
+                writeln!(writer, "{}", render_traces(pool.tracer()))?;
             }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
@@ -359,6 +394,31 @@ impl Client {
         anyhow::ensure!(
             v.get("stats").as_obj().is_some(),
             "stats reply missing 'stats' object: {reply}"
+        );
+        Ok(v)
+    }
+
+    /// Fetch the Prometheus text exposition (`{"cmd":"prom"}`): the
+    /// decoded multi-line scrape body.
+    pub fn prom(&mut self) -> Result<String> {
+        let reply = self.roundtrip(r#"{"cmd":"prom"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad prom reply {reply:?}: {e}"))?;
+        v.get("prom")
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("prom reply missing 'prom' text: {reply}"))
+    }
+
+    /// Fetch the retained trace spans (`{"cmd":"traces"}`), grouped per
+    /// request.
+    pub fn traces(&mut self) -> Result<crate::util::json::Json> {
+        let reply = self.roundtrip(r#"{"cmd":"traces"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad traces reply {reply:?}: {e}"))?;
+        anyhow::ensure!(
+            v.get("traces").as_arr().is_some(),
+            "traces reply missing 'traces' array: {reply}"
         );
         Ok(v)
     }

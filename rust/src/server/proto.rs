@@ -1,6 +1,9 @@
 //! Wire protocol: line-JSON encode/decode for the serving front end.
 
+use std::sync::Arc;
+
 use crate::metrics::Metrics;
+use crate::obs::Tracer;
 use crate::types::{Request, Verdict};
 use crate::util::json::{Json, JsonObj};
 
@@ -11,6 +14,8 @@ pub enum Incoming {
     Metrics,
     Stats,
     Events,
+    Prom,
+    Traces,
     Shutdown,
 }
 
@@ -22,6 +27,8 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
             "metrics" => Ok(Incoming::Metrics),
             "stats" => Ok(Incoming::Stats),
             "events" => Ok(Incoming::Events),
+            "prom" => Ok(Incoming::Prom),
+            "traces" => Ok(Incoming::Traces),
             "shutdown" => Ok(Incoming::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -113,6 +120,37 @@ pub fn render_events(metrics: &Metrics) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the Prometheus text exposition (`{"cmd":"prom"}` reply):
+/// the multi-line scrape body rides as one JSON string field, so the
+/// line-oriented protocol stays line-oriented.
+pub fn render_prom_reply(metrics: &Metrics) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("prom", Json::str(metrics.render_prom()));
+    Json::Obj(obj).to_string()
+}
+
+/// Render the retained trace spans (`{"cmd":"traces"}` reply), grouped
+/// per request, plus ring accounting and the active sampling rate.  A
+/// deployment without tracing answers the same shape, empty.
+pub fn render_traces(tracer: Option<&Arc<Tracer>>) -> String {
+    let mut obj = JsonObj::new();
+    match tracer {
+        Some(t) => {
+            obj.insert("traces", t.snapshot_traces());
+            obj.insert("spans", Json::num(t.recorded() as f64));
+            obj.insert("dropped", Json::num(t.dropped() as f64));
+            obj.insert("sample_every", Json::num(t.sample_every() as f64));
+        }
+        None => {
+            obj.insert("traces", Json::Arr(Vec::new()));
+            obj.insert("spans", Json::num(0.0));
+            obj.insert("dropped", Json::num(0.0));
+            obj.insert("sample_every", Json::num(0.0));
+        }
+    }
+    Json::Obj(obj).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +180,14 @@ mod tests {
         assert!(matches!(
             parse_request_line(r#"{"cmd": "events"}"#).unwrap(),
             Incoming::Events
+        ));
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "prom"}"#).unwrap(),
+            Incoming::Prom
+        ));
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "traces"}"#).unwrap(),
+            Incoming::Traces
         ));
         assert!(matches!(
             parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
@@ -241,6 +287,46 @@ mod tests {
                 .as_u64(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn prom_line_carries_the_exposition_text() {
+        let m = Metrics::new();
+        m.counter("requests_submitted").add(2);
+        m.histogram("request_latency_s").record(0.01);
+        let line = render_prom_reply(&m);
+        let parsed = Json::parse(&line).unwrap();
+        let text = parsed.get("prom").as_str().unwrap();
+        // the multi-line scrape body survives the JSON string hop
+        assert!(text.contains("# TYPE requests_submitted counter"));
+        assert!(text.contains("requests_submitted 2\n"));
+        assert!(text.contains("request_latency_s{quantile=\"0.99\"}"));
+    }
+
+    #[test]
+    fn traces_line_shape_with_and_without_tracer() {
+        use crate::obs::{SpanKind, Tracer};
+        // no tracer: same shape, empty
+        let parsed = Json::parse(&render_traces(None)).unwrap();
+        assert_eq!(parsed.get("traces").as_arr().unwrap().len(), 0);
+        assert_eq!(parsed.get("spans").as_u64(), Some(0));
+        assert_eq!(parsed.get("sample_every").as_u64(), Some(0));
+        // with a tracer: spans grouped per request
+        let t = Tracer::new(1);
+        t.record(5, SpanKind::Enqueue, 0, 0.0);
+        t.record(5, SpanKind::Complete, 1, 0.003);
+        let parsed = Json::parse(&render_traces(Some(&t))).unwrap();
+        assert_eq!(parsed.get("spans").as_u64(), Some(2));
+        assert_eq!(parsed.get("dropped").as_u64(), Some(0));
+        assert_eq!(parsed.get("sample_every").as_u64(), Some(1));
+        let traces = parsed.get("traces").as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].get("request_id").as_u64(), Some(5));
+        let spans = traces[0].get("spans").as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("kind").as_str(), Some("enqueue"));
+        assert_eq!(spans[1].get("kind").as_str(), Some("complete"));
+        assert_eq!(spans[1].get("tier").as_u64(), Some(1));
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::coordinator::router::TieredFleet;
 use crate::metrics::{Histogram, Metrics};
 use crate::server::{Client, InferReply};
 use crate::types::{Request, Verdict};
+use crate::util::json::{Json, JsonObj};
 
 pub use synthetic::{StagedSynthetic, SyntheticClassifier};
 pub use trace::Trace;
@@ -172,6 +173,23 @@ impl LoadReport {
             fmt_time(self.p99_s),
             fmt_time(self.p999_s),
         ]
+    }
+
+    /// Machine-readable form for `BENCH_<name>.json` emission.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n", Json::num(self.n as f64));
+        o.insert("completed", Json::num(self.completed as f64));
+        o.insert("shed", Json::num(self.shed as f64));
+        o.insert("errors", Json::num(self.errors as f64));
+        o.insert("elapsed_s", Json::num(self.elapsed_s));
+        o.insert("offered_rps", Json::num(self.offered_rps));
+        o.insert("goodput_rps", Json::num(self.goodput_rps));
+        o.insert("mean_s", Json::num(self.mean_s));
+        o.insert("p50_s", Json::num(self.p50_s));
+        o.insert("p99_s", Json::num(self.p99_s));
+        o.insert("p999_s", Json::num(self.p999_s));
+        Json::Obj(o)
     }
 }
 

@@ -13,6 +13,7 @@ use abc_serve::coordinator::cascade::Cascade;
 use abc_serve::coordinator::pipeline::Pipeline;
 use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::metrics::Metrics;
+use abc_serve::obs::{ObsHook, Tracer};
 use abc_serve::planner::{GearHandle, GearPlan};
 use abc_serve::server::{serve, Client};
 use abc_serve::trafficgen::SyntheticClassifier;
@@ -229,6 +230,108 @@ fn events_command_roundtrips_the_controller_log() {
     assert_eq!(events[1].get("new_replicas").as_u64(), Some(4));
     assert!(events[0].get("ts_s").as_f64().unwrap() > 0.0);
     assert_eq!(reply.get("dropped").as_u64(), Some(0));
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn prom_command_serves_the_text_exposition() {
+    let port = 7996;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    for id in 0..5 {
+        client.infer(id, &[0.5, -0.5, 0.25, 1.0]).unwrap();
+    }
+    let text = client.prom().unwrap();
+    assert!(
+        text.contains("# TYPE requests_submitted counter"),
+        "exposition:\n{text}"
+    );
+    assert!(text.contains("requests_submitted 5"), "exposition:\n{text}");
+    assert!(
+        text.contains("# TYPE request_latency_s summary"),
+        "exposition:\n{text}"
+    );
+    assert!(text.contains("request_latency_s_count 5"), "exposition:\n{text}");
+    assert!(
+        text.contains(r#"request_latency_s{quantile="0.99"}"#),
+        "exposition:\n{text}"
+    );
+    // every line is scrape-parseable: a comment or `name value`
+    for line in text.lines() {
+        assert!(
+            line.starts_with("# ") || line.split_whitespace().count() == 2,
+            "bad exposition line: {line:?}"
+        );
+    }
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn traces_command_roundtrips_sampled_spans() {
+    let port = 7997;
+    let tracer = Tracer::new(2);
+    let classifier = Arc::new(SyntheticClassifier::new(
+        4,
+        3,
+        Duration::ZERO,
+        Duration::from_micros(100),
+    ));
+    let pool = Arc::new(ReplicaPool::spawn_with_obs(
+        classifier,
+        PoolConfig {
+            replicas: 1,
+            max_queue: 64,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            ..PoolConfig::default()
+        },
+        Metrics::new(),
+        None,
+        ObsHook::monolithic(Some(tracer)),
+    ));
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    for id in 0..10 {
+        client.infer(id, &[0.5, -0.5, 0.25, 1.0]).unwrap();
+    }
+    let reply = client.traces().unwrap();
+    assert_eq!(reply.get("sample_every").as_u64(), Some(2), "got {reply}");
+    assert_eq!(reply.get("dropped").as_u64(), Some(0));
+    let traces = reply.get("traces").as_arr().unwrap();
+    // ids 0,2,4,6,8 sampled
+    assert_eq!(traces.len(), 5, "got {reply}");
+    for t in traces {
+        assert_eq!(t.get("request_id").as_u64().unwrap() % 2, 0);
+        let spans = t.get("spans").as_arr().unwrap();
+        assert!(
+            spans.iter().any(|s| s.get("kind").as_str() == Some("complete")),
+            "trace lacks a complete span: {t}"
+        );
+    }
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn traces_command_on_an_untraced_server_is_well_formed() {
+    let port = 7998;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    let reply = client.traces().unwrap();
+    assert_eq!(reply.get("sample_every").as_u64(), Some(0), "got {reply}");
+    assert_eq!(reply.get("traces").as_arr().map(<[Json]>::len), Some(0));
 
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();

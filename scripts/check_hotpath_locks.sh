@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Hot-path lock lint: fail CI when a coordinator/ file grows new
+# Mutex/RwLock acquisitions.
+#
+# The serving request path (rust/src/coordinator/) must stay lock-free
+# per request: metrics go through pre-resolved Arc handles with striped
+# atomic counters, spans through the tracer's ring (DESIGN.md §12).
+# The locks that legitimately remain -- the batcher's gate and the
+# pool's replica-slot RwLock -- are frozen in
+# scripts/hotpath_lock_baseline.txt; adding an acquisition anywhere in
+# coordinator/ fails this check until the baseline is consciously
+# re-justified (update the file IN THE SAME COMMIT and explain why the
+# new lock cannot live off the hot path).
+#
+# Usage: scripts/check_hotpath_locks.sh [--update]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+baseline=scripts/hotpath_lock_baseline.txt
+pattern='\.lock\(\)|\.read\(\)|\.write\(\)'
+
+current() {
+    # stable per-file counts of lock/read/write acquisitions
+    for f in rust/src/coordinator/*.rs; do
+        printf '%s %s\n' "$f" "$(grep -c -E "$pattern" "$f" || true)"
+    done | sort
+}
+
+if [[ "${1:-}" == "--update" ]]; then
+    current > "$baseline"
+    echo "baseline rewritten: $baseline"
+    exit 0
+fi
+
+if [[ ! -f "$baseline" ]]; then
+    echo "missing $baseline -- run: scripts/check_hotpath_locks.sh --update" >&2
+    exit 1
+fi
+
+status=0
+while read -r file count; do
+    allowed=$(awk -v f="$file" '$1 == f { print $2 }' "$baseline")
+    allowed=${allowed:-0}
+    if (( count > allowed )); then
+        echo "FAIL $file: $count lock acquisitions > baseline $allowed" >&2
+        status=1
+    fi
+done < <(current)
+
+if (( status != 0 )); then
+    cat >&2 <<'EOF'
+
+New Mutex/RwLock acquisitions in the coordinator request path.  Move
+the work off the hot path (pre-resolved metric handles, the obs ring,
+the JSONL sink's background flusher), or -- if the lock is genuinely
+unavoidable -- update scripts/hotpath_lock_baseline.txt in this commit
+and justify it in the commit message.
+EOF
+    exit "$status"
+fi
+echo "hot-path lock lint: OK (coordinator/ lock counts within baseline)"
