@@ -1,0 +1,179 @@
+//! Drift-observatory overhead bench: what does shadow sampling cost
+//! the serving path?
+//!
+//! Replays the same on-off trace (bursts at 2x the fleet's nominal
+//! saturation) against three identical tiered fleets that differ only
+//! in the shadow-sample rate: off, 1-in-100 (the production default)
+//! and 1-in-10 (aggressive).  Shadowed rows re-run the next tier off
+//! the critical path, so the client-visible cost should be only the
+//! extra offered load at the downstream tiers; the acceptance bar is
+//! **shadow-100 goodput within 5% of shadow-off**.
+//!
+//! The table shows goodput, p99 and the shadow ledger (submitted /
+//! dropped / shed / scored) per case, and `BENCH_drift.json` carries
+//! the same machine-readably for the CI trend gate.
+//!
+//! Run: `cargo bench --bench bench_drift`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::StageClassifier;
+use abc_serve::coordinator::router::{TierSpec, TieredFleet, TieredFleetConfig};
+use abc_serve::cost::rental::Gpu;
+use abc_serve::data::workload::Arrival;
+use abc_serve::metrics::Metrics;
+use abc_serve::obs::DriftConfig;
+use abc_serve::trafficgen::{
+    LoadGen, LoadReport, StagedSynthetic, SyntheticClassifier, Trace,
+};
+use abc_serve::util::json::{Json, JsonObj};
+use abc_serve::util::table::Table;
+
+const DIM: usize = 8;
+const LEVELS: usize = 3;
+const MAX_BATCH: usize = 8;
+const MAX_QUEUE: usize = 32;
+const PER_ROW: Duration = Duration::from_millis(2); // ~500 rows/s/replica
+const WEIGHTS: [f64; 3] = [0.15, 0.25, 0.60];
+const N_REQUESTS: usize = 6000;
+const WORKERS: usize = 192;
+
+fn inner() -> SyntheticClassifier {
+    SyntheticClassifier::new(DIM, LEVELS, Duration::ZERO, PER_ROW)
+}
+
+fn onoff_trace() -> Arc<Trace> {
+    let rate = 2.0 * 4.0 * inner().capacity_rps(MAX_BATCH);
+    Arc::new(Trace::synth(
+        Arrival::OnOff { rate, on_s: 0.4, off_s: 0.5 },
+        N_REQUESTS,
+        DIM,
+        53,
+    ))
+}
+
+struct ShadowLedger {
+    submitted: u64,
+    dropped: u64,
+    shed: u64,
+    scored: u64,
+}
+
+fn run_case(sample_every: u64, trace: Arc<Trace>) -> (LoadReport, ShadowLedger) {
+    let stage = Arc::new(StagedSynthetic::new(inner(), WEIGHTS.to_vec()));
+    let metrics = Metrics::new();
+    let drift = (sample_every > 0)
+        .then(|| DriftConfig { sample_every, ..DriftConfig::default() });
+    let fleet = Arc::new(
+        TieredFleet::spawn_with_drift(
+            stage as Arc<dyn StageClassifier>,
+            TieredFleetConfig {
+                tiers: vec![
+                    TierSpec::fixed(Gpu::V100, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::A6000, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
+                ],
+                batcher: BatcherConfig {
+                    max_batch: MAX_BATCH,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            Arc::clone(&metrics),
+            None,
+            drift,
+        )
+        .expect("fleet spawn"),
+    );
+    let report = LoadGen { workers: WORKERS }
+        .run(&fleet, trace, &Metrics::new())
+        .expect("load run");
+    let scored = fleet
+        .drift()
+        .map(|m| (0..m.n_tiers()).map(|t| m.status(t).unwrap().samples).sum())
+        .unwrap_or(0);
+    let ledger = ShadowLedger {
+        submitted: metrics.counter("shadow_submitted").get(),
+        dropped: metrics.counter("shadow_dropped").get(),
+        shed: metrics.counter("shadow_shed").get(),
+        scored,
+    };
+    (report, ledger)
+}
+
+fn main() {
+    let trace = onoff_trace();
+    println!(
+        "on-off trace: {} requests, bursts at 2x saturation, cascade \
+         weights {WEIGHTS:?}; shadow rates: off vs 1-in-100 vs 1-in-10",
+        trace.len(),
+    );
+
+    let cases: [(&str, u64); 3] =
+        [("shadow-off", 0), ("shadow-100", 100), ("shadow-10", 10)];
+    let runs: Vec<(&str, u64, LoadReport, ShadowLedger)> = cases
+        .into_iter()
+        .map(|(name, n)| {
+            let (report, ledger) = run_case(n, Arc::clone(&trace));
+            (name, n, report, ledger)
+        })
+        .collect();
+
+    let mut table = Table::new(
+        "drift observatory overhead (same fleet, shadow rate varies)",
+        &["config", "done", "shed", "goodput rps", "p99", "shadow sub",
+          "shadow drop", "shadow shed", "scored"],
+    );
+    for (name, _, r, l) in &runs {
+        table.row(vec![
+            name.to_string(),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            format!("{:.0}", r.goodput_rps),
+            abc_serve::benchkit::fmt_time(r.p99_s),
+            l.submitted.to_string(),
+            l.dropped.to_string(),
+            l.shed.to_string(),
+            l.scored.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let off = runs[0].2.goodput_rps.max(1e-9);
+    let ratio_100 = runs[1].2.goodput_rps / off;
+    let ratio_10 = runs[2].2.goodput_rps / off;
+    println!(
+        "shadow-100 goodput = {:.1}% of off;  shadow-10 = {:.1}% of off.",
+        100.0 * ratio_100,
+        100.0 * ratio_10,
+    );
+    println!(
+        "verdict: shadow-100 within 5% of off: {}",
+        if ratio_100 >= 0.95 { "YES" } else { "NO" },
+    );
+
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("drift"));
+    let case_json = |name: &str, n: u64, r: &LoadReport, l: &ShadowLedger| {
+        let mut c = JsonObj::new();
+        c.insert("config", Json::str(name));
+        c.insert("sample_every", Json::num(n as f64));
+        c.insert("shadow_submitted", Json::num(l.submitted as f64));
+        c.insert("shadow_dropped", Json::num(l.dropped as f64));
+        c.insert("shadow_shed", Json::num(l.shed as f64));
+        c.insert("shadow_scored", Json::num(l.scored as f64));
+        c.insert("report", r.to_json());
+        Json::Obj(c)
+    };
+    o.insert(
+        "cases",
+        Json::Arr(
+            runs.iter().map(|(name, n, r, l)| case_json(name, *n, r, l)).collect(),
+        ),
+    );
+    o.insert("goodput_ratio_100", Json::num(ratio_100));
+    o.insert("goodput_ratio_10", Json::num(ratio_10));
+    o.insert("shadow_100_within_5pct", Json::Bool(ratio_100 >= 0.95));
+    abc_serve::benchkit::emit_json("drift", Json::Obj(o)).expect("emit json");
+}

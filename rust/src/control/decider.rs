@@ -48,6 +48,7 @@ use crate::control::state::{
     ControlState, ControllerConfig, Observation, Shift, Trigger,
 };
 use crate::cost::rental::Gpu;
+use crate::obs::drift::{AlarmState, DriftStatus};
 use crate::planner::gear::{GearConfig, GearPlan};
 
 /// One rung of a per-tier theta ladder: the runtime operating point a
@@ -173,6 +174,26 @@ impl BudgetArbiter {
     }
 }
 
+/// The recalibration decider: pure predicate over a tier's live
+/// [`DriftStatus`] deciding whether the control loop should re-ground
+/// that tier's serving theta from the drift observatory's windowed
+/// estimate.  Fires only on a *latched* Breach (the
+/// [`crate::obs::drift::DriftAlarm`] hysteresis already filtered
+/// flaps -- the alarm's streak requirement IS this decider's dwell)
+/// and only when the live estimate is finite: the defer-all sentinel
+/// (`+inf`, empty window) and the select-all sentinel (`-inf`,
+/// all-agree window) are degradation markers, not operating points a
+/// tier should serve at.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftDecider;
+
+impl DriftDecider {
+    /// Should the loop re-ground this tier's theta now?
+    pub fn should_reground(status: &DriftStatus) -> bool {
+        status.alarm == AlarmState::Breach && status.theta_live.is_finite()
+    }
+}
+
 /// The decider stack's full configuration: what one
 /// [`crate::control::ControlLoop`] ticks.
 #[derive(Debug, Clone)]
@@ -185,6 +206,12 @@ pub struct ControlConfig {
     pub gears: Vec<GearDecider>,
     /// Fleet-wide burn budget in $/hour; 0 disables the cap.
     pub max_dollars_per_hour: f64,
+    /// Act on drift-observatory breaches: when a tier's
+    /// [`crate::obs::drift::DriftAlarm`] latches Breach, re-ground its
+    /// serving theta from the live windowed estimate
+    /// ([`DriftDecider`]; `serve --recalibrate`).  Off by default --
+    /// the observatory then only reports.
+    pub recalibrate: bool,
 }
 
 impl ControlConfig {
@@ -200,6 +227,7 @@ impl ControlConfig {
                 ladder: GearLadder::Plan(plan),
             }],
             max_dollars_per_hour: 0.0,
+            recalibrate: false,
         }
     }
 
@@ -221,6 +249,7 @@ impl ControlConfig {
                 ladder: GearLadder::Plan(plan),
             }],
             max_dollars_per_hour,
+            recalibrate: false,
         }
     }
 
@@ -252,7 +281,13 @@ impl ControlConfig {
                 });
             }
         }
-        ControlConfig { ctrl, units, gears, max_dollars_per_hour }
+        ControlConfig {
+            ctrl,
+            units,
+            gears,
+            max_dollars_per_hour,
+            recalibrate: false,
+        }
     }
 
     /// Panic early on nonsense configs (the loop thread cannot surface
@@ -1023,6 +1058,34 @@ mod tests {
         let gpus = vec![Gpu::V100, Gpu::H100];
         decide_tick(&cfg, &mut st, &o, &c, &gpus, &[0.0; 2], 0.2);
         assert_eq!(st[0].ewma_rps(), 1234.0, "undecided unit's EWMA froze");
+    }
+
+    #[test]
+    fn drift_decider_regrounds_only_on_finite_latched_breach() {
+        let status = |alarm, theta_live| DriftStatus {
+            tier: 0,
+            alarm,
+            samples: 100,
+            window: 100,
+            agreement: 0.6,
+            failure_rate: 0.2,
+            epsilon: 0.05,
+            theta_live,
+            theta_cal: Some(0.6),
+        };
+        assert!(DriftDecider::should_reground(&status(AlarmState::Breach, 0.4)));
+        // pre-latch states never actuate
+        assert!(!DriftDecider::should_reground(&status(AlarmState::Ok, 0.4)));
+        assert!(!DriftDecider::should_reground(&status(AlarmState::Warn, 0.4)));
+        // degradation sentinels are not operating points
+        assert!(!DriftDecider::should_reground(&status(
+            AlarmState::Breach,
+            f32::INFINITY
+        )));
+        assert!(!DriftDecider::should_reground(&status(
+            AlarmState::Breach,
+            f32::NEG_INFINITY
+        )));
     }
 
     #[test]

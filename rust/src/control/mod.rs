@@ -28,7 +28,10 @@
 //! * [`forecast`] -- [`Forecaster`]: linear trend over the EWMA window
 //!   consulted by the scale decider for predictive warm-up;
 //! * [`plane`] -- [`ControlLoop`]: the ONE thread per serve process
-//!   that samples, ticks the stack, and actuates.
+//!   that samples, ticks the stack, and actuates (and, with
+//!   `--recalibrate` armed, runs the [`DriftDecider`]: a tier whose
+//!   drift alarm latched Breach gets its serving theta re-grounded
+//!   from the drift observatory's live windowed estimate).
 //!
 //! **Per-tier gear shifting** (new with this module): each tier of a
 //! tiered fleet carries a ladder of theta rungs actuated through
@@ -60,8 +63,9 @@ pub mod state;
 pub mod target;
 
 pub use decider::{
-    decide_tick, BudgetArbiter, ControlConfig, GearDecider, GearLadder,
-    ScaleAction, ShiftAction, Tick, TierControl, TierRung, UnitControl,
+    decide_tick, BudgetArbiter, ControlConfig, DriftDecider, GearDecider,
+    GearLadder, ScaleAction, ShiftAction, Tick, TierControl, TierRung,
+    UnitControl,
 };
 pub use forecast::Forecaster;
 pub use plane::ControlLoop;

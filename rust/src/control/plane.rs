@@ -18,14 +18,21 @@
 //! prefixed `ewma_rps` / `gear` gauges for fleets, whose remaining
 //! per-tier gauges come from the fleet's own `publish`); and one
 //! [`crate::metrics::EventLog`] entry per action, recording the decider
-//! ("gear" | "scale" | "budget"), the trigger, and the tier index.
+//! ("gear" | "scale" | "budget" | "drift"), the trigger, and the tier
+//! index.  With `ControlConfig::recalibrate` armed the loop also runs
+//! the [`DriftDecider`] each tick: a tier whose drift alarm latched
+//! Breach gets its serving theta re-grounded from the observatory's
+//! live estimate (`drift_reground_total` counter, `decider="drift"`
+//! events).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::control::decider::{decide_tick, ControlConfig, GearLadder};
+use crate::control::decider::{
+    decide_tick, ControlConfig, DriftDecider, GearLadder,
+};
 use crate::control::forecast::{Forecaster, FORECAST_WINDOW};
 use crate::control::sampler::Sampler;
 use crate::control::state::{ControlState, Shift};
@@ -97,6 +104,11 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
     let shifts_down = control.counter("gear_shift_down");
     let scale_ups = control.counter("scale_up_total");
     let scale_downs = control.counter("scale_down_total");
+    // registered only when the recalibration loop is armed, so a
+    // report-only observatory leaves no dangling zero counter here
+    let regrounds = cfg
+        .recalibrate
+        .then(|| control.counter("drift_reground_total"));
     // single-unit targets keep the legacy gauge names; fleets get
     // tier-prefixed EWMA gauges (their lifecycle gauges come from the
     // fleet's own publish)
@@ -247,6 +259,37 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
                 old_replicas: a.fleet,
                 new_replicas: a.target,
             });
+        }
+        // -- drift recalibration (opt-in) --------------------------------
+        // re-ground a tier's serving theta from the observatory's live
+        // estimate when its alarm has latched Breach.  Deliberately
+        // outside the BudgetArbiter and the per-unit dwell clocks: a
+        // reground changes accuracy, not capacity or spend, and the
+        // alarm's own hysteresis streak already is its dwell.
+        if let Some(regrounds) = &regrounds {
+            for i in 0..n {
+                let breached = target
+                    .drift_status(i)
+                    .is_some_and(|s| DriftDecider::should_reground(&s));
+                if !breached {
+                    continue;
+                }
+                if target.reground_theta(i).is_some() {
+                    regrounds.inc();
+                    let rung = states[i].current();
+                    let live = target.unit_counts(i).1;
+                    control.events().record(EventRecord {
+                        kind: EventKind::Shift,
+                        decider: "drift",
+                        trigger: "breach",
+                        tier: i,
+                        old_gear: rung,
+                        new_gear: rung,
+                        old_replicas: live,
+                        new_replicas: live,
+                    });
+                }
+            }
         }
         // lifecycle + rental telemetry every tick
         for (i, g) in gauges.iter().enumerate() {

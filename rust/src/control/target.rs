@@ -25,6 +25,7 @@ use crate::coordinator::replica::ReplicaPool;
 use crate::coordinator::router::TieredFleet;
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
+use crate::obs::drift::DriftStatus;
 use crate::planner::gear::GearConfig;
 
 /// One serving backend as seen by the control loop; see module docs.
@@ -58,6 +59,21 @@ pub trait ControlTarget: Send + Sync {
     fn scale_up(&self, unit: usize, n: usize, warmup: Duration);
     /// Begin gracefully draining `n` of unit `i`'s Live replicas.
     fn drain(&self, unit: usize, n: usize);
+    /// Unit `i`'s live drift status from the drift observatory, when
+    /// the target shadow-samples (`None`: no observatory, or `i` is the
+    /// final tier, which never early-exits and is not monitored).
+    fn drift_status(&self, unit: usize) -> Option<DriftStatus> {
+        let _ = unit;
+        None
+    }
+    /// Re-ground unit `i`'s serving theta from the observatory's live
+    /// windowed estimate, returning the theta now being served.  `None`
+    /// when the observatory refuses (no latched breach, thin window, or
+    /// a non-finite estimate) or the target has no observatory.
+    fn reground_theta(&self, unit: usize) -> Option<f32> {
+        let _ = unit;
+        None
+    }
     /// The target-level registry the loop records events and publishes
     /// control gauges into (== the unit registry for a pool, the fleet
     /// registry for a tiered fleet).
@@ -173,6 +189,19 @@ impl ControlTarget for TieredFleet {
 
     fn drain(&self, unit: usize, n: usize) {
         self.tier(unit).pool().drain(n);
+    }
+
+    fn drift_status(&self, unit: usize) -> Option<DriftStatus> {
+        self.drift().and_then(|m| m.status(unit))
+    }
+
+    fn reground_theta(&self, unit: usize) -> Option<f32> {
+        // the monitor guards the actuation (latched breach, full-enough
+        // window, finite estimate); only a granted reground touches the
+        // serving adapter
+        let theta = self.drift()?.reground(unit)?;
+        self.set_tier_theta(unit, Some(theta));
+        Some(theta)
     }
 
     fn control_metrics(&self) -> &Arc<Metrics> {

@@ -49,13 +49,30 @@
 //! N's arrivals ARE tier N-1's deferrals.  The control plane also
 //! actuates per-tier gears through [`TieredFleet::set_tier_gear`]
 //! (runtime theta/batch retuning; see `control::decider`).
+//!
+//! **Shadow sampling** (the drift observatory's feed): when spawned
+//! with a [`DriftConfig`], the router forwards a deterministic 1-in-N
+//! fraction of early-exited requests to the downstream tiers OFF the
+//! critical path.  The client already got the early answer; the shadow
+//! copy rides a bounded `sync_channel` (`try_send`: a full queue drops
+//! the observation, never blocks serving) to one worker thread that
+//! routes it through the remaining tiers and records `(score,
+//! agree-with-downstream)` into the fleet's [`DriftMonitor`].  Shadow
+//! rows never touch the fleet's exactly-once counters (`fleet_*`,
+//! `tier_{i}_exited/deferred`, `request_latency_s`); they DO run on
+//! the real tier pools, so the per-tier private registries the
+//! autoscaler samples see them as genuinely offered load.  Shadow
+//! telemetry: `shadow_submitted` / `shadow_dropped` (queue full) /
+//! `shadow_shed` (downstream refused the shadow copy).
 
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::calib::threshold::CalPoint;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::cascade::{
     BatchClassifier, CascadeResult, StageClassifier,
@@ -65,6 +82,7 @@ use crate::coordinator::replica::{
 };
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
+use crate::obs::drift::{DriftConfig, DriftMonitor};
 use crate::obs::{ObsHook, SpanKind, Tracer};
 use crate::types::{Request, Verdict};
 
@@ -219,6 +237,10 @@ pub struct TierPool {
     outstanding_gauge: Arc<crate::metrics::Gauge>,
     live_gauge: Arc<crate::metrics::Gauge>,
     exit_frac_gauge: Arc<crate::metrics::Gauge>,
+    exit_frac_window_gauge: Arc<crate::metrics::Gauge>,
+    /// `exited` as of the previous `refresh_gauges` tick (the windowed
+    /// exit-fraction delta base).
+    prev_exited: AtomicU64,
 }
 
 impl TierPool {
@@ -243,6 +265,61 @@ impl TierPool {
     }
 }
 
+/// One early-exited request's shadow copy: enough to replay it against
+/// the downstream tiers and score the early answer.
+struct ShadowJob {
+    /// Tier the request exited at (the monitored tier).
+    tier: usize,
+    /// The score it exited with -- the [`CalPoint`] x-coordinate.
+    score: f32,
+    /// The early answer the client received.
+    prediction: u32,
+    /// The request itself, re-submitted downstream.
+    request: Request,
+}
+
+/// The router's side of the shadow path: a bounded non-blocking sender
+/// plus pre-resolved accounting (fleet registry).
+struct ShadowHandle {
+    tx: SyncSender<ShadowJob>,
+    submitted: Arc<crate::metrics::Counter>,
+    dropped: Arc<crate::metrics::Counter>,
+}
+
+/// Bounded shadow queue: serving never blocks on the observatory; a
+/// full queue costs one dropped observation (`shadow_dropped`).
+const SHADOW_QUEUE: usize = 256;
+
+/// The single off-path worker: drains shadow jobs, routes each through
+/// the tiers BELOW its exit tier, and records the agreement outcome.
+/// Exits when the fleet (the only sender) is dropped.
+fn shadow_worker(
+    rx: Receiver<ShadowJob>,
+    pools: Vec<Arc<ReplicaPool>>,
+    monitor: Arc<DriftMonitor>,
+    shed: Arc<crate::metrics::Counter>,
+) {
+    while let Ok(job) = rx.recv() {
+        let mut agreed = None;
+        for pool in pools.iter().skip(job.tier + 1) {
+            match pool.infer(job.request.clone()) {
+                Ok(v) if v.exit_tier != DEFERRED => {
+                    agreed = Some(v.prediction == job.prediction);
+                    break;
+                }
+                Ok(_) => continue, // deferred: ask the next tier down
+                Err(_) => break,   // refused: no observation, not an exit
+            }
+        }
+        match agreed {
+            Some(correct) => {
+                monitor.record(job.tier, CalPoint { score: job.score, correct });
+            }
+            None => shed.inc(),
+        }
+    }
+}
+
 /// The tiered fleet: one pool per cascade level plus the deferral
 /// router.  See the module docs for layout and guarantees.
 pub struct TieredFleet {
@@ -254,9 +331,16 @@ pub struct TieredFleet {
     latency: Arc<crate::metrics::Histogram>,
     dollars_gauge: Arc<crate::metrics::Gauge>,
     dollars_per_hour_gauge: Arc<crate::metrics::Gauge>,
+    /// `completed` as of the previous `refresh_gauges` tick (the
+    /// windowed exit-fraction delta base).
+    prev_completed: AtomicU64,
     /// Shared tracer (when tracing is on): the router owns each
     /// request's terminal spans; tier pools record the per-hop ones.
     tracer: Option<Arc<Tracer>>,
+    /// Shadow path into the drift observatory (None when not spawned
+    /// with a [`DriftConfig`], or when its sampling is off).
+    shadow: Option<ShadowHandle>,
+    drift: Option<Arc<DriftMonitor>>,
 }
 
 impl TieredFleet {
@@ -286,6 +370,22 @@ impl TieredFleet {
         cfg: TieredFleetConfig,
         metrics: Arc<Metrics>,
         tracer: Option<Arc<Tracer>>,
+    ) -> Result<TieredFleet> {
+        TieredFleet::spawn_with_drift(stage, cfg, metrics, tracer, None)
+    }
+
+    /// Spawn with the drift observatory attached: 1-in-N early exits
+    /// are shadow-routed through the downstream tiers off the critical
+    /// path and scored into a [`DriftMonitor`] (see the module docs).
+    /// Each tier's spec theta seeds the monitor's `theta_cal` gauge.
+    /// `None` (or `sample_every == 0`, or a single-tier fleet) spawns
+    /// no shadow machinery at all.
+    pub fn spawn_with_drift(
+        stage: Arc<dyn StageClassifier>,
+        cfg: TieredFleetConfig,
+        metrics: Arc<Metrics>,
+        tracer: Option<Arc<Tracer>>,
+        drift_cfg: Option<DriftConfig>,
     ) -> Result<TieredFleet> {
         anyhow::ensure!(
             cfg.tiers.len() == stage.n_levels(),
@@ -336,9 +436,37 @@ impl TieredFleet {
                         .gauge(&format!("tier_{i}_outstanding")),
                     live_gauge: metrics.gauge(&format!("tier_{i}_live")),
                     exit_frac_gauge: metrics.gauge(&format!("tier_{i}_exit_frac")),
+                    exit_frac_window_gauge: metrics
+                        .gauge(&format!("tier_{i}_exit_frac_window")),
+                    prev_exited: AtomicU64::new(0),
                 }
             })
-            .collect();
+            .collect::<Vec<TierPool>>();
+        let (shadow, drift) = match drift_cfg {
+            Some(dc) if dc.sample_every > 0 && tiers.len() > 1 => {
+                let thetas: Vec<Option<f32>> =
+                    cfg.tiers.iter().map(|s| s.theta).collect();
+                let monitor = DriftMonitor::new(dc, &thetas, &metrics);
+                let (tx, rx) = sync_channel::<ShadowJob>(SHADOW_QUEUE);
+                let pools: Vec<Arc<ReplicaPool>> =
+                    tiers.iter().map(|t| Arc::clone(&t.pool)).collect();
+                let mon = Arc::clone(&monitor);
+                let shed = metrics.counter("shadow_shed");
+                std::thread::Builder::new()
+                    .name("abc-shadow".into())
+                    .spawn(move || shadow_worker(rx, pools, mon, shed))
+                    .expect("spawn shadow worker");
+                (
+                    Some(ShadowHandle {
+                        tx,
+                        submitted: metrics.counter("shadow_submitted"),
+                        dropped: metrics.counter("shadow_dropped"),
+                    }),
+                    Some(monitor),
+                )
+            }
+            _ => (None, None),
+        };
         Ok(TieredFleet {
             tiers,
             submitted: metrics.counter("fleet_submitted"),
@@ -347,9 +475,17 @@ impl TieredFleet {
             latency: metrics.histogram("request_latency_s"),
             dollars_gauge: metrics.gauge("fleet_dollars"),
             dollars_per_hour_gauge: metrics.gauge("fleet_dollars_per_hour"),
+            prev_completed: AtomicU64::new(0),
             metrics,
             tracer,
+            shadow,
+            drift,
         })
+    }
+
+    /// The drift observatory, when the fleet was spawned with one.
+    pub fn drift(&self) -> Option<&Arc<DriftMonitor>> {
+        self.drift.as_ref()
     }
 
     /// The attached tracer, when sampling is enabled.
@@ -394,6 +530,15 @@ impl TieredFleet {
         self.tiers[tier].adapter.theta()
     }
 
+    /// Theta-only actuation: swap one tier's deferral threshold and
+    /// leave its batch cap alone.  This is what the control plane's
+    /// drift re-grounding drives -- unlike [`TieredFleet::set_tier_gear`]
+    /// it is not a ladder rung, it is the live estimate replacing a
+    /// stale calibration.
+    pub fn set_tier_theta(&self, tier: usize, theta: Option<f32>) {
+        self.tiers[tier].adapter.set_theta(theta);
+    }
+
     /// Route one request through the cascade: submit to tier 1's pool,
     /// forward on deferral, answer at the first exit.  Blocks until the
     /// verdict (the serving front end and loadgen both call through
@@ -435,6 +580,25 @@ impl TieredFleet {
                 self.latency.record(latency_s);
                 if let Some(t) = span_tracer {
                     t.record(request.id, SpanKind::Complete, i, latency_s);
+                }
+                // shadow-sample this early exit into the drift
+                // observatory: the client gets the answer below either
+                // way; a full shadow queue drops the observation (one
+                // counter bump), never blocks serving.  The final tier
+                // has no downstream to agree with.
+                if let (Some(sh), Some(mon)) = (&self.shadow, &self.drift) {
+                    if i + 1 < self.tiers.len() && mon.sampled(request.id) {
+                        let job = ShadowJob {
+                            tier: i,
+                            score: scores.last().copied().unwrap_or(0.0),
+                            prediction: hop.prediction,
+                            request: request.clone(),
+                        };
+                        match sh.tx.try_send(job) {
+                            Ok(()) => sh.submitted.inc(),
+                            Err(_) => sh.dropped.inc(),
+                        }
+                    }
                 }
                 return Ok(Verdict {
                     request_id: hop.request_id,
@@ -502,12 +666,33 @@ impl TieredFleet {
     /// fractions, and the rental bill.  Called by the tiered autoscaler
     /// every tick and by the serving front end before a `stats`
     /// snapshot.
+    ///
+    /// Two exit-fraction gauges per tier: `tier_{i}_exit_frac` is the
+    /// ALL-TIME cumulative ratio (stable, but an hour of history masks
+    /// a shift that happened a minute ago), and
+    /// `tier_{i}_exit_frac_window` is the delta since the previous
+    /// refresh tick -- the drift observatory's exit-rate signal.  With
+    /// no completions since the last tick the window gauge keeps its
+    /// previous value (no traffic is not evidence of a shift).  The
+    /// counters are read racily against in-flight completions, so a
+    /// window fraction can transiently misattribute a completion by
+    /// one tick; both gauges are telemetry, not accounting.
     pub fn refresh_gauges(&self) {
-        let done = self.completed.get().max(1) as f64;
+        let done_now = self.completed.get();
+        let done = done_now.max(1) as f64;
+        let done_prev = self.prev_completed.swap(done_now, Ordering::Relaxed);
+        let delta_done = done_now.saturating_sub(done_prev);
         for t in &self.tiers {
             t.outstanding_gauge.set(t.pool.total_outstanding() as f64);
             t.live_gauge.set(t.pool.n_replicas() as f64);
-            t.exit_frac_gauge.set(t.exited.get() as f64 / done);
+            let e_now = t.exited.get();
+            t.exit_frac_gauge.set(e_now as f64 / done);
+            let e_prev = t.prev_exited.swap(e_now, Ordering::Relaxed);
+            if delta_done > 0 {
+                t.exit_frac_window_gauge.set(
+                    e_now.saturating_sub(e_prev) as f64 / delta_done as f64,
+                );
+            }
         }
         self.dollars_gauge.set(self.dollars());
         self.dollars_per_hour_gauge.set(self.dollars_per_hour());
@@ -795,5 +980,93 @@ mod tests {
         assert_eq!(fleet.tier(1).pool().counts().2, 0, "nothing left draining");
         fleet.infer(req(999)).unwrap();
         assert_eq!(fleet.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn shadow_sampling_observes_without_double_counting() {
+        use crate::obs::drift::DriftConfig;
+        let metrics = Metrics::new();
+        let fleet = TieredFleet::spawn_with_drift(
+            staged(20) as Arc<dyn StageClassifier>,
+            fleet_cfg(1, 256),
+            Arc::clone(&metrics),
+            None,
+            Some(DriftConfig {
+                sample_every: 1, // shadow every early exit
+                min_samples: 1,
+                ..DriftConfig::default()
+            }),
+        )
+        .unwrap();
+        let n = 80u64;
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        // exactly-once at the fleet boundary is UNTOUCHED by shadowing
+        assert_eq!(metrics.counter("fleet_submitted").get(), n);
+        assert_eq!(metrics.counter("fleet_completed").get(), n);
+        assert_eq!(metrics.counter("fleet_shed").get(), 0);
+        let exited: u64 = (0..LEVELS).map(|i| fleet.tier(i).exited()).sum();
+        assert_eq!(exited, n, "tier exit counters see only client rows");
+        // every early exit was shadow-submitted (sample_every 1, and
+        // 80 jobs cannot overflow the 256-slot queue)
+        let early = n - fleet.tier(LEVELS - 1).exited();
+        assert_eq!(metrics.counter("shadow_submitted").get(), early);
+        assert_eq!(metrics.counter("shadow_dropped").get(), 0);
+        // wait for the worker to drain the queue
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let recorded = || {
+            (0..LEVELS - 1)
+                .map(|i| metrics.counter(&format!("tier_{i}_shadow_samples")).get())
+                .sum::<u64>()
+                + metrics.counter("shadow_shed").get()
+        };
+        while recorded() < early && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(recorded(), early, "every shadow job observed or shed");
+        // the default synthetic stage is faithful: downstream always
+        // agrees with an early exit, so the live window is all-correct
+        let mon = fleet.drift().expect("monitor attached");
+        let s = mon.status(0).expect("tier 0 monitored");
+        assert!(s.samples > 0);
+        assert_eq!(s.agreement, 1.0);
+        assert_eq!(s.failure_rate, 0.0);
+        // and STILL no fleet-counter movement from the shadow traffic
+        assert_eq!(metrics.counter("fleet_completed").get(), n);
+        assert_eq!(fleet.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn windowed_exit_frac_tracks_recent_traffic_only() {
+        let fleet = TieredFleet::spawn(
+            staged(20) as Arc<dyn StageClassifier>,
+            fleet_cfg(1, 256),
+            Metrics::new(),
+        )
+        .unwrap();
+        let n = 120u64;
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        fleet.refresh_gauges();
+        let g = |name: &str| fleet.metrics().gauge(name).get();
+        // first tick: the window IS all time
+        assert!((g("tier_0_exit_frac_window") - g("tier_0_exit_frac")).abs() < 1e-9);
+        // drop tier 1's theta so the SAME population exits tier 0 more
+        fleet.set_tier_gear(0, Some(0.2), 4);
+        for id in 0..n {
+            fleet.infer(req(id)).unwrap();
+        }
+        fleet.refresh_gauges();
+        let all_time = g("tier_0_exit_frac");
+        let window = g("tier_0_exit_frac_window");
+        assert!(
+            window > all_time + 1e-9,
+            "window {window} must outrun the cumulative {all_time} after a shift"
+        );
+        // no traffic between ticks: the window gauge holds its value
+        fleet.refresh_gauges();
+        assert!((g("tier_0_exit_frac_window") - window).abs() < 1e-9);
     }
 }

@@ -34,11 +34,20 @@
 //!                   [--trace-sample N] [--trace-file trace.jsonl]
 //!                   (trace 1-in-N requests through the serving path;
 //!                   a file without --trace-sample implies N=1)
-//! repro stats       [--port 7878] [--events] [--traces] [--prom]
+//!                   [--shadow-sample N [--drift-window W]
+//!                    [--drift-epsilon E] [--recalibrate]]  (tiered only:
+//!                   shadow 1-in-N early exits through the next tier off
+//!                   the critical path, estimate live agreement/theta per
+//!                   tier, raise drift alarms; --recalibrate additionally
+//!                   lets the control loop re-ground a breached tier's
+//!                   theta from the live estimate -- needs --autoscale)
+//! repro stats       [--port 7878] [--events] [--traces] [--drift]
+//!                   [--prom]
 //!                   (query a running server; --prom prints the
 //!                   Prometheus text exposition instead of the
 //!                   pretty snapshot, --traces dumps sampled trace
-//!                   spans grouped per request as JSONL)
+//!                   spans grouped per request as JSONL, --drift the
+//!                   drift observatory's per-tier statuses)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
 //!                   [--replicas 1] [--max-queue 64] [--workers 128]
 //!                   (synthetic backend: no artifacts needed)
@@ -63,7 +72,7 @@ use abc_serve::cost::rental::Gpu;
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
-use abc_serve::obs::{JsonlSink, ObsHook, Tracer};
+use abc_serve::obs::{DriftConfig, JsonlSink, ObsHook, Tracer};
 use abc_serve::planner::{search, GearHandle, GearPlan, PlannerConfig};
 use abc_serve::runtime::engine::Engine;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
@@ -123,9 +132,13 @@ fn print_usage() {
          \x20                               (pool per tier, routed deferral)\n\
          \x20                               [--trace-sample N] [--trace-file F]\n\
          \x20                               (trace 1-in-N requests)\n\
+         \x20                               [--shadow-sample N [--recalibrate]]\n\
+         \x20                               (drift observatory: shadow 1-in-N\n\
+         \x20                               early exits, live theta gauges)\n\
          \x20 stats     [--port P]          stats snapshot of a running server\n\
          \x20                               [--events] (+ controller event JSONL)\n\
          \x20                               [--traces] (+ trace-span JSONL)\n\
+         \x20                               [--drift] (drift observatory status)\n\
          \x20                               [--prom] (Prometheus exposition)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
          \x20                               backend (no artifacts needed)\n\
@@ -647,6 +660,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// capacity; `--max-dollars-hour` caps the fleet's burn rate) AND
 /// shifts per-tier gears -- theta rungs derived from the suite's
 /// calibrated thresholds, walked by each tier's downstream observer.
+/// `--shadow-sample N` attaches the drift observatory (shadow 1-in-N
+/// early exits through the next tier, off the critical path), and
+/// `--recalibrate` arms the control loop's drift decider: a tier whose
+/// alarm latches Breach gets its theta re-grounded from the live
+/// windowed estimate.
 fn serve_tiered(
     args: &Args,
     suite: &str,
@@ -661,6 +679,23 @@ fn serve_tiered(
     let autoscale = args.flag("autoscale");
     let min_replicas = args.usize_or("min-replicas", 1)?;
     let warmup = Duration::from_millis(args.u64_or("warmup-ms", 0)?);
+    let shadow_sample = args.u64_or("shadow-sample", 0)?;
+    let drift_window = args.usize_or("drift-window", 512)?;
+    let drift_epsilon = args.f64_or("drift-epsilon", 0.05)?;
+    let recalibrate = args.flag("recalibrate");
+    anyhow::ensure!(
+        !recalibrate || autoscale,
+        "--recalibrate needs --autoscale (the control loop applies regrounds)"
+    );
+    anyhow::ensure!(
+        !recalibrate || shadow_sample > 0,
+        "--recalibrate needs --shadow-sample N (the drift observatory \
+         supplies the live estimates it re-grounds from)"
+    );
+    anyhow::ensure!(
+        drift_epsilon > 0.0 && drift_epsilon < 1.0,
+        "--drift-epsilon must be in (0, 1)"
+    );
 
     let gpus = {
         let listed = gpu_list(args, "tier-gpus")?;
@@ -734,7 +769,13 @@ fn serve_tiered(
     let metrics = Metrics::new();
     events_file_sink(args, &metrics, "control")?;
     let tracer = trace_config(args)?;
-    let fleet = Arc::new(TieredFleet::spawn_with_obs(
+    let drift_cfg = (shadow_sample > 0).then(|| DriftConfig {
+        sample_every: shadow_sample,
+        window: drift_window,
+        epsilon: drift_epsilon,
+        ..DriftConfig::default()
+    });
+    let fleet = Arc::new(TieredFleet::spawn_with_drift(
         cascade as Arc<dyn StageClassifier>,
         TieredFleetConfig {
             tiers: specs,
@@ -745,7 +786,20 @@ fn serve_tiered(
         },
         Arc::clone(&metrics),
         tracer,
+        drift_cfg,
     )?);
+    if let Some(monitor) = fleet.drift() {
+        // the specs carry theta: None (the cascade policy is already
+        // calibrated), so ground the theta_cal reference gauges from
+        // the policy's own thresholds here
+        for (i, t) in tier_thetas.iter().enumerate() {
+            monitor.set_theta_cal(i, *t);
+        }
+        println!(
+            "drift observatory: shadowing 1-in-{shadow_sample} early exits \
+             (window {drift_window}, epsilon {drift_epsilon})"
+        );
+    }
 
     // keep the control loop alive for the lifetime of serve(): ONE
     // thread decides per-tier scaling AND per-tier gear shifting
@@ -787,16 +841,20 @@ fn serve_tiered(
             .collect();
         println!(
             "tiered control plane: {min_replicas}..{max_replicas} replicas \
-             per tier, per-tier gear shifting (warm-up {warmup:?}{})",
+             per tier, per-tier gear shifting (warm-up {warmup:?}{}{})",
             if budget > 0.0 {
                 format!(", budget ${budget:.2}/h")
             } else {
                 String::new()
-            }
+            },
+            if recalibrate { ", drift recalibration armed" } else { "" }
         );
+        let mut control_cfg =
+            ControlConfig::tiered(tiers, ControllerConfig::default(), budget);
+        control_cfg.recalibrate = recalibrate;
         Some(ControlLoop::spawn(
             Arc::clone(&fleet) as Arc<dyn ControlTarget>,
-            ControlConfig::tiered(tiers, ControllerConfig::default(), budget),
+            control_cfg,
         ))
     } else {
         None
@@ -821,7 +879,9 @@ fn serve_tiered(
 /// Query a running server's stats snapshot; with `--events`, also dump
 /// the controller event log as JSONL (gear shifts + scale actions);
 /// with `--traces`, the sampled trace spans grouped per request; with
-/// `--prom`, print the Prometheus text exposition INSTEAD of the
+/// `--drift`, the drift observatory's per-tier statuses (live
+/// agreement, failure rate vs epsilon, theta_live vs theta_cal, alarm);
+/// with `--prom`, print the Prometheus text exposition INSTEAD of the
 /// pretty snapshot (scrape-friendly: nothing else on stdout).
 fn cmd_stats(args: &Args) -> Result<()> {
     let port = args.u16_or("port", 7878)?;
@@ -855,6 +915,17 @@ fn cmd_stats(args: &Args) -> Result<()> {
         let dropped = reply.get("dropped").as_u64().unwrap_or(0);
         if dropped > 0 {
             eprintln!("({dropped} older spans evicted from the ring)");
+        }
+    }
+    if args.flag("drift") {
+        let reply = client.drift()?;
+        let drift = reply.get("drift");
+        println!("{}", drift.to_pretty());
+        if drift.get("sample_every").as_u64().unwrap_or(0) == 0 {
+            eprintln!(
+                "(server has no drift observatory: start it tiered with \
+                 --shadow-sample N)"
+            );
         }
     }
     Ok(())

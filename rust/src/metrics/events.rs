@@ -53,16 +53,18 @@ impl EventKind {
 /// What one decision changed, as handed to [`EventLog::record`] -- the
 /// stamped [`Event`] adds `seq` and wall-clock time.  `decider` names
 /// the stack member that produced the action ("gear" | "scale" |
-/// "budget" when the arbiter clamped a grant) and `tier` is the unit
-/// index it acted on (0 for monolithic pools), so shift and scale
-/// events attribute uniformly across both serving layouts -- the tier
-/// index no longer rides in the gear slots.
+/// "budget" when the arbiter clamped a grant | "drift" when a theta
+/// was re-grounded) and `tier` is the unit index it acted on (0 for
+/// monolithic pools), so shift and scale events attribute uniformly
+/// across both serving layouts -- the tier index no longer rides in
+/// the gear slots.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EventRecord {
     pub kind: EventKind,
-    /// Decider that produced the action: "gear" | "scale" | "budget".
+    /// Decider that produced the action:
+    /// "gear" | "scale" | "budget" | "drift".
     pub decider: &'static str,
-    /// What forced the decision: "rate" | "pressure" | "slo".
+    /// What forced the decision: "rate" | "pressure" | "slo" | "breach".
     pub trigger: &'static str,
     /// Unit/tier index the action applied to (0 for monolithic pools).
     pub tier: usize,
@@ -80,9 +82,10 @@ pub struct Event {
     /// Wall-clock seconds since the UNIX epoch at record time.
     pub ts_s: f64,
     pub kind: EventKind,
-    /// Decider that produced the action: "gear" | "scale" | "budget".
+    /// Decider that produced the action:
+    /// "gear" | "scale" | "budget" | "drift".
     pub decider: &'static str,
-    /// What forced the decision: "rate" | "pressure" | "slo".
+    /// What forced the decision: "rate" | "pressure" | "slo" | "breach".
     pub trigger: &'static str,
     /// Unit/tier index the action applied to (0 for monolithic pools).
     pub tier: usize,

@@ -1,0 +1,629 @@
+//! Drift observatory: live agreement estimation over shadow-sampled
+//! exits, calibration-drift gauges, and theta re-grounding.
+//!
+//! Every theta in the system comes from ONE-SHOT offline calibration
+//! (paper §4, Appendix B): `theta = estimate_theta(cal_points, eps)`
+//! picks the smallest threshold whose empirical failure rate -- the
+//! fraction of selected (early-exited) rows the next tier would have
+//! answered differently -- stays within epsilon.  Under distribution
+//! drift the agreement curve moves and that guarantee silently rots:
+//! the tier keeps exiting at the stale theta while its true failure
+//! rate climbs.  Nothing in the request path can see this, because the
+//! whole point of an early exit is that the next tier never runs.
+//!
+//! The observatory closes that blind spot with *shadow sampling*: the
+//! router forwards a deterministic 1-in-N fraction of early-exited
+//! rows (the [`Tracer`]-style `id % n` idiom, see [`DriftMonitor::sampled`])
+//! to the next tier OFF the critical path -- the client already got
+//! the early answer; the shadow verdict only produces a
+//! [`CalPoint`]-style observation `(score, agree-with-next-tier)`.
+//! Those land here, in a bounded per-tier window, and each arrival
+//! re-runs [`estimate_theta`] over the window:
+//!
+//! * `tier_{i}_agreement_live`      -- windowed agreement fraction;
+//! * `tier_{i}_empirical_failure_rate` -- windowed disagreement (the
+//!   live estimate of the quantity epsilon bounds);
+//! * `tier_{i}_theta_live` vs `tier_{i}_theta_cal` -- what calibration
+//!   WOULD pick on today's traffic vs what the tier is serving with;
+//! * `tier_{i}_drift_alarm`         -- [`AlarmState`] as 0/1/2;
+//! * `tier_{i}_shadow_samples`      -- observation count.
+//!
+//! The [`DriftAlarm`] is a hysteresis state machine (a state change
+//! needs `hysteresis` CONSECUTIVE observations of the same candidate
+//! state) so a single unlucky window never flaps the alarm.  On
+//! breach, the opt-in control-plane hook (`serve --recalibrate`) calls
+//! [`DriftMonitor::reground`] to re-ground the tier's serving theta
+//! from the live estimate -- recorded in the `EventLog` with
+//! `decider="drift"`.
+//!
+//! Everything here is off the request hot path: [`DriftMonitor::sampled`]
+//! is a pure modulus on the request id, and the per-tier window Mutex
+//! is touched only by the single shadow worker thread, the control
+//! loop and wire queries (`scripts/check_hotpath_locks.sh` counts this
+//! file's acquisitions in its baseline).
+//!
+//! [`Tracer`]: crate::obs::trace::Tracer
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::calib::threshold::{estimate_theta, CalPoint, ThetaEstimate};
+use crate::metrics::{Counter, Gauge, Metrics};
+use crate::util::json::{Json, JsonObj};
+
+/// Shadow-sampling + alarm knobs for the drift observatory.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Shadow 1-in-N early-exited rows through the next tier (0
+    /// disables shadowing entirely, 1 shadows every early exit).
+    pub sample_every: u64,
+    /// Bounded per-tier observation window (oldest points evicted).
+    pub window: usize,
+    /// The safe-deferral budget the live failure rate is judged
+    /// against (paper's epsilon).
+    pub epsilon: f64,
+    /// Breach when `failure > breach_mult * epsilon`; between epsilon
+    /// and the breach line the alarm is Warn.
+    pub breach_mult: f64,
+    /// Consecutive same-verdict observations required to change alarm
+    /// state (clamped to >= 1).
+    pub hysteresis: usize,
+    /// Below this many windowed observations the alarm stays Ok and
+    /// re-grounding refuses to act: no evidence, no alarm.
+    pub min_samples: usize,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            sample_every: 100,
+            window: 512,
+            epsilon: 0.05,
+            breach_mult: 2.0,
+            hysteresis: 3,
+            min_samples: 50,
+        }
+    }
+}
+
+/// Alarm verdict for one tier's safe-deferral guarantee.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlarmState {
+    /// Live failure rate within epsilon (or not enough evidence yet).
+    Ok,
+    /// Live failure rate above epsilon but under the breach line.
+    Warn,
+    /// Live failure rate above `breach_mult * epsilon`.
+    Breach,
+}
+
+impl AlarmState {
+    /// Wire / log name.
+    pub fn name(self) -> &'static str {
+        match self {
+            AlarmState::Ok => "ok",
+            AlarmState::Warn => "warn",
+            AlarmState::Breach => "breach",
+        }
+    }
+
+    /// Gauge encoding: ok=0, warn=1, breach=2.
+    pub fn level(self) -> u64 {
+        match self {
+            AlarmState::Ok => 0,
+            AlarmState::Warn => 1,
+            AlarmState::Breach => 2,
+        }
+    }
+}
+
+/// Pure hysteresis state machine: the published alarm only moves after
+/// `hysteresis` CONSECUTIVE raw observations of the same candidate
+/// state, so one unlucky window cannot flap ok -> breach -> ok.
+#[derive(Debug, Clone)]
+pub struct DriftAlarm {
+    current: AlarmState,
+    candidate: AlarmState,
+    streak: usize,
+    hysteresis: usize,
+}
+
+impl DriftAlarm {
+    /// A fresh alarm in [`AlarmState::Ok`].
+    pub fn new(hysteresis: usize) -> Self {
+        DriftAlarm {
+            current: AlarmState::Ok,
+            candidate: AlarmState::Ok,
+            streak: 0,
+            hysteresis: hysteresis.max(1),
+        }
+    }
+
+    /// The published state.
+    pub fn current(&self) -> AlarmState {
+        self.current
+    }
+
+    /// Feed one raw per-window verdict; returns the (possibly moved)
+    /// published state.  A raw verdict equal to the current state
+    /// resets the candidate streak.
+    pub fn observe(&mut self, raw: AlarmState) -> AlarmState {
+        if raw == self.current {
+            self.candidate = self.current;
+            self.streak = 0;
+            return self.current;
+        }
+        if raw == self.candidate {
+            self.streak += 1;
+        } else {
+            self.candidate = raw;
+            self.streak = 1;
+        }
+        if self.streak >= self.hysteresis {
+            self.current = self.candidate;
+            self.streak = 0;
+        }
+        self.current
+    }
+}
+
+/// One tier's live drift picture, as served over the wire and consumed
+/// by the control plane's drift decider.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftStatus {
+    /// Monitored (early-exiting) tier index.
+    pub tier: usize,
+    /// Published (hysteresis-filtered) alarm state.
+    pub alarm: AlarmState,
+    /// All-time shadow observations recorded for this tier.
+    pub samples: u64,
+    /// Windowed observations currently held.
+    pub window: usize,
+    /// Windowed agreement fraction with the next tier.
+    pub agreement: f64,
+    /// Windowed empirical failure rate (disagreement among exits) --
+    /// the live estimate of the quantity epsilon bounds.
+    pub failure_rate: f64,
+    /// The budget the failure rate is judged against.
+    pub epsilon: f64,
+    /// What [`estimate_theta`] picks on the current window
+    /// (`f32::INFINITY` = defer-all sentinel when the window is empty,
+    /// `f32::NEG_INFINITY` when every windowed exit agrees).
+    pub theta_live: f32,
+    /// The threshold the tier is actually serving with (None when the
+    /// tier was spawned without an explicit theta).
+    pub theta_cal: Option<f32>,
+}
+
+struct TierState {
+    window: VecDeque<CalPoint>,
+    alarm: DriftAlarm,
+    live: ThetaEstimate,
+    theta_cal: Option<f32>,
+    samples: u64,
+}
+
+struct TierDrift {
+    tier: usize,
+    state: Mutex<TierState>,
+    samples: Arc<Counter>,
+    agreement_gauge: Arc<Gauge>,
+    failure_gauge: Arc<Gauge>,
+    theta_live_gauge: Arc<Gauge>,
+    theta_cal_gauge: Arc<Gauge>,
+    alarm_gauge: Arc<Gauge>,
+}
+
+impl TierDrift {
+    // the ONLY lock acquisition in this file: every path below funnels
+    // through here, keeping the hot-path lint baseline at 1
+    fn state(&self) -> MutexGuard<'_, TierState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// The per-fleet drift observatory: one bounded observation window +
+/// alarm per early-exiting tier (the final tier never exits early and
+/// is not monitored), publishing into the fleet's metrics registry so
+/// the gauges ride the existing `stats` / `render_prom` surfaces.
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    tiers: Vec<TierDrift>,
+    regrounds: Arc<Counter>,
+}
+
+impl std::fmt::Debug for DriftMonitor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DriftMonitor")
+            .field("cfg", &self.cfg)
+            .field("tiers", &self.tiers.len())
+            .finish()
+    }
+}
+
+impl DriftMonitor {
+    /// Build a monitor for a fleet whose tier `i` serves with
+    /// `theta_cal[i]` (`theta_cal.len()` = number of tiers; the last
+    /// entry is ignored -- the final tier has no next tier to agree
+    /// with).  Gauges and counters are pre-resolved here, once.
+    pub fn new(
+        cfg: DriftConfig,
+        theta_cal: &[Option<f32>],
+        metrics: &Metrics,
+    ) -> Arc<DriftMonitor> {
+        let monitored = theta_cal.len().saturating_sub(1);
+        let tiers = (0..monitored)
+            .map(|i| {
+                let t = TierDrift {
+                    tier: i,
+                    state: Mutex::new(TierState {
+                        window: VecDeque::with_capacity(cfg.window.min(4096)),
+                        alarm: DriftAlarm::new(cfg.hysteresis),
+                        live: estimate_theta(&[], cfg.epsilon),
+                        theta_cal: theta_cal[i],
+                        samples: 0,
+                    }),
+                    samples: metrics.counter(&format!("tier_{i}_shadow_samples")),
+                    agreement_gauge: metrics.gauge(&format!("tier_{i}_agreement_live")),
+                    failure_gauge: metrics
+                        .gauge(&format!("tier_{i}_empirical_failure_rate")),
+                    theta_live_gauge: metrics.gauge(&format!("tier_{i}_theta_live")),
+                    theta_cal_gauge: metrics.gauge(&format!("tier_{i}_theta_cal")),
+                    alarm_gauge: metrics.gauge(&format!("tier_{i}_drift_alarm")),
+                };
+                // non-finite gauges render as NaN in prom and null in
+                // JSON: "no estimate yet", distinguishable from 0.0
+                t.theta_live_gauge.set(f64::NAN);
+                t.theta_cal_gauge
+                    .set(theta_cal[i].map(f64::from).unwrap_or(f64::NAN));
+                t
+            })
+            .collect();
+        Arc::new(DriftMonitor {
+            cfg,
+            tiers,
+            regrounds: metrics.counter("drift_regrounds_total"),
+        })
+    }
+
+    /// The configured knobs.
+    pub fn cfg(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Number of monitored (early-exiting) tiers.
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Deterministic 1-in-N shadow selection -- same idiom as the
+    /// request tracer, so a request's shadow fate is reproducible from
+    /// its id alone: 0 never samples, 1 always, else `id % n == 0`.
+    pub fn sampled(&self, id: u64) -> bool {
+        match self.cfg.sample_every {
+            0 => false,
+            1 => true,
+            n => id % n == 0,
+        }
+    }
+
+    /// Seed (or correct) a monitored tier's calibrated-theta reference
+    /// after construction.  The serve path needs this: its tier specs
+    /// carry `theta: None` (the cascade policy itself is the calibrated
+    /// operating point), so the fleet cannot pass the reference values
+    /// at spawn -- it grounds the `tier_{i}_theta_cal` gauges here
+    /// instead.  No-op for the final tier / out-of-range indices.
+    pub fn set_theta_cal(&self, tier: usize, theta: Option<f32>) {
+        let Some(td) = self.tiers.get(tier) else { return };
+        td.state().theta_cal = theta;
+        td.theta_cal_gauge
+            .set(theta.map(f64::from).unwrap_or(f64::NAN));
+    }
+
+    /// Record one shadow observation for `tier`: `point.score` is the
+    /// score the tier exited with, `point.correct` whether the next
+    /// tier agreed with the early answer.  Re-runs [`estimate_theta`]
+    /// over the bounded window and republishes every gauge.
+    ///
+    /// Note the windowed failure rate here is CONDITIONAL on exit
+    /// (disagreements / windowed exits), which upper-bounds the
+    /// unconditional P(exit AND wrong) that epsilon budgets -- an
+    /// alarm on the conditional rate is therefore conservative.
+    pub fn record(&self, tier: usize, point: CalPoint) {
+        let Some(td) = self.tiers.get(tier) else { return };
+        let mut st = td.state();
+        st.samples += 1;
+        st.window.push_back(point);
+        while st.window.len() > self.cfg.window.max(1) {
+            st.window.pop_front();
+        }
+        let n = st.window.len();
+        let agreed = st.window.iter().filter(|p| p.correct).count();
+        let agreement = agreed as f64 / n as f64;
+        let failure = (n - agreed) as f64 / n as f64;
+        st.live = estimate_theta(st.window.make_contiguous(), self.cfg.epsilon);
+        let raw = if n < self.cfg.min_samples {
+            AlarmState::Ok
+        } else if failure > self.cfg.breach_mult * self.cfg.epsilon {
+            AlarmState::Breach
+        } else if failure > self.cfg.epsilon {
+            AlarmState::Warn
+        } else {
+            AlarmState::Ok
+        };
+        let published = st.alarm.observe(raw);
+        let theta_live = st.live.theta;
+        drop(st);
+        td.samples.inc();
+        td.agreement_gauge.set(agreement);
+        td.failure_gauge.set(failure);
+        td.theta_live_gauge.set(if theta_live.is_finite() {
+            theta_live as f64
+        } else {
+            f64::NAN
+        });
+        td.alarm_gauge.set(published.level() as f64);
+    }
+
+    /// The live picture for one monitored tier (None for the final
+    /// tier or out-of-range indices).
+    pub fn status(&self, tier: usize) -> Option<DriftStatus> {
+        let td = self.tiers.get(tier)?;
+        let st = td.state();
+        let n = st.window.len();
+        let agreed = st.window.iter().filter(|p| p.correct).count();
+        Some(DriftStatus {
+            tier: td.tier,
+            alarm: st.alarm.current(),
+            samples: st.samples,
+            window: n,
+            agreement: if n == 0 { 1.0 } else { agreed as f64 / n as f64 },
+            failure_rate: if n == 0 {
+                0.0
+            } else {
+                (n - agreed) as f64 / n as f64
+            },
+            epsilon: self.cfg.epsilon,
+            theta_live: st.live.theta,
+            theta_cal: st.theta_cal,
+        })
+    }
+
+    /// All monitored tiers' statuses, in tier order.
+    pub fn statuses(&self) -> Vec<DriftStatus> {
+        (0..self.tiers.len()).filter_map(|i| self.status(i)).collect()
+    }
+
+    /// Total thetas re-grounded over this monitor's lifetime.
+    pub fn regrounds(&self) -> u64 {
+        self.regrounds.get()
+    }
+
+    /// Re-ground `tier`'s theta from the live estimate.  Refuses
+    /// (returns None) unless the published alarm is in breach, the
+    /// window holds at least `min_samples` observations and the live
+    /// theta is finite -- re-grounding onto the defer-all sentinel
+    /// would silence the alarm by disabling the tier.  On success the
+    /// window is cleared and the alarm reset to Ok so the fresh theta
+    /// is judged only on post-reground evidence.
+    pub fn reground(&self, tier: usize) -> Option<f32> {
+        let td = self.tiers.get(tier)?;
+        let mut st = td.state();
+        if st.alarm.current() != AlarmState::Breach
+            || st.window.len() < self.cfg.min_samples
+            || !st.live.theta.is_finite()
+        {
+            return None;
+        }
+        let theta = st.live.theta;
+        st.theta_cal = Some(theta);
+        st.window.clear();
+        st.live = estimate_theta(&[], self.cfg.epsilon);
+        st.alarm = DriftAlarm::new(self.cfg.hysteresis);
+        drop(st);
+        td.theta_cal_gauge.set(theta as f64);
+        td.theta_live_gauge.set(f64::NAN);
+        td.failure_gauge.set(0.0);
+        td.alarm_gauge.set(0.0);
+        self.regrounds.inc();
+        Some(theta)
+    }
+
+    /// Wire body for `{"cmd":"drift"}`: non-finite thetas render as
+    /// JSON null (the writer's non-finite contract), so the defer-all
+    /// sentinel never corrupts the line protocol.
+    pub fn to_json(&self) -> Json {
+        let tiers = self
+            .statuses()
+            .into_iter()
+            .map(|s| {
+                let mut o = JsonObj::new();
+                o.insert("tier", Json::num(s.tier as f64));
+                o.insert("alarm", Json::Str(s.alarm.name().to_string()));
+                o.insert("samples", Json::num(s.samples as f64));
+                o.insert("window", Json::num(s.window as f64));
+                o.insert("agreement_live", Json::num(s.agreement));
+                o.insert("failure_rate", Json::num(s.failure_rate));
+                o.insert("epsilon", Json::num(s.epsilon));
+                o.insert("theta_live", Json::num(f64::from(s.theta_live)));
+                o.insert(
+                    "theta_cal",
+                    s.theta_cal
+                        .map(|t| Json::num(f64::from(t)))
+                        .unwrap_or(Json::Null),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("tiers", Json::Arr(tiers));
+        o.insert("sample_every", Json::num(self.cfg.sample_every as f64));
+        o.insert("regrounds", Json::num(self.regrounds.get() as f64));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(cfg: DriftConfig) -> Arc<DriftMonitor> {
+        // two tiers -> tier 0 monitored, final tier not
+        DriftMonitor::new(cfg, &[Some(0.5), None], &Metrics::new())
+    }
+
+    fn pt(score: f32, correct: bool) -> CalPoint {
+        CalPoint { score, correct }
+    }
+
+    #[test]
+    fn empty_window_degrades_to_defer_all_sentinel() {
+        let m = monitor(DriftConfig::default());
+        let s = m.status(0).expect("tier 0 monitored");
+        // matches estimate_theta's empty-set contract exactly
+        assert_eq!(s.theta_live, f32::INFINITY);
+        assert_eq!(s.failure_rate, 0.0);
+        assert_eq!(s.window, 0);
+        assert_eq!(s.theta_cal, Some(0.5));
+        assert_eq!(s.alarm, AlarmState::Ok);
+        // the final tier is never monitored
+        assert!(m.status(1).is_none());
+        assert_eq!(m.n_tiers(), 1);
+    }
+
+    #[test]
+    fn all_agree_window_degrades_to_select_all() {
+        let m = monitor(DriftConfig { min_samples: 1, ..DriftConfig::default() });
+        for i in 0..20 {
+            m.record(0, pt(0.5 + (i as f32) * 0.01, true));
+        }
+        let s = m.status(0).unwrap();
+        assert_eq!(s.theta_live, f32::NEG_INFINITY);
+        assert_eq!(s.agreement, 1.0);
+        assert_eq!(s.alarm, AlarmState::Ok);
+    }
+
+    #[test]
+    fn window_evicts_oldest_points() {
+        let cfg = DriftConfig {
+            window: 4,
+            min_samples: 1,
+            hysteresis: 1,
+            ..DriftConfig::default()
+        };
+        let m = monitor(cfg);
+        for _ in 0..6 {
+            m.record(0, pt(0.2, false));
+        }
+        assert_eq!(m.status(0).unwrap().agreement, 0.0);
+        // four agreeing points push every disagreement out
+        for _ in 0..4 {
+            m.record(0, pt(0.9, true));
+        }
+        let s = m.status(0).unwrap();
+        assert_eq!(s.window, 4);
+        assert_eq!(s.agreement, 1.0);
+        assert_eq!(s.failure_rate, 0.0);
+        assert_eq!(s.samples, 10);
+    }
+
+    #[test]
+    fn alarm_hysteresis_filters_flaps() {
+        let mut a = DriftAlarm::new(3);
+        assert_eq!(a.observe(AlarmState::Breach), AlarmState::Ok);
+        assert_eq!(a.observe(AlarmState::Breach), AlarmState::Ok);
+        // a flap back to ok resets the streak
+        assert_eq!(a.observe(AlarmState::Ok), AlarmState::Ok);
+        assert_eq!(a.observe(AlarmState::Breach), AlarmState::Ok);
+        assert_eq!(a.observe(AlarmState::Breach), AlarmState::Ok);
+        // third consecutive breach verdict moves the published state
+        assert_eq!(a.observe(AlarmState::Breach), AlarmState::Breach);
+        // and coming back down needs the same persistence
+        assert_eq!(a.observe(AlarmState::Ok), AlarmState::Breach);
+        assert_eq!(a.observe(AlarmState::Warn), AlarmState::Breach);
+        assert_eq!(a.observe(AlarmState::Ok), AlarmState::Breach);
+        assert_eq!(a.observe(AlarmState::Ok), AlarmState::Breach);
+        assert_eq!(a.observe(AlarmState::Ok), AlarmState::Ok);
+    }
+
+    #[test]
+    fn shadow_selection_is_deterministic_id_mod_n() {
+        let cfg = DriftConfig { sample_every: 10, ..DriftConfig::default() };
+        let a = monitor(cfg);
+        let b = monitor(cfg);
+        for id in 0..1000u64 {
+            assert_eq!(a.sampled(id), id % 10 == 0);
+            assert_eq!(a.sampled(id), b.sampled(id));
+        }
+        assert!(!monitor(DriftConfig { sample_every: 0, ..cfg }).sampled(0));
+        assert!(monitor(DriftConfig { sample_every: 1, ..cfg }).sampled(7));
+    }
+
+    #[test]
+    fn breach_then_reground_restores_ok_and_clears_window() {
+        let cfg = DriftConfig {
+            window: 64,
+            epsilon: 0.05,
+            breach_mult: 2.0,
+            hysteresis: 2,
+            min_samples: 10,
+            ..DriftConfig::default()
+        };
+        let m = monitor(cfg);
+        // no breach below min_samples, and reground refuses
+        for _ in 0..9 {
+            m.record(0, pt(0.1, false));
+        }
+        assert_eq!(m.status(0).unwrap().alarm, AlarmState::Ok);
+        assert!(m.reground(0).is_none());
+        // 70% agree at 0.9, 30% disagree at low scores -> failure 0.3
+        // breaches; live theta separates the two score bands
+        for i in 0..70 {
+            m.record(0, pt(0.9, true));
+            if i % 7 < 3 {
+                m.record(0, pt(0.1 + (i as f32) * 0.001, false));
+            }
+        }
+        let s = m.status(0).unwrap();
+        assert_eq!(s.alarm, AlarmState::Breach);
+        assert!(s.failure_rate > 2.0 * cfg.epsilon);
+        let theta = m.reground(0).expect("breach + evidence -> reground");
+        assert!(theta.is_finite());
+        assert!(theta < 0.9, "re-grounded theta must still admit faithful exits");
+        let s = m.status(0).unwrap();
+        assert_eq!(s.alarm, AlarmState::Ok);
+        assert_eq!(s.window, 0);
+        assert_eq!(s.theta_cal, Some(theta));
+        assert_eq!(s.theta_live, f32::INFINITY);
+        // alarm reset: a second reground without fresh evidence refuses
+        assert!(m.reground(0).is_none());
+        assert_eq!(m.regrounds(), 1);
+    }
+
+    #[test]
+    fn gauges_publish_into_the_registry() {
+        let metrics = Metrics::new();
+        let cfg = DriftConfig { min_samples: 1, hysteresis: 1, ..DriftConfig::default() };
+        let m = DriftMonitor::new(cfg, &[Some(0.5), None], &metrics);
+        for _ in 0..20 {
+            m.record(0, pt(0.9, true));
+        }
+        for _ in 0..20 {
+            m.record(0, pt(0.2, false));
+        }
+        assert_eq!(metrics.counter("tier_0_shadow_samples").get(), 40);
+        assert_eq!(metrics.gauge("tier_0_agreement_live").get(), 0.5);
+        assert_eq!(metrics.gauge("tier_0_empirical_failure_rate").get(), 0.5);
+        assert_eq!(metrics.gauge("tier_0_drift_alarm").get(), 2.0);
+        assert_eq!(metrics.gauge("tier_0_theta_cal").get(), 0.5);
+        // theta_live separates the bands: every 0.2-disagreement is
+        // refused, every 0.9-agreement still exits
+        let live = metrics.gauge("tier_0_theta_live").get();
+        assert!(live >= 0.2 && live < 0.9, "live theta {live}");
+        // drift JSON carries the same picture
+        let j = m.to_json();
+        let tiers = j.get("tiers").as_arr().expect("tiers array").to_vec();
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].get("alarm").as_str(), Some("breach"));
+    }
+}

@@ -19,16 +19,28 @@
 //!   (if any) it reports into, which tier it is, and whether it owns
 //!   the request's terminal spans.
 //!
-//! Wire surface: `{"cmd":"traces"}` (spans grouped per request) and
-//! `repro stats --traces`; the derived per-tier queue-wait/service-time
-//! histograms land in the metrics registry and are scrapeable via
-//! `{"cmd":"prom"}` ([`crate::metrics::Metrics::render_prom`]).
+//! * [`drift`] -- the drift observatory: shadow-sampled live agreement
+//!   estimation per tier ([`DriftMonitor`]), calibration-drift gauges
+//!   (`tier_{i}_theta_live` vs `tier_{i}_theta_cal`,
+//!   `tier_{i}_empirical_failure_rate` vs epsilon) and the hysteresis
+//!   [`DriftAlarm`] the control plane's `--recalibrate` hook acts on.
+//!   The hot-path contribution is one `id % n` branch; windows and
+//!   estimation live on the shadow worker thread.
+//!
+//! Wire surface: `{"cmd":"traces"}` (spans grouped per request),
+//! `{"cmd":"drift"}` (per-tier drift statuses) and `repro stats
+//! --traces` / `--drift`; the derived per-tier queue-wait/service-time
+//! histograms and the drift gauges land in the metrics registry and are
+//! scrapeable via `{"cmd":"prom"}`
+//! ([`crate::metrics::Metrics::render_prom`]).
 
+pub mod drift;
 pub mod sink;
 pub mod trace;
 
 use std::sync::Arc;
 
+pub use drift::{AlarmState, DriftAlarm, DriftConfig, DriftMonitor, DriftStatus};
 pub use sink::JsonlSink;
 pub use trace::{SpanKind, SpanRecord, Tracer, TRACE_RING_CAPACITY};
 

@@ -29,6 +29,16 @@
 //!                                   grouped per request; empty with
 //!                                   the same shape when tracing is
 //!                                   off -- see `serve --trace-sample`)
+//! -> {"cmd": "drift"}
+//! <- {"drift": {"tiers": [{"tier":0,"alarm":"ok","samples":412,
+//!     "window":412,"agreement_live":0.97,"failure_rate":0.03,
+//!     "epsilon":0.05,"theta_live":0.31,"theta_cal":0.35}, ...],
+//!     "sample_every": 100, "regrounds": 0}}
+//!                                  (the drift observatory: per-tier
+//!                                   live agreement vs the calibrated
+//!                                   theta; empty with the same shape
+//!                                   when shadow sampling is off -- see
+//!                                   `serve --tiered --shadow-sample`)
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
 //!
@@ -85,12 +95,12 @@ use anyhow::Result;
 use crate::coordinator::replica::{PoolError, ReplicaPool};
 use crate::coordinator::router::TieredFleet;
 use crate::metrics::Metrics;
-use crate::obs::Tracer;
+use crate::obs::{DriftMonitor, Tracer};
 use crate::types::{Request, Verdict};
 use proto::{
-    parse_request_line, render_error, render_events, render_metrics,
-    render_overloaded, render_prom_reply, render_stats, render_traces,
-    render_verdict,
+    parse_request_line, render_drift, render_error, render_events,
+    render_metrics, render_overloaded, render_prom_reply, render_stats,
+    render_traces, render_verdict,
 };
 
 /// How long a handler blocks in `read` before re-checking the stop flag.
@@ -116,6 +126,12 @@ pub trait InferBackend: Send + Sync {
     /// The attached request tracer, when tracing is enabled
     /// (`serve --trace-sample`); `{"cmd":"traces"}` renders from it.
     fn tracer(&self) -> Option<&Arc<Tracer>> {
+        None
+    }
+    /// The attached drift observatory, when shadow sampling is enabled
+    /// (`serve --tiered --shadow-sample`); `{"cmd":"drift"}` renders
+    /// from it.
+    fn drift(&self) -> Option<&Arc<DriftMonitor>> {
         None
     }
 }
@@ -153,6 +169,10 @@ impl InferBackend for TieredFleet {
 
     fn tracer(&self) -> Option<&Arc<Tracer>> {
         TieredFleet::tracer(self)
+    }
+
+    fn drift(&self) -> Option<&Arc<DriftMonitor>> {
+        TieredFleet::drift(self)
     }
 }
 
@@ -275,6 +295,9 @@ fn handle_conn(
             }
             Ok(proto::Incoming::Traces) => {
                 writeln!(writer, "{}", render_traces(pool.tracer()))?;
+            }
+            Ok(proto::Incoming::Drift) => {
+                writeln!(writer, "{}", render_drift(pool.drift()))?;
             }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
@@ -419,6 +442,19 @@ impl Client {
         anyhow::ensure!(
             v.get("traces").as_arr().is_some(),
             "traces reply missing 'traces' array: {reply}"
+        );
+        Ok(v)
+    }
+
+    /// Fetch the drift observatory snapshot (`{"cmd":"drift"}`):
+    /// per-tier alarm / live agreement / theta statuses.
+    pub fn drift(&mut self) -> Result<crate::util::json::Json> {
+        let reply = self.roundtrip(r#"{"cmd":"drift"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad drift reply {reply:?}: {e}"))?;
+        anyhow::ensure!(
+            v.get("drift").as_obj().is_some(),
+            "drift reply missing 'drift' object: {reply}"
         );
         Ok(v)
     }

@@ -3,7 +3,7 @@
 use std::sync::Arc;
 
 use crate::metrics::Metrics;
-use crate::obs::Tracer;
+use crate::obs::{DriftMonitor, Tracer};
 use crate::types::{Request, Verdict};
 use crate::util::json::{Json, JsonObj};
 
@@ -16,6 +16,7 @@ pub enum Incoming {
     Events,
     Prom,
     Traces,
+    Drift,
     Shutdown,
 }
 
@@ -29,6 +30,7 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
             "events" => Ok(Incoming::Events),
             "prom" => Ok(Incoming::Prom),
             "traces" => Ok(Incoming::Traces),
+            "drift" => Ok(Incoming::Drift),
             "shutdown" => Ok(Incoming::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -151,6 +153,28 @@ pub fn render_traces(tracer: Option<&Arc<Tracer>>) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the drift observatory snapshot (`{"cmd":"drift"}` reply):
+/// per-tier alarm / agreement / live-vs-calibrated theta statuses.  A
+/// deployment without shadow sampling answers the same shape, empty
+/// (`tiers: []`, `sample_every: 0`).  Non-finite thetas (the monitor's
+/// defer-all / select-all sentinels) render as JSON null.
+pub fn render_drift(monitor: Option<&Arc<DriftMonitor>>) -> String {
+    let mut obj = JsonObj::new();
+    match monitor {
+        Some(m) => {
+            obj.insert("drift", m.to_json());
+        }
+        None => {
+            let mut empty = JsonObj::new();
+            empty.insert("tiers", Json::Arr(Vec::new()));
+            empty.insert("sample_every", Json::num(0.0));
+            empty.insert("regrounds", Json::num(0.0));
+            obj.insert("drift", Json::Obj(empty));
+        }
+    }
+    Json::Obj(obj).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +212,10 @@ mod tests {
         assert!(matches!(
             parse_request_line(r#"{"cmd": "traces"}"#).unwrap(),
             Incoming::Traces
+        ));
+        assert!(matches!(
+            parse_request_line(r#"{"cmd": "drift"}"#).unwrap(),
+            Incoming::Drift
         ));
         assert!(matches!(
             parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
@@ -327,6 +355,45 @@ mod tests {
         assert_eq!(spans[0].get("kind").as_str(), Some("enqueue"));
         assert_eq!(spans[1].get("kind").as_str(), Some("complete"));
         assert_eq!(spans[1].get("tier").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn drift_line_shape_with_and_without_monitor() {
+        use crate::calib::threshold::CalPoint;
+        use crate::obs::{DriftConfig, DriftMonitor};
+        // no monitor: same shape, empty
+        let parsed = Json::parse(&render_drift(None)).unwrap();
+        let drift = parsed.get("drift");
+        assert_eq!(drift.get("tiers").as_arr().unwrap().len(), 0);
+        assert_eq!(drift.get("sample_every").as_u64(), Some(0));
+        // with a monitor: per-tier statuses, and the empty-window
+        // theta_live sentinel (+inf) rides as null without breaking
+        // the line's JSON
+        let cfg = DriftConfig {
+            sample_every: 10,
+            min_samples: 1,
+            hysteresis: 1,
+            ..DriftConfig::default()
+        };
+        // 0.5 is exact in binary, so the f32 -> f64 -> JSON hop
+        // preserves it bit-for-bit
+        let m = DriftMonitor::new(cfg, &[Some(0.5), None, None], &Metrics::new());
+        m.record(0, CalPoint { score: 0.9, correct: true });
+        let parsed = Json::parse(&render_drift(Some(&m))).unwrap();
+        let drift = parsed.get("drift");
+        assert_eq!(drift.get("sample_every").as_u64(), Some(10));
+        let tiers = drift.get("tiers").as_arr().unwrap();
+        assert_eq!(tiers.len(), 2, "final tier unmonitored");
+        assert_eq!(tiers[0].get("tier").as_u64(), Some(0));
+        assert_eq!(tiers[0].get("alarm").as_str(), Some("ok"));
+        assert_eq!(tiers[0].get("samples").as_u64(), Some(1));
+        assert_eq!(tiers[0].get("agreement_live").as_f64(), Some(1.0));
+        assert_eq!(tiers[0].get("theta_cal").as_f64(), Some(0.5));
+        // tier 1 has no observations: its all-agree/empty sentinel
+        // theta is null, theta_cal was spawned as None -> null too
+        assert!(tiers[1].get("theta_live").as_f64().is_none());
+        assert!(tiers[1].get("theta_cal").as_f64().is_none());
+        assert_eq!(tiers[1].get("failure_rate").as_f64(), Some(0.0));
     }
 
     #[test]

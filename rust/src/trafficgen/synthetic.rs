@@ -116,10 +116,31 @@ impl SyntheticClassifier {
 /// Stage-wise results are byte-identical to the monolithic path
 /// (property-tested in rust/tests/coordinator_props.rs); only the cost
 /// layout differs.
+///
+/// **Drift mode** ([`StagedSynthetic::with_drift`]): a deterministic
+/// fraction of rows becomes *unfaithful* -- at exactly its routed exit
+/// tier the row's prediction flips and its reported score collapses to
+/// the constant `0.9 * frac`, while the deeper tiers still answer
+/// canonically.
+/// This is the distribution-shift fixture the drift observatory needs:
+/// under a stale fixed policy the drifted rows exit early and WRONG
+/// (the shadow path sees downstream disagree), and because their
+/// scores form one tie-group strictly below the faithful 0.9 band,
+/// re-running `estimate_theta` on the live window refuses the group
+/// atomically and lands on theta == `0.9 * frac` exactly -- with the
+/// strict `score > theta` exit rule the re-ground then blocks every
+/// drifted row (and, since a drifted row's agreement spread at other
+/// tiers also sits below `0.9 * frac`, none sneaks out early at a
+/// shallower tier) without deferring the faithful population.
+/// `drift_frac == 0.0` (the default) is byte-identical to the
+/// historical behaviour.
 #[derive(Debug, Clone)]
 pub struct StagedSynthetic {
     inner: SyntheticClassifier,
     weights: Vec<f64>,
+    /// Fraction of rows (by deterministic pseudo-lane) that drift;
+    /// 0.0 disables drift mode entirely.
+    drift_frac: f64,
 }
 
 impl StagedSynthetic {
@@ -128,7 +149,7 @@ impl StagedSynthetic {
     pub fn new(inner: SyntheticClassifier, weights: Vec<f64>) -> StagedSynthetic {
         assert_eq!(weights.len(), inner.levels, "one weight per tier");
         assert!(weights.iter().all(|w| *w >= 0.0), "weights must be >= 0");
-        StagedSynthetic { inner, weights }
+        StagedSynthetic { inner, weights, drift_frac: 0.0 }
     }
 
     /// Uniform weights: every tier costs `1/levels` of the monolithic
@@ -136,7 +157,21 @@ impl StagedSynthetic {
     pub fn uniform(inner: SyntheticClassifier) -> StagedSynthetic {
         let w = 1.0 / inner.levels as f64;
         let weights = vec![w; inner.levels];
-        StagedSynthetic { inner, weights }
+        StagedSynthetic { inner, weights, drift_frac: 0.0 }
+    }
+
+    /// Enable drift mode: `frac` of the row population (in `[0, 1]`)
+    /// answers unfaithfully at its routed exit tier (see the type
+    /// docs).  The selection and the drifted scores are deterministic
+    /// in the row's features, so runs are reproducible.
+    pub fn with_drift(mut self, frac: f64) -> StagedSynthetic {
+        assert!((0.0..=1.0).contains(&frac), "drift fraction in [0, 1]");
+        self.drift_frac = frac;
+        self
+    }
+
+    pub fn drift_frac(&self) -> f64 {
+        self.drift_frac
     }
 
     pub fn weights(&self) -> &[f64] {
@@ -172,8 +207,36 @@ impl StagedSynthetic {
         if exit_level <= level0 + 1 {
             return 0.9;
         }
-        let spread = (h / self.inner.levels).wrapping_mul(2_654_435_761) % 1000;
-        0.9 * (spread as f32 / 1000.0)
+        0.9 * (self.lane(h) as f32 / 1000.0)
+    }
+
+    /// Deterministic per-row pseudo-lane in [0, 1000): the Fibonacci
+    /// hash the agreement spread already uses.  Drift mode reuses the
+    /// SAME lane for drift selection, which is what keeps the drifted
+    /// population threshold-separable: a drifted row (lane <
+    /// frac * 1000) exits with the constant [`Self::drift_score`], and
+    /// its agreement spread at the tiers it does NOT exit at
+    /// (`0.9 * lane / 1000`) also sits below that constant -- both
+    /// strictly below every faithful exit's 0.9.
+    fn lane(&self, h: usize) -> usize {
+        (h / self.inner.levels).wrapping_mul(2_654_435_761) % 1000
+    }
+
+    /// Whether drift mode claims this row.
+    fn drifted(&self, h: usize) -> bool {
+        self.drift_frac > 0.0 && (self.lane(h) as f64) < self.drift_frac * 1000.0
+    }
+
+    /// The score every drifted row exits with: the constant
+    /// `0.9 * drift_frac`.  A constant (rather than a per-row spread)
+    /// makes the wrong population one tie-group for
+    /// [`crate::calib::threshold::estimate_theta`], which refuses or
+    /// admits a tie-group atomically: the re-estimated theta lands on
+    /// exactly this value, admits zero drifted exits, and -- because
+    /// acceptance is strict `score > theta` -- blocks the entire
+    /// drifted population on re-ground.
+    fn drift_score(&self) -> f32 {
+        0.9 * self.drift_frac as f32
     }
 }
 
@@ -218,17 +281,38 @@ impl StageClassifier for StagedSynthetic {
         Ok((0..n)
             .map(|i| {
                 let first = features[i * self.inner.dim];
+                let h = (first.abs() * 997.0) as usize;
                 let (prediction, exit_level) = self.inner.route(first);
+                // drift mode: a drifted row goes wrong exactly at its
+                // routed exit tier (flipped prediction, low score); the
+                // final tier and every other tier stay canonical, so a
+                // deferred drifted row is still answered correctly
+                // downstream -- the shape real drift has, and the one a
+                // theta re-ground can actually fix.
+                let drifts_here =
+                    !last && exit_level == level0 + 1 && self.drifted(h);
+                let agree = if drifts_here {
+                    self.drift_score()
+                } else {
+                    self.agreement(first, level0)
+                };
                 // default policy: a row exits at its routed level; a
                 // theta override applies the agreement rule instead
                 // (defer when agreement <= theta).  The final tier
                 // accepts whatever reaches it either way.
                 let exits = match theta {
                     None => exit_level <= level0 + 1 || last,
-                    Some(t) => last || self.agreement(first, level0) > t,
+                    Some(t) => last || agree > t,
                 };
+                let prediction =
+                    if drifts_here { prediction ^ 1 } else { prediction };
                 StageResult {
-                    score: 0.9,
+                    // outside drift mode the score is the historical
+                    // constant 0.9 (byte-identity with the monolithic
+                    // path); in drift mode it is the effective
+                    // agreement, so exit scores carry the signal the
+                    // observatory thresholds on
+                    score: if self.drift_frac > 0.0 { agree } else { 0.9 },
                     decision: exits.then_some(prediction),
                 }
             })
@@ -380,6 +464,81 @@ mod tests {
         // the final tier exits everything regardless of theta
         let finals = staged.classify_stage(2, &feats, n, Some(5.0)).unwrap();
         assert!(finals.iter().all(|r| r.decision.is_some()));
+    }
+
+    #[test]
+    fn drift_zero_is_byte_identical_to_default() {
+        let inner = SyntheticClassifier::new(1, 3, Duration::ZERO, Duration::ZERO);
+        let plain = StagedSynthetic::new(inner.clone(), vec![0.2, 0.3, 0.5]);
+        let zero = plain.clone().with_drift(0.0);
+        assert_eq!(zero.drift_frac(), 0.0);
+        let n = 200;
+        let feats: Vec<f32> = (0..n).map(|i| i as f32 * 0.61 - 7.0).collect();
+        for level0 in 0..3 {
+            for theta in [None, Some(0.45_f32)] {
+                let a = plain.classify_stage(level0, &feats, n, theta).unwrap();
+                let b = zero.classify_stage(level0, &feats, n, theta).unwrap();
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.decision, y.decision);
+                    assert_eq!(x.score, y.score);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drift_flips_only_at_the_routed_exit_tier_with_separable_scores() {
+        let inner = SyntheticClassifier::new(1, 3, Duration::ZERO, Duration::ZERO);
+        let faithful = StagedSynthetic::new(inner, vec![0.2, 0.3, 0.5]);
+        let drifting = faithful.clone().with_drift(0.4);
+        let n = 400;
+        let feats: Vec<f32> = (0..n).map(|i| i as f32 * 0.61 - 7.0).collect();
+        let mut flipped = 0;
+        for level0 in 0..2 {
+            let a = faithful.classify_stage(level0, &feats, n, None).unwrap();
+            let b = drifting.classify_stage(level0, &feats, n, None).unwrap();
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                let h = (feats[i].abs() * 997.0) as usize;
+                let exit_level = 1 + h % 3;
+                // drift never changes WHO exits under the default policy
+                assert_eq!(x.decision.is_some(), y.decision.is_some());
+                if exit_level != level0 + 1 {
+                    assert_eq!(
+                        x.decision, y.decision,
+                        "rows not at their exit tier stay canonical"
+                    );
+                } else if x.decision != y.decision {
+                    flipped += 1;
+                    assert_eq!(y.decision, x.decision.map(|p| p ^ 1));
+                    // every drifted exit reports the same constant
+                    // score -- one tie-group for estimate_theta --
+                    // strictly below the faithful 0.9 band
+                    assert_eq!(y.score, 0.9 * 0.4, "score {}", y.score);
+                }
+            }
+        }
+        assert!(flipped > 0, "drift 0.4 flipped nothing");
+        // the final tier always answers canonically
+        let a = faithful.classify_stage(2, &feats, n, None).unwrap();
+        let b = drifting.classify_stage(2, &feats, n, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.decision, y.decision);
+        }
+        // theta at exactly the drifted constant blocks every drifted
+        // exit (acceptance is strict score > theta): whatever still
+        // exits at tier 0 answers canonically
+        let blocked = drifting
+            .classify_stage(0, &feats, n, Some(0.9 * 0.4))
+            .unwrap();
+        let mut survived = 0;
+        for (i, g) in blocked.iter().enumerate() {
+            if let Some(p) = g.decision {
+                survived += 1;
+                let canonical = ((feats[i].abs() * 997.0) as usize % 2) as u32;
+                assert_eq!(p, canonical, "surviving exits are faithful");
+            }
+        }
+        assert!(survived > 0, "theta 0.36 must not defer everything");
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Integration: the drift observatory end to end -- shadow sampling,
+//! breach detection, and closed-loop theta re-grounding -- on the
+//! StagedSynthetic drifting workload (no PJRT artifacts needed).
+//!
+//! Covers the claims the subsystem exists for:
+//! * **stale policy rots silently, the observatory sees it**: under a
+//!   drifting workload a fixed-policy fleet keeps answering drifted
+//!   rows wrong; the shadow path scores the early exits against the
+//!   next tier, the live failure rate crosses `breach_mult * epsilon`,
+//!   and the alarm latches Breach while the request books stay
+//!   exactly-once with shadowing active;
+//! * **`--recalibrate` closes the loop**: the control plane's
+//!   [`DriftDecider`] re-grounds the breached tier's theta from the
+//!   live windowed estimate (recorded with `decider="drift"`), after
+//!   which the drifted population defers to undrifted tiers, every
+//!   client answer is canonical again, and the tier's empirical
+//!   failure rate sits back under epsilon -- while the fixed-theta
+//!   fleet of the first test never leaves Breach.
+//!
+//! Determinism: the synthetic drift fixture reports ONE constant score
+//! (`0.9 * frac`) for every drifted exit, so `estimate_theta` sees the
+//! wrong population as a single tie-group, refuses it atomically, and
+//! lands on exactly that constant -- no dependence on window phase or
+//! shadow-drop timing.  The routed tier, drift lane and canonical
+//! prediction are all pure integer arithmetic on the request id,
+//! replicated by the helpers below.
+//!
+//! [`DriftDecider`]: abc_serve::control::DriftDecider
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use abc_serve::control::{
+    ControlConfig, ControlLoop, ControlTarget, ControllerConfig, TierControl,
+};
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::cascade::StageClassifier;
+use abc_serve::coordinator::router::{TierSpec, TieredFleet, TieredFleetConfig};
+use abc_serve::cost::rental::Gpu;
+use abc_serve::metrics::{EventKind, Metrics};
+use abc_serve::obs::{AlarmState, DriftConfig};
+use abc_serve::trafficgen::{StagedSynthetic, SyntheticClassifier};
+use abc_serve::types::Request;
+
+const DIM: usize = 4;
+const LEVELS: usize = 3;
+const MAX_QUEUE: usize = 256;
+/// Fast stages: drift detection needs observation volume, not
+/// saturation -- the whole cascade costs 150us per row.
+const PER_ROW: Duration = Duration::from_micros(150);
+const WEIGHTS: [f64; 3] = [0.15, 0.25, 0.60];
+/// 30% of the row population drifts...
+const DRIFT_FRAC: f64 = 0.3;
+/// ...and every drifted exit reports this constant score (the
+/// StagedSynthetic drift contract: `0.9 * frac`).
+const DRIFT_SCORE: f32 = 0.9 * 0.3;
+/// Concurrent submitters per wave (bounded by the tier queues).
+const WAVE: usize = 150;
+
+fn drifting_stage() -> Arc<StagedSynthetic> {
+    let inner = SyntheticClassifier::new(DIM, LEVELS, Duration::ZERO, PER_ROW);
+    Arc::new(
+        StagedSynthetic::new(inner, WEIGHTS.to_vec()).with_drift(DRIFT_FRAC),
+    )
+}
+
+fn drift_cfg() -> DriftConfig {
+    DriftConfig {
+        sample_every: 1, // shadow every early exit: max signal
+        window: 256,
+        epsilon: 0.05,
+        breach_mult: 2.0,
+        hysteresis: 2,
+        min_samples: 40,
+    }
+}
+
+fn spawn_fleet() -> (Arc<TieredFleet>, Arc<Metrics>) {
+    let metrics = Metrics::new();
+    let fleet = Arc::new(
+        TieredFleet::spawn_with_drift(
+            drifting_stage() as Arc<dyn StageClassifier>,
+            TieredFleetConfig {
+                tiers: vec![
+                    TierSpec::fixed(Gpu::V100, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::A6000, 2, MAX_QUEUE),
+                    TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
+                ],
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(200),
+                },
+            },
+            Arc::clone(&metrics),
+            None,
+            Some(drift_cfg()),
+        )
+        .unwrap(),
+    );
+    (fleet, metrics)
+}
+
+fn req(id: u64) -> Request {
+    Request {
+        id,
+        features: vec![id as f32 * 0.61 - 7.0, 0.0, 0.0, 0.0],
+        arrival_s: 0.0,
+    }
+}
+
+/// The SyntheticClassifier's routing hash for `req(id)` -- the same
+/// f32 arithmetic the backend runs, so every expectation below is
+/// exact, not statistical.
+fn hash(id: u64) -> usize {
+    ((id as f32 * 0.61 - 7.0).abs() * 997.0) as usize
+}
+
+/// Canonical (undrifted) prediction for `req(id)`.
+fn canonical(id: u64) -> u32 {
+    (hash(id) % 2) as u32
+}
+
+/// 1-based routed exit tier for `req(id)`.
+fn routed(id: u64) -> usize {
+    1 + hash(id) % LEVELS
+}
+
+/// Whether drift mode claims `req(id)` -- the exact comparison
+/// StagedSynthetic's lane hash runs (f64 on the right: `0.3 * 1000.0`
+/// is just under 300).
+fn drifted(id: u64) -> bool {
+    let lane = (hash(id) / LEVELS).wrapping_mul(2_654_435_761) % 1000;
+    (lane as f64) < DRIFT_FRAC * 1000.0
+}
+
+/// Drive `ids` through the fleet in bounded concurrent waves; every
+/// request must complete (the load is far under capacity).  Returns
+/// `(id, prediction, exit_tier)` per request.
+fn run_ids(fleet: &TieredFleet, ids: std::ops::Range<u64>) -> Vec<(u64, u32, usize)> {
+    let all: Vec<u64> = ids.collect();
+    let mut out = Vec::with_capacity(all.len());
+    for chunk in all.chunks(WAVE) {
+        let mut got: Vec<(u64, u32, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunk
+                .iter()
+                .map(|&id| {
+                    s.spawn(move || {
+                        let v = fleet.infer(req(id)).expect("shed under light load");
+                        (id, v.prediction, v.exit_tier)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        out.append(&mut got);
+    }
+    out
+}
+
+/// Wait until the shadow worker has drained everything serving
+/// submitted (every successfully enqueued shadow job is either scored
+/// into the monitor or counted shed) and no request is outstanding.
+fn wait_shadow_drained(fleet: &TieredFleet, metrics: &Metrics) {
+    let m = fleet.drift().expect("observatory attached");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let submitted = metrics.counter("shadow_submitted").get();
+        let shed = metrics.counter("shadow_shed").get();
+        let scored: u64 =
+            (0..m.n_tiers()).map(|t| m.status(t).unwrap().samples).sum();
+        if scored + shed == submitted && fleet.total_outstanding() == 0 {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "shadow never drained: scored {scored} + shed {shed} != \
+             submitted {submitted}, outstanding {}",
+            fleet.total_outstanding()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A stale fixed policy under drift: clients get wrong answers, the
+/// observatory's live failure rate crosses the breach line and latches,
+/// the live theta re-derives the drifted score band exactly, and the
+/// request books stay exactly-once with the shadow path active.  With
+/// no recalibration loop attached this fleet STAYS in breach -- the
+/// report-only contrast for the closed-loop test below.
+#[test]
+fn stale_theta_breaches_while_books_stay_exact() {
+    let (fleet, metrics) = spawn_fleet();
+    let n = 600u64;
+    let got = run_ids(&fleet, 0..n);
+
+    // deterministic serving picture: every row exits at its routed
+    // tier; drifted rows that exit early answer WRONG (flipped), the
+    // final tier answers canonically even for drifted rows
+    let mut wrong = 0u64;
+    for (id, prediction, exit_tier) in got {
+        assert_eq!(exit_tier, routed(id), "id {id} exited off its route");
+        let flips = drifted(id) && routed(id) < LEVELS;
+        let want = if flips { canonical(id) ^ 1 } else { canonical(id) };
+        assert_eq!(prediction, want, "id {id}");
+        wrong += u64::from(flips);
+    }
+    assert!(
+        wrong > n / 10,
+        "drift fixture must hurt a stale policy: {wrong} wrong of {n}"
+    );
+
+    wait_shadow_drained(&fleet, &metrics);
+    // exactly-once with shadowing active: the shadow path re-runs rows
+    // through downstream pools but never touches the fleet books
+    assert_eq!(metrics.counter("fleet_submitted").get(), n);
+    assert_eq!(metrics.counter("fleet_completed").get(), n);
+    assert_eq!(metrics.counter("fleet_shed").get(), 0);
+
+    let m = fleet.drift().expect("observatory attached");
+    assert_eq!(m.n_tiers(), LEVELS - 1, "final tier is never monitored");
+    let s = m.status(0).expect("tier 0 monitored");
+    // ~1/3 of rows route to tier 1; ~30% of those drifted -> far over
+    // the 2 * epsilon = 0.1 breach line
+    assert!(s.samples >= 100, "too few shadow observations: {s:?}");
+    assert!(
+        s.failure_rate > 2.0 * s.epsilon,
+        "stale tier 0 must breach: {s:?}"
+    );
+    assert_eq!(s.alarm, AlarmState::Breach, "{s:?}");
+    // the wrong population is one tie-group at the constant drifted
+    // score: estimate_theta refuses it atomically and lands exactly on
+    // the score that fences it (strict > acceptance)
+    assert!(
+        (s.theta_live - DRIFT_SCORE).abs() < 1e-5,
+        "live theta {} != drifted constant {DRIFT_SCORE}",
+        s.theta_live
+    );
+    // gauges ride the fleet registry (the stats / prom surface)
+    assert_eq!(metrics.gauge("tier_0_drift_alarm").get(), 2.0);
+    assert!(metrics.gauge("tier_0_empirical_failure_rate").get() > 0.1);
+    // no recalibration loop: serving theta stays stale, alarm latched
+    assert_eq!(fleet.tier_theta(0), None);
+    assert_eq!(m.regrounds(), 0);
+}
+
+/// The closed loop: a control plane with `recalibrate` armed observes
+/// the breach, re-grounds the tier's serving theta from the live
+/// estimate (EventLog `decider="drift"`), and fresh traffic then serves
+/// every answer canonically with the tier's empirical failure rate back
+/// under epsilon -- the acceptance bar for `serve --recalibrate`.
+#[test]
+fn recalibrate_regrounds_theta_and_restores_epsilon() {
+    let (fleet, metrics) = spawn_fleet();
+    let stage = drifting_stage();
+    let tiers: Vec<TierControl> = (0..LEVELS)
+        .map(|i| TierControl {
+            per_replica_rps: stage.stage_capacity_rps(i, 4),
+            scale: None,   // fixed fleets: the drift decider acts alone
+            rungs: vec![], // no gear ladders either
+        })
+        .collect();
+    let mut cfg = ControlConfig::tiered(
+        tiers,
+        ControllerConfig {
+            sample_every: Duration::from_millis(10),
+            dwell: Duration::from_millis(80),
+            ..ControllerConfig::default()
+        },
+        0.0,
+    );
+    cfg.recalibrate = true;
+    let mut control =
+        ControlLoop::spawn(Arc::clone(&fleet) as Arc<dyn ControlTarget>, cfg);
+
+    // ---- phase 1: drift under the stale policy ----
+    let n1 = 600u64;
+    let got = run_ids(&fleet, 0..n1);
+    // the breach cannot latch before min_samples stale exits were
+    // served, so some phase-1 clients necessarily got wrong answers
+    let wrong1 = got
+        .iter()
+        .filter(|(id, p, _)| *p != canonical(*id))
+        .count();
+    assert!(wrong1 >= 1, "phase 1 never served a drifted answer");
+
+    // both early tiers breach (each sees its own drifted exits) and the
+    // control loop re-grounds their serving thetas from the live
+    // estimate -- exactly the drifted constant, per the tie-group
+    // argument in the module docs
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if fleet.tier_theta(0).is_some() && fleet.tier_theta(1).is_some() {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "recalibration never fired: thetas {:?}/{:?}, drift {}, events {}",
+            fleet.tier_theta(0),
+            fleet.tier_theta(1),
+            fleet.drift().unwrap().to_json().to_string(),
+            metrics.events().to_jsonl()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for t in 0..2 {
+        let theta = fleet.tier_theta(t).unwrap();
+        assert!(
+            (theta - DRIFT_SCORE).abs() < 1e-5,
+            "tier {t} re-grounded to {theta}, want {DRIFT_SCORE}"
+        );
+    }
+    let m = fleet.drift().unwrap();
+    assert!(m.regrounds() >= 2, "both early tiers must re-ground");
+    assert!(metrics.counter("drift_reground_total").get() >= 2);
+    let events = metrics.events().snapshot();
+    assert!(
+        events.iter().any(|e| {
+            e.kind == EventKind::Shift
+                && e.decider == "drift"
+                && e.trigger == "breach"
+                && e.tier == 0
+        }),
+        "no drift re-ground event for tier 0: {}",
+        metrics.events().to_jsonl()
+    );
+
+    // ---- phase 2: fresh traffic on the re-grounded thetas ----
+    // drifted rows now score at (not above) the strict threshold at
+    // every early tier, defer to an undrifted tier, and come back
+    // canonical: recalibration restored answers, not just telemetry
+    let n2 = 600u64;
+    let got = run_ids(&fleet, 1000..1000 + n2);
+    for (id, prediction, _) in got {
+        assert_eq!(prediction, canonical(id), "id {id} wrong after re-ground");
+    }
+
+    wait_shadow_drained(&fleet, &metrics);
+    // the re-grounded tier's live failure rate is back under epsilon
+    // (the reground cleared its window: post-reground evidence only)
+    let s = m.status(0).expect("tier 0 monitored");
+    assert!(s.window >= 100, "too little post-reground evidence: {s:?}");
+    assert!(
+        s.failure_rate <= s.epsilon,
+        "re-ground failed to restore epsilon: {s:?}"
+    );
+    assert_eq!(s.alarm, AlarmState::Ok, "{s:?}");
+
+    // exactly-once across both phases, shadow active, loop attached
+    assert_eq!(metrics.counter("fleet_submitted").get(), n1 + n2);
+    assert_eq!(metrics.counter("fleet_completed").get(), n1 + n2);
+    assert_eq!(metrics.counter("fleet_shed").get(), 0);
+    assert_eq!(fleet.total_outstanding(), 0);
+    control.stop();
+}

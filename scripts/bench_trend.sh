@@ -1,0 +1,91 @@
+#!/usr/bin/env bash
+# Bench goodput trend gate: compare this run's BENCH_*.json artifacts
+# against the committed previous run and fail on a goodput regression
+# of more than 10%.
+#
+# The benches already upload BENCH_<name>.json as CI artifacts (the
+# machine-readable perf trajectory); this script closes the loop by
+# diffing every "goodput_rps" field in a fresh artifact against the
+# matching committed file under scripts/bench_baseline/.  A fresh file
+# with no committed counterpart seeds the trajectory (copied into the
+# baseline dir and reported -- commit it); a file whose shape changed
+# (different number of goodput fields) is re-seeded rather than
+# compared, since the bench itself was redesigned.
+#
+# Usage: scripts/bench_trend.sh [--update]
+#   Fresh artifacts are read from $BENCH_OUT (default: bench-out/).
+#   --update re-seeds every baseline from the fresh run.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fresh_dir=${BENCH_OUT:-bench-out}
+base_dir=scripts/bench_baseline
+threshold=0.90 # fresh goodput must stay >= 90% of the committed run
+
+extract() {
+    grep -oE '"goodput_rps":[0-9.eE+-]+' "$1" | grep -oE '[0-9.eE+-]+$' || true
+}
+
+if [[ "${1:-}" == "--update" ]]; then
+    mkdir -p "$base_dir"
+    cp "$fresh_dir"/BENCH_*.json "$base_dir"/
+    echo "bench baseline reseeded from $fresh_dir/"
+    exit 0
+fi
+
+shopt -s nullglob
+fresh=("$fresh_dir"/BENCH_*.json)
+if (( ${#fresh[@]} == 0 )); then
+    echo "no $fresh_dir/BENCH_*.json found -- run the benches first" >&2
+    exit 1
+fi
+
+mkdir -p "$base_dir"
+status=0
+for f in "${fresh[@]}"; do
+    name=$(basename "$f")
+    base="$base_dir/$name"
+    if [[ ! -f "$base" ]]; then
+        cp "$f" "$base"
+        echo "SEED $name: no committed baseline -- seeded (commit $base)"
+        continue
+    fi
+    mapfile -t new < <(extract "$f")
+    mapfile -t old < <(extract "$base")
+    if (( ${#new[@]} == 0 )); then
+        echo "SKIP $name: no goodput_rps fields"
+        continue
+    fi
+    if (( ${#new[@]} != ${#old[@]} )); then
+        cp "$f" "$base"
+        echo "RESEED $name: bench shape changed" \
+             "(${#old[@]} -> ${#new[@]} goodput fields; commit $base)"
+        continue
+    fi
+    ok=1
+    for i in "${!new[@]}"; do
+        verdict=$(awk -v n="${new[$i]}" -v o="${old[$i]}" -v t="$threshold" \
+            'BEGIN { print (o > 0 && n < t * o) ? "FAIL" : "OK" }')
+        if [[ "$verdict" == "FAIL" ]]; then
+            echo "FAIL $name: goodput_rps[$i] ${new[$i]} fell below" \
+                 "${threshold} x committed ${old[$i]}" >&2
+            ok=0
+            status=1
+        fi
+    done
+    if (( ok == 1 )); then
+        echo "OK $name: ${#new[@]} goodput field(s) within 10% of baseline"
+    fi
+done
+
+if (( status != 0 )); then
+    cat >&2 <<'EOF'
+
+Goodput regressed more than 10% against the committed bench trajectory.
+If the regression is a deliberate trade (new feature cost, redesigned
+bench), re-seed with scripts/bench_trend.sh --update and commit the new
+scripts/bench_baseline/ files in the same change, explaining why.
+EOF
+fi
+exit "$status"

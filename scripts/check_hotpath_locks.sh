@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
-# Hot-path lock lint: fail CI when a coordinator/ file grows new
-# Mutex/RwLock acquisitions.
+# Hot-path lock lint: fail CI when a coordinator/ or obs/ file grows
+# new Mutex/RwLock acquisitions.
 #
 # The serving request path (rust/src/coordinator/) must stay lock-free
 # per request: metrics go through pre-resolved Arc handles with striped
 # atomic counters, spans through the tracer's ring (DESIGN.md §12).
-# The locks that legitimately remain -- the batcher's gate and the
-# pool's replica-slot RwLock -- are frozen in
-# scripts/hotpath_lock_baseline.txt; adding an acquisition anywhere in
-# coordinator/ fails this check until the baseline is consciously
+# rust/src/obs/ is covered too: its locks are legitimate but must stay
+# OFF the request path (the tracer's per-slot micro-locks, the sink's
+# buffer, the drift monitor's per-tier window -- all touched only by
+# sampled/background work), so growth there is equally suspicious.
+# The acquisitions that legitimately remain -- the batcher's gate, the
+# pool's replica-slot RwLock, and the obs-side ones above -- are frozen
+# in scripts/hotpath_lock_baseline.txt; adding an acquisition anywhere
+# in these trees fails this check until the baseline is consciously
 # re-justified (update the file IN THE SAME COMMIT and explain why the
 # new lock cannot live off the hot path).
 #
@@ -22,7 +26,7 @@ pattern='\.lock\(\)|\.read\(\)|\.write\(\)'
 
 current() {
     # stable per-file counts of lock/read/write acquisitions
-    for f in rust/src/coordinator/*.rs; do
+    for f in rust/src/coordinator/*.rs rust/src/obs/*.rs; do
         printf '%s %s\n' "$f" "$(grep -c -E "$pattern" "$f" || true)"
     done | sort
 }
@@ -51,12 +55,13 @@ done < <(current)
 if (( status != 0 )); then
     cat >&2 <<'EOF'
 
-New Mutex/RwLock acquisitions in the coordinator request path.  Move
-the work off the hot path (pre-resolved metric handles, the obs ring,
-the JSONL sink's background flusher), or -- if the lock is genuinely
-unavoidable -- update scripts/hotpath_lock_baseline.txt in this commit
-and justify it in the commit message.
+New Mutex/RwLock acquisitions in the coordinator request path or the
+observability layer.  Move the work off the hot path (pre-resolved
+metric handles, the obs ring, the JSONL sink's background flusher, the
+shadow worker thread), or -- if the lock is genuinely unavoidable --
+update scripts/hotpath_lock_baseline.txt in this commit and justify it
+in the commit message.
 EOF
     exit "$status"
 fi
-echo "hot-path lock lint: OK (coordinator/ lock counts within baseline)"
+echo "hot-path lock lint: OK (coordinator/ + obs/ lock counts within baseline)"
