@@ -93,7 +93,7 @@ fn onoff_trace() -> Arc<Trace> {
 /// (report, replica-seconds) for a pinned fleet of `n` replicas.
 fn run_fixed(n: usize, trace: Arc<Trace>) -> (LoadReport, f64) {
     let pool = Arc::new(ReplicaPool::spawn(classifier(), pool_cfg(n), Metrics::new()));
-    let report = LoadGen { workers: 64 }
+    let report = LoadGen { workers: 64, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("fixed run");
     let rs = pool.replica_seconds();
@@ -130,7 +130,7 @@ fn run_elastic(trace: Arc<Trace>) -> (LoadReport, f64, u64, u64) {
             0.0,
         ),
     );
-    let report = LoadGen { workers: 64 }
+    let report = LoadGen { workers: 64, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("elastic run");
     let rs = pool.replica_seconds();

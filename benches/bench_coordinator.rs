@@ -15,7 +15,7 @@ use abc_serve::coordinator::cascade::Cascade;
 use abc_serve::coordinator::pipeline::Pipeline;
 use abc_serve::metrics::Metrics;
 use abc_serve::runtime::engine::Engine;
-use abc_serve::types::{Request, RuleKind};
+use abc_serve::types::{Class, Request, RuleKind};
 use abc_serve::util::json::{Json, JsonObj};
 use abc_serve::util::rng::Rng;
 use abc_serve::zoo::manifest::Manifest;
@@ -86,7 +86,12 @@ fn main() -> anyhow::Result<()> {
     b.run("single blocking infer", || {
         black_box(
             pipeline
-                .infer(Request { id: 0, features: test.row(0).to_vec(), arrival_s: 0.0 })
+                .infer(Request {
+                    id: 0,
+                    features: test.row(0).to_vec(),
+                    arrival_s: 0.0,
+                    class: Class::Standard,
+                })
                 .unwrap(),
         )
     });
@@ -98,6 +103,7 @@ fn main() -> anyhow::Result<()> {
                         id: i,
                         features: test.row(i as usize % test.n).to_vec(),
                         arrival_s: 0.0,
+                        class: Class::Standard,
                     })
                     .unwrap()
             })

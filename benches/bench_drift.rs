@@ -79,6 +79,7 @@ fn run_case(sample_every: u64, trace: Arc<Trace>) -> (LoadReport, ShadowLedger) 
                     max_batch: MAX_BATCH,
                     max_wait: Duration::from_millis(1),
                 },
+                class_weights: None,
             },
             Arc::clone(&metrics),
             None,
@@ -86,7 +87,7 @@ fn run_case(sample_every: u64, trace: Arc<Trace>) -> (LoadReport, ShadowLedger) 
         )
         .expect("fleet spawn"),
     );
-    let report = LoadGen { workers: WORKERS }
+    let report = LoadGen { workers: WORKERS, class_mix: None }
         .run(&fleet, trace, &Metrics::new())
         .expect("load run");
     let scored = fleet

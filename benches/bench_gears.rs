@@ -94,7 +94,7 @@ fn run_fixed(plan: &GearPlan, gear_idx: usize, trace: Arc<Trace>) -> LoadReport 
         Metrics::new(),
         handle,
     ));
-    LoadGen { workers: 64 }
+    LoadGen { workers: 64, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("fixed-gear run")
 }
@@ -121,7 +121,7 @@ fn run_adaptive(plan: &GearPlan, trace: Arc<Trace>) -> (LoadReport, u64, u64) {
             },
         ),
     );
-    let report = LoadGen { workers: 64 }
+    let report = LoadGen { workers: 64, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("adaptive run");
     let down = metrics.counter("gear_shift_down").get();

@@ -53,7 +53,7 @@ fn run_point(replicas: usize, offered_rps: f64) -> LoadReport {
         7 + replicas as u64,
     ));
     let workers = (replicas * MAX_QUEUE * 2).clamp(32, 512);
-    LoadGen { workers }
+    LoadGen { workers, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("load run")
 }

@@ -61,7 +61,7 @@ fn run_point(tracer: Option<Arc<Tracer>>, seed: u64) -> LoadReport {
     let n = (offered * RUN_S) as usize;
     let trace = Arc::new(Trace::synth(Arrival::Poisson { rate: offered }, n, DIM, seed));
     let workers = (REPLICAS * MAX_QUEUE * 2).clamp(32, 512);
-    LoadGen { workers }
+    LoadGen { workers, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("load run")
 }

@@ -74,7 +74,7 @@ fn run_monolithic(trace: Arc<Trace>) -> (LoadReport, f64, String) {
         },
         Metrics::new(),
     ));
-    let report = LoadGen { workers: WORKERS }
+    let report = LoadGen { workers: WORKERS, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .expect("monolithic run");
     let dollars = pool.dollars();
@@ -94,12 +94,13 @@ fn run_tiered(trace: Arc<Trace>) -> (LoadReport, f64, String) {
                     TierSpec::fixed(Gpu::H100, 1, MAX_QUEUE),
                 ],
                 batcher: batcher(),
+                class_weights: None,
             },
             Metrics::new(),
         )
         .expect("fleet spawn"),
     );
-    let report = LoadGen { workers: WORKERS }
+    let report = LoadGen { workers: WORKERS, class_mix: None }
         .run(&fleet, trace, &Metrics::new())
         .expect("tiered run");
     let dollars = fleet.dollars();

@@ -212,6 +212,14 @@ pub struct ControlConfig {
     /// ([`DriftDecider`]; `serve --recalibrate`).  Off by default --
     /// the observatory then only reports.
     pub recalibrate: bool,
+    /// Multiplier applied to `max_dollars_per_hour` while the SLO
+    /// observatory's *premium* burn-rate alarm is latched Breach
+    /// (`serve --slo-boost`): the budget arbiter temporarily affords
+    /// more machines exactly when the protected class is burning its
+    /// error budget, and the cap snaps back once the alarm clears.
+    /// `1.0` (the default) disables the coupling; only meaningful with
+    /// a finite budget (an uncapped arbiter has nothing to relax).
+    pub slo_boost: f64,
 }
 
 impl ControlConfig {
@@ -228,6 +236,7 @@ impl ControlConfig {
             }],
             max_dollars_per_hour: 0.0,
             recalibrate: false,
+            slo_boost: 1.0,
         }
     }
 
@@ -250,6 +259,7 @@ impl ControlConfig {
             }],
             max_dollars_per_hour,
             recalibrate: false,
+            slo_boost: 1.0,
         }
     }
 
@@ -287,6 +297,7 @@ impl ControlConfig {
             gears,
             max_dollars_per_hour,
             recalibrate: false,
+            slo_boost: 1.0,
         }
     }
 
@@ -305,6 +316,7 @@ impl ControlConfig {
         );
         assert!(self.ctrl.ewma_alpha > 0.0 && self.ctrl.ewma_alpha <= 1.0);
         assert!(self.max_dollars_per_hour >= 0.0);
+        assert!(self.slo_boost >= 1.0, "slo_boost must not shrink the budget");
         for u in &self.units {
             if let Some(s) = &u.scale {
                 s.validate();

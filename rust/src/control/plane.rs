@@ -24,6 +24,15 @@
 //! Breach gets its serving theta re-grounded from the observatory's
 //! live estimate (`drift_reground_total` counter, `decider="drift"`
 //! events).
+//!
+//! With `ControlConfig::slo_boost > 1.0` and a finite budget the loop
+//! also runs the SLO coupling each tick: while the target's premium
+//! burn-rate alarm ([`crate::obs::slo::SloObservatory`]) is latched
+//! Breach, the tick decides under `max_dollars_per_hour * slo_boost`
+//! -- the arbiter affords extra machines exactly while the protected
+//! class burns its error budget -- and snaps back when it clears
+//! (`slo_boost_active` gauge, `decider="slo"` transition events tagged
+//! `class="premium"`).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -38,6 +47,8 @@ use crate::control::sampler::Sampler;
 use crate::control::state::{ControlState, Shift};
 use crate::control::target::ControlTarget;
 use crate::metrics::{EventKind, EventRecord};
+use crate::obs::drift::AlarmState;
+use crate::types::Class;
 
 /// Handle to the running control thread; stops and joins on drop.
 pub struct ControlLoop {
@@ -109,6 +120,17 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
     let regrounds = cfg
         .recalibrate
         .then(|| control.counter("drift_reground_total"));
+    // the SLO budget coupling: armed only with a boost AND a cap (an
+    // uncapped arbiter has nothing to relax).  The boosted config is
+    // cloned once here, not per tick.
+    let slo_armed = cfg.slo_boost > 1.0 && cfg.max_dollars_per_hour > 0.0;
+    let slo_boost_gauge = slo_armed.then(|| control.gauge("slo_boost_active"));
+    let boosted_cfg = slo_armed.then(|| {
+        let mut c = cfg.clone();
+        c.max_dollars_per_hour *= c.slo_boost;
+        c
+    });
+    let mut was_burning = false;
     // single-unit targets keep the legacy gauge names; fleets get
     // tier-prefixed EWMA gauges (their lifecycle gauges come from the
     // fleet's own publish)
@@ -202,8 +224,40 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
             });
             dt_s = dt_s.max(dt);
         }
+        // -- SLO budget boost (opt-in) -----------------------------------
+        // decide this tick under the boosted cap while the premium
+        // class's burn alarm is latched Breach; the alarm's hysteresis
+        // is the coupling's flap guard, so no extra dwell here
+        let burning = boosted_cfg.is_some()
+            && target.slo_statuses().is_some_and(|ss| {
+                ss.iter().any(|s| {
+                    s.class == Class::Premium && s.alarm == AlarmState::Breach
+                })
+            });
+        if let Some(g) = &slo_boost_gauge {
+            g.set(if burning { 1.0 } else { 0.0 });
+        }
+        if burning != was_burning {
+            was_burning = burning;
+            let live: usize = (0..n).map(|i| target.unit_counts(i).1).sum();
+            control.events().record(EventRecord {
+                kind: EventKind::Scale,
+                decider: "slo",
+                trigger: if burning { "breach" } else { "recovered" },
+                tier: 0,
+                old_gear: 0,
+                new_gear: 0,
+                old_replicas: live,
+                new_replicas: live,
+                class: Some(Class::Premium.name()),
+            });
+        }
+        let eff_cfg = match &boosted_cfg {
+            Some(b) if burning => b,
+            _ => cfg,
+        };
         let tick =
-            decide_tick(cfg, &mut states, &obs, &counts, &gpus, &forecasts, dt_s);
+            decide_tick(eff_cfg, &mut states, &obs, &counts, &gpus, &forecasts, dt_s);
         let now_s = t0.elapsed().as_secs_f64();
         for i in 0..n {
             forecasters[i].push(now_s, states[i].ewma_rps());
@@ -231,6 +285,7 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
                 new_gear: s.to,
                 old_replicas: live,
                 new_replicas: live,
+                class: None,
             });
         }
         for (gi, g) in cfg.gears.iter().enumerate() {
@@ -258,6 +313,7 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
                 new_gear: rung,
                 old_replicas: a.fleet,
                 new_replicas: a.target,
+                class: None,
             });
         }
         // -- drift recalibration (opt-in) --------------------------------
@@ -287,6 +343,7 @@ fn run(target: &dyn ControlTarget, cfg: &ControlConfig, stop: &AtomicBool) {
                         new_gear: rung,
                         old_replicas: live,
                         new_replicas: live,
+                        class: None,
                     });
                 }
             }

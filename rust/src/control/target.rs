@@ -26,6 +26,7 @@ use crate::coordinator::router::TieredFleet;
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
 use crate::obs::drift::DriftStatus;
+use crate::obs::slo::SloStatus;
 use crate::planner::gear::GearConfig;
 
 /// One serving backend as seen by the control loop; see module docs.
@@ -72,6 +73,13 @@ pub trait ControlTarget: Send + Sync {
     /// a non-finite estimate) or the target has no observatory.
     fn reground_theta(&self, unit: usize) -> Option<f32> {
         let _ = unit;
+        None
+    }
+    /// The per-class SLO statuses from the target's SLO observatory,
+    /// refreshed to now (`None`: no observatory attached).  The loop's
+    /// budget-boost coupling (`ControlConfig::slo_boost`) keys on the
+    /// premium class's burn alarm.
+    fn slo_statuses(&self) -> Option<Vec<SloStatus>> {
         None
     }
     /// The target-level registry the loop records events and publishes
@@ -138,6 +146,13 @@ impl ControlTarget for ReplicaPool {
         ReplicaPool::drain(self, n);
     }
 
+    fn slo_statuses(&self) -> Option<Vec<SloStatus>> {
+        self.slo().map(|s| {
+            s.refresh();
+            s.statuses()
+        })
+    }
+
     fn control_metrics(&self) -> &Arc<Metrics> {
         self.metrics()
     }
@@ -202,6 +217,13 @@ impl ControlTarget for TieredFleet {
         let theta = self.drift()?.reground(unit)?;
         self.set_tier_theta(unit, Some(theta));
         Some(theta)
+    }
+
+    fn slo_statuses(&self) -> Option<Vec<SloStatus>> {
+        self.slo().map(|s| {
+            s.refresh();
+            s.statuses()
+        })
     }
 
     fn control_metrics(&self) -> &Arc<Metrics> {

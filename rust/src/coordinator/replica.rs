@@ -48,19 +48,19 @@
 //! request is counted in `outstanding`, blocking retirement) or the
 //! slot is already gone when the probe looks.
 
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::cascade::BatchClassifier;
 use crate::coordinator::pipeline::{Pipeline, SubmitRejection};
 use crate::cost::rental::Gpu;
-use crate::metrics::Metrics;
-use crate::obs::{ObsHook, SpanKind, Tracer};
+use crate::metrics::{EventKind, EventRecord, Metrics};
+use crate::obs::{ObsHook, SloObservatory, SpanKind, Tracer};
 use crate::planner::gear::GearHandle;
-use crate::types::{Request, Verdict};
+use crate::types::{Class, Request, Verdict};
 
 /// Sizing knobs for a replica pool.
 #[derive(Debug, Clone, Copy)]
@@ -84,6 +84,16 @@ pub struct PoolConfig {
     /// Hard ceiling on total slots: `scale_up` clamps provisioning so
     /// the pool never holds more (Warming + Live + Draining).
     pub max_replicas: usize,
+    /// Weighted-fair admission quotas per SLO class, indexed by
+    /// [`Class::index`] (premium, standard, batch).  `None` -- the
+    /// default -- disables class-aware admission entirely: the
+    /// admission path is byte-identical to the historical untagged
+    /// FIFO one.  With `Some(w)`, each class is guaranteed a
+    /// `w[c] / sum(w)` share of the pool's queue slots, and spare
+    /// capacity other classes are not using is borrowable
+    /// (work-conserving), so a bursty `batch` tenant cannot starve
+    /// `premium` but an idle fleet still admits anyone.
+    pub class_weights: Option<[f64; Class::COUNT]>,
 }
 
 impl Default for PoolConfig {
@@ -95,6 +105,7 @@ impl Default for PoolConfig {
             gpu: Gpu::H100,
             min_replicas: 1,
             max_replicas: usize::MAX,
+            class_weights: None,
         }
     }
 }
@@ -199,6 +210,88 @@ pub struct Lifecycle {
     pub retired: usize,
 }
 
+/// Weighted-fair admission quota: per-class outstanding counts judged
+/// against weighted shares of the pool's total queue slots, with
+/// work-conserving borrowing.  All atomics -- the admission hot path
+/// acquires no locks beyond the slots read lock it already holds.
+///
+/// Admission rule for class `c` over capacity `K` (live replicas x
+/// `max_queue`): admit iff `out[c] < w[c]*K` (inside its own share) OR
+/// `total_out < K - sum_{d != c} max(0, w[d]*K - out[d])` (spare
+/// capacity no other class has reserved).  The check-then-increment is
+/// intentionally racy across submitters: fairness is approximate under
+/// contention, while the hard queue bound stays exact because every
+/// pipeline still enforces `outstanding <= max_queue` on its own.
+struct ClassQuota {
+    /// Normalised class weights (sum to 1).
+    weights: [f64; Class::COUNT],
+    /// Quota-tracked in-flight requests per class (acquired at
+    /// admission, released when the verdict is delivered).
+    out: [AtomicUsize; Class::COUNT],
+    /// Per-class pressure-episode latch: one `EventKind::Shed` record
+    /// per episode (set on the first quota shed, cleared by the next
+    /// successful admit), not one per shed request.
+    latched: [AtomicBool; Class::COUNT],
+}
+
+impl ClassQuota {
+    fn new(weights: [f64; Class::COUNT]) -> ClassQuota {
+        let sum: f64 = weights.iter().sum();
+        assert!(
+            sum > 0.0 && weights.iter().all(|w| *w >= 0.0),
+            "class weights must be non-negative and sum > 0, got {weights:?}"
+        );
+        ClassQuota {
+            weights: weights.map(|w| w / sum),
+            out: std::array::from_fn(|_| AtomicUsize::new(0)),
+            latched: std::array::from_fn(|_| AtomicBool::new(false)),
+        }
+    }
+
+    /// Try to take one queue slot for `class` under total capacity
+    /// `capacity`; increments the class's outstanding count on success.
+    fn try_acquire(&self, class: Class, capacity: usize) -> bool {
+        let c = class.index();
+        let share_c = self.weights[c] * capacity as f64;
+        if (self.out[c].load(Ordering::Relaxed) as f64) < share_c {
+            self.out[c].fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        // work-conserving borrow: spare slots not reserved by the
+        // other classes' unused shares
+        let mut total = 0usize;
+        let mut reserved_other = 0.0f64;
+        for d in 0..Class::COUNT {
+            let o = self.out[d].load(Ordering::Relaxed);
+            total += o;
+            if d != c {
+                let share_d = self.weights[d] * capacity as f64;
+                reserved_other += (share_d - o as f64).max(0.0);
+            }
+        }
+        if (total as f64) < capacity as f64 - reserved_other {
+            self.out[c].fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Give back one slot (saturating: never underflows even on a
+    /// spurious release).
+    fn release(&self, class: Class) {
+        let _ = self.out[class.index()].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
+    }
+
+    /// Outstanding quota units for one class (diagnostics/tests).
+    fn outstanding(&self, class: Class) -> usize {
+        self.out[class.index()].load(Ordering::Relaxed)
+    }
+}
+
 /// An elastic pool of pipeline replicas behind a least-outstanding
 /// dispatcher.
 pub struct ReplicaPool {
@@ -226,6 +319,13 @@ pub struct ReplicaPool {
     /// Observability hook cloned into every replica pipeline; also
     /// drives the pool's own enqueue/shed spans when it is terminal.
     obs: ObsHook,
+    /// Weighted-fair class quotas (None = untagged FIFO admission).
+    quota: Option<ClassQuota>,
+    /// Attached SLO observatory (monolithic deployments; a fleet's tier
+    /// pools leave this empty and the fleet keeps the books instead --
+    /// exactly one bookkeeper per request).  `OnceLock` so the
+    /// per-request `get()` is a lock-free load.
+    slo: OnceLock<Arc<SloObservatory>>,
 }
 
 impl ReplicaPool {
@@ -296,6 +396,8 @@ impl ReplicaPool {
             metrics,
             gear,
             obs,
+            quota: cfg.class_weights.map(ClassQuota::new),
+            slo: OnceLock::new(),
         };
         pool.scale_up(cfg.replicas, Duration::ZERO);
         pool
@@ -561,6 +663,45 @@ impl ReplicaPool {
         self.obs.tracer()
     }
 
+    /// Attach an SLO observatory: [`ReplicaPool::infer`] records
+    /// per-class submitted/completed/shed books and latencies into it.
+    /// One-shot (later attaches are ignored); monolithic deployments
+    /// only -- a fleet keeps its own books at the fleet boundary.
+    pub fn attach_slo(&self, slo: Arc<SloObservatory>) {
+        let _ = self.slo.set(slo);
+    }
+
+    /// The attached SLO observatory, if any.
+    pub fn slo(&self) -> Option<&Arc<SloObservatory>> {
+        self.slo.get()
+    }
+
+    /// Quota-tracked in-flight requests for one class (0 when
+    /// class-aware admission is disabled).  Diagnostics/tests.
+    pub fn class_outstanding(&self, class: Class) -> usize {
+        self.quota.as_ref().map(|q| q.outstanding(class)).unwrap_or(0)
+    }
+
+    /// Record one quota-pressure shed episode into the event log: one
+    /// `EventKind::Shed` per pressure episode per class (latched; the
+    /// next successful admit of the class re-arms it), tagged with the
+    /// class and `trigger="quota"`.
+    fn note_quota_shed(&self, q: &ClassQuota, class: Class, live: usize) {
+        if !q.latched[class.index()].swap(true, Ordering::Relaxed) {
+            self.metrics.events().record(EventRecord {
+                kind: EventKind::Shed,
+                decider: "admission",
+                trigger: "quota",
+                tier: self.obs.tier,
+                old_gear: 0,
+                new_gear: 0,
+                old_replicas: live,
+                new_replicas: live,
+                class: Some(class.name()),
+            });
+        }
+    }
+
     /// Submit to the least-loaded admitting replica; sheds with
     /// [`PoolError::Overloaded`] when every one is at `max_queue`.
     ///
@@ -585,6 +726,41 @@ impl ReplicaPool {
             None
         };
         let slots = self.slots.read().unwrap();
+        // Class-aware admission gate (quota enabled only): the class
+        // must fit its weighted-fair share -- or borrow genuinely spare
+        // capacity -- BEFORE any replica probe.  The quota unit is held
+        // until the verdict is delivered; [`ReplicaPool::infer`]
+        // releases it, so callers that pair `submit` with their own
+        // `recv` under quotas must route through `infer` (the serving
+        // front ends and the fleet router all do).
+        if let Some(q) = &self.quota {
+            let live = slots
+                .iter()
+                .filter(|s| s.state() == ReplicaState::Live)
+                .count();
+            let capacity = live.max(1) * self.max_queue;
+            if !q.try_acquire(request.class, capacity) {
+                let outstanding: usize =
+                    slots.iter().map(|s| s.pipeline.outstanding()).sum();
+                self.shed_counter.inc();
+                self.note_quota_shed(q, request.class, live);
+                if let Some(t) = span_tracer {
+                    t.record_with_class(
+                        request.id,
+                        SpanKind::Shed,
+                        self.obs.tier,
+                        0.0,
+                        Some(request.class.name()),
+                    );
+                }
+                return Err(PoolError::Overloaded {
+                    outstanding,
+                    limit: capacity,
+                });
+            }
+            // admitted: the class's pressure episode (if any) is over
+            q.latched[request.class.index()].store(false, Ordering::Relaxed);
+        }
         match self.dispatch(&slots, ReplicaState::Live, &request) {
             Ok(rx) => {
                 if let Some(t) = span_tracer {
@@ -592,7 +768,12 @@ impl ReplicaPool {
                 }
                 return Ok(rx);
             }
-            Err(Some(e)) => return Err(e),
+            Err(Some(e)) => {
+                if let Some(q) = &self.quota {
+                    q.release(request.class);
+                }
+                return Err(e);
+            }
             Err(None) => {}
         }
         match self.dispatch(&slots, ReplicaState::Warming, &request) {
@@ -602,8 +783,16 @@ impl ReplicaPool {
                 }
                 return Ok(rx);
             }
-            Err(Some(e)) => return Err(e),
+            Err(Some(e)) => {
+                if let Some(q) = &self.quota {
+                    q.release(request.class);
+                }
+                return Err(e);
+            }
             Err(None) => {}
+        }
+        if let Some(q) = &self.quota {
+            q.release(request.class);
         }
         let live = slots
             .iter()
@@ -685,14 +874,44 @@ impl ReplicaPool {
         }
     }
 
-    /// Submit and block for the verdict.
+    /// Submit and block for the verdict.  This is where the class
+    /// books balance: an attached SLO observatory sees exactly one
+    /// submitted and exactly one terminal (completed or shed) record
+    /// per call, and the admission quota unit taken in `submit` is
+    /// given back once the verdict (or failure) is delivered.
     pub fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
-        let rx = self.submit(request)?;
-        match rx.recv() {
+        let class = request.class;
+        if let Some(slo) = self.slo.get() {
+            slo.record_submitted(class);
+        }
+        let rx = match self.submit(request) {
+            Ok(rx) => rx,
+            Err(e) => {
+                if let Some(slo) = self.slo.get() {
+                    slo.record_shed(class);
+                }
+                return Err(e);
+            }
+        };
+        let out = match rx.recv() {
             Ok(Ok(v)) => Ok(v),
             Ok(Err(msg)) => Err(PoolError::Failed(msg)),
-            Err(_) => Err(PoolError::Failed("pipeline dropped the request".to_string())),
+            Err(_) => {
+                Err(PoolError::Failed("pipeline dropped the request".to_string()))
+            }
+        };
+        if let Some(q) = &self.quota {
+            q.release(class);
         }
+        if let Some(slo) = self.slo.get() {
+            match &out {
+                Ok(v) => slo.record_completed(class, v.latency_s),
+                // an admitted-then-failed request still terminates the
+                // books exactly once: count it with the sheds
+                Err(_) => slo.record_shed(class),
+            }
+        }
+        out
     }
 }
 
@@ -712,7 +931,16 @@ mod tests {
     }
 
     fn req(id: u64) -> Request {
-        Request { id, features: vec![0.5, -0.25, 0.125, 1.0], arrival_s: 0.0 }
+        Request {
+            id,
+            features: vec![0.5, -0.25, 0.125, 1.0],
+            arrival_s: 0.0,
+            class: Class::Standard,
+        }
+    }
+
+    fn creq(id: u64, class: Class) -> Request {
+        Request { class, ..req(id) }
     }
 
     #[test]
@@ -741,7 +969,12 @@ mod tests {
         let pool =
             ReplicaPool::spawn(synth(10), PoolConfig::default(), Metrics::new());
         let err = pool
-            .infer(Request { id: 1, features: vec![0.0; 3], arrival_s: 0.0 })
+            .infer(Request {
+                id: 1,
+                features: vec![0.0; 3],
+                arrival_s: 0.0,
+                class: Class::Standard,
+            })
             .unwrap_err();
         assert!(matches!(err, PoolError::Rejected(_)), "got {err:?}");
         assert!(err.to_string().contains("features"));
@@ -1043,6 +1276,170 @@ mod tests {
         assert!((d - rs / 3600.0 * 0.50).abs() < 1e-5, "{d} vs {rs}");
         // burn rate counts every provisioned slot at the class price
         assert!((pool.dollars_per_hour() - 2.0 * 0.50).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_fair_quota_protects_premium_share() {
+        // 1 replica x max_queue 10 => capacity 10; weights 0.6/0.3/0.1
+        // give batch exactly 1 guaranteed slot and no borrowable spare
+        // while the other shares are unclaimed.
+        let metrics = Metrics::new();
+        let pool = ReplicaPool::spawn(
+            synth(20_000), // 20ms/row: nothing completes mid-test
+            PoolConfig {
+                replicas: 1,
+                max_queue: 10,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(100),
+                },
+                class_weights: Some([0.6, 0.3, 0.1]),
+                ..PoolConfig::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let mut batch_ok = 0;
+        let mut batch_shed = 0;
+        let mut rxs = Vec::new();
+        for id in 0..3 {
+            match pool.submit(creq(id, Class::Batch)) {
+                Ok(rx) => {
+                    batch_ok += 1;
+                    rxs.push(rx);
+                }
+                Err(PoolError::Overloaded { .. }) => batch_shed += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert_eq!(batch_ok, 1, "batch share is 0.1 * 10 = 1 slot");
+        assert_eq!(batch_shed, 2);
+        assert_eq!(pool.class_outstanding(Class::Batch), 1);
+        // premium's 6-slot share is untouched by the batch burst
+        let mut prem_ok = 0;
+        for id in 10..17 {
+            match pool.submit(creq(id, Class::Premium)) {
+                Ok(rx) => {
+                    prem_ok += 1;
+                    rxs.push(rx);
+                }
+                Err(PoolError::Overloaded { .. }) => {}
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert_eq!(prem_ok, 6, "premium admits its full weighted share");
+        // quota sheds logged once per pressure episode, class-tagged
+        let sheds: Vec<_> = metrics
+            .events()
+            .snapshot()
+            .into_iter()
+            .filter(|e| e.kind == EventKind::Shed)
+            .collect();
+        assert_eq!(sheds.len(), 2, "one episode per class: {sheds:?}");
+        assert_eq!(sheds[0].class, Some("batch"));
+        assert_eq!(sheds[0].trigger, "quota");
+        assert_eq!(sheds[0].decider, "admission");
+        assert_eq!(sheds[1].class, Some("premium"));
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn untagged_single_class_admission_matches_fifo() {
+        // With every request Standard, a weights vector that gives
+        // Standard the whole capacity must shed exactly like the
+        // quota-disabled pool: the degenerate single-class case is the
+        // historical untagged path.
+        let mk = |weights: Option<[f64; Class::COUNT]>| {
+            ReplicaPool::spawn(
+                synth(20_000),
+                PoolConfig {
+                    replicas: 1,
+                    max_queue: 2,
+                    batcher: BatcherConfig {
+                        max_batch: 1,
+                        max_wait: Duration::from_micros(100),
+                    },
+                    class_weights: weights,
+                    ..PoolConfig::default()
+                },
+                Metrics::new(),
+            )
+        };
+        let fifo = mk(None);
+        let single = mk(Some([0.0, 1.0, 0.0]));
+        let run = |pool: &ReplicaPool| {
+            let mut outcomes = Vec::new();
+            let mut rxs = Vec::new();
+            for id in 0..8 {
+                match pool.submit(req(id)) {
+                    Ok(rx) => {
+                        outcomes.push("ok");
+                        rxs.push(rx);
+                    }
+                    Err(PoolError::Overloaded { limit, .. }) => {
+                        outcomes.push("shed");
+                        assert_eq!(limit, 2);
+                    }
+                    Err(e) => panic!("unexpected {e:?}"),
+                }
+            }
+            for rx in rxs {
+                rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+            }
+            outcomes
+        };
+        assert_eq!(run(&fifo), run(&single));
+    }
+
+    #[test]
+    fn quota_slots_release_on_verdict_delivery() {
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig {
+                replicas: 1,
+                max_queue: 4,
+                class_weights: Some([0.5, 0.3, 0.2]),
+                ..PoolConfig::default()
+            },
+            Metrics::new(),
+        );
+        for id in 0..12 {
+            let class = Class::ALL[(id % 3) as usize];
+            pool.infer(creq(id, class)).unwrap();
+            for c in Class::ALL {
+                assert_eq!(pool.class_outstanding(c), 0, "leaked unit for {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn attached_slo_books_balance_through_infer() {
+        use crate::obs::slo::SloConfig;
+        let metrics = Metrics::new();
+        let pool = ReplicaPool::spawn(
+            synth(10),
+            PoolConfig {
+                replicas: 1,
+                max_queue: 8,
+                class_weights: Some([0.5, 0.3, 0.2]),
+                ..PoolConfig::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let slo = SloObservatory::new(SloConfig::default(), &metrics);
+        pool.attach_slo(Arc::clone(&slo));
+        assert!(pool.slo().is_some());
+        for id in 0..15 {
+            let class = Class::ALL[(id % 3) as usize];
+            pool.infer(creq(id, class)).unwrap();
+        }
+        for c in Class::ALL {
+            let s = slo.status(c);
+            assert_eq!(s.submitted, 5, "{c:?}");
+            assert_eq!(s.completed, 5, "{c:?}");
+            assert_eq!(s.shed, 0, "{c:?}");
+        }
     }
 
     #[test]

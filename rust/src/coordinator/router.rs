@@ -83,8 +83,9 @@ use crate::coordinator::replica::{
 use crate::cost::rental::Gpu;
 use crate::metrics::Metrics;
 use crate::obs::drift::{DriftConfig, DriftMonitor};
+use crate::obs::slo::{SloConfig, SloObservatory};
 use crate::obs::{ObsHook, SpanKind, Tracer};
-use crate::types::{Request, Verdict};
+use crate::types::{Class, Request, Verdict};
 
 /// Reserved exit level a [`StageAdapter`] reports for "defer to the
 /// next tier".  Real exit levels are 1-based, so 0 can never collide;
@@ -223,6 +224,10 @@ pub struct TieredFleetConfig {
     pub tiers: Vec<TierSpec>,
     /// Batching policy shared by every tier's replicas.
     pub batcher: BatcherConfig,
+    /// Weighted-fair class quotas applied to EVERY tier's pool (see
+    /// [`PoolConfig::class_weights`]); `None` keeps untagged FIFO
+    /// admission everywhere.
+    pub class_weights: Option<[f64; Class::COUNT]>,
 }
 
 /// One tier's pool + its fleet-level accounting handles.  Counters and
@@ -341,6 +346,10 @@ pub struct TieredFleet {
     /// with a [`DriftConfig`], or when its sampling is off).
     shadow: Option<ShadowHandle>,
     drift: Option<Arc<DriftMonitor>>,
+    /// Per-class SLO observatory (None when not spawned with an
+    /// [`SloConfig`]).  The fleet keeps the class books itself in
+    /// [`TieredFleet::infer`] -- tier pools never double-count.
+    slo: Option<Arc<SloObservatory>>,
 }
 
 impl TieredFleet {
@@ -387,6 +396,23 @@ impl TieredFleet {
         tracer: Option<Arc<Tracer>>,
         drift_cfg: Option<DriftConfig>,
     ) -> Result<TieredFleet> {
+        TieredFleet::spawn_with_slo(stage, cfg, metrics, tracer, drift_cfg, None)
+    }
+
+    /// Spawn with the per-class SLO observatory attached: the fleet
+    /// books every request into its class ledger (submitted / completed
+    /// / shed / deferred) alongside the fleet-level counters, so
+    /// `class_{c}_submitted == class_{c}_completed + class_{c}_shed`
+    /// holds per class AND the class ledgers sum to the fleet identity.
+    /// `None` spawns no per-class machinery at all.
+    pub fn spawn_with_slo(
+        stage: Arc<dyn StageClassifier>,
+        cfg: TieredFleetConfig,
+        metrics: Arc<Metrics>,
+        tracer: Option<Arc<Tracer>>,
+        drift_cfg: Option<DriftConfig>,
+        slo_cfg: Option<SloConfig>,
+    ) -> Result<TieredFleet> {
         anyhow::ensure!(
             cfg.tiers.len() == stage.n_levels(),
             "fleet has {} tier specs but the cascade has {} levels",
@@ -421,6 +447,7 @@ impl TieredFleet {
                         gpu: spec.gpu,
                         min_replicas: spec.min_replicas,
                         max_replicas: spec.max_replicas,
+                        class_weights: cfg.class_weights,
                     },
                     tier_metrics,
                     None,
@@ -476,6 +503,7 @@ impl TieredFleet {
             dollars_gauge: metrics.gauge("fleet_dollars"),
             dollars_per_hour_gauge: metrics.gauge("fleet_dollars_per_hour"),
             prev_completed: AtomicU64::new(0),
+            slo: slo_cfg.map(|sc| SloObservatory::new(sc, &metrics)),
             metrics,
             tracer,
             shadow,
@@ -486,6 +514,12 @@ impl TieredFleet {
     /// The drift observatory, when the fleet was spawned with one.
     pub fn drift(&self) -> Option<&Arc<DriftMonitor>> {
         self.drift.as_ref()
+    }
+
+    /// The per-class SLO observatory, when the fleet was spawned with
+    /// one.
+    pub fn slo(&self) -> Option<&Arc<SloObservatory>> {
+        self.slo.as_ref()
     }
 
     /// The attached tracer, when sampling is enabled.
@@ -549,6 +583,12 @@ impl TieredFleet {
     pub fn infer(&self, request: Request) -> Result<Verdict, PoolError> {
         let t0 = Instant::now();
         self.submitted.inc();
+        // the class ledger mirrors the fleet counters exactly: one
+        // submitted here, exactly one completed/shed at the terminal
+        // outcome below, so the per-class identities sum to the fleet's
+        if let Some(slo) = &self.slo {
+            slo.record_submitted(request.class);
+        }
         // one sampling decision covers the whole routed path; the tier
         // pools make the same deterministic call for their own spans
         let span_tracer = self.tracer().filter(|t| t.sampled(request.id));
@@ -566,8 +606,17 @@ impl TieredFleet {
                     // submitted == completed + shed exact.  The error
                     // itself tells the caller which tier refused and why.
                     self.shed.inc();
+                    if let Some(slo) = &self.slo {
+                        slo.record_shed(request.class);
+                    }
                     if let Some(t) = span_tracer {
-                        t.record(request.id, SpanKind::Shed, i, 0.0);
+                        t.record_with_class(
+                            request.id,
+                            SpanKind::Shed,
+                            i,
+                            0.0,
+                            Some(request.class.name()),
+                        );
                     }
                     return Err(e);
                 }
@@ -578,8 +627,17 @@ impl TieredFleet {
                 self.completed.inc();
                 let latency_s = t0.elapsed().as_secs_f64();
                 self.latency.record(latency_s);
+                if let Some(slo) = &self.slo {
+                    slo.record_completed(request.class, latency_s);
+                }
                 if let Some(t) = span_tracer {
-                    t.record(request.id, SpanKind::Complete, i, latency_s);
+                    t.record_with_class(
+                        request.id,
+                        SpanKind::Complete,
+                        i,
+                        latency_s,
+                        Some(request.class.name()),
+                    );
                 }
                 // shadow-sample this early exit into the drift
                 // observatory: the client gets the answer below either
@@ -609,6 +667,9 @@ impl TieredFleet {
                 });
             }
             tier.deferred.inc();
+            if let Some(slo) = &self.slo {
+                slo.record_deferred(request.class);
+            }
             if let Some(t) = span_tracer {
                 // the defer hop's duration is the full stay at this tier
                 t.record(
@@ -622,6 +683,9 @@ impl TieredFleet {
         // unreachable by the StageClassifier contract (the final tier
         // never defers); fail loudly rather than silently dropping
         self.shed.inc();
+        if let Some(slo) = &self.slo {
+            slo.record_shed(request.class);
+        }
         Err(PoolError::Failed(format!(
             "request {} deferred past the final tier",
             request.id
@@ -696,6 +760,9 @@ impl TieredFleet {
         }
         self.dollars_gauge.set(self.dollars());
         self.dollars_per_hour_gauge.set(self.dollars_per_hour());
+        if let Some(slo) = &self.slo {
+            slo.refresh();
+        }
     }
 
     /// Gracefully wind the fleet down: begin draining every pool to its
@@ -752,6 +819,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_micros(200),
             },
+            class_weights: None,
         }
     }
 
@@ -760,6 +828,7 @@ mod tests {
             id,
             features: vec![id as f32 * 0.37 - 3.0, 0.0, 0.0],
             arrival_s: 0.0,
+            class: Class::Standard,
         }
     }
 
@@ -823,6 +892,7 @@ mod tests {
                     max_batch: 1,
                     max_wait: Duration::from_micros(100),
                 },
+                class_weights: None,
             },
             Metrics::new(),
         )
@@ -941,6 +1011,7 @@ mod tests {
                         max_batch: 2,
                         max_wait: Duration::from_micros(200),
                     },
+                    class_weights: None,
                 },
                 Metrics::new(),
             )
@@ -1068,5 +1139,48 @@ mod tests {
         // no traffic between ticks: the window gauge holds its value
         fleet.refresh_gauges();
         assert!((g("tier_0_exit_frac_window") - window).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_ledgers_sum_to_the_fleet_identity() {
+        use crate::obs::slo::SloConfig;
+        let metrics = Metrics::new();
+        let fleet = TieredFleet::spawn_with_slo(
+            staged(20) as Arc<dyn StageClassifier>,
+            fleet_cfg(1, 256),
+            Arc::clone(&metrics),
+            None,
+            None,
+            Some(SloConfig::default()),
+        )
+        .unwrap();
+        let n = 30u64;
+        for id in 0..n {
+            let class = Class::ALL[(id % 3) as usize];
+            fleet.infer(Request { class, ..req(id) }).unwrap();
+        }
+        let slo = fleet.slo().expect("observatory attached");
+        let mut sub = 0u64;
+        let mut done = 0u64;
+        let mut shed = 0u64;
+        for class in Class::ALL {
+            let s = slo.status(class);
+            assert_eq!(s.submitted, 10, "{} submitted", class.name());
+            assert_eq!(s.submitted, s.completed + s.shed, "{}", class.name());
+            sub += s.submitted;
+            done += s.completed;
+            shed += s.shed;
+        }
+        // the per-class ledgers ARE the fleet counters, partitioned
+        assert_eq!(sub, metrics.counter("fleet_submitted").get());
+        assert_eq!(done, metrics.counter("fleet_completed").get());
+        assert_eq!(shed, metrics.counter("fleet_shed").get());
+        // refresh_gauges folds the slo refresh into the normal publish
+        // path (no panic, no double counting); a direct tick then
+        // registers and publishes the class gauges deterministically
+        fleet.refresh_gauges();
+        slo.tick(1.0);
+        let g = metrics.gauge("class_premium_slo_attainment").get();
+        assert!(g > 0.0 && g <= 1.0, "attainment gauge {g}");
     }
 }

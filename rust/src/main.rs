@@ -41,15 +41,27 @@
 //!                   tier, raise drift alarms; --recalibrate additionally
 //!                   lets the control loop re-ground a breached tier's
 //!                   theta from the live estimate -- needs --autoscale)
+//!                   [--slo-targets P,S,B [--slo-goal 0.95]] (SLO
+//!                   observatory: per-class latency targets in seconds
+//!                   for premium,standard,batch; windowed attainment,
+//!                   goodput and error-budget burn alarms per class)
+//!                   [--class-weights P,S,B] (weighted-fair admission:
+//!                   per-class queue shares, work-conserving borrowing)
+//!                   [--slo-boost M] (with --autoscale + a budget:
+//!                   multiply --max-dollars-hour by M while the premium
+//!                   class's burn alarm is latched Breach)
 //! repro stats       [--port 7878] [--events] [--traces] [--drift]
-//!                   [--prom]
+//!                   [--slo] [--prom]
 //!                   (query a running server; --prom prints the
 //!                   Prometheus text exposition instead of the
 //!                   pretty snapshot, --traces dumps sampled trace
 //!                   spans grouped per request as JSONL, --drift the
-//!                   drift observatory's per-tier statuses)
+//!                   drift observatory's per-tier statuses, --slo the
+//!                   per-class SLO attainment/burn table)
 //! repro loadgen     [--rate 500] [--requests 2000] [--arrival poisson]
 //!                   [--replicas 1] [--max-queue 64] [--workers 128]
+//!                   [--class-mix P,S,B] (tag requests premium/standard/
+//!                   batch in exact proportions, interleaved)
 //!                   (synthetic backend: no artifacts needed)
 //! repro exp         <fig2|fig3|fig4a|fig4b|fig5|fig6|fig7|fig8|table5|all>
 //!                   [--out artifacts/results] [--quick]
@@ -72,11 +84,13 @@ use abc_serve::cost::rental::Gpu;
 use abc_serve::data::workload::Arrival;
 use abc_serve::experiments::{self, common::ExpContext};
 use abc_serve::metrics::Metrics;
-use abc_serve::obs::{DriftConfig, JsonlSink, ObsHook, Tracer};
+use abc_serve::obs::{
+    DriftConfig, JsonlSink, ObsHook, SloConfig, SloObservatory, Tracer,
+};
 use abc_serve::planner::{search, GearHandle, GearPlan, PlannerConfig};
 use abc_serve::runtime::engine::Engine;
 use abc_serve::trafficgen::{LoadGen, LoadReport, SyntheticClassifier, Trace};
-use abc_serve::types::{Parallelism, RuleKind};
+use abc_serve::types::{Class, Parallelism, RuleKind};
 use abc_serve::util::cli::Args;
 use abc_serve::util::table::{fnum, human, Table};
 use abc_serve::zoo::manifest::Manifest;
@@ -135,13 +149,19 @@ fn print_usage() {
          \x20                               [--shadow-sample N [--recalibrate]]\n\
          \x20                               (drift observatory: shadow 1-in-N\n\
          \x20                               early exits, live theta gauges)\n\
+         \x20                               [--slo-targets P,S,B] [--slo-goal G]\n\
+         \x20                               (per-class SLO books + burn alarms)\n\
+         \x20                               [--class-weights P,S,B]\n\
+         \x20                               (weighted-fair admission)\n\
          \x20 stats     [--port P]          stats snapshot of a running server\n\
          \x20                               [--events] (+ controller event JSONL)\n\
          \x20                               [--traces] (+ trace-span JSONL)\n\
          \x20                               [--drift] (drift observatory status)\n\
+         \x20                               [--slo] (per-class SLO attainment)\n\
          \x20                               [--prom] (Prometheus exposition)\n\
          \x20 loadgen                       open-loop load test on the synthetic\n\
          \x20                               backend (no artifacts needed)\n\
+         \x20                               [--class-mix P,S,B] (tag requests)\n\
          \x20 exp <id|all>                  regenerate paper figures/tables\n\
          \x20 selftest                      load + smoke every artifact\n\n\
          common flags: --artifacts DIR (default ./artifacts), --rule vote|score,\n\
@@ -198,6 +218,51 @@ fn trace_config(args: &Args) -> Result<Option<Arc<Tracer>>> {
             Tracer::new(sample)
         }
     }))
+}
+
+/// Parse a `--flag P,S,B` triple in premium,standard,batch order;
+/// `None` when absent.  Every entry must satisfy `check`.
+fn class_triple(
+    args: &Args,
+    name: &str,
+    check: fn(f64) -> bool,
+    what: &str,
+) -> Result<Option<[f64; Class::COUNT]>> {
+    let listed = args.f64_list_or(name, &[])?;
+    if listed.is_empty() {
+        return Ok(None);
+    }
+    anyhow::ensure!(
+        listed.len() == Class::COUNT,
+        "--{name} needs {} entries (premium,standard,batch), got {}",
+        Class::COUNT,
+        listed.len()
+    );
+    anyhow::ensure!(
+        listed.iter().all(|v| check(*v)),
+        "--{name} entries must be {what}"
+    );
+    Ok(Some([listed[0], listed[1], listed[2]]))
+}
+
+/// Build the SLO observatory config from `--slo-targets P,S,B` /
+/// `--slo-goal G`; `None` when neither flag is given (a bare
+/// `--slo-goal` uses the default per-class targets).
+fn slo_config(args: &Args) -> Result<Option<SloConfig>> {
+    let targets = class_triple(args, "slo-targets", |t| t > 0.0, "> 0 seconds")?;
+    let goal = args.f64_or("slo-goal", 0.0)?;
+    if targets.is_none() && goal == 0.0 {
+        return Ok(None);
+    }
+    let mut cfg = SloConfig::default();
+    if let Some(t) = targets {
+        cfg.targets_s = t;
+    }
+    if goal > 0.0 {
+        anyhow::ensure!(goal < 1.0, "--slo-goal must be in (0, 1)");
+        cfg.goal = goal;
+    }
+    Ok(Some(cfg))
 }
 
 /// Parse `--tier-gpus v100,a6000,h100`; empty when the flag is absent.
@@ -562,6 +627,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     events_file_sink(args, &metrics, "control")?;
     let tracer = trace_config(args)?;
+    let weights = class_triple(args, "class-weights", |w| w > 0.0, "> 0")?;
+    let slo_cfg = slo_config(args)?;
+    let slo_boost = args.f64_or("slo-boost", 1.0)?;
+    anyhow::ensure!(slo_boost >= 1.0, "--slo-boost must be >= 1.0");
     let pool_cfg = |max_batch: usize, replicas: usize| PoolConfig {
         replicas,
         max_queue,
@@ -569,6 +638,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
         },
+        class_weights: weights,
         ..PoolConfig::default()
     };
     // keep the control loop alive for the lifetime of serve():
@@ -598,7 +668,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 top.sustainable_rps,
                 top.accuracy
             );
-            let cfg = if autoscale {
+            let mut cfg = if autoscale {
                 let budget = args.f64_or("max-dollars-hour", 0.0)?;
                 println!(
                     "autoscale: elastic fleet {min_replicas}..{max_replicas} \
@@ -624,6 +694,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             } else {
                 ControlConfig::gear_plan(plan, ControllerConfig::default())
             };
+            cfg.slo_boost = slo_boost;
             _control = Some(ControlLoop::spawn(
                 Arc::clone(&pool) as Arc<dyn ControlTarget>,
                 cfg,
@@ -641,6 +712,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ))
         }
     };
+    if let Some(sc) = slo_cfg {
+        let goal = sc.goal;
+        pool.attach_slo(SloObservatory::new(sc, &metrics));
+        println!(
+            "slo observatory: per-class books on (goal {goal:.2}{})",
+            if weights.is_some() {
+                ", weighted-fair admission"
+            } else {
+                ""
+            }
+        );
+    }
     println!(
         "serving {suite} on 127.0.0.1:{port} (line-JSON protocol, \
          {} replicas, max-queue {max_queue}/replica)",
@@ -664,7 +747,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// early exits through the next tier, off the critical path), and
 /// `--recalibrate` arms the control loop's drift decider: a tier whose
 /// alarm latches Breach gets its theta re-grounded from the live
-/// windowed estimate.
+/// windowed estimate.  `--slo-targets`/`--slo-goal` attach the SLO
+/// observatory (fleet-level per-class books), `--class-weights` turns
+/// on weighted-fair admission in every tier's pool, and `--slo-boost`
+/// (with a budget) raises the burn cap while premium is breached.
 fn serve_tiered(
     args: &Args,
     suite: &str,
@@ -769,13 +855,17 @@ fn serve_tiered(
     let metrics = Metrics::new();
     events_file_sink(args, &metrics, "control")?;
     let tracer = trace_config(args)?;
+    let weights = class_triple(args, "class-weights", |w| w > 0.0, "> 0")?;
+    let slo_cfg = slo_config(args)?;
+    let slo_boost = args.f64_or("slo-boost", 1.0)?;
+    anyhow::ensure!(slo_boost >= 1.0, "--slo-boost must be >= 1.0");
     let drift_cfg = (shadow_sample > 0).then(|| DriftConfig {
         sample_every: shadow_sample,
         window: drift_window,
         epsilon: drift_epsilon,
         ..DriftConfig::default()
     });
-    let fleet = Arc::new(TieredFleet::spawn_with_drift(
+    let fleet = Arc::new(TieredFleet::spawn_with_slo(
         cascade as Arc<dyn StageClassifier>,
         TieredFleetConfig {
             tiers: specs,
@@ -783,11 +873,24 @@ fn serve_tiered(
                 max_batch,
                 max_wait: Duration::from_millis(max_wait_ms),
             },
+            class_weights: weights,
         },
         Arc::clone(&metrics),
         tracer,
         drift_cfg,
+        slo_cfg,
     )?);
+    if let Some(slo) = fleet.slo() {
+        println!(
+            "slo observatory: per-class books on (goal {:.2}{})",
+            slo.config().goal,
+            if weights.is_some() {
+                ", weighted-fair admission"
+            } else {
+                ""
+            }
+        );
+    }
     if let Some(monitor) = fleet.drift() {
         // the specs carry theta: None (the cascade policy is already
         // calibrated), so ground the theta_cal reference gauges from
@@ -852,6 +955,7 @@ fn serve_tiered(
         let mut control_cfg =
             ControlConfig::tiered(tiers, ControllerConfig::default(), budget);
         control_cfg.recalibrate = recalibrate;
+        control_cfg.slo_boost = slo_boost;
         Some(ControlLoop::spawn(
             Arc::clone(&fleet) as Arc<dyn ControlTarget>,
             control_cfg,
@@ -881,7 +985,8 @@ fn serve_tiered(
 /// with `--traces`, the sampled trace spans grouped per request; with
 /// `--drift`, the drift observatory's per-tier statuses (live
 /// agreement, failure rate vs epsilon, theta_live vs theta_cal, alarm);
-/// with `--prom`, print the Prometheus text exposition INSTEAD of the
+/// with `--slo`, the per-class SLO attainment/burn-alarm table; with
+/// `--prom`, print the Prometheus text exposition INSTEAD of the
 /// pretty snapshot (scrape-friendly: nothing else on stdout).
 fn cmd_stats(args: &Args) -> Result<()> {
     let port = args.u16_or("port", 7878)?;
@@ -928,6 +1033,17 @@ fn cmd_stats(args: &Args) -> Result<()> {
             );
         }
     }
+    if args.flag("slo") {
+        let reply = client.slo()?;
+        let slo = reply.get("slo");
+        println!("{}", slo.to_pretty());
+        if slo.get("classes").as_arr().map(|c| c.len()).unwrap_or(0) == 0 {
+            eprintln!(
+                "(server has no SLO observatory: start it with \
+                 --slo-targets P,S,B)"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -947,8 +1063,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let max_wait_ms = args.u64_or("max-wait-ms", 1)?;
     let burst = args.usize_or("burst", 16)?;
     let seed = args.u64_or("seed", 42)?;
+    let class_mix = class_triple(args, "class-mix", |p| p >= 0.0, ">= 0")?;
     anyhow::ensure!(rate > 0.0, "--rate must be > 0");
     anyhow::ensure!(requests > 0, "--requests must be > 0");
+    if let Some(m) = class_mix {
+        anyhow::ensure!(
+            m.iter().sum::<f64>() > 0.0,
+            "--class-mix must not be all zeros"
+        );
+    }
     let arrival = match args.str_or("arrival", "poisson") {
         "poisson" => Arrival::Poisson { rate },
         "constant" | "uniform" => Arrival::Uniform { rate },
@@ -983,7 +1106,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
          replica(s) x max-queue {max_queue}, est. pool capacity {capacity:.0} rows/s",
         args.str_or("arrival", "poisson"),
     );
-    let report = LoadGen { workers }
+    let report = LoadGen { workers, class_mix }
         .run(&pool, trace, pool.metrics())
         .map_err(|e| anyhow::anyhow!(e))?;
 

@@ -4,9 +4,10 @@
 //! Gauges answer "what is the system doing *now*"; the event log
 //! answers "what did the controller decide, when, and why".  Every
 //! entry records the decision's before/after (gear id, replica count),
-//! which decider produced it (`gear` | `scale` | `budget`), the tier it
-//! acted on, and the trigger that forced it (`rate` | `pressure` |
-//! `slo`).  The
+//! which decider produced it (`gear` | `scale` | `budget` |
+//! `admission`), the tier it acted on, the trigger that forced it
+//! (`rate` | `pressure` | `slo` | `quota`) and -- for class-scoped
+//! actions like quota sheds -- which SLO class it concerned.  The
 //! log renders as JSONL (one JSON object per line) for the wire
 //! `{"cmd":"events"}` command and `repro stats --events`, and can
 //! optionally mirror every record into an append-only JSONL file
@@ -39,6 +40,10 @@ pub enum EventKind {
     Shift,
     /// Replica scale action: `old_replicas != new_replicas`.
     Scale,
+    /// Admission rejection episode (e.g. a class hitting its
+    /// weighted-fair quota, `trigger="quota"`): recorded once per
+    /// pressure episode, not per shed request.
+    Shed,
 }
 
 impl EventKind {
@@ -46,6 +51,7 @@ impl EventKind {
         match self {
             EventKind::Shift => "shift",
             EventKind::Scale => "scale",
+            EventKind::Shed => "shed",
         }
     }
 }
@@ -72,6 +78,11 @@ pub struct EventRecord {
     pub new_gear: usize,
     pub old_replicas: usize,
     pub new_replicas: usize,
+    /// SLO class the action concerned, when class-scoped (quota sheds,
+    /// SLO-boost arbitration).  `None` -- the common case -- is OMITTED
+    /// from the JSON/JSONL forms, so pre-class consumers parse
+    /// unchanged.
+    pub class: Option<&'static str>,
 }
 
 /// One recorded controller decision.
@@ -93,6 +104,8 @@ pub struct Event {
     pub new_gear: usize,
     pub old_replicas: usize,
     pub new_replicas: usize,
+    /// See [`EventRecord::class`]; omitted from JSON when `None`.
+    pub class: Option<&'static str>,
 }
 
 impl Event {
@@ -108,6 +121,9 @@ impl Event {
         o.insert("new_gear", Json::num(self.new_gear as f64));
         o.insert("old_replicas", Json::num(self.old_replicas as f64));
         o.insert("new_replicas", Json::num(self.new_replicas as f64));
+        if let Some(class) = self.class {
+            o.insert("class", Json::str(class));
+        }
         Json::Obj(o)
     }
 }
@@ -171,6 +187,7 @@ impl EventLog {
                 new_gear: r.new_gear,
                 old_replicas: r.old_replicas,
                 new_replicas: r.new_replicas,
+                class: r.class,
             };
             s.next_seq += 1;
             if s.ring.len() >= EVENT_CAPACITY {
@@ -250,6 +267,7 @@ mod tests {
             new_gear: 1,
             old_replicas: 2,
             new_replicas: 2,
+            class: None,
         }
     }
 
@@ -267,6 +285,7 @@ mod tests {
             new_gear: 1,
             old_replicas: 2,
             new_replicas: 4,
+            class: None,
         });
         let events = log.snapshot();
         assert_eq!(events.len(), 2);
@@ -299,6 +318,7 @@ mod tests {
             new_gear: 3,
             old_replicas: 1,
             new_replicas: 1,
+            class: None,
         });
         let arr = log.to_json();
         let first = &arr.as_arr().unwrap()[0];
@@ -318,6 +338,29 @@ mod tests {
             assert!(v.get("decider").as_str().is_some());
             assert!(v.get("tier").as_u64().is_some());
         }
+    }
+
+    #[test]
+    fn class_field_is_omitted_when_absent() {
+        let log = EventLog::default();
+        log.record(rec(EventKind::Shift, "rate"));
+        log.record(EventRecord {
+            kind: EventKind::Shed,
+            decider: "admission",
+            trigger: "quota",
+            class: Some("batch"),
+            ..rec(EventKind::Shed, "quota")
+        });
+        let lines: Vec<String> =
+            log.to_jsonl().lines().map(|l| l.to_string()).collect();
+        // Untagged event: no "class" key at all (pre-class consumers
+        // parse unchanged).
+        assert!(!lines[0].contains("\"class\""));
+        let shed = Json::parse(&lines[1]).unwrap();
+        assert_eq!(shed.get("kind").as_str(), Some("shed"));
+        assert_eq!(shed.get("decider").as_str(), Some("admission"));
+        assert_eq!(shed.get("trigger").as_str(), Some("quota"));
+        assert_eq!(shed.get("class").as_str(), Some("batch"));
     }
 
     #[test]

@@ -30,7 +30,12 @@
 //!
 //! The [`DriftAlarm`] is a hysteresis state machine (a state change
 //! needs `hysteresis` CONSECUTIVE observations of the same candidate
-//! state) so a single unlucky window never flaps the alarm.  On
+//! state) so a single unlucky window never flaps the alarm.  The
+//! shadow rate is *adaptive*: while any tier's published alarm is Warn
+//! or Breach the monitor densifies to `max(1, sample_every / 10)` --
+//! an alarmed window wants evidence faster -- and restores the
+//! configured 1-in-N once every tier is Ok
+//! (`drift_shadow_sample_every` gauges the rate in force).  On
 //! breach, the opt-in control-plane hook (`serve --recalibrate`) calls
 //! [`DriftMonitor::reground`] to re-ground the tier's serving theta
 //! from the live estimate -- recorded in the `EventLog` with
@@ -45,6 +50,7 @@
 //! [`Tracer`]: crate::obs::trace::Tracer
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::calib::threshold::{estimate_theta, CalPoint, ThetaEstimate};
@@ -230,6 +236,13 @@ pub struct DriftMonitor {
     cfg: DriftConfig,
     tiers: Vec<TierDrift>,
     regrounds: Arc<Counter>,
+    /// The shadow rate currently in force (adaptive): while any tier's
+    /// published alarm is Warn or Breach the monitor densifies to
+    /// 1-in-(N/10) to gather evidence faster, restoring the configured
+    /// 1-in-N once every tier is back to Ok.  Atomic so the router's
+    /// hot-path [`DriftMonitor::sampled`] check stays lock-free.
+    effective_every: AtomicU64,
+    effective_gauge: Arc<Gauge>,
 }
 
 impl std::fmt::Debug for DriftMonitor {
@@ -279,10 +292,14 @@ impl DriftMonitor {
                 t
             })
             .collect();
+        let effective_gauge = metrics.gauge("drift_shadow_sample_every");
+        effective_gauge.set(cfg.sample_every as f64);
         Arc::new(DriftMonitor {
             cfg,
             tiers,
             regrounds: metrics.counter("drift_regrounds_total"),
+            effective_every: AtomicU64::new(cfg.sample_every),
+            effective_gauge,
         })
     }
 
@@ -298,13 +315,41 @@ impl DriftMonitor {
 
     /// Deterministic 1-in-N shadow selection -- same idiom as the
     /// request tracer, so a request's shadow fate is reproducible from
-    /// its id alone: 0 never samples, 1 always, else `id % n == 0`.
+    /// its id alone AND the rate in force: 0 never samples, 1 always,
+    /// else `id % n == 0`.  `n` is the *effective* (adaptive) rate, see
+    /// [`DriftMonitor::effective_sample_every`].
     pub fn sampled(&self, id: u64) -> bool {
-        match self.cfg.sample_every {
+        match self.effective_every.load(Ordering::Relaxed) {
             0 => false,
             1 => true,
             n => id % n == 0,
         }
+    }
+
+    /// The shadow rate currently in force: the configured
+    /// `sample_every` while every tier's published alarm is Ok,
+    /// densified to `max(1, sample_every / 10)` while any tier is Warn
+    /// or Breach (an alarmed window wants evidence faster; sampling 0
+    /// -- shadowing disabled -- never densifies).
+    pub fn effective_sample_every(&self) -> u64 {
+        self.effective_every.load(Ordering::Relaxed)
+    }
+
+    /// Re-derive the effective shadow rate from the published per-tier
+    /// alarm gauges (lock-free reads; called after every alarm-moving
+    /// update).
+    fn retune_sample_rate(&self) {
+        if self.cfg.sample_every <= 1 {
+            return; // 0 = disabled, 1 already maximal
+        }
+        let alarmed = self.tiers.iter().any(|t| t.alarm_gauge.get() > 0.0);
+        let target = if alarmed {
+            (self.cfg.sample_every / 10).max(1)
+        } else {
+            self.cfg.sample_every
+        };
+        self.effective_every.store(target, Ordering::Relaxed);
+        self.effective_gauge.set(target as f64);
     }
 
     /// Seed (or correct) a monitored tier's calibrated-theta reference
@@ -363,6 +408,7 @@ impl DriftMonitor {
             f64::NAN
         });
         td.alarm_gauge.set(published.level() as f64);
+        self.retune_sample_rate();
     }
 
     /// The live picture for one monitored tier (None for the final
@@ -425,6 +471,7 @@ impl DriftMonitor {
         td.theta_live_gauge.set(f64::NAN);
         td.failure_gauge.set(0.0);
         td.alarm_gauge.set(0.0);
+        self.retune_sample_rate();
         self.regrounds.inc();
         Some(theta)
     }
@@ -458,6 +505,10 @@ impl DriftMonitor {
         let mut o = JsonObj::new();
         o.insert("tiers", Json::Arr(tiers));
         o.insert("sample_every", Json::num(self.cfg.sample_every as f64));
+        o.insert(
+            "effective_sample_every",
+            Json::num(self.effective_sample_every() as f64),
+        );
         o.insert("regrounds", Json::num(self.regrounds.get() as f64));
         Json::Obj(o)
     }
@@ -557,6 +608,43 @@ mod tests {
         }
         assert!(!monitor(DriftConfig { sample_every: 0, ..cfg }).sampled(0));
         assert!(monitor(DriftConfig { sample_every: 1, ..cfg }).sampled(7));
+    }
+
+    #[test]
+    fn shadow_rate_densifies_on_warn_and_restores_on_ok() {
+        let cfg = DriftConfig {
+            sample_every: 100,
+            window: 64,
+            epsilon: 0.05,
+            breach_mult: 10.0,
+            hysteresis: 1,
+            min_samples: 10,
+        };
+        let m = monitor(cfg);
+        assert_eq!(m.effective_sample_every(), 100);
+        // failure ~0.1: above epsilon, under the (10x) breach line -> Warn
+        for i in 0..100u64 {
+            m.record(0, pt(0.9, i % 10 != 0));
+        }
+        assert_eq!(m.status(0).unwrap().alarm, AlarmState::Warn);
+        assert_eq!(m.effective_sample_every(), 10);
+        // densified selection is in force: id 10 now samples
+        assert!(m.sampled(10));
+        assert!(!m.sampled(11));
+        // a clean window brings the alarm AND the rate back down
+        for _ in 0..64 {
+            m.record(0, pt(0.9, true));
+        }
+        assert_eq!(m.status(0).unwrap().alarm, AlarmState::Ok);
+        assert_eq!(m.effective_sample_every(), 100);
+        assert!(!m.sampled(10));
+        // disabled shadowing never densifies
+        let d = monitor(DriftConfig { sample_every: 0, ..cfg });
+        for i in 0..100u64 {
+            d.record(0, pt(0.9, i % 10 != 0));
+        }
+        assert_eq!(d.effective_sample_every(), 0);
+        assert!(!d.sampled(0));
     }
 
     #[test]

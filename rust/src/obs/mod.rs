@@ -27,21 +27,31 @@
 //!   The hot-path contribution is one `id % n` branch; windows and
 //!   estimation live on the shadow worker thread.
 //!
+//! * [`slo`] -- the SLO observatory: per-class (tenant) exactly-once
+//!   books, windowed latency/goodput/attainment gauges
+//!   (`class_{c}_p99_s`, `class_{c}_goodput_rps`,
+//!   `class_{c}_slo_attainment`) and a two-window error-budget
+//!   burn-rate alarm per class riding the same hysteresis machine as
+//!   the drift alarm.  Hot-path contribution: pre-resolved striped
+//!   counters only; all windowed math is refresh-time.
+//!
 //! Wire surface: `{"cmd":"traces"}` (spans grouped per request),
-//! `{"cmd":"drift"}` (per-tier drift statuses) and `repro stats
-//! --traces` / `--drift`; the derived per-tier queue-wait/service-time
-//! histograms and the drift gauges land in the metrics registry and are
-//! scrapeable via `{"cmd":"prom"}`
-//! ([`crate::metrics::Metrics::render_prom`]).
+//! `{"cmd":"drift"}` (per-tier drift statuses), `{"cmd":"slo"}`
+//! (per-class SLO statuses) and `repro stats --traces` / `--drift` /
+//! `--slo`; the derived per-tier queue-wait/service-time histograms and
+//! the drift/SLO gauges land in the metrics registry and are scrapeable
+//! via `{"cmd":"prom"}` ([`crate::metrics::Metrics::render_prom`]).
 
 pub mod drift;
 pub mod sink;
+pub mod slo;
 pub mod trace;
 
 use std::sync::Arc;
 
 pub use drift::{AlarmState, DriftAlarm, DriftConfig, DriftMonitor, DriftStatus};
 pub use sink::JsonlSink;
+pub use slo::{SloConfig, SloObservatory, SloStatus};
 pub use trace::{SpanKind, SpanRecord, Tracer, TRACE_RING_CAPACITY};
 
 /// How a serving component reports into the tracing layer.  Cloned into

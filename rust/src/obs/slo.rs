@@ -1,0 +1,638 @@
+//! SLO observatory: per-class (tenant) telemetry and error-budget
+//! burn-rate alarms.
+//!
+//! Aggregate fleet gauges hide who is being hurt: one bursty tenant's
+//! shedding and latency are invisible inside a fleet-wide p99.  The
+//! observatory keeps, per [`Class`], exactly-once books
+//! (`class_{c}_submitted == class_{c}_completed + class_{c}_shed`,
+//! summing to the fleet identity), a latency histogram read through
+//! *windowed* snapshots (so past overloads cannot latch the published
+//! p99), attainment/goodput gauges, and a two-window **error-budget
+//! burn-rate alarm** per class -- the classic fast/slow pairing: the
+//! fast window catches a cliff in minutes of damage, the slow window
+//! refuses to page on a blip, and both must agree before the raw
+//! verdict says Breach.  Raw verdicts feed the same hysteresis machine
+//! as the drift observatory ([`DriftAlarm`]), so one unlucky window
+//! cannot flap ok -> breach -> ok.
+//!
+//! Hot-path discipline (DESIGN.md §12): the `record_*` methods touch
+//! only pre-resolved counter/histogram handles -- striped atomics, no
+//! registry map locks, no allocation.  All windowed math lives behind
+//! ONE mutex ([`SloObservatory::state`], the single textual lock
+//! acquisition in this file, frozen in
+//! `scripts/hotpath_lock_baseline.txt`), touched only by `refresh` /
+//! `tick` (gauge publication), `status` and the wire `{"cmd":"slo"}`
+//! reader -- never per request.
+//!
+//! Gauges (`class_{c}_p99_s`, `class_{c}_goodput_rps`,
+//! `class_{c}_slo_attainment`, `class_{c}_slo_alarm`) are registered
+//! *lazily*, on the first refresh that sees traffic for the class: a
+//! class that never appears leaves no zero-value series in
+//! `render_prom` / `snapshot_json` (the elided-when-empty contract the
+//! drift gauges also follow).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::metrics::{Counter, Gauge, Histogram, Metrics};
+use crate::obs::drift::{AlarmState, DriftAlarm};
+use crate::types::Class;
+use crate::util::json::{Json, JsonObj};
+
+/// Per-class SLO targets and burn-alarm windows.
+#[derive(Debug, Clone, Copy)]
+pub struct SloConfig {
+    /// Latency SLO per class, indexed by [`Class::index`]: a completed
+    /// request is in-SLO iff `latency_s <= targets_s[class]`.  Shed
+    /// requests are always misses -- a tenant does not care whether the
+    /// deadline died in a queue or at the door.
+    pub targets_s: [f64; Class::COUNT],
+    /// Attainment goal (e.g. 0.95); the error budget is `1 - goal`.
+    pub goal: f64,
+    /// Fast burn window in seconds (catches cliffs).
+    pub fast_window_s: f64,
+    /// Slow burn window in seconds (refuses blips); also bounds the
+    /// sample ring.
+    pub slow_window_s: f64,
+    /// Both windows must burn at or above this multiple of budget for a
+    /// raw Breach verdict; the slow window alone above 1.0 is Warn.
+    pub breach_mult: f64,
+    /// Consecutive same-candidate raw verdicts before the published
+    /// alarm moves (the [`DriftAlarm`] streak).
+    pub hysteresis: usize,
+    /// Below this many requests (completed + shed) in the slow window
+    /// the raw verdict is Ok -- thin evidence never pages.
+    pub min_requests: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            targets_s: [0.05, 0.25, 2.0],
+            goal: 0.95,
+            fast_window_s: 5.0,
+            slow_window_s: 30.0,
+            breach_mult: 2.0,
+            hysteresis: 3,
+            min_requests: 50,
+        }
+    }
+}
+
+/// One class's published picture (counters are cumulative; `p99_s`,
+/// `goodput_rps` and the burns are from the most recent window).
+#[derive(Debug, Clone, Copy)]
+pub struct SloStatus {
+    pub class: Class,
+    pub target_s: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub deferred: u64,
+    pub in_slo: u64,
+    /// Cumulative attainment `in_slo / (completed + shed)`; NaN before
+    /// the class has finished any request.
+    pub attainment: f64,
+    /// Windowed p99 (NaN when the last window held no completions).
+    pub p99_s: f64,
+    /// Completions per second over the last window.
+    pub goodput_rps: f64,
+    /// Budget-burn multiple over the fast window (1.0 = exactly on
+    /// budget).
+    pub fast_burn: f64,
+    /// Budget-burn multiple over the slow window.
+    pub slow_burn: f64,
+    /// Published (hysteresis-latched) alarm state.
+    pub alarm: AlarmState,
+}
+
+/// Pre-resolved hot-path handles for one class.
+struct ClassHandles {
+    submitted: Arc<Counter>,
+    completed: Arc<Counter>,
+    shed: Arc<Counter>,
+    deferred: Arc<Counter>,
+    in_slo: Arc<Counter>,
+    latency: Arc<Histogram>,
+}
+
+/// Lazily-registered gauges for one class (absent until the class has
+/// traffic, so idle classes publish no series).
+struct ClassGauges {
+    p99: Arc<Gauge>,
+    goodput: Arc<Gauge>,
+    attainment: Arc<Gauge>,
+    alarm: Arc<Gauge>,
+}
+
+/// One refresh interval's worth of evidence.
+struct BurnSample {
+    dt_s: f64,
+    /// Requests that reached a terminal fate (completed + shed).
+    events: u64,
+    /// Terminal requests that missed the SLO (late or shed).
+    misses: u64,
+}
+
+struct ClassWindow {
+    prev_hist: Vec<u64>,
+    prev_completed: u64,
+    prev_in_slo: u64,
+    prev_shed: u64,
+    ring: VecDeque<BurnSample>,
+    alarm: DriftAlarm,
+    gauges: Option<ClassGauges>,
+    p99_s: f64,
+    goodput_rps: f64,
+    fast_burn: f64,
+    slow_burn: f64,
+}
+
+struct SloState {
+    classes: Vec<ClassWindow>,
+    last_refresh: Instant,
+}
+
+/// Per-class SLO telemetry; see the module docs.  One lives in the
+/// serving backend's top-level registry (the fleet registry for a
+/// [`crate::coordinator::router::TieredFleet`], the pool registry for a
+/// monolithic [`crate::coordinator::replica::ReplicaPool`]) so the
+/// per-class series ride the existing `stats` / `prom` surfaces.
+pub struct SloObservatory {
+    cfg: SloConfig,
+    handles: Vec<ClassHandles>,
+    metrics: Arc<Metrics>,
+    state: Mutex<SloState>,
+}
+
+impl std::fmt::Debug for SloObservatory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SloObservatory(goal={})", self.cfg.goal)
+    }
+}
+
+/// Minimum wall-clock interval between two `refresh` ticks: several
+/// surfaces (fleet gauge refresh, the wire command, the control loop's
+/// publish) may call `refresh` back to back, and a near-zero window
+/// would feed the burn ring degenerate samples.
+const MIN_REFRESH_DT_S: f64 = 0.05;
+
+impl SloObservatory {
+    /// Build the observatory and pre-resolve every per-class counter
+    /// and histogram into `metrics` (`class_{c}_submitted` etc.), once.
+    pub fn new(cfg: SloConfig, metrics: &Arc<Metrics>) -> Arc<SloObservatory> {
+        let handles = Class::ALL
+            .iter()
+            .map(|c| {
+                let n = c.name();
+                ClassHandles {
+                    submitted: metrics.counter(&format!("class_{n}_submitted")),
+                    completed: metrics.counter(&format!("class_{n}_completed")),
+                    shed: metrics.counter(&format!("class_{n}_shed")),
+                    deferred: metrics.counter(&format!("class_{n}_deferred")),
+                    in_slo: metrics.counter(&format!("class_{n}_in_slo")),
+                    latency: metrics.histogram(&format!("class_{n}_latency_s")),
+                }
+            })
+            .collect();
+        let classes = Class::ALL
+            .iter()
+            .map(|_| ClassWindow {
+                prev_hist: Vec::new(),
+                prev_completed: 0,
+                prev_in_slo: 0,
+                prev_shed: 0,
+                ring: VecDeque::new(),
+                alarm: DriftAlarm::new(cfg.hysteresis),
+                gauges: None,
+                p99_s: f64::NAN,
+                goodput_rps: 0.0,
+                fast_burn: 0.0,
+                slow_burn: 0.0,
+            })
+            .collect();
+        Arc::new(SloObservatory {
+            cfg,
+            handles,
+            metrics: Arc::clone(metrics),
+            state: Mutex::new(SloState {
+                classes,
+                last_refresh: Instant::now(),
+            }),
+        })
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// The ONLY lock acquisition in this file: every windowed-state
+    /// path funnels through here (see the module docs' lock budget).
+    fn state(&self) -> MutexGuard<'_, SloState> {
+        self.state.lock().unwrap()
+    }
+
+    // ----- hot path (atomics only) -------------------------------------
+
+    pub fn record_submitted(&self, class: Class) {
+        self.handles[class.index()].submitted.inc();
+    }
+
+    /// Record a completion; the in-SLO judgement happens here, on the
+    /// hot path, so the windowed attainment needs no latency replay.
+    pub fn record_completed(&self, class: Class, latency_s: f64) {
+        let h = &self.handles[class.index()];
+        h.completed.inc();
+        h.latency.record(latency_s);
+        if latency_s <= self.cfg.targets_s[class.index()] {
+            h.in_slo.inc();
+        }
+    }
+
+    pub fn record_shed(&self, class: Class) {
+        self.handles[class.index()].shed.inc();
+    }
+
+    pub fn record_deferred(&self, class: Class) {
+        self.handles[class.index()].deferred.inc();
+    }
+
+    // ----- windowed refresh (off the hot path) -------------------------
+
+    /// Wall-clock tick: advance the windows by the time elapsed since
+    /// the previous refresh.  No-ops when called again within
+    /// [`MIN_REFRESH_DT_S`], so stacked surfaces cannot shred the ring.
+    pub fn refresh(&self) {
+        let dt_s = {
+            let st = self.state();
+            st.last_refresh.elapsed().as_secs_f64()
+        };
+        if dt_s < MIN_REFRESH_DT_S {
+            return;
+        }
+        self.tick(dt_s);
+    }
+
+    /// Deterministic tick: fold the counter deltas since the last tick
+    /// into one `dt_s`-second burn sample per class, re-derive the
+    /// windowed p99/goodput/burns, step the alarms and publish gauges.
+    /// Tests drive this directly with synthetic dt.
+    pub fn tick(&self, dt_s: f64) {
+        let dt_s = dt_s.max(1e-9);
+        let mut st = self.state();
+        st.last_refresh = Instant::now();
+        for (i, class) in Class::ALL.iter().enumerate() {
+            let h = &self.handles[i];
+            let submitted = h.submitted.get();
+            let completed = h.completed.get();
+            let in_slo = h.in_slo.get();
+            let shed = h.shed.get();
+            let cur_hist = h.latency.bucket_snapshot();
+            let w = &mut st.classes[i];
+
+            let d_completed = completed.saturating_sub(w.prev_completed);
+            let d_in_slo = in_slo.saturating_sub(w.prev_in_slo);
+            let d_shed = shed.saturating_sub(w.prev_shed);
+            let events = d_completed + d_shed;
+            let misses = events.saturating_sub(d_in_slo);
+
+            w.p99_s = if w.prev_hist.is_empty() {
+                Histogram::quantile_between(&vec![0; cur_hist.len()], &cur_hist, 0.99)
+            } else {
+                Histogram::quantile_between(&w.prev_hist, &cur_hist, 0.99)
+            };
+            w.goodput_rps = d_completed as f64 / dt_s;
+            w.prev_hist = cur_hist;
+            w.prev_completed = completed;
+            w.prev_in_slo = in_slo;
+            w.prev_shed = shed;
+
+            w.ring.push_back(BurnSample { dt_s, events, misses });
+            // keep at most slow_window_s of history (always at least
+            // the newest sample)
+            let mut span: f64 = w.ring.iter().map(|s| s.dt_s).sum();
+            while w.ring.len() > 1
+                && span - w.ring.front().map(|s| s.dt_s).unwrap_or(0.0)
+                    >= self.cfg.slow_window_s
+            {
+                span -= w.ring.pop_front().map(|s| s.dt_s).unwrap_or(0.0);
+            }
+
+            let budget = (1.0 - self.cfg.goal).max(1e-9);
+            let burn_over = |window_s: f64| -> (u64, f64) {
+                let mut acc_dt = 0.0;
+                let mut ev = 0u64;
+                let mut miss = 0u64;
+                for s in w.ring.iter().rev() {
+                    if acc_dt >= window_s {
+                        break;
+                    }
+                    acc_dt += s.dt_s;
+                    ev += s.events;
+                    miss += s.misses;
+                }
+                if ev == 0 {
+                    return (0, 0.0);
+                }
+                (ev, (miss as f64 / ev as f64) / budget)
+            };
+            let (_, fast_burn) = burn_over(self.cfg.fast_window_s);
+            let (slow_events, slow_burn) = burn_over(self.cfg.slow_window_s);
+            w.fast_burn = fast_burn;
+            w.slow_burn = slow_burn;
+
+            let raw = if slow_events < self.cfg.min_requests {
+                AlarmState::Ok
+            } else if fast_burn >= self.cfg.breach_mult
+                && slow_burn >= self.cfg.breach_mult
+            {
+                AlarmState::Breach
+            } else if slow_burn > 1.0 {
+                AlarmState::Warn
+            } else {
+                AlarmState::Ok
+            };
+            let published = w.alarm.observe(raw);
+
+            // lazy gauge registration: a class publishes series only
+            // once it has seen traffic
+            if w.gauges.is_none() && submitted > 0 {
+                let n = class.name();
+                w.gauges = Some(ClassGauges {
+                    p99: self.metrics.gauge(&format!("class_{n}_p99_s")),
+                    goodput: self.metrics.gauge(&format!("class_{n}_goodput_rps")),
+                    attainment: self
+                        .metrics
+                        .gauge(&format!("class_{n}_slo_attainment")),
+                    alarm: self.metrics.gauge(&format!("class_{n}_slo_alarm")),
+                });
+            }
+            if let Some(g) = &w.gauges {
+                if w.p99_s.is_finite() {
+                    g.p99.set(w.p99_s);
+                }
+                g.goodput.set(w.goodput_rps);
+                let terminal = completed + shed;
+                if terminal > 0 {
+                    g.attainment.set(in_slo as f64 / terminal as f64);
+                }
+                g.alarm.set(published.level() as f64);
+            }
+        }
+    }
+
+    // ----- readers ------------------------------------------------------
+
+    pub fn status(&self, class: Class) -> SloStatus {
+        let i = class.index();
+        let h = &self.handles[i];
+        let st = self.state();
+        let w = &st.classes[i];
+        let completed = h.completed.get();
+        let shed = h.shed.get();
+        let in_slo = h.in_slo.get();
+        let terminal = completed + shed;
+        SloStatus {
+            class,
+            target_s: self.cfg.targets_s[i],
+            submitted: h.submitted.get(),
+            completed,
+            shed,
+            deferred: h.deferred.get(),
+            in_slo,
+            attainment: if terminal == 0 {
+                f64::NAN
+            } else {
+                in_slo as f64 / terminal as f64
+            },
+            p99_s: w.p99_s,
+            goodput_rps: w.goodput_rps,
+            fast_burn: w.fast_burn,
+            slow_burn: w.slow_burn,
+            alarm: w.alarm.current(),
+        }
+    }
+
+    /// All classes, in [`Class::ALL`] order.
+    pub fn statuses(&self) -> Vec<SloStatus> {
+        Class::ALL.iter().map(|c| self.status(*c)).collect()
+    }
+
+    /// Wire shape for `{"cmd":"slo"}` (non-finite numbers serialize as
+    /// null per the JSON writer's contract).
+    pub fn to_json(&self) -> Json {
+        let classes = self
+            .statuses()
+            .into_iter()
+            .map(|s| {
+                let mut o = JsonObj::new();
+                o.insert("class", Json::str(s.class.name()));
+                o.insert("target_s", Json::num(s.target_s));
+                o.insert("submitted", Json::num(s.submitted as f64));
+                o.insert("completed", Json::num(s.completed as f64));
+                o.insert("shed", Json::num(s.shed as f64));
+                o.insert("deferred", Json::num(s.deferred as f64));
+                o.insert("in_slo", Json::num(s.in_slo as f64));
+                o.insert("attainment", Json::num(s.attainment));
+                o.insert("p99_s", Json::num(s.p99_s));
+                o.insert("goodput_rps", Json::num(s.goodput_rps));
+                o.insert("fast_burn", Json::num(s.fast_burn));
+                o.insert("slow_burn", Json::num(s.slow_burn));
+                o.insert("alarm", Json::str(s.alarm.name()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("classes", Json::Arr(classes));
+        o.insert("goal", Json::num(self.cfg.goal));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloConfig {
+        SloConfig {
+            targets_s: [0.05, 0.25, 2.0],
+            goal: 0.9,
+            fast_window_s: 2.0,
+            slow_window_s: 10.0,
+            breach_mult: 2.0,
+            hysteresis: 2,
+            min_requests: 4,
+        }
+    }
+
+    #[test]
+    fn empty_class_window_is_nan_and_elides_gauges() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        slo.tick(1.0);
+        for s in slo.statuses() {
+            assert!(s.p99_s.is_nan(), "{:?}", s.class);
+            assert!(s.attainment.is_nan());
+            assert_eq!(s.goodput_rps, 0.0);
+            assert_eq!(s.alarm, AlarmState::Ok);
+        }
+        // no traffic -> no gauges registered at all: the prom / stats
+        // surfaces stay free of zero-value class series
+        let prom = metrics.render_prom();
+        assert!(!prom.contains("class_premium_slo_attainment"), "{prom}");
+        assert!(!prom.contains("class_batch_p99_s"), "{prom}");
+        // counters ARE pre-resolved (hot-path handles) and render as 0
+        assert!(prom.contains("class_premium_submitted 0"), "{prom}");
+    }
+
+    #[test]
+    fn attainment_counts_sheds_as_misses() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        for _ in 0..8 {
+            slo.record_submitted(Class::Premium);
+        }
+        for _ in 0..6 {
+            slo.record_completed(Class::Premium, 0.01); // in SLO
+        }
+        slo.record_completed(Class::Premium, 1.0); // late
+        slo.record_shed(Class::Premium);
+        slo.tick(1.0);
+        let s = slo.status(Class::Premium);
+        assert_eq!((s.submitted, s.completed, s.shed), (8, 7, 1));
+        assert_eq!(s.in_slo, 6);
+        assert!((s.attainment - 0.75).abs() < 1e-12, "{}", s.attainment);
+        // exactly-once: submitted == completed + shed
+        assert_eq!(s.submitted, s.completed + s.shed);
+        // gauges registered now, and agree with the status
+        let prom = metrics.render_prom();
+        assert!(prom.contains("class_premium_slo_attainment 0.75"), "{prom}");
+    }
+
+    #[test]
+    fn burn_alarm_latches_breach_and_recovers_with_hysteresis() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        // all-miss traffic: burn = (1.0 miss rate) / 0.1 budget = 10x
+        let feed_bad = |slo: &SloObservatory| {
+            for _ in 0..10 {
+                slo.record_shed(Class::Premium);
+            }
+            slo.tick(1.0);
+        };
+        feed_bad(&slo);
+        // raw Breach but hysteresis=2 holds the published state at Ok
+        assert_eq!(slo.status(Class::Premium).alarm, AlarmState::Ok);
+        feed_bad(&slo);
+        assert_eq!(slo.status(Class::Premium).alarm, AlarmState::Breach);
+        assert!(slo.status(Class::Premium).fast_burn >= 2.0);
+        // recovery: all-good traffic must outweigh the slow window's
+        // remembered misses before the raw verdict drops, then the
+        // streak must fill before the published state moves
+        let feed_good = |slo: &SloObservatory| {
+            for _ in 0..400 {
+                slo.record_completed(Class::Premium, 0.01);
+            }
+            slo.tick(4.0);
+        };
+        feed_good(&slo);
+        assert_eq!(
+            slo.status(Class::Premium).alarm,
+            AlarmState::Breach,
+            "one good window must not clear a latched breach"
+        );
+        feed_good(&slo);
+        feed_good(&slo);
+        assert_eq!(slo.status(Class::Premium).alarm, AlarmState::Ok);
+    }
+
+    #[test]
+    fn thin_evidence_never_pages() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        // 3 sheds < min_requests 4: raw verdict stays Ok forever
+        for _ in 0..3 {
+            slo.record_shed(Class::Batch);
+        }
+        for _ in 0..10 {
+            slo.tick(0.5);
+        }
+        assert_eq!(slo.status(Class::Batch).alarm, AlarmState::Ok);
+    }
+
+    #[test]
+    fn windowed_p99_recovers_after_an_overload() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        for _ in 0..100 {
+            slo.record_completed(Class::Standard, 5.0); // terrible
+        }
+        slo.tick(1.0);
+        assert!(slo.status(Class::Standard).p99_s > 1.0);
+        for _ in 0..100 {
+            slo.record_completed(Class::Standard, 0.01);
+        }
+        slo.tick(1.0);
+        let p99 = slo.status(Class::Standard).p99_s;
+        assert!(p99 < 0.1, "windowed p99 latched the overload: {p99}");
+        // and an empty follow-up window is NaN, gauge keeps last value
+        slo.tick(1.0);
+        assert!(slo.status(Class::Standard).p99_s.is_nan());
+    }
+
+    #[test]
+    fn concurrent_multi_class_books_are_exactly_once() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let slo = Arc::clone(&slo);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let class = Class::ALL[(t + i as usize) % Class::COUNT];
+                        slo.record_submitted(class);
+                        if i % 5 == 0 {
+                            slo.record_shed(class);
+                        } else {
+                            slo.record_completed(class, 0.01);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        slo.tick(1.0);
+        let mut total_sub = 0;
+        let mut total_term = 0;
+        for s in slo.statuses() {
+            assert_eq!(s.submitted, s.completed + s.shed, "{:?}", s.class);
+            total_sub += s.submitted;
+            total_term += s.completed + s.shed;
+        }
+        assert_eq!(total_sub, 8 * 500);
+        assert_eq!(total_sub, total_term);
+    }
+
+    #[test]
+    fn to_json_shape() {
+        let metrics = Metrics::new();
+        let slo = SloObservatory::new(cfg(), &metrics);
+        slo.record_submitted(Class::Premium);
+        slo.record_completed(Class::Premium, 0.01);
+        slo.tick(1.0);
+        // roundtrip through the writer: NaN fields must serialize as
+        // null (the wire contract `{"cmd":"slo"}` relies on)
+        let j = Json::parse(&slo.to_json().to_string()).unwrap();
+        let classes = j.get("classes").as_arr().unwrap();
+        assert_eq!(classes.len(), Class::COUNT);
+        assert_eq!(classes[0].get("class").as_str(), Some("premium"));
+        assert_eq!(classes[0].get("completed").as_u64(), Some(1));
+        assert_eq!(classes[0].get("alarm").as_str(), Some("ok"));
+        // the untouched batch class serialized its NaN attainment as null
+        assert!(classes[2].get("attainment").as_f64().is_none());
+        assert!((j.get("goal").as_f64().unwrap() - 0.9).abs() < 1e-12);
+    }
+}

@@ -77,6 +77,11 @@ pub struct SpanRecord {
     pub ts_s: f64,
     /// Measured duration (0 for point markers like `Enqueue`).
     pub dur_s: f64,
+    /// SLO class of the request, recorded on terminal spans so a trace
+    /// carries its tenant.  `None` (the pre-class default and the
+    /// non-terminal hops) is omitted from JSON -- existing consumers
+    /// parse unchanged.
+    pub class: Option<&'static str>,
 }
 
 impl SpanRecord {
@@ -87,6 +92,9 @@ impl SpanRecord {
         o.insert("tier", Json::num(self.tier as f64));
         o.insert("ts_s", Json::num(self.ts_s));
         o.insert("dur_s", Json::num(self.dur_s));
+        if let Some(class) = self.class {
+            o.insert("class", Json::str(class));
+        }
         Json::Obj(o)
     }
 }
@@ -167,12 +175,26 @@ impl Tracer {
     /// Record one span.  Callers gate on [`Tracer::sampled`] first; the
     /// cost is one atomic bump + one (uncontended) slot lock.
     pub fn record(&self, request_id: u64, kind: SpanKind, tier: usize, dur_s: f64) {
+        self.record_with_class(request_id, kind, tier, dur_s, None);
+    }
+
+    /// [`Tracer::record`] carrying the request's SLO class (terminal
+    /// spans: shed / complete).
+    pub fn record_with_class(
+        &self,
+        request_id: u64,
+        kind: SpanKind,
+        tier: usize,
+        dur_s: f64,
+        class: Option<&'static str>,
+    ) {
         let span = SpanRecord {
             request_id,
             kind,
             tier,
             ts_s: self.now_s(),
             dur_s,
+            class,
         };
         if let Some(sink) = &self.sink {
             sink.append(&span.to_json().to_string());
@@ -236,6 +258,9 @@ impl Tracer {
                                     so.insert("tier", Json::num(s.tier as f64));
                                     so.insert("ts_s", Json::num(s.ts_s));
                                     so.insert("dur_s", Json::num(s.dur_s));
+                                    if let Some(class) = s.class {
+                                        so.insert("class", Json::str(class));
+                                    }
                                     Json::Obj(so)
                                 })
                                 .collect(),
@@ -346,5 +371,23 @@ mod tests {
         assert_eq!(v.get("request_id").as_u64(), Some(3));
         assert_eq!(v.get("kind").as_str(), Some("shed"));
         assert_eq!(v.get("tier").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn class_rides_terminal_spans_and_is_omitted_elsewhere() {
+        let t = Tracer::new(1);
+        t.record(5, SpanKind::Enqueue, 0, 0.0);
+        t.record_with_class(5, SpanKind::Complete, 1, 0.004, Some("premium"));
+        let spans = t.snapshot();
+        assert_eq!(spans[0].class, None);
+        assert_eq!(spans[1].class, Some("premium"));
+        // JSON: class only where tagged
+        assert!(!spans[0].to_json().to_string().contains("\"class\""));
+        assert_eq!(spans[1].to_json().get("class").as_str(), Some("premium"));
+        let traces = t.snapshot_traces();
+        let inner = traces.as_arr().unwrap()[0].get("spans");
+        let inner = inner.as_arr().unwrap();
+        assert!(!inner[0].to_string().contains("\"class\""));
+        assert_eq!(inner[1].get("class").as_str(), Some("premium"));
     }
 }

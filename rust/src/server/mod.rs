@@ -39,8 +39,24 @@
 //!                                   theta; empty with the same shape
 //!                                   when shadow sampling is off -- see
 //!                                   `serve --tiered --shadow-sample`)
+//! -> {"cmd": "slo"}
+//! <- {"slo": {"classes": [{"class":"premium","target_s":0.05,
+//!     "submitted":40,"completed":38,"shed":2,"deferred":11,
+//!     "in_slo":37,"attainment":0.925,"p99_s":0.021,
+//!     "goodput_rps":12.5,"fast_burn":1.5,"slow_burn":0.9,
+//!     "alarm":"ok"}, ...], "goal": 0.95}}
+//!                                  (the SLO observatory: per-class
+//!                                   ledgers, windowed p99/goodput and
+//!                                   burn-rate alarms; empty with the
+//!                                   same shape when no observatory is
+//!                                   attached -- see `serve --slo-goal`)
 //! -> {"cmd": "shutdown"}           (stops accepting; drains in-flight)
 //! ```
+//!
+//! Infer lines MAY carry an SLO class tag
+//! (`{"id":1,"features":[...],"class":"premium"}`); untagged lines
+//! default to `standard`, keeping the pre-class wire shape
+//! byte-compatible.
 //!
 //! When the pool serves under a gear plan (`serve --plan`), verdict
 //! replies additionally carry `"gear": <ladder index>` -- the gear
@@ -95,12 +111,12 @@ use anyhow::Result;
 use crate::coordinator::replica::{PoolError, ReplicaPool};
 use crate::coordinator::router::TieredFleet;
 use crate::metrics::Metrics;
-use crate::obs::{DriftMonitor, Tracer};
-use crate::types::{Request, Verdict};
+use crate::obs::{DriftMonitor, SloObservatory, Tracer};
+use crate::types::{Class, Request, Verdict};
 use proto::{
     parse_request_line, render_drift, render_error, render_events,
-    render_metrics, render_overloaded, render_prom_reply, render_stats,
-    render_traces, render_verdict,
+    render_metrics, render_overloaded, render_prom_reply, render_slo,
+    render_stats, render_traces, render_verdict,
 };
 
 /// How long a handler blocks in `read` before re-checking the stop flag.
@@ -134,6 +150,11 @@ pub trait InferBackend: Send + Sync {
     fn drift(&self) -> Option<&Arc<DriftMonitor>> {
         None
     }
+    /// The attached SLO observatory, when per-class telemetry is
+    /// enabled; `{"cmd":"slo"}` renders from it.
+    fn slo(&self) -> Option<&Arc<SloObservatory>> {
+        None
+    }
 }
 
 impl InferBackend for ReplicaPool {
@@ -149,8 +170,18 @@ impl InferBackend for ReplicaPool {
         self.gear().map(|h| h.gear_id())
     }
 
+    fn publish(&self) {
+        if let Some(slo) = ReplicaPool::slo(self) {
+            slo.refresh();
+        }
+    }
+
     fn tracer(&self) -> Option<&Arc<Tracer>> {
         ReplicaPool::tracer(self)
+    }
+
+    fn slo(&self) -> Option<&Arc<SloObservatory>> {
+        ReplicaPool::slo(self)
     }
 }
 
@@ -173,6 +204,10 @@ impl InferBackend for TieredFleet {
 
     fn drift(&self) -> Option<&Arc<DriftMonitor>> {
         TieredFleet::drift(self)
+    }
+
+    fn slo(&self) -> Option<&Arc<SloObservatory>> {
+        TieredFleet::slo(self)
     }
 }
 
@@ -299,6 +334,12 @@ fn handle_conn(
             Ok(proto::Incoming::Drift) => {
                 writeln!(writer, "{}", render_drift(pool.drift()))?;
             }
+            Ok(proto::Incoming::Slo) => {
+                // publish first so the windowed p99/burn gauges in the
+                // reply are no staler than one refresh interval
+                pool.publish();
+                writeln!(writer, "{}", render_slo(pool.slo()))?;
+            }
             Ok(proto::Incoming::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 writeln!(writer, "{}", r#"{"ok":true,"shutdown":true}"#)?;
@@ -346,15 +387,30 @@ impl Client {
 
     /// Send one inference request and parse the reply, surfacing
     /// admission-control sheds as [`InferReply::Overloaded`] rather
-    /// than as errors.
+    /// than as errors.  Untagged: the server books it as `standard`.
     pub fn infer_reply(&mut self, id: u64, features: &[f32]) -> Result<InferReply> {
+        self.infer_reply_class(id, features, None)
+    }
+
+    /// [`Client::infer_reply`] with an explicit SLO class tag; `None`
+    /// sends the untagged (pre-class) line shape.
+    pub fn infer_reply_class(
+        &mut self,
+        id: u64,
+        features: &[f32],
+        class: Option<Class>,
+    ) -> Result<InferReply> {
         let feats = features
             .iter()
             .map(|f| format!("{f}"))
             .collect::<Vec<_>>()
             .join(",");
-        let reply =
-            self.roundtrip(&format!(r#"{{"id":{id},"features":[{feats}]}}"#))?;
+        let tag = match class {
+            Some(c) => format!(r#","class":"{}""#, c.name()),
+            None => String::new(),
+        };
+        let reply = self
+            .roundtrip(&format!(r#"{{"id":{id},"features":[{feats}]{tag}}}"#))?;
         let v = crate::util::json::Json::parse(&reply)
             .map_err(|e| anyhow::anyhow!("bad reply {reply:?}: {e}"))?;
         if v.get("overloaded").as_bool() == Some(true) {
@@ -455,6 +511,19 @@ impl Client {
         anyhow::ensure!(
             v.get("drift").as_obj().is_some(),
             "drift reply missing 'drift' object: {reply}"
+        );
+        Ok(v)
+    }
+
+    /// Fetch the SLO observatory snapshot (`{"cmd":"slo"}`): per-class
+    /// ledgers, windowed p99/goodput and burn-rate alarm states.
+    pub fn slo(&mut self) -> Result<crate::util::json::Json> {
+        let reply = self.roundtrip(r#"{"cmd":"slo"}"#)?;
+        let v = crate::util::json::Json::parse(&reply)
+            .map_err(|e| anyhow::anyhow!("bad slo reply {reply:?}: {e}"))?;
+        anyhow::ensure!(
+            v.get("slo").as_obj().is_some(),
+            "slo reply missing 'slo' object: {reply}"
         );
         Ok(v)
     }

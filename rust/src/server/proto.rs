@@ -3,8 +3,8 @@
 use std::sync::Arc;
 
 use crate::metrics::Metrics;
-use crate::obs::{DriftMonitor, Tracer};
-use crate::types::{Request, Verdict};
+use crate::obs::{DriftMonitor, SloObservatory, Tracer};
+use crate::types::{Class, Request, Verdict};
 use crate::util::json::{Json, JsonObj};
 
 /// A parsed inbound line.
@@ -17,6 +17,7 @@ pub enum Incoming {
     Prom,
     Traces,
     Drift,
+    Slo,
     Shutdown,
 }
 
@@ -31,6 +32,7 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
             "prom" => Ok(Incoming::Prom),
             "traces" => Ok(Incoming::Traces),
             "drift" => Ok(Incoming::Drift),
+            "slo" => Ok(Incoming::Slo),
             "shutdown" => Ok(Incoming::Shutdown),
             other => Err(format!("unknown cmd {other:?}")),
         };
@@ -50,7 +52,16 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
     if features.is_empty() {
         return Err("empty features".to_string());
     }
-    Ok(Incoming::Infer(Request { id, features, arrival_s: 0.0 }))
+    // optional SLO class tag; absent keeps the pre-class wire shape
+    // (and the Standard default) byte-compatible
+    let class = match v.get("class") {
+        Json::Null => Class::Standard,
+        j => {
+            let s = j.as_str().ok_or_else(|| "non-string 'class'".to_string())?;
+            Class::parse(s).ok_or_else(|| format!("unknown class {s:?}"))?
+        }
+    };
+    Ok(Incoming::Infer(Request { id, features, arrival_s: 0.0, class }))
 }
 
 /// Render a verdict reply line.  `gear` is the active gear's ladder
@@ -175,6 +186,27 @@ pub fn render_drift(monitor: Option<&Arc<DriftMonitor>>) -> String {
     Json::Obj(obj).to_string()
 }
 
+/// Render the SLO observatory snapshot (`{"cmd":"slo"}` reply): the
+/// per-class ledgers, windowed p99/goodput, burn rates and alarm
+/// states.  A deployment without an observatory answers the same
+/// shape, empty (`classes: []`, `goal: 0`).  NaN quantiles (an empty
+/// class window) render as JSON null.
+pub fn render_slo(slo: Option<&Arc<SloObservatory>>) -> String {
+    let mut obj = JsonObj::new();
+    match slo {
+        Some(s) => {
+            obj.insert("slo", s.to_json());
+        }
+        None => {
+            let mut empty = JsonObj::new();
+            empty.insert("classes", Json::Arr(Vec::new()));
+            empty.insert("goal", Json::num(0.0));
+            obj.insert("slo", Json::Obj(empty));
+        }
+    }
+    Json::Obj(obj).to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,9 +218,30 @@ mod tests {
             Incoming::Infer(r) => {
                 assert_eq!(r.id, 7);
                 assert_eq!(r.features, vec![1.5, -2.0]);
+                assert_eq!(r.class, Class::Standard, "untagged defaults");
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn parse_infer_line_with_class_tag() {
+        let inc =
+            parse_request_line(r#"{"id": 7, "features": [1.0], "class": "batch"}"#)
+                .unwrap();
+        match inc {
+            Incoming::Infer(r) => assert_eq!(r.class, Class::Batch),
+            _ => panic!("wrong variant"),
+        }
+        // unknown class strings are an error, not a silent default
+        assert!(
+            parse_request_line(r#"{"id": 7, "features": [1.0], "class": "gold"}"#)
+                .is_err()
+        );
+        assert!(
+            parse_request_line(r#"{"id": 7, "features": [1.0], "class": 3}"#)
+                .is_err()
+        );
     }
 
     #[test]
@@ -218,6 +271,10 @@ mod tests {
             Incoming::Drift
         ));
         assert!(matches!(
+            parse_request_line(r#"{"cmd": "slo"}"#).unwrap(),
+            Incoming::Slo
+        ));
+        assert!(matches!(
             parse_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
             Incoming::Shutdown
         ));
@@ -236,6 +293,7 @@ mod tests {
             new_gear: 1,
             old_replicas: 2,
             new_replicas: 2,
+            class: None,
         });
         m.events().record(EventRecord {
             kind: EventKind::Scale,
@@ -246,6 +304,7 @@ mod tests {
             new_gear: 1,
             old_replicas: 2,
             new_replicas: 4,
+            class: None,
         });
         let line = render_events(&m);
         let parsed = Json::parse(&line).unwrap();
@@ -394,6 +453,33 @@ mod tests {
         assert!(tiers[1].get("theta_live").as_f64().is_none());
         assert!(tiers[1].get("theta_cal").as_f64().is_none());
         assert_eq!(tiers[1].get("failure_rate").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn slo_line_shape_with_and_without_observatory() {
+        use crate::obs::slo::SloConfig;
+        // no observatory: same shape, empty
+        let parsed = Json::parse(&render_slo(None)).unwrap();
+        let slo = parsed.get("slo");
+        assert_eq!(slo.get("classes").as_arr().unwrap().len(), 0);
+        assert_eq!(slo.get("goal").as_f64(), Some(0.0));
+        // with one: all classes in index order, ledgers attached
+        let m = Metrics::new();
+        let obs = SloObservatory::new(SloConfig::default(), &m);
+        obs.record_submitted(Class::Premium);
+        obs.record_completed(Class::Premium, 0.01);
+        obs.tick(1.0);
+        let parsed = Json::parse(&render_slo(Some(&obs))).unwrap();
+        let slo = parsed.get("slo");
+        let classes = slo.get("classes").as_arr().unwrap();
+        assert_eq!(classes.len(), Class::COUNT);
+        assert_eq!(classes[0].get("class").as_str(), Some("premium"));
+        assert_eq!(classes[0].get("submitted").as_u64(), Some(1));
+        assert_eq!(classes[0].get("alarm").as_str(), Some("ok"));
+        // an idle class rides the same line with null quantiles
+        assert_eq!(classes[2].get("class").as_str(), Some("batch"));
+        assert!(classes[2].get("p99_s").as_f64().is_none());
+        assert_eq!(slo.get("goal").as_f64(), Some(0.95));
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::coordinator::replica::{PoolError, ReplicaPool};
 use crate::coordinator::router::TieredFleet;
 use crate::metrics::{Histogram, Metrics};
 use crate::server::{Client, InferReply};
-use crate::types::{Request, Verdict};
+use crate::types::{Class, Request, Verdict};
 use crate::util::json::{Json, JsonObj};
 
 pub use synthetic::{StagedSynthetic, SyntheticClassifier};
@@ -117,8 +117,12 @@ struct TcpSession(Client);
 impl LoadSession for TcpSession {
     fn call(&mut self, request: Request) -> Result<CallOutcome, String> {
         // the wire protocol lives in server::Client; this is just the
-        // outcome mapping
-        match self.0.infer_reply(request.id, &request.features) {
+        // outcome mapping (the class tag rides the infer line)
+        match self.0.infer_reply_class(
+            request.id,
+            &request.features,
+            Some(request.class),
+        ) {
             Ok(InferReply::Verdict(v)) => Ok(CallOutcome::Done(v)),
             Ok(InferReply::Overloaded { .. }) => Ok(CallOutcome::Shed),
             Err(e) => Err(format!("{e:#}")),
@@ -131,12 +135,37 @@ impl LoadSession for TcpSession {
 pub struct LoadGen {
     /// Concurrent in-flight request slots (worker threads).
     pub workers: usize,
+    /// SLO-class mix (fractions by [`Class::index`], e.g.
+    /// `[0.7, 0.2, 0.1]` = 70% premium / 20% standard / 10% batch),
+    /// realized deterministically per request id by
+    /// [`class_for_mix`]; `None` sends everything untagged (standard).
+    pub class_mix: Option<[f64; Class::COUNT]>,
 }
 
 impl Default for LoadGen {
     fn default() -> Self {
-        LoadGen { workers: 64 }
+        LoadGen { workers: 64, class_mix: None }
     }
+}
+
+/// Deterministic class assignment for request `i` under `mix`: the id
+/// is mapped through a 100-slot wheel permuted by a stride coprime to
+/// 100, so every 100 consecutive ids realize the (percent-resolution)
+/// mix exactly while the classes stay interleaved rather than arriving
+/// in class-sorted bursts.  Replaying the same trace therefore tags the
+/// same requests identically -- class assignment is part of the
+/// schedule, not of the run.
+pub fn class_for_mix(mix: &[f64; Class::COUNT], i: u64) -> Class {
+    let total: f64 = mix.iter().map(|w| w.max(0.0)).sum::<f64>().max(1e-12);
+    let slot = (i.wrapping_mul(37) % 100) as f64 / 100.0;
+    let mut acc = 0.0;
+    for c in Class::ALL {
+        acc += mix[c.index()].max(0.0) / total;
+        if slot < acc {
+            return c;
+        }
+    }
+    Class::Batch // rounding tail (acc summed to just under 1.0)
 }
 
 /// Aggregate result of one load-generation run.
@@ -224,6 +253,7 @@ impl LoadGen {
 
         let (tx, rx) = channel::<(usize, Instant)>();
         let rx = Arc::new(Mutex::new(rx));
+        let class_mix = self.class_mix;
         let mut joins = Vec::with_capacity(workers);
         for w in 0..workers {
             let mut session = target
@@ -254,6 +284,9 @@ impl LoadGen {
                             id: i as u64,
                             features: trace.row(i).to_vec(),
                             arrival_s: trace.arrivals[i],
+                            class: class_mix
+                                .map(|m| class_for_mix(&m, i as u64))
+                                .unwrap_or_default(),
                         };
                         match session.call(request) {
                             Ok(CallOutcome::Done(_)) => {
@@ -348,7 +381,7 @@ mod tests {
         ));
         let trace = Arc::new(Trace::synth(Arrival::Uniform { rate: 500.0 }, 100, 3, 4));
         let metrics = Metrics::new();
-        let report = LoadGen { workers: 16 }
+        let report = LoadGen { workers: 16, class_mix: None }
             .run(&pool, Arc::clone(&trace), &metrics)
             .unwrap();
         assert_eq!(report.n, 100);
@@ -360,5 +393,26 @@ mod tests {
         assert_eq!(metrics.counter("loadgen_done").get(), 100);
         assert_eq!(metrics.histogram("loadgen_e2e_s").count(), 100);
         assert_eq!(pool.total_outstanding(), 0);
+    }
+
+    #[test]
+    fn class_mix_is_exact_per_hundred_and_interleaved() {
+        let mix = [0.7, 0.2, 0.1];
+        let mut counts = [0usize; Class::COUNT];
+        for i in 0..200u64 {
+            counts[class_for_mix(&mix, i).index()] += 1;
+        }
+        assert_eq!(counts, [140, 40, 20], "exact per 100-block");
+        // deterministic: the same id always lands in the same class
+        assert_eq!(class_for_mix(&mix, 42), class_for_mix(&mix, 42));
+        // interleaved, not class-sorted bursts: the first 10 ids must
+        // already touch more than one class under a 70/20/10 mix
+        let first: std::collections::HashSet<usize> =
+            (0..10).map(|i| class_for_mix(&mix, i).index()).collect();
+        assert!(first.len() > 1, "first 10 ids all one class");
+        // a degenerate one-class mix tags everything that class
+        for i in 0..50 {
+            assert_eq!(class_for_mix(&[0.0, 0.0, 1.0], i), Class::Batch);
+        }
     }
 }

@@ -18,6 +18,57 @@ pub const UTIL_LOW_WATERMARK: f64 = 0.60;
 /// A class label.
 pub type Label = u32;
 
+/// SLO class a request belongs to (the tenant taxonomy of the SLO
+/// observatory).  Three fixed classes keep the per-class bookkeeping
+/// arrays `[_; Class::COUNT]` -- no allocation, no string interning on
+/// the hot path -- while covering the spectrum that matters for
+/// weighted-fair admission: `Premium` (tight SLO, protected share),
+/// `Standard` (the default for untagged traffic, so the single-class
+/// path is byte-identical to the historical untagged one) and `Batch`
+/// (best-effort; first to shed under quota pressure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Class {
+    Premium,
+    #[default]
+    Standard,
+    Batch,
+}
+
+impl Class {
+    /// Number of classes (sizes per-class bookkeeping arrays).
+    pub const COUNT: usize = 3;
+
+    /// All classes in index order ([`Class::index`] positions).
+    pub const ALL: [Class; Class::COUNT] =
+        [Class::Premium, Class::Standard, Class::Batch];
+
+    /// Stable array index (`Class::ALL[c.index()] == c`).
+    pub fn index(&self) -> usize {
+        match self {
+            Class::Premium => 0,
+            Class::Standard => 1,
+            Class::Batch => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Class::Premium => "premium",
+            Class::Standard => "standard",
+            Class::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Class> {
+        match s {
+            "premium" => Some(Class::Premium),
+            "standard" => Some(Class::Standard),
+            "batch" => Some(Class::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One inference request flowing through the serving stack.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -26,6 +77,8 @@ pub struct Request {
     pub features: Vec<f32>,
     /// Arrival time in seconds since run start (workload-generator time).
     pub arrival_s: f64,
+    /// SLO class; untagged wire requests default to [`Class::Standard`].
+    pub class: Class,
 }
 
 /// The deferral decision a tier made for one sample.
@@ -126,6 +179,16 @@ mod tests {
         assert_eq!(RuleKind::parse("score"), Some(RuleKind::MeanScore));
         assert_eq!(RuleKind::parse("zz"), None);
         assert_eq!(RuleKind::Vote.name(), "vote");
+    }
+
+    #[test]
+    fn class_roundtrips_and_indexes() {
+        for (i, c) in Class::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(Class::parse(c.name()), Some(*c));
+        }
+        assert_eq!(Class::parse("zz"), None);
+        assert_eq!(Class::default(), Class::Standard);
     }
 
     #[test]

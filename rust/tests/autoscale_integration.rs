@@ -32,7 +32,7 @@ use abc_serve::data::workload::Arrival;
 use abc_serve::metrics::Metrics;
 use abc_serve::planner::{Gear, GearHandle, GearPlan};
 use abc_serve::trafficgen::{LoadGen, SyntheticClassifier, Trace};
-use abc_serve::types::Request;
+use abc_serve::types::{Class, Request};
 
 const DIM: usize = 4;
 const MAX_BATCH: usize = 8;
@@ -150,6 +150,7 @@ fn drain_churn_accounts_every_request_exactly_once() {
                         id,
                         features: vec![0.5; DIM],
                         arrival_s: 0.0,
+                        class: Class::Standard,
                     };
                     match pool.infer(req) {
                         Ok(v) => answered.push(v.request_id),
@@ -191,8 +192,13 @@ fn drain_churn_accounts_every_request_exactly_once() {
     );
     assert!(pool.replica_seconds() > 0.0);
     // the pool still serves after all that
-    pool.infer(Request { id: 9999, features: vec![0.5; DIM], arrival_s: 0.0 })
-        .unwrap();
+    pool.infer(Request {
+        id: 9999,
+        features: vec![0.5; DIM],
+        arrival_s: 0.0,
+        class: Class::Standard,
+    })
+    .unwrap();
 }
 
 #[test]
@@ -208,7 +214,7 @@ fn elastic_pool_matches_fixed_goodput_with_fewer_replica_seconds() {
         DIM,
         31,
     ));
-    let gen = LoadGen { workers: 64 };
+    let gen = LoadGen { workers: 64, class_mix: None };
 
     // ---- fixed-N baseline: max fleet pinned for the whole run ----
     let fixed_pool = Arc::new(ReplicaPool::spawn(

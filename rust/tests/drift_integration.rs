@@ -90,6 +90,7 @@ fn spawn_fleet() -> (Arc<TieredFleet>, Arc<Metrics>) {
                     max_batch: 4,
                     max_wait: Duration::from_micros(200),
                 },
+                class_weights: None,
             },
             Arc::clone(&metrics),
             None,
@@ -105,6 +106,7 @@ fn req(id: u64) -> Request {
         id,
         features: vec![id as f32 * 0.61 - 7.0, 0.0, 0.0, 0.0],
         arrival_s: 0.0,
+        class: abc_serve::types::Class::Standard,
     }
 }
 

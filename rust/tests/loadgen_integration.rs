@@ -67,7 +67,7 @@ fn four_replicas_sustain_more_offered_load_than_one() {
     // offered 800 rps for 0.5s: ~1.6x one replica's ~500 rows/s capacity,
     // ~0.4x a 4-replica pool's.
     let trace = Arc::new(Trace::synth(Arrival::Uniform { rate: 800.0 }, 400, DIM, 11));
-    let gen = LoadGen { workers: 80 };
+    let gen = LoadGen { workers: 80, class_mix: None };
 
     let pool1 = pool(1, 16);
     let r1 = gen.run(&pool1, Arc::clone(&trace), &Metrics::new()).unwrap();
@@ -125,7 +125,7 @@ fn saturation_sheds_with_bounded_outstanding() {
     };
 
     let metrics = Metrics::new();
-    let report = LoadGen { workers: 64 }
+    let report = LoadGen { workers: 64, class_mix: None }
         .run(&p, Arc::clone(&trace), &metrics)
         .unwrap();
     stop.store(true, Ordering::SeqCst);
@@ -184,7 +184,7 @@ fn tcp_server_handles_load_run_and_shuts_down() {
 
     // light load through real sockets: everything should complete
     let trace = Arc::new(Trace::synth(Arrival::Poisson { rate: 200.0 }, 150, DIM, 5));
-    let report = LoadGen { workers: 8 }
+    let report = LoadGen { workers: 8, class_mix: None }
         .run(&TcpTarget { port }, trace, &Metrics::new())
         .unwrap();
     assert_eq!(report.errors, 0, "{report:?}");

@@ -73,6 +73,7 @@ fn req(id: u64) -> Request {
         id,
         features: vec![id as f32 * 0.61 - 7.0, 0.0, 0.0, 0.0],
         arrival_s: 0.0,
+        class: abc_serve::types::Class::Standard,
     }
 }
 
@@ -228,6 +229,7 @@ fn fleet_aliases_tier_histograms_and_defers_match_exit_tiers() {
                     max_batch: 8,
                     max_wait: Duration::from_millis(1),
                 },
+                class_weights: None,
             },
             Arc::clone(&metrics),
             Some(Arc::clone(&tracer)),
@@ -306,7 +308,7 @@ fn loadgen_against_a_traced_pool_stays_consistent() {
         DIM,
         17,
     ));
-    let report = abc_serve::trafficgen::LoadGen { workers: 64 }
+    let report = abc_serve::trafficgen::LoadGen { workers: 64, class_mix: None }
         .run(&pool, trace, &Metrics::new())
         .unwrap();
     assert_eq!(report.completed + report.shed + report.errors, n as u64);

@@ -112,7 +112,7 @@ fn adaptive_beats_fixed_top_gear_under_onoff_overload() {
     let _serial = TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let n = 600;
     let trace = onoff_trace(n);
-    let gen = LoadGen { workers: 64 };
+    let gen = LoadGen { workers: 64, class_mix: None };
 
     // ---- fixed top gear: the plain pool IS the top gear (work 1.0) ----
     let fixed_pool = Arc::new(ReplicaPool::spawn(classifier(), pool_cfg(), Metrics::new()));
@@ -255,6 +255,7 @@ fn shift_churn_never_drops_or_duplicates_requests() {
                         id,
                         features: vec![0.5; DIM],
                         arrival_s: 0.0,
+                        class: abc_serve::types::Class::Standard,
                     };
                     let v = pool.infer(req).expect("infer under churn");
                     answered.push(v.request_id);

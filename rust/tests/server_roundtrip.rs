@@ -17,7 +17,7 @@ use abc_serve::obs::{ObsHook, Tracer};
 use abc_serve::planner::{GearHandle, GearPlan};
 use abc_serve::server::{serve, Client};
 use abc_serve::trafficgen::SyntheticClassifier;
-use abc_serve::types::{Request, RuleKind};
+use abc_serve::types::{Class, Request, RuleKind};
 use abc_serve::util::json::Json;
 use abc_serve::zoo::manifest::Manifest;
 use abc_serve::zoo::registry::SuiteRuntime;
@@ -49,7 +49,12 @@ fn pipeline_single_and_concurrent_requests() {
 
     // single blocking request
     let v = pipeline
-        .infer(Request { id: 1, features: test.row(0).to_vec(), arrival_s: 0.0 })
+        .infer(Request {
+            id: 1,
+            features: test.row(0).to_vec(),
+            arrival_s: 0.0,
+            class: Class::Standard,
+        })
         .unwrap();
     assert_eq!(v.request_id, 1);
     assert!((v.prediction as usize) < rt.suite.classes);
@@ -64,6 +69,7 @@ fn pipeline_single_and_concurrent_requests() {
                     id: 100 + i,
                     features: test.row(i as usize).to_vec(),
                     arrival_s: 0.0,
+                    class: Class::Standard,
                 })
                 .unwrap()
         })
@@ -86,7 +92,12 @@ fn pipeline_rejects_bad_dim() {
     let Some((cascade, _, _)) = boot("synth-sst2") else { return };
     let pipeline = Arc::new(Pipeline::spawn(cascade, batcher_cfg(), Metrics::new()));
     let err = pipeline
-        .submit(Request { id: 9, features: vec![0.0; 3], arrival_s: 0.0 })
+        .submit(Request {
+            id: 9,
+            features: vec![0.0; 3],
+            arrival_s: 0.0,
+            class: Class::Standard,
+        })
         .unwrap_err();
     assert!(err.to_string().contains("features"));
 }
@@ -202,6 +213,7 @@ fn events_command_roundtrips_the_controller_log() {
         new_gear: 1,
         old_replicas: 2,
         new_replicas: 2,
+        class: None,
     });
     pool.metrics().events().record(abc_serve::metrics::EventRecord {
         kind: abc_serve::metrics::EventKind::Scale,
@@ -212,6 +224,7 @@ fn events_command_roundtrips_the_controller_log() {
         new_gear: 1,
         old_replicas: 2,
         new_replicas: 4,
+        class: None,
     });
     let server = std::thread::spawn(move || serve(pool, port));
     std::thread::sleep(Duration::from_millis(300));
@@ -332,6 +345,86 @@ fn traces_command_on_an_untraced_server_is_well_formed() {
     let reply = client.traces().unwrap();
     assert_eq!(reply.get("sample_every").as_u64(), Some(0), "got {reply}");
     assert_eq!(reply.get("traces").as_arr().map(<[Json]>::len), Some(0));
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn slo_command_on_a_classless_server_is_well_formed() {
+    let port = 7999;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    let reply = client.slo().unwrap();
+    // no observatory: same shape, empty class list, zero goal
+    assert_eq!(
+        reply.get("slo").get("classes").as_arr().map(<[Json]>::len),
+        Some(0),
+        "got {reply}"
+    );
+    assert_eq!(reply.get("slo").get("goal").as_f64(), Some(0.0), "got {reply}");
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn slo_command_roundtrips_per_class_books() {
+    use abc_serve::obs::slo::{SloConfig, SloObservatory};
+    let port = 8000;
+    let classifier = Arc::new(SyntheticClassifier::new(
+        4,
+        3,
+        Duration::ZERO,
+        Duration::from_micros(100),
+    ));
+    let metrics = Metrics::new();
+    let pool = Arc::new(ReplicaPool::spawn(
+        classifier,
+        PoolConfig {
+            replicas: 1,
+            max_queue: 64,
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            ..PoolConfig::default()
+        },
+        Arc::clone(&metrics),
+    ));
+    pool.attach_slo(SloObservatory::new(SloConfig::default(), &metrics));
+    let server = std::thread::spawn(move || serve(pool, port));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut client = Client::connect(port).unwrap();
+    let feats = [0.5, -0.5, 0.25, 1.0];
+    client.infer_reply_class(1, &feats, Some(Class::Premium)).unwrap();
+    client.infer_reply_class(2, &feats, Some(Class::Batch)).unwrap();
+    // an untagged line lands in the standard class
+    client.infer(3, &feats).unwrap();
+
+    let reply = client.slo().unwrap();
+    let slo = reply.get("slo");
+    let classes = slo.get("classes").as_arr().unwrap();
+    assert_eq!(classes.len(), 3, "got {reply}");
+    for (entry, (name, target)) in classes
+        .iter()
+        .zip([("premium", 0.05), ("standard", 0.25), ("batch", 2.0)])
+    {
+        assert_eq!(entry.get("class").as_str(), Some(name), "got {reply}");
+        assert!(
+            (entry.get("target_s").as_f64().unwrap() - target).abs() < 1e-9,
+            "got {reply}"
+        );
+        assert_eq!(entry.get("submitted").as_u64(), Some(1), "got {reply}");
+        assert_eq!(entry.get("completed").as_u64(), Some(1), "got {reply}");
+        assert_eq!(entry.get("shed").as_u64(), Some(0), "got {reply}");
+    }
+    assert!((slo.get("goal").as_f64().unwrap() - 0.95).abs() < 1e-9, "got {reply}");
+    // the per-class counters also surface in the scrape exposition
+    let text = client.prom().unwrap();
+    assert!(text.contains("class_premium_submitted 1"), "exposition:\n{text}");
+    assert!(text.contains("class_batch_completed 1"), "exposition:\n{text}");
 
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();

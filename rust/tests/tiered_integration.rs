@@ -94,7 +94,7 @@ fn spawn_fleet(specs: Vec<TierSpec>) -> (Arc<TieredFleet>, Arc<Metrics>) {
     let fleet = Arc::new(
         TieredFleet::spawn(
             staged() as Arc<dyn StageClassifier>,
-            TieredFleetConfig { tiers: specs, batcher: batcher() },
+            TieredFleetConfig { tiers: specs, batcher: batcher(), class_weights: None },
             Arc::clone(&metrics),
         )
         .unwrap(),
@@ -107,6 +107,7 @@ fn req(id: u64) -> Request {
         id,
         features: vec![id as f32 * 0.61 - 7.0, 0.0, 0.0, 0.0],
         arrival_s: 0.0,
+        class: abc_serve::types::Class::Standard,
     }
 }
 
@@ -130,6 +131,7 @@ fn routed_execution_is_byte_identical_to_monolithic() {
                     max_batch: 4,
                     max_wait: Duration::from_micros(200),
                 },
+                class_weights: None,
             },
             Metrics::new(),
         )
@@ -187,7 +189,7 @@ fn tiered_fleet_matches_monolithic_goodput_for_fewer_dollars() {
     // workers must exceed both targets' total admission capacity
     // (monolithic: 4x32 = 128) or the generator, not admission
     // control, becomes the bottleneck and nothing ever sheds
-    let gen = LoadGen { workers: 192 };
+    let gen = LoadGen { workers: 192, class_mix: None };
 
     // ---- monolithic baseline: whole cascade on every replica, so
     // every machine must be the top-model GPU (H100, the PoolConfig
@@ -303,7 +305,7 @@ fn per_tier_gear_shifting_beats_fixed_gears_at_no_more_dollars() {
         DIM,
         43,
     ));
-    let gen = LoadGen { workers: 192 };
+    let gen = LoadGen { workers: 192, class_mix: None };
 
     // ---- fixed gears: the PR-4 fleet shape, no control loop ----
     let (fixed_fleet, _) = spawn_fleet(vec![
@@ -484,7 +486,7 @@ fn tiered_autoscaler_scales_tiers_independently_and_drains_back() {
         DIM,
         41,
     ));
-    let report = LoadGen { workers: 128 }
+    let report = LoadGen { workers: 128, class_mix: None }
         .run(&fleet, trace, &Metrics::new())
         .unwrap();
     assert_eq!(report.errors, 0, "{report:?}");
