@@ -1,0 +1,216 @@
+//! Frontend bench: the event-driven reactor vs the thread-per-connection
+//! path (the ISSUE 9 acceptance bar).
+//!
+//! Drives hundreds of concurrent closed-loop connections against the
+//! same synthetic pool behind each frontend and compares:
+//!
+//! * **connections per server thread** -- the threaded frontend spends
+//!   one OS thread per client (+1 acceptor); the reactor spends one
+//!   event loop + a worker pool sized to cores regardless of client
+//!   count.  The bar: the reactor sustains >= 10x the connections per
+//!   server thread;
+//! * **goodput** -- answered roundtrips per second; the reactor must
+//!   hold >= 95% of the threaded frontend's goodput at the same
+//!   connection count;
+//! * **p50/p99 roundtrip latency** for the record.
+//!
+//! A micro group times the wire-decode paths themselves: the lazy
+//! `scan_request_line` (no JSON tree) vs the eager `parse_request_line`
+//! on a representative infer line.
+//!
+//! Run: `cargo bench --bench bench_frontend`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use abc_serve::benchkit::{black_box, emit_json, Bench};
+use abc_serve::coordinator::batcher::BatcherConfig;
+use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
+use abc_serve::metrics::Metrics;
+use abc_serve::server::proto::{parse_request_line, scan_request_line};
+use abc_serve::server::{serve_with, Client, Frontend, InferReply};
+use abc_serve::trafficgen::SyntheticClassifier;
+use abc_serve::util::json::{Json, JsonObj};
+use abc_serve::util::stats::Samples;
+use abc_serve::util::table::Table;
+
+const DIM: usize = 8;
+const PER_ROW: Duration = Duration::from_micros(50);
+const RUN: Duration = Duration::from_secs(2);
+
+fn pool() -> Arc<ReplicaPool> {
+    Arc::new(ReplicaPool::spawn(
+        Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, PER_ROW)),
+        PoolConfig {
+            replicas: 1,
+            // admission must hold every connection's in-flight line:
+            // the bench measures the frontends, not the shed policy
+            max_queue: 1024,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+            },
+            ..PoolConfig::default()
+        },
+        Metrics::new(),
+    ))
+}
+
+struct Drive {
+    goodput_rps: f64,
+    p50_s: f64,
+    p99_s: f64,
+    answered: u64,
+}
+
+/// Closed-loop load: `conns` client threads, each ping-ponging infer
+/// roundtrips until the deadline.  Returns goodput over the measured
+/// window and the merged latency quantiles.
+fn drive(frontend: Frontend, port: u16, conns: usize) -> Drive {
+    let server_pool = pool();
+    let server = std::thread::spawn(move || serve_with(server_pool, port, frontend));
+    std::thread::sleep(Duration::from_millis(300));
+
+    let answered = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let deadline = t0 + RUN;
+    let clients: Vec<_> = (0..conns)
+        .map(|c| {
+            let answered = Arc::clone(&answered);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(port).expect("connect");
+                let feats: Vec<f32> =
+                    (0..DIM).map(|i| (c + i) as f32 * 0.01).collect();
+                let mut lat = Vec::new();
+                let mut id = (c as u64) << 32;
+                while Instant::now() < deadline {
+                    let sent = Instant::now();
+                    match client.infer_reply(id, &feats) {
+                        Ok(InferReply::Verdict(_)) => {
+                            lat.push(sent.elapsed().as_secs_f64());
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(InferReply::Overloaded { .. }) => {}
+                        Err(_) => break,
+                    }
+                    id += 1;
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut samples = Samples::new();
+    for c in clients {
+        samples.extend(&c.join().expect("client thread"));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut stopper = Client::connect(port).expect("connect for shutdown");
+    stopper.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("serve");
+
+    let answered = answered.load(Ordering::Relaxed);
+    Drive {
+        goodput_rps: answered as f64 / elapsed,
+        p50_s: samples.p50(),
+        p99_s: samples.p99(),
+        answered,
+    }
+}
+
+fn main() {
+    // wire-decode micro: what one line costs on each path
+    let line = r#"{"id":123,"features":[0.125,-0.5,0.25,1.0,0.75,-0.125,0.0625,2.0],"class":"premium"}"#;
+    const OPS: usize = 1000;
+    let mut micro = Bench::new("frontend: wire decode (x1000 per iter)");
+    micro.run("scan_request_line (lazy)", || {
+        for _ in 0..OPS {
+            black_box(scan_request_line(black_box(line)).is_ok());
+        }
+    });
+    micro.run("parse_request_line (tree)", || {
+        for _ in 0..OPS {
+            black_box(parse_request_line(black_box(line)).is_ok());
+        }
+    });
+    micro.report();
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let conns = (12 * (workers + 1)).clamp(120, 480);
+    // server-side thread budget at `conns` connections
+    let threads_threads = conns + 1; // one handler per client + acceptor
+    let reactor_threads = workers + 1; // worker pool + the event loop
+    println!(
+        "closed loop: {conns} connections x {:.0?} against 1 replica \
+         ({workers} reactor workers)\n",
+        RUN
+    );
+
+    let threaded = drive(Frontend::Threads, 8117, conns);
+    let reactor = drive(Frontend::Reactor, 8118, conns);
+
+    let mut table = Table::new(
+        "frontend comparison",
+        &["frontend", "conns", "srv threads", "conns/thread", "goodput r/s", "p50 ms", "p99 ms"],
+    );
+    for (name, threads, d) in [
+        ("threads", threads_threads, &threaded),
+        ("reactor", reactor_threads, &reactor),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            format!("{conns}"),
+            format!("{threads}"),
+            format!("{:.1}", conns as f64 / threads as f64),
+            format!("{:.0}", d.goodput_rps),
+            format!("{:.2}", d.p50_s * 1e3),
+            format!("{:.2}", d.p99_s * 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let ratio_conns = (conns as f64 / reactor_threads as f64)
+        / (conns as f64 / threads_threads as f64);
+    let ratio_goodput = reactor.goodput_rps / threaded.goodput_rps.max(1e-9);
+    println!(
+        "reactor vs threads: {ratio_conns:.1}x connections per server \
+         thread at {:.1}% goodput",
+        100.0 * ratio_goodput
+    );
+    let verdict = ratio_conns >= 10.0 && ratio_goodput >= 0.95;
+    println!(
+        "verdict: reactor >= 10x connections/thread at >= 95% goodput: {}",
+        if verdict { "YES" } else { "NO" },
+    );
+
+    let case = |name: &str, threads: usize, d: &Drive| {
+        let mut o = JsonObj::new();
+        o.insert("frontend", Json::str(name));
+        o.insert("conns", Json::num(conns as f64));
+        o.insert("server_threads", Json::num(threads as f64));
+        o.insert("conns_per_thread", Json::num(conns as f64 / threads as f64));
+        o.insert("goodput_rps", Json::num(d.goodput_rps));
+        o.insert("answered", Json::num(d.answered as f64));
+        o.insert("p50_s", Json::num(d.p50_s));
+        o.insert("p99_s", Json::num(d.p99_s));
+        Json::Obj(o)
+    };
+    let mut o = JsonObj::new();
+    o.insert("bench", Json::str("frontend"));
+    o.insert("workers", Json::num(workers as f64));
+    o.insert(
+        "cases",
+        Json::Arr(vec![
+            case("threads", threads_threads, &threaded),
+            case("reactor", reactor_threads, &reactor),
+        ]),
+    );
+    o.insert("ratio_conns_per_thread", Json::num(ratio_conns));
+    o.insert("goodput_ratio", Json::num(ratio_goodput));
+    o.insert("reactor_10x_at_95pct_goodput", Json::Bool(verdict));
+    o.insert("micro", micro.to_json());
+    emit_json("frontend", Json::Obj(o)).expect("emit json");
+}

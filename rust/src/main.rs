@@ -16,6 +16,10 @@
 //!                   --mid-ks adds three-level ladders to the grid)
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
 //!                   [--replicas 1] [--max-queue 256]
+//!                   [--frontend reactor|threads]  (default reactor: one
+//!                   epoll/poll event loop + a worker pool sized to
+//!                   cores; threads keeps the old thread-per-connection
+//!                   path for differential testing)
 //!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
 //!                   re-calibrated on the suite, ladder rescaled to R)
 //!                   [--autoscale --min-replicas 1 --max-replicas N
@@ -474,9 +478,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--frontend reactor|threads` (default: the event-driven
+/// reactor; `threads` keeps the old thread-per-connection path for
+/// differential testing).
+fn frontend_of(args: &Args) -> Result<abc_serve::server::Frontend> {
+    let s = args.str_or("frontend", "reactor");
+    abc_serve::server::Frontend::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown --frontend {s:?} (reactor|threads)"))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let suite = args.req_str("suite")?;
     let port = args.u16_or("port", 7878)?;
+    let frontend = frontend_of(args)?;
     let rule = rule_of(args)?;
     let epsilon = args.f64_or("epsilon", 0.03)?;
     let max_batch = args.usize_or("max-batch", 32)?;
@@ -726,10 +740,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!(
         "serving {suite} on 127.0.0.1:{port} (line-JSON protocol, \
-         {} replicas, max-queue {max_queue}/replica)",
+         {} frontend, {} replicas, max-queue {max_queue}/replica)",
+        frontend.name(),
         pool.n_replicas()
     );
-    abc_serve::server::serve(pool, port)
+    abc_serve::server::serve_with(pool, port, frontend)
 }
 
 /// `serve --tiered`: one ReplicaPool per cascade level with deferral
@@ -977,7 +992,7 @@ fn serve_tiered(
          max-queue {max_queue}/replica, ${:.2}/h at spawn)",
         fleet.dollars_per_hour()
     );
-    abc_serve::server::serve(fleet, port)
+    abc_serve::server::serve_with(fleet, port, frontend_of(args)?)
 }
 
 /// Query a running server's stats snapshot; with `--events`, also dump

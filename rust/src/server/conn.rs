@@ -1,0 +1,322 @@
+//! Per-connection state machine for the event-driven frontend
+//! (DESIGN.md §15): read buffer -> line framing -> dispatch (tracked by
+//! a FIFO reply sequencer) -> write buffer, with pause/resume decisions
+//! the reactor turns into poller interest changes.
+//!
+//! Everything except the socket reads/writes is plain data owned by the
+//! reactor thread (no locks, no shared state), so framing, sequencing
+//! and the backpressure rule unit-test here without a poller.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Largest tolerated unterminated line.  A client that streams this much
+/// without a newline is broken or hostile; the reactor hangs up instead
+/// of buffering without bound.
+pub const MAX_LINE: usize = 1 << 20;
+
+/// Backpressure thresholds (DESIGN.md §15).  A connection's reads pause
+/// when its un-drained output exceeds `write_buf_cap`, when more than
+/// `max_inflight` of its lines are dispatched but unanswered, or after
+/// admission control sheds one of its requests; reads resume at half the
+/// watermark (hysteresis) so the interest registration doesn't flap.
+#[derive(Debug, Clone, Copy)]
+pub struct Backpressure {
+    pub write_buf_cap: usize,
+    pub max_inflight: u64,
+}
+
+impl Default for Backpressure {
+    fn default() -> Self {
+        Backpressure { write_buf_cap: 256 << 10, max_inflight: 128 }
+    }
+}
+
+/// Accumulates raw socket bytes and yields complete `\n`-terminated
+/// lines.  Partial tails survive between reads; `scan_from` remembers
+/// how far the newline scan got so repeated pushes of a long partial
+/// line stay O(new bytes), not O(buffer).
+#[derive(Default)]
+pub struct LineFramer {
+    buf: Vec<u8>,
+    scan_from: usize,
+}
+
+impl LineFramer {
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as lines.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next complete line (terminator included), if one is buffered.
+    pub fn next_line(&mut self) -> Option<String> {
+        match self.buf[self.scan_from..].iter().position(|&b| b == b'\n') {
+            Some(off) => {
+                let raw: Vec<u8> = self.buf.drain(..=self.scan_from + off).collect();
+                self.scan_from = 0;
+                Some(String::from_utf8_lossy(&raw).into_owned())
+            }
+            None => {
+                self.scan_from = self.buf.len();
+                None
+            }
+        }
+    }
+}
+
+/// Restores per-connection FIFO reply order over out-of-order worker
+/// completions: lines get ascending sequence numbers at dispatch; a
+/// completed reply is released only once every earlier one has been.
+#[derive(Default)]
+pub struct ReplySequencer {
+    next_seq: u64,
+    next_write: u64,
+    stash: BTreeMap<u64, String>,
+}
+
+impl ReplySequencer {
+    /// Claim the sequence number for a newly dispatched line.
+    pub fn alloc(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Record one completion; push every reply now releasable (in
+    /// sequence order) onto `out`.
+    pub fn complete(&mut self, seq: u64, reply: String, out: &mut Vec<String>) {
+        self.stash.insert(seq, reply);
+        while let Some(r) = self.stash.remove(&self.next_write) {
+            out.push(r);
+            self.next_write += 1;
+        }
+    }
+
+    /// Dispatched lines whose replies have not yet been released.
+    pub fn outstanding(&self) -> u64 {
+        self.next_seq - self.next_write
+    }
+}
+
+/// One client connection owned by the reactor thread.
+pub struct Conn {
+    pub stream: TcpStream,
+    framer: LineFramer,
+    seq: ReplySequencer,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// (read, write) interest currently registered with the poller.
+    pub registered: (bool, bool),
+    /// Reads deliberately stopped by the backpressure rule.
+    pub paused: bool,
+    /// No more reads (client EOF or server drain); close once idle.
+    pub closing: bool,
+    /// I/O error observed; close immediately, dropping pending output.
+    pub broken: bool,
+    shed_pause: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            framer: LineFramer::default(),
+            seq: ReplySequencer::default(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            registered: (true, false),
+            paused: false,
+            closing: false,
+            broken: false,
+            shed_pause: false,
+        }
+    }
+
+    /// Drain the socket until `WouldBlock` (or EOF, which marks the
+    /// connection closing) and push every complete line onto `lines`.
+    pub fn on_readable(&mut self, lines: &mut Vec<String>) -> io::Result<()> {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.closing = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.framer.push(&buf[..n]);
+                    if self.framer.buffered() > MAX_LINE {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "line exceeds MAX_LINE",
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        while let Some(line) = self.framer.next_line() {
+            lines.push(line);
+        }
+        Ok(())
+    }
+
+    /// Sequence number for a line about to be handed to a worker.
+    pub fn alloc_seq(&mut self) -> u64 {
+        self.seq.alloc()
+    }
+
+    /// Record one worker completion; in-order replies move to the write
+    /// buffer (newline-terminated).  A shed completion arms the
+    /// backpressure pause until the connection drains.
+    pub fn complete(&mut self, seq: u64, reply: String, shed: bool) {
+        let mut ready = Vec::new();
+        self.seq.complete(seq, reply, &mut ready);
+        for r in ready {
+            self.wbuf.extend_from_slice(r.as_bytes());
+            self.wbuf.push(b'\n');
+        }
+        if shed {
+            self.shed_pause = true;
+        }
+    }
+
+    /// Write buffered output until `WouldBlock` or empty.
+    pub fn flush(&mut self) -> io::Result<()> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket write returned 0",
+                    ))
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        Ok(())
+    }
+
+    /// Output bytes accepted but not yet written to the socket.
+    pub fn buffered_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Dispatched lines not yet answered in order.
+    pub fn outstanding(&self) -> u64 {
+        self.seq.outstanding()
+    }
+
+    /// Nothing in flight and nothing left to write.
+    pub fn idle(&self) -> bool {
+        self.outstanding() == 0 && self.buffered_out() == 0
+    }
+
+    /// The poller should watch this socket for writability.
+    pub fn wants_write(&self) -> bool {
+        self.buffered_out() > 0
+    }
+
+    /// A shed pause clears once the connection fully drains: the client
+    /// has seen the overload reply, so reads may resume.
+    pub fn update_shed(&mut self) {
+        if self.shed_pause && self.idle() {
+            self.shed_pause = false;
+        }
+    }
+
+    /// The backpressure rule: stop polling for readability?
+    pub fn should_pause(&self, bp: &Backpressure) -> bool {
+        self.shed_pause
+            || self.buffered_out() > bp.write_buf_cap
+            || self.outstanding() > bp.max_inflight
+    }
+
+    /// Hysteresis: resume reads only once well below the watermarks.
+    pub fn may_resume(&self, bp: &Backpressure) -> bool {
+        !self.shed_pause
+            && self.buffered_out() <= bp.write_buf_cap / 2
+            && self.outstanding() <= bp.max_inflight / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framer_reassembles_lines_across_chunks() {
+        let mut f = LineFramer::default();
+        f.push(b"{\"id\":1}\n{\"id\"");
+        assert_eq!(f.next_line().as_deref(), Some("{\"id\":1}\n"));
+        assert_eq!(f.next_line(), None);
+        f.push(b":2}\n\n{\"id\":3}");
+        assert_eq!(f.next_line().as_deref(), Some("{\"id\":2}\n"));
+        assert_eq!(f.next_line().as_deref(), Some("\n"), "empty line framed");
+        assert_eq!(f.next_line(), None);
+        assert_eq!(f.buffered(), "{\"id\":3}".len(), "partial tail retained");
+        f.push(b"\n");
+        assert_eq!(f.next_line().as_deref(), Some("{\"id\":3}\n"));
+    }
+
+    #[test]
+    fn framer_scan_position_survives_partial_pushes() {
+        let mut f = LineFramer::default();
+        f.push(b"aaaa");
+        assert_eq!(f.next_line(), None);
+        // scan_from now sits at 4; the newline in the next chunk must
+        // still be found even though it is past the first scan window
+        f.push(b"bb\ncc");
+        assert_eq!(f.next_line().as_deref(), Some("aaaabb\n"));
+        assert_eq!(f.buffered(), 2);
+    }
+
+    #[test]
+    fn sequencer_releases_replies_in_dispatch_order() {
+        let mut s = ReplySequencer::default();
+        let a = s.alloc();
+        let b = s.alloc();
+        let c = s.alloc();
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(s.outstanding(), 3);
+        let mut out = Vec::new();
+        s.complete(c, "C".into(), &mut out);
+        assert!(out.is_empty(), "seq 2 waits for 0 and 1");
+        s.complete(a, "A".into(), &mut out);
+        assert_eq!(out, vec!["A"], "seq 0 releases alone");
+        s.complete(b, "B".into(), &mut out);
+        assert_eq!(out, vec!["A", "B", "C"], "seq 1 unblocks the stash");
+        assert_eq!(s.outstanding(), 0);
+    }
+
+    #[test]
+    fn backpressure_rule_and_hysteresis() {
+        let bp = Backpressure { write_buf_cap: 100, max_inflight: 4 };
+        let mut s = ReplySequencer::default();
+        for _ in 0..5 {
+            s.alloc();
+        }
+        // 5 in flight > 4: pause; resume only at <= 2
+        assert!(s.outstanding() > bp.max_inflight);
+        let mut out = Vec::new();
+        s.complete(0, "r".into(), &mut out);
+        s.complete(1, "r".into(), &mut out);
+        assert_eq!(s.outstanding(), 3, "3 > max_inflight/2: still paused");
+        assert!(s.outstanding() > bp.max_inflight / 2);
+        s.complete(2, "r".into(), &mut out);
+        assert!(s.outstanding() <= bp.max_inflight / 2, "2 <= 2: may resume");
+    }
+}

@@ -86,19 +86,43 @@
 //! `"error"` field.  Other request failures keep the plain
 //! `{"error": msg}` shape.
 //!
-//! Built on std TCP + threads (no hyper/tokio offline); each connection
-//! gets a handler thread, requests flow through the pool's
-//! least-outstanding dispatcher, so concurrent clients batch together
-//! inside each replica's dynamic batcher.
+//! Two frontends serve this wire protocol, selected by
+//! `serve --frontend reactor|threads` (no hyper/tokio offline):
 //!
-//! Shutdown: handler threads read with a short socket timeout and
-//! re-check the shared stop flag between reads, so `serve()` joins every
-//! handler within ~[`READ_POLL`] of a `{"cmd":"shutdown"}` even while
-//! other connections sit idle mid-`read` (the seed blocked forever in
-//! `read_line` here).  Complete lines already received are still
-//! answered before a handler exits ("drain in-flight").
+//! * **reactor** (default): one event-loop thread multiplexes every
+//!   connection over nonblocking sockets -- raw `epoll` on Linux,
+//!   portable `poll(2)` elsewhere -- while a fixed worker pool sized
+//!   to cores runs parse/infer/render (see the `reactor` module and
+//!   DESIGN.md §15).  Per-connection state machines frame lines out of
+//!   a read buffer and sequence replies back into dispatch order, so
+//!   pipelined clients see FIFO answers.  Backpressure: when a write
+//!   buffer tops its cap, in-flight lines top the limit, or admission
+//!   control sheds, the reactor stops polling that socket for
+//!   readability and overload propagates to the client's TCP window
+//!   instead of unbounded server memory.
+//! * **threads**: the original thread-per-connection blocking path,
+//!   kept behind the flag for differential testing.  Handlers read
+//!   with a short socket timeout and re-check the shared stop flag
+//!   between reads.
+//!
+//! Both frontends answer through the same `dispatch_line`, and hot
+//! infer lines decode through the lazy `JsonScan` fast path (no JSON
+//! tree) with fallback to the full parser, so wire replies are
+//! byte-identical across frontends and parse paths -- pinned by
+//! differential tests.
+//!
+//! Shutdown (`{"cmd":"shutdown"}`): both frontends stop accepting,
+//! answer every complete line already received -- including lines
+//! still sitting in kernel socket buffers at shutdown time -- flush
+//! those replies, and join within ~[`READ_POLL`] plus in-flight
+//! inference time.  (The seed blocked forever in `read_line` here.)
 
 pub mod proto;
+
+#[cfg(unix)]
+pub mod conn;
+#[cfg(unix)]
+pub mod reactor;
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -114,13 +138,41 @@ use crate::metrics::Metrics;
 use crate::obs::{DriftMonitor, SloObservatory, Tracer};
 use crate::types::{Class, Request, Verdict};
 use proto::{
-    parse_request_line, render_drift, render_error, render_events,
-    render_metrics, render_overloaded, render_prom_reply, render_slo,
-    render_stats, render_traces, render_verdict,
+    render_drift, render_error, render_events, render_metrics,
+    render_overloaded, render_prom_reply, render_slo, render_stats,
+    render_traces, render_verdict, scan_request_line,
 };
 
-/// How long a handler blocks in `read` before re-checking the stop flag.
-const READ_POLL: Duration = Duration::from_millis(50);
+/// How long a blocking handler (or the reactor's poller) waits before
+/// re-checking for new work / the stop flag.
+pub(crate) const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Which serving frontend `serve_with` runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Frontend {
+    /// Event-driven: one poller thread + a worker pool sized to cores.
+    #[default]
+    Reactor,
+    /// Thread-per-connection blocking I/O (the pre-reactor frontend).
+    Threads,
+}
+
+impl Frontend {
+    pub fn parse(s: &str) -> Option<Frontend> {
+        match s {
+            "reactor" => Some(Frontend::Reactor),
+            "threads" => Some(Frontend::Threads),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Frontend::Reactor => "reactor",
+            Frontend::Threads => "threads",
+        }
+    }
+}
 
 /// What the TCP front end serves over: a monolithic [`ReplicaPool`]
 /// (every replica runs the whole cascade) or a [`TieredFleet`] (one
@@ -211,8 +263,99 @@ impl InferBackend for TieredFleet {
     }
 }
 
-/// Serve forever (until a client sends `{"cmd": "shutdown"}`).
+/// Serve forever (until a client sends `{"cmd": "shutdown"}`) on the
+/// default frontend.
 pub fn serve(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
+    serve_with(pool, port, Frontend::default())
+}
+
+/// Serve on an explicitly chosen frontend.
+pub fn serve_with(
+    pool: Arc<dyn InferBackend>,
+    port: u16,
+    frontend: Frontend,
+) -> Result<()> {
+    match frontend {
+        Frontend::Reactor => serve_reactor_frontend(pool, port),
+        Frontend::Threads => serve_threads(pool, port),
+    }
+}
+
+#[cfg(unix)]
+fn serve_reactor_frontend(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
+    reactor::serve_reactor(pool, port)
+}
+
+/// Non-unix builds have no poller; the reactor selection degrades to
+/// the portable threaded frontend rather than failing to serve.
+#[cfg(not(unix))]
+fn serve_reactor_frontend(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
+    serve_threads(pool, port)
+}
+
+/// One decoded-and-answered line: the reply to write back, plus the
+/// side effects the frontend must act on (stop serving, apply shed
+/// backpressure).  Both frontends answer through this single function,
+/// which is what makes their wire replies byte-identical.
+pub(crate) struct Dispatched {
+    pub reply: String,
+    /// The line was `{"cmd":"shutdown"}`: stop accepting and drain.
+    pub shutdown: bool,
+    /// Admission control shed this request (reactor: pause reads until
+    /// the connection drains).
+    pub shed: bool,
+}
+
+/// Decode one trimmed, non-empty line, run it against the backend, and
+/// render the reply.  Hot infer lines take the lazy `JsonScan` path;
+/// control commands and malformed input fall back to the tree parser.
+pub(crate) fn dispatch_line(pool: &dyn InferBackend, line: &str) -> Dispatched {
+    let mut shutdown = false;
+    let mut shed = false;
+    let reply = match scan_request_line(line) {
+        Ok(proto::Incoming::Infer(request)) => match pool.infer(request) {
+            // report the gear active at *reply* time: cheap, and a
+            // shift mid-request is visible either way
+            Ok(verdict) => render_verdict(&verdict, pool.gear_id()),
+            Err(PoolError::Overloaded { outstanding, limit }) => {
+                shed = true;
+                render_overloaded(outstanding, limit)
+            }
+            Err(e) => render_error(&e.to_string()),
+        },
+        Ok(proto::Incoming::Metrics) => {
+            pool.publish();
+            render_metrics(pool.metrics())
+        }
+        Ok(proto::Incoming::Stats) => {
+            pool.publish();
+            render_stats(pool.metrics())
+        }
+        Ok(proto::Incoming::Events) => render_events(pool.metrics()),
+        Ok(proto::Incoming::Prom) => {
+            pool.publish();
+            render_prom_reply(pool.metrics())
+        }
+        Ok(proto::Incoming::Traces) => render_traces(pool.tracer()),
+        Ok(proto::Incoming::Drift) => render_drift(pool.drift()),
+        Ok(proto::Incoming::Slo) => {
+            // publish first so the windowed p99/burn gauges in the
+            // reply are no staler than one refresh interval
+            pool.publish();
+            render_slo(pool.slo())
+        }
+        Ok(proto::Incoming::Shutdown) => {
+            shutdown = true;
+            r#"{"ok":true,"shutdown":true}"#.to_string()
+        }
+        Err(e) => render_error(&e),
+    };
+    Dispatched { reply, shutdown, shed }
+}
+
+/// The thread-per-connection frontend: blocking sockets, one handler
+/// thread per client.
+pub fn serve_threads(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let stop = Arc::new(AtomicBool::new(false));
     listener.set_nonblocking(true)?;
@@ -253,10 +396,16 @@ enum Read1 {
 /// stop flag between short read timeouts.  Partial lines survive timeouts
 /// because bytes accumulate in `pending` (a `BufReader::read_line` would
 /// discard the partial tail on every timeout).
+///
+/// On stop, one final short-timeout drain pulls in whatever the kernel
+/// has already accepted (`drained` keeps it to one pass), so complete
+/// lines received before the shutdown are still answered -- the same
+/// guarantee the reactor's drain phase gives.
 fn read_line_interruptible(
     stream: &mut TcpStream,
     pending: &mut Vec<u8>,
     stop: &AtomicBool,
+    drained: &mut bool,
 ) -> std::io::Result<Read1> {
     let mut buf = [0u8; 4096];
     loop {
@@ -265,7 +414,19 @@ fn read_line_interruptible(
             return Ok(Read1::Line(String::from_utf8_lossy(&raw).into_owned()));
         }
         if stop.load(Ordering::SeqCst) {
-            return Ok(Read1::Stopping);
+            if *drained {
+                return Ok(Read1::Stopping);
+            }
+            *drained = true;
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(5)));
+            loop {
+                match stream.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => pending.extend_from_slice(&buf[..n]),
+                    Err(_) => break, // timeout/would-block/broken: done
+                }
+            }
+            continue; // top of loop re-scans pending for complete lines
         }
         match stream.read(&mut buf) {
             Ok(0) => return Ok(Read1::Eof),
@@ -290,8 +451,14 @@ fn handle_conn(
     let mut reader = stream.try_clone()?;
     let mut writer = stream;
     let mut pending: Vec<u8> = Vec::new();
+    let mut drained = false;
     loop {
-        let line = match read_line_interruptible(&mut reader, &mut pending, &stop)? {
+        let line = match read_line_interruptible(
+            &mut reader,
+            &mut pending,
+            &stop,
+            &mut drained,
+        )? {
             Read1::Line(l) => l,
             Read1::Eof => return Ok(()), // client closed
             Read1::Stopping => return Ok(()),
@@ -300,54 +467,11 @@ fn handle_conn(
         if trimmed.is_empty() {
             continue;
         }
-        match parse_request_line(trimmed) {
-            Ok(proto::Incoming::Infer(request)) => {
-                let reply = match pool.infer(request) {
-                    // report the gear active at *reply* time: cheap, and
-                    // a shift mid-request is visible either way
-                    Ok(verdict) => render_verdict(&verdict, pool.gear_id()),
-                    Err(PoolError::Overloaded { outstanding, limit }) => {
-                        render_overloaded(outstanding, limit)
-                    }
-                    Err(e) => render_error(&e.to_string()),
-                };
-                writeln!(writer, "{reply}")?;
-            }
-            Ok(proto::Incoming::Metrics) => {
-                pool.publish();
-                writeln!(writer, "{}", render_metrics(pool.metrics()))?;
-            }
-            Ok(proto::Incoming::Stats) => {
-                pool.publish();
-                writeln!(writer, "{}", render_stats(pool.metrics()))?;
-            }
-            Ok(proto::Incoming::Events) => {
-                writeln!(writer, "{}", render_events(pool.metrics()))?;
-            }
-            Ok(proto::Incoming::Prom) => {
-                pool.publish();
-                writeln!(writer, "{}", render_prom_reply(pool.metrics()))?;
-            }
-            Ok(proto::Incoming::Traces) => {
-                writeln!(writer, "{}", render_traces(pool.tracer()))?;
-            }
-            Ok(proto::Incoming::Drift) => {
-                writeln!(writer, "{}", render_drift(pool.drift()))?;
-            }
-            Ok(proto::Incoming::Slo) => {
-                // publish first so the windowed p99/burn gauges in the
-                // reply are no staler than one refresh interval
-                pool.publish();
-                writeln!(writer, "{}", render_slo(pool.slo()))?;
-            }
-            Ok(proto::Incoming::Shutdown) => {
-                stop.store(true, Ordering::SeqCst);
-                writeln!(writer, "{}", r#"{"ok":true,"shutdown":true}"#)?;
-                return Ok(());
-            }
-            Err(e) => {
-                writeln!(writer, "{}", render_error(&e))?;
-            }
+        let d = dispatch_line(pool.as_ref(), trimmed);
+        writeln!(writer, "{}", d.reply)?;
+        if d.shutdown {
+            stop.store(true, Ordering::SeqCst);
+            return Ok(());
         }
     }
 }

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use crate::metrics::Metrics;
 use crate::obs::{DriftMonitor, SloObservatory, Tracer};
 use crate::types::{Class, Request, Verdict};
-use crate::util::json::{Json, JsonObj};
+use crate::util::json::{Json, JsonObj, JsonScan};
 
 /// A parsed inbound line.
 #[derive(Debug)]
@@ -62,6 +62,49 @@ pub fn parse_request_line(line: &str) -> Result<Incoming, String> {
         }
     };
     Ok(Incoming::Infer(Request { id, features, arrival_s: 0.0, class }))
+}
+
+/// Lazy fast path for the hot wire: extract `id`/`features`/`class`
+/// with [`JsonScan`] -- no tree allocation -- and fall back to
+/// [`parse_request_line`] whenever the scanner is not *sure* (control
+/// commands, malformed input, escaped keys, anything that needs an
+/// error message).  Because the scanner only ever accepts documents the
+/// tree parser accepts with the same meaning, both entry points return
+/// identical results on every line; the differential property test
+/// below pins that.
+pub fn scan_request_line(line: &str) -> Result<Incoming, String> {
+    match scan_infer(line) {
+        Some(inc) => Ok(inc),
+        None => parse_request_line(line),
+    }
+}
+
+/// The happy path: a well-formed infer object with no `cmd` key, a
+/// numeric `id`, a non-empty flat numeric `features` array, and an
+/// absent / null / plain-string `class`.  Anything else is `None`.
+fn scan_infer(line: &str) -> Option<Incoming> {
+    let scan = JsonScan::new(line);
+    if scan.has_field("cmd")? {
+        return None; // control commands and cmd-typed errors: tree path
+    }
+    // has_field proved the whole document scans, so a None from the
+    // field accessors below means "absent or needs the parser's error"
+    let id = scan.field_u64("id")?;
+    let mut nums: Vec<f64> = Vec::new();
+    if scan.field_nums("features", &mut nums)? == 0 {
+        return None; // the "empty features" error text is the parser's
+    }
+    // same rounding hop as the tree path: f64 token -> f32 feature
+    let features: Vec<f32> = nums.iter().map(|&f| f as f32).collect();
+    let class = match scan.field("class") {
+        None => Class::Standard, // absent, like the tree's Json::Null
+        Some("null") => Class::Standard,
+        Some(_) => {
+            let s = scan.field_str("class")?; // non-string/escaped: fall back
+            Class::parse(s)? // unknown class: the parser renders the error
+        }
+    };
+    Some(Incoming::Infer(Request { id, features, arrival_s: 0.0, class }))
 }
 
 /// Render a verdict reply line.  `gear` is the active gear's ladder
@@ -497,5 +540,173 @@ mod tests {
         assert_eq!(parsed.get("error").as_str(), Some("overloaded"));
         assert_eq!(parsed.get("outstanding").as_u64(), Some(128));
         assert_eq!(parsed.get("limit").as_u64(), Some(128));
+    }
+
+    #[test]
+    fn scan_request_line_matches_parse_on_the_basics() {
+        // the hot path: no tree, same Request
+        let line = r#"{"id": 7, "features": [1.5, -2.0], "class": "batch"}"#;
+        match scan_request_line(line).unwrap() {
+            Incoming::Infer(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.features, vec![1.5, -2.0]);
+                assert_eq!(r.class, Class::Batch);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // explicit null class matches the tree parser's absent default
+        match scan_request_line(r#"{"id":1,"features":[1.0],"class":null}"#).unwrap() {
+            Incoming::Infer(r) => assert_eq!(r.class, Class::Standard),
+            _ => panic!("wrong variant"),
+        }
+        // commands fall back to the tree path, same variants
+        assert!(matches!(
+            scan_request_line(r#"{"cmd": "shutdown"}"#).unwrap(),
+            Incoming::Shutdown
+        ));
+        // errors are byte-identical because they all come from the parser
+        for bad in [
+            "not json",
+            r#"{"cmd": "nope"}"#,
+            r#"{"id": 1}"#,
+            r#"{"id": 1.5, "features": [1.0]}"#,
+            r#"{"id": "7", "features": [1.0]}"#,
+            r#"{"id": 1, "features": []}"#,
+            r#"{"id": 1, "features": ["x"]}"#,
+            r#"{"id": 1, "features": {"not":"arr"}}"#,
+            r#"{"id": 1, "features": [1.0], "class": "gold"}"#,
+            r#"{"id": 1, "features": [1.0], "class": 3}"#,
+            r#"{"id": 1, "features": [1.0]"#,
+        ] {
+            assert_eq!(
+                scan_request_line(bad).unwrap_err(),
+                parse_request_line(bad).unwrap_err(),
+                "error text must come from one place: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_equals_parse_on_generated_lines() {
+        use crate::prop_assert;
+        use crate::util::minicheck::{check, Shrink};
+        use crate::util::rng::Rng;
+
+        #[derive(Clone, Debug)]
+        struct Line(String);
+        impl Shrink for Line {}
+
+        fn num_token(rng: &mut Rng) -> String {
+            match rng.below(6) {
+                0 => format!("{}", rng.below(1000)),
+                1 => format!("-{}", rng.below(1000)),
+                2 => format!("{}.{}", rng.below(100), rng.below(1000)),
+                3 => format!("{}e{}", rng.below(50), rng.below(4)),
+                4 => format!("{}.0", rng.below(100)),
+                _ => format!("{:.3}", rng.range_f64(-10.0, 10.0)),
+            }
+        }
+
+        // values the scanner must skip without understanding
+        fn extra_value(rng: &mut Rng) -> String {
+            match rng.below(7) {
+                0 => r#""plain""#.to_string(),
+                1 => r#""esc \" \\ \n A""#.to_string(),
+                2 => r#""pair 😀 ok""#.to_string(),
+                3 => r#"{"deep":{"er":[1,{"x":null}]}}"#.to_string(),
+                4 => "[[],[1,2],[{}]]".to_string(),
+                5 => "true".to_string(),
+                _ => "null".to_string(),
+            }
+        }
+
+        fn gen_line(rng: &mut Rng) -> Line {
+            let mut parts: Vec<String> = Vec::new();
+            match rng.below(8) {
+                0 => {}                                     // missing id
+                1 => parts.push(r#""id":"7""#.to_string()), // stringified
+                2 => parts.push(r#""id":1.5"#.to_string()), // fractional
+                3 => parts.push(format!(r#""id":{}.0"#, rng.below(100))),
+                4 => parts.push(format!(r#""id":{}e2"#, rng.below(90))),
+                _ => parts.push(format!(r#""id":{}"#, rng.below(1_000_000))),
+            }
+            match rng.below(8) {
+                0 => {} // missing features
+                1 => parts.push(r#""features":[]"#.to_string()),
+                2 => parts.push(r#""features":[1,"x"]"#.to_string()),
+                3 => parts.push(r#""features":{"not":"arr"}"#.to_string()),
+                _ => {
+                    let n = 1 + rng.below(6);
+                    let elems: Vec<String> =
+                        (0..n).map(|_| num_token(rng)).collect();
+                    parts.push(format!(r#""features":[{}]"#, elems.join(",")));
+                }
+            }
+            match rng.below(10) {
+                0 => parts.push(r#""class":"premium""#.to_string()),
+                1 => parts.push(r#""class":"standard""#.to_string()),
+                2 => parts.push(r#""class":"batch""#.to_string()),
+                3 => parts.push(r#""class":"gold""#.to_string()), // unknown
+                4 => parts.push(r#""class":3"#.to_string()),      // non-string
+                5 => parts.push(r#""class":null"#.to_string()),
+                // escaped class: the scanner defers, the parser unescapes
+                6 => parts.push("\"class\":\"bat\\u0063h\"".to_string()),
+                _ => {} // absent
+            }
+            if rng.bool(0.15) {
+                let cmd = ["metrics", "stats", "shutdown", "nope"];
+                parts.push(format!(r#""cmd":"{}""#, cmd[rng.below(cmd.len())]));
+            }
+            if rng.bool(0.3) {
+                parts.push(format!(
+                    r#""extra{}":{}"#,
+                    rng.below(3),
+                    extra_value(rng)
+                ));
+            }
+            if rng.bool(0.1) {
+                // duplicate key: last occurrence wins on both paths
+                parts.push(format!(r#""id":{}"#, rng.below(50)));
+            }
+            rng.shuffle(&mut parts);
+            let sep = if rng.bool(0.5) { "," } else { " , " };
+            let mut line = format!("{{{}}}", parts.join(sep));
+            if rng.bool(0.3) {
+                line = format!("  {line} ");
+            }
+            match rng.below(12) {
+                0 => {
+                    // truncate at a char boundary: both paths must reject
+                    let cut = rng.below(line.len() + 1);
+                    line = line.chars().take(cut).collect();
+                }
+                1 => line.push_str(" trailing"),
+                _ => {}
+            }
+            Line(line)
+        }
+
+        check(0x5EED_0009, 4000, gen_line, |l| {
+            let a = parse_request_line(&l.0);
+            let b = scan_request_line(&l.0);
+            match (&a, &b) {
+                (Ok(x), Ok(y)) => prop_assert!(
+                    format!("{x:?}") == format!("{y:?}"),
+                    "value divergence on {:?}: parse={x:?} scan={y:?}",
+                    l.0
+                ),
+                (Err(x), Err(y)) => prop_assert!(
+                    x == y,
+                    "error divergence on {:?}: parse={x:?} scan={y:?}",
+                    l.0
+                ),
+                _ => prop_assert!(
+                    false,
+                    "ok/err divergence on {:?}: parse={a:?} scan={b:?}",
+                    l.0
+                ),
+            }
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,768 @@
+//! Event-driven serving frontend (DESIGN.md §15): one reactor thread
+//! multiplexing every connection over a readiness poller, plus a fixed
+//! worker pool sized to cores for parse/infer/render.
+//!
+//! ```text
+//!             epoll/poll                    ThreadPool (cores)
+//!   sockets ----------------> reactor ----------------------> workers
+//!      ^     readable:frame     |   line jobs (token,gen,seq)    |
+//!      |     writable:flush     |                                |
+//!      +------- replies --------+<---- completions (mpsc) -------+
+//!                               ^        + wake datagram
+//! ```
+//!
+//! The reactor thread owns all connection state (slab of [`Conn`]) --
+//! no locks anywhere in the readiness loop (`scripts/
+//! check_hotpath_locks.sh` pins `server/` lock-free).  Workers hand
+//! results back over an mpsc channel and wake the poller with a
+//! datagram on a loopback socket pair; per-connection FIFO reply order
+//! is restored by each connection's sequencer, so pipelined clients
+//! see answers in send order even though workers finish out of order.
+//!
+//! The poller is raw `epoll` via direct syscalls on Linux (std already
+//! links libc; no external crates), with a portable `poll(2)` set as
+//! fallback -- selectable for tests via [`ReactorConfig::force_poll`].
+//!
+//! Backpressure (the §15 rule): a connection whose write buffer tops
+//! the cap, whose in-flight count tops the limit, or which just got an
+//! admission-control shed, is deregistered for readability until it
+//! drains -- overload propagates to the client's TCP window instead of
+//! unbounded server memory.
+//!
+//! Shutdown drain: on a `{"cmd":"shutdown"}` completion the reactor
+//! stops accepting, takes one final nonblocking read per connection so
+//! complete lines already received are still answered, then loops until
+//! every dispatched job has completed and every reply is flushed (or
+//! the drain deadline passes), mirroring the threaded frontend's
+//! semantics within the same ~[`READ_POLL`] bound.
+
+use std::io;
+use std::net::{TcpListener, UdpSocket};
+use std::os::unix::io::AsRawFd;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::conn::{Backpressure, Conn};
+use super::{dispatch_line, InferBackend, READ_POLL};
+use crate::util::threadpool::ThreadPool;
+
+/// Poller slot for the listening socket.
+const TOKEN_LISTENER: usize = 0;
+/// Poller slot for the worker wake-up socket.
+const TOKEN_WAKE: usize = 1;
+/// First connection token; token = `TOKEN_CONN0 + slab slot`.
+const TOKEN_CONN0: usize = 2;
+
+/// Tuning for [`serve_reactor_with`]; `Default` is what
+/// [`crate::server::serve`] runs in production.
+#[derive(Debug, Clone, Copy)]
+pub struct ReactorConfig {
+    /// Worker threads for parse/infer/render; 0 sizes to the machine
+    /// (`available_parallelism`).
+    pub workers: usize,
+    /// Per-connection backpressure thresholds.
+    pub backpressure: Backpressure,
+    /// Use the portable `poll(2)` backend even where epoll exists.
+    pub force_poll: bool,
+    /// Upper bound on the shutdown drain (in-flight inference can
+    /// legitimately take batching latency to finish).
+    pub drain_deadline: Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            workers: 0,
+            backpressure: Backpressure::default(),
+            force_poll: false,
+            drain_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One finished worker job on its way back to the reactor.
+struct Completion {
+    token: usize,
+    gen: u64,
+    seq: u64,
+    reply: String,
+    shutdown: bool,
+    shed: bool,
+}
+
+/// Serve on the event-driven frontend with default tuning.
+pub fn serve_reactor(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
+    serve_reactor_with(pool, port, ReactorConfig::default())
+}
+
+/// Serve on the event-driven frontend until a `{"cmd":"shutdown"}`.
+pub fn serve_reactor_with(
+    backend: Arc<dyn InferBackend>,
+    port: u16,
+    cfg: ReactorConfig,
+) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    listener.set_nonblocking(true)?;
+
+    // workers wake the poller by lobbing a datagram at this socket pair;
+    // loopback UDP never blocks the sender, and a dropped datagram under
+    // a full buffer is harmless (a full buffer means a wake is already
+    // pending)
+    let wake_rx = UdpSocket::bind(("127.0.0.1", 0))?;
+    wake_rx.set_nonblocking(true)?;
+    let wake_tx = UdpSocket::bind(("127.0.0.1", 0))?;
+    wake_tx.connect(wake_rx.local_addr()?)?;
+    wake_tx.set_nonblocking(true)?;
+
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.workers
+    };
+    let (comp_tx, comp_rx) = channel::<Completion>();
+
+    let mut poller = sys::best(cfg.force_poll)?;
+    poller.add(
+        listener.as_raw_fd(),
+        TOKEN_LISTENER,
+        sys::Interest { read: true, write: false },
+    )?;
+    poller.add(
+        wake_rx.as_raw_fd(),
+        TOKEN_WAKE,
+        sys::Interest { read: true, write: false },
+    )?;
+
+    let mut reactor = Reactor {
+        cfg,
+        poller,
+        listener,
+        wake_rx,
+        wake_tx: Arc::new(wake_tx),
+        jobs: ThreadPool::new(workers),
+        backend,
+        comp_tx,
+        comp_rx,
+        conns: Vec::new(),
+        gens: Vec::new(),
+        free: Vec::new(),
+        stop: false,
+        outstanding: 0,
+    };
+    reactor.run()
+}
+
+struct Reactor {
+    cfg: ReactorConfig,
+    poller: Box<dyn sys::Poller>,
+    listener: TcpListener,
+    wake_rx: UdpSocket,
+    wake_tx: Arc<UdpSocket>,
+    jobs: ThreadPool,
+    backend: Arc<dyn InferBackend>,
+    comp_tx: Sender<Completion>,
+    comp_rx: Receiver<Completion>,
+    /// Connection slab; the token encodes the slot.
+    conns: Vec<Option<Conn>>,
+    /// Per-slot generation, bumped on close so completions for a dead
+    /// connection never reach a reused slot.
+    gens: Vec<u64>,
+    free: Vec<usize>,
+    stop: bool,
+    /// Jobs dispatched to workers whose completions have not come back
+    /// (counted across all connections, including closed ones).
+    outstanding: usize,
+}
+
+impl Reactor {
+    fn run(&mut self) -> Result<()> {
+        let mut events: Vec<sys::Event> = Vec::new();
+        let mut stopping_since: Option<Instant> = None;
+        loop {
+            self.poller.wait(&mut events, READ_POLL)?;
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.on_accept()?,
+                    TOKEN_WAKE => self.drain_wake(),
+                    t => self.on_conn_event(t - TOKEN_CONN0, *ev),
+                }
+            }
+            self.drain_completions();
+            if self.stop && stopping_since.is_none() {
+                stopping_since = Some(Instant::now());
+                self.begin_drain();
+            }
+            if let Some(t0) = stopping_since {
+                self.sweep_closing();
+                if self.outstanding == 0 && self.conns.iter().all(Option::is_none) {
+                    break;
+                }
+                if t0.elapsed() > self.cfg.drain_deadline {
+                    break;
+                }
+            }
+        }
+        Ok(())
+        // dropping self.jobs joins the workers: queued jobs finish, their
+        // completions land in a closed channel and are discarded
+    }
+
+    fn on_accept(&mut self) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    if self.stop {
+                        continue; // accepted post-shutdown: hang up
+                    }
+                    stream.set_nonblocking(true)?;
+                    // line-RPC: Nagle + delayed-ACK adds ~40-90ms per turn
+                    stream.set_nodelay(true)?;
+                    let slot = match self.free.pop() {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.gens.push(0);
+                            self.conns.len() - 1
+                        }
+                    };
+                    let fd = stream.as_raw_fd();
+                    if self
+                        .poller
+                        .add(
+                            fd,
+                            TOKEN_CONN0 + slot,
+                            sys::Interest { read: true, write: false },
+                        )
+                        .is_err()
+                    {
+                        self.free.push(slot);
+                        continue;
+                    }
+                    self.conns[slot] = Some(Conn::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 256];
+        while self.wake_rx.recv_from(&mut buf).is_ok() {}
+    }
+
+    fn on_conn_event(&mut self, slot: usize, ev: sys::Event) {
+        let mut lines: Vec<String> = Vec::new();
+        {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            if ev.hangup {
+                conn.broken = true;
+            } else {
+                if ev.readable
+                    && !conn.paused
+                    && !conn.closing
+                    && conn.on_readable(&mut lines).is_err()
+                {
+                    conn.broken = true;
+                }
+                if ev.writable && conn.flush().is_err() {
+                    conn.broken = true;
+                }
+            }
+        }
+        for line in lines {
+            self.dispatch(slot, line);
+        }
+        self.after_io(slot);
+    }
+
+    /// Hand one framed line to the worker pool.
+    fn dispatch(&mut self, slot: usize, line: String) {
+        if line.trim().is_empty() {
+            return; // blank keep-alive lines get no reply (both frontends)
+        }
+        let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+            return;
+        };
+        let seq = conn.alloc_seq();
+        let gen = self.gens[slot];
+        let token = TOKEN_CONN0 + slot;
+        self.outstanding += 1;
+        let backend = Arc::clone(&self.backend);
+        let tx = self.comp_tx.clone();
+        let wake = Arc::clone(&self.wake_tx);
+        self.jobs.execute(move || {
+            let d = dispatch_line(backend.as_ref(), line.trim());
+            let _ = tx.send(Completion {
+                token,
+                gen,
+                seq,
+                reply: d.reply,
+                shutdown: d.shutdown,
+                shed: d.shed,
+            });
+            let _ = wake.send(&[1]);
+        });
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok(c) = self.comp_rx.try_recv() {
+            self.outstanding = self.outstanding.saturating_sub(1);
+            if c.shutdown {
+                self.stop = true;
+            }
+            let slot = c.token - TOKEN_CONN0;
+            if self.gens.get(slot).copied() != Some(c.gen) {
+                continue; // connection died while the job ran
+            }
+            {
+                let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                    continue;
+                };
+                conn.complete(c.seq, c.reply, c.shed);
+                if conn.flush().is_err() {
+                    conn.broken = true;
+                }
+            }
+            self.after_io(slot);
+        }
+    }
+
+    /// Re-derive pause state and poller interest after any I/O or
+    /// completion touched `slot`; close it if finished or broken.
+    fn after_io(&mut self, slot: usize) {
+        let mut reg_change = None;
+        let close;
+        {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return;
+            };
+            conn.update_shed();
+            if conn.broken || (conn.closing && conn.idle()) {
+                close = true;
+            } else {
+                close = false;
+                let bp = &self.cfg.backpressure;
+                if conn.paused {
+                    if conn.may_resume(bp) {
+                        conn.paused = false;
+                    }
+                } else if conn.should_pause(bp) {
+                    conn.paused = true;
+                }
+                let want = (!conn.paused && !conn.closing, conn.wants_write());
+                if want != conn.registered {
+                    conn.registered = want;
+                    reg_change = Some((conn.stream.as_raw_fd(), want));
+                }
+            }
+        }
+        if let Some((fd, (read, write))) = reg_change {
+            let _ = self.poller.modify(
+                fd,
+                TOKEN_CONN0 + slot,
+                sys::Interest { read, write },
+            );
+        }
+        if close {
+            self.close_conn(slot);
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            let _ = self.poller.remove(conn.stream.as_raw_fd());
+            self.gens[slot] = self.gens[slot].wrapping_add(1);
+            self.free.push(slot);
+            // dropping conn closes the socket
+        }
+    }
+
+    /// Enter the shutdown drain: stop accepting, take one final read per
+    /// connection (complete lines already received are still answered),
+    /// and mark everything closing.
+    fn begin_drain(&mut self) {
+        let _ = self.poller.remove(self.listener.as_raw_fd());
+        for slot in 0..self.conns.len() {
+            let mut lines = Vec::new();
+            {
+                let Some(conn) = self.conns[slot].as_mut() else {
+                    continue;
+                };
+                if !conn.paused
+                    && !conn.closing
+                    && conn.on_readable(&mut lines).is_err()
+                {
+                    conn.broken = true;
+                }
+                conn.closing = true;
+            }
+            for line in lines {
+                self.dispatch(slot, line);
+            }
+            self.after_io(slot);
+        }
+    }
+
+    /// One drain-phase pass: flush what can be flushed, close what is
+    /// finished.
+    fn sweep_closing(&mut self) {
+        for slot in 0..self.conns.len() {
+            let done = match self.conns[slot].as_mut() {
+                Some(conn) => {
+                    if conn.flush().is_err() {
+                        conn.broken = true;
+                    }
+                    conn.broken || conn.idle()
+                }
+                None => continue,
+            };
+            if done {
+                self.close_conn(slot);
+            }
+        }
+    }
+}
+
+/// Readiness pollers: raw epoll on Linux, portable `poll(2)` elsewhere
+/// (and on demand for tests).  Both speak through direct `extern "C"`
+/// declarations -- std already links libc, so this adds no dependency.
+pub mod sys {
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    /// What a registration wants to hear about.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct Interest {
+        pub read: bool,
+        pub write: bool,
+    }
+
+    /// One readiness notification.
+    #[derive(Debug, Clone, Copy)]
+    pub struct Event {
+        pub token: usize,
+        pub readable: bool,
+        pub writable: bool,
+        pub hangup: bool,
+    }
+
+    /// A level-triggered readiness poller.
+    pub trait Poller: Send {
+        fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+        fn modify(
+            &mut self,
+            fd: RawFd,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()>;
+        fn remove(&mut self, fd: RawFd) -> io::Result<()>;
+        /// Fill `out` with ready events (cleared first); an interrupted
+        /// wait returns empty rather than erroring.
+        fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()>;
+        fn name(&self) -> &'static str;
+    }
+
+    /// Best poller for this platform: epoll where available unless
+    /// `force_poll` asks for the portable fallback.
+    pub fn best(force_poll: bool) -> io::Result<Box<dyn Poller>> {
+        #[cfg(target_os = "linux")]
+        if !force_poll {
+            return Ok(Box::new(epoll::Epoll::new()?));
+        }
+        let _ = force_poll;
+        Ok(Box::new(pollset::PollSet::new()))
+    }
+
+    /// Raw epoll via direct syscall wrappers (Linux only).
+    #[cfg(target_os = "linux")]
+    pub mod epoll {
+        use super::{Event, Interest, Poller};
+        use std::io;
+        use std::os::unix::io::RawFd;
+        use std::time::Duration;
+
+        // the kernel ABI packs epoll_event on x86_64 (__EPOLL_PACKED)
+        // and aligns it naturally everywhere else
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        struct EpollEvent {
+            events: u32,
+            data: u64,
+        }
+
+        extern "C" {
+            fn epoll_create1(flags: i32) -> i32;
+            fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+            fn epoll_wait(
+                epfd: i32,
+                events: *mut EpollEvent,
+                maxevents: i32,
+                timeout_ms: i32,
+            ) -> i32;
+            fn close(fd: i32) -> i32;
+        }
+
+        const EPOLL_CLOEXEC: i32 = 0o2000000;
+        const EPOLL_CTL_ADD: i32 = 1;
+        const EPOLL_CTL_DEL: i32 = 2;
+        const EPOLL_CTL_MOD: i32 = 3;
+        const EPOLLIN: u32 = 0x001;
+        const EPOLLOUT: u32 = 0x004;
+        const EPOLLERR: u32 = 0x008;
+        const EPOLLHUP: u32 = 0x010;
+
+        pub struct Epoll {
+            epfd: RawFd,
+            buf: Vec<EpollEvent>,
+        }
+
+        impl Epoll {
+            pub fn new() -> io::Result<Epoll> {
+                let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+                if epfd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Epoll { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 512] })
+            }
+
+            fn ctl(
+                &self,
+                op: i32,
+                fd: RawFd,
+                token: usize,
+                interest: Interest,
+            ) -> io::Result<()> {
+                let mut ev = EpollEvent { events: mask(interest), data: token as u64 };
+                let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+                if rc < 0 {
+                    Err(io::Error::last_os_error())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+
+        fn mask(i: Interest) -> u32 {
+            (if i.read { EPOLLIN } else { 0 }) | (if i.write { EPOLLOUT } else { 0 })
+        }
+
+        impl Poller for Epoll {
+            fn add(
+                &mut self,
+                fd: RawFd,
+                token: usize,
+                interest: Interest,
+            ) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+            }
+
+            fn modify(
+                &mut self,
+                fd: RawFd,
+                token: usize,
+                interest: Interest,
+            ) -> io::Result<()> {
+                self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+            }
+
+            fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+                // pre-2.6.9 kernels insist on a non-null event for DEL
+                self.ctl(EPOLL_CTL_DEL, fd, 0, Interest { read: false, write: false })
+            }
+
+            fn wait(
+                &mut self,
+                out: &mut Vec<Event>,
+                timeout: Duration,
+            ) -> io::Result<()> {
+                out.clear();
+                let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+                let n = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for ev in &self.buf[..n as usize] {
+                    // copy fields out of the (possibly packed) struct
+                    let bits = ev.events;
+                    let data = ev.data;
+                    out.push(Event {
+                        token: data as usize,
+                        readable: bits & EPOLLIN != 0,
+                        writable: bits & EPOLLOUT != 0,
+                        hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+
+            fn name(&self) -> &'static str {
+                "epoll"
+            }
+        }
+
+        impl Drop for Epoll {
+            fn drop(&mut self) {
+                unsafe {
+                    close(self.epfd);
+                }
+            }
+        }
+    }
+
+    /// Portable fallback: rebuild a pollfd array per wait.  O(n) per
+    /// tick where epoll is O(ready), fine as a fallback and for tests.
+    pub mod pollset {
+        use super::{Event, Interest, Poller};
+        use std::io;
+        use std::os::unix::io::RawFd;
+        use std::time::Duration;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct PollFd {
+            fd: i32,
+            events: i16,
+            revents: i16,
+        }
+
+        #[cfg(target_os = "linux")]
+        type Nfds = std::os::raw::c_ulong;
+        #[cfg(not(target_os = "linux"))]
+        type Nfds = std::os::raw::c_uint;
+
+        extern "C" {
+            fn poll(fds: *mut PollFd, nfds: Nfds, timeout_ms: i32) -> i32;
+        }
+
+        const POLLIN: i16 = 0x001;
+        const POLLOUT: i16 = 0x004;
+        const POLLERR: i16 = 0x008;
+        const POLLHUP: i16 = 0x010;
+        const POLLNVAL: i16 = 0x020;
+
+        struct Entry {
+            fd: RawFd,
+            token: usize,
+            interest: Interest,
+        }
+
+        #[derive(Default)]
+        pub struct PollSet {
+            entries: Vec<Entry>,
+            buf: Vec<PollFd>,
+        }
+
+        impl PollSet {
+            pub fn new() -> PollSet {
+                PollSet::default()
+            }
+        }
+
+        impl Poller for PollSet {
+            fn add(
+                &mut self,
+                fd: RawFd,
+                token: usize,
+                interest: Interest,
+            ) -> io::Result<()> {
+                if self.entries.iter().any(|e| e.fd == fd) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::AlreadyExists,
+                        "fd already registered",
+                    ));
+                }
+                self.entries.push(Entry { fd, token, interest });
+                Ok(())
+            }
+
+            fn modify(
+                &mut self,
+                fd: RawFd,
+                token: usize,
+                interest: Interest,
+            ) -> io::Result<()> {
+                for e in &mut self.entries {
+                    if e.fd == fd {
+                        e.token = token;
+                        e.interest = interest;
+                        return Ok(());
+                    }
+                }
+                Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+            }
+
+            fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+                let before = self.entries.len();
+                self.entries.retain(|e| e.fd != fd);
+                if self.entries.len() == before {
+                    return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+                }
+                Ok(())
+            }
+
+            fn wait(
+                &mut self,
+                out: &mut Vec<Event>,
+                timeout: Duration,
+            ) -> io::Result<()> {
+                out.clear();
+                self.buf.clear();
+                for e in &self.entries {
+                    // errors/hangups report regardless of the mask, so a
+                    // fully paused connection still gets noticed
+                    let mut events = 0i16;
+                    if e.interest.read {
+                        events |= POLLIN;
+                    }
+                    if e.interest.write {
+                        events |= POLLOUT;
+                    }
+                    self.buf.push(PollFd { fd: e.fd, events, revents: 0 });
+                }
+                let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+                let n = unsafe {
+                    poll(self.buf.as_mut_ptr(), self.buf.len() as Nfds, ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(e);
+                }
+                for (e, p) in self.entries.iter().zip(self.buf.iter()) {
+                    if p.revents == 0 {
+                        continue;
+                    }
+                    out.push(Event {
+                        token: e.token,
+                        readable: p.revents & POLLIN != 0,
+                        writable: p.revents & POLLOUT != 0,
+                        hangup: p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                    });
+                }
+                Ok(())
+            }
+
+            fn name(&self) -> &'static str {
+                "poll"
+            }
+        }
+    }
+}

@@ -545,6 +545,362 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+// ----- lazy scanning ---------------------------------------------------
+
+/// Zero-allocation lazy scanner over one JSON document (DESIGN.md §15).
+///
+/// Finds top-level object fields by *skipping* tokens instead of building
+/// a tree -- the serving hot path only needs `id`/`features`/`class` out
+/// of each infer line, and tree construction (String keys, BTreeMap,
+/// boxed values) dominates its parse cost.  mik-sdk's ADR-002 measured
+/// ~33x for exactly this partial-extraction pattern.
+///
+/// The scanner validates everything it walks with the same grammar as
+/// [`Json::parse`] (string escapes incl. surrogate pairs, the number
+/// token shape, nesting, no trailing garbage) and returns `None` for
+/// anything it is not *sure* about -- malformed input, escaped object
+/// keys (which would need unescaping to compare), non-object documents.
+/// Callers treat `None` as "fall back to the full parser", so lazy and
+/// eager paths accept exactly the same documents and every error message
+/// comes from one place.
+///
+/// Duplicate keys follow [`JsonObj::insert`] semantics: the last
+/// occurrence wins.
+pub struct JsonScan<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> JsonScan<'a> {
+    pub fn new(text: &'a str) -> JsonScan<'a> {
+        JsonScan { bytes: text.as_bytes() }
+    }
+
+    /// Walk the top-level object, calling `visit(raw_key, value_span)`
+    /// for every member.  `None`: not an object, malformed anywhere, a
+    /// key containing escapes, or trailing characters after the close.
+    fn walk<F: FnMut(&'a [u8], (usize, usize))>(&self, mut visit: F) -> Option<()> {
+        let mut s = Skipper { bytes: self.bytes, pos: 0 };
+        s.ws();
+        if s.bump()? != b'{' {
+            return None;
+        }
+        s.ws();
+        if s.peek() == Some(b'}') {
+            s.pos += 1;
+        } else {
+            loop {
+                s.ws();
+                let (ks, ke, escaped) = s.skip_string()?;
+                if escaped {
+                    // the raw key bytes would not compare against the
+                    // unescaped name; let the tree parser handle it
+                    return None;
+                }
+                s.ws();
+                if s.bump()? != b':' {
+                    return None;
+                }
+                s.ws();
+                let vs = s.pos;
+                s.skip_value()?;
+                visit(&self.bytes[ks..ke], (vs, s.pos));
+                s.ws();
+                match s.bump()? {
+                    b',' => continue,
+                    b'}' => break,
+                    _ => return None,
+                }
+            }
+        }
+        s.ws();
+        if s.pos != self.bytes.len() {
+            return None; // Json::parse rejects trailing characters too
+        }
+        Some(())
+    }
+
+    /// Raw text of the value of top-level field `name` -- the last
+    /// occurrence, matching the tree parser's duplicate-key overwrite.
+    /// `None`: absent field, or any condition [`JsonScan::walk`] rejects.
+    pub fn field(&self, name: &str) -> Option<&'a str> {
+        let mut found = None;
+        self.walk(|key, span| {
+            if key == name.as_bytes() {
+                found = Some(span);
+            }
+        })?;
+        let (s, e) = found?;
+        std::str::from_utf8(&self.bytes[s..e]).ok()
+    }
+
+    /// `Some(true/false)` iff the document is a well-formed object the
+    /// scanner fully understands; `None` falls back like [`Self::field`].
+    pub fn has_field(&self, name: &str) -> Option<bool> {
+        let mut found = false;
+        self.walk(|key, _| {
+            if key == name.as_bytes() {
+                found = true;
+            }
+        })?;
+        Some(found)
+    }
+
+    /// Field as a number, mirroring [`Json::as_f64`] (the value must be
+    /// a number token, not a stringified number).
+    pub fn field_f64(&self, name: &str) -> Option<f64> {
+        let raw = self.field(name)?;
+        let first = *raw.as_bytes().first()?;
+        if first != b'-' && !first.is_ascii_digit() {
+            return None;
+        }
+        raw.parse::<f64>().ok()
+    }
+
+    /// Field as a u64 through the f64 path, mirroring [`Json::as_u64`]
+    /// exactly (so `7.0` and `1e3` are valid ids on both paths).
+    pub fn field_u64(&self, name: &str) -> Option<u64> {
+        let n = self.field_f64(name)?;
+        if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
+            Some(n as u64)
+        } else {
+            None
+        }
+    }
+
+    /// Field as an escape-free string literal's content.  Strings that
+    /// need unescaping return `None` (fall back to the tree parser).
+    pub fn field_str(&self, name: &str) -> Option<&'a str> {
+        let raw = self.field(name)?.as_bytes();
+        if raw.len() < 2 || raw[0] != b'"' {
+            return None;
+        }
+        let inner = &raw[1..raw.len() - 1];
+        if inner.contains(&b'\\') {
+            return None;
+        }
+        std::str::from_utf8(inner).ok()
+    }
+
+    /// Parse field `name` as a flat array of numbers, appending to
+    /// `out`; returns how many were appended.  `None`: absent, not an
+    /// array, any non-number element, or a malformed document -- the
+    /// cases where the tree parser's error decides.
+    pub fn field_nums(&self, name: &str, out: &mut Vec<f64>) -> Option<usize> {
+        let raw = self.field(name)?.as_bytes();
+        let before = out.len();
+        match Self::nums_into(raw, out) {
+            Some(()) => Some(out.len() - before),
+            None => {
+                out.truncate(before); // failed scans leave no partial output
+                None
+            }
+        }
+    }
+
+    fn nums_into(raw: &[u8], out: &mut Vec<f64>) -> Option<()> {
+        let mut s = Skipper { bytes: raw, pos: 0 };
+        if s.bump()? != b'[' {
+            return None;
+        }
+        s.ws();
+        if s.peek() == Some(b']') {
+            s.pos += 1;
+        } else {
+            loop {
+                s.ws();
+                out.push(s.skip_number()?);
+                s.ws();
+                match s.bump()? {
+                    b',' => continue,
+                    b']' => break,
+                    _ => return None,
+                }
+            }
+        }
+        if s.pos != raw.len() {
+            return None;
+        }
+        Some(())
+    }
+}
+
+/// Token-skipping cursor behind [`JsonScan`]: same grammar as
+/// [`Parser`], but no value construction.  Every method returns `None`
+/// on input `Parser` would reject, which the scan surfaces as
+/// "fall back to the full parse".
+struct Skipper<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Skipper<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn skip_value(&mut self) -> Option<()> {
+        self.ws();
+        match self.peek()? {
+            b'{' => self.skip_object(),
+            b'[' => self.skip_array(),
+            b'"' => self.skip_string().map(|_| ()),
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            c if c == b'-' || c.is_ascii_digit() => self.skip_number().map(|_| ()),
+            _ => None,
+        }
+    }
+
+    fn literal(&mut self, word: &[u8]) -> Option<()> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    fn skip_object(&mut self) -> Option<()> {
+        if self.bump()? != b'{' {
+            return None;
+        }
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Some(());
+        }
+        loop {
+            self.ws();
+            self.skip_string()?;
+            self.ws();
+            if self.bump()? != b':' {
+                return None;
+            }
+            self.skip_value()?;
+            self.ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Some(()),
+                _ => return None,
+            }
+        }
+    }
+
+    fn skip_array(&mut self) -> Option<()> {
+        if self.bump()? != b'[' {
+            return None;
+        }
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Some(());
+        }
+        loop {
+            self.skip_value()?;
+            self.ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Some(()),
+                _ => return None,
+            }
+        }
+    }
+
+    /// Skip a string, returning the content span (between the quotes)
+    /// and whether it contained any escape.  Escape validation matches
+    /// [`Parser::string`] including surrogate pairing, so the scanner
+    /// never accepts a string the parser rejects.
+    fn skip_string(&mut self) -> Option<(usize, usize, bool)> {
+        if self.bump()? != b'"' {
+            return None;
+        }
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.bump()? {
+                b'"' => return Some((start, self.pos - 1, escaped)),
+                b'\\' => {
+                    escaped = true;
+                    match self.bump()? {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: a low one must follow
+                                if self.bump()? != b'\\' || self.bump()? != b'u' {
+                                    return None;
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return None;
+                                }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return None; // lone low surrogate
+                            }
+                        }
+                        _ => return None,
+                    }
+                }
+                b if b < 0x20 => return None, // raw control char
+                // multibyte UTF-8 payload: the input came from a &str,
+                // so the bytes are already valid; pass through
+                _ => {}
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = (self.bump()? as char).to_digit(16)?;
+            v = v * 16 + d;
+        }
+        Some(v)
+    }
+
+    /// Skip one number token ([`Parser::number`]'s walk) and validate it
+    /// parses, returning the value.
+    fn skip_number(&mut self) -> Option<f64> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).ok()?;
+        text.parse::<f64>().ok()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -636,5 +992,144 @@ mod tests {
         assert_eq!(Json::Num(-1.0).as_u64(), None);
         assert_eq!(Json::Num(1.5).as_u64(), None);
         assert_eq!(Json::Num(12.0).as_u64(), Some(12));
+    }
+
+    // ----- lazy scanner ----------------------------------------------
+
+    #[test]
+    fn scan_extracts_fields_without_a_tree() {
+        let line = r#"{"id": 42, "features": [0.5, -1.25e2, 3], "class": "premium"}"#;
+        let s = JsonScan::new(line);
+        assert_eq!(s.field_u64("id"), Some(42));
+        assert_eq!(s.field("features"), Some("[0.5, -1.25e2, 3]"));
+        assert_eq!(s.field_str("class"), Some("premium"));
+        assert_eq!(s.has_field("cmd"), Some(false));
+        let mut nums = Vec::new();
+        assert_eq!(s.field_nums("features", &mut nums), Some(3));
+        assert_eq!(nums, vec![0.5, -125.0, 3.0]);
+    }
+
+    #[test]
+    fn scan_id_follows_the_f64_path_like_as_u64() {
+        // 7.0 and 1e3 are valid u64s through Json::as_u64; 1.5 and -1
+        // are not -- the scanner must agree exactly
+        assert_eq!(JsonScan::new(r#"{"id":7.0}"#).field_u64("id"), Some(7));
+        assert_eq!(JsonScan::new(r#"{"id":1e3}"#).field_u64("id"), Some(1000));
+        assert_eq!(JsonScan::new(r#"{"id":1.5}"#).field_u64("id"), None);
+        assert_eq!(JsonScan::new(r#"{"id":-1}"#).field_u64("id"), None);
+        assert_eq!(JsonScan::new(r#"{"id":"7"}"#).field_u64("id"), None);
+    }
+
+    #[test]
+    fn scan_skips_strings_with_escapes_and_surrogate_pairs() {
+        // escapes live in a *skipped* field; the target field still lands
+        let line = r#"{"note":"a\n\"b\"\\ A \ud83d\ude00 😀","id":9}"#;
+        let s = JsonScan::new(line);
+        assert_eq!(s.field_u64("id"), Some(9));
+        assert_eq!(s.has_field("note"), Some(true));
+        // a lone high surrogate is malformed on both paths
+        let bad = r#"{"note":"\ud83d","id":9}"#;
+        assert!(Json::parse(bad).is_err());
+        assert_eq!(JsonScan::new(bad).field_u64("id"), None);
+        // ... as is a lone low surrogate
+        let bad = r#"{"note":"\ude00x","id":9}"#;
+        assert!(Json::parse(bad).is_err());
+        assert_eq!(JsonScan::new(bad).field_u64("id"), None);
+        // and a bad escape letter
+        let bad = r#"{"note":"\q","id":9}"#;
+        assert!(Json::parse(bad).is_err());
+        assert_eq!(JsonScan::new(bad).field_u64("id"), None);
+    }
+
+    #[test]
+    fn scan_skips_nested_objects_and_arrays() {
+        let line = concat!(
+            r#"{"meta":{"a":[1,{"b":[[],{}]},"x"],"c":{"d":null}},"#,
+            r#""id":3,"tail":[true,false,[1,[2,[3]]]]}"#
+        );
+        let s = JsonScan::new(line);
+        assert_eq!(s.field_u64("id"), Some(3));
+        assert_eq!(s.field("meta"), Some(r#"{"a":[1,{"b":[[],{}]},"x"],"c":{"d":null}}"#));
+        // unbalanced nesting is malformed
+        assert_eq!(JsonScan::new(r#"{"a":[1,{"b":2},"id":3}"#).field_u64("id"), None);
+    }
+
+    #[test]
+    fn scan_rejects_truncated_lines() {
+        let full = r#"{"id":1,"features":[0.5,0.25],"class":"batch"}"#;
+        assert_eq!(JsonScan::new(full).field_u64("id"), Some(1));
+        for cut in 1..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            let prefix = &full[..cut];
+            assert_eq!(
+                JsonScan::new(prefix).field_u64("id"),
+                None,
+                "truncation at {cut} ({prefix:?}) must not scan"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_rejects_what_the_parser_rejects() {
+        for doc in [
+            "",
+            "not json",
+            r#"{"id":1,} "#,
+            r#"{"id":1} trailing"#,
+            r#"{"id" 1}"#,
+            r#"{"id":01x}"#,
+            r#"{"id":nulll}"#,
+            r#"{"id":1e}"#,
+            r#"{"id":-}"#,
+            r#"{"id":tru}"#,
+            "{\"id\":\"\u{1}\"}",
+        ] {
+            assert!(Json::parse(doc).is_err(), "parser accepts {doc:?}");
+            assert_eq!(JsonScan::new(doc).has_field("id"), None, "scan accepts {doc:?}");
+        }
+        // valid JSON that is not an object also defers to the parser
+        // (whose typed accessors then produce the canonical error)
+        assert_eq!(JsonScan::new("[1,2]").has_field("id"), None);
+        assert_eq!(JsonScan::new("42").has_field("id"), None);
+    }
+
+    #[test]
+    fn scan_duplicate_keys_last_wins_like_insert() {
+        let line = r#"{"id":1,"id":2}"#;
+        assert_eq!(JsonScan::new(line).field_u64("id"), Some(2));
+        assert_eq!(Json::parse(line).unwrap().get("id").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn scan_escaped_keys_defer_to_the_parser() {
+        // "id" unescapes to "id"; raw-byte comparison cannot see
+        // that, so the scan must bail (None) instead of missing it
+        let line = "{\"i\\u0064\":5}";
+        assert_eq!(JsonScan::new(line).has_field("id"), None);
+        assert_eq!(Json::parse(line).unwrap().get("id").as_u64(), Some(5));
+    }
+
+    #[test]
+    fn scan_field_nums_rejects_non_numeric_elements() {
+        let mut out = Vec::new();
+        assert_eq!(
+            JsonScan::new(r#"{"features":["x"]}"#).field_nums("features", &mut out),
+            None
+        );
+        assert_eq!(
+            JsonScan::new(r#"{"features":[1,[2]]}"#).field_nums("features", &mut out),
+            None
+        );
+        assert_eq!(
+            JsonScan::new(r#"{"features":[1,null]}"#).field_nums("features", &mut out),
+            None
+        );
+        assert!(out.is_empty(), "failed scans must not leave partial output");
+        assert_eq!(
+            JsonScan::new(r#"{"features":[]}"#).field_nums("features", &mut out),
+            Some(0)
+        );
     }
 }

@@ -15,7 +15,7 @@ use abc_serve::coordinator::replica::{PoolConfig, ReplicaPool};
 use abc_serve::metrics::Metrics;
 use abc_serve::obs::{ObsHook, Tracer};
 use abc_serve::planner::{GearHandle, GearPlan};
-use abc_serve::server::{serve, Client};
+use abc_serve::server::{serve, serve_with, Client, Frontend};
 use abc_serve::trafficgen::SyntheticClassifier;
 use abc_serve::types::{Class, Request, RuleKind};
 use abc_serve::util::json::Json;
@@ -426,6 +426,191 @@ fn slo_command_roundtrips_per_class_books() {
     assert!(text.contains("class_premium_submitted 1"), "exposition:\n{text}");
     assert!(text.contains("class_batch_completed 1"), "exposition:\n{text}");
 
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ----- frontend tests: reactor vs threads ------------------------------
+
+/// Shutdown drain pin (both frontends): a single write carrying a
+/// complete infer line AND the shutdown line.  Both lines are "already
+/// received" when the server begins stopping, so the infer must still
+/// be answered -- in order, before the ack -- and the connection must
+/// close cleanly with the server joining promptly.
+fn pipelined_shutdown_roundtrip(frontend: Frontend, port: u16) {
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve_with(pool, port, frontend));
+    std::thread::sleep(Duration::from_millis(300));
+
+    use std::io::{BufRead, BufReader, Read, Write};
+    let mut stream = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .write_all(
+            b"{\"id\":1,\"features\":[0.5,-0.5,0.25,1.0]}\n{\"cmd\":\"shutdown\"}\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut infer_reply = String::new();
+    reader.read_line(&mut infer_reply).unwrap();
+    assert!(
+        infer_reply.contains("\"prediction\""),
+        "{}: infer line not answered before close: {infer_reply:?}",
+        frontend.name()
+    );
+    assert_eq!(
+        Json::parse(infer_reply.trim()).unwrap().get("id").as_u64(),
+        Some(1),
+        "{}: {infer_reply:?}",
+        frontend.name()
+    );
+    let mut ack = String::new();
+    reader.read_line(&mut ack).unwrap();
+    assert!(
+        ack.contains("\"shutdown\":true"),
+        "{}: expected the shutdown ack after the infer reply: {ack:?}",
+        frontend.name()
+    );
+    // then a clean EOF: nothing else rides the connection
+    let mut rest = String::new();
+    let _ = reader.read_to_string(&mut rest);
+    assert_eq!(rest.trim(), "", "{}: bytes after the ack", frontend.name());
+    // and the server joins within the drain bound
+    let t0 = std::time::Instant::now();
+    server.join().unwrap().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "{}: drain took {:?}",
+        frontend.name(),
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn shutdown_drains_pipelined_lines_on_the_reactor_frontend() {
+    pipelined_shutdown_roundtrip(Frontend::Reactor, 8010);
+}
+
+#[test]
+fn shutdown_drains_pipelined_lines_on_the_threaded_frontend() {
+    pipelined_shutdown_roundtrip(Frontend::Threads, 8011);
+}
+
+/// Drive one frontend through a mixed request script and collect its
+/// reply lines, with the one nondeterministic field (`latency_s`)
+/// normalized away.
+fn frontend_replies(frontend: Frontend, port: u16, lines: &[&str]) -> Vec<String> {
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve_with(pool, port, frontend));
+    std::thread::sleep(Duration::from_millis(300));
+    let mut client = Client::connect(port).unwrap();
+    let mut out = Vec::new();
+    for line in lines {
+        let mut r = client.roundtrip(line).unwrap();
+        if let Some(i) = r.find("\"latency_s\":") {
+            let j = r[i..].find(',').map(|o| i + o).unwrap_or(r.len());
+            r.replace_range(i..j, "\"latency_s\":0");
+        }
+        out.push(r);
+    }
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    out
+}
+
+#[test]
+fn frontends_answer_byte_identically() {
+    // deterministic replies: the synthetic classifier is a pure
+    // function of the features, and every error string comes from the
+    // shared dispatch path
+    let lines = [
+        r#"{"id":1,"features":[0.5,-0.5,0.25,1.0]}"#,
+        r#"{"id":2,"features":[0.1,0.2,0.3,0.4],"class":"premium"}"#,
+        r#"{"id":3,"features":[0.9,0.9,0.9,0.9],"class":null}"#,
+        "garbage",
+        r#"{"cmd":"nope"}"#,
+        r#"{"id":4}"#,
+        r#"{"id":5,"features":[]}"#,
+        r#"{"id":6,"features":["x"]}"#,
+        r#"{"id":7,"features":[1.0],"class":"gold"}"#,
+        r#"{"id":8,"features":[1.0],"class":3}"#,
+        r#"{"id":9.5,"features":[1.0]}"#,
+    ];
+    let threads = frontend_replies(Frontend::Threads, 8012, &lines);
+    let reactor = frontend_replies(Frontend::Reactor, 8013, &lines);
+    assert_eq!(threads, reactor, "wire replies must be byte-identical");
+}
+
+#[cfg(unix)]
+#[test]
+fn reactor_poll_fallback_serves_and_drains() {
+    use abc_serve::server::reactor::{serve_reactor_with, ReactorConfig};
+    let port = 8014;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || {
+        serve_reactor_with(
+            pool,
+            port,
+            ReactorConfig { force_poll: true, ..ReactorConfig::default() },
+        )
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    let mut client = Client::connect(port).unwrap();
+    for id in 0..5 {
+        client.infer(id, &[0.5, -0.5, 0.25, 1.0]).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.get("stats").get("counters").get("requests_submitted").as_u64()
+            >= Some(5),
+        "got {stats}"
+    );
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn reactor_multiplexes_many_connections_with_fifo_replies() {
+    let port = 8015;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || serve_with(pool, port, Frontend::Reactor));
+    std::thread::sleep(Duration::from_millis(300));
+
+    // many concurrent connections, one infer each -- all multiplexed
+    // over the single reactor thread
+    let mut joins = Vec::new();
+    for c in 0..40u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(port).unwrap();
+            client.infer(c, &[0.5, -0.5, 0.25, 1.0]).unwrap();
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // one connection pipelines 32 lines in a single write; replies come
+    // back in dispatch order even though workers finish out of order
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut batch = String::new();
+    for id in 0..32 {
+        batch.push_str(&format!(
+            "{{\"id\":{id},\"features\":[0.5,-0.5,0.25,1.0]}}\n"
+        ));
+    }
+    stream.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    for id in 0..32 {
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = Json::parse(reply.trim()).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(id), "reply out of order: {reply}");
+    }
+    drop(reader); // EOF: the reactor reaps the connection
+
+    let mut client = Client::connect(port).unwrap();
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# Hot-path lock lint: fail CI when a coordinator/ or obs/ file grows
-# new Mutex/RwLock acquisitions.
+# Hot-path lock lint: fail CI when a coordinator/, obs/ or server/
+# file grows new Mutex/RwLock acquisitions.
 #
 # The serving request path (rust/src/coordinator/) must stay lock-free
 # per request: metrics go through pre-resolved Arc handles with striped
@@ -9,6 +9,10 @@
 # OFF the request path (the tracer's per-slot micro-locks, the sink's
 # buffer, the drift monitor's per-tier window -- all touched only by
 # sampled/background work), so growth there is equally suspicious.
+# rust/src/server/ joined with the event-driven frontend (DESIGN.md
+# §15): the reactor's readiness loop owns all connection state on one
+# thread, hands work to util::threadpool over channels, and must never
+# grow a registry lock -- the baseline for every server/ file is zero.
 # The acquisitions that legitimately remain -- the batcher's gate, the
 # pool's replica-slot RwLock, and the obs-side ones above -- are frozen
 # in scripts/hotpath_lock_baseline.txt; adding an acquisition anywhere
@@ -26,7 +30,7 @@ pattern='\.lock\(\)|\.read\(\)|\.write\(\)'
 
 current() {
     # stable per-file counts of lock/read/write acquisitions
-    for f in rust/src/coordinator/*.rs rust/src/obs/*.rs; do
+    for f in rust/src/coordinator/*.rs rust/src/obs/*.rs rust/src/server/*.rs; do
         printf '%s %s\n' "$f" "$(grep -c -E "$pattern" "$f" || true)"
     done | sort
 }
@@ -64,4 +68,4 @@ in the commit message.
 EOF
     exit "$status"
 fi
-echo "hot-path lock lint: OK (coordinator/ + obs/ lock counts within baseline)"
+echo "hot-path lock lint: OK (coordinator/ + obs/ + server/ lock counts within baseline)"
