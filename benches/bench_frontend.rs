@@ -1,18 +1,30 @@
 //! Frontend bench: the event-driven reactor vs the thread-per-connection
-//! path (the ISSUE 9 acceptance bar).
+//! path (the ISSUE 9 acceptance bar), plus the PR 10 sharding and
+//! vectored-I/O axes.
 //!
 //! Drives hundreds of concurrent closed-loop connections against the
 //! same synthetic pool behind each frontend and compares:
 //!
 //! * **connections per server thread** -- the threaded frontend spends
-//!   one OS thread per client (+1 acceptor); the reactor spends one
-//!   event loop + a worker pool sized to cores regardless of client
-//!   count.  The bar: the reactor sustains >= 10x the connections per
-//!   server thread;
+//!   one OS thread per client (+1 acceptor); the reactor spends event
+//!   loops + a worker pool sized to cores regardless of client count.
+//!   The bar: the reactor sustains >= 10x the connections per server
+//!   thread;
 //! * **goodput** -- answered roundtrips per second; the reactor must
 //!   hold >= 95% of the threaded frontend's goodput at the same
 //!   connection count;
 //! * **p50/p99 roundtrip latency** for the record.
+//!
+//! A second, pipelined group (unix only) saturates the reactor itself
+//! with batched lines over a near-free backend and sweeps the shard
+//! count (1/2/4):
+//!
+//! * **writes per reply** -- write syscalls issued per reply drained
+//!   ([`abc_serve::server::conn::wire_stats`] deltas); one-write-per-
+//!   reply is the non-vectored baseline, so `writev` must land >= 30%
+//!   fewer (<= 0.7);
+//! * **shard scaling** -- 4 shards must reach >= 2x the goodput of 1
+//!   shard at saturation.
 //!
 //! A micro group times the wire-decode paths themselves: the lazy
 //! `scan_request_line` (no JSON tree) vs the eager `parse_request_line`
@@ -119,6 +131,113 @@ fn drive(frontend: Frontend, port: u16, conns: usize) -> Drive {
     }
 }
 
+/// A near-free backend so the pipelined group saturates the reactor
+/// (framing, dispatch, writev) rather than inference.
+#[cfg(unix)]
+fn fast_pool() -> Arc<ReplicaPool> {
+    Arc::new(ReplicaPool::spawn(
+        Arc::new(SyntheticClassifier::new(DIM, 3, Duration::ZERO, Duration::ZERO)),
+        PoolConfig {
+            replicas: 2,
+            max_queue: 4096,
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(1),
+            },
+            ..PoolConfig::default()
+        },
+        Metrics::new(),
+    ))
+}
+
+#[cfg(unix)]
+struct PipeDrive {
+    goodput_rps: f64,
+    writes_per_reply: f64,
+    answered: u64,
+}
+
+/// Pipelined load against a sharded reactor: `conns` client threads,
+/// each writing `batch` infer lines in ONE write then reading `batch`
+/// replies, until the deadline.  The batch keeps several replies
+/// queued per connection so the reply path can exercise `writev`;
+/// writes-per-reply comes from `wire_stats` deltas over the window.
+#[cfg(unix)]
+fn drive_pipelined(shards: usize, port: u16, conns: usize, batch: usize) -> PipeDrive {
+    use abc_serve::server::conn::wire_stats;
+    use abc_serve::server::reactor::{serve_reactor_with, ReactorConfig};
+    use std::io::{BufRead, BufReader, Write};
+
+    let server_pool = fast_pool();
+    let server = std::thread::spawn(move || {
+        serve_reactor_with(
+            server_pool,
+            port,
+            ReactorConfig { shards, ..ReactorConfig::default() },
+        )
+    });
+    std::thread::sleep(Duration::from_millis(300));
+
+    let (w0, r0) = wire_stats();
+    let t0 = Instant::now();
+    let deadline = t0 + RUN;
+    let clients: Vec<_> = (0..conns)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(("127.0.0.1", port))
+                    .expect("connect");
+                stream.set_nodelay(true).expect("nodelay");
+                let mut writer = stream.try_clone().expect("clone stream");
+                let mut reader = BufReader::new(stream);
+                let feats = (0..DIM)
+                    .map(|d| format!("{:.2}", (c + d) as f32 * 0.01))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let mut block = String::new();
+                for i in 0..batch {
+                    block.push_str(&format!(
+                        "{{\"id\":{},\"features\":[{feats}]}}\n",
+                        c * batch + i
+                    ));
+                }
+                let mut line = String::new();
+                let mut ok = 0u64;
+                while Instant::now() < deadline {
+                    if writer.write_all(block.as_bytes()).is_err() {
+                        break;
+                    }
+                    for _ in 0..batch {
+                        line.clear();
+                        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                            return ok;
+                        }
+                        if line.contains("\"prediction\"") {
+                            ok += 1;
+                        }
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let mut answered = 0u64;
+    for c in clients {
+        answered += c.join().expect("client thread");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (w1, r1) = wire_stats();
+
+    let mut stopper = Client::connect(port).expect("connect for shutdown");
+    stopper.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("serve");
+
+    PipeDrive {
+        goodput_rps: answered as f64 / elapsed,
+        writes_per_reply: (w1 - w0) as f64 / (r1 - r0).max(1) as f64,
+        answered,
+    }
+}
+
 fn main() {
     // wire-decode micro: what one line costs on each path
     let line = r#"{"id":123,"features":[0.125,-0.5,0.25,1.0,0.75,-0.125,0.0625,2.0],"class":"premium"}"#;
@@ -211,6 +330,79 @@ fn main() {
     o.insert("ratio_conns_per_thread", Json::num(ratio_conns));
     o.insert("goodput_ratio", Json::num(ratio_goodput));
     o.insert("reactor_10x_at_95pct_goodput", Json::Bool(verdict));
+
+    #[cfg(unix)]
+    {
+        let pipe_conns = (4 * workers).clamp(16, 64);
+        let batch = 16;
+        println!(
+            "\npipelined: {pipe_conns} connections x {batch} lines/write x \
+             {:.0?} against a near-free backend, shards 1/2/4\n",
+            RUN
+        );
+        let shards_axis = [1usize, 2, 4];
+        let ports = [8119u16, 8120, 8121];
+        let drives: Vec<PipeDrive> = shards_axis
+            .iter()
+            .zip(ports)
+            .map(|(&s, p)| drive_pipelined(s, p, pipe_conns, batch))
+            .collect();
+
+        let mut table = Table::new(
+            "sharded reactor (pipelined load)",
+            &["shards", "conns", "goodput r/s", "answered", "writes/reply"],
+        );
+        for (s, d) in shards_axis.iter().zip(&drives) {
+            table.row(vec![
+                format!("{s}"),
+                format!("{pipe_conns}"),
+                format!("{:.0}", d.goodput_rps),
+                format!("{}", d.answered),
+                format!("{:.3}", d.writes_per_reply),
+            ]);
+        }
+        println!("{}", table.render());
+
+        // one-write-per-reply is the non-vectored baseline: writev must
+        // batch the queue into >= 30% fewer write syscalls per reply
+        let wpr = drives[0].writes_per_reply;
+        let writev_verdict = wpr <= 0.7;
+        println!(
+            "verdict: writev >= 30% fewer write syscalls per reply \
+             ({wpr:.3} <= 0.7): {}",
+            if writev_verdict { "YES" } else { "NO" },
+        );
+        let scale = drives[2].goodput_rps / drives[0].goodput_rps.max(1e-9);
+        let scale_verdict = scale >= 2.0;
+        println!(
+            "verdict: 4 shards >= 2x goodput of 1 shard at saturation \
+             ({scale:.2}x): {}",
+            if scale_verdict { "YES" } else { "NO" },
+        );
+
+        let mut po = JsonObj::new();
+        po.insert("conns", Json::num(pipe_conns as f64));
+        po.insert("batch", Json::num(batch as f64));
+        let cases = shards_axis
+            .iter()
+            .zip(&drives)
+            .map(|(&s, d)| {
+                let mut c = JsonObj::new();
+                c.insert("shards", Json::num(s as f64));
+                c.insert("goodput_rps", Json::num(d.goodput_rps));
+                c.insert("answered", Json::num(d.answered as f64));
+                c.insert("writes_per_reply", Json::num(d.writes_per_reply));
+                Json::Obj(c)
+            })
+            .collect();
+        po.insert("cases", Json::Arr(cases));
+        po.insert("writes_per_reply_1shard", Json::num(wpr));
+        po.insert("writev_30pct_fewer_writes", Json::Bool(writev_verdict));
+        po.insert("shard4_vs_1_goodput", Json::num(scale));
+        po.insert("shards4_2x_goodput", Json::Bool(scale_verdict));
+        o.insert("pipelined", Json::Obj(po));
+    }
+
     o.insert("micro", micro.to_json());
     emit_json("frontend", Json::Obj(o)).expect("emit json");
 }

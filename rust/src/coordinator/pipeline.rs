@@ -147,8 +147,22 @@ impl Pipeline {
         let outstanding = Arc::new(AtomicUsize::new(0));
         let out = Arc::clone(&outstanding);
         let submitted = metrics.counter("requests_submitted");
+        // feature staging scratch, owned by the collector thread's
+        // closure: cleared and refilled per batch, so steady-state
+        // flushes stop allocating once it has grown to the largest
+        // batch seen (`scripts/check_hotpath_allocs.sh` freezes this
+        // file's allocation count)
+        let mut features: Vec<f32> = Vec::new();
         let batcher = Batcher::spawn(cfg, move |batch: Vec<Item<Job>>| {
-            process_batch(classifier.as_ref(), &bm, &out, gear.as_deref(), &obs, batch);
+            process_batch(
+                classifier.as_ref(),
+                &bm,
+                &out,
+                gear.as_deref(),
+                &obs,
+                &mut features,
+                batch,
+            );
         });
         Pipeline { batcher, metrics, outstanding, submitted, dim }
     }
@@ -244,11 +258,13 @@ fn process_batch(
     outstanding: &AtomicUsize,
     gear: Option<&GearHandle>,
     obs: &ObsHook,
+    features: &mut Vec<f32>,
     batch: Vec<Item<Job>>,
 ) {
     let n = batch.len();
     let dim = classifier.dim();
-    let mut features = Vec::with_capacity(n * dim);
+    features.clear();
+    features.reserve(n * dim);
     for item in &batch {
         features.extend_from_slice(&item.payload.request.features);
     }

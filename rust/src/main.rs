@@ -16,10 +16,13 @@
 //!                   --mid-ks adds three-level ladders to the grid)
 //! repro serve       --suite S [--port 7878] [--max-batch 32] [--max-wait-ms 2]
 //!                   [--replicas 1] [--max-queue 256]
-//!                   [--frontend reactor|threads]  (default reactor: one
-//!                   epoll/poll event loop + a worker pool sized to
-//!                   cores; threads keeps the old thread-per-connection
-//!                   path for differential testing)
+//!                   [--frontend reactor|threads]  (default reactor:
+//!                   sharded epoll/poll event loops + a worker pool
+//!                   sized to cores; threads keeps the old
+//!                   thread-per-connection path for differential
+//!                   testing)
+//!                   [--shards N]  (reactor event-loop shards; 0 =
+//!                   auto-size to min(4, cores/2))
 //!                   [--plan plan.json] [--top-rps R]  (adaptive gears; thetas
 //!                   re-calibrated on the suite, ladder rescaled to R)
 //!                   [--autoscale --min-replicas 1 --max-replicas N
@@ -491,6 +494,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let suite = args.req_str("suite")?;
     let port = args.u16_or("port", 7878)?;
     let frontend = frontend_of(args)?;
+    let shards = args.usize_or("shards", 0)?;
     let rule = rule_of(args)?;
     let epsilon = args.f64_or("epsilon", 0.03)?;
     let max_batch = args.usize_or("max-batch", 32)?;
@@ -744,7 +748,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         frontend.name(),
         pool.n_replicas()
     );
-    abc_serve::server::serve_with(pool, port, frontend)
+    abc_serve::server::serve_sharded(pool, port, frontend, shards)
 }
 
 /// `serve --tiered`: one ReplicaPool per cascade level with deferral
@@ -992,7 +996,12 @@ fn serve_tiered(
          max-queue {max_queue}/replica, ${:.2}/h at spawn)",
         fleet.dollars_per_hour()
     );
-    abc_serve::server::serve_with(fleet, port, frontend_of(args)?)
+    abc_serve::server::serve_sharded(
+        fleet,
+        port,
+        frontend_of(args)?,
+        args.usize_or("shards", 0)?,
+    )
 }
 
 /// Query a running server's stats snapshot; with `--events`, also dump

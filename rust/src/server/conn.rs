@@ -1,20 +1,58 @@
 //! Per-connection state machine for the event-driven frontend
-//! (DESIGN.md §15): read buffer -> line framing -> dispatch (tracked by
-//! a FIFO reply sequencer) -> write buffer, with pause/resume decisions
-//! the reactor turns into poller interest changes.
+//! (DESIGN.md §15-§16): read scratch -> line framing -> dispatch
+//! (tracked by a FIFO reply sequencer) -> pooled write queue drained
+//! with vectored writes, with pause/resume decisions the reactor turns
+//! into poller interest changes.
 //!
-//! Everything except the socket reads/writes is plain data owned by the
-//! reactor thread (no locks, no shared state), so framing, sequencing
+//! Everything except the socket reads/writes is plain data owned by one
+//! reactor shard (no locks, no shared state), so framing, sequencing
 //! and the backpressure rule unit-test here without a poller.
+//!
+//! The reply path is allocation-free in steady state: replies arrive as
+//! [`PooledBuf`]s rendered by workers, queue here without copying, and
+//! recycle into the [`BufPool`](crate::util::bufpool::BufPool) the
+//! moment the socket accepts their bytes.  One `writev(2)` drains as
+//! many queued replies as the kernel will take (up to [`MAX_IOV`] per
+//! call); `scripts/check_hotpath_allocs.sh` freezes this file's
+//! allocation count.
 
-use std::collections::BTreeMap;
-use std::io::{self, Read, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::bufpool::PooledBuf;
 
 /// Largest tolerated unterminated line.  A client that streams this much
 /// without a newline is broken or hostile; the reactor hangs up instead
 /// of buffering without bound.
 pub const MAX_LINE: usize = 1 << 20;
+
+/// Size of the per-shard read scratch: one `read(2)` per readiness
+/// event lands here before framing (DESIGN.md §16).
+pub const READ_SCRATCH: usize = 64 << 10;
+
+/// Most reply buffers one `writev(2)` will gather.  64 newline-framed
+/// JSON replies comfortably exceed a TCP send buffer's appetite per
+/// call, so a larger batch would not reduce syscalls further.
+pub const MAX_IOV: usize = 64;
+
+/// Write syscalls issued on the reactor reply path (both `writev` and
+/// the portable fallback), for the bench's writes-per-reply column.
+static WRITE_SYSCALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Reply buffers fully drained to a socket on the reactor reply path.
+static REPLIES_WRITTEN: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative `(write_syscalls, replies_written)` across all reactor
+/// connections since process start.  Benches diff two snapshots to get
+/// a writes-per-reply ratio for one load interval.
+pub fn wire_stats() -> (u64, u64) {
+    (
+        WRITE_SYSCALLS.load(Ordering::Relaxed),
+        REPLIES_WRITTEN.load(Ordering::Relaxed),
+    )
+}
 
 /// Backpressure thresholds (DESIGN.md §15).  A connection's reads pause
 /// when its un-drained output exceeds `write_buf_cap`, when more than
@@ -37,6 +75,11 @@ impl Default for Backpressure {
 /// lines.  Partial tails survive between reads; `scan_from` remembers
 /// how far the newline scan got so repeated pushes of a long partial
 /// line stay O(new bytes), not O(buffer).
+///
+/// Framing is two-step -- [`next_line_end`](LineFramer::next_line_end)
+/// finds a line, [`take_line`](LineFramer::take_line) moves its bytes
+/// into a caller-supplied buffer -- so the reactor checks out a pooled
+/// buffer only once a complete line is known to exist.
 #[derive(Default)]
 pub struct LineFramer {
     buf: Vec<u8>,
@@ -53,33 +96,49 @@ impl LineFramer {
         self.buf.len()
     }
 
-    /// Next complete line (terminator included), if one is buffered.
-    pub fn next_line(&mut self) -> Option<String> {
+    /// Exclusive end offset of the next complete line (terminator
+    /// included), if one is buffered.  A `Some` must be consumed with
+    /// [`take_line`](LineFramer::take_line) before scanning again.
+    pub fn next_line_end(&mut self) -> Option<usize> {
         match self.buf[self.scan_from..].iter().position(|&b| b == b'\n') {
-            Some(off) => {
-                let raw: Vec<u8> = self.buf.drain(..=self.scan_from + off).collect();
-                self.scan_from = 0;
-                Some(String::from_utf8_lossy(&raw).into_owned())
-            }
+            Some(off) => Some(self.scan_from + off + 1),
             None => {
                 self.scan_from = self.buf.len();
                 None
             }
         }
     }
+
+    /// Move the line ending at `end` (from
+    /// [`next_line_end`](LineFramer::next_line_end)) into `out`.
+    pub fn take_line(&mut self, end: usize, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.buf[..end]);
+        self.buf.drain(..end);
+        self.scan_from = 0;
+    }
 }
 
 /// Restores per-connection FIFO reply order over out-of-order worker
 /// completions: lines get ascending sequence numbers at dispatch; a
 /// completed reply is released only once every earlier one has been.
-#[derive(Default)]
-pub struct ReplySequencer {
+///
+/// Generic over the reply payload so the reactor sequences
+/// [`PooledBuf`]s without re-boxing; the in-order fast path releases a
+/// completion that arrives in sequence without touching the stash, so
+/// single-in-flight traffic never allocates a tree node.
+pub struct ReplySequencer<T> {
     next_seq: u64,
     next_write: u64,
-    stash: BTreeMap<u64, String>,
+    stash: BTreeMap<u64, T>,
 }
 
-impl ReplySequencer {
+impl<T> Default for ReplySequencer<T> {
+    fn default() -> Self {
+        ReplySequencer { next_seq: 0, next_write: 0, stash: BTreeMap::new() }
+    }
+}
+
+impl<T> ReplySequencer<T> {
     /// Claim the sequence number for a newly dispatched line.
     pub fn alloc(&mut self) -> u64 {
         let s = self.next_seq;
@@ -89,8 +148,13 @@ impl ReplySequencer {
 
     /// Record one completion; push every reply now releasable (in
     /// sequence order) onto `out`.
-    pub fn complete(&mut self, seq: u64, reply: String, out: &mut Vec<String>) {
-        self.stash.insert(seq, reply);
+    pub fn complete(&mut self, seq: u64, reply: T, out: &mut Vec<T>) {
+        if seq == self.next_write {
+            out.push(reply);
+            self.next_write += 1;
+        } else {
+            self.stash.insert(seq, reply);
+        }
         while let Some(r) = self.stash.remove(&self.next_write) {
             out.push(r);
             self.next_write += 1;
@@ -101,15 +165,28 @@ impl ReplySequencer {
     pub fn outstanding(&self) -> u64 {
         self.next_seq - self.next_write
     }
+
+    /// Replies parked waiting for an earlier sequence number.
+    pub fn stashed(&self) -> usize {
+        self.stash.len()
+    }
 }
 
-/// One client connection owned by the reactor thread.
+/// One client connection owned by a reactor shard.
 pub struct Conn {
     pub stream: TcpStream,
     framer: LineFramer,
-    seq: ReplySequencer,
-    wbuf: Vec<u8>,
+    seq: ReplySequencer<PooledBuf>,
+    /// Released replies awaiting the socket, front first.  Each buffer
+    /// is one newline-terminated reply; popping one recycles it.
+    wqueue: VecDeque<PooledBuf>,
+    /// Bytes of `wqueue.front()` already written.
     wpos: usize,
+    /// Total unwritten bytes across `wqueue` (invariant: sum of queued
+    /// lengths minus `wpos`).
+    out_bytes: usize,
+    /// Scratch reused by `complete` for sequencer releases.
+    ready: Vec<PooledBuf>,
     /// (read, write) interest currently registered with the poller.
     pub registered: (bool, bool),
     /// Reads deliberately stopped by the backpressure rule.
@@ -127,8 +204,10 @@ impl Conn {
             stream,
             framer: LineFramer::default(),
             seq: ReplySequencer::default(),
-            wbuf: Vec::new(),
+            wqueue: VecDeque::new(),
             wpos: 0,
+            out_bytes: 0,
+            ready: Vec::new(),
             registered: (true, false),
             paused: false,
             closing: false,
@@ -137,34 +216,64 @@ impl Conn {
         }
     }
 
-    /// Drain the socket until `WouldBlock` (or EOF, which marks the
-    /// connection closing) and push every complete line onto `lines`.
-    pub fn on_readable(&mut self, lines: &mut Vec<String>) -> io::Result<()> {
-        let mut buf = [0u8; 16 * 1024];
+    /// One `read(2)` into the shard's shared scratch per readiness
+    /// event (level-triggered polling re-arms the event while more
+    /// bytes wait in the kernel, so a single read per wakeup keeps
+    /// per-event latency flat without losing data).  EOF marks the
+    /// connection closing.
+    pub fn on_readable(&mut self, scratch: &mut [u8]) -> io::Result<()> {
         loop {
-            match self.stream.read(&mut buf) {
+            match self.stream.read(scratch) {
                 Ok(0) => {
                     self.closing = true;
                     break;
                 }
                 Ok(n) => {
-                    self.framer.push(&buf[..n]);
+                    self.framer.push(&scratch[..n]);
                     if self.framer.buffered() > MAX_LINE {
                         return Err(io::Error::new(
                             io::ErrorKind::InvalidData,
                             "line exceeds MAX_LINE",
                         ));
                     }
+                    break;
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(e) => return Err(e),
             }
         }
-        while let Some(line) = self.framer.next_line() {
-            lines.push(line);
+        Ok(())
+    }
+
+    /// Read until `WouldBlock` or EOF -- the shutdown-drain final read,
+    /// which must pull in every complete line the kernel has already
+    /// accepted (after this the connection stops reading, so
+    /// level-triggered re-notification can no longer finish the job).
+    pub fn read_all(&mut self, scratch: &mut [u8]) -> io::Result<()> {
+        while !self.closing {
+            let before = self.framer.buffered();
+            self.on_readable(scratch)?;
+            if self.framer.buffered() == before {
+                break; // WouldBlock: the kernel is empty
+            }
         }
         Ok(())
+    }
+
+    /// See [`LineFramer::next_line_end`].
+    pub fn next_line_end(&mut self) -> Option<usize> {
+        self.framer.next_line_end()
+    }
+
+    /// See [`LineFramer::take_line`].
+    pub fn take_line(&mut self, end: usize, out: &mut Vec<u8>) {
+        self.framer.take_line(end, out)
+    }
+
+    /// Bytes buffered by the framer but not yet framed into lines.
+    pub fn framer_buffered(&self) -> usize {
+        self.framer.buffered()
     }
 
     /// Sequence number for a line about to be handed to a worker.
@@ -173,46 +282,70 @@ impl Conn {
     }
 
     /// Record one worker completion; in-order replies move to the write
-    /// buffer (newline-terminated).  A shed completion arms the
-    /// backpressure pause until the connection drains.
-    pub fn complete(&mut self, seq: u64, reply: String, shed: bool) {
-        let mut ready = Vec::new();
+    /// queue.  An empty reply buffer (a blank input line) advances the
+    /// sequence without putting bytes on the wire -- its buffer
+    /// recycles immediately.  A shed completion arms the backpressure
+    /// pause until the connection drains.
+    pub fn complete(&mut self, seq: u64, reply: PooledBuf, shed: bool) {
+        let mut ready = std::mem::take(&mut self.ready);
         self.seq.complete(seq, reply, &mut ready);
-        for r in ready {
-            self.wbuf.extend_from_slice(r.as_bytes());
-            self.wbuf.push(b'\n');
+        for r in ready.drain(..) {
+            if r.is_empty() {
+                continue; // blank line: no reply; Drop recycles
+            }
+            self.out_bytes += r.len();
+            self.wqueue.push_back(r);
         }
+        self.ready = ready;
         if shed {
             self.shed_pause = true;
         }
     }
 
-    /// Write buffered output until `WouldBlock` or empty.
+    /// Write queued output until `WouldBlock` or empty.  Each pass
+    /// gathers up to [`MAX_IOV`] reply buffers into one `writev(2)`;
+    /// fully written buffers recycle into the pool as they pop.
     pub fn flush(&mut self) -> io::Result<()> {
-        while self.wpos < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+        while self.out_bytes > 0 {
+            match write_queued(&self.stream, &self.wqueue, self.wpos) {
                 Ok(0) => {
                     return Err(io::Error::new(
                         io::ErrorKind::WriteZero,
                         "socket write returned 0",
                     ))
                 }
-                Ok(n) => self.wpos += n,
+                Ok(n) => self.advance(n),
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(e) => return Err(e),
             }
         }
-        if self.wpos == self.wbuf.len() {
-            self.wbuf.clear();
-            self.wpos = 0;
-        }
         Ok(())
+    }
+
+    /// Account `n` freshly written bytes: pop (and thereby recycle)
+    /// fully drained reply buffers, leave `wpos` mid-buffer otherwise.
+    fn advance(&mut self, n: usize) {
+        self.out_bytes -= n;
+        let mut consumed = self.wpos + n;
+        self.wpos = 0;
+        while consumed > 0 {
+            let front_len =
+                self.wqueue.front().expect("advance past queue end").len();
+            if consumed >= front_len {
+                consumed -= front_len;
+                self.wqueue.pop_front(); // Drop recycles into the pool
+                REPLIES_WRITTEN.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.wpos = consumed;
+                break;
+            }
+        }
     }
 
     /// Output bytes accepted but not yet written to the socket.
     pub fn buffered_out(&self) -> usize {
-        self.wbuf.len() - self.wpos
+        self.out_bytes
     }
 
     /// Dispatched lines not yet answered in order.
@@ -253,40 +386,120 @@ impl Conn {
     }
 }
 
+/// One vectored write over the queued reply buffers, starting `wpos`
+/// bytes into the front buffer.  Returns bytes accepted by the kernel.
+#[cfg(unix)]
+fn write_queued(
+    stream: &TcpStream,
+    queue: &VecDeque<PooledBuf>,
+    wpos: usize,
+) -> io::Result<usize> {
+    use std::os::unix::io::AsRawFd;
+
+    let mut iov = [wv::Iovec { base: std::ptr::null(), len: 0 }; MAX_IOV];
+    let mut cnt = 0;
+    for b in queue.iter().take(MAX_IOV) {
+        let skip = if cnt == 0 { wpos } else { 0 };
+        iov[cnt] = wv::Iovec { base: b[skip..].as_ptr(), len: b.len() - skip };
+        cnt += 1;
+    }
+    WRITE_SYSCALLS.fetch_add(1, Ordering::Relaxed);
+    let n = unsafe { wv::writev(stream.as_raw_fd(), iov.as_ptr(), cnt as i32) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+/// Portable fallback: one plain `write(2)` of the front buffer per
+/// pass.  Correct everywhere `TcpStream` works; just more syscalls.
+#[cfg(not(unix))]
+fn write_queued(
+    stream: &TcpStream,
+    queue: &VecDeque<PooledBuf>,
+    wpos: usize,
+) -> io::Result<usize> {
+    use std::io::Write;
+
+    let front = queue.front().expect("write_queued on empty queue");
+    WRITE_SYSCALLS.fetch_add(1, Ordering::Relaxed);
+    (&*stream).write(&front[wpos..])
+}
+
+/// Raw `writev(2)` binding (std links libc; the project vendors no
+/// crates, same pattern as the reactor's epoll block).
+#[cfg(unix)]
+mod wv {
+    /// `struct iovec` from `<sys/uio.h>`.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct Iovec {
+        pub base: *const u8,
+        pub len: usize,
+    }
+
+    extern "C" {
+        pub fn writev(fd: i32, iov: *const Iovec, iovcnt: i32) -> isize;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bufpool::BufPool;
+
+    fn next_line(f: &mut LineFramer) -> Option<String> {
+        let end = f.next_line_end()?;
+        let mut out = Vec::new();
+        f.take_line(end, &mut out);
+        Some(String::from_utf8_lossy(&out).into_owned())
+    }
 
     #[test]
     fn framer_reassembles_lines_across_chunks() {
         let mut f = LineFramer::default();
         f.push(b"{\"id\":1}\n{\"id\"");
-        assert_eq!(f.next_line().as_deref(), Some("{\"id\":1}\n"));
-        assert_eq!(f.next_line(), None);
+        assert_eq!(next_line(&mut f).as_deref(), Some("{\"id\":1}\n"));
+        assert_eq!(next_line(&mut f), None);
         f.push(b":2}\n\n{\"id\":3}");
-        assert_eq!(f.next_line().as_deref(), Some("{\"id\":2}\n"));
-        assert_eq!(f.next_line().as_deref(), Some("\n"), "empty line framed");
-        assert_eq!(f.next_line(), None);
+        assert_eq!(next_line(&mut f).as_deref(), Some("{\"id\":2}\n"));
+        assert_eq!(next_line(&mut f).as_deref(), Some("\n"), "empty line framed");
+        assert_eq!(next_line(&mut f), None);
         assert_eq!(f.buffered(), "{\"id\":3}".len(), "partial tail retained");
         f.push(b"\n");
-        assert_eq!(f.next_line().as_deref(), Some("{\"id\":3}\n"));
+        assert_eq!(next_line(&mut f).as_deref(), Some("{\"id\":3}\n"));
     }
 
     #[test]
     fn framer_scan_position_survives_partial_pushes() {
         let mut f = LineFramer::default();
         f.push(b"aaaa");
-        assert_eq!(f.next_line(), None);
+        assert_eq!(next_line(&mut f), None);
         // scan_from now sits at 4; the newline in the next chunk must
         // still be found even though it is past the first scan window
         f.push(b"bb\ncc");
-        assert_eq!(f.next_line().as_deref(), Some("aaaabb\n"));
+        assert_eq!(next_line(&mut f).as_deref(), Some("aaaabb\n"));
         assert_eq!(f.buffered(), 2);
     }
 
     #[test]
+    fn framer_takes_into_reused_buffer() {
+        let mut f = LineFramer::default();
+        f.push(b"one\ntwo\n");
+        let mut out = Vec::with_capacity(16);
+        let end = f.next_line_end().unwrap();
+        f.take_line(end, &mut out);
+        assert_eq!(out, b"one\n");
+        out.clear();
+        let end = f.next_line_end().unwrap();
+        f.take_line(end, &mut out);
+        assert_eq!(out, b"two\n");
+        assert_eq!(f.buffered(), 0);
+    }
+
+    #[test]
     fn sequencer_releases_replies_in_dispatch_order() {
-        let mut s = ReplySequencer::default();
+        let mut s: ReplySequencer<String> = ReplySequencer::default();
         let a = s.alloc();
         let b = s.alloc();
         let c = s.alloc();
@@ -303,9 +516,22 @@ mod tests {
     }
 
     #[test]
+    fn sequencer_in_order_completions_never_stash() {
+        let mut s: ReplySequencer<String> = ReplySequencer::default();
+        let mut out = Vec::new();
+        for i in 0..100 {
+            let seq = s.alloc();
+            s.complete(seq, format!("r{i}"), &mut out);
+            assert_eq!(s.stashed(), 0, "in-order must bypass the BTreeMap");
+        }
+        assert_eq!(out.len(), 100);
+        assert_eq!(s.outstanding(), 0);
+    }
+
+    #[test]
     fn backpressure_rule_and_hysteresis() {
         let bp = Backpressure { write_buf_cap: 100, max_inflight: 4 };
-        let mut s = ReplySequencer::default();
+        let mut s: ReplySequencer<String> = ReplySequencer::default();
         for _ in 0..5 {
             s.alloc();
         }
@@ -318,5 +544,38 @@ mod tests {
         assert!(s.outstanding() > bp.max_inflight / 2);
         s.complete(2, "r".into(), &mut out);
         assert!(s.outstanding() <= bp.max_inflight / 2, "2 <= 2: may resume");
+    }
+
+    #[test]
+    fn conn_queues_pooled_replies_and_recycles_blanks() {
+        // loopback pair so Conn has a real socket; nothing is written
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        drop(client);
+
+        let pool = BufPool::new();
+        let mut conn = Conn::new(server);
+        let s0 = conn.alloc_seq();
+        let s1 = conn.alloc_seq();
+        let s2 = conn.alloc_seq();
+        // out-of-order completion with a blank (empty) reply between
+        let mut r2 = pool.get();
+        r2.extend_from_slice(b"{\"id\":2}\n");
+        conn.complete(s2, r2, false);
+        assert_eq!(conn.buffered_out(), 0, "seq 2 waits for 0 and 1");
+        let mut r0 = pool.get();
+        r0.extend_from_slice(b"{\"id\":0}\n");
+        conn.complete(s0, r0, false);
+        assert_eq!(conn.buffered_out(), 9);
+        conn.complete(s1, pool.get(), false); // blank line: empty reply
+        assert_eq!(
+            conn.buffered_out(),
+            18,
+            "blank released seq 2 but put no bytes on the wire"
+        );
+        assert_eq!(conn.outstanding(), 0);
+        // the blank's buffer went straight back to the pool
+        assert_eq!(pool.stats().recycled, 1);
     }
 }

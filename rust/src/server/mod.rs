@@ -89,14 +89,17 @@
 //! Two frontends serve this wire protocol, selected by
 //! `serve --frontend reactor|threads` (no hyper/tokio offline):
 //!
-//! * **reactor** (default): one event-loop thread multiplexes every
-//!   connection over nonblocking sockets -- raw `epoll` on Linux,
-//!   portable `poll(2)` elsewhere -- while a fixed worker pool sized
-//!   to cores runs parse/infer/render (see the `reactor` module and
-//!   DESIGN.md §15).  Per-connection state machines frame lines out of
-//!   a read buffer and sequence replies back into dispatch order, so
-//!   pipelined clients see FIFO answers.  Backpressure: when a write
-//!   buffer tops its cap, in-flight lines top the limit, or admission
+//! * **reactor** (default): N event-loop shards (`serve --shards`,
+//!   default `min(4, cores/2)`) multiplex every connection over
+//!   nonblocking sockets -- raw `epoll` on Linux, portable `poll(2)`
+//!   elsewhere -- while one shared worker pool sized to cores runs
+//!   parse/infer/render (see the `reactor` module and DESIGN.md
+//!   §15-§16).  Shard 0 accepts and hands each socket to the
+//!   least-loaded shard.  Per-connection state machines frame lines out
+//!   of a read scratch and sequence replies back into dispatch order,
+//!   so pipelined clients see FIFO answers; replies travel in pooled
+//!   buffers and drain via `writev(2)`.  Backpressure: when a write
+//!   queue tops its cap, in-flight lines top the limit, or admission
 //!   control sheds, the reactor stops polling that socket for
 //!   readability and overload propagates to the client's TCP window
 //!   instead of unbounded server memory.
@@ -105,7 +108,7 @@
 //!   with a short socket timeout and re-check the shared stop flag
 //!   between reads.
 //!
-//! Both frontends answer through the same `dispatch_line`, and hot
+//! Both frontends answer through the same `dispatch_line_into`, and hot
 //! infer lines decode through the lazy `JsonScan` fast path (no JSON
 //! tree) with fallback to the full parser, so wire replies are
 //! byte-identical across frontends and parse paths -- pinned by
@@ -138,9 +141,9 @@ use crate::metrics::Metrics;
 use crate::obs::{DriftMonitor, SloObservatory, Tracer};
 use crate::types::{Class, Request, Verdict};
 use proto::{
-    render_drift, render_error, render_events, render_metrics,
-    render_overloaded, render_prom_reply, render_slo, render_stats,
-    render_traces, render_verdict, scan_request_line,
+    render_drift, render_error_into, render_events, render_metrics,
+    render_overloaded_into, render_prom_reply, render_slo, render_stats,
+    render_traces, render_verdict_into, scan_request_line,
 };
 
 /// How long a blocking handler (or the reactor's poller) waits before
@@ -275,30 +278,52 @@ pub fn serve_with(
     port: u16,
     frontend: Frontend,
 ) -> Result<()> {
+    serve_sharded(pool, port, frontend, 0)
+}
+
+/// Serve with an explicit reactor shard count (`--shards`).  `shards`
+/// 0 auto-sizes to the machine; the threaded frontend ignores it (one
+/// thread per connection has no event loop to shard).
+pub fn serve_sharded(
+    pool: Arc<dyn InferBackend>,
+    port: u16,
+    frontend: Frontend,
+    shards: usize,
+) -> Result<()> {
     match frontend {
-        Frontend::Reactor => serve_reactor_frontend(pool, port),
+        Frontend::Reactor => serve_reactor_frontend(pool, port, shards),
         Frontend::Threads => serve_threads(pool, port),
     }
 }
 
 #[cfg(unix)]
-fn serve_reactor_frontend(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
-    reactor::serve_reactor(pool, port)
+fn serve_reactor_frontend(
+    pool: Arc<dyn InferBackend>,
+    port: u16,
+    shards: usize,
+) -> Result<()> {
+    let cfg = reactor::ReactorConfig {
+        shards,
+        ..Default::default()
+    };
+    reactor::serve_reactor_with(pool, port, cfg)
 }
 
 /// Non-unix builds have no poller; the reactor selection degrades to
 /// the portable threaded frontend rather than failing to serve.
 #[cfg(not(unix))]
-fn serve_reactor_frontend(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
+fn serve_reactor_frontend(
+    pool: Arc<dyn InferBackend>,
+    port: u16,
+    _shards: usize,
+) -> Result<()> {
     serve_threads(pool, port)
 }
 
-/// One decoded-and-answered line: the reply to write back, plus the
-/// side effects the frontend must act on (stop serving, apply shed
-/// backpressure).  Both frontends answer through this single function,
-/// which is what makes their wire replies byte-identical.
-pub(crate) struct Dispatched {
-    pub reply: String,
+/// Side effects of one decoded-and-answered line the frontend must act
+/// on (stop serving, apply shed backpressure).  The reply bytes land in
+/// the caller's buffer via [`dispatch_line_into`].
+pub(crate) struct DispatchFlags {
     /// The line was `{"cmd":"shutdown"}`: stop accepting and drain.
     pub shutdown: bool,
     /// Admission control shed this request (reactor: pause reads until
@@ -307,50 +332,65 @@ pub(crate) struct Dispatched {
 }
 
 /// Decode one trimmed, non-empty line, run it against the backend, and
-/// render the reply.  Hot infer lines take the lazy `JsonScan` path;
-/// control commands and malformed input fall back to the tree parser.
-pub(crate) fn dispatch_line(pool: &dyn InferBackend, line: &str) -> Dispatched {
+/// render the reply (no trailing newline) into `out` -- a reusable
+/// buffer, so the hot infer path allocates nothing.  Hot infer lines
+/// decode through the lazy `JsonScan` path and render through the
+/// byte-level `_into` writers; control commands and malformed input
+/// take the tree parser / `String` renders (cold).  Both frontends
+/// answer through this single function, which is what makes their wire
+/// replies byte-identical.
+pub(crate) fn dispatch_line_into(
+    pool: &dyn InferBackend,
+    line: &str,
+    out: &mut Vec<u8>,
+) -> DispatchFlags {
     let mut shutdown = false;
     let mut shed = false;
-    let reply = match scan_request_line(line) {
+    match scan_request_line(line) {
         Ok(proto::Incoming::Infer(request)) => match pool.infer(request) {
             // report the gear active at *reply* time: cheap, and a
             // shift mid-request is visible either way
-            Ok(verdict) => render_verdict(&verdict, pool.gear_id()),
+            Ok(verdict) => render_verdict_into(out, &verdict, pool.gear_id()),
             Err(PoolError::Overloaded { outstanding, limit }) => {
                 shed = true;
-                render_overloaded(outstanding, limit)
+                render_overloaded_into(out, outstanding, limit);
             }
-            Err(e) => render_error(&e.to_string()),
+            Err(e) => render_error_into(out, &e.to_string()),
         },
         Ok(proto::Incoming::Metrics) => {
             pool.publish();
-            render_metrics(pool.metrics())
+            out.extend_from_slice(render_metrics(pool.metrics()).as_bytes());
         }
         Ok(proto::Incoming::Stats) => {
             pool.publish();
-            render_stats(pool.metrics())
+            out.extend_from_slice(render_stats(pool.metrics()).as_bytes());
         }
-        Ok(proto::Incoming::Events) => render_events(pool.metrics()),
+        Ok(proto::Incoming::Events) => {
+            out.extend_from_slice(render_events(pool.metrics()).as_bytes());
+        }
         Ok(proto::Incoming::Prom) => {
             pool.publish();
-            render_prom_reply(pool.metrics())
+            out.extend_from_slice(render_prom_reply(pool.metrics()).as_bytes());
         }
-        Ok(proto::Incoming::Traces) => render_traces(pool.tracer()),
-        Ok(proto::Incoming::Drift) => render_drift(pool.drift()),
+        Ok(proto::Incoming::Traces) => {
+            out.extend_from_slice(render_traces(pool.tracer()).as_bytes());
+        }
+        Ok(proto::Incoming::Drift) => {
+            out.extend_from_slice(render_drift(pool.drift()).as_bytes());
+        }
         Ok(proto::Incoming::Slo) => {
             // publish first so the windowed p99/burn gauges in the
             // reply are no staler than one refresh interval
             pool.publish();
-            render_slo(pool.slo())
+            out.extend_from_slice(render_slo(pool.slo()).as_bytes());
         }
         Ok(proto::Incoming::Shutdown) => {
             shutdown = true;
-            r#"{"ok":true,"shutdown":true}"#.to_string()
+            out.extend_from_slice(br#"{"ok":true,"shutdown":true}"#);
         }
-        Err(e) => render_error(&e),
-    };
-    Dispatched { reply, shutdown, shed }
+        Err(e) => render_error_into(out, &e),
+    }
+    DispatchFlags { shutdown, shed }
 }
 
 /// The thread-per-connection frontend: blocking sockets, one handler
@@ -452,6 +492,9 @@ fn handle_conn(
     let mut writer = stream;
     let mut pending: Vec<u8> = Vec::new();
     let mut drained = false;
+    // one reply buffer for the connection's lifetime: the hot infer
+    // loop renders into it and never allocates per request
+    let mut reply: Vec<u8> = Vec::new();
     loop {
         let line = match read_line_interruptible(
             &mut reader,
@@ -467,9 +510,11 @@ fn handle_conn(
         if trimmed.is_empty() {
             continue;
         }
-        let d = dispatch_line(pool.as_ref(), trimmed);
-        writeln!(writer, "{}", d.reply)?;
-        if d.shutdown {
+        reply.clear();
+        let flags = dispatch_line_into(pool.as_ref(), trimmed, &mut reply);
+        reply.push(b'\n');
+        writer.write_all(&reply)?;
+        if flags.shutdown {
             stop.store(true, Ordering::SeqCst);
             return Ok(());
         }

@@ -5,7 +5,9 @@ use std::sync::Arc;
 use crate::metrics::Metrics;
 use crate::obs::{DriftMonitor, SloObservatory, Tracer};
 use crate::types::{Class, Request, Verdict};
-use crate::util::json::{Json, JsonObj, JsonScan};
+use crate::util::json::{
+    write_num_bytes, write_str_bytes, Json, JsonObj, JsonScan,
+};
 
 /// A parsed inbound line.
 #[derive(Debug)]
@@ -107,43 +109,80 @@ fn scan_infer(line: &str) -> Option<Incoming> {
     Some(Incoming::Infer(Request { id, features, arrival_s: 0.0, class }))
 }
 
-/// Render a verdict reply line.  `gear` is the active gear's ladder
-/// index when the server runs under a gear plan; ungeared deployments
-/// omit the field, keeping the PR-1 wire shape byte-compatible.
-pub fn render_verdict(v: &Verdict, gear: Option<usize>) -> String {
-    let mut obj = JsonObj::new();
-    obj.insert("id", Json::num(v.request_id as f64));
-    obj.insert("prediction", Json::num(v.prediction as f64));
-    obj.insert("exit_tier", Json::num(v.exit_tier as f64));
-    obj.insert("latency_s", Json::num(v.latency_s));
-    obj.insert(
-        "scores",
-        Json::Arr(v.tier_scores.iter().map(|&s| Json::num(s as f64)).collect()),
-    );
-    if let Some(g) = gear {
-        obj.insert("gear", Json::num(g as f64));
+/// Render a verdict reply line into a reusable buffer -- the
+/// zero-allocation hot path (DESIGN.md §16).  Emits bytes identical to
+/// the `JsonObj` tree rendering this replaced: compact, insertion order
+/// `id, prediction, exit_tier, latency_s, scores[, gear]`.  `gear` is
+/// the active gear's ladder index when the server runs under a gear
+/// plan; ungeared deployments omit the field, keeping the PR-1 wire
+/// shape byte-compatible.
+pub fn render_verdict_into(out: &mut Vec<u8>, v: &Verdict, gear: Option<usize>) {
+    out.extend_from_slice(b"{\"id\":");
+    write_num_bytes(out, v.request_id as f64);
+    out.extend_from_slice(b",\"prediction\":");
+    write_num_bytes(out, v.prediction as f64);
+    out.extend_from_slice(b",\"exit_tier\":");
+    write_num_bytes(out, v.exit_tier as f64);
+    out.extend_from_slice(b",\"latency_s\":");
+    write_num_bytes(out, v.latency_s);
+    out.extend_from_slice(b",\"scores\":[");
+    for (i, &s) in v.tier_scores.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        write_num_bytes(out, s as f64);
     }
-    Json::Obj(obj).to_string()
+    out.push(b']');
+    if let Some(g) = gear {
+        out.extend_from_slice(b",\"gear\":");
+        write_num_bytes(out, g as f64);
+    }
+    out.push(b'}');
 }
 
-/// Render an error reply line.
+/// Render a verdict reply line.  Cold-path wrapper over
+/// [`render_verdict_into`] for callers that want an owned `String`.
+pub fn render_verdict(v: &Verdict, gear: Option<usize>) -> String {
+    let mut out = Vec::new();
+    render_verdict_into(&mut out, v, gear);
+    String::from_utf8(out).expect("render_verdict_into emits UTF-8")
+}
+
+/// Render an error reply line into a reusable buffer.  Byte-identical
+/// to the `JsonObj` rendering: `{"error":"<escaped msg>"}`.
+pub fn render_error_into(out: &mut Vec<u8>, msg: &str) {
+    out.extend_from_slice(b"{\"error\":");
+    write_str_bytes(out, msg);
+    out.push(b'}');
+}
+
+/// Render an error reply line.  Cold-path wrapper over
+/// [`render_error_into`].
 pub fn render_error(msg: &str) -> String {
-    let mut obj = JsonObj::new();
-    obj.insert("error", Json::str(msg));
-    Json::Obj(obj).to_string()
+    let mut out = Vec::new();
+    render_error_into(&mut out, msg);
+    String::from_utf8(out).expect("render_error_into emits UTF-8")
 }
 
-/// Render the load-shedding reply: the request was refused by admission
-/// control, not failed.  Keeps an `"error"` field so clients that only
-/// check for errors still treat it as a non-answer, while load-aware
-/// clients key on `"overloaded": true` and back off / retry.
+/// Render the load-shedding reply into a reusable buffer: the request
+/// was refused by admission control, not failed.  Keeps an `"error"`
+/// field so clients that only check for errors still treat it as a
+/// non-answer, while load-aware clients key on `"overloaded": true`
+/// and back off / retry.
+pub fn render_overloaded_into(out: &mut Vec<u8>, outstanding: usize, limit: usize) {
+    out.extend_from_slice(b"{\"error\":\"overloaded\",\"overloaded\":true,\"outstanding\":");
+    write_num_bytes(out, outstanding as f64);
+    out.extend_from_slice(b",\"limit\":");
+    write_num_bytes(out, limit as f64);
+    out.push(b'}');
+}
+
+/// Render the load-shedding reply.  Cold-path wrapper over
+/// [`render_overloaded_into`].
 pub fn render_overloaded(outstanding: usize, limit: usize) -> String {
-    let mut obj = JsonObj::new();
-    obj.insert("error", Json::str("overloaded"));
-    obj.insert("overloaded", Json::Bool(true));
-    obj.insert("outstanding", Json::num(outstanding as f64));
-    obj.insert("limit", Json::num(limit as f64));
-    Json::Obj(obj).to_string()
+    let mut out = Vec::new();
+    render_overloaded_into(&mut out, outstanding, limit);
+    String::from_utf8(out).expect("render_overloaded_into emits UTF-8")
 }
 
 /// Render the metrics snapshot.
@@ -523,6 +562,80 @@ mod tests {
         assert_eq!(classes[2].get("class").as_str(), Some("batch"));
         assert!(classes[2].get("p99_s").as_f64().is_none());
         assert_eq!(slo.get("goal").as_f64(), Some(0.95));
+    }
+
+    #[test]
+    fn into_renders_match_the_json_tree() {
+        // reference renders built through the JsonObj tree -- the shape
+        // every client has seen since PR 1 -- pinned byte-for-byte
+        // against the zero-allocation writers that replaced them
+        fn tree_verdict(v: &Verdict, gear: Option<usize>) -> String {
+            let mut obj = JsonObj::new();
+            obj.insert("id", Json::num(v.request_id as f64));
+            obj.insert("prediction", Json::num(v.prediction as f64));
+            obj.insert("exit_tier", Json::num(v.exit_tier as f64));
+            obj.insert("latency_s", Json::num(v.latency_s));
+            obj.insert(
+                "scores",
+                Json::Arr(
+                    v.tier_scores.iter().map(|&s| Json::num(s as f64)).collect(),
+                ),
+            );
+            if let Some(g) = gear {
+                obj.insert("gear", Json::num(g as f64));
+            }
+            Json::Obj(obj).to_string()
+        }
+        let verdicts = [
+            Verdict {
+                request_id: 0,
+                prediction: 0,
+                exit_tier: 0,
+                tier_scores: vec![],
+                latency_s: 0.0,
+            },
+            Verdict {
+                request_id: u64::MAX >> 10,
+                prediction: 9,
+                exit_tier: 2,
+                tier_scores: vec![0.33, 1.0, 0.1 + 0.2],
+                latency_s: 0.004,
+            },
+            Verdict {
+                request_id: 3,
+                prediction: 1,
+                exit_tier: 1,
+                tier_scores: vec![f32::NAN, 0.5],
+                latency_s: f64::INFINITY,
+            },
+        ];
+        for v in &verdicts {
+            for gear in [None, Some(0), Some(7)] {
+                assert_eq!(
+                    render_verdict(v, gear).into_bytes(),
+                    {
+                        let mut out = Vec::new();
+                        render_verdict_into(&mut out, v, gear);
+                        out
+                    },
+                    "wrapper and _into must agree"
+                );
+                assert_eq!(render_verdict(v, gear), tree_verdict(v, gear));
+            }
+        }
+        for msg in ["boom", "quo\"te \\ back", "ctl \u{1} tab\t", "😀"] {
+            let mut obj = JsonObj::new();
+            obj.insert("error", Json::str(msg));
+            assert_eq!(render_error(msg), Json::Obj(obj).to_string());
+        }
+        for (o, l) in [(0, 0), (128, 128), (999_999, 12)] {
+            let mut obj = JsonObj::new();
+            obj.insert("error", Json::str("overloaded"));
+            obj.insert("overloaded", Json::Bool(true));
+            obj.insert("outstanding", Json::num(o as f64));
+            obj.insert("limit", Json::num(l as f64));
+            assert_eq!(render_overloaded(o, l), Json::Obj(obj).to_string());
+        }
     }
 
     #[test]

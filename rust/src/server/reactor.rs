@@ -1,57 +1,83 @@
-//! Event-driven serving frontend (DESIGN.md §15): one reactor thread
-//! multiplexing every connection over a readiness poller, plus a fixed
-//! worker pool sized to cores for parse/infer/render.
+//! Event-driven serving frontend (DESIGN.md §15-§16): N reactor shards,
+//! each an independent event loop multiplexing its connections over a
+//! readiness poller, plus one shared worker pool sized to cores for
+//! parse/infer/render.
 //!
 //! ```text
-//!             epoll/poll                    ThreadPool (cores)
-//!   sockets ----------------> reactor ----------------------> workers
-//!      ^     readable:frame     |   line jobs (token,gen,seq)    |
-//!      |     writable:flush     |                                |
-//!      +------- replies --------+<---- completions (mpsc) -------+
-//!                               ^        + wake datagram
+//!            accept           handoff (mpsc + wake datagram)
+//!   listener ------> shard 0 --------------------------------+
+//!                      |  \___ least-loaded / round-robin    |
+//!                      v                                     v
+//!                  [shard 0 loop]  [shard 1 loop] ... [shard N-1 loop]
+//!                      |    ^          |    ^              |    ^
+//!            epoll/poll|    |replies   |    |              |    |
+//!                      v    |          v    |              v    |
+//!                 +---------+----------+----+--------------+----+
+//!                 |        shared ThreadPool (cores)            |
+//!                 +---------------------------------------------+
+//!                    line jobs (token,gen,seq) / completions
+//!                    (per-shard mpsc + wake datagram)
 //! ```
 //!
-//! The reactor thread owns all connection state (slab of [`Conn`]) --
-//! no locks anywhere in the readiness loop (`scripts/
-//! check_hotpath_locks.sh` pins `server/` lock-free).  Workers hand
-//! results back over an mpsc channel and wake the poller with a
-//! datagram on a loopback socket pair; per-connection FIFO reply order
-//! is restored by each connection's sequencer, so pipelined clients
-//! see answers in send order even though workers finish out of order.
+//! Each shard owns its connection state (slab of [`Conn`]), its poller,
+//! its completion channel and its wake socket -- no locks anywhere in
+//! the readiness loop (`scripts/check_hotpath_locks.sh` pins `server/`
+//! lock-free; the one justified lock is the
+//! [`BufPool`](crate::util::bufpool::BufPool) free list).  Only shard 0
+//! registers the listener: accepted sockets are handed to the
+//! least-loaded shard (round-robin tiebreak) over that shard's handoff
+//! channel, followed by a wake datagram -- SO_REUSEPORT semantics
+//! without the socket option, which the vendored no-dep constraint
+//! rules out.  Workers hand results back over the owning shard's mpsc
+//! channel and wake its poller with a datagram on a loopback socket
+//! pair; per-connection FIFO reply order is restored by each
+//! connection's sequencer, so pipelined clients see answers in send
+//! order even though workers finish out of order.
+//!
+//! The hot path is allocation-free in steady state: framed lines and
+//! rendered replies travel in pooled buffers
+//! (`scripts/check_hotpath_allocs.sh` freezes this file's allocation
+//! count), and each connection's reply queue drains through one
+//! `writev(2)` per readiness (see `server/conn.rs`).
 //!
 //! The poller is raw `epoll` via direct syscalls on Linux (std already
 //! links libc; no external crates), with a portable `poll(2)` set as
 //! fallback -- selectable for tests via [`ReactorConfig::force_poll`].
 //!
-//! Backpressure (the §15 rule): a connection whose write buffer tops
+//! Backpressure (the §15 rule): a connection whose write queue tops
 //! the cap, whose in-flight count tops the limit, or which just got an
 //! admission-control shed, is deregistered for readability until it
 //! drains -- overload propagates to the client's TCP window instead of
 //! unbounded server memory.
 //!
-//! Shutdown drain: on a `{"cmd":"shutdown"}` completion the reactor
-//! stops accepting, takes one final nonblocking read per connection so
-//! complete lines already received are still answered, then loops until
-//! every dispatched job has completed and every reply is flushed (or
-//! the drain deadline passes), mirroring the threaded frontend's
-//! semantics within the same ~[`READ_POLL`] bound.
+//! Shutdown drain: on a `{"cmd":"shutdown"}` completion the observing
+//! shard raises the shared stop flag and wakes every shard; each shard
+//! stops accepting (shard 0 drops the listener registration), takes one
+//! final exhaustive nonblocking read per connection so complete lines
+//! already received are still answered, then loops until every
+//! dispatched job has completed and every reply is flushed (or the
+//! drain deadline passes), mirroring the threaded frontend's semantics
+//! within the same ~[`READ_POLL`] bound.
 
 use std::io;
-use std::net::{TcpListener, UdpSocket};
+use std::net::{TcpListener, TcpStream, UdpSocket};
 use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::conn::{Backpressure, Conn};
-use super::{dispatch_line, InferBackend, READ_POLL};
+use super::conn::{Backpressure, Conn, READ_SCRATCH};
+use super::{dispatch_line_into, DispatchFlags, InferBackend, READ_POLL};
+use crate::metrics::Gauge;
+use crate::util::bufpool::{BufPool, PooledBuf};
 use crate::util::threadpool::ThreadPool;
 
-/// Poller slot for the listening socket.
+/// Poller slot for the listening socket (shard 0 only).
 const TOKEN_LISTENER: usize = 0;
-/// Poller slot for the worker wake-up socket.
+/// Poller slot for the shard's wake-up socket.
 const TOKEN_WAKE: usize = 1;
 /// First connection token; token = `TOKEN_CONN0 + slab slot`.
 const TOKEN_CONN0: usize = 2;
@@ -60,9 +86,12 @@ const TOKEN_CONN0: usize = 2;
 /// [`crate::server::serve`] runs in production.
 #[derive(Debug, Clone, Copy)]
 pub struct ReactorConfig {
-    /// Worker threads for parse/infer/render; 0 sizes to the machine
-    /// (`available_parallelism`).
+    /// Worker threads for parse/infer/render, shared by all shards;
+    /// 0 sizes to the machine (`available_parallelism`).
     pub workers: usize,
+    /// Independent event-loop shards; 0 sizes to the machine
+    /// (`min(4, cores/2)`, at least 1).
+    pub shards: usize,
     /// Per-connection backpressure thresholds.
     pub backpressure: Backpressure,
     /// Use the portable `poll(2)` backend even where epoll exists.
@@ -76,6 +105,7 @@ impl Default for ReactorConfig {
     fn default() -> Self {
         ReactorConfig {
             workers: 0,
+            shards: 0,
             backpressure: Backpressure::default(),
             force_poll: false,
             drain_deadline: Duration::from_secs(10),
@@ -83,12 +113,22 @@ impl Default for ReactorConfig {
     }
 }
 
-/// One finished worker job on its way back to the reactor.
+/// The shards=0 default: scale with the machine but stay modest -- the
+/// event loop is rarely the bottleneck past a few shards, and workers
+/// need cores too.
+fn default_shards() -> usize {
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (cores / 2).clamp(1, 4)
+}
+
+/// One finished worker job on its way back to its shard.
 struct Completion {
     token: usize,
     gen: u64,
     seq: u64,
-    reply: String,
+    /// Rendered newline-terminated reply; empty for blank input lines.
+    reply: PooledBuf,
     shutdown: bool,
     shed: bool,
 }
@@ -99,6 +139,7 @@ pub fn serve_reactor(pool: Arc<dyn InferBackend>, port: u16) -> Result<()> {
 }
 
 /// Serve on the event-driven frontend until a `{"cmd":"shutdown"}`.
+/// Shard 0 runs on the calling thread; shards 1..N on spawned threads.
 pub fn serve_reactor_with(
     backend: Arc<dyn InferBackend>,
     port: u16,
@@ -107,62 +148,156 @@ pub fn serve_reactor_with(
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     listener.set_nonblocking(true)?;
 
-    // workers wake the poller by lobbing a datagram at this socket pair;
-    // loopback UDP never blocks the sender, and a dropped datagram under
-    // a full buffer is harmless (a full buffer means a wake is already
-    // pending)
-    let wake_rx = UdpSocket::bind(("127.0.0.1", 0))?;
-    wake_rx.set_nonblocking(true)?;
-    let wake_tx = UdpSocket::bind(("127.0.0.1", 0))?;
-    wake_tx.connect(wake_rx.local_addr()?)?;
-    wake_tx.set_nonblocking(true)?;
-
+    let shards = if cfg.shards == 0 { default_shards() } else { cfg.shards };
     let workers = if cfg.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     } else {
         cfg.workers
     };
-    let (comp_tx, comp_rx) = channel::<Completion>();
 
-    let mut poller = sys::best(cfg.force_poll)?;
-    poller.add(
-        listener.as_raw_fd(),
-        TOKEN_LISTENER,
-        sys::Interest { read: true, write: false },
-    )?;
-    poller.add(
-        wake_rx.as_raw_fd(),
-        TOKEN_WAKE,
-        sys::Interest { read: true, write: false },
-    )?;
+    let jobs = Arc::new(ThreadPool::new(workers));
+    let bufs = BufPool::new();
+    let stop = Arc::new(AtomicBool::new(false));
+    let conn_counts: Vec<Arc<AtomicUsize>> =
+        (0..shards).map(|_| Arc::new(AtomicUsize::new(0))).collect();
 
-    let mut reactor = Reactor {
-        cfg,
-        poller,
-        listener,
-        wake_rx,
-        wake_tx: Arc::new(wake_tx),
-        jobs: ThreadPool::new(workers),
-        backend,
-        comp_tx,
-        comp_rx,
-        conns: Vec::new(),
-        gens: Vec::new(),
-        free: Vec::new(),
-        stop: false,
-        outstanding: 0,
-    };
-    reactor.run()
+    // workers (and the accept handoff) wake a shard's poller by lobbing
+    // a datagram at its socket pair; loopback UDP never blocks the
+    // sender, and a dropped datagram under a full buffer is harmless (a
+    // full buffer means a wake is already pending)
+    let mut wake_rxs = Vec::with_capacity(shards);
+    let mut wake_txs = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let rx = UdpSocket::bind(("127.0.0.1", 0))?;
+        rx.set_nonblocking(true)?;
+        let tx = UdpSocket::bind(("127.0.0.1", 0))?;
+        tx.connect(rx.local_addr()?)?;
+        tx.set_nonblocking(true)?;
+        wake_rxs.push(rx);
+        wake_txs.push(Arc::new(tx));
+    }
+    // every shard can wake every other shard (stop propagation) and
+    // shard 0 wakes handoff targets
+    let wake_all: Arc<Vec<UdpSocket>> = Arc::new(
+        wake_txs.iter().map(|t| t.try_clone()).collect::<io::Result<_>>()?,
+    );
+
+    let mut handoff_txs = Vec::with_capacity(shards);
+    let mut handoff_rxs = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = channel::<TcpStream>();
+        handoff_txs.push(tx);
+        handoff_rxs.push(rx);
+    }
+
+    let metrics = Arc::clone(backend.metrics());
+    let mut built = Vec::with_capacity(shards);
+    let mut listener = Some(listener);
+    for (id, (wake_rx, handoff_rx)) in
+        wake_rxs.into_iter().zip(handoff_rxs).enumerate()
+    {
+        let mut poller = sys::best(cfg.force_poll)?;
+        let shard_listener = if id == 0 { listener.take() } else { None };
+        if let Some(l) = &shard_listener {
+            poller.add(
+                l.as_raw_fd(),
+                TOKEN_LISTENER,
+                sys::Interest { read: true, write: false },
+            )?;
+        }
+        poller.add(
+            wake_rx.as_raw_fd(),
+            TOKEN_WAKE,
+            sys::Interest { read: true, write: false },
+        )?;
+        let (comp_tx, comp_rx) = channel::<Completion>();
+        built.push(Shard {
+            id,
+            cfg,
+            poller,
+            listener: shard_listener,
+            wake_rx,
+            wake_tx: Arc::clone(&wake_txs[id]),
+            wake_all: Arc::clone(&wake_all),
+            handoff_rx,
+            handoff_txs: if id == 0 { handoff_txs.clone() } else { Vec::new() },
+            conn_counts: conn_counts.clone(),
+            rr: 0,
+            jobs: Arc::clone(&jobs),
+            backend: Arc::clone(&backend),
+            bufs: Arc::clone(&bufs),
+            comp_tx,
+            comp_rx,
+            conns: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            stop: Arc::clone(&stop),
+            outstanding: 0,
+            scratch: vec![0u8; READ_SCRATCH],
+            conns_open: 0,
+            conns_gauge: metrics.gauge(&format!("reactor_{id}_conns")),
+            wakes: 0,
+            wake_gauge: metrics.gauge(&format!("reactor_{id}_wake_total")),
+        });
+    }
+    drop(handoff_txs); // shard 0 holds the only remaining senders
+
+    let shard0 = built.remove(0);
+    let mut handles = Vec::with_capacity(built.len());
+    for shard in built {
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("reactor-{}", shard.id))
+                .spawn(move || shard.run_to_stop())?,
+        );
+    }
+    let mut result = shard0.run_to_stop();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if result.is_ok() {
+                    result = Err(e);
+                }
+            }
+            Err(_) => {
+                if result.is_ok() {
+                    result = Err(anyhow::anyhow!("reactor shard panicked"));
+                }
+            }
+        }
+    }
+    result
+    // dropping the last Arc<ThreadPool> joins the workers: queued jobs
+    // finish, their completions land in closed channels, their pooled
+    // buffers recycle or free
 }
 
-struct Reactor {
+/// One event-loop shard: its own poller, slab, completion channel and
+/// wake socket; shard 0 additionally owns the listener and the handoff
+/// senders.
+struct Shard {
+    id: usize,
     cfg: ReactorConfig,
     poller: Box<dyn sys::Poller>,
-    listener: TcpListener,
+    listener: Option<TcpListener>,
     wake_rx: UdpSocket,
+    /// This shard's wake sender; workers clone it per job.
     wake_tx: Arc<UdpSocket>,
-    jobs: ThreadPool,
+    /// Wake senders for every shard (indexed by shard id).
+    wake_all: Arc<Vec<UdpSocket>>,
+    handoff_rx: Receiver<TcpStream>,
+    /// Accept-handoff senders (shard 0 only; empty elsewhere).
+    handoff_txs: Vec<Sender<TcpStream>>,
+    /// Live connections charged to each shard at accept time; the
+    /// owning shard releases on close.  Shard 0 reads all of them for
+    /// the least-loaded pick.
+    conn_counts: Vec<Arc<AtomicUsize>>,
+    /// Round-robin cursor breaking least-loaded ties.
+    rr: usize,
+    jobs: Arc<ThreadPool>,
     backend: Arc<dyn InferBackend>,
+    bufs: Arc<BufPool>,
     comp_tx: Sender<Completion>,
     comp_rx: Receiver<Completion>,
     /// Connection slab; the token encodes the slot.
@@ -171,13 +306,32 @@ struct Reactor {
     /// connection never reach a reused slot.
     gens: Vec<u64>,
     free: Vec<usize>,
-    stop: bool,
+    /// Shared across shards; any shard's shutdown completion raises it.
+    stop: Arc<AtomicBool>,
     /// Jobs dispatched to workers whose completions have not come back
-    /// (counted across all connections, including closed ones).
+    /// (counted across this shard's connections, including closed ones).
     outstanding: usize,
+    /// Read scratch shared by every connection on this shard.
+    scratch: Vec<u8>,
+    conns_open: usize,
+    conns_gauge: Arc<Gauge>,
+    wakes: u64,
+    wake_gauge: Arc<Gauge>,
 }
 
-impl Reactor {
+impl Shard {
+    /// Run the shard loop; on the way out (drain finished or error),
+    /// raise the shared stop flag and wake the other shards so one
+    /// shard's exit can never strand the rest.
+    fn run_to_stop(mut self) -> Result<()> {
+        let r = self.run();
+        self.stop.store(true, Ordering::SeqCst);
+        for w in self.wake_all.iter() {
+            let _ = w.send(&[1]);
+        }
+        r
+    }
+
     fn run(&mut self) -> Result<()> {
         let mut events: Vec<sys::Event> = Vec::new();
         let mut stopping_since: Option<Instant> = None;
@@ -190,14 +344,16 @@ impl Reactor {
                     t => self.on_conn_event(t - TOKEN_CONN0, *ev),
                 }
             }
+            self.install_handoffs();
             self.drain_completions();
-            if self.stop && stopping_since.is_none() {
+            if self.stop.load(Ordering::SeqCst) && stopping_since.is_none() {
                 stopping_since = Some(Instant::now());
                 self.begin_drain();
             }
             if let Some(t0) = stopping_since {
                 self.sweep_closing();
-                if self.outstanding == 0 && self.conns.iter().all(Option::is_none) {
+                if self.outstanding == 0 && self.conns.iter().all(Option::is_none)
+                {
                     break;
                 }
                 if t0.elapsed() > self.cfg.drain_deadline {
@@ -206,42 +362,33 @@ impl Reactor {
             }
         }
         Ok(())
-        // dropping self.jobs joins the workers: queued jobs finish, their
-        // completions land in a closed channel and are discarded
     }
 
+    /// Accept every pending connection (shard 0 only) and charge each
+    /// to the least-loaded shard: installed locally when that is us,
+    /// handed over the target's channel (then a wake datagram) when
+    /// not.
     fn on_accept(&mut self) -> Result<()> {
         loop {
-            match self.listener.accept() {
+            match self.listener.as_ref().expect("accept without listener").accept()
+            {
                 Ok((stream, _addr)) => {
-                    if self.stop {
+                    if self.stop.load(Ordering::SeqCst) {
                         continue; // accepted post-shutdown: hang up
                     }
-                    stream.set_nonblocking(true)?;
-                    // line-RPC: Nagle + delayed-ACK adds ~40-90ms per turn
-                    stream.set_nodelay(true)?;
-                    let slot = match self.free.pop() {
-                        Some(s) => s,
-                        None => {
-                            self.conns.push(None);
-                            self.gens.push(0);
-                            self.conns.len() - 1
+                    let target = self.pick_shard();
+                    self.conn_counts[target].fetch_add(1, Ordering::Relaxed);
+                    if target == self.id {
+                        if self.install(stream).is_err() {
+                            self.conn_counts[target]
+                                .fetch_sub(1, Ordering::Relaxed);
                         }
-                    };
-                    let fd = stream.as_raw_fd();
-                    if self
-                        .poller
-                        .add(
-                            fd,
-                            TOKEN_CONN0 + slot,
-                            sys::Interest { read: true, write: false },
-                        )
-                        .is_err()
-                    {
-                        self.free.push(slot);
-                        continue;
+                    } else if self.handoff_txs[target].send(stream).is_ok() {
+                        let _ = self.wake_all[target].send(&[1]);
+                    } else {
+                        // target shard already exited (draining): hang up
+                        self.conn_counts[target].fetch_sub(1, Ordering::Relaxed);
                     }
-                    self.conns[slot] = Some(Conn::new(stream));
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -251,15 +398,79 @@ impl Reactor {
         Ok(())
     }
 
+    /// Least-loaded shard by charged connection count; ties break by a
+    /// rotating scan start so equal shards take turns.
+    fn pick_shard(&mut self) -> usize {
+        let n = self.conn_counts.len();
+        let mut best = self.rr % n;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            let load = self.conn_counts[i].load(Ordering::Relaxed);
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        self.rr = (best + 1) % n;
+        best
+    }
+
+    /// Adopt connections handed over by the accepting shard.  Runs
+    /// every loop tick: the wake datagram makes it prompt, the tick
+    /// makes it certain.  Streams arriving after stop are dropped (hang
+    /// up), matching the accepted-post-shutdown rule.
+    fn install_handoffs(&mut self) {
+        while let Ok(stream) = self.handoff_rx.try_recv() {
+            if self.stop.load(Ordering::SeqCst) || self.install(stream).is_err()
+            {
+                // release the count the acceptor charged to us
+                self.conn_counts[self.id].fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Register one accepted/adopted stream into this shard's slab and
+    /// poller.  The caller has already charged `conn_counts`.
+    fn install(&mut self, stream: TcpStream) -> io::Result<()> {
+        stream.set_nonblocking(true)?;
+        // line-RPC: Nagle + delayed-ACK adds ~40-90ms per turn
+        stream.set_nodelay(true)?;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.conns.push(None);
+                self.gens.push(0);
+                self.conns.len() - 1
+            }
+        };
+        let fd = stream.as_raw_fd();
+        if let Err(e) = self.poller.add(
+            fd,
+            TOKEN_CONN0 + slot,
+            sys::Interest { read: true, write: false },
+        ) {
+            self.free.push(slot);
+            return Err(e);
+        }
+        self.conns[slot] = Some(Conn::new(stream));
+        self.conns_open += 1;
+        self.conns_gauge.set(self.conns_open as f64);
+        Ok(())
+    }
+
     fn drain_wake(&mut self) {
         let mut buf = [0u8; 256];
-        while self.wake_rx.recv_from(&mut buf).is_ok() {}
+        while self.wake_rx.recv_from(&mut buf).is_ok() {
+            self.wakes += 1;
+        }
+        self.wake_gauge.set(self.wakes as f64);
     }
 
     fn on_conn_event(&mut self, slot: usize, ev: sys::Event) {
-        let mut lines: Vec<String> = Vec::new();
         {
-            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut)
+            else {
                 return;
             };
             if ev.hangup {
@@ -268,7 +479,7 @@ impl Reactor {
                 if ev.readable
                     && !conn.paused
                     && !conn.closing
-                    && conn.on_readable(&mut lines).is_err()
+                    && conn.on_readable(&mut self.scratch).is_err()
                 {
                     conn.broken = true;
                 }
@@ -277,53 +488,77 @@ impl Reactor {
                 }
             }
         }
-        for line in lines {
-            self.dispatch(slot, line);
-        }
+        self.pump_lines(slot);
         self.after_io(slot);
     }
 
-    /// Hand one framed line to the worker pool.
-    fn dispatch(&mut self, slot: usize, line: String) {
-        if line.trim().is_empty() {
-            return; // blank keep-alive lines get no reply (both frontends)
-        }
-        let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
-            return;
-        };
-        let seq = conn.alloc_seq();
-        let gen = self.gens[slot];
-        let token = TOKEN_CONN0 + slot;
-        self.outstanding += 1;
-        let backend = Arc::clone(&self.backend);
-        let tx = self.comp_tx.clone();
-        let wake = Arc::clone(&self.wake_tx);
-        self.jobs.execute(move || {
-            let d = dispatch_line(backend.as_ref(), line.trim());
-            let _ = tx.send(Completion {
-                token,
-                gen,
-                seq,
-                reply: d.reply,
-                shutdown: d.shutdown,
-                shed: d.shed,
+    /// Move every complete framed line on `slot` into a pooled buffer
+    /// and hand it to the worker pool.  Blank lines dispatch too (the
+    /// worker answers them with an empty reply, which the connection
+    /// drops), so the decode -- including the Unicode-aware trim --
+    /// happens off the event loop.
+    fn pump_lines(&mut self, slot: usize) {
+        loop {
+            let line;
+            let seq;
+            {
+                let Some(conn) =
+                    self.conns.get_mut(slot).and_then(Option::as_mut)
+                else {
+                    return;
+                };
+                if conn.broken {
+                    return;
+                }
+                let Some(end) = conn.next_line_end() else {
+                    return;
+                };
+                let mut l = self.bufs.get();
+                conn.take_line(end, &mut l);
+                line = l;
+                seq = conn.alloc_seq();
+            }
+            let gen = self.gens[slot];
+            let token = TOKEN_CONN0 + slot;
+            self.outstanding += 1;
+            let backend = Arc::clone(&self.backend);
+            let bufs = Arc::clone(&self.bufs);
+            let tx = self.comp_tx.clone();
+            let wake = Arc::clone(&self.wake_tx);
+            self.jobs.execute(move || {
+                let mut reply = bufs.get();
+                let flags = run_line(backend.as_ref(), &line, &mut reply);
+                drop(line); // recycle the request buffer before the wake
+                let _ = tx.send(Completion {
+                    token,
+                    gen,
+                    seq,
+                    reply,
+                    shutdown: flags.shutdown,
+                    shed: flags.shed,
+                });
+                let _ = wake.send(&[1]);
             });
-            let _ = wake.send(&[1]);
-        });
+        }
     }
 
     fn drain_completions(&mut self) {
         while let Ok(c) = self.comp_rx.try_recv() {
             self.outstanding = self.outstanding.saturating_sub(1);
-            if c.shutdown {
-                self.stop = true;
+            if c.shutdown && !self.stop.swap(true, Ordering::SeqCst) {
+                // first observer wakes the whole fleet into its drain
+                for w in self.wake_all.iter() {
+                    let _ = w.send(&[1]);
+                }
             }
             let slot = c.token - TOKEN_CONN0;
             if self.gens.get(slot).copied() != Some(c.gen) {
                 continue; // connection died while the job ran
             }
             {
-                let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                let Some(conn) =
+                    self.conns.get_mut(slot).and_then(Option::as_mut)
+                else {
                     continue;
                 };
                 conn.complete(c.seq, c.reply, c.shed);
@@ -341,7 +576,8 @@ impl Reactor {
         let mut reg_change = None;
         let close;
         {
-            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut)
+            else {
                 return;
             };
             conn.update_shed();
@@ -381,32 +617,34 @@ impl Reactor {
             let _ = self.poller.remove(conn.stream.as_raw_fd());
             self.gens[slot] = self.gens[slot].wrapping_add(1);
             self.free.push(slot);
-            // dropping conn closes the socket
+            self.conn_counts[self.id].fetch_sub(1, Ordering::Relaxed);
+            self.conns_open -= 1;
+            self.conns_gauge.set(self.conns_open as f64);
+            // dropping conn closes the socket and recycles its buffers
         }
     }
 
-    /// Enter the shutdown drain: stop accepting, take one final read per
-    /// connection (complete lines already received are still answered),
-    /// and mark everything closing.
+    /// Enter the shutdown drain: stop accepting, take one final
+    /// exhaustive read per connection (complete lines already received
+    /// are still answered), and mark everything closing.
     fn begin_drain(&mut self) {
-        let _ = self.poller.remove(self.listener.as_raw_fd());
+        if let Some(l) = &self.listener {
+            let _ = self.poller.remove(l.as_raw_fd());
+        }
         for slot in 0..self.conns.len() {
-            let mut lines = Vec::new();
             {
                 let Some(conn) = self.conns[slot].as_mut() else {
                     continue;
                 };
                 if !conn.paused
                     && !conn.closing
-                    && conn.on_readable(&mut lines).is_err()
+                    && conn.read_all(&mut self.scratch).is_err()
                 {
                     conn.broken = true;
                 }
                 conn.closing = true;
             }
-            for line in lines {
-                self.dispatch(slot, line);
-            }
+            self.pump_lines(slot);
             self.after_io(slot);
         }
     }
@@ -429,6 +667,34 @@ impl Reactor {
             }
         }
     }
+}
+
+/// Decode and answer one framed raw line on a worker thread, rendering
+/// into the pooled `reply`.  A blank (whitespace-only) line leaves
+/// `reply` empty -- the connection advances its sequence without
+/// putting bytes on the wire, matching the threaded frontend's skip.
+/// Invalid UTF-8 decodes lossily (cold path) so the parser renders the
+/// same error bytes the threaded frontend would.
+fn run_line(
+    backend: &dyn InferBackend,
+    raw: &[u8],
+    reply: &mut Vec<u8>,
+) -> DispatchFlags {
+    let lossy;
+    let text = match std::str::from_utf8(raw) {
+        Ok(s) => s,
+        Err(_) => {
+            lossy = String::from_utf8_lossy(raw).into_owned();
+            &lossy
+        }
+    };
+    let line = text.trim();
+    if line.is_empty() {
+        return DispatchFlags { shutdown: false, shed: false };
+    }
+    let flags = dispatch_line_into(backend, line, reply);
+    reply.push(b'\n');
+    flags
 }
 
 /// Readiness pollers: raw epoll on Linux, portable `poll(2)` elsewhere

@@ -1,0 +1,247 @@
+//! Pooled byte buffers for the zero-allocation reply path
+//! (DESIGN.md §16).
+//!
+//! The event-driven frontend renders every reply -- and stages every
+//! framed request line -- in a [`PooledBuf`] checked out of a shared
+//! [`BufPool`] free list instead of a freshly heap-allocated `String`.
+//! Dropping the buffer returns it to the pool, so the steady-state
+//! serving hot path recycles a small working set of buffers and
+//! performs no per-request byte-buffer allocations at all
+//! (`scripts/check_hotpath_allocs.sh` freezes the `format!` /
+//! `to_string` / `String::` counts of the frontend files).
+//!
+//! Ownership invariant (pinned in DESIGN.md §16): a checked-out buffer
+//! is owned by exactly ONE of {worker, sequencer stash, connection
+//! write queue} at all times; ownership moves by `move`, never by
+//! clone, and the pool sees the buffer again only through `Drop`.
+//!
+//! The free-list `Mutex` is the one justified lock on the frontend
+//! path (`scripts/hotpath_lock_baseline.txt` covers this file): the
+//! critical section is a `Vec` push/pop -- tens of nanoseconds --
+//! and both acquisitions happen once per request, not per byte.
+//! Oversized buffers (a client that sent a near-`MAX_LINE` request)
+//! are dropped on return instead of pinning megabytes in the pool,
+//! and the free list itself is capacity-bounded.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Buffers whose capacity grew beyond this are not recycled: returning
+/// a 1 MiB line buffer to the pool would pin worst-case memory forever
+/// in exchange for saving one allocation on a path that is, by
+/// definition, anomalous.
+pub const MAX_RECYCLED_CAPACITY: usize = 64 << 10;
+
+/// Upper bound on pooled buffers; beyond it, returned buffers are
+/// simply freed.  256 covers every in-flight line + reply of a fully
+/// loaded reactor (per-connection in-flight is capped far lower).
+pub const MAX_POOLED: usize = 256;
+
+/// A bounded free list of byte buffers.
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_pooled: usize,
+    /// Checkouts served from the free list.
+    hits: AtomicU64,
+    /// Checkouts that had to allocate a fresh buffer.
+    misses: AtomicU64,
+    /// Returns accepted back into the free list.
+    recycled: AtomicU64,
+    /// Returns dropped (oversized buffer or full free list).
+    discarded: AtomicU64,
+}
+
+/// Point-in-time pool accounting, for benches and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub recycled: u64,
+    pub discarded: u64,
+    pub free: usize,
+}
+
+impl BufPool {
+    pub fn new() -> Arc<BufPool> {
+        BufPool::with_capacity(MAX_POOLED)
+    }
+
+    pub fn with_capacity(max_pooled: usize) -> Arc<BufPool> {
+        Arc::new(BufPool {
+            free: Mutex::new(Vec::new()),
+            max_pooled,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            discarded: AtomicU64::new(0),
+        })
+    }
+
+    /// Check out an empty buffer: recycled when one is free, freshly
+    /// allocated otherwise.
+    pub fn get(self: &Arc<Self>) -> PooledBuf {
+        let recycled = self.free.lock().expect("bufpool poisoned").pop();
+        let buf = match recycled {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        PooledBuf { buf, pool: Arc::clone(self) }
+    }
+
+    fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() > MAX_RECYCLED_CAPACITY {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().expect("bufpool poisoned");
+        if free.len() >= self.max_pooled {
+            drop(free);
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        free.push(buf);
+        drop(free);
+        self.recycled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            discarded: self.discarded.load(Ordering::Relaxed),
+            free: self.free.lock().expect("bufpool poisoned").len(),
+        }
+    }
+}
+
+/// An owned byte buffer on loan from a [`BufPool`]; derefs to
+/// `Vec<u8>` and returns to the pool on drop.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    pool: Arc<BufPool>,
+}
+
+impl PooledBuf {
+    /// Detach the bytes from the pool (the buffer will NOT recycle).
+    /// For cold paths that need an owned `Vec<u8>` outliving the pool.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<u8>;
+
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        // an into_vec'd (empty, zero-capacity) buffer recycles as a
+        // plain empty Vec: put() is cheap either way
+        self.pool.put(std::mem::take(&mut self.buf));
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledBuf").field("len", &self.buf.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_put_recycles_capacity() {
+        let pool = BufPool::new();
+        let mut b = pool.get();
+        b.extend_from_slice(b"hello");
+        let cap = b.capacity();
+        assert!(cap >= 5);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled, s.free), (0, 1, 1, 1));
+        // the second checkout reuses the same allocation, cleared
+        let b2 = pool.get();
+        assert_eq!(b2.len(), 0);
+        assert_eq!(b2.capacity(), cap);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_pooled() {
+        let pool = BufPool::new();
+        let mut b = pool.get();
+        b.reserve(MAX_RECYCLED_CAPACITY + 1);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.discarded, 1);
+        assert_eq!(s.free, 0, "oversized buffer must not be retained");
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        let pool = BufPool::with_capacity(2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.get()).collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!(s.free, 2);
+        assert_eq!(s.recycled, 2);
+        assert_eq!(s.discarded, 2);
+    }
+
+    #[test]
+    fn into_vec_detaches_without_recycling_bytes() {
+        let pool = BufPool::new();
+        let mut b = pool.get();
+        b.extend_from_slice(b"keep me");
+        let v = b.into_vec();
+        assert_eq!(v, b"keep me");
+        // the detached buffer's pool slot returned as an empty Vec
+        assert_eq!(pool.stats().recycled, 1);
+        let b2 = pool.get();
+        assert_eq!(b2.capacity(), 0, "detached capacity must not come back");
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_exact() {
+        let pool = BufPool::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        let mut b = pool.get();
+                        b.extend_from_slice(&[i as u8; 16]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, 8 * 500);
+        assert_eq!(s.recycled + s.discarded, 8 * 500);
+        assert!(s.free <= MAX_POOLED);
+    }
+}

@@ -313,6 +313,22 @@ fn write_num(out: &mut String, n: f64) {
     }
 }
 
+/// Allocation-free twin of the tree writer's number rule, for the
+/// frontend's pooled reply buffers (DESIGN.md §16).  `write!` into a
+/// `Vec<u8>` formats in place -- no intermediate `String` -- and the
+/// branch structure is kept identical to [`write_num`] so the rendered
+/// bytes are too (pinned by a unit test below).
+pub fn write_num_bytes(out: &mut Vec<u8>, n: f64) {
+    use std::io::Write;
+    if !n.is_finite() {
+        out.extend_from_slice(b"null");
+    } else if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{}", n);
+    }
+}
+
 fn write_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -327,6 +343,31 @@ fn write_str(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+/// Allocation-free twin of [`write_str`]: identical escaping, straight
+/// into a byte buffer (UTF-8 passes through verbatim, exactly as
+/// `String::push` would append it).
+pub fn write_str_bytes(out: &mut Vec<u8>, s: &str) {
+    use std::io::Write;
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => {
+                let mut utf8 = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut utf8).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
 }
 
 struct Parser<'a> {
@@ -1131,5 +1172,49 @@ mod tests {
             JsonScan::new(r#"{"features":[]}"#).field_nums("features", &mut out),
             Some(0)
         );
+    }
+
+    #[test]
+    fn byte_writers_match_the_tree_writers() {
+        // the zero-alloc frontend renders through these; any divergence
+        // from the tree writer breaks the byte-identity differential
+        for n in [
+            0.0,
+            -0.0,
+            1.0,
+            -17.0,
+            3.5,
+            -0.004,
+            0.0021,
+            1e-7,
+            8.9e15,
+            9.1e15,
+            1.0e16,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.1 + 0.2,
+            123456789.125,
+        ] {
+            let mut s = String::new();
+            write_num(&mut s, n);
+            let mut b = Vec::new();
+            write_num_bytes(&mut b, n);
+            assert_eq!(s.as_bytes(), &b[..], "num divergence on {n}");
+        }
+        for text in [
+            "",
+            "plain",
+            "quote \" backslash \\",
+            "newline \n tab \t cr \r",
+            "control \u{1} \u{1f}",
+            "unicode 😀 é \u{2028}",
+        ] {
+            let mut s = String::new();
+            write_str(&mut s, text);
+            let mut b = Vec::new();
+            write_str_bytes(&mut b, text);
+            assert_eq!(s.as_bytes(), &b[..], "str divergence on {text:?}");
+        }
     }
 }

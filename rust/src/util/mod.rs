@@ -1,6 +1,7 @@
 //! From-scratch substrates: JSON, CLI parsing, PRNG, thread pool,
 //! statistics, tables, property testing (DESIGN.md §3).
 
+pub mod bufpool;
 pub mod cli;
 pub mod json;
 pub mod minicheck;

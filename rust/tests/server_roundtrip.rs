@@ -496,6 +496,17 @@ fn shutdown_drains_pipelined_lines_on_the_threaded_frontend() {
     pipelined_shutdown_roundtrip(Frontend::Threads, 8011);
 }
 
+/// Blank the one nondeterministic reply field (`latency_s`) so wire
+/// replies can be compared byte-for-byte across frontends and shard
+/// counts.
+fn normalize_latency(mut r: String) -> String {
+    if let Some(i) = r.find("\"latency_s\":") {
+        let j = r[i..].find(',').map(|o| i + o).unwrap_or(r.len());
+        r.replace_range(i..j, "\"latency_s\":0");
+    }
+    r
+}
+
 /// Drive one frontend through a mixed request script and collect its
 /// reply lines, with the one nondeterministic field (`latency_s`)
 /// normalized away.
@@ -506,12 +517,7 @@ fn frontend_replies(frontend: Frontend, port: u16, lines: &[&str]) -> Vec<String
     let mut client = Client::connect(port).unwrap();
     let mut out = Vec::new();
     for line in lines {
-        let mut r = client.roundtrip(line).unwrap();
-        if let Some(i) = r.find("\"latency_s\":") {
-            let j = r[i..].find(',').map(|o| i + o).unwrap_or(r.len());
-            r.replace_range(i..j, "\"latency_s\":0");
-        }
-        out.push(r);
+        out.push(normalize_latency(client.roundtrip(line).unwrap()));
     }
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
@@ -613,6 +619,158 @@ fn reactor_multiplexes_many_connections_with_fifo_replies() {
     let mut client = Client::connect(port).unwrap();
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();
+}
+
+/// Drive a sharded reactor with `conns` concurrent connections each
+/// pipelining a deterministic mixed script of `lines` lines in one
+/// write, and collect every connection's normalized reply lines in
+/// arrival order.
+#[cfg(unix)]
+fn sharded_replies(shards: usize, port: u16, conns: usize, lines: usize) -> Vec<Vec<String>> {
+    use abc_serve::server::reactor::{serve_reactor_with, ReactorConfig};
+    use std::io::{BufRead, BufReader, Write};
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || {
+        serve_reactor_with(
+            pool,
+            port,
+            ReactorConfig { shards, ..ReactorConfig::default() },
+        )
+    });
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut joins = Vec::new();
+    for c in 0..conns as u64 {
+        let lines = lines as u64;
+        joins.push(std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut batch = String::new();
+            for i in 0..lines {
+                let id = c * 1000 + i;
+                // valid, missing-features and malformed lines -- every
+                // reply is a pure function of the line itself
+                match i % 4 {
+                    3 => batch.push_str("garbage\n"),
+                    2 => batch.push_str(&format!("{{\"id\":{id}}}\n")),
+                    _ => batch.push_str(&format!(
+                        "{{\"id\":{id},\"features\":[0.5,-0.5,0.25,1.0]}}\n"
+                    )),
+                }
+            }
+            stream.write_all(batch.as_bytes()).unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut replies = Vec::new();
+            for _ in 0..lines {
+                let mut r = String::new();
+                reader.read_line(&mut r).unwrap();
+                replies.push(normalize_latency(r.trim().to_string()));
+            }
+            replies
+        }));
+    }
+    let out: Vec<Vec<String>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let mut client = Client::connect(port).unwrap();
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    out
+}
+
+/// Differential pin across shard counts: 40 pipelined connections get
+/// byte-identical reply streams whether one event loop serves them all
+/// or four shards split them, and replies stay FIFO per connection.
+#[cfg(unix)]
+#[test]
+fn sharded_reactor_replies_match_single_shard_byte_for_byte() {
+    let one = sharded_replies(1, 8016, 40, 16);
+    let four = sharded_replies(4, 8017, 40, 16);
+    assert_eq!(one, four, "replies must be byte-identical across shard counts");
+    for (c, replies) in four.iter().enumerate() {
+        let ids: Vec<u64> = replies
+            .iter()
+            .filter_map(|r| Json::parse(r).unwrap().get("id").as_u64())
+            .collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "conn {c}: replies out of dispatch order");
+        assert!(!ids.is_empty(), "conn {c}: no infer replies");
+    }
+}
+
+/// Handoff drain pin: with 4 shards, 4 live connections land on 4
+/// distinct shards (accepts all happen on shard 0, so at least 3 are
+/// served on a shard they were not accepted on).  A shutdown pipelined
+/// behind an infer on one of them must answer the infer first, ack,
+/// and drain EVERY connection -- including the handed-off ones owned
+/// by other shards -- to clean EOF promptly.
+#[cfg(unix)]
+#[test]
+fn handed_off_connections_drain_cleanly_at_shutdown() {
+    use abc_serve::server::reactor::{serve_reactor_with, ReactorConfig};
+    use std::io::{BufRead, BufReader, Read, Write};
+    let port = 8018;
+    let pool = synthetic_pool(None);
+    let server = std::thread::spawn(move || {
+        serve_reactor_with(
+            pool,
+            port,
+            ReactorConfig { shards: 4, ..ReactorConfig::default() },
+        )
+    });
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut streams: Vec<std::net::TcpStream> = (0..4)
+        .map(|_| {
+            let s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            s.set_nodelay(true).unwrap();
+            s
+        })
+        .collect();
+    // every connection proves it is being served before the shutdown
+    for (i, s) in streams.iter_mut().enumerate() {
+        s.write_all(
+            format!("{{\"id\":{i},\"features\":[0.5,-0.5,0.25,1.0]}}\n").as_bytes(),
+        )
+        .unwrap();
+    }
+    let mut readers: Vec<BufReader<std::net::TcpStream>> =
+        streams.into_iter().map(BufReader::new).collect();
+    for (i, r) in readers.iter_mut().enumerate() {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(
+            Json::parse(line.trim()).unwrap().get("id").as_u64(),
+            Some(i as u64),
+            "conn {i}: {line:?}"
+        );
+    }
+    // pipelined infer + shutdown on the last connection
+    readers[3]
+        .get_mut()
+        .write_all(b"{\"id\":99,\"features\":[0.1,0.2,0.3,0.4]}\n{\"cmd\":\"shutdown\"}\n")
+        .unwrap();
+    let mut line = String::new();
+    readers[3].read_line(&mut line).unwrap();
+    assert_eq!(
+        Json::parse(line.trim()).unwrap().get("id").as_u64(),
+        Some(99),
+        "infer line not answered before the ack: {line:?}"
+    );
+    line.clear();
+    readers[3].read_line(&mut line).unwrap();
+    assert!(line.contains("\"shutdown\":true"), "got {line:?}");
+    let t0 = std::time::Instant::now();
+    for (i, mut r) in readers.into_iter().enumerate() {
+        let mut rest = String::new();
+        r.read_to_string(&mut rest).unwrap();
+        assert_eq!(rest.trim(), "", "conn {i}: bytes after drain");
+    }
+    server.join().unwrap().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "drain took {:?}",
+        t0.elapsed()
+    );
 }
 
 #[test]

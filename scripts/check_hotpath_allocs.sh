@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Hot-path allocation lint: fail CI when a reply-path file grows new
+# String allocations.
+#
+# PR 10 made the reply path allocation-free in steady state: workers
+# render verdicts straight into pooled Vec<u8> reply buffers
+# (util::bufpool) via the `*_into` renderers, the reactor's line framer
+# reuses pooled line buffers, and the pipeline stages features into a
+# per-batcher scratch Vec (DESIGN.md §16).  The cheapest way to undo
+# all of that is one innocent `format!` or `.to_string()` on the
+# per-request path, so this lint freezes the per-file count of String
+# allocation spellings in the four hot files:
+#
+#   rust/src/server/conn.rs       -- framing, write queue, writev
+#   rust/src/server/reactor.rs    -- event loops, worker dispatch
+#   rust/src/server/proto.rs      -- render_*_into byte renderers
+#   rust/src/coordinator/pipeline.rs -- per-batch feature staging
+#
+# The occurrences that legitimately remain are all COLD: gauge/thread
+# names formatted once at shard spawn, the invalid-UTF-8 lossy fallback
+# (error replies only), error-to_string in error arms, and proto's
+# String wrappers + cold admin renders (stats/metrics/events/...).
+# They are frozen in scripts/hotpath_alloc_baseline.txt; growth fails
+# this check until the baseline is consciously re-justified (update the
+# file IN THE SAME COMMIT and explain why the new allocation cannot
+# render into the pooled buffer instead).
+#
+# This is a textual proxy, not an allocator hook: it cannot see Vec
+# growth or Box/channel traffic (the worker hand-off still allocates a
+# job box and channel nodes -- see DESIGN.md §16 for the honest
+# residual list).  It exists to catch the common regression, not to
+# prove zero-alloc.
+#
+# Usage: scripts/check_hotpath_allocs.sh [--update]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+baseline=scripts/hotpath_alloc_baseline.txt
+pattern='format!|to_string|String::'
+
+current() {
+    # stable per-file counts of String-allocation spellings
+    for f in rust/src/server/conn.rs rust/src/server/reactor.rs \
+             rust/src/server/proto.rs rust/src/coordinator/pipeline.rs; do
+        printf '%s %s\n' "$f" "$(grep -c -E "$pattern" "$f" || true)"
+    done | sort
+}
+
+if [[ "${1:-}" == "--update" ]]; then
+    current > "$baseline"
+    echo "baseline rewritten: $baseline"
+    exit 0
+fi
+
+if [[ ! -f "$baseline" ]]; then
+    echo "missing $baseline -- run: scripts/check_hotpath_allocs.sh --update" >&2
+    exit 1
+fi
+
+status=0
+while read -r file count; do
+    allowed=$(awk -v f="$file" '$1 == f { print $2 }' "$baseline")
+    allowed=${allowed:-0}
+    if (( count > allowed )); then
+        echo "FAIL $file: $count String allocations > baseline $allowed" >&2
+        status=1
+    fi
+done < <(current)
+
+if (( status != 0 )); then
+    cat >&2 <<'EOF'
+
+New format!/to_string/String:: spellings on the reply hot path.  Render
+into the caller's pooled Vec<u8> instead (render_*_into, write_num_bytes,
+write_str_bytes), or -- if the allocation is genuinely cold (startup,
+error arm, admin command) -- update scripts/hotpath_alloc_baseline.txt
+in this commit and justify it in the commit message.
+EOF
+    exit "$status"
+fi
+echo "hot-path alloc lint: OK (reply-path String allocation counts within baseline)"

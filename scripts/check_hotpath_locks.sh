@@ -13,12 +13,18 @@
 # §15): the reactor's readiness loop owns all connection state on one
 # thread, hands work to util::threadpool over channels, and must never
 # grow a registry lock -- the baseline for every server/ file is zero.
+# rust/src/util/bufpool.rs is the one covered util/ file: the reply
+# buffer pool's bounded free-list is Mutex-guarded by design (get/put/
+# stats -- three acquisitions, each a push/pop under an uncontended
+# lock, amortised across a whole reply's worth of rendering), and that
+# count is frozen; the pool must never grow per-byte or per-field
+# locking.
 # The acquisitions that legitimately remain -- the batcher's gate, the
-# pool's replica-slot RwLock, and the obs-side ones above -- are frozen
-# in scripts/hotpath_lock_baseline.txt; adding an acquisition anywhere
-# in these trees fails this check until the baseline is consciously
-# re-justified (update the file IN THE SAME COMMIT and explain why the
-# new lock cannot live off the hot path).
+# pool's replica-slot RwLock, the bufpool free-list, and the obs-side
+# ones above -- are frozen in scripts/hotpath_lock_baseline.txt; adding
+# an acquisition anywhere in these trees fails this check until the
+# baseline is consciously re-justified (update the file IN THE SAME
+# COMMIT and explain why the new lock cannot live off the hot path).
 #
 # Usage: scripts/check_hotpath_locks.sh [--update]
 
@@ -30,7 +36,8 @@ pattern='\.lock\(\)|\.read\(\)|\.write\(\)'
 
 current() {
     # stable per-file counts of lock/read/write acquisitions
-    for f in rust/src/coordinator/*.rs rust/src/obs/*.rs rust/src/server/*.rs; do
+    for f in rust/src/coordinator/*.rs rust/src/obs/*.rs rust/src/server/*.rs \
+             rust/src/util/bufpool.rs; do
         printf '%s %s\n' "$f" "$(grep -c -E "$pattern" "$f" || true)"
     done | sort
 }
@@ -68,4 +75,4 @@ in the commit message.
 EOF
     exit "$status"
 fi
-echo "hot-path lock lint: OK (coordinator/ + obs/ + server/ lock counts within baseline)"
+echo "hot-path lock lint: OK (coordinator/ + obs/ + server/ + bufpool lock counts within baseline)"
